@@ -1,0 +1,68 @@
+//! Figure 11 (appendix A.3) — GEMM-O speedup across generation-task
+//! resolutions (1K-image / 2K-image / video scale) and N ∈ {4, 6, 8}.
+//!
+//! Paper: ~2.5–3.4× at standard resolution (lower kernel parallelism →
+//! decode overhead more visible), 2.7–3.9× at ultra-high resolution.
+//! Our scaled token lengths: 272 (mini), 1088 (FLUX-1K scale), 4096
+//! (video scale). Env: FO_BUDGET.
+
+use flashomni::bench::{write_csv, Bencher, Measurement};
+use flashomni::kernels::flops;
+use flashomni::kernels::gemm_o::{gemm_o_dispatch, gemm_o_update, WeightPanels};
+
+use flashomni::symbols::{random_symbols, LayerSymbols};
+use flashomni::testutil::randn;
+use flashomni::util::rng::Pcg32;
+
+fn main() {
+    let budget: f64 =
+        std::env::var("FO_BUDGET").ok().and_then(|v| v.parse().ok()).unwrap_or(0.3);
+    let bencher = Bencher { warmup: 1, min_iters: 3, budget_s: budget };
+    let heads = 8;
+    let d_h = 64;
+    let d = heads * d_h;
+    let sparsity = 0.8f64;
+    let mut rows: Vec<(Measurement, Option<f64>)> = Vec::new();
+
+    println!("# Figure 11 — GEMM-O speedup across resolutions (sparsity {sparsity})");
+    for (label, seq, block) in
+        [("mini-272", 272usize, 16usize), ("flux1k-1088", 1088, 32), ("video-4096", 4096, 64)]
+    {
+        let mut rng = Pcg32::seeded(0xb11 + seq as u64);
+        let t = seq.div_ceil(block);
+        let o = randn(&mut rng, &[seq, d]);
+        let w = randn(&mut rng, &[d, d]);
+        let panels = WeightPanels::new(&w, heads);
+        // Fair baseline: same tiled kernel, dense symbols, zero bias.
+        let dense_syms = LayerSymbols::dense(heads, t, t, 1);
+        let zero_bias = flashomni::tensor::Tensor::zeros(&[seq, d]);
+        let dense = bencher.run(&format!("{label} dense"), || {
+            std::hint::black_box(gemm_o_dispatch(&o, &panels, &dense_syms, block, &zero_bias));
+        });
+        rows.push((dense.clone(), Some(1.0)));
+        for interval in [4usize, 6, 8] {
+            let syms = LayerSymbols {
+                heads: (0..heads)
+                    .map(|_| random_symbols(&mut rng, t, t, 1, sparsity, 0.0))
+                    .collect(),
+            };
+            let (_, bias, _) = gemm_o_update(&o, &panels, &syms, block);
+            let update = bencher.run(&format!("{label} update N={interval}"), || {
+                std::hint::black_box(gemm_o_update(&o, &panels, &syms, block));
+            });
+            let dispatch = bencher.run(&format!("{label} dispatch N={interval}"), || {
+                std::hint::black_box(gemm_o_dispatch(&o, &panels, &syms, block, &bias));
+            });
+            let fo = update.median_s + (interval - 1) as f64 * dispatch.median_s;
+            let speedup = interval as f64 * dense.median_s / fo;
+            let theory = flops::gemm_o_theoretical_speedup(interval, sparsity);
+            println!(
+                "{label:<12} N={interval}  speedup {speedup:.2}x  theory {theory:.2}x  %of-theory {:.1}%",
+                100.0 * speedup / theory
+            );
+            rows.push((update, None));
+            rows.push((dispatch, Some(speedup)));
+        }
+    }
+    let _ = write_csv("reports/fig11_gemm_o_resolutions.csv", &rows);
+}

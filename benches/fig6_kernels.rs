@@ -1,0 +1,153 @@
+//! Figure 6 — normalized kernel performance at different sparsity levels:
+//! sparse GEMM-Q, sparse GEMM-O (N = 6 amortized), and the FlashOmni
+//! attention kernel under FC-only / BSS-only / FC+BSS random symbols.
+//!
+//! Shapes are 17K-scaled (seq 2048, head dim 64, block 64) per DESIGN.md.
+//! Expected shape (paper): attention and GEMM-Q track the theoretical
+//! linear law ~1:1; GEMM-O lands at 85–95% of the Eq. 5 bound.
+//!
+//! Env: FO_SEQ (default 2048), FO_BUDGET seconds/case (default 0.4).
+
+use flashomni::bench::{print_table, write_csv, Bencher, Measurement};
+use flashomni::kernels::attention::{attention_dense, flashomni_attention, DecodeMode};
+use flashomni::kernels::flops;
+use flashomni::kernels::gemm_o::{gemm_o_dispatch, gemm_o_update, WeightPanels};
+use flashomni::kernels::gemm_q::gemm_q;
+use flashomni::symbols::{random_symbols, LayerSymbols};
+use flashomni::testutil::randn;
+use flashomni::util::rng::Pcg32;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let seq = env_usize("FO_SEQ", 2048);
+    let block = 64;
+    let d = 64;
+    let heads = 8;
+    let bencher = Bencher { warmup: 1, min_iters: 3, budget_s: env_f64("FO_BUDGET", 0.4) };
+    let mut rng = Pcg32::seeded(0x516);
+    let t = seq / block;
+
+    println!("# Figure 6 — kernel speedup vs sparsity (seq {seq}, block {block}, d {d})");
+
+    // ---------------- attention: FC / BSS / FC+BSS ----------------
+    let q = randn(&mut rng, &[seq, d]);
+    let k = randn(&mut rng, &[seq, d]);
+    let v = randn(&mut rng, &[seq, d]);
+    let dense = bencher.run("attention dense", || {
+        std::hint::black_box(attention_dense(&q, &k, &v, block, block));
+    });
+    let mut rows: Vec<(Measurement, Option<f64>)> = vec![(dense.clone(), Some(1.0))];
+    for (label, fc_on, bss_on) in
+        [("FC", true, false), ("BSS", false, true), ("FC+BSS", true, true)]
+    {
+        for sparsity in [0.1f64, 0.2, 0.4, 0.6, 0.8] {
+            // Split the target sparsity across the enabled mechanisms.
+            let (fc, bss) = match (fc_on, bss_on) {
+                (true, false) => (sparsity, 0.0),
+                (false, true) => (0.0, sparsity),
+                _ => {
+                    // combined: 1-(1-fc)(1-bss) = s with fc = bss
+                    let p = 1.0 - (1.0 - sparsity).sqrt();
+                    (p, p)
+                }
+            };
+            let sym = random_symbols(&mut rng, t, t, 1, fc, bss);
+            let actual = sym.pair_sparsity();
+            let m = bencher.run(&format!("attention {label} s={actual:.2}"), || {
+                std::hint::black_box(flashomni_attention(
+                    &q,
+                    &k,
+                    &v,
+                    &sym,
+                    block,
+                    block,
+                    None,
+                    DecodeMode::RowCached,
+                ));
+            });
+            let speedup = m.speedup_vs(&dense);
+            let theory = flops::attention_theoretical_speedup(actual);
+            println!(
+                "attention {label:<7} sparsity {actual:.3}  speedup {speedup:.2}x  theory {theory:.2}x  ratio {:.1}%",
+                100.0 * speedup / theory
+            );
+            rows.push((m, Some(speedup)));
+        }
+    }
+
+    // ---------------- GEMM-Q (spatial skipping) ----------------
+    let d_in = heads * d;
+    let x = randn(&mut rng, &[seq, d_in]);
+    let w = randn(&mut rng, &[d_in, d_in]);
+    // Fair baseline: gemm_q itself with all-dense symbols.
+    let dense_syms_q = LayerSymbols::dense(heads, t, t, 1);
+    let gq_dense = bencher.run("gemm_q dense", || {
+        std::hint::black_box(gemm_q(&x, &w, &dense_syms_q, block, None));
+    });
+    rows.push((gq_dense.clone(), Some(1.0)));
+    for sparsity in [0.1, 0.2, 0.4, 0.6, 0.8, 0.9] {
+        let syms = LayerSymbols {
+            heads: (0..heads)
+                .map(|_| random_symbols(&mut rng, t, t, 1, sparsity, 0.0))
+                .collect(),
+        };
+        let m = bencher.run(&format!("gemm_q s={sparsity}"), || {
+            std::hint::black_box(gemm_q(&x, &w, &syms, block, None));
+        });
+        let speedup = m.speedup_vs(&gq_dense);
+        let theory = 1.0 / (1.0 - sparsity);
+        println!(
+            "gemm_q            sparsity {sparsity:.2}  speedup {speedup:.2}x  theory {theory:.2}x  ratio {:.1}%",
+            100.0 * speedup / theory
+        );
+        rows.push((m, Some(speedup)));
+    }
+
+    // ---------------- GEMM-O (amortized over N = 6) ----------------
+    let interval = 6;
+    let o = randn(&mut rng, &[seq, d_in]);
+    let wo = randn(&mut rng, &[d_in, d_in]);
+    let panels = WeightPanels::new(&wo, heads);
+    // Fair baseline: the SAME tiled kernel, dense symbols, zero bias.
+    let dense_syms_o = LayerSymbols::dense(heads, t, t, 1);
+    let zero_bias = flashomni::tensor::Tensor::zeros(&[seq, d_in]);
+    let go_dense = bencher.run("gemm_o dense", || {
+        std::hint::black_box(gemm_o_dispatch(&o, &panels, &dense_syms_o, block, &zero_bias));
+    });
+    rows.push((go_dense.clone(), Some(1.0)));
+    for sparsity in [0.5, 0.7, 0.8, 0.9] {
+        let syms = LayerSymbols {
+            heads: (0..heads)
+                .map(|_| random_symbols(&mut rng, t, t, 1, sparsity, 0.0))
+                .collect(),
+        };
+        let (_, bias, _) = gemm_o_update(&o, &panels, &syms, block);
+        let update = bencher.run(&format!("gemm_o update s={sparsity}"), || {
+            std::hint::black_box(gemm_o_update(&o, &panels, &syms, block));
+        });
+        let dispatch = bencher.run(&format!("gemm_o dispatch s={sparsity}"), || {
+            std::hint::black_box(gemm_o_dispatch(&o, &panels, &syms, block, &bias));
+        });
+        // Amortized: 1 update + (N−1) dispatches vs N dense projections.
+        let fo_time = update.median_s + (interval - 1) as f64 * dispatch.median_s;
+        let dense_time = interval as f64 * go_dense.median_s;
+        let speedup = dense_time / fo_time;
+        let theory = flops::gemm_o_theoretical_speedup(interval, sparsity);
+        println!(
+            "gemm_o (N={interval})      sparsity {sparsity:.2}  speedup {speedup:.2}x  theory {theory:.2}x  ratio {:.1}%",
+            100.0 * speedup / theory
+        );
+        rows.push((update, None));
+        rows.push((dispatch, Some(speedup)));
+    }
+
+    print_table("fig6 raw measurements", &rows);
+    let _ = write_csv("reports/fig6_kernels.csv", &rows);
+}

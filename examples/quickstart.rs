@@ -1,0 +1,57 @@
+//! Quickstart: load the trained MiniMMDiT, generate one image densely and
+//! once with FlashOmni, and compare quality + work.
+//!
+//! ```bash
+//! make artifacts            # once: trains the toy model + AOT artifacts
+//! cargo run --release --example quickstart
+//! ```
+
+use flashomni::config::SparsityConfig;
+use flashomni::engine::{DiTEngine, Policy};
+use flashomni::metrics;
+use flashomni::model::MiniMMDiT;
+use flashomni::trace::caption_ids;
+
+fn main() -> Result<(), String> {
+    let weights = std::env::args().nth(1).unwrap_or("artifacts/weights.fot".into());
+    let model = MiniMMDiT::load(&weights)?;
+    println!(
+        "MiniMMDiT: {} params | seq {} ({} text + {} vision tokens) | {} layers",
+        model.param_count(),
+        model.cfg.seq_len(),
+        model.cfg.text_tokens,
+        model.cfg.vision_tokens(),
+        model.cfg.layers
+    );
+
+    let scene = 123;
+    let ids = caption_ids(scene, model.cfg.text_tokens);
+    let steps = 20;
+
+    // Dense reference.
+    let mut dense = DiTEngine::new(model.clone(), Policy::full(), 8, 8);
+    let r0 = dense.generate(&ids, 0, steps);
+    println!("\ndense:     {:.3}s, sparsity 0%", r0.stats.wall_s);
+
+    // FlashOmni with the paper's (50%, 15%, 5, 1, 30%) configuration.
+    let policy = Policy::flashomni(SparsityConfig::paper(0.5, 0.15, 5, 1, 0.3));
+    let mut fo = DiTEngine::new(model, policy, 8, 8);
+    let r1 = fo.generate(&ids, 0, steps);
+    println!(
+        "flashomni: {:.3}s, sparsity {:.1}%, FLOP speedup {:.2}x, wall speedup {:.2}x",
+        r1.stats.wall_s,
+        r1.stats.attn_sparsity() * 100.0,
+        r1.stats.flop_speedup(),
+        r0.stats.wall_s / r1.stats.wall_s
+    );
+
+    println!(
+        "\nfidelity vs dense: PSNR {:.2} dB | SSIM {:.4} | RPIPS {:.4}",
+        metrics::psnr(&r1.image, &r0.image),
+        metrics::ssim(&r1.image, &r0.image),
+        metrics::rpips(&r1.image, &r0.image)
+    );
+    println!("per-step attention density: {:?}",
+        r1.stats.per_step_density.iter().map(|d| (d * 100.0).round() as i32).collect::<Vec<_>>());
+    Ok(())
+}

@@ -1,0 +1,99 @@
+//! **End-to-end serving driver** (the DESIGN.md §5 validation run): load
+//! the trained model, start the coordinator, replay a Poisson request
+//! trace through both the dense engine and the FlashOmni engine, and
+//! report latency / throughput / fidelity. Also runs one dense request
+//! through the PJRT oracle path to show the artifacts compose at L3.
+//!
+//! ```bash
+//! cargo run --release --example serve_image_gen
+//! ```
+
+use flashomni::config::SparsityConfig;
+use flashomni::coordinator::replay_trace;
+use flashomni::engine::{DiTEngine, Policy};
+use flashomni::metrics;
+use flashomni::model::MiniMMDiT;
+use flashomni::trace::poisson_trace;
+
+fn main() -> Result<(), String> {
+    let weights = "artifacts/weights.fot";
+    let model = MiniMMDiT::load(weights)?;
+    let n_req = std::env::var("FO_REQUESTS").ok().and_then(|v| v.parse().ok()).unwrap_or(10usize);
+    let steps = 16;
+    let rate = 3.0; // requests/s
+    let trace = poisson_trace(11, n_req, rate, steps, model.cfg.text_tokens);
+    println!(
+        "serving {n_req} requests, Poisson rate {rate}/s, {steps} denoising steps each\n"
+    );
+
+    // Dense baseline service.
+    let m = model.clone();
+    let (dense_rs, dense_rep) = replay_trace(
+        move |_| DiTEngine::new(m.clone(), Policy::full(), 8, 8),
+        &trace,
+        1,
+        4,
+        1.0,
+    );
+    dense_rep.print("Full-Attention");
+
+    // FlashOmni service.
+    let m = model.clone();
+    let policy = Policy::flashomni(SparsityConfig::paper(0.5, 0.15, 5, 1, 0.3));
+    let p2 = policy.clone();
+    let (fo_rs, fo_rep) = replay_trace(
+        move |_| DiTEngine::new(m.clone(), p2.clone(), 8, 8),
+        &trace,
+        1,
+        4,
+        1.0,
+    );
+    fo_rep.print(&policy.name());
+
+    // Per-request fidelity of the sparse service vs the dense one.
+    let mut psnr = 0.0;
+    let mut ssim = 0.0;
+    for d in &dense_rs {
+        let f = fo_rs.iter().find(|r| r.id == d.id).unwrap();
+        psnr += metrics::psnr(&f.image, &d.image).min(99.0);
+        ssim += metrics::ssim(&f.image, &d.image);
+    }
+    println!(
+        "\nfidelity (FlashOmni vs dense, {} requests): PSNR {:.2} dB | SSIM {:.4}",
+        dense_rs.len(),
+        psnr / dense_rs.len() as f64,
+        ssim / dense_rs.len() as f64
+    );
+    println!(
+        "exec-time speedup: {:.2}x | p50 latency improvement: {:.2}x",
+        dense_rep.mean_exec_s / fo_rep.mean_exec_s,
+        dense_rep.p50_latency_s / fo_rep.p50_latency_s
+    );
+
+    // PJRT oracle path: one dense denoise step through the AOT artifact.
+    if std::path::Path::new("artifacts/mmdit_step.hlo.txt").exists() {
+        use flashomni::runtime::{load_param_list, ArtifactRuntime};
+        let mut rt = ArtifactRuntime::cpu("artifacts").map_err(|e| e.to_string())?;
+        rt.load("mmdit_step").map_err(|e| e.to_string())?;
+        let params = load_param_list("artifacts").map_err(|e| e.to_string())?;
+        let patches = flashomni::diffusion::initial_noise(&model.cfg, 1);
+        let ids: Vec<i32> =
+            trace[0].prompt_ids.iter().map(|&i| i as i32).collect();
+        let t0 = std::time::Instant::now();
+        let v = rt
+            .mmdit_step(
+                &params,
+                &ids,
+                &patches,
+                0.5,
+                &[model.cfg.vision_tokens(), model.cfg.patch_dim()],
+            )
+            .map_err(|e| e.to_string())?;
+        println!(
+            "\nPJRT oracle step: {:.3}s, output norm {:.3} (artifact path live)",
+            t0.elapsed().as_secs_f64(),
+            v.data().iter().map(|x| (x * x) as f64).sum::<f64>().sqrt()
+        );
+    }
+    Ok(())
+}

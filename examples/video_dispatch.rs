@@ -1,0 +1,80 @@
+//! Video-task example (Hunyuan substitute, DESIGN.md): generate a short
+//! frame sequence under multi-granularity sparsity and score it with the
+//! VBench-proxy metrics, comparing FlashOmni against dense and the
+//! block-sparse baseline.
+//!
+//! ```bash
+//! cargo run --release --example video_dispatch
+//! ```
+
+use flashomni::config::SparsityConfig;
+use flashomni::engine::{DiTEngine, Policy, RunStats};
+use flashomni::metrics;
+use flashomni::model::MiniMMDiT;
+use flashomni::report::merge_stats;
+use flashomni::tensor::Tensor;
+use flashomni::trace::video_frame_ids;
+
+fn render_frames(
+    model: &MiniMMDiT,
+    policy: Policy,
+    scene: usize,
+    frames: usize,
+    steps: usize,
+) -> (Vec<Tensor>, RunStats) {
+    let mut engine = DiTEngine::new(model.clone(), policy, 8, 8);
+    let mut out = Vec::new();
+    let mut agg = RunStats::default();
+    for f in 0..frames {
+        let ids = video_frame_ids(scene, f, model.cfg.text_tokens);
+        let r = engine.generate(&ids, 99, steps);
+        merge_stats(&mut agg, &r.stats);
+        out.push(r.image);
+    }
+    (out, agg)
+}
+
+fn main() -> Result<(), String> {
+    let model = MiniMMDiT::load("artifacts/weights.fot")?;
+    let (frames_n, steps, scene) = (6, 16, 42);
+    println!("video task: {frames_n} frames × {steps} steps, scene {scene}\n");
+
+    let (dense, d_stats) = render_frames(&model, Policy::full(), scene, frames_n, steps);
+    let cases: Vec<(Policy, &str)> = vec![
+        (Policy::full(), "Full-Attention"),
+        (Policy::sparge(0.06, 0.065, 4), "SpargeAttn"),
+        (
+            Policy::flashomni(SparsityConfig::paper(0.4, 0.01, 5, 1, 0.3)),
+            "FlashOmni (40%,1%,5,1,30%)",
+        ),
+        (
+            Policy::flashomni(SparsityConfig::paper(0.5, 0.05, 6, 1, 0.3)),
+            "FlashOmni (50%,5%,6,1,30%)",
+        ),
+    ];
+    println!(
+        "{:<28} {:>7} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8}",
+        "method", "spars%", "speedup", "PSNR", "smooth", "consist", "flicker", "style"
+    );
+    for (policy, label) in cases {
+        let (frames, stats) = render_frames(&model, policy, scene, frames_n, steps);
+        let psnr = frames
+            .iter()
+            .zip(&dense)
+            .map(|(a, b)| metrics::psnr(a, b).min(99.0))
+            .sum::<f64>()
+            / frames_n as f64;
+        println!(
+            "{label:<28} {:>7.1} {:>8.2} {:>8.2} {:>8.2} {:>8.2} {:>8.2} {:>8.4}",
+            stats.attn_sparsity() * 100.0,
+            d_stats.wall_s / stats.wall_s,
+            psnr,
+            metrics::smoothness(&frames),
+            metrics::consistency(&frames),
+            metrics::flicker(&frames),
+            metrics::style(&frames),
+        );
+    }
+    println!("\n(expected shape: FlashOmni keeps smoothness/consistency at dense level\n while SpargeAttn pays more quality for the same sparsity — Table 1 bottom)");
+    Ok(())
+}

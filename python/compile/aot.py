@@ -1,0 +1,193 @@
+"""AOT lowering: JAX/Pallas → HLO **text** artifacts for the rust runtime.
+
+HLO text (not `.serialize()`) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts (written to --out, default ../artifacts):
+  mmdit_step.hlo.txt     — one dense denoising step; params are runtime
+                           inputs in sorted-name order (mmdit_step.params.json).
+  attention_masked.hlo.txt — single-head Pallas FlashOmni attention
+                           (q, k, v, s_c, s_s int32 packed symbols).
+  gemm_q.hlo.txt         — Pallas sparse query projection.
+  gemm_o.hlo.txt         — Pallas dispatch-step sparse output projection.
+  golden.fot             — example inputs + expected outputs for every
+                           artifact (rust integration tests assert both the
+                           PJRT path and the native kernels reproduce them).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import fot
+from .kernels.flashomni_attention import flashomni_attention_head
+from .kernels.ref import gemm_o_bias_ref, masked_attention_ref
+from .kernels.sparse_gemm import gemm_o_dispatch, gemm_q
+from .kernels.symbols import encode_symbols
+from .model import Config, forward, init_params
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_mmdit_step(cfg: Config, params: dict, out_dir: str, golden: dict) -> None:
+    names = sorted(params.keys())
+
+    def step(flat_params, text_ids, patches, t):
+        p = dict(zip(names, flat_params))
+        return (forward(p, cfg, text_ids, patches, t),)
+
+    flat = [params[n] for n in names]
+    specs = tuple(jax.ShapeDtypeStruct(a.shape, a.dtype) for a in flat)
+    ids_spec = jax.ShapeDtypeStruct((cfg.text_tokens,), jnp.int32)
+    patch_spec = jax.ShapeDtypeStruct((cfg.vision_tokens, cfg.patch_dim), jnp.float32)
+    t_spec = jax.ShapeDtypeStruct((), jnp.float32)
+    # keep_unused: every parameter must survive lowering so the rust side
+    # can bind the full sorted-name list positionally.
+    lowered = jax.jit(step, keep_unused=True).lower(specs, ids_spec, patch_spec, t_spec)
+    text = to_hlo_text(lowered)
+    with open(os.path.join(out_dir, "mmdit_step.hlo.txt"), "w") as f:
+        f.write(text)
+    with open(os.path.join(out_dir, "mmdit_step.params.json"), "w") as f:
+        json.dump({"order": names, "config": cfg.to_meta()}, f, indent=1)
+
+    # Golden vector.
+    rng = np.random.default_rng(42)
+    ids = rng.integers(0, cfg.vocab, size=cfg.text_tokens).astype(np.int32)
+    patches = rng.normal(size=(cfg.vision_tokens, cfg.patch_dim)).astype(np.float32)
+    t = np.float32(0.5)
+    (vel,) = jax.jit(step)(flat, ids, patches, t)
+    golden["mmdit.ids"] = ids
+    golden["mmdit.patches"] = patches
+    golden["mmdit.t"] = np.array([0.5], dtype=np.float32)
+    golden["mmdit.velocity"] = np.asarray(vel)
+
+
+def lower_attention(cfg: Config, out_dir: str, golden: dict) -> None:
+    n, d = cfg.seq_len, cfg.head_dim
+    bq = bk = 8
+    qg, kg = n // bq, n // bk
+    sc_bytes = (qg + 7) // 8
+    ss_bytes = (kg + 7) // 8
+
+    def attn(q, k, v, s_c, s_s):
+        return (flashomni_attention_head(q, k, v, s_c, s_s, block_q=bq, block_k=bk),)
+
+    f32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+    i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+    lowered = jax.jit(attn).lower(f32(n, d), f32(n, d), f32(n, d), i32(sc_bytes), i32(qg, ss_bytes))
+    with open(os.path.join(out_dir, "attention_masked.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    rng = np.random.default_rng(7)
+    q = rng.normal(size=(n, d)).astype(np.float32)
+    k = rng.normal(size=(n, d)).astype(np.float32)
+    v = rng.normal(size=(n, d)).astype(np.float32)
+    m_c = rng.random(qg) < 0.7
+    m_s = rng.random((qg, kg)) < 0.6
+    s_c, s_s = encode_symbols(m_c, m_s)
+    (o,) = jax.jit(attn)(q, k, v, s_c.astype(np.int32), s_s.astype(np.int32))
+    golden["attn.q"] = q
+    golden["attn.k"] = k
+    golden["attn.v"] = v
+    golden["attn.s_c"] = s_c  # u8 packed (rust re-encodes to i32 for PJRT)
+    golden["attn.s_s"] = s_s
+    golden["attn.block"] = np.array([bq, bk], dtype=np.int32)
+    golden["attn.out"] = np.asarray(o)
+    # Cross-check vs the pure-jnp oracle.
+    ref = masked_attention_ref(q, k, v, m_c, m_s, bq, bk)
+    assert float(jnp.max(jnp.abs(o - ref))) < 1e-4
+
+
+def lower_gemms(cfg: Config, out_dir: str, golden: dict) -> None:
+    n, heads = cfg.seq_len, cfg.heads
+    d, dh = cfg.dim, cfg.head_dim
+    bq = 8
+    qg = n // bq
+    sc_bytes = (qg + 7) // 8
+
+    def gq(x, w, s_c):
+        return (gemm_q(x, w, s_c, heads=heads, block_q=bq),)
+
+    def go(o, w, bias, s_c):
+        return (gemm_o_dispatch(o, w, bias, s_c, heads=heads, block_q=bq),)
+
+    f32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+    i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+    lowered = jax.jit(gq).lower(f32(n, d), f32(d, d), i32(heads, sc_bytes))
+    with open(os.path.join(out_dir, "gemm_q.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    lowered = jax.jit(go).lower(f32(n, d), f32(d, d), f32(n, d), i32(heads, sc_bytes))
+    with open(os.path.join(out_dir, "gemm_o.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+
+    rng = np.random.default_rng(11)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    w = rng.normal(size=(d, d)).astype(np.float32)
+    m_c_heads = rng.random((heads, qg)) < 0.5
+    s_c = np.stack(
+        [encode_symbols(m_c_heads[h], np.ones((qg, 1), bool))[0] for h in range(heads)]
+    )
+    (y,) = jax.jit(gq)(x, w, s_c.astype(np.int32))
+    golden["gq.x"] = x
+    golden["gq.w"] = w
+    golden["gq.s_c"] = s_c
+    golden["gq.out"] = np.asarray(y)
+
+    o = rng.normal(size=(n, heads * dh)).astype(np.float32)
+    wo = rng.normal(size=(heads * dh, d)).astype(np.float32)
+    bias = np.asarray(gemm_o_bias_ref(o, wo, m_c_heads, bq))
+    (out,) = jax.jit(go)(o, wo, bias, s_c.astype(np.int32))
+    golden["go.o"] = o
+    golden["go.w"] = wo
+    golden["go.bias"] = bias
+    golden["go.out"] = np.asarray(out)
+    # Eq. 3 exactness: bias + computed tiles == dense projection.
+    assert float(np.max(np.abs(out - o @ wo))) < 1e-3
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", type=str, default="../artifacts")
+    ap.add_argument("--weights", type=str, default=None,
+                    help="weights.fot to embed in the golden step (default: <out>/weights.fot if present)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cfg = Config()
+    wpath = args.weights or os.path.join(args.out, "weights.fot")
+    if os.path.exists(wpath):
+        tensors, meta = fot.load(wpath)
+        cfg = Config(**meta["config"])
+        params = {k: jnp.asarray(v) for k, v in tensors.items()}
+        src = wpath
+    else:
+        params = init_params(cfg, seed=0)
+        src = "init(seed=0)"
+    golden: dict[str, np.ndarray] = {}
+    lower_mmdit_step(cfg, params, args.out, golden)
+    lower_attention(cfg, args.out, golden)
+    lower_gemms(cfg, args.out, golden)
+    fot.save(os.path.join(args.out, "golden.fot"), golden,
+             meta={"weights": src, "config": cfg.to_meta()})
+    print(f"artifacts written to {args.out} (weights source: {src})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""Procedural shapes corpus — the training/eval data substrate.
+
+The paper evaluates on COCO prompts with FLUX/Hunyuan; we cannot ship those
+models or data, so (per DESIGN.md) the toy MiniMMDiT is trained on a fully
+procedural text→image task that still exercises real multimodal attention
+structure: captions are token tuples describing a scene (shape, color,
+position, size, background) and images render that description.
+
+Images are `[H, W, 3]` float32 in [-1, 1]. Captions are `text_tokens` ids in
+`[0, vocab)`; the first 6 positions carry the semantic fields, the rest are
+deterministic filler ("padding words") derived from the scene id.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+SHAPES = ["circle", "square", "triangle", "ring"]
+COLORS = np.array(
+    [
+        [0.9, 0.2, 0.2],
+        [0.2, 0.8, 0.3],
+        [0.25, 0.35, 0.95],
+        [0.95, 0.85, 0.2],
+        [0.85, 0.3, 0.85],
+        [0.2, 0.85, 0.9],
+    ],
+    dtype=np.float32,
+)
+BACKGROUNDS = np.array(
+    [[-0.85, -0.85, -0.85], [-0.4, -0.5, -0.6], [-0.6, -0.4, -0.5], [-0.5, -0.6, -0.35]],
+    dtype=np.float32,
+)
+N_POS = 3  # positions per axis
+N_SIZE = 3
+
+# Token-id blocks (all < 256 so the mini vocab fits).
+_BASE_SHAPE = 10
+_BASE_COLOR = 20
+_BASE_X = 30
+_BASE_Y = 40
+_BASE_SIZE = 50
+_BASE_BG = 60
+_BASE_FILLER = 100
+
+
+def num_scenes() -> int:
+    return len(SHAPES) * len(COLORS) * N_POS * N_POS * N_SIZE * len(BACKGROUNDS)
+
+
+def scene_params(scene_id: int) -> dict:
+    """Decode a scene id into its semantic fields."""
+    s = scene_id % num_scenes()
+    shape = s % len(SHAPES)
+    s //= len(SHAPES)
+    color = s % len(COLORS)
+    s //= len(COLORS)
+    px = s % N_POS
+    s //= N_POS
+    py = s % N_POS
+    s //= N_POS
+    size = s % N_SIZE
+    s //= N_SIZE
+    bg = s % len(BACKGROUNDS)
+    return {"shape": shape, "color": color, "px": px, "py": py, "size": size, "bg": bg}
+
+
+def caption_ids(scene_id: int, text_tokens: int = 16) -> np.ndarray:
+    """Token ids for a scene (deterministic)."""
+    p = scene_params(scene_id)
+    ids = [
+        _BASE_SHAPE + p["shape"],
+        _BASE_COLOR + p["color"],
+        _BASE_X + p["px"],
+        _BASE_Y + p["py"],
+        _BASE_SIZE + p["size"],
+        _BASE_BG + p["bg"],
+    ]
+    # Filler tokens: pseudo-words derived from the scene id (stable hash).
+    h = scene_id
+    while len(ids) < text_tokens:
+        h = (h * 1103515245 + 12345) & 0x7FFFFFFF
+        ids.append(_BASE_FILLER + h % 100)
+    return np.array(ids[:text_tokens], dtype=np.int32)
+
+
+def render(scene_id: int, h: int = 24, w: int = 24) -> np.ndarray:
+    """Render the scene to an `[h, w, 3]` image in [-1, 1]."""
+    p = scene_params(scene_id)
+    img = np.broadcast_to(BACKGROUNDS[p["bg"]], (h, w, 3)).copy()
+    cx = (p["px"] + 1) * w / (N_POS + 1)
+    cy = (p["py"] + 1) * h / (N_POS + 1)
+    r = (0.14 + 0.08 * p["size"]) * min(h, w)
+    color = COLORS[p["color"]]
+    yy, xx = np.mgrid[0:h, 0:w].astype(np.float32)
+    dx, dy = xx + 0.5 - cx, yy + 0.5 - cy
+    name = SHAPES[p["shape"]]
+    if name == "circle":
+        mask = dx * dx + dy * dy <= r * r
+    elif name == "square":
+        mask = (np.abs(dx) <= r * 0.9) & (np.abs(dy) <= r * 0.9)
+    elif name == "triangle":
+        mask = (dy >= -r) & (dy <= r) & (np.abs(dx) <= (dy + r) * 0.6)
+    else:  # ring
+        rr = dx * dx + dy * dy
+        mask = (rr <= r * r) & (rr >= (0.55 * r) ** 2)
+    img[mask] = color * 2.0 - 1.0 + img[mask] * 0.0  # colors mapped to [-1,1]
+    return img.astype(np.float32)
+
+
+def batch(rng: np.random.Generator, batch_size: int, text_tokens: int = 16,
+          h: int = 24, w: int = 24) -> tuple[np.ndarray, np.ndarray]:
+    """Random (images, captions) batch."""
+    ids = rng.integers(0, num_scenes(), size=batch_size)
+    imgs = np.stack([render(int(i), h, w) for i in ids])
+    caps = np.stack([caption_ids(int(i), text_tokens) for i in ids])
+    return imgs, caps

@@ -1,0 +1,20 @@
+"""Export trained JAX parameters to `artifacts/weights.fot` for the rust
+engine (names already match the rust loader)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import fot
+from .model import Config
+
+
+def export_weights(params: dict, cfg: Config, path: str) -> None:
+    tensors = {name: np.asarray(arr, dtype=np.float32) for name, arr in params.items()}
+    fot.save(path, tensors, meta={"config": cfg.to_meta(), "format": "minimmdit-v1"})
+
+
+def load_weights(path: str) -> tuple[dict, Config]:
+    tensors, meta = fot.load(path)
+    cfg = Config(**meta["config"])
+    return tensors, cfg

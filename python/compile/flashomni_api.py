@@ -1,0 +1,142 @@
+"""The paper's §A.4 programming interface, mirrored 1:1.
+
+The appendix sketches how FlashOmni plugs into a diffusers-style
+AttnProcessor:
+
+    q = flashomni.to_q(cache_dic.sparse_symbols, x)          # GEMM-Q
+    attn_out = self.attn_proc(q, k, v, cache_dic.sparse_symbols)
+    cache_dic.sparse_symbols = self.update_sparse_symbols(q, k)
+    out = flashomni.to_out(attn_out, cache_dic.sparse_symbols, cached_bias)
+
+This module provides exactly that surface over the L1 Pallas kernels, so a
+user can wrap any JAX DiT's attention processor the way the paper wraps
+PyTorch ones. (The rust engine exposes the same flow natively via
+`engine::DiTEngine`.)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.flashomni_attention import flashomni_attention
+from .kernels.sparse_gemm import gemm_o_dispatch, gemm_q
+from .kernels.symbols import encode_symbols
+
+
+@dataclass
+class SparseSymbols:
+    """Per-head packed symbols (`S_c` `[H, bytes]`, `S_s` `[H, qg, bytes]`)."""
+
+    s_c: jnp.ndarray
+    s_s: jnp.ndarray
+    block_q: int
+    block_k: int
+
+    @classmethod
+    def dense(cls, heads: int, seq: int, block_q: int, block_k: int) -> "SparseSymbols":
+        qg, kg = seq // block_q, seq // block_k
+        sc, ss = encode_symbols(np.ones(qg, bool), np.ones((qg, kg), bool))
+        return cls(
+            s_c=jnp.asarray(np.stack([sc] * heads), jnp.int32),
+            s_s=jnp.asarray(np.stack([ss] * heads), jnp.int32),
+            block_q=block_q,
+            block_k=block_k,
+        )
+
+    @classmethod
+    def from_masks(cls, m_c: np.ndarray, m_s: np.ndarray, block_q: int, block_k: int
+                   ) -> "SparseSymbols":
+        """m_c: [H, qg] bool; m_s: [H, qg, kg] bool."""
+        packed = [encode_symbols(m_c[h], m_s[h]) for h in range(m_c.shape[0])]
+        return cls(
+            s_c=jnp.asarray(np.stack([p[0] for p in packed]), jnp.int32),
+            s_s=jnp.asarray(np.stack([p[1] for p in packed]), jnp.int32),
+            block_q=block_q,
+            block_k=block_k,
+        )
+
+
+@dataclass
+class CacheDic:
+    """The paper's `cache_dic`: symbols + cached GEMM-O bias."""
+
+    sparse_symbols: SparseSymbols
+    cached_bias: jnp.ndarray | None = None
+    step_type: str = "update"
+    extra: dict = field(default_factory=dict)
+
+
+def to_q(sparse_symbols: SparseSymbols, x, w, *, heads):
+    """FlashOmni GEMM-Q: query projection skipping cached (block, head)
+    tiles (`flashomni.to_q` in the paper's listing)."""
+    return gemm_q(x, w, sparse_symbols.s_c, heads=heads,
+                  block_q=sparse_symbols.block_q)
+
+
+def attention(q, k, v, sparse_symbols: SparseSymbols, *, heads):
+    """The general sparse attention kernel (`self.attn_proc(...)`)."""
+    return flashomni_attention(
+        q, k, v, sparse_symbols.s_c, sparse_symbols.s_s,
+        heads=heads, block_q=sparse_symbols.block_q,
+        block_k=sparse_symbols.block_k,
+    )
+
+
+def to_out(attn_out, sparse_symbols: SparseSymbols, cached_bias, w, *, heads):
+    """FlashOmni GEMM-O dispatch: bias init + computed tiles only."""
+    return gemm_o_dispatch(attn_out, w, cached_bias, sparse_symbols.s_c,
+                           heads=heads, block_q=sparse_symbols.block_q)
+
+
+def update_sparse_symbols(q, k, *, heads, block_q, block_k, text_tokens,
+                          tau_q, tau_kv) -> SparseSymbols:
+    """Refresh symbols from fresh Q/K at an *Update* step: compressed
+    attention map → C/G metrics → Eq. 1 selection (numpy reference of the
+    rust `masks` module, adequate at build/calibration time)."""
+    import math
+
+    n, dcat = q.shape
+    dh = dcat // heads
+    qg, kg = n // block_q, n // block_k
+    nt = text_tokens // block_q
+    m_c = np.ones((heads, qg), bool)
+    m_s = np.ones((heads, qg, kg), bool)
+    for h in range(heads):
+        qs = np.asarray(q[:, h * dh:(h + 1) * dh])
+        ks = np.asarray(k[:, h * dh:(h + 1) * dh])
+        qp = qs.reshape(qg, block_q, dh).mean(1)
+        kp = ks.reshape(kg, block_k, dh).mean(1)
+        s = qp @ kp.T / math.sqrt(dh)
+        p = np.exp(s - s.max(-1, keepdims=True))
+        p /= p.sum(-1, keepdims=True)
+        # C: vision→text contribution; G: text→vision guidance.
+        c = p[:nt, nt:].sum(0)
+        beta = p[nt:, :nt].T
+        beta = np.exp(beta - beta.max(-1, keepdims=True))
+        beta /= beta.sum(-1, keepdims=True)
+        g = beta.sum(0)
+        order = np.argsort(c / max(c.sum(), 1e-12) + g / max(g.sum(), 1e-12))
+        cum_c = cum_g = 0.0
+        for i in order:
+            if cum_c + c[i] <= tau_q * c.sum() and cum_g + g[i] <= tau_q * g.sum():
+                cum_c += c[i]
+                cum_g += g[i]
+                m_c[h, nt + i] = False
+            else:
+                break
+        # BSS: skip smallest-mass blocks per row within tau_kv.
+        for i in range(qg):
+            row_order = np.argsort(p[i])
+            cum = 0.0
+            for j in row_order:
+                if j == min(i, kg - 1):
+                    continue
+                if cum + p[i, j] <= tau_kv:
+                    cum += p[i, j]
+                    m_s[h, i, j] = False
+                else:
+                    break
+    return SparseSymbols.from_masks(m_c, m_s, block_q, block_k)

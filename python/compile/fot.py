@@ -1,0 +1,65 @@
+"""`.fot` tensor container — python twin of `rust/src/util/fot.rs`.
+
+Layout: magic ``FOT1`` | u64-le header length | JSON header | raw payload.
+Header: ``{"tensors": {name: {dtype, shape, offset, nbytes}}, "meta": {...}}``.
+Dtypes: f32, u8, i32 (little-endian).
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+
+import numpy as np
+
+MAGIC = b"FOT1"
+_DTYPES = {"f32": np.float32, "u8": np.uint8, "i32": np.int32}
+_NAMES = {np.dtype(np.float32): "f32", np.dtype(np.uint8): "u8", np.dtype(np.int32): "i32"}
+
+
+def save(path: str, tensors: dict[str, np.ndarray], meta: dict | None = None) -> None:
+    """Write named tensors + metadata to a .fot file."""
+    header: dict = {"tensors": {}, "meta": meta or {}}
+    blobs = []
+    offset = 0
+    for name in sorted(tensors):
+        arr = np.ascontiguousarray(tensors[name])
+        dname = _NAMES.get(arr.dtype)
+        if dname is None:
+            arr = arr.astype(np.float32)
+            dname = "f32"
+        raw = arr.tobytes()
+        header["tensors"][name] = {
+            "dtype": dname,
+            "shape": list(arr.shape),
+            "offset": offset,
+            "nbytes": len(raw),
+        }
+        blobs.append(raw)
+        offset += len(raw)
+    hjson = json.dumps(header, separators=(",", ":")).encode()
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<Q", len(hjson)))
+        f.write(hjson)
+        for b in blobs:
+            f.write(b)
+
+
+def load(path: str) -> tuple[dict[str, np.ndarray], dict]:
+    """Read a .fot file → (tensors, meta)."""
+    with open(path, "rb") as f:
+        data = f.read()
+    if data[:4] != MAGIC:
+        raise ValueError(f"{path}: not a FOT1 file")
+    (hlen,) = struct.unpack("<Q", data[4:12])
+    header = json.loads(data[12 : 12 + hlen])
+    body = data[12 + hlen :]
+    out = {}
+    for name, spec in header["tensors"].items():
+        dt = _DTYPES[spec["dtype"]]
+        arr = np.frombuffer(
+            body, dtype=dt, count=spec["nbytes"] // np.dtype(dt).itemsize, offset=spec["offset"]
+        )
+        out[name] = arr.reshape(spec["shape"]).copy()
+    return out, header.get("meta", {})

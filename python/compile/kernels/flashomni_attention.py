@@ -1,0 +1,115 @@
+"""Layer-1: the FlashOmni **general sparse attention kernel** in Pallas.
+
+One `pallas_call` grid step = one CTA of the paper's Algorithm 1: it decodes
+the spatial symbol `F(S_c, i)` once, decodes the reduction-axis symbol row
+`J(S_s, i, ·)` bytewise (the "up to 8n consecutive blocks per decode"
+register trick becomes a vectorized unpack of the row before the K loop),
+and computes the masked online attention for its Q tile.
+
+TPU-adaptation notes (DESIGN.md §Hardware-Adaptation):
+* CUDA CTA grid → `pallas_call` grid over Q blocks; `BlockSpec` expresses
+  the HBM→VMEM tile schedule the paper wrote with threadblocks.
+* The symbol vectors are tiny (`ceil(T/8)` bytes/row) and live wholly in
+  VMEM; decode is vector integer ops on the VPU, not CUDA-core scalar work.
+* `interpret=True` is REQUIRED on this CPU image: real TPU lowering emits a
+  Mosaic custom-call the CPU PJRT plugin cannot execute. Under interpret
+  mode the grid is dense, so skipping is expressed as masking — identical
+  numerics, no wall-clock savings (the rust twin provides those). On a real
+  TPU the same kernel would move `S_c`/`S_s` to scalar-prefetch operands
+  (`pltpu.PrefetchScalarGridSpec`) and skip K tiles for real.
+
+Symbols are passed as int32 (one byte value per element) because the rust
+PJRT bridge has no u8 literal support; the bitwise decode is unchanged.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, sc_ref, ss_ref, o_ref, *, block_k, q_groups,
+                 kv_groups, pool):
+    i = pl.program_id(0)  # Q-block index == CTA id
+    g = i // pool
+    # --- spatial-axis decode F(S_c, i), once per CTA (Alg. 1 line 5) ---
+    f_bit = (sc_ref[g // 8] >> (7 - g % 8)) & 1
+
+    q = q_ref[...]  # [block_q, d]
+    k = k_ref[...]  # [N_kv, d]
+    v = v_ref[...]
+    d = q.shape[-1]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * (1.0 / math.sqrt(d))
+
+    # --- reduction-axis decode J(S_s, i, ·): bytewise row unpack ---
+    row = ss_ref[g, :]  # [ceil(kv_groups/8)] int32 byte values
+    shifts = 7 - jnp.arange(8, dtype=row.dtype)
+    bits = ((row[:, None] >> shifts[None, :]) & 1).reshape(-1)[:kv_groups]
+    keep = jnp.repeat(bits, block_k * pool)[: s.shape[1]]  # per-token mask
+
+    s = jnp.where(keep[None, :] == 1, s, -jnp.inf)
+    mx = jnp.max(s, axis=-1, keepdims=True)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    e = jnp.where(keep[None, :] == 1, jnp.exp(s - mx), 0.0)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    p = jnp.where(denom > 0, e / jnp.maximum(denom, 1e-30), 0.0)
+    o = jnp.dot(p, v, preferred_element_type=jnp.float32)
+    # Cached CTAs (F = 0) write zeros: the GEMM-O bias path reconstructs
+    # their projected contribution, so the element-wise reuse write is
+    # skipped entirely (§3.5 Obs. 3).
+    o_ref[...] = o * f_bit.astype(o.dtype)
+
+
+def flashomni_attention_head(q, k, v, s_c, s_s, *, block_q, block_k, pool=1,
+                             interpret=True):
+    """Single-head FlashOmni attention.
+
+    q, k, v: [N, d] f32; s_c: [ceil(q_groups/8)] int32 packed bytes;
+    s_s: [q_groups, ceil(kv_groups/8)] int32. Returns [N, d].
+    """
+    n, d = q.shape
+    n_kv = k.shape[0]
+    assert n % block_q == 0, "N must divide block_q for the Pallas grid"
+    t_q = n // block_q
+    t_kv = -(-n_kv // block_k)
+    q_groups = -(-t_q // pool)
+    kv_groups = -(-t_kv // pool)
+    kernel = functools.partial(
+        _attn_kernel, block_k=block_k, q_groups=q_groups, kv_groups=kv_groups, pool=pool
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(t_q,),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((n_kv, d), lambda i: (0, 0)),
+            pl.BlockSpec((n_kv, d), lambda i: (0, 0)),
+            pl.BlockSpec(s_c.shape, lambda i: (0,)),
+            pl.BlockSpec(s_s.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v, s_c, s_s)
+
+
+def flashomni_attention(q, k, v, s_c, s_s, *, heads, block_q, block_k, pool=1,
+                        interpret=True):
+    """Multi-head wrapper: q/k/v [N, heads*dh]; s_c [H, bytes];
+    s_s [H, q_groups, bytes]. Returns [N, heads*dh]."""
+    n, dcat = q.shape
+    dh = dcat // heads
+    outs = []
+    for h in range(heads):
+        sl = slice(h * dh, (h + 1) * dh)
+        outs.append(
+            flashomni_attention_head(
+                q[:, sl], k[:, sl], v[:, sl], s_c[h], s_s[h],
+                block_q=block_q, block_k=block_k, pool=pool, interpret=interpret,
+            )
+        )
+    return jnp.concatenate(outs, axis=1)

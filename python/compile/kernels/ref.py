@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Masked semantics identical to `rust/src/kernels/attention.rs::
+masked_reference`: skipped (Q,K) block pairs contribute −inf before softmax;
+cached Q blocks output zeros (GEMM-O bias path — the cached rows are never
+materialized).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def masked_attention_ref(q, k, v, m_c, m_s, block_q, block_k):
+    """q,k,v: [N, d]; m_c: [q_groups] bool; m_s: [q_groups, kv_groups] bool
+    (pool folded into the block sizes). Returns [N, d]."""
+    n, d = q.shape
+    n_kv = k.shape[0]
+    scale = 1.0 / math.sqrt(d)
+    row_groups = np.arange(n) // block_q
+    col_groups = np.arange(n_kv) // block_k
+    keep = np.asarray(m_s)[row_groups][:, col_groups]  # [N, N_kv] bool
+    s = (q @ k.T) * scale
+    s = jnp.where(jnp.asarray(keep), s, -jnp.inf)
+    # Rows with no kept block → all -inf → softmax NaN; guard with where.
+    mx = jnp.max(s, axis=-1, keepdims=True)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    e = jnp.exp(s - mx)
+    e = jnp.where(jnp.asarray(keep), e, 0.0)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    p = jnp.where(denom > 0, e / jnp.maximum(denom, 1e-30), 0.0)
+    o = p @ v
+    computed_rows = jnp.asarray(np.asarray(m_c)[row_groups], dtype=q.dtype)[:, None]
+    return o * computed_rows
+
+
+def gemm_q_ref(x, w, m_c_heads, block_q):
+    """x: [N, din]; w: [din, H*dh]; m_c_heads: [H, q_groups] bool.
+    Skipped (block, head) tiles are zero."""
+    n = x.shape[0]
+    heads = m_c_heads.shape[0]
+    d_out = w.shape[1]
+    dh = d_out // heads
+    y = x @ w
+    row_groups = np.arange(n) // block_q
+    mask = np.zeros((n, d_out), dtype=np.float32)
+    for h in range(heads):
+        mask[:, h * dh : (h + 1) * dh] = np.asarray(m_c_heads)[h][row_groups][:, None]
+    return y * jnp.asarray(mask)
+
+
+def gemm_o_dispatch_ref(o_cat, w, m_c_heads, block_q, bias):
+    """Out = bias + Σ_{computed tiles} O^h W^h."""
+    n = o_cat.shape[0]
+    heads = m_c_heads.shape[0]
+    d_cat = o_cat.shape[1]
+    dh = d_cat // heads
+    row_groups = np.arange(n) // block_q
+    out = jnp.asarray(bias)
+    for h in range(heads):
+        sel = jnp.asarray(np.asarray(m_c_heads)[h][row_groups], dtype=o_cat.dtype)[:, None]
+        oh = o_cat[:, h * dh : (h + 1) * dh] * sel
+        out = out + oh @ w[h * dh : (h + 1) * dh, :]
+    return out
+
+
+def gemm_o_bias_ref(o_cat, w, m_c_heads, block_q):
+    """B_c = Σ_{cached tiles} O^h W^h (stage 1 of the Update step)."""
+    n = o_cat.shape[0]
+    heads = m_c_heads.shape[0]
+    dh = o_cat.shape[1] // heads
+    row_groups = np.arange(n) // block_q
+    bias = jnp.zeros((n, w.shape[1]), dtype=o_cat.dtype)
+    for h in range(heads):
+        sel = jnp.asarray(~np.asarray(m_c_heads)[h][row_groups], dtype=o_cat.dtype)[:, None]
+        oh = o_cat[:, h * dh : (h + 1) * dh] * sel
+        bias = bias + oh @ w[h * dh : (h + 1) * dh, :]
+    return bias
+
+
+def taylor_forecast_ref(stack, k):
+    """TaylorSeer: Σ_d k^d/d! · stack[d]."""
+    out = jnp.zeros_like(stack[0])
+    coeff = 1.0
+    for d, s in enumerate(stack):
+        if d > 0:
+            coeff *= k / d
+        out = out + coeff * s
+    return out

@@ -1,0 +1,87 @@
+"""Layer-1: FlashOmni **sparse GEMM-Q / GEMM-O** in Pallas (§3.5).
+
+Same CTA ↔ grid-step mapping as the attention kernel. GEMM-Q tiles are
+`(row block × head)`: a tile whose caching symbol is 0 exits without work
+(masked to zero under interpret mode). GEMM-O initializes from the cached
+bias `B_c` and projects only the computed head tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_q_kernel(x_ref, w_ref, sc_ref, y_ref, *, heads, dh, pool):
+    i = pl.program_id(0)
+    g = i // pool
+    x = x_ref[...]  # [bq, din]
+    w = w_ref[...]  # [din, H*dh]
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    bits = (sc_ref[...][:, g // 8] >> (7 - g % 8)) & 1  # [H]
+    mask = jnp.repeat(bits, dh).astype(y.dtype)  # [H*dh]
+    y_ref[...] = y * mask[None, :]
+
+
+def gemm_q(x, w, s_c, *, heads, block_q, pool=1, interpret=True):
+    """x: [N, din]; w: [din, H*dh]; s_c: [H, ceil(q_groups/8)] int32.
+    Returns [N, H*dh] with cached (block, head) tiles zeroed."""
+    n, din = x.shape
+    d_out = w.shape[1]
+    dh = d_out // heads
+    assert n % block_q == 0
+    t_q = n // block_q
+    kernel = functools.partial(_gemm_q_kernel, heads=heads, dh=dh, pool=pool)
+    return pl.pallas_call(
+        kernel,
+        grid=(t_q,),
+        in_specs=[
+            pl.BlockSpec((block_q, din), lambda i: (i, 0)),
+            pl.BlockSpec((din, d_out), lambda i: (0, 0)),
+            pl.BlockSpec(s_c.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, d_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d_out), x.dtype),
+        interpret=interpret,
+    )(x, w, s_c)
+
+
+def _gemm_o_kernel(o_ref, w_ref, bias_ref, sc_ref, out_ref, *, heads, dh, pool):
+    i = pl.program_id(0)
+    g = i // pool
+    o = o_ref[...]  # [bq, H*dh] (cached tiles hold garbage/zeros)
+    w = w_ref[...]  # [H*dh, dout]
+    bits = (sc_ref[...][:, g // 8] >> (7 - g % 8)) & 1  # [H]
+    mask = jnp.repeat(bits, dh).astype(o.dtype)
+    out_ref[...] = bias_ref[...] + jnp.dot(
+        o * mask[None, :], w, preferred_element_type=jnp.float32
+    )
+
+
+def gemm_o_dispatch(o_cat, w, bias, s_c, *, heads, block_q, pool=1, interpret=True):
+    """Dispatch-step GEMM-O: `out = OP_reuse(B_c) + Σ_{computed} O^h W^h`.
+
+    o_cat: [N, H*dh]; w: [H*dh, dout]; bias: [N, dout];
+    s_c: [H, ceil(q_groups/8)] int32."""
+    n, d_cat = o_cat.shape
+    d_out = w.shape[1]
+    dh = d_cat // heads
+    assert n % block_q == 0
+    t_q = n // block_q
+    kernel = functools.partial(_gemm_o_kernel, heads=heads, dh=dh, pool=pool)
+    return pl.pallas_call(
+        kernel,
+        grid=(t_q,),
+        in_specs=[
+            pl.BlockSpec((block_q, d_cat), lambda i: (i, 0)),
+            pl.BlockSpec((d_cat, d_out), lambda i: (0, 0)),
+            pl.BlockSpec((block_q, d_out), lambda i: (i, 0)),
+            pl.BlockSpec(s_c.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, d_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d_out), o_cat.dtype),
+        interpret=interpret,
+    )(o_cat, w, bias, s_c)

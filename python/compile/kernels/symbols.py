@@ -1,0 +1,55 @@
+"""Sparse-symbol packing helpers — python twin of `rust/src/symbols`.
+
+Bits are packed MSB-first within each byte (paper Fig. 5: mask [1,1,1,0,0]
+→ 0b1110_0000 = 224). `True` = compute, `False` = cache/skip.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def pack_bits(bits: np.ndarray) -> np.ndarray:
+    """Bool array → uint8 array, MSB-first."""
+    bits = np.asarray(bits, dtype=bool)
+    n = len(bits)
+    out = np.zeros((n + 7) // 8, dtype=np.uint8)
+    for i, b in enumerate(bits):
+        if b:
+            out[i // 8] |= 1 << (7 - i % 8)
+    return out
+
+
+def unpack_bits(packed: np.ndarray, n: int) -> np.ndarray:
+    """uint8 array → bool array of length n, MSB-first."""
+    packed = np.asarray(packed, dtype=np.uint8)
+    bits = np.unpackbits(packed)  # MSB-first by default
+    return bits[:n].astype(bool)
+
+
+def encode_symbols(m_c: np.ndarray, m_s: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Logical masks → packed symbols.
+
+    m_c: [q_groups] bool; m_s: [q_groups, kv_groups] bool.
+    Returns (s_c [ceil(qg/8)] u8, s_s [qg, ceil(kg/8)] u8) — S_s packed
+    row-wise so each CTA's row decode touches contiguous bytes.
+    """
+    m_c = np.asarray(m_c, dtype=bool)
+    m_s = np.asarray(m_s, dtype=bool)
+    qg, kg = m_s.shape
+    assert m_c.shape == (qg,)
+    s_c = pack_bits(m_c)
+    s_s = np.stack([pack_bits(m_s[i]) for i in range(qg)])
+    return s_c, s_s
+
+
+def decode_f(s_c: np.ndarray, i: int, pool: int = 1) -> bool:
+    """Spatial decode F(S_c, i) for raw block index i."""
+    g = i // pool
+    return bool((s_c[g // 8] >> (7 - g % 8)) & 1)
+
+
+def decode_j(s_s: np.ndarray, i: int, j: int, pool: int = 1) -> bool:
+    """Reduction decode J(S_s, i, j) for raw block indices (row-packed)."""
+    gi, gj = i // pool, j // pool
+    return bool((s_s[gi, gj // 8] >> (7 - gj % 8)) & 1)

@@ -1,0 +1,271 @@
+"""Layer-2: MiniMMDiT in JAX — must match `rust/src/model` bit-for-bit-ish.
+
+A double-stream MMDiT (SD3/FLUX style): separate text/vision stream weights,
+joint self-attention over the concatenated sequence, adaLN-zero modulation,
+per-head RMSNorm on Q/K, 1-D RoPE, rectified-flow velocity output.
+
+Parameters live in a flat dict keyed by the same names the rust loader uses
+(`blocks.{i}.{txt|img}.wq` …), so `export.py` writes them straight to
+`artifacts/weights.fot`.
+
+The attention stage is pluggable (`attn_fn`): training uses the plain jnp
+reference; the AOT path (`aot.py`) injects the Pallas FlashOmni kernel so it
+lowers into the exported HLO.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROPE_THETA = 10_000.0
+LN_EPS = 1e-6
+RMS_EPS = 1e-6
+
+
+@dataclass(frozen=True)
+class Config:
+    dim: int = 128
+    heads: int = 4
+    layers: int = 4
+    text_tokens: int = 16
+    patch_h: int = 12
+    patch_w: int = 12
+    patch_size: int = 2
+    channels: int = 3
+    mlp_ratio: int = 4
+    vocab: int = 256
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.heads
+
+    @property
+    def vision_tokens(self) -> int:
+        return self.patch_h * self.patch_w
+
+    @property
+    def seq_len(self) -> int:
+        return self.text_tokens + self.vision_tokens
+
+    @property
+    def patch_dim(self) -> int:
+        return self.patch_size * self.patch_size * self.channels
+
+    @property
+    def image_h(self) -> int:
+        return self.patch_h * self.patch_size
+
+    @property
+    def image_w(self) -> int:
+        return self.patch_w * self.patch_size
+
+    def to_meta(self) -> dict:
+        return {
+            "dim": self.dim,
+            "heads": self.heads,
+            "layers": self.layers,
+            "text_tokens": self.text_tokens,
+            "patch_h": self.patch_h,
+            "patch_w": self.patch_w,
+            "patch_size": self.patch_size,
+            "channels": self.channels,
+            "mlp_ratio": self.mlp_ratio,
+            "vocab": self.vocab,
+        }
+
+
+# ---------------------------------------------------------------- params --
+
+
+def init_params(cfg: Config, seed: int = 0) -> dict[str, jnp.ndarray]:
+    """Random init, names matching the rust weight loader."""
+    rng = np.random.default_rng(seed)
+    d, hd, m = cfg.dim, cfg.head_dim, cfg.mlp_ratio * cfg.dim
+    s = 1.0 / math.sqrt(d)
+
+    def t(*shape, scale=s):
+        return jnp.asarray(rng.normal(0, scale, size=shape), dtype=jnp.float32)
+
+    def zeros(*shape):
+        return jnp.zeros(shape, dtype=jnp.float32)
+
+    p: dict[str, jnp.ndarray] = {
+        "text_embed": t(cfg.vocab, d, scale=0.02),
+        "patch_embed.w": t(cfg.patch_dim, d),
+        "patch_embed.b": zeros(d),
+        "time_mlp.w1": t(d, d),
+        "time_mlp.b1": zeros(d),
+        "time_mlp.w2": t(d, d),
+        "time_mlp.b2": zeros(d),
+        "final.ada.w": t(d, 2 * d, scale=s * 0.1),
+        "final.ada.b": zeros(2 * d),
+        "final.w": t(d, cfg.patch_dim),
+        "final.b": zeros(cfg.patch_dim),
+    }
+    for i in range(cfg.layers):
+        for st in ("txt", "img"):
+            pre = f"blocks.{i}.{st}"
+            p[f"{pre}.ada.w"] = t(d, 6 * d, scale=s * 0.1)
+            p[f"{pre}.ada.b"] = zeros(6 * d)
+            p[f"{pre}.wq"] = t(d, d)
+            p[f"{pre}.bq"] = zeros(d)
+            p[f"{pre}.wk"] = t(d, d)
+            p[f"{pre}.bk"] = zeros(d)
+            p[f"{pre}.wv"] = t(d, d)
+            p[f"{pre}.bv"] = zeros(d)
+            p[f"{pre}.q_rms"] = jnp.ones(hd, dtype=jnp.float32)
+            p[f"{pre}.k_rms"] = jnp.ones(hd, dtype=jnp.float32)
+            p[f"{pre}.wo"] = t(d, d)
+            p[f"{pre}.bo"] = zeros(d)
+            p[f"{pre}.mlp.w1"] = t(d, m)
+            p[f"{pre}.mlp.b1"] = zeros(m)
+            p[f"{pre}.mlp.w2"] = t(m, d, scale=1.0 / math.sqrt(m))
+            p[f"{pre}.mlp.b2"] = zeros(d)
+    return p
+
+
+# ------------------------------------------------------------------ ops --
+
+
+def layernorm(x):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + LN_EPS)
+
+
+def headwise_rmsnorm(x, heads, scale):
+    """x: [N, dim] → per-head RMS norm with learned [head_dim] scale."""
+    n, d = x.shape
+    hd = d // heads
+    xh = x.reshape(n, heads, hd)
+    inv = 1.0 / jnp.sqrt(jnp.mean(xh * xh, axis=-1, keepdims=True) + RMS_EPS)
+    return (xh * inv * scale).reshape(n, d)
+
+
+def rope_angles(positions, head_dim):
+    i = jnp.arange(head_dim // 2, dtype=jnp.float32)
+    freq = ROPE_THETA ** (-2.0 * i / head_dim)
+    return positions[:, None].astype(jnp.float32) * freq[None, :]  # [N, hd/2]
+
+
+def headwise_rope(x, heads, positions):
+    """Pair convention (x[2i], x[2i+1]); matches rust `rope`."""
+    n, d = x.shape
+    hd = d // heads
+    ang = rope_angles(positions, hd)  # [N, hd/2]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    xh = x.reshape(n, heads, hd // 2, 2)
+    a, b = xh[..., 0], xh[..., 1]
+    ra = a * cos[:, None, :] - b * sin[:, None, :]
+    rb = a * sin[:, None, :] + b * cos[:, None, :]
+    return jnp.stack([ra, rb], axis=-1).reshape(n, d)
+
+
+def timestep_features(cfg: Config, t):
+    half = cfg.dim // 2
+    i = jnp.arange(half, dtype=jnp.float32)
+    freq = jnp.exp(-math.log(10_000.0) * i / half)
+    ts = t * 1000.0
+    return jnp.concatenate([jnp.cos(ts * freq), jnp.sin(ts * freq)])
+
+
+def attention_reference(q, k, v, heads):
+    """Dense joint attention. q/k/v: [N, dim] → [N, dim]."""
+    n, d = q.shape
+    hd = d // heads
+    qh = q.reshape(n, heads, hd).transpose(1, 0, 2)
+    kh = k.reshape(n, heads, hd).transpose(1, 0, 2)
+    vh = v.reshape(n, heads, hd).transpose(1, 0, 2)
+    s = jnp.einsum("hqd,hkd->hqk", qh, kh) / math.sqrt(hd)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("hqk,hkd->hqd", p, vh)
+    return o.transpose(1, 0, 2).reshape(n, d)
+
+
+def adaln6(p, pre, c):
+    a = jax.nn.silu(c) @ p[f"{pre}.ada.w"] + p[f"{pre}.ada.b"]
+    return jnp.split(a, 6)
+
+
+def mlp(p, pre, x):
+    h = x @ p[f"{pre}.mlp.w1"] + p[f"{pre}.mlp.b1"]
+    h = jax.nn.gelu(h, approximate=True)
+    return h @ p[f"{pre}.mlp.w2"] + p[f"{pre}.mlp.b2"]
+
+
+# -------------------------------------------------------------- forward --
+
+
+def forward(params, cfg: Config, text_ids, patches, t, attn_fn=None):
+    """One denoising step. text_ids: [T] int32, patches: [V, patch_dim],
+    t: scalar in [0,1]. Returns per-patch velocity [V, patch_dim].
+
+    `attn_fn(layer, q, k, v, heads) -> o_cat` lets the AOT path substitute
+    the Pallas FlashOmni kernel.
+    """
+    if attn_fn is None:
+        attn_fn = lambda layer, q, k, v, heads: attention_reference(q, k, v, heads)
+    p = params
+    txt = p["text_embed"][text_ids]  # [T, dim]
+    img = patches @ p["patch_embed.w"] + p["patch_embed.b"]
+
+    emb = timestep_features(cfg, t)
+    h = jax.nn.silu(emb @ p["time_mlp.w1"] + p["time_mlp.b1"])
+    c = h @ p["time_mlp.w2"] + p["time_mlp.b2"]
+
+    positions = jnp.arange(cfg.seq_len)
+    for i in range(cfg.layers):
+        pt, pi = f"blocks.{i}.txt", f"blocks.{i}.img"
+        sh1t, sc1t, g1t, sh2t, sc2t, g2t = adaln6(p, pt, c)
+        sh1i, sc1i, g1i, sh2i, sc2i, g2i = adaln6(p, pi, c)
+        tm = layernorm(txt) * (1 + sc1t) + sh1t
+        im = layernorm(img) * (1 + sc1i) + sh1i
+
+        q = jnp.concatenate(
+            [
+                headwise_rmsnorm(tm @ p[f"{pt}.wq"] + p[f"{pt}.bq"], cfg.heads, p[f"{pt}.q_rms"]),
+                headwise_rmsnorm(im @ p[f"{pi}.wq"] + p[f"{pi}.bq"], cfg.heads, p[f"{pi}.q_rms"]),
+            ]
+        )
+        k = jnp.concatenate(
+            [
+                headwise_rmsnorm(tm @ p[f"{pt}.wk"] + p[f"{pt}.bk"], cfg.heads, p[f"{pt}.k_rms"]),
+                headwise_rmsnorm(im @ p[f"{pi}.wk"] + p[f"{pi}.bk"], cfg.heads, p[f"{pi}.k_rms"]),
+            ]
+        )
+        v = jnp.concatenate(
+            [tm @ p[f"{pt}.wv"] + p[f"{pt}.bv"], im @ p[f"{pi}.wv"] + p[f"{pi}.bv"]]
+        )
+        q = headwise_rope(q, cfg.heads, positions)
+        k = headwise_rope(k, cfg.heads, positions)
+
+        o = attn_fn(i, q, k, v, cfg.heads)
+        ot, oi = o[: cfg.text_tokens], o[cfg.text_tokens :]
+        txt = txt + g1t * (ot @ p[f"{pt}.wo"] + p[f"{pt}.bo"])
+        img = img + g1i * (oi @ p[f"{pi}.wo"] + p[f"{pi}.bo"])
+
+        txt = txt + g2t * mlp(p, pt, layernorm(txt) * (1 + sc2t) + sh2t)
+        img = img + g2i * mlp(p, pi, layernorm(img) * (1 + sc2i) + sh2i)
+
+    a = jax.nn.silu(c) @ p["final.ada.w"] + p["final.ada.b"]
+    shift, scale = jnp.split(a, 2)
+    h = layernorm(img) * (1 + scale) + shift
+    return h @ p["final.w"] + p["final.b"]
+
+
+def patchify(cfg: Config, img):
+    """[H, W, C] → [tokens, patch_dim] matching rust `diffusion::patchify`."""
+    p = cfg.patch_size
+    x = img.reshape(cfg.patch_h, p, cfg.patch_w, p, cfg.channels)
+    return x.transpose(0, 2, 1, 3, 4).reshape(cfg.vision_tokens, cfg.patch_dim)
+
+
+def unpatchify(cfg: Config, patches):
+    p = cfg.patch_size
+    x = patches.reshape(cfg.patch_h, cfg.patch_w, p, p, cfg.channels)
+    return x.transpose(0, 2, 1, 3, 4).reshape(cfg.image_h, cfg.image_w, cfg.channels)

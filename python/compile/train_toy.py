@@ -1,0 +1,107 @@
+"""Toy rectified-flow training of MiniMMDiT on the procedural shapes corpus.
+
+Build-time only (never on the serve path). Manual Adam (optax unavailable in
+this offline image). Run:
+
+    cd python && python -m compile.train_toy --steps 600 --out ../artifacts
+
+Writes `weights.fot` + `train_log.json` (loss curve, recorded in
+EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dataset
+from .export import export_weights
+from .model import Config, forward, init_params, patchify
+
+
+def make_loss(cfg: Config):
+    def single(params, ids, img, t, eps):
+        x0 = patchify(cfg, img)
+        xt = (1.0 - t) * x0 + t * eps
+        v_hat = forward(params, cfg, ids, xt, t)
+        v_star = eps - x0
+        return jnp.mean((v_hat - v_star) ** 2)
+
+    def loss(params, ids_b, imgs_b, ts_b, eps_b):
+        return jnp.mean(jax.vmap(single, in_axes=(None, 0, 0, 0, 0))(params, ids_b, imgs_b, ts_b, eps_b))
+
+    return loss
+
+
+def adam_update(params, grads, m, v, step, lr=2e-3, b1=0.9, b2=0.999, eps=1e-8):
+    m = jax.tree.map(lambda mi, g: b1 * mi + (1 - b1) * g, m, grads)
+    v = jax.tree.map(lambda vi, g: b2 * vi + (1 - b2) * g * g, v, grads)
+    mh = jax.tree.map(lambda mi: mi / (1 - b1**step), m)
+    vh = jax.tree.map(lambda vi: vi / (1 - b2**step), v)
+    params = jax.tree.map(lambda p, mi, vi: p - lr * mi / (jnp.sqrt(vi) + eps), params, mh, vh)
+    return params, m, v
+
+
+def train(cfg: Config, steps: int, batch: int, seed: int, lr: float, log_every: int = 25):
+    params = init_params(cfg, seed)
+    loss_fn = make_loss(cfg)
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+
+    @jax.jit
+    def opt_step(params, m, v, step, ids_b, imgs_b, ts_b, eps_b):
+        l, g = jax.value_and_grad(loss_fn)(params, ids_b, imgs_b, ts_b, eps_b)
+        params, m, v = adam_update(params, g, m, v, step, lr=lr)
+        return params, m, v, l
+
+    _ = grad_fn  # jitted inside opt_step
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    rng = np.random.default_rng(seed + 1)
+    log = []
+    t0 = time.time()
+    for step in range(1, steps + 1):
+        imgs, caps = dataset.batch(rng, batch, cfg.text_tokens, cfg.image_h, cfg.image_w)
+        ts = rng.uniform(0.001, 0.999, size=batch).astype(np.float32)
+        eps = rng.normal(size=(batch, cfg.vision_tokens, cfg.patch_dim)).astype(np.float32)
+        params, m, v, l = opt_step(
+            params,
+            m,
+            v,
+            jnp.float32(step),
+            jnp.asarray(caps),
+            jnp.asarray(imgs),
+            jnp.asarray(ts),
+            jnp.asarray(eps),
+        )
+        if step % log_every == 0 or step == 1:
+            log.append({"step": step, "loss": float(l), "elapsed_s": time.time() - t0})
+            print(f"step {step:5d}  loss {float(l):.4f}  ({time.time()-t0:.0f}s)", flush=True)
+    return params, log
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=600)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=2e-3)
+    ap.add_argument("--out", type=str, default="../artifacts")
+    args = ap.parse_args()
+
+    cfg = Config()
+    os.makedirs(args.out, exist_ok=True)
+    params, log = train(cfg, args.steps, args.batch, args.seed, args.lr)
+    export_weights(params, cfg, os.path.join(args.out, "weights.fot"))
+    with open(os.path.join(args.out, "train_log.json"), "w") as f:
+        json.dump({"config": cfg.to_meta(), "steps": args.steps, "batch": args.batch, "log": log}, f, indent=1)
+    print(f"saved weights + log to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

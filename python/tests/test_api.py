@@ -1,0 +1,74 @@
+"""Tests for the §A.4 programming-interface mirror (flashomni_api)."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import flashomni_api as fo
+from compile.kernels.ref import masked_attention_ref, gemm_o_bias_ref
+
+
+def test_dense_symbols_roundtrip_full_attention_flow():
+    rng = np.random.default_rng(0)
+    n, heads, dh, b = 32, 2, 8, 8
+    d = heads * dh
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    wq = rng.normal(size=(d, d)).astype(np.float32)
+    wo = rng.normal(size=(d, d)).astype(np.float32)
+    syms = fo.SparseSymbols.dense(heads, n, b, b)
+
+    q = fo.to_q(syms, x, wq, heads=heads)
+    np.testing.assert_allclose(np.asarray(q), x @ wq, atol=1e-4, rtol=1e-4)
+
+    out = fo.attention(q, q, q, syms, heads=heads)
+    assert out.shape == (n, d)
+
+    bias = jnp.zeros((n, d), jnp.float32)
+    final = fo.to_out(out, syms, bias, wo, heads=heads)
+    np.testing.assert_allclose(np.asarray(final), np.asarray(out) @ wo, atol=1e-3, rtol=1e-3)
+
+
+def test_update_sparse_symbols_caches_within_budget():
+    rng = np.random.default_rng(1)
+    n, heads, dh, b, text = 64, 2, 8, 8, 8
+    q = rng.normal(size=(n, heads * dh)).astype(np.float32)
+    k = rng.normal(size=(n, heads * dh)).astype(np.float32)
+    syms = fo.update_sparse_symbols(
+        q, k, heads=heads, block_q=b, block_k=b, text_tokens=text,
+        tau_q=0.5, tau_kv=0.2,
+    )
+    # Text groups never cached; some vision group cached at τ=0.5.
+    from compile.kernels.symbols import decode_f
+    sc = np.asarray(syms.s_c, np.uint8)
+    nt = text // b
+    for h in range(heads):
+        for g in range(nt):
+            assert decode_f(sc[h], g)
+    cached = sum(
+        not decode_f(sc[h], g) for h in range(heads) for g in range(n // b)
+    )
+    assert cached > 0
+
+
+def test_sparse_flow_matches_masked_reference():
+    rng = np.random.default_rng(2)
+    n, heads, dh, b = 32, 2, 8, 8
+    d = heads * dh
+    qg = n // b
+    m_c = rng.random((heads, qg)) < 0.6
+    m_s = rng.random((heads, qg, qg)) < 0.7
+    syms = fo.SparseSymbols.from_masks(m_c, m_s, b, b)
+    q = rng.normal(size=(n, d)).astype(np.float32)
+    k = rng.normal(size=(n, d)).astype(np.float32)
+    v = rng.normal(size=(n, d)).astype(np.float32)
+    out = fo.attention(q, k, v, syms, heads=heads)
+    for h in range(heads):
+        sl = slice(h * dh, (h + 1) * dh)
+        ref = masked_attention_ref(q[:, sl], k[:, sl], v[:, sl], m_c[h], m_s[h], b, b)
+        np.testing.assert_allclose(np.asarray(out[:, sl]), np.asarray(ref),
+                                   atol=2e-5, rtol=2e-4)
+    # Eq. 3: to_out with the cached bias reconstructs the dense projection.
+    wo = rng.normal(size=(d, d)).astype(np.float32)
+    o_full = rng.normal(size=(n, d)).astype(np.float32)
+    bias = gemm_o_bias_ref(o_full, wo, m_c, b)
+    final = fo.to_out(jnp.asarray(o_full), syms, bias, wo, heads=heads)
+    np.testing.assert_allclose(np.asarray(final), o_full @ wo, atol=1e-3, rtol=1e-3)

@@ -1,0 +1,206 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes, block sizes, pools, and mask densities.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.flashomni_attention import flashomni_attention, flashomni_attention_head
+from compile.kernels.ref import (
+    gemm_o_bias_ref,
+    gemm_o_dispatch_ref,
+    gemm_q_ref,
+    masked_attention_ref,
+    taylor_forecast_ref,
+)
+from compile.kernels.sparse_gemm import gemm_o_dispatch, gemm_q
+from compile.kernels.symbols import decode_f, decode_j, encode_symbols, pack_bits, unpack_bits
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+# ------------------------------------------------------------- symbols --
+
+
+@given(bits=st.lists(st.booleans(), min_size=1, max_size=64))
+@settings(**SETTINGS)
+def test_pack_unpack_roundtrip(bits):
+    packed = pack_bits(np.array(bits))
+    assert unpack_bits(packed, len(bits)).tolist() == bits
+
+
+def test_figure5_example():
+    # Paper Fig. 5: caching mask [1,1,1,0,0] → uint8 224.
+    assert pack_bits(np.array([1, 1, 1, 0, 0], bool))[0] == 224
+
+
+@given(
+    qg=st.integers(1, 20),
+    kg=st.integers(1, 20),
+    pool=st.integers(1, 3),
+    seed=st.integers(0, 100),
+)
+@settings(**SETTINGS)
+def test_decode_matches_masks(qg, kg, pool, seed):
+    rng = np.random.default_rng(seed)
+    m_c = rng.random(qg) < 0.6
+    m_s = rng.random((qg, kg)) < 0.5
+    s_c, s_s = encode_symbols(m_c, m_s)
+    for gi in range(qg):
+        for raw_i in (gi * pool, gi * pool + pool - 1):
+            assert decode_f(s_c, raw_i, pool) == m_c[gi]
+        for gj in range(kg):
+            assert decode_j(s_s, gi * pool, gj * pool, pool) == m_s[gi, gj]
+
+
+# ----------------------------------------------------------- attention --
+
+
+@given(
+    n_blocks=st.integers(2, 8),
+    d=st.sampled_from([4, 8, 16, 32]),
+    bq=st.sampled_from([4, 8, 16]),
+    density=st.floats(0.2, 1.0),
+    seed=st.integers(0, 1000),
+)
+@settings(**SETTINGS)
+def test_attention_vs_ref(n_blocks, d, bq, density, seed):
+    n = n_blocks * bq
+    bk = bq
+    qg, kg = n // bq, n // bk
+    rng = np.random.default_rng(seed)
+    q = rng.normal(size=(n, d)).astype(np.float32)
+    k = rng.normal(size=(n, d)).astype(np.float32)
+    v = rng.normal(size=(n, d)).astype(np.float32)
+    m_c = rng.random(qg) < density
+    m_s = rng.random((qg, kg)) < density
+    s_c, s_s = encode_symbols(m_c, m_s)
+    out = flashomni_attention_head(
+        q, k, v, jnp.asarray(s_c, jnp.int32), jnp.asarray(s_s, jnp.int32),
+        block_q=bq, block_k=bk,
+    )
+    ref = masked_attention_ref(q, k, v, m_c, m_s, bq, bk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-4)
+
+
+def test_attention_dense_symbols_equal_softmax():
+    rng = np.random.default_rng(3)
+    n, d, b = 32, 8, 8
+    q = rng.normal(size=(n, d)).astype(np.float32)
+    k = rng.normal(size=(n, d)).astype(np.float32)
+    v = rng.normal(size=(n, d)).astype(np.float32)
+    qg = n // b
+    s_c, s_s = encode_symbols(np.ones(qg, bool), np.ones((qg, qg), bool))
+    out = flashomni_attention_head(
+        q, k, v, jnp.asarray(s_c, jnp.int32), jnp.asarray(s_s, jnp.int32),
+        block_q=b, block_k=b,
+    )
+    import math
+    p = np.asarray(jnp.exp((q @ k.T) / math.sqrt(d)))
+    p = p / p.sum(-1, keepdims=True)
+    np.testing.assert_allclose(np.asarray(out), p @ v, atol=1e-4, rtol=1e-3)
+
+
+def test_attention_multihead_wrapper():
+    rng = np.random.default_rng(4)
+    n, heads, dh, b = 32, 2, 8, 8
+    qg = n // b
+    q = rng.normal(size=(n, heads * dh)).astype(np.float32)
+    k = rng.normal(size=(n, heads * dh)).astype(np.float32)
+    v = rng.normal(size=(n, heads * dh)).astype(np.float32)
+    m_c = rng.random((heads, qg)) < 0.7
+    m_s = rng.random((heads, qg, qg)) < 0.6
+    s_c = np.stack([encode_symbols(m_c[h], m_s[h])[0] for h in range(heads)])
+    s_s = np.stack([encode_symbols(m_c[h], m_s[h])[1] for h in range(heads)])
+    out = flashomni_attention(
+        q, k, v, jnp.asarray(s_c, jnp.int32), jnp.asarray(s_s, jnp.int32),
+        heads=heads, block_q=b, block_k=b,
+    )
+    for h in range(heads):
+        sl = slice(h * dh, (h + 1) * dh)
+        ref = masked_attention_ref(q[:, sl], k[:, sl], v[:, sl], m_c[h], m_s[h], b, b)
+        np.testing.assert_allclose(np.asarray(out[:, sl]), np.asarray(ref), atol=2e-5, rtol=2e-4)
+
+
+def test_fully_cached_head_outputs_zero():
+    rng = np.random.default_rng(5)
+    n, d, b = 16, 4, 8
+    qg = n // b
+    q = rng.normal(size=(n, d)).astype(np.float32)
+    s_c, s_s = encode_symbols(np.zeros(qg, bool), np.ones((qg, qg), bool))
+    out = flashomni_attention_head(
+        q, q, q, jnp.asarray(s_c, jnp.int32), jnp.asarray(s_s, jnp.int32),
+        block_q=b, block_k=b,
+    )
+    assert float(jnp.max(jnp.abs(out))) == 0.0
+
+
+# --------------------------------------------------------------- gemms --
+
+
+@given(
+    n_blocks=st.integers(2, 6),
+    heads=st.sampled_from([1, 2, 4]),
+    dh=st.sampled_from([4, 8]),
+    din=st.sampled_from([8, 16]),
+    seed=st.integers(0, 500),
+)
+@settings(**SETTINGS)
+def test_gemm_q_vs_ref(n_blocks, heads, dh, din, seed):
+    bq = 8
+    n = n_blocks * bq
+    qg = n // bq
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, din)).astype(np.float32)
+    w = rng.normal(size=(din, heads * dh)).astype(np.float32)
+    m_c = rng.random((heads, qg)) < 0.5
+    s_c = np.stack([pack_bits(m_c[h]) for h in range(heads)])
+    y = gemm_q(x, w, jnp.asarray(s_c, jnp.int32), heads=heads, block_q=bq)
+    ref = gemm_q_ref(x, w, m_c, bq)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-5, rtol=1e-4)
+
+
+@given(
+    n_blocks=st.integers(2, 6),
+    heads=st.sampled_from([1, 2, 4]),
+    dh=st.sampled_from([4, 8]),
+    dout=st.sampled_from([8, 24]),
+    seed=st.integers(0, 500),
+)
+@settings(**SETTINGS)
+def test_gemm_o_dispatch_vs_ref_and_eq3(n_blocks, heads, dh, dout, seed):
+    bq = 8
+    n = n_blocks * bq
+    qg = n // bq
+    rng = np.random.default_rng(seed)
+    o = rng.normal(size=(n, heads * dh)).astype(np.float32)
+    w = rng.normal(size=(heads * dh, dout)).astype(np.float32)
+    m_c = rng.random((heads, qg)) < 0.5
+    s_c = np.stack([pack_bits(m_c[h]) for h in range(heads)])
+    bias = np.asarray(gemm_o_bias_ref(o, w, m_c, bq))
+    out = gemm_o_dispatch(o, w, bias, jnp.asarray(s_c, jnp.int32), heads=heads, block_q=bq)
+    ref = gemm_o_dispatch_ref(o, w, m_c, bq, bias)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4, rtol=1e-3)
+    # Eq. 3: cached bias + computed tiles == the dense projection.
+    np.testing.assert_allclose(np.asarray(out), o @ w, atol=1e-3, rtol=1e-3)
+
+
+# ----------------------------------------------------------- taylorseer --
+
+
+@given(k=st.floats(0.0, 5.0), seed=st.integers(0, 100))
+@settings(**SETTINGS)
+def test_taylor_order1_linear_exact(k, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(4, 3)).astype(np.float32)
+    b = rng.normal(size=(4, 3)).astype(np.float32)
+    # y(t) = a + b·t; updates at t=0 and t=N → stack = [y(N), b].
+    n = 5.0
+    y0, y1 = a, a + b * n
+    stack = [y1, (y1 - y0) / n]
+    got = taylor_forecast_ref(stack, k)
+    want = a + b * (n + k)
+    np.testing.assert_allclose(np.asarray(got), want, atol=1e-4, rtol=1e-4)

@@ -1,0 +1,170 @@
+//! In-tree micro-benchmark harness.
+//!
+//! criterion is not available in this offline environment, so the bench
+//! binaries under `benches/` use this small harness instead: fixed warmup,
+//! adaptive iteration count targeting a measurement budget, and robust
+//! statistics (min / median / median-absolute-deviation).
+
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// Median seconds per iteration.
+    pub median_s: f64,
+    /// Minimum seconds per iteration (least-noise estimate).
+    pub min_s: f64,
+    /// Median absolute deviation in seconds.
+    pub mad_s: f64,
+    pub iters: usize,
+}
+
+impl Measurement {
+    /// Speedup of `baseline` relative to this measurement (how many times
+    /// faster `self` is than `baseline`): `baseline.median / self.median`.
+    pub fn speedup_vs(&self, baseline: &Measurement) -> f64 {
+        baseline.median_s / self.median_s
+    }
+}
+
+/// Benchmark runner with a wall-clock budget per benchmark.
+pub struct Bencher {
+    /// Warmup iterations before measuring.
+    pub warmup: usize,
+    /// Minimum measured iterations.
+    pub min_iters: usize,
+    /// Target measurement budget in seconds.
+    pub budget_s: f64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 2, min_iters: 5, budget_s: 1.0 }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { warmup: 1, min_iters: 3, budget_s: 0.3 }
+    }
+
+    /// Run a closure repeatedly and collect robust timing statistics.
+    /// The closure must do the full unit of work each call; use `std::hint::
+    /// black_box` inside it to defeat DCE.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Measurement {
+        for _ in 0..self.warmup {
+            f();
+        }
+        // Estimate single-iteration time to size the loop.
+        let t0 = Instant::now();
+        f();
+        let est = t0.elapsed().as_secs_f64().max(1e-9);
+        let iters = ((self.budget_s / est).ceil() as usize).clamp(self.min_iters, 10_000);
+        let mut samples = Vec::with_capacity(iters + 1);
+        samples.push(est);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = samples[samples.len() / 2];
+        let min = samples[0];
+        let mut devs: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = devs[devs.len() / 2];
+        Measurement {
+            name: name.to_string(),
+            median_s: median,
+            min_s: min,
+            mad_s: mad,
+            iters: samples.len(),
+        }
+    }
+}
+
+/// Render a set of measurements as an aligned text table with an optional
+/// baseline row for speedup computation.
+pub fn print_table(title: &str, rows: &[(Measurement, Option<f64>)]) {
+    println!("\n== {title} ==");
+    println!(
+        "{:<44} {:>12} {:>12} {:>8} {:>10}",
+        "case", "median", "min", "iters", "extra"
+    );
+    for (m, extra) in rows {
+        println!(
+            "{:<44} {:>10.3}ms {:>10.3}ms {:>8} {:>10}",
+            m.name,
+            m.median_s * 1e3,
+            m.min_s * 1e3,
+            m.iters,
+            extra.map(|x| format!("{x:.3}")).unwrap_or_default()
+        );
+    }
+}
+
+/// Emit a CSV file of `(case, median_s, min_s, mad_s, iters, extra)` rows.
+pub fn write_csv(
+    path: &str,
+    rows: &[(Measurement, Option<f64>)],
+) -> std::io::Result<()> {
+    use std::io::Write;
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "case,median_s,min_s,mad_s,iters,extra")?;
+    for (m, extra) in rows {
+        writeln!(
+            f,
+            "{},{},{},{},{},{}",
+            m.name,
+            m.median_s,
+            m.min_s,
+            m.mad_s,
+            m.iters,
+            extra.map(|x| x.to_string()).unwrap_or_default()
+        )?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher { warmup: 1, min_iters: 3, budget_s: 0.01 };
+        let m = b.run("noop-ish", || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(i);
+            }
+            std::hint::black_box(s);
+        });
+        assert!(m.median_s > 0.0);
+        assert!(m.min_s <= m.median_s);
+        assert!(m.iters >= 3);
+    }
+
+    #[test]
+    fn speedup_direction() {
+        let fast = Measurement {
+            name: "f".into(),
+            median_s: 0.5,
+            min_s: 0.5,
+            mad_s: 0.0,
+            iters: 1,
+        };
+        let slow = Measurement {
+            name: "s".into(),
+            median_s: 1.0,
+            min_s: 1.0,
+            mad_s: 0.0,
+            iters: 1,
+        };
+        assert!((fast.speedup_vs(&slow) - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,230 @@
+//! Feature caching with **TaylorSeer** order-`D` forecasting, and the
+//! GEMM-O bias cache.
+//!
+//! TaylorSeer (Liu et al. 2025b, used by the paper for cached blocks)
+//! replaces direct feature reuse with a Taylor-series forecast built from
+//! finite differences of the features observed at successive *Update*
+//! steps:
+//!
+//! ```text
+//! Ŷ(t₀ + k) = Σ_{d=0..D}  (kᵈ / d!) · Δᵈ Y(t₀)
+//! ```
+//!
+//! where `ΔᵈY` is the d-th order finite difference over the update interval
+//! (`Δ⁰Y = Y`, `Δ¹Y = (Y_new − Y_prev)/N`, …). Order `D = 0` degenerates to
+//! direct reuse (FORA-style).
+//!
+//! [`TaylorCache`] maintains the difference stack for any tensor-valued
+//! feature; the engine instantiates one per cached quantity (per-layer
+//! attention outputs, GEMM-O bias stacks, whole-block deltas).
+
+use crate::tensor::Tensor;
+
+/// Finite-difference Taylor forecaster for a tensor-valued feature.
+#[derive(Clone, Debug)]
+pub struct TaylorCache {
+    /// Maximum expansion order `D`.
+    pub order: usize,
+    /// Difference stack: `stack[d]` = d-th finite difference (per step).
+    stack: Vec<Tensor>,
+    /// How many stack entries are valid so far (grows with updates).
+    filled: usize,
+}
+
+impl TaylorCache {
+    pub fn new(order: usize) -> Self {
+        TaylorCache { order, stack: Vec::new(), filled: 0 }
+    }
+
+    /// Whether at least one update has been recorded.
+    pub fn is_ready(&self) -> bool {
+        self.filled > 0
+    }
+
+    /// Effective order currently usable (limited by observed history).
+    pub fn effective_order(&self) -> usize {
+        self.filled.saturating_sub(1).min(self.order)
+    }
+
+    /// Record a freshly-computed feature at an Update step. `dt` is the
+    /// number of denoising steps since the previous update (the cache
+    /// interval `N`), used to normalize the finite differences to
+    /// per-step units.
+    pub fn update(&mut self, value: &Tensor, dt: f64) {
+        let dt = dt.max(1.0) as f32;
+        let mut new_stack: Vec<Tensor> = Vec::with_capacity(self.order + 1);
+        new_stack.push(value.clone());
+        // Δᵈ_new = (Δᵈ⁻¹_new − Δᵈ⁻¹_old) / dt, while history exists.
+        for d in 1..=self.order {
+            if d > self.filled {
+                break;
+            }
+            let mut diff = new_stack[d - 1].clone();
+            diff.sub_assign(&self.stack[d - 1]);
+            diff.scale(1.0 / dt);
+            new_stack.push(diff);
+        }
+        self.filled = (self.filled + 1).min(self.order + 1);
+        self.stack = new_stack;
+    }
+
+    /// Forecast the feature `k` steps after the last update.
+    /// `k = 0` returns the stored value exactly.
+    pub fn forecast(&self, k: f64) -> Tensor {
+        assert!(self.is_ready(), "forecast before any update");
+        let mut out = self.stack[0].clone();
+        let mut coeff = 1.0f64;
+        for d in 1..self.stack.len() {
+            coeff *= k / d as f64;
+            let mut term = self.stack[d].clone();
+            term.scale(coeff as f32);
+            out.add_assign(&term);
+        }
+        out
+    }
+
+    /// Borrow the difference stack (used by the GEMM-O bias construction,
+    /// which projects each difference separately — Eq. 4 linearity).
+    pub fn stack(&self) -> &[Tensor] {
+        &self.stack[..self.filled.min(self.stack.len())]
+    }
+
+    /// Taylor coefficient `kᵈ/d!` for each valid stack entry at offset `k`.
+    pub fn coefficients(&self, k: f64) -> Vec<f32> {
+        let mut coeffs = Vec::with_capacity(self.stack.len());
+        let mut c = 1.0f64;
+        coeffs.push(1.0);
+        for d in 1..self.stack.len() {
+            c *= k / d as f64;
+            coeffs.push(c as f32);
+        }
+        coeffs
+    }
+
+    /// Bytes held by the difference stack.
+    pub fn bytes(&self) -> usize {
+        self.stack.iter().map(|t| t.numel() * 4).sum()
+    }
+
+    /// Drop all history (used when a request finishes).
+    pub fn reset(&mut self) {
+        self.stack.clear();
+        self.filled = 0;
+    }
+}
+
+/// Linear combination of a set of bias tensors with Taylor coefficients —
+/// the Dispatch-step `OP_reuse(B_c)` (elementwise, cheap).
+pub fn combine_bias_stack(stack: &[Tensor], coeffs: &[f32]) -> Tensor {
+    assert!(!stack.is_empty());
+    let mut out = stack[0].clone();
+    for (d, t) in stack.iter().enumerate().skip(1) {
+        if d >= coeffs.len() || coeffs[d] == 0.0 {
+            continue;
+        }
+        let c = coeffs[d];
+        for (o, &x) in out.data_mut().iter_mut().zip(t.data()) {
+            *o += c * x;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::assert_close;
+
+    fn scalar(v: f32) -> Tensor {
+        Tensor::from_vec(&[1], vec![v])
+    }
+
+    #[test]
+    fn order0_is_direct_reuse() {
+        let mut c = TaylorCache::new(0);
+        c.update(&scalar(3.0), 5.0);
+        c.update(&scalar(7.0), 5.0);
+        assert_eq!(c.forecast(4.0).data()[0], 7.0);
+    }
+
+    #[test]
+    fn order1_exact_on_linear_signal() {
+        // y(t) = 2t + 1 sampled at updates t = 0, 5 (dt = 5).
+        let mut c = TaylorCache::new(1);
+        c.update(&scalar(1.0), 5.0);
+        c.update(&scalar(11.0), 5.0);
+        // forecast k steps after t=5: y = 11 + 2k.
+        for k in 0..5 {
+            let want = 11.0 + 2.0 * k as f32;
+            assert!((c.forecast(k as f64).data()[0] - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn order2_forward_difference_formula() {
+        // y(t) = t² sampled at t = 0, 4, 8 (dt = 4). Backward differences
+        // at t=8: Δ¹ = (64−16)/4 = 12, Δ² = (12−4)/4 = 2
+        // → ŷ(8+k) = 64 + 12k + k².
+        let y = |t: f32| t * t;
+        let mut c = TaylorCache::new(2);
+        c.update(&scalar(y(0.0)), 4.0);
+        c.update(&scalar(y(4.0)), 4.0);
+        c.update(&scalar(y(8.0)), 4.0);
+        for k in [0.0f32, 1.0, 3.0] {
+            let want = 64.0 + 12.0 * k + k * k;
+            let got = c.forecast(k as f64).data()[0];
+            assert!((got - want).abs() < 1e-4, "k={k}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn effective_order_grows_with_history() {
+        let mut c = TaylorCache::new(2);
+        assert!(!c.is_ready());
+        c.update(&scalar(1.0), 1.0);
+        assert_eq!(c.effective_order(), 0);
+        c.update(&scalar(2.0), 1.0);
+        assert_eq!(c.effective_order(), 1);
+        c.update(&scalar(3.0), 1.0);
+        assert_eq!(c.effective_order(), 2);
+        c.update(&scalar(4.0), 1.0);
+        assert_eq!(c.effective_order(), 2);
+    }
+
+    #[test]
+    fn forecast_at_zero_returns_stored() {
+        let mut c = TaylorCache::new(2);
+        let v = Tensor::from_vec(&[3], vec![1.0, -2.0, 0.5]);
+        c.update(&v, 3.0);
+        assert_close(&c.forecast(0.0), &v, 0.0, 0.0);
+    }
+
+    #[test]
+    fn combine_matches_forecast() {
+        let mut c = TaylorCache::new(2);
+        c.update(&scalar(2.0), 2.0);
+        c.update(&scalar(6.0), 2.0);
+        c.update(&scalar(14.0), 2.0);
+        let k = 1.7;
+        let coeffs = c.coefficients(k);
+        let combined = combine_bias_stack(c.stack(), &coeffs);
+        assert_close(&combined, &c.forecast(k), 1e-6, 1e-6);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut c = TaylorCache::new(1);
+        c.update(&scalar(5.0), 1.0);
+        c.reset();
+        assert!(!c.is_ready());
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let mut c = TaylorCache::new(1);
+        c.update(&Tensor::zeros(&[10, 10]), 1.0);
+        assert_eq!(c.bytes(), 400);
+        c.update(&Tensor::zeros(&[10, 10]), 1.0);
+        assert_eq!(c.bytes(), 800);
+    }
+}

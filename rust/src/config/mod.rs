@@ -1,0 +1,274 @@
+//! Configuration types: model architecture, sparsity policy parameters, and
+//! engine/serving settings. Loadable from JSON files (see `configs/`).
+
+use crate::util::json::Json;
+
+/// MiniMMDiT architecture configuration (must match the JAX model that
+/// produced the weights artifact).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    /// Transformer width.
+    pub dim: usize,
+    /// Number of attention heads (`dim % heads == 0`).
+    pub heads: usize,
+    /// Number of double-stream MMDiT blocks.
+    pub layers: usize,
+    /// Number of text tokens (fixed length, as in MMDiT).
+    pub text_tokens: usize,
+    /// Vision latent grid height in patches.
+    pub patch_h: usize,
+    /// Vision latent grid width in patches.
+    pub patch_w: usize,
+    /// Pixels per patch side.
+    pub patch_size: usize,
+    /// Image channels.
+    pub channels: usize,
+    /// MLP expansion ratio.
+    pub mlp_ratio: usize,
+    /// Text-embedding vocabulary (hash-embedding) size.
+    pub vocab: usize,
+}
+
+impl ModelConfig {
+    /// The small trained configuration shipped in `artifacts/weights.fot`.
+    /// Sized so that the toy rectified-flow training run completes on one
+    /// CPU core (~2.1M parameters, 24×24 RGB images, 160-token joint seq).
+    pub fn mini() -> Self {
+        ModelConfig {
+            dim: 128,
+            heads: 4,
+            layers: 4,
+            text_tokens: 16,
+            patch_h: 12,
+            patch_w: 12,
+            patch_size: 2,
+            channels: 3,
+            mlp_ratio: 4,
+            vocab: 256,
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.dim / self.heads
+    }
+    pub fn vision_tokens(&self) -> usize {
+        self.patch_h * self.patch_w
+    }
+    /// Joint sequence length N = N_text + N_vision.
+    pub fn seq_len(&self) -> usize {
+        self.text_tokens + self.vision_tokens()
+    }
+    /// Image height/width in pixels.
+    pub fn image_h(&self) -> usize {
+        self.patch_h * self.patch_size
+    }
+    pub fn image_w(&self) -> usize {
+        self.patch_w * self.patch_size
+    }
+    /// Patch feature dimension (pixels per patch × channels).
+    pub fn patch_dim(&self) -> usize {
+        self.patch_size * self.patch_size * self.channels
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let g = |k: &str| -> Result<usize, String> {
+            v.req(k)?.as_usize().ok_or_else(|| format!("bad field {k}"))
+        };
+        Ok(ModelConfig {
+            dim: g("dim")?,
+            heads: g("heads")?,
+            layers: g("layers")?,
+            text_tokens: g("text_tokens")?,
+            patch_h: g("patch_h")?,
+            patch_w: g("patch_w")?,
+            patch_size: g("patch_size")?,
+            channels: g("channels")?,
+            mlp_ratio: g("mlp_ratio")?,
+            vocab: g("vocab")?,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dim", Json::Num(self.dim as f64)),
+            ("heads", Json::Num(self.heads as f64)),
+            ("layers", Json::Num(self.layers as f64)),
+            ("text_tokens", Json::Num(self.text_tokens as f64)),
+            ("patch_h", Json::Num(self.patch_h as f64)),
+            ("patch_w", Json::Num(self.patch_w as f64)),
+            ("patch_size", Json::Num(self.patch_size as f64)),
+            ("channels", Json::Num(self.channels as f64)),
+            ("mlp_ratio", Json::Num(self.mlp_ratio as f64)),
+            ("vocab", Json::Num(self.vocab as f64)),
+        ])
+    }
+}
+
+/// FlashOmni sparsity configuration — the paper's `(τ_q, τ_kv, N, D, S_q)`
+/// tuple (Appendix A.1.1) plus block sizes and warmup.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SparsityConfig {
+    /// `τ_q` — cumulative-importance threshold for caching Q blocks
+    /// (spatial sparsity / feature caching), in [0, 1].
+    pub tau_q: f64,
+    /// `τ_kv` — cumulative-importance threshold for skipping KV blocks
+    /// (block-sparse skipping), in [0, 1].
+    pub tau_kv: f64,
+    /// `N` — cache interval: one Update step followed by `N−1` Dispatch
+    /// steps.
+    pub interval: usize,
+    /// `D` — TaylorSeer expansion order (0 = direct reuse).
+    pub order: usize,
+    /// `S_q` — degradation threshold: if the fraction of Q blocks requiring
+    /// compute falls below this, the layer degenerates to full feature
+    /// caching.
+    pub s_q: f64,
+    /// Q block size `b_q` (tokens per block; also the caching granularity).
+    pub block_q: usize,
+    /// KV block size `b_k`.
+    pub block_k: usize,
+    /// Pooling factor `n` for the compressed attention map (so one symbol
+    /// bit covers `n` logical blocks, §3.3).
+    pub pool: usize,
+    /// Full-attention warmup steps before any sparsity is applied.
+    pub warmup: usize,
+    /// Steps over which τ ramps from 0 to its target (A.1.1: thresholds
+    /// "progressively converge" to their targets).
+    pub ramp_steps: usize,
+}
+
+impl Default for SparsityConfig {
+    fn default() -> Self {
+        SparsityConfig {
+            tau_q: 0.5,
+            tau_kv: 0.15,
+            interval: 5,
+            order: 1,
+            s_q: 0.3,
+            block_q: 16,
+            block_k: 16,
+            pool: 1,
+            warmup: 4,
+            ramp_steps: 8,
+        }
+    }
+}
+
+impl SparsityConfig {
+    /// Paper-style constructor: `(τ_q, τ_kv, N, D, S_q)`.
+    pub fn paper(tau_q: f64, tau_kv: f64, interval: usize, order: usize, s_q: f64) -> Self {
+        SparsityConfig { tau_q, tau_kv, interval, order, s_q, ..Default::default() }
+    }
+
+    /// τ value at a given (0-based) denoising step, ramping linearly from 0.
+    pub fn tau_at(&self, target: f64, step: usize) -> f64 {
+        if step < self.warmup {
+            return 0.0;
+        }
+        let k = (step - self.warmup) as f64 + 1.0;
+        let r = self.ramp_steps.max(1) as f64;
+        target * (k / r).min(1.0)
+    }
+
+    /// Label matching the paper's configuration tuples, e.g.
+    /// `(50%, 15%, 5, 1, 30%)`.
+    pub fn label(&self) -> String {
+        format!(
+            "({:.0}%, {:.0}%, {}, {}, {:.0}%)",
+            self.tau_q * 100.0,
+            self.tau_kv * 100.0,
+            self.interval,
+            self.order,
+            self.s_q * 100.0
+        )
+    }
+}
+
+/// Engine/serving configuration.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Denoising steps per request.
+    pub steps: usize,
+    /// Worker threads in the coordinator.
+    pub workers: usize,
+    /// Maximum batch size the batcher will form.
+    pub max_batch: usize,
+    /// Microseconds the batcher waits to fill a batch.
+    pub batch_wait_us: u64,
+    /// Path to the weights artifact.
+    pub weights: String,
+    /// Path to the artifacts directory (HLO text modules).
+    pub artifacts_dir: String,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            steps: 50,
+            workers: 1,
+            max_batch: 4,
+            batch_wait_us: 2_000,
+            weights: "artifacts/weights.fot".into(),
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mini_config_consistency() {
+        let c = ModelConfig::mini();
+        assert_eq!(c.dim % c.heads, 0);
+        assert_eq!(c.seq_len(), 16 + 144);
+        assert_eq!(c.image_h(), 24);
+        assert_eq!(c.patch_dim(), 12);
+    }
+
+    #[test]
+    fn model_config_json_roundtrip() {
+        let c = ModelConfig::mini();
+        let j = c.to_json().to_string();
+        let c2 = ModelConfig::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn paper_label() {
+        let s = SparsityConfig::paper(0.5, 0.15, 5, 1, 0.3);
+        assert_eq!(s.label(), "(50%, 15%, 5, 1, 30%)");
+    }
+
+    #[test]
+    fn tau_ramp() {
+        let s = SparsityConfig { warmup: 2, ramp_steps: 4, ..Default::default() };
+        assert_eq!(s.tau_at(0.8, 0), 0.0);
+        assert_eq!(s.tau_at(0.8, 1), 0.0);
+        assert!((s.tau_at(0.8, 2) - 0.2).abs() < 1e-9);
+        assert!((s.tau_at(0.8, 5) - 0.8).abs() < 1e-9);
+        assert!((s.tau_at(0.8, 40) - 0.8).abs() < 1e-9);
+    }
+}
+
+#[cfg(test)]
+mod preset_tests {
+    use super::*;
+
+    /// The shipped JSON presets must stay parseable and consistent with
+    /// the trained model configuration.
+    #[test]
+    fn shipped_presets_parse() {
+        for path in ["configs/flux_table1.json", "configs/hunyuan_video.json",
+                     "../configs/flux_table1.json", "../configs/hunyuan_video.json"] {
+            let Ok(text) = std::fs::read_to_string(path) else { continue };
+            let v = Json::parse(&text).unwrap();
+            assert!(v.get("policies").unwrap().as_arr().unwrap().len() >= 5);
+            if let Some(m) = v.get("model") {
+                let cfg = ModelConfig::from_json(m).unwrap();
+                assert_eq!(cfg, ModelConfig::mini());
+            }
+        }
+    }
+}

@@ -1,0 +1,289 @@
+//! Serving coordinator: request queue, shape-bucketing batcher, worker
+//! pool, and latency/throughput accounting.
+//!
+//! tokio is unavailable in this offline image (DESIGN.md), so the
+//! coordinator is built on `std::thread` + `Mutex<VecDeque>/Condvar`. The
+//! design mirrors a vLLM-style router at small scale: requests enter a
+//! queue, workers pull *batches* of compatible requests (same step count —
+//! our shape bucket), run them through their engine, and emit per-request
+//! latency breakdowns.
+
+use crate::engine::{DiTEngine, RunStats};
+use crate::tensor::Tensor;
+use crate::trace::Request;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// A finished request.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub scene: usize,
+    pub image: Tensor,
+    pub stats: RunStats,
+    /// Seconds spent waiting in the queue.
+    pub queue_s: f64,
+    /// Seconds of engine execution.
+    pub exec_s: f64,
+    /// End-to-end seconds (queue + batch wait + exec).
+    pub latency_s: f64,
+    /// Worker that served it and batch size it rode in.
+    pub worker: usize,
+    pub batch_size: usize,
+}
+
+struct Job {
+    req: Request,
+    enqueued: Instant,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+    closed: AtomicBool,
+}
+
+/// Worker-pool coordinator.
+pub struct Coordinator {
+    shared: Arc<Shared>,
+    out_rx: std::sync::mpsc::Receiver<Response>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start `workers` threads, each owning an engine built by `factory`.
+    /// `max_batch` bounds how many queued requests a worker claims at once
+    /// (requests in one batch share the worker's warm weight/cache state).
+    pub fn start<F>(factory: F, workers: usize, max_batch: usize) -> Self
+    where
+        F: Fn(usize) -> DiTEngine + Send + Sync + 'static,
+    {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            closed: AtomicBool::new(false),
+        });
+        let (out_tx, out_rx) = std::sync::mpsc::channel::<Response>();
+        let factory = Arc::new(factory);
+        let mut handles = Vec::new();
+        for wid in 0..workers.max(1) {
+            let shared = Arc::clone(&shared);
+            let out_tx = out_tx.clone();
+            let factory = Arc::clone(&factory);
+            handles.push(std::thread::spawn(move || {
+                let mut engine = factory(wid);
+                loop {
+                    // Claim a batch: block for the first job, then drain up
+                    // to max_batch compatible (same step count) jobs.
+                    let batch: Vec<Job> = {
+                        let mut q = shared.queue.lock().unwrap();
+                        while q.is_empty() {
+                            if shared.closed.load(Ordering::SeqCst) {
+                                return;
+                            }
+                            let (guard, _timeout) = shared
+                                .cv
+                                .wait_timeout(q, std::time::Duration::from_millis(50))
+                                .unwrap();
+                            q = guard;
+                        }
+                        let first_steps = q.front().unwrap().req.steps;
+                        let mut batch = vec![q.pop_front().unwrap()];
+                        while batch.len() < max_batch {
+                            match q.front() {
+                                Some(j) if j.req.steps == first_steps => {
+                                    batch.push(q.pop_front().unwrap());
+                                }
+                                _ => break,
+                            }
+                        }
+                        batch
+                    };
+                    let bsize = batch.len();
+                    let batch_start = Instant::now();
+                    for job in batch {
+                        let queue_s = batch_start
+                            .saturating_duration_since(job.enqueued)
+                            .as_secs_f64();
+                        let t0 = Instant::now();
+                        let res =
+                            engine.generate(&job.req.prompt_ids, job.req.seed, job.req.steps);
+                        let exec_s = t0.elapsed().as_secs_f64();
+                        let _ = out_tx.send(Response {
+                            id: job.req.id,
+                            scene: job.req.scene,
+                            image: res.image,
+                            stats: res.stats,
+                            queue_s,
+                            exec_s,
+                            latency_s: job.enqueued.elapsed().as_secs_f64(),
+                            worker: wid,
+                            batch_size: bsize,
+                        });
+                    }
+                }
+            }));
+        }
+        Coordinator { shared, out_rx, handles }
+    }
+
+    /// Enqueue a request.
+    pub fn submit(&self, req: Request) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.push_back(Job { req, enqueued: Instant::now() });
+        self.shared.cv.notify_one();
+    }
+
+    /// Blockingly collect `n` responses.
+    pub fn collect(&self, n: usize) -> Vec<Response> {
+        (0..n).map(|_| self.out_rx.recv().expect("worker died")).collect()
+    }
+
+    /// Signal shutdown and join workers.
+    pub fn shutdown(self) {
+        self.shared.closed.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Aggregate serving statistics.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub requests: usize,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    pub p50_latency_s: f64,
+    pub p95_latency_s: f64,
+    pub mean_exec_s: f64,
+    pub mean_queue_s: f64,
+    pub mean_batch: f64,
+    pub mean_attn_sparsity: f64,
+}
+
+impl ServeReport {
+    pub fn from_responses(rs: &[Response], wall_s: f64) -> Self {
+        let mut lats: Vec<f64> = rs.iter().map(|r| r.latency_s).collect();
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| lats[((lats.len() as f64 - 1.0) * p) as usize];
+        ServeReport {
+            requests: rs.len(),
+            wall_s,
+            throughput_rps: rs.len() as f64 / wall_s.max(1e-9),
+            p50_latency_s: pct(0.5),
+            p95_latency_s: pct(0.95),
+            mean_exec_s: rs.iter().map(|r| r.exec_s).sum::<f64>() / rs.len() as f64,
+            mean_queue_s: rs.iter().map(|r| r.queue_s).sum::<f64>() / rs.len() as f64,
+            mean_batch: rs.iter().map(|r| r.batch_size as f64).sum::<f64>() / rs.len() as f64,
+            mean_attn_sparsity: rs.iter().map(|r| r.stats.attn_sparsity()).sum::<f64>()
+                / rs.len() as f64,
+        }
+    }
+
+    pub fn print(&self, label: &str) {
+        println!(
+            "{label:<32} req={:<4} wall={:>7.2}s thpt={:>6.3}/s p50={:>7.3}s p95={:>7.3}s exec={:>7.3}s queue={:>6.3}s batch={:>4.1} sparsity={:>5.1}%",
+            self.requests,
+            self.wall_s,
+            self.throughput_rps,
+            self.p50_latency_s,
+            self.p95_latency_s,
+            self.mean_exec_s,
+            self.mean_queue_s,
+            self.mean_batch,
+            self.mean_attn_sparsity * 100.0
+        );
+    }
+}
+
+/// Replay a trace honoring arrival times; returns responses + report.
+pub fn replay_trace<F>(
+    factory: F,
+    trace: &[Request],
+    workers: usize,
+    max_batch: usize,
+    time_scale: f64,
+) -> (Vec<Response>, ServeReport)
+where
+    F: Fn(usize) -> DiTEngine + Send + Sync + 'static,
+{
+    let coord = Coordinator::start(factory, workers, max_batch);
+    let t0 = Instant::now();
+    for req in trace {
+        let target = req.arrival_s * time_scale;
+        let now = t0.elapsed().as_secs_f64();
+        if target > now {
+            std::thread::sleep(std::time::Duration::from_secs_f64(target - now));
+        }
+        coord.submit(req.clone());
+    }
+    let responses = coord.collect(trace.len());
+    let wall = t0.elapsed().as_secs_f64();
+    coord.shutdown();
+    let report = ServeReport::from_responses(&responses, wall);
+    (responses, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::engine::Policy;
+    use crate::model::{weights::Weights, MiniMMDiT};
+    use crate::trace::poisson_trace;
+
+    fn tiny_engine(_wid: usize) -> DiTEngine {
+        let cfg = ModelConfig {
+            dim: 32,
+            heads: 2,
+            layers: 1,
+            text_tokens: 8,
+            patch_h: 4,
+            patch_w: 4,
+            patch_size: 2,
+            channels: 3,
+            mlp_ratio: 2,
+            vocab: 256,
+        };
+        DiTEngine::new(MiniMMDiT::new(cfg.clone(), Weights::random(&cfg, 1)), Policy::full(), 8, 8)
+    }
+
+    #[test]
+    fn serves_all_requests() {
+        let trace = poisson_trace(1, 6, 1000.0, 3, 8);
+        let (responses, report) = replay_trace(tiny_engine, &trace, 1, 2, 0.0);
+        assert_eq!(responses.len(), 6);
+        let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..6).collect::<Vec<u64>>());
+        assert!(report.throughput_rps > 0.0);
+        assert!(report.p95_latency_s >= report.p50_latency_s);
+        for r in &responses {
+            assert!(r.image.data().iter().all(|x| x.is_finite()));
+            assert!(r.batch_size >= 1 && r.batch_size <= 2);
+        }
+    }
+
+    #[test]
+    fn deterministic_output_per_seed() {
+        let trace = poisson_trace(2, 2, 1000.0, 3, 8);
+        let (r1, _) = replay_trace(tiny_engine, &trace, 1, 1, 0.0);
+        let (r2, _) = replay_trace(tiny_engine, &trace, 1, 1, 0.0);
+        let find = |rs: &[Response], id: u64| -> Tensor {
+            rs.iter().find(|r| r.id == id).unwrap().image.clone()
+        };
+        assert_eq!(find(&r1, 0), find(&r2, 0));
+        assert_eq!(find(&r1, 1), find(&r2, 1));
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly() {
+        let coord = Coordinator::start(tiny_engine, 1, 1);
+        coord.shutdown();
+    }
+}

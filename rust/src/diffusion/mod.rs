@@ -1,0 +1,200 @@
+//! Rectified-flow sampling and the **Update–Dispatch step planner**.
+//!
+//! The model is trained with the rectified-flow objective
+//! `x_t = (1−t)·x₀ + t·ε`, `v* = ε − x₀`, so sampling integrates the ODE
+//! `dx/dt = v̂(x, t)` from `t = 1` (noise) to `t = 0` with explicit Euler.
+//!
+//! The planner realizes §3.2: after `warmup` full steps, every `N`-th step
+//! is an *Update* (full attention, symbol + cache refresh) and the `N−1`
+//! steps in between are *Dispatch* steps that run the sparse kernels with
+//! the symbols produced at the preceding Update.
+
+use crate::config::ModelConfig;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+
+/// Kind of a denoising step in the Update–Dispatch paradigm.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepKind {
+    /// Full computation during the warmup prefix (no symbols yet).
+    Warmup,
+    /// Full computation + symbol/cache refresh.
+    Update,
+    /// Sparse execution, `k` steps after the last Update (`k ≥ 1`).
+    Dispatch { k: usize },
+}
+
+impl StepKind {
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, StepKind::Dispatch { .. })
+    }
+}
+
+/// Plan the step kinds for a sampling run.
+pub fn plan_steps(total: usize, warmup: usize, interval: usize) -> Vec<StepKind> {
+    let interval = interval.max(1);
+    (0..total)
+        .map(|s| {
+            if s < warmup {
+                StepKind::Warmup
+            } else {
+                let k = (s - warmup) % interval;
+                if k == 0 {
+                    StepKind::Update
+                } else {
+                    StepKind::Dispatch { k }
+                }
+            }
+        })
+        .collect()
+}
+
+/// Linear rectified-flow time grid from 1 → 0 (`steps + 1` points).
+pub fn time_grid(steps: usize) -> Vec<f64> {
+    (0..=steps).map(|k| 1.0 - k as f64 / steps as f64).collect()
+}
+
+/// Patchify an image `[H × W × C]` into `[num_patches × patch_dim]`
+/// (row-major patches, channel-last within a patch).
+pub fn patchify(img: &Tensor, cfg: &ModelConfig) -> Tensor {
+    let (h, w, c) = (cfg.image_h(), cfg.image_w(), cfg.channels);
+    assert_eq!(img.shape(), &[h, w, c]);
+    let p = cfg.patch_size;
+    let mut out = Tensor::zeros(&[cfg.vision_tokens(), cfg.patch_dim()]);
+    for ph in 0..cfg.patch_h {
+        for pw in 0..cfg.patch_w {
+            let token = ph * cfg.patch_w + pw;
+            let dst = out.row_mut(token);
+            let mut idx = 0;
+            for dy in 0..p {
+                for dx in 0..p {
+                    for ch in 0..c {
+                        dst[idx] = img.data()[((ph * p + dy) * w + (pw * p + dx)) * c + ch];
+                        idx += 1;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Inverse of [`patchify`].
+pub fn unpatchify(patches: &Tensor, cfg: &ModelConfig) -> Tensor {
+    let (h, w, c) = (cfg.image_h(), cfg.image_w(), cfg.channels);
+    let p = cfg.patch_size;
+    assert_eq!(patches.shape(), &[cfg.vision_tokens(), cfg.patch_dim()]);
+    let mut img = Tensor::zeros(&[h, w, c]);
+    for ph in 0..cfg.patch_h {
+        for pw in 0..cfg.patch_w {
+            let token = ph * cfg.patch_w + pw;
+            let src = patches.row(token);
+            let mut idx = 0;
+            for dy in 0..p {
+                for dx in 0..p {
+                    for ch in 0..c {
+                        img.data_mut()[((ph * p + dy) * w + (pw * p + dx)) * c + ch] = src[idx];
+                        idx += 1;
+                    }
+                }
+            }
+        }
+    }
+    img
+}
+
+/// Standard-normal initial latent patches for a given seed.
+pub fn initial_noise(cfg: &ModelConfig, seed: u64) -> Tensor {
+    let mut rng = Pcg32::seeded(seed);
+    Tensor::from_vec(
+        &[cfg.vision_tokens(), cfg.patch_dim()],
+        rng.normal_vec(cfg.vision_tokens() * cfg.patch_dim()),
+    )
+}
+
+/// One Euler integration step: `x ← x − v̂ · dt`.
+pub fn euler_step(x: &mut Tensor, v: &Tensor, dt: f64) {
+    assert_eq!(x.shape(), v.shape());
+    let dtf = dt as f32;
+    for (xi, &vi) in x.data_mut().iter_mut().zip(v.data()) {
+        *xi -= vi * dtf;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_structure() {
+        let plan = plan_steps(12, 3, 4);
+        assert_eq!(plan.len(), 12);
+        assert!(plan[..3].iter().all(|s| *s == StepKind::Warmup));
+        assert_eq!(plan[3], StepKind::Update);
+        assert_eq!(plan[4], StepKind::Dispatch { k: 1 });
+        assert_eq!(plan[6], StepKind::Dispatch { k: 3 });
+        assert_eq!(plan[7], StepKind::Update);
+    }
+
+    #[test]
+    fn plan_interval_one_is_all_updates() {
+        let plan = plan_steps(5, 1, 1);
+        assert_eq!(plan[0], StepKind::Warmup);
+        assert!(plan[1..].iter().all(|s| *s == StepKind::Update));
+    }
+
+    #[test]
+    fn time_grid_endpoints() {
+        let g = time_grid(10);
+        assert_eq!(g.len(), 11);
+        assert!((g[0] - 1.0).abs() < 1e-12);
+        assert!(g[10].abs() < 1e-12);
+        assert!(g.windows(2).all(|w| w[0] > w[1]));
+    }
+
+    #[test]
+    fn patchify_roundtrip() {
+        let cfg = crate::config::ModelConfig {
+            dim: 16,
+            heads: 2,
+            layers: 1,
+            text_tokens: 2,
+            patch_h: 3,
+            patch_w: 2,
+            patch_size: 2,
+            channels: 3,
+            mlp_ratio: 2,
+            vocab: 4,
+        };
+        let mut rng = Pcg32::seeded(5);
+        let img = crate::testutil::randn(&mut rng, &[cfg.image_h(), cfg.image_w(), 3]);
+        let p = patchify(&img, &cfg);
+        assert_eq!(p.shape(), &[6, 12]);
+        let img2 = unpatchify(&p, &cfg);
+        assert_eq!(img, img2);
+    }
+
+    #[test]
+    fn euler_integrates_linear_field() {
+        // dx/dt = 2 → integrating from 1 to 0 reduces x by 2.
+        let mut x = Tensor::full(&[4], 5.0);
+        let v = Tensor::full(&[4], 2.0);
+        let steps = 100;
+        for _ in 0..steps {
+            euler_step(&mut x, &v, 1.0 / steps as f64);
+        }
+        for &xi in x.data() {
+            assert!((xi - 3.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn noise_is_seed_deterministic() {
+        let cfg = crate::config::ModelConfig::mini();
+        assert_eq!(initial_noise(&cfg, 9), initial_noise(&cfg, 9));
+        assert_ne!(
+            initial_noise(&cfg, 9).data()[0],
+            initial_noise(&cfg, 10).data()[0]
+        );
+    }
+}

@@ -1,0 +1,768 @@
+//! The FlashOmni **Update–Dispatch execution engine** (§3.2, Figure 4).
+//!
+//! [`DiTEngine`] drives a full denoising run of the MiniMMDiT model under a
+//! sparsity [`Policy`]. Per layer and step it takes one of three paths:
+//!
+//! * **Full** (Warmup / Update): dense QKV + attention; the policy refreshes
+//!   the unified sparse symbols from the fresh per-head Q/K; the joint
+//!   attention output is pushed into the layer's TaylorSeer cache; the
+//!   GEMM-O stage-1 pass projects every finite difference of the cached
+//!   tiles into the bias stacks `B_c` (Eq. 4 linearity).
+//! * **Sparse** (Dispatch): GEMM-Q skips cached `(block, head)` tiles, the
+//!   FlashOmni attention kernel executes Algorithm 1 with real skipping,
+//!   and GEMM-O initializes its output from the Taylor-combined bias and
+//!   projects only the computed tiles.
+//! * **CachedBlock** (degraded layer / whole-block caching policies): the
+//!   entire block update is forecast from the cached residual deltas.
+//!
+//! Every baseline in the paper's tables is a [`Policy`] emitting symbols
+//! into this same engine — the reproduction of the paper's "unified engine"
+//! claim.
+
+pub mod policy;
+
+use crate::cache::{combine_bias_stack, TaylorCache};
+use crate::config::ModelConfig;
+use crate::diffusion::{euler_step, initial_noise, plan_steps, time_grid, unpatchify, StepKind};
+use crate::kernels::attention::{flashomni_attention, DecodeMode};
+use crate::kernels::flops;
+use crate::kernels::gemm_o::{gemm_o_dispatch, gemm_o_stage1, gemm_o_update, WeightPanels};
+use crate::kernels::gemm_q::gemm_q;
+use crate::model::blocks::{
+    self, extract_head, insert_head, joint_attention_dense, linear, mlp_stream, post_attention,
+    pre_attention, qkv_joint, vsplit, vstack,
+};
+use crate::model::{BlockExec, BlockWeights, MiniMMDiT};
+use crate::symbols::LayerSymbols;
+use crate::tensor::Tensor;
+pub use policy::{Policy, PolicyKind};
+
+/// Block/pool geometry shared by the whole run.
+#[derive(Clone, Copy, Debug)]
+pub struct Geometry {
+    pub block_q: usize,
+    pub block_k: usize,
+    pub pool: usize,
+    pub text_tokens: usize,
+    pub seq: usize,
+}
+
+impl Geometry {
+    pub fn from_model(cfg: &ModelConfig, block_q: usize, block_k: usize, pool: usize) -> Self {
+        let g = Geometry { block_q, block_k, pool, text_tokens: cfg.text_tokens, seq: cfg.seq_len() };
+        assert_eq!(
+            cfg.text_tokens % (block_q * pool),
+            0,
+            "text prefix must align to Q block groups"
+        );
+        g
+    }
+    pub fn t_q(&self) -> usize {
+        self.seq.div_ceil(self.block_q)
+    }
+    pub fn t_kv(&self) -> usize {
+        self.seq.div_ceil(self.block_k)
+    }
+    pub fn q_groups(&self) -> usize {
+        self.t_q().div_ceil(self.pool)
+    }
+    pub fn kv_groups(&self) -> usize {
+        self.t_kv().div_ceil(self.pool)
+    }
+    pub fn text_groups(&self) -> usize {
+        self.text_tokens / (self.block_q * self.pool)
+    }
+}
+
+/// Aggregated run statistics (FLOP accounting + densities + wall time).
+#[derive(Clone, Debug, Default)]
+pub struct RunStats {
+    pub steps: usize,
+    pub wall_s: f64,
+    /// Attention block pairs.
+    pub attn_computed_pairs: u64,
+    pub attn_total_pairs: u64,
+    /// GEMM-Q / GEMM-O tiles.
+    pub gq_computed: u64,
+    pub gq_total: u64,
+    pub go_computed: u64,
+    pub go_total: u64,
+    /// Layer-steps fully served from the block cache.
+    pub cached_layer_steps: u64,
+    pub total_layer_steps: u64,
+    /// Per-step mean attention density (Fig. 7).
+    pub per_step_density: Vec<f64>,
+    /// FLOPs actually executed vs the dense equivalent.
+    pub flops_done: f64,
+    pub flops_dense: f64,
+    /// Coarse phase timings `[qkv, attention, proj, mlp/other]` (seconds).
+    pub phase_s: [f64; 4],
+}
+
+impl RunStats {
+    /// The paper's Sparsity metric over attention block pairs.
+    pub fn attn_sparsity(&self) -> f64 {
+        if self.attn_total_pairs == 0 {
+            return 0.0;
+        }
+        1.0 - self.attn_computed_pairs as f64 / self.attn_total_pairs as f64
+    }
+    /// FLOP-level speedup proxy (dense / done).
+    pub fn flop_speedup(&self) -> f64 {
+        if self.flops_done <= 0.0 {
+            return 1.0;
+        }
+        self.flops_dense / self.flops_done
+    }
+    /// TOPS (standard-attention ops over wall time, §4.1 definition applied
+    /// to the whole-model dense FLOP count).
+    pub fn tops(&self) -> f64 {
+        flops::tops(self.flops_dense, self.wall_s.max(1e-12))
+    }
+}
+
+/// Result of one generation.
+#[derive(Clone, Debug)]
+pub struct GenResult {
+    /// `[H × W × C]` image (rectified-flow x₀ estimate).
+    pub image: Tensor,
+    pub stats: RunStats,
+}
+
+/// Per-layer mutable state across the denoising run.
+struct LayerState {
+    syms: Option<LayerSymbols>,
+    /// TaylorSeer stack over the joint attention output `O_cat`.
+    o_taylor: TaylorCache,
+    /// Projected bias stacks per stream (one tensor per Taylor order).
+    bias_txt: Vec<Tensor>,
+    bias_img: Vec<Tensor>,
+    /// Whole-block residual-delta caches (degradation + caching baselines).
+    delta_txt: TaylorCache,
+    delta_img: TaylorCache,
+    /// This Update window degenerated to full-layer caching (`S_q`).
+    degraded: bool,
+    last_update_step: Option<usize>,
+}
+
+impl LayerState {
+    fn new(order: usize) -> Self {
+        LayerState {
+            syms: None,
+            o_taylor: TaylorCache::new(order),
+            bias_txt: Vec::new(),
+            bias_img: Vec::new(),
+            delta_txt: TaylorCache::new(order),
+            delta_img: TaylorCache::new(order),
+            degraded: false,
+            last_update_step: None,
+        }
+    }
+}
+
+/// Pre-built output-projection panels per layer.
+struct LayerPanels {
+    txt: WeightPanels,
+    img: WeightPanels,
+}
+
+/// The engine: model + policy + per-layer state.
+pub struct DiTEngine {
+    pub model: MiniMMDiT,
+    pub policy: Policy,
+    pub geo: Geometry,
+    state: Vec<LayerState>,
+    panels: Vec<LayerPanels>,
+}
+
+impl DiTEngine {
+    pub fn new(model: MiniMMDiT, policy: Policy, block_q: usize, block_k: usize) -> Self {
+        Self::with_pool(model, policy, block_q, block_k, 1)
+    }
+
+    /// Engine with an explicit symbol pooling factor `n` (§3.3: one symbol
+    /// bit covers `n` consecutive blocks, shrinking symbol storage and
+    /// decode work by `n×` at the cost of coarser sparsity decisions).
+    pub fn with_pool(
+        model: MiniMMDiT,
+        policy: Policy,
+        block_q: usize,
+        block_k: usize,
+        pool: usize,
+    ) -> Self {
+        let geo = Geometry::from_model(&model.cfg, block_q, block_k, pool);
+        let order = policy.order();
+        let heads = model.cfg.heads;
+        let panels = model
+            .w
+            .blocks
+            .iter()
+            .map(|b| LayerPanels {
+                txt: WeightPanels::new(&b.txt.wo, heads),
+                img: WeightPanels::new(&b.img.wo, heads),
+            })
+            .collect();
+        let state = (0..model.cfg.layers).map(|_| LayerState::new(order)).collect();
+        DiTEngine { model, policy, geo, state, panels }
+    }
+
+    /// Reset all per-request state (symbol + cache history).
+    pub fn reset(&mut self) {
+        let order = self.policy.order();
+        for s in self.state.iter_mut() {
+            *s = LayerState::new(order);
+        }
+        self.policy.reset();
+    }
+
+    /// Run a full denoising generation.
+    pub fn generate(&mut self, text_ids: &[usize], seed: u64, steps: usize) -> GenResult {
+        self.reset();
+        let (warmup, interval) = self.policy.schedule();
+        let plan = plan_steps(steps, warmup.min(steps), interval);
+        let grid = time_grid(steps);
+        let mut x = initial_noise(&self.model.cfg, seed);
+        let mut stats = RunStats { steps, ..Default::default() };
+        let t0 = std::time::Instant::now();
+        for (step, kind) in plan.iter().enumerate() {
+            let t = grid[step];
+            let dt = grid[step] - grid[step + 1];
+            let density_before = (stats.attn_computed_pairs, stats.attn_total_pairs);
+            let v = self.step_forward(text_ids, &x, t, *kind, step, &mut stats);
+            euler_step(&mut x, &v, dt);
+            let dp = stats.attn_computed_pairs - density_before.0;
+            let dtot = stats.attn_total_pairs - density_before.1;
+            // A step whose layers were all served from caches contributes
+            // zero pairs → density 0 (Fig. 7 convention).
+            stats.per_step_density.push(if dtot == 0 {
+                if kind.is_sparse() {
+                    0.0
+                } else {
+                    1.0
+                }
+            } else {
+                dp as f64 / dtot as f64
+            });
+        }
+        stats.wall_s = t0.elapsed().as_secs_f64();
+        GenResult { image: unpatchify(&x, &self.model.cfg), stats }
+    }
+
+    /// One engine-driven forward pass of the model (a single denoising
+    /// step under the Update–Dispatch plan). Public so custom samplers
+    /// (editing task, report harness) can drive the engine directly.
+    pub fn step_forward(
+        &mut self,
+        text_ids: &[usize],
+        x: &Tensor,
+        t: f64,
+        kind: StepKind,
+        step: usize,
+        stats: &mut RunStats,
+    ) -> Tensor {
+        let DiTEngine { model, policy, geo, state, panels } = self;
+        let mut exec =
+            EngineExec { policy, geo: *geo, state, panels, kind, step, stats };
+        model.forward_with(&mut exec, text_ids, x, t)
+    }
+
+    /// Dense-equivalent FLOPs of one transformer layer step (used for the
+    /// normalized TOPS in Tables 1–2).
+    pub fn dense_layer_flops(cfg: &ModelConfig) -> f64 {
+        let n = cfg.seq_len() as f64;
+        let d = cfg.dim as f64;
+        let m = (cfg.mlp_ratio * cfg.dim) as f64;
+        // QKV (3) + O-proj (1) + MLP (2 linears of width m) + attention.
+        (4.0 * 2.0 * n * d * d) + (2.0 * 2.0 * n * d * m) + (4.0 * n * n * d)
+    }
+}
+
+/// Per-step block executor implementing the three execution paths.
+struct EngineExec<'a> {
+    policy: &'a mut Policy,
+    geo: Geometry,
+    state: &'a mut [LayerState],
+    panels: &'a [LayerPanels],
+    kind: StepKind,
+    step: usize,
+    stats: &'a mut RunStats,
+}
+
+impl<'a> EngineExec<'a> {
+    fn phase<T>(&mut self, idx: usize, f: impl FnOnce(&mut Self) -> T) -> T {
+        let t0 = std::time::Instant::now();
+        let out = f(self);
+        self.stats.phase_s[idx] += t0.elapsed().as_secs_f64();
+        out
+    }
+}
+
+impl<'a> BlockExec for EngineExec<'a> {
+    fn block(
+        &mut self,
+        layer: usize,
+        bw: &BlockWeights,
+        cfg: &ModelConfig,
+        cvec: &[f32],
+        txt: &mut Tensor,
+        img: &mut Tensor,
+    ) {
+        self.stats.total_layer_steps += 1;
+        self.stats.flops_dense += DiTEngine::dense_layer_flops(cfg);
+        let geo = self.geo;
+        let dispatch_k = match self.kind {
+            StepKind::Dispatch { k } => Some(k),
+            _ => None,
+        };
+        let block_cached = dispatch_k.is_some()
+            && (self.policy.block_caching() || self.state[layer].degraded)
+            && self.state[layer].delta_txt.is_ready();
+
+        if let (Some(k), true) = (dispatch_k, block_cached) {
+            // ---- CachedBlock path: forecast the whole block update. ----
+            self.stats.cached_layer_steps += 1;
+            let st = &self.state[layer];
+            txt.add_assign(&st.delta_txt.forecast(k as f64));
+            img.add_assign(&st.delta_img.forecast(k as f64));
+            return;
+        }
+
+        let sparse = dispatch_k.is_some() && self.state[layer].syms.is_some();
+        if !sparse {
+            self.full_block(layer, bw, cfg, cvec, txt, img);
+        } else {
+            self.sparse_block(layer, bw, cfg, cvec, dispatch_k.unwrap(), txt, img);
+        }
+        let _ = geo;
+    }
+}
+
+impl<'a> EngineExec<'a> {
+    /// Full path: dense compute + symbol/cache refresh.
+    #[allow(clippy::too_many_arguments)]
+    fn full_block(
+        &mut self,
+        layer: usize,
+        bw: &BlockWeights,
+        cfg: &ModelConfig,
+        cvec: &[f32],
+        txt: &mut Tensor,
+        img: &mut Tensor,
+    ) {
+        let geo = self.geo;
+        let txt0 = txt.clone();
+        let img0 = img.clone();
+        let pre = pre_attention(bw, cvec, txt, img);
+        let (q, k, v) =
+            self.phase(0, |_| qkv_joint(bw, cfg, &pre.txt_mod, &pre.img_mod));
+        let o_cat =
+            self.phase(1, |_| joint_attention_dense(&q, &k, &v, cfg.heads, geo.block_q));
+
+        // FLOP accounting: everything dense this step.
+        let t_q = geo.t_q() as u64;
+        let t_kv = geo.t_kv() as u64;
+        let heads = cfg.heads as u64;
+        self.stats.attn_computed_pairs += heads * t_q * t_kv;
+        self.stats.attn_total_pairs += heads * t_q * t_kv;
+        self.stats.gq_computed += heads * t_q;
+        self.stats.gq_total += heads * t_q;
+        self.stats.go_computed += heads * t_q;
+        self.stats.go_total += heads * t_q;
+        self.stats.flops_done += DiTEngine::dense_layer_flops(cfg);
+
+        // Refresh symbols from the fresh per-head Q/K (Update semantics).
+        let uses_symbols = self.policy.uses_symbols();
+        if uses_symbols {
+            let mut heads_syms = Vec::with_capacity(cfg.heads);
+            for h in 0..cfg.heads {
+                let qh = extract_head(&q, cfg.heads, h);
+                let kh = extract_head(&k, cfg.heads, h);
+                let m = self.policy.masks(layer, h, self.step, &qh, &kh, &geo);
+                heads_syms.push(crate::symbols::HeadSymbols::from_masks(
+                    &m.m_c,
+                    &m.m_s,
+                    m.kv_groups,
+                    geo.pool,
+                ));
+            }
+            let syms = LayerSymbols { heads: heads_syms };
+            // S_q degradation: too few blocks need compute → full caching.
+            let compute_fraction = 1.0 - syms.cache_sparsity();
+            let st = &mut self.state[layer];
+            st.degraded =
+                self.policy.s_q() > 0.0 && compute_fraction < self.policy.s_q();
+            st.syms = Some(syms);
+        }
+
+        // Update the TaylorSeer stacks.
+        let dt = self
+            .state[layer]
+            .last_update_step
+            .map(|s| (self.step - s) as f64)
+            .unwrap_or(1.0);
+        self.state[layer].last_update_step = Some(self.step);
+        self.state[layer].o_taylor.update(&o_cat, dt);
+
+        // GEMM-O: exact projection now + bias stacks for Dispatch steps.
+        self.phase(2, |this| {
+            let st = &mut this.state[layer];
+            if let Some(syms) = st.syms.clone() {
+                let tg = geo.text_groups();
+                let qg = geo.q_groups();
+                let syms_txt = syms.slice_rows(0, tg);
+                let syms_img = syms.slice_rows(tg, qg);
+                let (o_txt, o_img) = vsplit(&o_cat, cfg.text_tokens);
+                st.bias_txt.clear();
+                st.bias_img.clear();
+                for (d, stack_entry) in st.o_taylor.stack().iter().enumerate() {
+                    let (e_txt, e_img) = vsplit(stack_entry, cfg.text_tokens);
+                    if d == 0 {
+                        // Exact output for this step + zeroth-order bias.
+                        let (mut out_t, bias_t, _) = gemm_o_update(
+                            &e_txt,
+                            &this.panels[layer].txt,
+                            &syms_txt,
+                            geo.block_q,
+                        );
+                        let (mut out_i, bias_i, _) = gemm_o_update(
+                            &e_img,
+                            &this.panels[layer].img,
+                            &syms_img,
+                            geo.block_q,
+                        );
+                        add_row_bias(&mut out_t, &bw.txt.bo);
+                        add_row_bias(&mut out_i, &bw.img.bo);
+                        st.bias_txt.push(bias_t);
+                        st.bias_img.push(bias_i);
+                        let o_joint = vstack(&out_t, &out_i);
+                        post_attention_preprojected(&pre, &o_joint, cfg.text_tokens, txt, img);
+                    } else {
+                        st.bias_txt.push(gemm_o_stage1(
+                            &e_txt,
+                            &this.panels[layer].txt,
+                            &syms_txt,
+                            geo.block_q,
+                        ));
+                        st.bias_img.push(gemm_o_stage1(
+                            &e_img,
+                            &this.panels[layer].img,
+                            &syms_img,
+                            geo.block_q,
+                        ));
+                    }
+                }
+                let _ = (o_txt, o_img);
+            } else {
+                // Policies without symbols: plain dense projection.
+                post_attention(bw, &pre, &o_cat, txt, img);
+            }
+        });
+
+        self.phase(3, |_| {
+            mlp_stream(&bw.txt, &pre.ada_txt, txt);
+            mlp_stream(&bw.img, &pre.ada_img, img);
+        });
+
+        // Record whole-block deltas for caching baselines / degradation.
+        let mut d_txt = txt.clone();
+        d_txt.sub_assign(&txt0);
+        let mut d_img = img.clone();
+        d_img.sub_assign(&img0);
+        self.state[layer].delta_txt.update(&d_txt, dt);
+        self.state[layer].delta_img.update(&d_img, dt);
+    }
+
+    /// Sparse path: GEMM-Q → Algorithm 1 → GEMM-O with bias.
+    #[allow(clippy::too_many_arguments)]
+    fn sparse_block(
+        &mut self,
+        layer: usize,
+        bw: &BlockWeights,
+        cfg: &ModelConfig,
+        cvec: &[f32],
+        k_off: usize,
+        txt: &mut Tensor,
+        img: &mut Tensor,
+    ) {
+        let geo = self.geo;
+        let pre = pre_attention(bw, cvec, txt, img);
+
+        // Per-step-mask policies (SpargeAttn) regenerate S_s from fresh Q/K.
+        let per_step = self.policy.per_step_masks();
+
+        // K/V are always projected in full (all rows may be attended to).
+        let (q, k, v) = self.phase(0, |this| {
+            let mut k_t = linear(&pre.txt_mod, &bw.txt.wk, &bw.txt.bk);
+            let v_t = linear(&pre.txt_mod, &bw.txt.wv, &bw.txt.bv);
+            let mut k_i = linear(&pre.img_mod, &bw.img.wk, &bw.img.bk);
+            let v_i = linear(&pre.img_mod, &bw.img.wv, &bw.img.bv);
+            blocks::headwise_rmsnorm(&mut k_t, cfg.heads, &bw.txt.k_rms);
+            blocks::headwise_rmsnorm(&mut k_i, cfg.heads, &bw.img.k_rms);
+            let mut kj = vstack(&k_t, &k_i);
+            let positions: Vec<usize> = (0..cfg.seq_len()).collect();
+            blocks::headwise_rope(&mut kj, cfg.heads, &positions);
+            let vj = vstack(&v_t, &v_i);
+
+            // GEMM-Q with spatial skipping (per-head tiles).
+            let syms = this.state[layer].syms.as_ref().unwrap();
+            let tg = geo.text_groups();
+            let qg = geo.q_groups();
+            let syms_txt = syms.slice_rows(0, tg);
+            let syms_img = syms.slice_rows(tg, qg);
+            let (q_t, s_t) =
+                gemm_q(&pre.txt_mod, &bw.txt.wq, &syms_txt, geo.block_q, Some(&bw.txt.bq));
+            let (q_i, s_i) =
+                gemm_q(&pre.img_mod, &bw.img.wq, &syms_img, geo.block_q, Some(&bw.img.bq));
+            this.stats.gq_computed += (s_t.computed_tiles + s_i.computed_tiles) as u64;
+            this.stats.gq_total += (s_t.total_tiles + s_i.total_tiles) as u64;
+            let mut qj = vstack(&q_t, &q_i);
+            blocks::norm_rope_joint_q(&mut qj, bw, cfg, cfg.text_tokens);
+            (qj, kj, vj)
+        });
+
+        if per_step {
+            let mut heads_syms = Vec::with_capacity(cfg.heads);
+            for h in 0..cfg.heads {
+                let qh = extract_head(&q, cfg.heads, h);
+                let kh = extract_head(&k, cfg.heads, h);
+                let m = self.policy.masks(layer, h, self.step, &qh, &kh, &geo);
+                heads_syms.push(crate::symbols::HeadSymbols::from_masks(
+                    &m.m_c,
+                    &m.m_s,
+                    m.kv_groups,
+                    geo.pool,
+                ));
+            }
+            self.state[layer].syms = Some(LayerSymbols { heads: heads_syms });
+        }
+
+        // FlashOmni attention per head (Algorithm 1 with real skipping).
+        let o_cat = self.phase(1, |this| {
+            let syms = this.state[layer].syms.as_ref().unwrap();
+            let mut o_cat = Tensor::zeros(&[cfg.seq_len(), cfg.dim]);
+            for h in 0..cfg.heads {
+                let qh = extract_head(&q, cfg.heads, h);
+                let kh = extract_head(&k, cfg.heads, h);
+                let vh = extract_head(&v, cfg.heads, h);
+                let (oh, st) = flashomni_attention(
+                    &qh,
+                    &kh,
+                    &vh,
+                    &syms.heads[h],
+                    geo.block_q,
+                    geo.block_k,
+                    None,
+                    DecodeMode::RowCached,
+                );
+                this.stats.attn_computed_pairs += st.computed_pairs as u64;
+                this.stats.attn_total_pairs += st.total_pairs as u64;
+                insert_head(&mut o_cat, &oh, cfg.heads, h);
+            }
+            o_cat
+        });
+
+        // GEMM-O dispatch: bias init + computed tiles only.
+        self.phase(2, |this| {
+            let st = &this.state[layer];
+            let syms = st.syms.as_ref().unwrap();
+            let tg = geo.text_groups();
+            let qg = geo.q_groups();
+            let syms_txt = syms.slice_rows(0, tg);
+            let syms_img = syms.slice_rows(tg, qg);
+            let (o_txt, o_img) = vsplit(&o_cat, cfg.text_tokens);
+            let coeffs = st.o_taylor.coefficients(k_off as f64);
+            let bias_t = if st.bias_txt.is_empty() {
+                Tensor::zeros(&[cfg.text_tokens, cfg.dim])
+            } else {
+                combine_bias_stack(&st.bias_txt, &coeffs)
+            };
+            let bias_i = if st.bias_img.is_empty() {
+                Tensor::zeros(&[cfg.vision_tokens(), cfg.dim])
+            } else {
+                combine_bias_stack(&st.bias_img, &coeffs)
+            };
+            let (mut out_t, g_t) =
+                gemm_o_dispatch(&o_txt, &this.panels[layer].txt, &syms_txt, geo.block_q, &bias_t);
+            let (mut out_i, g_i) =
+                gemm_o_dispatch(&o_img, &this.panels[layer].img, &syms_img, geo.block_q, &bias_i);
+            this.stats.go_computed += (g_t.computed_tiles + g_i.computed_tiles) as u64;
+            this.stats.go_total += (g_t.total_tiles + g_i.total_tiles) as u64;
+            add_row_bias(&mut out_t, &bw.txt.bo);
+            add_row_bias(&mut out_i, &bw.img.bo);
+            let o_joint = vstack(&out_t, &out_i);
+            post_attention_preprojected(&pre, &o_joint, cfg.text_tokens, txt, img);
+        });
+
+        self.phase(3, |_| {
+            mlp_stream(&bw.txt, &pre.ada_txt, txt);
+            mlp_stream(&bw.img, &pre.ada_img, img);
+        });
+
+        // Approximate FLOP accounting for the sparse step.
+        let syms = self.state[layer].syms.as_ref().unwrap();
+        let density = 1.0 - syms.pair_sparsity();
+        let n = cfg.seq_len() as f64;
+        let d = cfg.dim as f64;
+        let m = (cfg.mlp_ratio * cfg.dim) as f64;
+        let attn = 4.0 * n * n * d * density;
+        let cache_density = 1.0 - syms.cache_sparsity();
+        let qproj = 2.0 * n * d * d * cache_density;
+        let kv = 2.0 * 2.0 * n * d * d;
+        let oproj = 2.0 * n * d * d * cache_density;
+        let mlp = 2.0 * 2.0 * n * d * m;
+        self.stats.flops_done += attn + qproj + kv + oproj + mlp;
+    }
+}
+
+/// Add a per-feature bias vector to every row.
+fn add_row_bias(x: &mut Tensor, b: &[f32]) {
+    let d = x.cols();
+    assert_eq!(b.len(), d);
+    for r in 0..x.rows() {
+        let row = x.row_mut(r);
+        for c in 0..d {
+            row[c] += b[c];
+        }
+    }
+}
+
+/// Residual add of an already-projected joint attention output.
+fn post_attention_preprojected(
+    pre: &blocks::PreAttn,
+    o_joint: &Tensor,
+    text_tokens: usize,
+    txt: &mut Tensor,
+    img: &mut Tensor,
+) {
+    let (a_t, a_i) = vsplit(o_joint, text_tokens);
+    crate::kernels::elementwise::gated_add(txt, &pre.ada_txt[2], &a_t);
+    crate::kernels::elementwise::gated_add(img, &pre.ada_img[2], &a_i);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SparsityConfig;
+    use crate::model::weights::Weights;
+
+    fn tiny_model() -> MiniMMDiT {
+        let cfg = ModelConfig {
+            dim: 32,
+            heads: 2,
+            layers: 2,
+            text_tokens: 8,
+            patch_h: 4,
+            patch_w: 4,
+            patch_size: 2,
+            channels: 3,
+            mlp_ratio: 2,
+            vocab: 16,
+        };
+        MiniMMDiT::new(cfg.clone(), Weights::random(&cfg, 11))
+    }
+
+    #[test]
+    fn full_policy_matches_dense_reference() {
+        let model = tiny_model();
+        let ids: Vec<usize> = (0..model.cfg.text_tokens).collect();
+        let mut engine = DiTEngine::new(model.clone(), Policy::full(), 8, 8);
+        let res = engine.generate(&ids, 3, 6);
+        // Re-run densely by hand.
+        let mut x = initial_noise(&model.cfg, 3);
+        let grid = time_grid(6);
+        for s in 0..6 {
+            let v = model.forward_dense(&ids, &x, grid[s]);
+            euler_step(&mut x, &v, grid[s] - grid[s + 1]);
+        }
+        let want = unpatchify(&x, &model.cfg);
+        assert!(
+            res.image.max_abs_diff(&want) < 1e-3,
+            "engine full path deviates: {}",
+            res.image.max_abs_diff(&want)
+        );
+        assert_eq!(res.stats.attn_sparsity(), 0.0);
+    }
+
+    #[test]
+    fn flashomni_policy_runs_and_skips() {
+        let model = tiny_model();
+        let ids: Vec<usize> = (0..model.cfg.text_tokens).collect();
+        let scfg = SparsityConfig {
+            tau_q: 0.6,
+            tau_kv: 0.3,
+            interval: 3,
+            order: 1,
+            s_q: 0.0,
+            block_q: 8,
+            block_k: 8,
+            pool: 1,
+            warmup: 2,
+            ramp_steps: 1,
+        };
+        let mut engine = DiTEngine::new(model, Policy::flashomni(scfg), 8, 8);
+        let res = engine.generate(&ids, 3, 10);
+        assert!(res.image.data().iter().all(|x| x.is_finite()));
+        assert!(
+            res.stats.attn_sparsity() > 0.0,
+            "expected some skipped pairs, got sparsity 0"
+        );
+        assert!(res.stats.flop_speedup() > 1.0);
+        assert_eq!(res.stats.per_step_density.len(), 10);
+        // Warmup steps are dense.
+        assert_eq!(res.stats.per_step_density[0], 1.0);
+        assert_eq!(res.stats.per_step_density[1], 1.0);
+    }
+
+    #[test]
+    fn sparse_path_with_zero_tau_equals_dense() {
+        // τ = 0 symbols are all-compute: the sparse machinery must agree
+        // with the dense reference to float tolerance.
+        let model = tiny_model();
+        let ids: Vec<usize> = (0..model.cfg.text_tokens).collect();
+        let scfg = SparsityConfig {
+            tau_q: 0.0,
+            tau_kv: 0.0,
+            interval: 3,
+            order: 1,
+            s_q: 0.0,
+            block_q: 8,
+            block_k: 8,
+            pool: 1,
+            warmup: 1,
+            ramp_steps: 1,
+        };
+        let mut engine = DiTEngine::new(model.clone(), Policy::flashomni(scfg), 8, 8);
+        let res = engine.generate(&ids, 7, 6);
+        let mut dense = DiTEngine::new(model, Policy::full(), 8, 8);
+        let want = dense.generate(&ids, 7, 6);
+        let diff = res.image.max_abs_diff(&want.image);
+        assert!(diff < 1e-2, "zero-sparsity sparse path deviates by {diff}");
+        assert_eq!(res.stats.attn_sparsity(), 0.0);
+    }
+
+    #[test]
+    fn taylorseer_policy_caches_blocks() {
+        let model = tiny_model();
+        let ids: Vec<usize> = (0..model.cfg.text_tokens).collect();
+        let mut engine =
+            DiTEngine::new(model, Policy::taylorseer(3, 1, 2), 8, 8);
+        let res = engine.generate(&ids, 3, 11);
+        assert!(res.stats.cached_layer_steps > 0, "no layer-steps cached");
+        assert!(res.image.data().iter().all(|x| x.is_finite()));
+        // Cached steps don't contribute attention pairs → density < 1 on
+        // dispatch steps.
+        assert!(res.stats.per_step_density.iter().any(|&d| d == 0.0));
+    }
+
+    #[test]
+    fn stats_flops_monotonic() {
+        let model = tiny_model();
+        let ids: Vec<usize> = (0..model.cfg.text_tokens).collect();
+        let mut dense = DiTEngine::new(model.clone(), Policy::full(), 8, 8);
+        let r1 = dense.generate(&ids, 3, 6);
+        assert!((r1.stats.flop_speedup() - 1.0).abs() < 1e-9);
+        let mut fora = DiTEngine::new(model, Policy::fora(2, 1), 8, 8);
+        let r2 = fora.generate(&ids, 3, 6);
+        assert!(r2.stats.flops_done < r1.stats.flops_done);
+    }
+}

@@ -1,0 +1,347 @@
+//! Sparsity **policies** — the paper's method and all five baselines,
+//! every one expressed as an emitter of unified sparse symbols feeding the
+//! same engine/kernels (the paper's central "unified" claim).
+//!
+//! | Policy | Sparsity it emits | Paper reference |
+//! |---|---|---|
+//! | `Full` | none | Full-Attention rows of Tables 1–2 |
+//! | `FlashOmni(τq, τkv, N, D, Sq)` | `S_c` (Eq. 1 selection) + `S_s`, TaylorSeer forecast, `S_q` degradation | the proposed method |
+//! | `TaylorSeer(N, D)` | whole-block caching w/ Taylor forecast | Liu et al. 2025b |
+//! | `FORA(N)` | whole-block caching, direct reuse | Selvaraju et al. 2024 |
+//! | `ToCa(τq, N)` | token-block `S_c` only, direct reuse | Zou et al. 2025 |
+//! | `SpargeAttn(l1, l2)` | per-step dynamic `S_s` only | Zhang et al. 2025b |
+//! | `DiTFastAttnV2(θ)` | static head-wise arrow `S_s` | Zhang et al. 2025a |
+//!
+//! Simplifications vs the original baselines are documented on each
+//! constructor (and in DESIGN.md).
+
+use crate::config::SparsityConfig;
+use crate::masks::{arrow_mask, compressed_map, flashomni_masks, select_skipped_blocks, MaskSet};
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+
+use super::Geometry;
+
+/// Which method generates the sparsity decisions.
+#[derive(Clone, Debug)]
+pub enum PolicyKind {
+    Full,
+    FlashOmni(SparsityConfig),
+    TaylorSeer { interval: usize, order: usize, warmup: usize },
+    Fora { interval: usize, warmup: usize },
+    Toca(SparsityConfig),
+    SpargeAttn { l1: f64, l2: f64, warmup: usize },
+    DiTFastAttnV2 { theta: f64, warmup: usize },
+}
+
+/// A sparsity policy (kind + any calibration state).
+#[derive(Clone, Debug)]
+pub struct Policy {
+    pub kind: PolicyKind,
+    /// DiTFastAttnV2 per-(layer, head) calibrated static skip masks.
+    calibrated: HashMap<(usize, usize), Vec<bool>>,
+}
+
+impl Policy {
+    fn of(kind: PolicyKind) -> Self {
+        Policy { kind, calibrated: HashMap::new() }
+    }
+
+    /// Dense baseline.
+    pub fn full() -> Self {
+        Self::of(PolicyKind::Full)
+    }
+
+    /// The paper's method with the `(τ_q, τ_kv, N, D, S_q)` configuration.
+    pub fn flashomni(cfg: SparsityConfig) -> Self {
+        Self::of(PolicyKind::FlashOmni(cfg))
+    }
+
+    /// TaylorSeer baseline: whole-block caching with order-`order` forecast.
+    pub fn taylorseer(interval: usize, order: usize, warmup: usize) -> Self {
+        Self::of(PolicyKind::TaylorSeer { interval, order, warmup })
+    }
+
+    /// FORA baseline: whole-block caching with direct reuse.
+    pub fn fora(interval: usize, warmup: usize) -> Self {
+        Self::of(PolicyKind::Fora { interval, warmup })
+    }
+
+    /// ToCa baseline (simplified): token-block caching driven by the same
+    /// attention-derived importance scores (C metric), direct reuse, no
+    /// block-sparse skipping and no GEMM optimizations beyond the unified
+    /// engine's.
+    pub fn toca(mut cfg: SparsityConfig) -> Self {
+        cfg.tau_kv = 0.0;
+        cfg.order = 0;
+        cfg.s_q = 0.0;
+        Self::of(PolicyKind::Toca(cfg))
+    }
+
+    /// SpargeAttn baseline (simplified): dynamic block-skip mask re-derived
+    /// every step from the pooled QK map; `l1`/`l2` (the two-stage
+    /// thresholds of the original) are combined into a single skipped-mass
+    /// budget `l1 + l2`.
+    pub fn sparge(l1: f64, l2: f64, warmup: usize) -> Self {
+        Self::of(PolicyKind::SpargeAttn { l1, l2, warmup })
+    }
+
+    /// DiTFastAttnV2 baseline (simplified): head-wise static arrow-attention
+    /// masks calibrated once — the smallest window whose retained pooled
+    /// probability mass is ≥ 1 − θ.
+    pub fn dfa2(theta: f64, warmup: usize) -> Self {
+        Self::of(PolicyKind::DiTFastAttnV2 { theta, warmup })
+    }
+
+    /// Display name matching the paper's tables.
+    pub fn name(&self) -> String {
+        match &self.kind {
+            PolicyKind::Full => "Full-Attention".into(),
+            PolicyKind::FlashOmni(c) => format!("FlashOmni {}", c.label()),
+            PolicyKind::TaylorSeer { interval, order, .. } => {
+                format!("TaylorSeer (N={interval}, D={order})")
+            }
+            PolicyKind::Fora { interval, .. } => format!("FORA (N={interval})"),
+            PolicyKind::Toca(c) => format!("ToCa (τ={:.0}%, N={})", c.tau_q * 100.0, c.interval),
+            PolicyKind::SpargeAttn { l1, l2, .. } => {
+                format!("SpargeAttn (l1={:.1}%, l2={:.1}%)", l1 * 100.0, l2 * 100.0)
+            }
+            PolicyKind::DiTFastAttnV2 { theta, .. } => format!("DiTFastAttnV2 (θ={theta})"),
+        }
+    }
+
+    /// `(warmup, interval)` for the Update–Dispatch planner.
+    pub fn schedule(&self) -> (usize, usize) {
+        match &self.kind {
+            PolicyKind::Full => (usize::MAX, 1),
+            PolicyKind::FlashOmni(c) | PolicyKind::Toca(c) => (c.warmup, c.interval),
+            PolicyKind::TaylorSeer { interval, warmup, .. }
+            | PolicyKind::Fora { interval, warmup } => (*warmup, *interval),
+            // No caching: one Update right after warmup generates (or
+            // calibrates) symbols, then every step is a Dispatch.
+            PolicyKind::SpargeAttn { warmup, .. } => (*warmup, usize::MAX / 2),
+            PolicyKind::DiTFastAttnV2 { warmup, .. } => (*warmup, usize::MAX / 2),
+        }
+    }
+
+    /// Whether the engine should maintain symbols at all.
+    pub fn uses_symbols(&self) -> bool {
+        !matches!(
+            self.kind,
+            PolicyKind::Full | PolicyKind::TaylorSeer { .. } | PolicyKind::Fora { .. }
+        )
+    }
+
+    /// Whole-block caching at Dispatch steps (TaylorSeer / FORA).
+    pub fn block_caching(&self) -> bool {
+        matches!(self.kind, PolicyKind::TaylorSeer { .. } | PolicyKind::Fora { .. })
+    }
+
+    /// TaylorSeer expansion order `D`.
+    pub fn order(&self) -> usize {
+        match &self.kind {
+            PolicyKind::FlashOmni(c) => c.order,
+            PolicyKind::TaylorSeer { order, .. } => *order,
+            _ => 0,
+        }
+    }
+
+    /// Degradation threshold `S_q`.
+    pub fn s_q(&self) -> f64 {
+        match &self.kind {
+            PolicyKind::FlashOmni(c) => c.s_q,
+            _ => 0.0,
+        }
+    }
+
+    /// Masks regenerated every step from fresh Q/K (dynamic BSS).
+    pub fn per_step_masks(&self) -> bool {
+        matches!(self.kind, PolicyKind::SpargeAttn { .. })
+    }
+
+    /// Drop calibration state between requests.
+    pub fn reset(&mut self) {
+        self.calibrated.clear();
+    }
+
+    /// Generate the logical masks for one `(layer, head)` at a refresh
+    /// point, from the fresh per-head `Q`/`K` (`[N × head_dim]`).
+    pub fn masks(
+        &mut self,
+        layer: usize,
+        head: usize,
+        step: usize,
+        q: &Tensor,
+        k: &Tensor,
+        geo: &Geometry,
+    ) -> MaskSet {
+        let gq = geo.block_q * geo.pool;
+        let gk = geo.block_k * geo.pool;
+        match &self.kind {
+            PolicyKind::Full | PolicyKind::TaylorSeer { .. } | PolicyKind::Fora { .. } => {
+                MaskSet::dense(geo.q_groups(), geo.kv_groups())
+            }
+            PolicyKind::FlashOmni(c) => {
+                let tau_q = c.tau_at(c.tau_q, step);
+                let tau_kv = c.tau_at(c.tau_kv, step);
+                flashomni_masks(q, k, gq, gk, geo.text_tokens, tau_q, tau_kv)
+            }
+            PolicyKind::Toca(c) => {
+                let tau_q = c.tau_at(c.tau_q, step);
+                flashomni_masks(q, k, gq, gk, geo.text_tokens, tau_q, 0.0)
+            }
+            PolicyKind::SpargeAttn { l1, l2, .. } => {
+                let map = compressed_map(q, k, gq, gk, geo.text_tokens);
+                let m_s = select_skipped_blocks(&map, l1 + l2);
+                MaskSet {
+                    m_c: vec![true; map.q_groups],
+                    m_s,
+                    q_groups: map.q_groups,
+                    kv_groups: map.kv_groups,
+                }
+            }
+            PolicyKind::DiTFastAttnV2 { theta, .. } => {
+                let qg = geo.q_groups();
+                let kg = geo.kv_groups();
+                let key = (layer, head);
+                let theta = *theta;
+                let m_s = if let Some(m) = self.calibrated.get(&key) {
+                    m.clone()
+                } else {
+                    let map = compressed_map(q, k, gq, gk, geo.text_tokens);
+                    let tg = map.text_groups;
+                    let mut chosen = vec![true; qg * kg];
+                    // Smallest arrow window whose retained mass ≥ 1 − θ.
+                    let mut w = 1usize;
+                    while w < kg {
+                        let cand = arrow_mask(qg, kg, tg, w, 1);
+                        let mut kept = 0.0f64;
+                        for i in 0..qg {
+                            for j in 0..kg {
+                                if cand[i * kg + j] {
+                                    kept += map.p[i * kg + j] as f64;
+                                }
+                            }
+                        }
+                        if kept / qg as f64 >= 1.0 - theta {
+                            chosen = cand;
+                            break;
+                        }
+                        w *= 2;
+                    }
+                    self.calibrated.insert(key, chosen.clone());
+                    chosen
+                };
+                MaskSet { m_c: vec![true; qg], m_s, q_groups: qg, kv_groups: kg }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::testutil::randn;
+    use crate::util::rng::Pcg32;
+
+    fn geo() -> Geometry {
+        Geometry::from_model(
+            &ModelConfig {
+                dim: 32,
+                heads: 2,
+                layers: 1,
+                text_tokens: 8,
+                patch_h: 4,
+                patch_w: 4,
+                patch_size: 2,
+                channels: 3,
+                mlp_ratio: 2,
+                vocab: 16,
+            },
+            8,
+            8,
+            1,
+        )
+    }
+
+    #[test]
+    fn names_match_paper_style() {
+        let c = SparsityConfig::paper(0.5, 0.15, 5, 1, 0.3);
+        assert_eq!(Policy::flashomni(c).name(), "FlashOmni (50%, 15%, 5, 1, 30%)");
+        assert_eq!(Policy::taylorseer(5, 1, 4).name(), "TaylorSeer (N=5, D=1)");
+        assert_eq!(Policy::fora(3, 4).name(), "FORA (N=3)");
+    }
+
+    #[test]
+    fn full_policy_emits_dense_masks() {
+        let g = geo();
+        let mut p = Policy::full();
+        let mut rng = Pcg32::seeded(1);
+        let q = randn(&mut rng, &[g.seq, 16]);
+        let k = randn(&mut rng, &[g.seq, 16]);
+        let m = p.masks(0, 0, 5, &q, &k, &g);
+        assert!(m.m_c.iter().all(|&b| b));
+        assert!(m.m_s.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn sparge_skips_but_never_caches() {
+        let g = geo();
+        let mut p = Policy::sparge(0.2, 0.2, 1);
+        let mut rng = Pcg32::seeded(2);
+        let q = randn(&mut rng, &[g.seq, 16]);
+        let k = randn(&mut rng, &[g.seq, 16]);
+        let m = p.masks(0, 0, 5, &q, &k, &g);
+        assert!(m.m_c.iter().all(|&b| b), "SpargeAttn must not cache");
+        assert!(m.m_s.iter().any(|&b| !b), "SpargeAttn must skip something");
+        assert!(p.per_step_masks());
+        assert!(!p.block_caching());
+    }
+
+    #[test]
+    fn dfa2_calibrates_once_and_is_static() {
+        let g = geo();
+        let mut p = Policy::dfa2(0.4, 1);
+        let mut rng = Pcg32::seeded(3);
+        let q = randn(&mut rng, &[g.seq, 16]);
+        let k = randn(&mut rng, &[g.seq, 16]);
+        let m1 = p.masks(0, 0, 1, &q, &k, &g);
+        // Different Q/K later — mask must be unchanged (static).
+        let q2 = randn(&mut rng, &[g.seq, 16]);
+        let k2 = randn(&mut rng, &[g.seq, 16]);
+        let m2 = p.masks(0, 0, 7, &q2, &k2, &g);
+        assert_eq!(m1.m_s, m2.m_s);
+        // Other heads calibrate independently.
+        let m3 = p.masks(0, 1, 1, &q, &k, &g);
+        assert_eq!(m3.m_s.len(), m1.m_s.len());
+        p.reset();
+        assert!(p.calibrated.is_empty());
+    }
+
+    #[test]
+    fn toca_no_bss() {
+        let g = geo();
+        let c = SparsityConfig {
+            tau_q: 0.5,
+            warmup: 0,
+            ramp_steps: 1,
+            ..SparsityConfig::default()
+        };
+        let mut p = Policy::toca(c);
+        assert_eq!(p.order(), 0);
+        let mut rng = Pcg32::seeded(4);
+        let q = randn(&mut rng, &[g.seq, 16]);
+        let k = randn(&mut rng, &[g.seq, 16]);
+        let m = p.masks(0, 0, 3, &q, &k, &g);
+        assert!(m.m_s.iter().all(|&b| b), "ToCa must not skip pairs");
+    }
+
+    #[test]
+    fn schedules() {
+        assert_eq!(Policy::fora(4, 2).schedule(), (2, 4));
+        let (w, i) = Policy::sparge(0.1, 0.1, 3).schedule();
+        assert_eq!(w, 3);
+        assert!(i > 1_000_000);
+    }
+}

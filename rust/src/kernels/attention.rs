@@ -1,0 +1,478 @@
+//! Dense FlashAttention and the **FlashOmni sparse attention kernel**
+//! (paper Algorithm 1).
+//!
+//! Both operate on one head: `Q, K, V ∈ [N × d]` row-major. The sparse
+//! kernel consumes [`HeadSymbols`] and follows Algorithm 1 exactly:
+//!
+//! ```text
+//! for each Q block i (one "CTA"):
+//!     if F(S_c, i) == 0:            # spatial decode, once per CTA
+//!         cache-then-reuse: O_i = OP_reuse(Õ_i)   (or skip the write
+//!         entirely when the GEMM-O bias optimization is active)
+//!     else:
+//!         for each KV block j:
+//!             if J(S_s, i, j) == 1: # reduction decode, register-cached
+//!                 online-softmax update with K_j, V_j
+//!         O_i = diag(l)⁻¹ · acc
+//! ```
+//!
+//! Skipped work is *really* skipped — no loads, no FLOPs — which is what
+//! makes the wall-clock measurements in `benches/` meaningful.
+
+use crate::symbols::HeadSymbols;
+use crate::tensor::Tensor;
+
+/// How the reduction-axis symbols are decoded in the inner loop —
+/// used to reproduce the paper's FC-vs-BSS decode-overhead analysis (§4.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecodeMode {
+    /// Decode a symbol byte once per 8 groups and keep it in a register
+    /// (the paper's optimization).
+    RowCached,
+    /// Re-run the full bitwise decode `J(S_s, i, j)` for every KV block
+    /// (the naive scheme the paper says burns CUDA-core cycles).
+    PerAccess,
+}
+
+/// Execution statistics for one attention call.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AttnStats {
+    /// (Qi, Kj) block pairs actually computed.
+    pub computed_pairs: usize,
+    /// Total block pairs in a dense computation.
+    pub total_pairs: usize,
+    /// Q blocks served from cache.
+    pub cached_blocks: usize,
+    /// Total Q blocks.
+    pub q_blocks: usize,
+}
+
+impl AttnStats {
+    /// The paper's Sparsity metric: `skip / total`.
+    pub fn sparsity(&self) -> f64 {
+        if self.total_pairs == 0 {
+            return 0.0;
+        }
+        1.0 - self.computed_pairs as f64 / self.total_pairs as f64
+    }
+}
+
+/// Dense FlashAttention (block-partitioned, online softmax). Reference
+/// baseline for every speedup measurement.
+pub fn attention_dense(q: &Tensor, k: &Tensor, v: &Tensor, block_q: usize, block_k: usize) -> Tensor {
+    let n = q.rows();
+    let d = q.cols();
+    assert_eq!(k.rows(), v.rows());
+    assert_eq!(k.cols(), d);
+    assert_eq!(v.cols(), d);
+    let n_kv = k.rows();
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut o = Tensor::zeros(&[n, d]);
+
+    let t_q = n.div_ceil(block_q);
+    let t_kv = n_kv.div_ceil(block_k);
+    let mut scores = vec![0.0f32; block_q * block_k];
+    let mut acc = vec![0.0f32; block_q * d];
+    let mut m = vec![f32::NEG_INFINITY; block_q];
+    let mut l = vec![0.0f32; block_q];
+
+    for bi in 0..t_q {
+        let q_lo = bi * block_q;
+        let q_hi = (q_lo + block_q).min(n);
+        let bq = q_hi - q_lo;
+        acc[..bq * d].fill(0.0);
+        m[..bq].fill(f32::NEG_INFINITY);
+        l[..bq].fill(0.0);
+        for bj in 0..t_kv {
+            let k_lo = bj * block_k;
+            let k_hi = (k_lo + block_k).min(n_kv);
+            let bk = k_hi - k_lo;
+            attention_block_update(
+                &q.data()[q_lo * d..q_hi * d],
+                &k.data()[k_lo * d..k_hi * d],
+                &v.data()[k_lo * d..k_hi * d],
+                bq,
+                bk,
+                d,
+                scale,
+                &mut scores,
+                &mut m,
+                &mut l,
+                &mut acc,
+            );
+        }
+        finalize_block(&mut o.data_mut()[q_lo * d..q_hi * d], &acc, &l, bq, d);
+    }
+    o
+}
+
+/// One online-softmax update with a `(bq × bk)` tile.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn attention_block_update(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    bq: usize,
+    bk: usize,
+    d: usize,
+    scale: f32,
+    scores: &mut [f32],
+    m: &mut [f32],
+    l: &mut [f32],
+    acc: &mut [f32],
+) {
+    // S = Q Kᵀ · scale (dot-product form). Four accumulators break the
+    // FMA dependency chain — ~2× on the QKᵀ stage (see EXPERIMENTS.md
+    // §Perf, L3 iteration 1).
+    for i in 0..bq {
+        let qrow = &q[i * d..(i + 1) * d];
+        for j in 0..bk {
+            let krow = &k[j * d..(j + 1) * d];
+            // 8-lane accumulator via chunks_exact: bounds checks vanish and
+            // LLVM emits packed FMAs (vmulps/vfmadd) at target-cpu=native.
+            let mut acc = [0.0f32; 8];
+            let qc = qrow.chunks_exact(8);
+            let kc = krow.chunks_exact(8);
+            let (qr, kr) = (qc.remainder(), kc.remainder());
+            for (qa, ka) in qc.zip(kc) {
+                for l in 0..8 {
+                    acc[l] += qa[l] * ka[l];
+                }
+            }
+            let mut s: f32 = acc.iter().sum();
+            for (a, b) in qr.iter().zip(kr) {
+                s += a * b;
+            }
+            scores[i * bk + j] = s * scale;
+        }
+    }
+    // Online softmax per row.
+    for i in 0..bq {
+        let row = &mut scores[i * bk..i * bk + bk];
+        let mut blk_max = f32::NEG_INFINITY;
+        for &s in row.iter() {
+            blk_max = blk_max.max(s);
+        }
+        let new_m = m[i].max(blk_max);
+        let correction = if m[i] == f32::NEG_INFINITY { 0.0 } else { (m[i] - new_m).exp() };
+        // Rescale previous accumulator and l.
+        if correction != 1.0 {
+            l[i] *= correction;
+            for p in 0..d {
+                acc[i * d + p] *= correction;
+            }
+        }
+        let mut row_sum = 0.0f32;
+        for s in row.iter_mut() {
+            *s = (*s - new_m).exp();
+            row_sum += *s;
+        }
+        l[i] += row_sum;
+        m[i] = new_m;
+        // acc += P̃ · V  (slice zip ⇒ packed adds; two j at a time for ILP)
+        let arow = &mut acc[i * d..(i + 1) * d];
+        let mut j = 0;
+        while j + 2 <= bk {
+            let (p0, p1) = (row[j], row[j + 1]);
+            let v0 = &v[j * d..(j + 1) * d];
+            let v1 = &v[(j + 1) * d..(j + 2) * d];
+            for ((a, x), y) in arow.iter_mut().zip(v0).zip(v1) {
+                *a += p0 * x + p1 * y;
+            }
+            j += 2;
+        }
+        if j < bk {
+            let pij = row[j];
+            let vrow = &v[j * d..(j + 1) * d];
+            for (a, x) in arow.iter_mut().zip(vrow) {
+                *a += pij * x;
+            }
+        }
+    }
+}
+
+#[inline]
+fn finalize_block(o: &mut [f32], acc: &[f32], l: &[f32], bq: usize, d: usize) {
+    for i in 0..bq {
+        let inv = if l[i] > 0.0 { 1.0 / l[i] } else { 0.0 };
+        for p in 0..d {
+            o[i * d + p] = acc[i * d + p] * inv;
+        }
+    }
+}
+
+/// FlashOmni sparse attention (Algorithm 1).
+///
+/// * `sym` — unified sparse symbols for this head.
+/// * `cached_o` — the forecast features `OP_reuse(Õ)` for cached blocks;
+///   when `Some`, cached rows of the output are filled from it
+///   (cache-then-reuse path). When `None`, cached rows are left at zero —
+///   the caller is using the GEMM-O bias optimization, which makes the
+///   element-wise reuse write unnecessary (§3.5, Obs. 3).
+/// * `decode` — inner-loop symbol decode strategy (see [`DecodeMode`]).
+///
+/// Returns the output and the skip statistics.
+pub fn flashomni_attention(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    sym: &HeadSymbols,
+    block_q: usize,
+    block_k: usize,
+    cached_o: Option<&Tensor>,
+    decode: DecodeMode,
+) -> (Tensor, AttnStats) {
+    let n = q.rows();
+    let d = q.cols();
+    let n_kv = k.rows();
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut o = Tensor::zeros(&[n, d]);
+    let t_q = n.div_ceil(block_q);
+    let t_kv = n_kv.div_ceil(block_k);
+    debug_assert_eq!(sym.q_groups, t_q.div_ceil(sym.pool), "S_c geometry mismatch");
+    debug_assert_eq!(sym.kv_groups, t_kv.div_ceil(sym.pool), "S_s geometry mismatch");
+
+    let mut stats = AttnStats {
+        total_pairs: t_q * t_kv,
+        q_blocks: t_q,
+        ..Default::default()
+    };
+    let mut scores = vec![0.0f32; block_q * block_k];
+    let mut acc = vec![0.0f32; block_q * d];
+    let mut m = vec![f32::NEG_INFINITY; block_q];
+    let mut l = vec![0.0f32; block_q];
+
+    for bi in 0..t_q {
+        let q_lo = bi * block_q;
+        let q_hi = (q_lo + block_q).min(n);
+        let bq = q_hi - q_lo;
+
+        // Line 5: spatial-axis decode F(S_c, i) — once per CTA.
+        if !sym.f(bi) {
+            // Cache-then-reuse path (lines 6–9).
+            stats.cached_blocks += 1;
+            if let Some(co) = cached_o {
+                o.data_mut()[q_lo * d..q_hi * d]
+                    .copy_from_slice(&co.data()[q_lo * d..q_hi * d]);
+            }
+            continue; // line 7: the CTA returns immediately
+        }
+
+        // Compute-on-demand path (lines 11–19).
+        acc[..bq * d].fill(0.0);
+        m[..bq].fill(f32::NEG_INFINITY);
+        l[..bq].fill(0.0);
+        let mut row_dec = sym.row_decoder(bi);
+        for bj in 0..t_kv {
+            // Line 13: reduction-axis decode J(S_s, i, j).
+            let keep = match decode {
+                DecodeMode::RowCached => row_dec.j(bj),
+                DecodeMode::PerAccess => sym.j(bi, bj),
+            };
+            if !keep {
+                continue;
+            }
+            stats.computed_pairs += 1;
+            let k_lo = bj * block_k;
+            let k_hi = (k_lo + block_k).min(n_kv);
+            let bk = k_hi - k_lo;
+            attention_block_update(
+                &q.data()[q_lo * d..q_hi * d],
+                &k.data()[k_lo * d..k_hi * d],
+                &v.data()[k_lo * d..k_hi * d],
+                bq,
+                bk,
+                d,
+                scale,
+                &mut scores,
+                &mut m,
+                &mut l,
+                &mut acc,
+            );
+        }
+        finalize_block(&mut o.data_mut()[q_lo * d..q_hi * d], &acc, &l, bq, d);
+    }
+    (o, stats)
+}
+
+/// Slow masked reference with identical semantics, used by tests:
+/// softmax with `-inf` on skipped blocks; cached rows copied from
+/// `cached_o` (or zero).
+pub fn masked_reference(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    sym: &HeadSymbols,
+    block_q: usize,
+    block_k: usize,
+    cached_o: Option<&Tensor>,
+) -> Tensor {
+    let n = q.rows();
+    let d = q.cols();
+    let n_kv = k.rows();
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut o = Tensor::zeros(&[n, d]);
+    for r in 0..n {
+        let bi = r / block_q;
+        if !sym.f(bi) {
+            if let Some(co) = cached_o {
+                o.row_mut(r).copy_from_slice(co.row(r));
+            }
+            continue;
+        }
+        let mut s = vec![f32::NEG_INFINITY; n_kv];
+        for c in 0..n_kv {
+            let bj = c / block_k;
+            if !sym.j(bi, bj) {
+                continue;
+            }
+            let mut dot = 0.0f32;
+            for p in 0..d {
+                dot += q.row(r)[p] * k.row(c)[p];
+            }
+            s[c] = dot * scale;
+        }
+        let mx = s.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        if mx == f32::NEG_INFINITY {
+            continue; // fully-masked row → zeros
+        }
+        let mut denom = 0.0f32;
+        for x in s.iter_mut() {
+            *x = (*x - mx).exp();
+            denom += *x;
+        }
+        let orow = o.row_mut(r);
+        for c in 0..n_kv {
+            let w = s[c] / denom;
+            if w == 0.0 {
+                continue;
+            }
+            for p in 0..d {
+                orow[p] += w * v.row(c)[p];
+            }
+        }
+    }
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::symbols::HeadSymbols;
+    use crate::testutil::{assert_close, prop_check, rand_mask, randn};
+
+    #[test]
+    fn dense_matches_masked_reference() {
+        prop_check("dense attention == reference", 15, |rng| {
+            let n = 8 + rng.below(56);
+            let d = 4 + rng.below(28);
+            let q = randn(rng, &[n, d]);
+            let k = randn(rng, &[n, d]);
+            let v = randn(rng, &[n, d]);
+            let bq = 1 + rng.below(16);
+            let bk = 1 + rng.below(16);
+            let t_q = n.div_ceil(bq);
+            let t_kv = n.div_ceil(bk);
+            let sym = HeadSymbols::dense(t_q, t_kv, 1);
+            let want = masked_reference(&q, &k, &v, &sym, bq, bk, None);
+            let got = attention_dense(&q, &k, &v, bq, bk);
+            assert_close(&got, &want, 1e-4, 1e-3);
+        });
+    }
+
+    #[test]
+    fn sparse_matches_masked_reference() {
+        prop_check("Algorithm 1 == masked reference", 25, |rng| {
+            let n = 16 + rng.below(64);
+            let d = 4 + rng.below(12);
+            let bq = 4 + rng.below(8);
+            let bk = 4 + rng.below(8);
+            let pool = 1 + rng.below(2);
+            let t_q = n.div_ceil(bq);
+            let t_kv = n.div_ceil(bk);
+            let qg = t_q.div_ceil(pool);
+            let kg = t_kv.div_ceil(pool);
+            let q = randn(rng, &[n, d]);
+            let k = randn(rng, &[n, d]);
+            let v = randn(rng, &[n, d]);
+            let cached = randn(rng, &[n, d]);
+            let m_c = rand_mask(rng, qg, 0.7);
+            let m_s = rand_mask(rng, qg * kg, 0.6);
+            let sym = HeadSymbols::from_masks(&m_c, &m_s, kg, pool);
+            let want = masked_reference(&q, &k, &v, &sym, bq, bk, Some(&cached));
+            for decode in [DecodeMode::RowCached, DecodeMode::PerAccess] {
+                let (got, stats) =
+                    flashomni_attention(&q, &k, &v, &sym, bq, bk, Some(&cached), decode);
+                assert_close(&got, &want, 1e-4, 1e-3);
+                assert_eq!(stats.total_pairs, t_q * t_kv);
+                assert!(stats.computed_pairs <= stats.total_pairs);
+            }
+        });
+    }
+
+    #[test]
+    fn dense_symbols_reduce_to_dense_attention() {
+        let mut rng = crate::util::rng::Pcg32::seeded(42);
+        let (n, d, b) = (40, 8, 8);
+        let q = randn(&mut rng, &[n, d]);
+        let k = randn(&mut rng, &[n, d]);
+        let v = randn(&mut rng, &[n, d]);
+        let sym = HeadSymbols::dense(n.div_ceil(b), n.div_ceil(b), 1);
+        let (sparse, stats) =
+            flashomni_attention(&q, &k, &v, &sym, b, b, None, DecodeMode::RowCached);
+        let dense = attention_dense(&q, &k, &v, b, b);
+        assert_close(&sparse, &dense, 1e-5, 1e-4);
+        assert_eq!(stats.sparsity(), 0.0);
+        assert_eq!(stats.cached_blocks, 0);
+    }
+
+    #[test]
+    fn cached_rows_skip_write_when_bias_optimized() {
+        let mut rng = crate::util::rng::Pcg32::seeded(43);
+        let (n, d, b) = (16, 4, 8);
+        let q = randn(&mut rng, &[n, d]);
+        let k = randn(&mut rng, &[n, d]);
+        let v = randn(&mut rng, &[n, d]);
+        // Block 0 cached, block 1 computed.
+        let sym = HeadSymbols::from_masks(&[false, true], &[true, true, true, true], 2, 1);
+        let (o, stats) = flashomni_attention(&q, &k, &v, &sym, b, b, None, DecodeMode::RowCached);
+        assert_eq!(stats.cached_blocks, 1);
+        // Cached rows left zero (no element-wise write — bias path).
+        assert!(o.data()[..b * d].iter().all(|&x| x == 0.0));
+        // Computed rows are not all zero.
+        assert!(o.data()[b * d..].iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn fully_skipped_row_yields_zeros() {
+        let mut rng = crate::util::rng::Pcg32::seeded(44);
+        let (n, d, b) = (8, 4, 4);
+        let q = randn(&mut rng, &[n, d]);
+        let k = randn(&mut rng, &[n, d]);
+        let v = randn(&mut rng, &[n, d]);
+        // Row block 0: computed spatially but all KV pairs skipped.
+        let sym = HeadSymbols::from_masks(&[true, true], &[false, false, true, true], 2, 1);
+        let (o, stats) = flashomni_attention(&q, &k, &v, &sym, b, b, None, DecodeMode::RowCached);
+        assert!(o.data()[..b * d].iter().all(|&x| x == 0.0));
+        assert_eq!(stats.computed_pairs, 2);
+    }
+
+    #[test]
+    fn stats_sparsity_accounting() {
+        let mut rng = crate::util::rng::Pcg32::seeded(45);
+        let (n, d, b) = (32, 4, 8);
+        let q = randn(&mut rng, &[n, d]);
+        let k = randn(&mut rng, &[n, d]);
+        let v = randn(&mut rng, &[n, d]);
+        // 4 q-blocks × 4 kv-blocks; cache 2 rows; skip nothing else.
+        let sym =
+            HeadSymbols::from_masks(&[false, true, false, true], &[true; 16], 4, 1);
+        let (_, stats) = flashomni_attention(&q, &k, &v, &sym, b, b, None, DecodeMode::RowCached);
+        assert_eq!(stats.computed_pairs, 8);
+        assert_eq!(stats.total_pairs, 16);
+        assert!((stats.sparsity() - 0.5).abs() < 1e-12);
+        // Kernel-measured sparsity must agree with the symbol-predicted one.
+        assert!((stats.sparsity() - sym.pair_sparsity()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,244 @@
+//! Element-wise / per-token operators: RMSNorm, RoPE, GELU, SiLU, adaLN
+//! modulation, LayerNorm, softmax.
+//!
+//! Observation 2 of the paper relies on RMSNorm and RoPE operating **only
+//! along the feature dimension** of each token — no cross-token computation
+//! — which is what makes skipping the query projection of cached blocks
+//! sound. These implementations preserve that property and mirror the JAX
+//! definitions in `python/compile/model.py` bit-for-bit (same formulas,
+//! same θ for RoPE).
+
+use crate::tensor::Tensor;
+
+/// Token-wise RMSNorm with learned scale `w` (`[d]`): `x / rms(x) * w`.
+pub fn rmsnorm(x: &mut Tensor, w: &[f32], eps: f32) {
+    let d = x.cols();
+    assert_eq!(w.len(), d);
+    for r in 0..x.rows() {
+        let row = x.row_mut(r);
+        let mut ss = 0.0f32;
+        for &v in row.iter() {
+            ss += v * v;
+        }
+        let inv = 1.0 / (ss / d as f32 + eps).sqrt();
+        for (v, &wi) in row.iter_mut().zip(w) {
+            *v = *v * inv * wi;
+        }
+    }
+}
+
+/// LayerNorm without affine parameters (used pre-modulation in adaLN-zero).
+pub fn layernorm(x: &mut Tensor, eps: f32) {
+    let d = x.cols();
+    for r in 0..x.rows() {
+        let row = x.row_mut(r);
+        let mean = row.iter().sum::<f32>() / d as f32;
+        let mut var = 0.0f32;
+        for &v in row.iter() {
+            var += (v - mean) * (v - mean);
+        }
+        var /= d as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        for v in row.iter_mut() {
+            *v = (*v - mean) * inv;
+        }
+    }
+}
+
+/// Rotary positional embedding, 1-D positions, pair convention
+/// `(x[2i], x[2i+1])`, frequency base `theta` (10000 in the model).
+/// `positions[r]` is the absolute position of row `r`.
+pub fn rope(x: &mut Tensor, positions: &[usize], theta: f32) {
+    let d = x.cols();
+    assert_eq!(positions.len(), x.rows());
+    assert_eq!(d % 2, 0, "RoPE needs an even head dim");
+    let half = d / 2;
+    for r in 0..x.rows() {
+        let pos = positions[r] as f32;
+        let row = x.row_mut(r);
+        for i in 0..half {
+            let freq = theta.powf(-2.0 * i as f32 / d as f32);
+            let angle = pos * freq;
+            let (sin, cos) = angle.sin_cos();
+            let (a, b) = (row[2 * i], row[2 * i + 1]);
+            row[2 * i] = a * cos - b * sin;
+            row[2 * i + 1] = a * sin + b * cos;
+        }
+    }
+}
+
+/// Tanh-approximation GELU (matches `jax.nn.gelu` default).
+#[inline]
+pub fn gelu_scalar(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/π)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+pub fn gelu(x: &mut Tensor) {
+    for v in x.data_mut() {
+        *v = gelu_scalar(*v);
+    }
+}
+
+/// SiLU (used on the timestep-conditioning MLP).
+pub fn silu(x: &mut Tensor) {
+    for v in x.data_mut() {
+        *v = *v / (1.0 + (-*v).exp());
+    }
+}
+
+/// adaLN-zero modulation: `x * (1 + scale) + shift`, with `shift`/`scale`
+/// broadcast per feature (`[d]`).
+pub fn modulate(x: &mut Tensor, shift: &[f32], scale: &[f32]) {
+    let d = x.cols();
+    assert_eq!(shift.len(), d);
+    assert_eq!(scale.len(), d);
+    for r in 0..x.rows() {
+        let row = x.row_mut(r);
+        for c in 0..d {
+            row[c] = row[c] * (1.0 + scale[c]) + shift[c];
+        }
+    }
+}
+
+/// Gated residual add: `x += gate ⊙ y` (gate broadcast per feature).
+pub fn gated_add(x: &mut Tensor, gate: &[f32], y: &Tensor) {
+    let d = x.cols();
+    assert_eq!(x.shape(), y.shape());
+    assert_eq!(gate.len(), d);
+    for r in 0..x.rows() {
+        let xr = x.row_mut(r);
+        let yr = y.row(r);
+        for c in 0..d {
+            xr[c] += gate[c] * yr[c];
+        }
+    }
+}
+
+/// In-place row softmax.
+pub fn softmax_rows(x: &mut Tensor) {
+    let d = x.cols();
+    for r in 0..x.rows() {
+        let row = x.row_mut(r);
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut s = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            s += *v;
+        }
+        let inv = 1.0 / s;
+        let _ = d;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{prop_check, randn};
+
+    #[test]
+    fn rmsnorm_unit_scale_gives_unit_rms() {
+        prop_check("rmsnorm rms≈1", 10, |rng| {
+            let mut x = randn(rng, &[4, 16]);
+            rmsnorm(&mut x, &[1.0; 16], 1e-6);
+            for r in 0..4 {
+                let ss: f32 = x.row(r).iter().map(|v| v * v).sum();
+                assert!(((ss / 16.0).sqrt() - 1.0).abs() < 1e-3);
+            }
+        });
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let mut rng = crate::util::rng::Pcg32::seeded(2);
+        let mut x = randn(&mut rng, &[3, 32]);
+        layernorm(&mut x, 1e-6);
+        for r in 0..3 {
+            let mean: f32 = x.row(r).iter().sum::<f32>() / 32.0;
+            let var: f32 = x.row(r).iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 32.0;
+            assert!(mean.abs() < 1e-4);
+            assert!((var - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn rope_preserves_norm_and_is_position_dependent() {
+        let mut rng = crate::util::rng::Pcg32::seeded(3);
+        let x0 = randn(&mut rng, &[2, 8]);
+        let mut a = x0.clone();
+        rope(&mut a, &[0, 5], 10000.0);
+        // Position 0 is the identity rotation.
+        assert_eq!(a.row(0), x0.row(0));
+        // Norm preserved (rotation).
+        let n0: f32 = x0.row(1).iter().map(|v| v * v).sum();
+        let n1: f32 = a.row(1).iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() / n0 < 1e-4);
+        // Different position → different vector.
+        assert!(a.row(1) != x0.row(1));
+    }
+
+    #[test]
+    fn rope_relative_property() {
+        // ⟨rope(q,p1), rope(k,p2)⟩ depends only on p1−p2.
+        let mut rng = crate::util::rng::Pcg32::seeded(4);
+        let q = randn(&mut rng, &[1, 16]);
+        let k = randn(&mut rng, &[1, 16]);
+        let dot = |a: &Tensor, b: &Tensor| -> f32 {
+            a.data().iter().zip(b.data()).map(|(x, y)| x * y).sum()
+        };
+        let mut q1 = q.clone();
+        let mut k1 = k.clone();
+        rope(&mut q1, &[3], 10000.0);
+        rope(&mut k1, &[1], 10000.0);
+        let mut q2 = q.clone();
+        let mut k2 = k.clone();
+        rope(&mut q2, &[10], 10000.0);
+        rope(&mut k2, &[8], 10000.0);
+        assert!((dot(&q1, &k1) - dot(&q2, &k2)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn gelu_fixed_points() {
+        assert!(gelu_scalar(0.0).abs() < 1e-7);
+        assert!((gelu_scalar(10.0) - 10.0).abs() < 1e-4);
+        assert!(gelu_scalar(-10.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn modulate_identity_at_zero() {
+        let mut rng = crate::util::rng::Pcg32::seeded(5);
+        let x0 = randn(&mut rng, &[2, 4]);
+        let mut x = x0.clone();
+        modulate(&mut x, &[0.0; 4], &[0.0; 4]);
+        assert_eq!(x, x0);
+        modulate(&mut x, &[1.0; 4], &[1.0; 4]);
+        for (a, b) in x.data().iter().zip(x0.data()) {
+            assert!((a - (2.0 * b + 1.0)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn softmax_rows_normalized() {
+        let mut rng = crate::util::rng::Pcg32::seeded(6);
+        let mut x = randn(&mut rng, &[5, 9]);
+        softmax_rows(&mut x);
+        for r in 0..5 {
+            let s: f32 = x.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(x.row(r).iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn gated_add_zero_gate_is_noop() {
+        let mut rng = crate::util::rng::Pcg32::seeded(7);
+        let x0 = randn(&mut rng, &[2, 4]);
+        let y = randn(&mut rng, &[2, 4]);
+        let mut x = x0.clone();
+        gated_add(&mut x, &[0.0; 4], &y);
+        assert_eq!(x, x0);
+    }
+}

@@ -1,0 +1,83 @@
+//! Operation counting and the paper's theoretical-speedup formulas.
+//!
+//! The paper reports **TOPS** (`attn / t` — operations of a *standard*
+//! dense attention divided by measured latency) and **Sparsity**
+//! (`skip / total` block pairs). These helpers compute the operation
+//! counts, the Eq. 5 GEMM-O speedup bound, and the normalized TOPS used in
+//! Tables 1–2.
+
+/// FLOPs of one dense attention head: `QKᵀ` + `P·V`, counting one
+/// multiply-add as 2 FLOPs → `4 · n_q · n_kv · d`.
+pub fn attention_flops(n_q: usize, n_kv: usize, d: usize) -> f64 {
+    4.0 * n_q as f64 * n_kv as f64 * d as f64
+}
+
+/// FLOPs of a dense GEMM `m×k×n`.
+pub fn gemm_flops(m: usize, k: usize, n: usize) -> f64 {
+    2.0 * m as f64 * k as f64 * n as f64
+}
+
+/// Theoretical attention speedup at block-pair sparsity `s` (linear law —
+/// the paper's "near-linear, closely matching the sparsity ratio (1:1)").
+pub fn attention_theoretical_speedup(s: f64) -> f64 {
+    1.0 / (1.0 - s).max(1e-9)
+}
+
+/// Eq. 5: amortized GEMM-O speedup over one Update + `N−1` Dispatch steps
+/// at sparsity `s`: `N / (1 + (N−1)(1−s))`.
+///
+/// The Update step always pays the full projection (both stages touch every
+/// tile); each Dispatch step pays only the `(1−s)` computed fraction.
+pub fn gemm_o_theoretical_speedup(interval: usize, s: f64) -> f64 {
+    let n = interval as f64;
+    n / (1.0 + (n - 1.0) * (1.0 - s))
+}
+
+/// Per-step (single Dispatch inference) GEMM-O speedup bound — linear.
+pub fn gemm_o_single_step_speedup(s: f64) -> f64 {
+    1.0 / (1.0 - s).max(1e-9)
+}
+
+/// TOPS metric: standard-attention operation count over latency, scaled to
+/// tera-ops. On this CPU testbed the absolute value is tiny; Tables 1–2
+/// therefore also report it normalized to the dense baseline.
+pub fn tops(standard_flops: f64, seconds: f64) -> f64 {
+    standard_flops / seconds / 1e12
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq5_paper_example() {
+        // §A.1.2: s = 0.9, N = 6 → 6 / (1 + 5·0.1) = 4.
+        let x = gemm_o_theoretical_speedup(6, 0.9);
+        assert!((x - 4.0).abs() < 1e-12, "{x}");
+    }
+
+    #[test]
+    fn eq5_limits() {
+        // s = 0 → no speedup.
+        assert!((gemm_o_theoretical_speedup(6, 0.0) - 1.0).abs() < 1e-12);
+        // s = 1 → speedup = N (only the Update step computes).
+        assert!((gemm_o_theoretical_speedup(6, 1.0) - 6.0).abs() < 1e-12);
+        // Larger N → larger bound at fixed s.
+        assert!(
+            gemm_o_theoretical_speedup(8, 0.9) > gemm_o_theoretical_speedup(4, 0.9)
+        );
+    }
+
+    #[test]
+    fn attention_linear_law() {
+        assert!((attention_theoretical_speedup(0.9) - 10.0).abs() < 1e-6);
+        assert!((attention_theoretical_speedup(0.5) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn counts() {
+        assert_eq!(attention_flops(10, 20, 4), 4.0 * 10.0 * 20.0 * 4.0);
+        assert_eq!(gemm_flops(2, 3, 4), 48.0);
+        assert!((tops(2e12, 2.0) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,291 @@
+//! **FlashOmni GEMM-O** — sparse output projection with the cached bias
+//! `B_c` (§3.5, Observation 3, Eq. 3–4).
+//!
+//! The output projection mixes heads: `Out_i = Σ_h O_i^h W^h`. Splitting
+//! the heads into the computed set `H_i` and the cached complement, the
+//! cached partial sum `B_c[i] = Σ_{h∉H_i} Õ_i^h W^h` commutes with the
+//! element-wise `OP_reuse` (Eq. 4), so it is computed **once at the Update
+//! step** and replayed (optionally Taylor-forecast) at every Dispatch step:
+//!
+//! * [`gemm_o_update`] — two stages: stage 1 projects the tiles that will
+//!   be *cached* during the upcoming Dispatch steps and records them in
+//!   `B_c`; stage 2 projects the always-computed tiles and adds `B_c`,
+//!   producing the exact dense result for the Update step itself.
+//! * [`gemm_o_dispatch`] — initializes the output with (the forecast of)
+//!   `B_c` and projects only the computed tiles.
+//!
+//! This removes the reduction-axis redundancy *and* the need to keep the
+//! per-head cached features `Õ^h` in memory (the attention kernel's
+//! cache-then-reuse branch can terminate without writing).
+
+use crate::kernels::gemm::matmul_into;
+use crate::kernels::gemm_q::GemmStats;
+use crate::symbols::LayerSymbols;
+use crate::tensor::Tensor;
+
+/// Contiguous per-head weight panels for `W_out` (`[H·d_h × d_out]`), so
+/// each tile GEMM reads a dense panel. Build once per layer, reuse.
+#[derive(Clone, Debug)]
+pub struct WeightPanels {
+    pub panels: Vec<Vec<f32>>, // per head: [d_h × d_out]
+    pub d_h: usize,
+    pub d_out: usize,
+}
+
+impl WeightPanels {
+    pub fn new(w: &Tensor, heads: usize) -> Self {
+        let d_in = w.rows();
+        let d_out = w.cols();
+        assert_eq!(d_in % heads, 0);
+        let d_h = d_in / heads;
+        let panels = (0..heads)
+            .map(|h| w.data()[h * d_h * d_out..(h + 1) * d_h * d_out].to_vec())
+            .collect();
+        WeightPanels { panels, d_h, d_out }
+    }
+}
+
+/// Project one `(block, head)` tile: `out[lo..hi] += O_tile · W^h`.
+#[inline]
+fn project_tile(
+    o_cat: &Tensor,
+    panels: &WeightPanels,
+    h: usize,
+    lo: usize,
+    hi: usize,
+    heads: usize,
+    out: &mut [f32],
+) {
+    let d_h = panels.d_h;
+    let d_out = panels.d_out;
+    let d_cat = heads * d_h;
+    // Gather the head's slice of O rows into a contiguous tile.
+    let bq = hi - lo;
+    let mut tile = vec![0.0f32; bq * d_h];
+    for r in 0..bq {
+        tile[r * d_h..(r + 1) * d_h].copy_from_slice(
+            &o_cat.data()[(lo + r) * d_cat + h * d_h..(lo + r) * d_cat + (h + 1) * d_h],
+        );
+    }
+    matmul_into(&tile, &panels.panels[h], &mut out[lo * d_out..hi * d_out], bq, d_h, d_out);
+}
+
+/// Dense output projection baseline.
+pub fn gemm_o_dense(o_cat: &Tensor, w: &Tensor) -> Tensor {
+    crate::kernels::gemm::matmul(o_cat, w)
+}
+
+/// Update-step GEMM-O.
+///
+/// * `o_cat` — `[N × H·d_h]` attention outputs (all heads valid — the
+///   Update step ran full attention),
+/// * `syms` — the symbols that will govern the upcoming Dispatch steps:
+///   tile `(i, h)` with `F(S_c^h, i) = 0` is a *to-be-cached* tile,
+/// * returns `(out, bias)` where `out` is the exact projection for this
+///   step and `bias` is the refreshed `B_c` (`[N × d_out]`).
+pub fn gemm_o_update(
+    o_cat: &Tensor,
+    panels: &WeightPanels,
+    syms: &LayerSymbols,
+    block_q: usize,
+) -> (Tensor, Tensor, GemmStats) {
+    let n = o_cat.rows();
+    let heads = syms.heads.len();
+    let d_out = panels.d_out;
+    let t_q = n.div_ceil(block_q);
+    let mut bias = Tensor::zeros(&[n, d_out]);
+    let mut out = Tensor::zeros(&[n, d_out]);
+    let mut stats = GemmStats { total_tiles: t_q * heads, ..Default::default() };
+
+    for (h, hs) in syms.heads.iter().enumerate() {
+        for bi in 0..t_q {
+            let lo = bi * block_q;
+            let hi = (lo + block_q).min(n);
+            if hs.f(bi) {
+                // Stage 2 tile: always updated during Dispatch.
+                project_tile(o_cat, panels, h, lo, hi, heads, out.data_mut());
+                stats.computed_tiles += 1;
+            } else {
+                // Stage 1 tile: record in the cached bias.
+                project_tile(o_cat, panels, h, lo, hi, heads, bias.data_mut());
+            }
+        }
+    }
+    // The Update step needs the exact dense output: add the bias.
+    out.add_assign(&bias);
+    (out, bias, stats)
+}
+
+/// Stage 1 only: project the *to-be-cached* tiles of `o_cat` into a bias
+/// tensor. Used to build the per-Taylor-order bias stacks (Eq. 4: the
+/// projection commutes with the element-wise forecast, so each finite
+/// difference of `O` is projected separately at the Update step).
+pub fn gemm_o_stage1(
+    o_cat: &Tensor,
+    panels: &WeightPanels,
+    syms: &LayerSymbols,
+    block_q: usize,
+) -> Tensor {
+    let n = o_cat.rows();
+    let heads = syms.heads.len();
+    let d_out = panels.d_out;
+    let t_q = n.div_ceil(block_q);
+    let mut bias = Tensor::zeros(&[n, d_out]);
+    for (h, hs) in syms.heads.iter().enumerate() {
+        for bi in 0..t_q {
+            if hs.f(bi) {
+                continue;
+            }
+            let lo = bi * block_q;
+            let hi = (lo + block_q).min(n);
+            project_tile(o_cat, panels, h, lo, hi, heads, bias.data_mut());
+        }
+    }
+    bias
+}
+
+/// Dispatch-step GEMM-O.
+///
+/// * `o_cat` — `[N × H·d_h]` attention outputs where **only computed tiles
+///   are valid** (cached tiles were never written — that is the point),
+/// * `bias` — `OP_reuse(B_c)`: the (possibly Taylor-forecast) cached bias,
+/// * returns the projected output plus tile statistics.
+pub fn gemm_o_dispatch(
+    o_cat: &Tensor,
+    panels: &WeightPanels,
+    syms: &LayerSymbols,
+    block_q: usize,
+    bias: &Tensor,
+) -> (Tensor, GemmStats) {
+    let n = o_cat.rows();
+    let heads = syms.heads.len();
+    let d_out = panels.d_out;
+    assert_eq!(bias.shape(), &[n, d_out]);
+    let t_q = n.div_ceil(block_q);
+    // "The GEMM-O output space is initialized via OP_reuse" (§3.5).
+    let mut out = bias.clone();
+    let mut stats = GemmStats { total_tiles: t_q * heads, ..Default::default() };
+
+    for (h, hs) in syms.heads.iter().enumerate() {
+        for bi in 0..t_q {
+            if !hs.f(bi) {
+                continue; // cached tile: already inside the bias
+            }
+            stats.computed_tiles += 1;
+            let lo = bi * block_q;
+            let hi = (lo + block_q).min(n);
+            project_tile(o_cat, panels, h, lo, hi, heads, out.data_mut());
+        }
+    }
+    (out, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::symbols::{HeadSymbols, LayerSymbols};
+    use crate::testutil::{assert_close, prop_check, rand_mask, randn};
+
+    fn syms_from_cache_masks(masks: &[Vec<bool>]) -> LayerSymbols {
+        let t_q = masks[0].len();
+        LayerSymbols {
+            heads: masks
+                .iter()
+                .map(|m| HeadSymbols::from_masks(m, &vec![true; t_q * t_q], t_q, 1))
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn update_is_exact_dense_projection() {
+        prop_check("gemm_o_update == dense", 20, |rng| {
+            let n = 16 + rng.below(24);
+            let heads = 1 + rng.below(4);
+            let d_h = 2 + rng.below(6);
+            let d_out = 4 + rng.below(12);
+            let b = 4 + rng.below(8);
+            let t_q = n.div_ceil(b);
+            let o = randn(rng, &[n, heads * d_h]);
+            let w = randn(rng, &[heads * d_h, d_out]);
+            let panels = WeightPanels::new(&w, heads);
+            let masks: Vec<Vec<bool>> =
+                (0..heads).map(|_| rand_mask(rng, t_q, 0.5)).collect();
+            let syms = syms_from_cache_masks(&masks);
+            let (out, _bias, _stats) = gemm_o_update(&o, &panels, &syms, b);
+            assert_close(&out, &gemm_o_dense(&o, &w), 1e-3, 1e-3);
+        });
+    }
+
+    #[test]
+    fn dispatch_equals_dense_when_cached_features_static() {
+        // If cached tiles keep their Update-step values (OP_reuse =
+        // identity), dispatch(bias) must equal the dense projection of the
+        // full O. This is exactly Eq. 3/4 with direct reuse.
+        prop_check("dispatch + bias == dense", 20, |rng| {
+            let n = 16 + rng.below(24);
+            let heads = 1 + rng.below(3);
+            let d_h = 2 + rng.below(6);
+            let d_out = 4 + rng.below(8);
+            let b = 8;
+            let t_q = n.div_ceil(b);
+            let o_full = randn(rng, &[n, heads * d_h]);
+            let w = randn(rng, &[heads * d_h, d_out]);
+            let panels = WeightPanels::new(&w, heads);
+            let masks: Vec<Vec<bool>> =
+                (0..heads).map(|_| rand_mask(rng, t_q, 0.5)).collect();
+            let syms = syms_from_cache_masks(&masks);
+            let (_, bias, _) = gemm_o_update(&o_full, &panels, &syms, b);
+            // Dispatch step: only computed tiles valid; cached tiles zeroed
+            // to prove they are never read.
+            let mut o_partial = o_full.clone();
+            let d_cat = heads * d_h;
+            for (h, m) in masks.iter().enumerate() {
+                for (bi, &compute) in m.iter().enumerate() {
+                    if compute {
+                        continue;
+                    }
+                    let lo = bi * b;
+                    let hi = (lo + b).min(n);
+                    for r in lo..hi {
+                        for c in h * d_h..(h + 1) * d_h {
+                            o_partial.data_mut()[r * d_cat + c] = f32::NAN; // poison
+                        }
+                    }
+                }
+            }
+            let (out, stats) = gemm_o_dispatch(&o_partial, &panels, &syms, b, &bias);
+            assert!(out.data().iter().all(|x| x.is_finite()), "read a poisoned tile");
+            assert_close(&out, &gemm_o_dense(&o_full, &w), 1e-3, 1e-3);
+            let computed: usize =
+                masks.iter().map(|m| m.iter().filter(|&&x| x).count()).sum();
+            assert_eq!(stats.computed_tiles, computed);
+        });
+    }
+
+    #[test]
+    fn all_cached_dispatch_is_pure_bias() {
+        let mut rng = crate::util::rng::Pcg32::seeded(8);
+        let (n, heads, d_h, d_out, b) = (16, 2, 4, 6, 8);
+        let o = randn(&mut rng, &[n, heads * d_h]);
+        let w = randn(&mut rng, &[heads * d_h, d_out]);
+        let panels = WeightPanels::new(&w, heads);
+        let syms = syms_from_cache_masks(&[vec![false; 2], vec![false; 2]]);
+        let (out_u, bias, _) = gemm_o_update(&o, &panels, &syms, b);
+        // Everything cached → bias IS the dense output.
+        assert_close(&bias, &gemm_o_dense(&o, &w), 1e-4, 1e-4);
+        assert_close(&out_u, &bias, 1e-4, 1e-4);
+        let garbage = Tensor::full(&[n, heads * d_h], f32::NAN);
+        let (out_d, stats) = gemm_o_dispatch(&garbage, &panels, &syms, b, &bias);
+        assert_eq!(stats.computed_tiles, 0);
+        assert_close(&out_d, &bias, 0.0, 0.0);
+    }
+
+    #[test]
+    fn weight_panels_layout() {
+        let w = Tensor::from_vec(&[4, 3], (0..12).map(|x| x as f32).collect());
+        let p = WeightPanels::new(&w, 2);
+        assert_eq!(p.d_h, 2);
+        assert_eq!(p.panels[0], vec![0., 1., 2., 3., 4., 5.]);
+        assert_eq!(p.panels[1], vec![6., 7., 8., 9., 10., 11.]);
+    }
+}

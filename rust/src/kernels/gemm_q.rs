@@ -1,0 +1,191 @@
+//! **FlashOmni GEMM-Q** — sparse query projection (§3.5, Observation 2).
+//!
+//! Since RMSNorm and RoPE act token-wise, a Q block that the caching
+//! symbols mark as cached (`F(S_c, i) = 0`) never feeds the attention
+//! computation, so its slice of the query projection `Q_i^h = X_i W^h` can
+//! be skipped entirely. The CTA grid maps to `(row block × head)` tiles;
+//! each tile checks its symbol once and either runs a small GEMM or exits
+//! immediately.
+
+use crate::kernels::gemm::matmul_into;
+use crate::symbols::LayerSymbols;
+use crate::tensor::Tensor;
+
+/// Tile statistics for the sparse GEMMs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GemmStats {
+    pub computed_tiles: usize,
+    pub total_tiles: usize,
+}
+
+impl GemmStats {
+    pub fn sparsity(&self) -> f64 {
+        if self.total_tiles == 0 {
+            return 0.0;
+        }
+        1.0 - self.computed_tiles as f64 / self.total_tiles as f64
+    }
+}
+
+/// Dense projection baseline: `Y = X · W`.
+pub fn gemm_dense(x: &Tensor, w: &Tensor) -> Tensor {
+    crate::kernels::gemm::matmul(x, w)
+}
+
+/// Sparse query projection.
+///
+/// * `x` — `[N × d_in]` input activations,
+/// * `w` — `[d_in × H·d_h]` projection weight (heads concatenated on the
+///   output axis),
+/// * `syms` — per-head symbols; tile `(block i, head h)` is computed iff
+///   `F(S_c^h, i) = 1`.
+///
+/// Rows of skipped tiles are left zero — the attention kernel never reads
+/// them (their CTA takes the cache-then-reuse path). `bias` (`[H·d_h]`),
+/// when given, is added to computed tiles only.
+pub fn gemm_q(
+    x: &Tensor,
+    w: &Tensor,
+    syms: &LayerSymbols,
+    block_q: usize,
+    bias: Option<&[f32]>,
+) -> (Tensor, GemmStats) {
+    let n = x.rows();
+    let d_in = x.cols();
+    let heads = syms.heads.len();
+    assert!(heads > 0);
+    let d_out = w.cols();
+    assert_eq!(w.rows(), d_in);
+    assert_eq!(d_out % heads, 0, "W output dim must split across heads");
+    let d_h = d_out / heads;
+    let t_q = n.div_ceil(block_q);
+    let mut y = Tensor::zeros(&[n, d_out]);
+    let mut stats = GemmStats { total_tiles: t_q * heads, ..Default::default() };
+
+    // Gather W columns per head once (w is row-major, so a head's columns
+    // are strided; copy into a contiguous [d_in × d_h] panel per head).
+    for (h, hs) in syms.heads.iter().enumerate() {
+        let mut w_h = vec![0.0f32; d_in * d_h];
+        for r in 0..d_in {
+            w_h[r * d_h..(r + 1) * d_h]
+                .copy_from_slice(&w.data()[r * d_out + h * d_h..r * d_out + (h + 1) * d_h]);
+        }
+        for bi in 0..t_q {
+            if !hs.f(bi) {
+                continue; // CTA exits immediately (paper: "without any further operations")
+            }
+            stats.computed_tiles += 1;
+            let lo = bi * block_q;
+            let hi = (lo + block_q).min(n);
+            let bq = hi - lo;
+            let mut tile = vec![0.0f32; bq * d_h];
+            matmul_into(&x.data()[lo * d_in..hi * d_in], &w_h, &mut tile, bq, d_in, d_h);
+            if let Some(b) = bias {
+                for row in tile.chunks_exact_mut(d_h) {
+                    for (c, v) in row.iter_mut().enumerate() {
+                        *v += b[h * d_h + c];
+                    }
+                }
+            }
+            for (r, row) in tile.chunks_exact(d_h).enumerate() {
+                y.data_mut()[(lo + r) * d_out + h * d_h..(lo + r) * d_out + (h + 1) * d_h]
+                    .copy_from_slice(row);
+            }
+        }
+    }
+    (y, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::symbols::{HeadSymbols, LayerSymbols};
+    use crate::testutil::{assert_close, prop_check, rand_mask, randn};
+
+    fn layer_syms_from_cache_masks(masks: &[Vec<bool>], kv_groups: usize, pool: usize) -> LayerSymbols {
+        LayerSymbols {
+            heads: masks
+                .iter()
+                .map(|m| {
+                    HeadSymbols::from_masks(m, &vec![true; m.len() * kv_groups], kv_groups, pool)
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn dense_symbols_match_dense_gemm() {
+        let mut rng = crate::util::rng::Pcg32::seeded(1);
+        let (n, d_in, heads, d_h, b) = (32, 12, 3, 4, 8);
+        let x = randn(&mut rng, &[n, d_in]);
+        let w = randn(&mut rng, &[d_in, heads * d_h]);
+        let syms = LayerSymbols::dense(heads, n / b, n / b, 1);
+        let (y, stats) = gemm_q(&x, &w, &syms, b, None);
+        assert_close(&y, &gemm_dense(&x, &w), 1e-4, 1e-4);
+        assert_eq!(stats.sparsity(), 0.0);
+    }
+
+    #[test]
+    fn cached_tiles_stay_zero_and_computed_match() {
+        prop_check("gemm_q partial correctness", 20, |rng| {
+            let n = 16 + rng.below(32);
+            let d_in = 4 + rng.below(12);
+            let heads = 1 + rng.below(4);
+            let d_h = 2 + rng.below(6);
+            let b = 4 + rng.below(8);
+            let t_q = n.div_ceil(b);
+            let x = randn(rng, &[n, d_in]);
+            let w = randn(rng, &[d_in, heads * d_h]);
+            let masks: Vec<Vec<bool>> =
+                (0..heads).map(|_| rand_mask(rng, t_q, 0.6)).collect();
+            let syms = layer_syms_from_cache_masks(&masks, t_q, 1);
+            let (y, stats) = gemm_q(&x, &w, &syms, b, None);
+            let dense = gemm_dense(&x, &w);
+            let d_out = heads * d_h;
+            let mut computed = 0;
+            for h in 0..heads {
+                for bi in 0..t_q {
+                    let lo = bi * b;
+                    let hi = (lo + b).min(n);
+                    for r in lo..hi {
+                        for c in h * d_h..(h + 1) * d_h {
+                            let got = y.data()[r * d_out + c];
+                            if masks[h][bi] {
+                                let want = dense.data()[r * d_out + c];
+                                assert!(
+                                    (got - want).abs() <= 1e-4 + 1e-4 * want.abs(),
+                                    "computed tile mismatch"
+                                );
+                            } else {
+                                assert_eq!(got, 0.0, "cached tile must stay zero");
+                            }
+                        }
+                    }
+                    if masks[h][bi] {
+                        computed += 1;
+                    }
+                }
+            }
+            assert_eq!(stats.computed_tiles, computed);
+        });
+    }
+
+    #[test]
+    fn per_head_independence() {
+        // Head 0 fully cached, head 1 fully computed.
+        let mut rng = crate::util::rng::Pcg32::seeded(2);
+        let (n, d_in, d_h, b) = (16, 8, 4, 8);
+        let x = randn(&mut rng, &[n, d_in]);
+        let w = randn(&mut rng, &[d_in, 2 * d_h]);
+        let syms = layer_syms_from_cache_masks(&[vec![false; 2], vec![true; 2]], 2, 1);
+        let (y, stats) = gemm_q(&x, &w, &syms, b, None);
+        assert_eq!(stats.computed_tiles, 2);
+        for r in 0..n {
+            for c in 0..d_h {
+                assert_eq!(y.data()[r * 2 * d_h + c], 0.0);
+            }
+            let any: f32 = (d_h..2 * d_h).map(|c| y.data()[r * 2 * d_h + c].abs()).sum();
+            assert!(any > 0.0);
+        }
+    }
+}

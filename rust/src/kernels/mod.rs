@@ -1,0 +1,27 @@
+//! Native blocked kernels — the performance twin of the paper's CUDA
+//! kernels (see DESIGN.md §"Dual-engine design").
+//!
+//! One iteration of the outer Q-block loop plays the role of one CTA on the
+//! A100: it decodes the spatial symbol once (`F`), optionally early-exits
+//! into the cache-then-reuse path, and otherwise runs the online-softmax
+//! inner loop with the reduction-axis decode (`J`) deciding which KV tiles
+//! are loaded at all. Work that the symbols mark as skipped is *actually
+//! not executed*, so wall-clock speedups here reproduce the paper's curves.
+//!
+//! Submodules:
+//! * [`gemm`] — tiled dense GEMM primitives (the substrate for everything),
+//! * [`attention`] — dense FlashAttention and the FlashOmni sparse
+//!   attention kernel (Algorithm 1),
+//! * [`gemm_q`] — sparse query projection (spatial-axis skipping, Obs. 2),
+//! * [`gemm_o`] — sparse output projection with the cached bias `B_c`
+//!   (reduction-axis skipping, Obs. 3, two-stage),
+//! * [`elementwise`] — RMSNorm, RoPE, GELU, adaLN modulation, softmax,
+//! * [`flops`] — operation counting and the paper's theoretical-speedup
+//!   formulas (Eq. 5).
+
+pub mod attention;
+pub mod elementwise;
+pub mod flops;
+pub mod gemm;
+pub mod gemm_o;
+pub mod gemm_q;

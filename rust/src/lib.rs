@@ -1,0 +1,55 @@
+//! # FlashOmni — a unified sparse attention engine for Diffusion Transformers
+//!
+//! Reproduction of *FlashOmni: A Unified Sparse Attention Engine for
+//! Diffusion Transformers* (CS.LG 2025) as a three-layer rust + JAX + Pallas
+//! stack. This crate is Layer 3: the engine itself.
+//!
+//! The paper's contribution is reproduced as:
+//!
+//! * [`symbols`] — the compact 8-bit **sparse symbols** `S_c` (feature
+//!   caching, spatial axis) and `S_s` (block-sparse skipping, reduction
+//!   axis), with the bitwise decode functions `F` and `J` of §3.3–3.4.
+//! * [`masks`] — logical block-sparse mask generation from the compressed
+//!   attention map: the `C_{v→t}` / `G_{t→v}` metrics, Eq. 1 selection, and
+//!   the baseline mask families (SpargeAttn-style dynamic, window/arrow
+//!   static).
+//! * [`kernels`] — the **general sparse attention kernel** (Algorithm 1)
+//!   plus **GEMM-Q** / **GEMM-O** with real block skipping, and the dense
+//!   references they are tested against.
+//! * [`cache`] — the feature cache with TaylorSeer order-`D` forecasting and
+//!   the GEMM-O bias cache `B_c`.
+//! * [`engine`] — the **Update–Dispatch** execution engine over denoising
+//!   steps, and every baseline of the paper expressed as a policy emitting
+//!   unified symbols.
+//! * [`model`] / [`diffusion`] — the MiniMMDiT substrate (double-stream
+//!   multimodal DiT) and a rectified-flow sampler.
+//! * [`runtime`] — PJRT loading/execution of the AOT artifacts produced by
+//!   `python/compile/aot.py` (the L2/L1 numerics oracle).
+//! * [`coordinator`] — the serving layer: request queue, shape-bucketing
+//!   batcher, worker pool, latency/throughput accounting.
+//! * [`metrics`] / [`report`] — the paper's quality + efficiency metrics and
+//!   the harness that regenerates every table and figure.
+//!
+//! See `DESIGN.md` for the full experiment index and every substitution made
+//! relative to the paper's A100/FLUX/Hunyuan testbed.
+
+pub mod bench;
+pub mod cache;
+pub mod config;
+pub mod coordinator;
+pub mod diffusion;
+pub mod engine;
+pub mod kernels;
+pub mod masks;
+pub mod metrics;
+pub mod model;
+pub mod report;
+pub mod runtime;
+pub mod symbols;
+pub mod tensor;
+pub mod testutil;
+pub mod trace;
+pub mod util;
+
+/// Crate version string (mirrors `Cargo.toml`).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,302 @@
+//! FlashOmni CLI — the leader entrypoint.
+//!
+//! Subcommands (hand-rolled arg parsing; clap is unavailable offline):
+//!
+//! ```text
+//! flashomni generate  [--weights P] [--policy NAME] [--steps N] [--scene N] [--seed N] [--out img.fot]
+//! flashomni serve     [--weights P] [--requests N] [--rate R] [--workers N] [--batch N] [--policy NAME]
+//! flashomni reproduce [--weights P] [--table 1|2|3|5] [--fig 1|7|9|video] [--all] [--scenes N] [--steps N] [--out DIR]
+//! flashomni inspect   [--weights P] [--scene N] [--steps N]     # symbol/density dump
+//! flashomni selfcheck [--artifacts DIR]                          # PJRT oracle round-trip
+//! ```
+//!
+//! Policies: `full`, `flashomni:tq,tkv,N,D,sq` (e.g. flashomni:0.5,0.15,5,1,0.3),
+//! `taylorseer:N,D`, `fora:N`, `toca:tq,N`, `sparge:l1,l2`, `dfa2:theta`.
+
+use flashomni::config::SparsityConfig;
+use flashomni::coordinator::replay_trace;
+use flashomni::engine::{DiTEngine, Policy};
+use flashomni::model::MiniMMDiT;
+use flashomni::report::Reporter;
+use flashomni::trace::{caption_ids, poisson_trace};
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                out.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                out.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn parse_policy(spec: &str, warmup: usize) -> Result<Policy, String> {
+    let (name, rest) = spec.split_once(':').unwrap_or((spec, ""));
+    let nums: Vec<f64> = rest
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse::<f64>().map_err(|e| format!("bad number '{s}': {e}")))
+        .collect::<Result<_, _>>()?;
+    let get = |i: usize, default: f64| nums.get(i).copied().unwrap_or(default);
+    Ok(match name {
+        "full" => Policy::full(),
+        "flashomni" => Policy::flashomni(SparsityConfig {
+            warmup,
+            ..SparsityConfig::paper(
+                get(0, 0.5),
+                get(1, 0.15),
+                get(2, 5.0) as usize,
+                get(3, 1.0) as usize,
+                get(4, 0.3),
+            )
+        }),
+        "taylorseer" => Policy::taylorseer(get(0, 5.0) as usize, get(1, 1.0) as usize, warmup),
+        "fora" => Policy::fora(get(0, 3.0) as usize, warmup),
+        "toca" => Policy::toca(SparsityConfig {
+            warmup,
+            ..SparsityConfig::paper(get(0, 0.5), 0.0, get(1, 5.0) as usize, 0, 0.0)
+        }),
+        "sparge" => Policy::sparge(get(0, 0.065), get(1, 0.07), warmup),
+        "dfa2" => Policy::dfa2(get(0, 0.2), warmup),
+        other => return Err(format!("unknown policy '{other}'")),
+    })
+}
+
+fn flag<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, default: T) -> T {
+    flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn cmd_generate(flags: HashMap<String, String>) -> Result<(), String> {
+    let weights = flags.get("weights").cloned().unwrap_or("artifacts/weights.fot".into());
+    let model = MiniMMDiT::load(&weights)?;
+    let steps = flag(&flags, "steps", 20usize);
+    let scene = flag(&flags, "scene", 0usize);
+    let seed = flag(&flags, "seed", 0u64);
+    let policy = parse_policy(flags.get("policy").map(|s| s.as_str()).unwrap_or("full"), 4)?;
+    println!(
+        "model: {} params, seq {} | policy: {}",
+        model.param_count(),
+        model.cfg.seq_len(),
+        policy.name()
+    );
+    let ids = caption_ids(scene, model.cfg.text_tokens);
+    let mut engine = DiTEngine::new(model, policy, 8, 8);
+    let r = engine.generate(&ids, seed, steps);
+    println!(
+        "generated in {:.3}s | sparsity {:.1}% | FLOP speedup {:.2}×",
+        r.stats.wall_s,
+        r.stats.attn_sparsity() * 100.0,
+        r.stats.flop_speedup(),
+    );
+    if let Some(out) = flags.get("out") {
+        let mut f = flashomni::util::fot::FotFile::new();
+        f.insert_f32("image", r.image.shape(), r.image.data());
+        f.save(out)?;
+        println!("image tensor written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(flags: HashMap<String, String>) -> Result<(), String> {
+    let weights = flags.get("weights").cloned().unwrap_or("artifacts/weights.fot".into());
+    let model = MiniMMDiT::load(&weights)?;
+    let n = flag(&flags, "requests", 8usize);
+    let rate = flag(&flags, "rate", 2.0f64);
+    let workers = flag(&flags, "workers", 1usize);
+    let batch = flag(&flags, "batch", 4usize);
+    let steps = flag(&flags, "steps", 16usize);
+    let spec = flags.get("policy").cloned().unwrap_or("flashomni:0.5,0.15,5,1,0.3".into());
+    let policy = parse_policy(&spec, 4)?;
+    let trace = poisson_trace(7, n, rate, steps, model.cfg.text_tokens);
+    println!(
+        "serving {n} requests (rate {rate}/s, {workers} workers, batch {batch}, policy {})",
+        policy.name()
+    );
+    let model2 = model.clone();
+    let policy2 = policy.clone();
+    let (_responses, report) = replay_trace(
+        move |_wid| DiTEngine::new(model2.clone(), policy2.clone(), 8, 8),
+        &trace,
+        workers,
+        batch,
+        1.0,
+    );
+    report.print(&policy.name());
+    Ok(())
+}
+
+fn cmd_reproduce(flags: HashMap<String, String>) -> Result<(), String> {
+    let weights = flags.get("weights").cloned().unwrap_or("artifacts/weights.fot".into());
+    let out = flags.get("out").cloned().unwrap_or("reports".into());
+    let scenes = flag(&flags, "scenes", 4usize);
+    let steps = flag(&flags, "steps", 20usize);
+    let r = Reporter::new(&weights, &out, scenes, steps)?;
+    println!(
+        "reproduction harness: {} scenes × {} steps, model {} params",
+        scenes,
+        steps,
+        r.model.param_count()
+    );
+    if flags.contains_key("all") {
+        r.all();
+        return Ok(());
+    }
+    match flags.get("table").map(|s| s.as_str()) {
+        Some("1") => r.table1(),
+        Some("2") => r.table2(),
+        Some("3") => r.table3(),
+        Some("5") => r.table5(),
+        Some(other) => return Err(format!("unknown table '{other}'")),
+        None => {}
+    }
+    match flags.get("fig").map(|s| s.as_str()) {
+        Some("1") => r.fig1(),
+        Some("7") => r.fig7(),
+        Some("9") => r.fig9(),
+        Some("video") => r.video_table(),
+        Some(other) => return Err(format!("unknown fig '{other}'")),
+        None => {}
+    }
+    Ok(())
+}
+
+fn cmd_inspect(flags: HashMap<String, String>) -> Result<(), String> {
+    let weights = flags.get("weights").cloned().unwrap_or("artifacts/weights.fot".into());
+    let model = MiniMMDiT::load(&weights)?;
+    let steps = flag(&flags, "steps", 15usize);
+    let scene = flag(&flags, "scene", 0usize);
+    let spec = flags.get("policy").cloned().unwrap_or("flashomni:0.5,0.15,5,1,0.3".into());
+    let policy = parse_policy(&spec, 4)?;
+    let ids = caption_ids(scene, model.cfg.text_tokens);
+    let mut engine = DiTEngine::new(model, policy, 8, 8);
+    let r = engine.generate(&ids, 0, steps);
+    println!("policy {} | per-step attention density:", engine.policy.name());
+    for (s, d) in r.stats.per_step_density.iter().enumerate() {
+        let bars = (d * 40.0).round() as usize;
+        println!("step {s:>3} {d:>6.3} {}", "#".repeat(bars));
+    }
+    println!(
+        "pairs {}/{} | GEMM-Q tiles {}/{} | GEMM-O tiles {}/{} | cached layer-steps {}/{}",
+        r.stats.attn_computed_pairs,
+        r.stats.attn_total_pairs,
+        r.stats.gq_computed,
+        r.stats.gq_total,
+        r.stats.go_computed,
+        r.stats.go_total,
+        r.stats.cached_layer_steps,
+        r.stats.total_layer_steps
+    );
+    println!(
+        "phase seconds: qkv {:.3} attn {:.3} proj {:.3} mlp {:.3}",
+        r.stats.phase_s[0], r.stats.phase_s[1], r.stats.phase_s[2], r.stats.phase_s[3]
+    );
+    Ok(())
+}
+
+fn cmd_selfcheck(flags: HashMap<String, String>) -> Result<(), String> {
+    let dir = flags.get("artifacts").cloned().unwrap_or("artifacts".into());
+    println!("PJRT self-check against {dir}/ ...");
+    selfcheck(&dir).map_err(|e| format!("{e:#}"))
+}
+
+fn selfcheck(dir: &str) -> anyhow::Result<()> {
+    use flashomni::runtime::{ArtifactRuntime, Input};
+    use flashomni::tensor::Tensor;
+    use flashomni::util::fot::FotFile;
+    let err = anyhow::Error::msg;
+    let mut rt = ArtifactRuntime::cpu(dir)?;
+    println!("platform: {}", rt.platform());
+    let golden = FotFile::load(format!("{dir}/golden.fot")).map_err(err)?;
+    // Attention artifact.
+    rt.load("attention_masked")?;
+    let q = Tensor::from_fot(&golden, "attn.q").map_err(err)?;
+    let k = Tensor::from_fot(&golden, "attn.k").map_err(err)?;
+    let v = Tensor::from_fot(&golden, "attn.v").map_err(err)?;
+    let want = Tensor::from_fot(&golden, "attn.out").map_err(err)?;
+    let s_c: Vec<i32> = golden
+        .get("attn.s_c")
+        .map_err(err)?
+        .to_u8()
+        .map_err(err)?
+        .iter()
+        .map(|&b| b as i32)
+        .collect();
+    let s_s_t = golden.get("attn.s_s").map_err(err)?.clone();
+    let s_s: Vec<i32> =
+        s_s_t.to_u8().map_err(err)?.iter().map(|&b| b as i32).collect();
+    let out = rt.execute(
+        "attention_masked",
+        &[
+            Input::F32(&q),
+            Input::F32(&k),
+            Input::F32(&v),
+            Input::I32(&s_c, &[s_c.len()]),
+            Input::I32(&s_s, &s_s_t.shape),
+        ],
+        &[q.shape()],
+    )?;
+    let diff = out[0].max_abs_diff(&want);
+    anyhow::ensure!(diff < 1e-4, "attention artifact mismatch: {diff}");
+    println!("attention_masked OK (max |diff| = {diff:.2e})");
+    // Full model step.
+    rt.load("mmdit_step")?;
+    let params = flashomni::runtime::load_param_list(dir)?;
+    let ids_raw = golden.get("mmdit.ids").map_err(err)?;
+    let ids: Vec<i32> = ids_raw
+        .data
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    let patches = Tensor::from_fot(&golden, "mmdit.patches").map_err(err)?;
+    let want = Tensor::from_fot(&golden, "mmdit.velocity").map_err(err)?;
+    let got = rt.mmdit_step(&params, &ids, &patches, 0.5, want.shape())?;
+    let diff = got.max_abs_diff(&want);
+    anyhow::ensure!(diff < 1e-3, "mmdit_step artifact mismatch: {diff}");
+    println!("mmdit_step OK (max |diff| = {diff:.2e})");
+    println!("selfcheck passed");
+    Ok(())
+}
+
+fn usage() -> &'static str {
+    "flashomni <generate|serve|reproduce|inspect|selfcheck|version> [--flags]\n\
+     see `rust/src/main.rs` header for the full flag list"
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        eprintln!("{}", usage());
+        return ExitCode::FAILURE;
+    };
+    let flags = parse_flags(&args[1..]);
+    let result = match cmd.as_str() {
+        "generate" => cmd_generate(flags),
+        "serve" => cmd_serve(flags),
+        "reproduce" => cmd_reproduce(flags),
+        "inspect" => cmd_inspect(flags),
+        "selfcheck" => cmd_selfcheck(flags),
+        "version" => {
+            println!("flashomni {}", flashomni::VERSION);
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'\n{}", usage())),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

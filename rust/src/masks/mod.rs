@@ -1,0 +1,414 @@
+//! Logical block-sparse mask generation (§3.3, "Logical Masks Generation").
+//!
+//! At every *Update* step FlashOmni builds a **compressed attention map**:
+//! every `n·b_q` consecutive Q tokens (and `n·b_k` K tokens) are mean-pooled
+//! into a single vector, forming a reduced map
+//! `P̃ = softmax(q̃ k̃ᵀ / √d)` with one entry per (Q-group, KV-group). From
+//! this map the module derives:
+//!
+//! * the **Vision-to-Text Contribution** `C_{i,v→t}` and **Text-to-Vision
+//!   Guidance** `G_{i,t→v}` metrics of Observation 1,
+//! * the Eq. 1 cumulative-threshold selection of cacheable vision blocks
+//!   (`M_c`),
+//! * a SpargeAttn-style block-skip mask (`M_s`) keeping the top probability
+//!   mass per row,
+//! * the static window / arrow patterns used by the DiTFastAttnV2 baseline.
+//!
+//! `true` = compute, `false` = cache/skip, matching [`crate::symbols`].
+
+use crate::tensor::Tensor;
+
+/// A generated pair of logical masks for one head.
+#[derive(Clone, Debug)]
+pub struct MaskSet {
+    /// Per-Q-group caching mask (`M_c`), length `q_groups`.
+    pub m_c: Vec<bool>,
+    /// Row-major `[q_groups × kv_groups]` skip mask (`M_s`).
+    pub m_s: Vec<bool>,
+    pub q_groups: usize,
+    pub kv_groups: usize,
+}
+
+impl MaskSet {
+    /// Dense (no sparsity) masks.
+    pub fn dense(q_groups: usize, kv_groups: usize) -> Self {
+        MaskSet {
+            m_c: vec![true; q_groups],
+            m_s: vec![true; q_groups * kv_groups],
+            q_groups,
+            kv_groups,
+        }
+    }
+}
+
+/// The compressed attention map and the group geometry it was built from.
+#[derive(Clone, Debug)]
+pub struct CompressedMap {
+    /// `P̃` row-major `[q_groups × kv_groups]` (post-softmax).
+    pub p: Vec<f32>,
+    pub q_groups: usize,
+    pub kv_groups: usize,
+    /// Number of groups covering the text prefix (`n_t` in §3.3).
+    pub text_groups: usize,
+}
+
+/// Mean-pool rows of `x` (`[n, d]`) in consecutive groups of `group` rows.
+pub fn pool_rows(x: &Tensor, group: usize) -> Tensor {
+    let (n, d) = (x.rows(), x.cols());
+    let groups = n.div_ceil(group);
+    let mut out = Tensor::zeros(&[groups, d]);
+    for g in 0..groups {
+        let lo = g * group;
+        let hi = ((g + 1) * group).min(n);
+        let dst = out.row_mut(g);
+        for r in lo..hi {
+            let src = x.row(r);
+            for c in 0..d {
+                dst[c] += src[c];
+            }
+        }
+        let inv = 1.0 / (hi - lo) as f32;
+        for v in dst.iter_mut() {
+            *v *= inv;
+        }
+    }
+    out
+}
+
+fn softmax_rows(scores: &mut [f32], rows: usize, cols: usize) {
+    for r in 0..rows {
+        let row = &mut scores[r * cols..(r + 1) * cols];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Build the compressed attention map from one head's Q and K (`[N, d]`).
+/// `group_q`/`group_k` are the pooling sizes `n·b_q` / `n·b_k`;
+/// `text_tokens` is the length of the text prefix.
+pub fn compressed_map(
+    q: &Tensor,
+    k: &Tensor,
+    group_q: usize,
+    group_k: usize,
+    text_tokens: usize,
+) -> CompressedMap {
+    assert_eq!(q.cols(), k.cols(), "Q/K head dims differ");
+    let d = q.cols();
+    let qp = pool_rows(q, group_q);
+    let kp = pool_rows(k, group_k);
+    let (qg, kg) = (qp.rows(), kp.rows());
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut p = vec![0.0f32; qg * kg];
+    for i in 0..qg {
+        let qi = qp.row(i);
+        for j in 0..kg {
+            let kj = kp.row(j);
+            let mut s = 0.0;
+            for c in 0..d {
+                s += qi[c] * kj[c];
+            }
+            p[i * kg + j] = s * scale;
+        }
+    }
+    softmax_rows(&mut p, qg, kg);
+    CompressedMap {
+        p,
+        q_groups: qg,
+        kv_groups: kg,
+        text_groups: text_tokens.div_ceil(group_q),
+    }
+}
+
+/// Observation-1 metrics on the compressed map.
+///
+/// Returns `(C, G)`, each indexed by vision group (0 = first vision group):
+/// * `C[i]` — vision-to-text contribution `Σ_j α_{j,i}` over text rows `j`
+///   of `P̃[:n_t, n_t:]`,
+/// * `G[i]` — text-to-vision guidance `Σ_j β_{j,i}` where `β` is
+///   `softmax(P̃[n_t:, :n_t]ᵀ)` row-normalised over the vision axis.
+pub fn vision_metrics(map: &CompressedMap) -> (Vec<f32>, Vec<f32>) {
+    let nt = map.text_groups;
+    let kg = map.kv_groups;
+    let qg = map.q_groups;
+    let n_vision_cols = kg.saturating_sub(nt);
+    let n_vision_rows = qg.saturating_sub(nt);
+    // C: sum the vision columns of the text rows.
+    let mut c = vec![0.0f32; n_vision_cols];
+    for j in 0..nt.min(qg) {
+        for i in 0..n_vision_cols {
+            c[i] += map.p[j * kg + nt + i];
+        }
+    }
+    // G: take P̃[nt:, :nt]ᵀ → [nt rows × vision cols], softmax rows, sum.
+    let mut beta = vec![0.0f32; nt * n_vision_rows];
+    for t in 0..nt {
+        for v in 0..n_vision_rows {
+            beta[t * n_vision_rows + v] = map.p[(nt + v) * kg + t];
+        }
+    }
+    if n_vision_rows > 0 && nt > 0 {
+        softmax_rows(&mut beta, nt, n_vision_rows);
+    }
+    let mut g = vec![0.0f32; n_vision_rows];
+    for t in 0..nt {
+        for v in 0..n_vision_rows {
+            g[v] += beta[t * n_vision_rows + v];
+        }
+    }
+    (c, g)
+}
+
+/// Eq. 1 selection: choose vision groups to **cache** whose ascending
+/// cumulative `C` and `G` sums both stay within `τ_c` of the respective
+/// totals. Returns the caching mask `M_c` over all q-groups (`true` =
+/// compute; text groups are never cached, per Observation 1).
+pub fn select_cached_blocks(map: &CompressedMap, c: &[f32], g: &[f32], tau_c: f64) -> Vec<bool> {
+    let nt = map.text_groups;
+    let n_vision = map.q_groups - nt;
+    assert_eq!(c.len(), n_vision.min(c.len()));
+    let mut m_c = vec![true; map.q_groups];
+    if tau_c <= 0.0 || n_vision == 0 {
+        return m_c;
+    }
+    let total_c: f64 = c.iter().map(|&x| x as f64).sum();
+    let total_g: f64 = g.iter().map(|&x| x as f64).sum();
+    // Sort vision groups ascending by normalized combined score.
+    let mut order: Vec<usize> = (0..n_vision).collect();
+    let score = |i: usize| -> f64 {
+        let cn = if total_c > 0.0 { c[i] as f64 / total_c } else { 0.0 };
+        let gn = if total_g > 0.0 { g[i] as f64 / total_g } else { 0.0 };
+        cn + gn
+    };
+    order.sort_by(|&a, &b| score(a).partial_cmp(&score(b)).unwrap());
+    let (mut cum_c, mut cum_g) = (0.0f64, 0.0f64);
+    for &i in &order {
+        let nc = cum_c + c[i] as f64;
+        let ng = cum_g + g[i] as f64;
+        if nc <= tau_c * total_c && ng <= tau_c * total_g {
+            cum_c = nc;
+            cum_g = ng;
+            m_c[nt + i] = false; // cached
+        } else {
+            break;
+        }
+    }
+    m_c
+}
+
+/// SpargeAttn-style block-skip selection (§3.3 "token selection follows the
+/// compressed attention map"): per Q-group row, skip the KV groups with the
+/// smallest probabilities whose cumulative mass stays within `τ_kv`; the
+/// diagonal group is always kept.
+pub fn select_skipped_blocks(map: &CompressedMap, tau_kv: f64) -> Vec<bool> {
+    let (qg, kg) = (map.q_groups, map.kv_groups);
+    let mut m_s = vec![true; qg * kg];
+    if tau_kv <= 0.0 {
+        return m_s;
+    }
+    for i in 0..qg {
+        let row = &map.p[i * kg..(i + 1) * kg];
+        let mut order: Vec<usize> = (0..kg).collect();
+        order.sort_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap());
+        let mut cum = 0.0f64;
+        for &j in &order {
+            if j == i.min(kg - 1) {
+                continue; // keep the diagonal block
+            }
+            let nc = cum + row[j] as f64;
+            if nc <= tau_kv {
+                cum = nc;
+                m_s[i * kg + j] = false;
+            } else {
+                break;
+            }
+        }
+    }
+    m_s
+}
+
+/// Full FlashOmni mask generation for one head at an Update step.
+pub fn flashomni_masks(
+    q: &Tensor,
+    k: &Tensor,
+    group_q: usize,
+    group_k: usize,
+    text_tokens: usize,
+    tau_q: f64,
+    tau_kv: f64,
+) -> MaskSet {
+    let map = compressed_map(q, k, group_q, group_k, text_tokens);
+    let (c, g) = vision_metrics(&map);
+    let m_c = select_cached_blocks(&map, &c, &g, tau_q);
+    let m_s = select_skipped_blocks(&map, tau_kv);
+    MaskSet { m_c, m_s, q_groups: map.q_groups, kv_groups: map.kv_groups }
+}
+
+/// Static sliding-window skip mask (DiTFastAttn-style): compute block pairs
+/// with `|i − j| ≤ w`, plus all pairs touching the text prefix.
+pub fn window_mask(q_groups: usize, kv_groups: usize, text_groups: usize, w: usize) -> Vec<bool> {
+    let mut m = vec![false; q_groups * kv_groups];
+    for i in 0..q_groups {
+        for j in 0..kv_groups {
+            let near = i.abs_diff(j) <= w;
+            let text = i < text_groups || j < text_groups;
+            m[i * kv_groups + j] = near || text;
+        }
+    }
+    m
+}
+
+/// Arrow-attention skip mask (DiTFastAttnV2): sliding window plus full
+/// first rows/columns — the "arrow" of global sink tokens.
+pub fn arrow_mask(
+    q_groups: usize,
+    kv_groups: usize,
+    text_groups: usize,
+    w: usize,
+    sink: usize,
+) -> Vec<bool> {
+    let mut m = window_mask(q_groups, kv_groups, text_groups, w);
+    for i in 0..q_groups {
+        for j in 0..kv_groups {
+            if i < sink + text_groups || j < sink + text_groups {
+                m[i * kv_groups + j] = true;
+            }
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{prop_check, randn};
+
+    #[test]
+    fn pool_rows_means() {
+        let x = Tensor::from_vec(&[4, 2], vec![1., 2., 3., 4., 5., 6., 7., 8.]);
+        let p = pool_rows(&x, 2);
+        assert_eq!(p.shape(), &[2, 2]);
+        assert_eq!(p.row(0), &[2.0, 3.0]);
+        assert_eq!(p.row(1), &[6.0, 7.0]);
+    }
+
+    #[test]
+    fn pool_rows_ragged_tail() {
+        let x = Tensor::from_vec(&[3, 1], vec![1., 2., 10.]);
+        let p = pool_rows(&x, 2);
+        assert_eq!(p.shape(), &[2, 1]);
+        assert_eq!(p.row(0), &[1.5]);
+        assert_eq!(p.row(1), &[10.0]);
+    }
+
+    #[test]
+    fn compressed_map_rows_are_distributions() {
+        prop_check("P̃ rows sum to 1", 20, |rng| {
+            let n = 32 + rng.below(64);
+            let d = 8 + rng.below(24);
+            let q = randn(rng, &[n, d]);
+            let k = randn(rng, &[n, d]);
+            let map = compressed_map(&q, &k, 8, 8, 8);
+            for i in 0..map.q_groups {
+                let s: f32 = map.p[i * map.kv_groups..(i + 1) * map.kv_groups].iter().sum();
+                assert!((s - 1.0).abs() < 1e-4, "row {i} sums to {s}");
+            }
+        });
+    }
+
+    #[test]
+    fn eq1_respects_thresholds_and_text() {
+        prop_check("Eq.1 cumsum bound", 20, |rng| {
+            let q = randn(rng, &[64, 16]);
+            let k = randn(rng, &[64, 16]);
+            let map = compressed_map(&q, &k, 8, 8, 8);
+            let (c, g) = vision_metrics(&map);
+            let tau = 0.5;
+            let m_c = select_cached_blocks(&map, &c, &g, tau);
+            // Text groups never cached.
+            for t in 0..map.text_groups {
+                assert!(m_c[t]);
+            }
+            // Cached mass within threshold.
+            let total_c: f64 = c.iter().map(|&x| x as f64).sum();
+            let cached_c: f64 = m_c
+                .iter()
+                .skip(map.text_groups)
+                .zip(&c)
+                .filter(|(m, _)| !**m)
+                .map(|(_, &x)| x as f64)
+                .sum();
+            assert!(cached_c <= tau * total_c + 1e-9);
+        });
+    }
+
+    #[test]
+    fn tau_zero_is_dense() {
+        let mut rng = crate::util::rng::Pcg32::seeded(9);
+        let q = randn(&mut rng, &[32, 8]);
+        let k = randn(&mut rng, &[32, 8]);
+        let m = flashomni_masks(&q, &k, 8, 8, 8, 0.0, 0.0);
+        assert!(m.m_c.iter().all(|&b| b));
+        assert!(m.m_s.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn higher_tau_caches_more() {
+        let mut rng = crate::util::rng::Pcg32::seeded(10);
+        let q = randn(&mut rng, &[128, 16]);
+        let k = randn(&mut rng, &[128, 16]);
+        let lo = flashomni_masks(&q, &k, 8, 8, 8, 0.1, 0.0);
+        let hi = flashomni_masks(&q, &k, 8, 8, 8, 0.8, 0.0);
+        let cached = |m: &MaskSet| m.m_c.iter().filter(|&&b| !b).count();
+        assert!(cached(&hi) >= cached(&lo));
+    }
+
+    #[test]
+    fn skip_mask_keeps_diagonal_and_respects_tau() {
+        let mut rng = crate::util::rng::Pcg32::seeded(11);
+        let q = randn(&mut rng, &[64, 8]);
+        let k = randn(&mut rng, &[64, 8]);
+        let map = compressed_map(&q, &k, 8, 8, 8);
+        let m_s = select_skipped_blocks(&map, 0.3);
+        for i in 0..map.q_groups {
+            assert!(m_s[i * map.kv_groups + i], "diagonal must be kept");
+            let skipped: f64 = (0..map.kv_groups)
+                .filter(|&j| !m_s[i * map.kv_groups + j])
+                .map(|j| map.p[i * map.kv_groups + j] as f64)
+                .sum();
+            assert!(skipped <= 0.3 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn window_and_arrow_shapes() {
+        let w = window_mask(8, 8, 1, 1);
+        // (4,4) on the diagonal: computed; (0,7) text row: computed; (4,7): not.
+        assert!(w[4 * 8 + 4]);
+        assert!(w[7]);
+        assert!(!w[4 * 8 + 7]);
+        let a = arrow_mask(8, 8, 1, 1, 1);
+        assert!(a[4 * 8 + 1], "arrow keeps sink column");
+        assert!(a[1 * 8 + 7], "arrow keeps sink row");
+    }
+
+    #[test]
+    fn metrics_lengths() {
+        let mut rng = crate::util::rng::Pcg32::seeded(12);
+        let q = randn(&mut rng, &[80, 8]);
+        let k = randn(&mut rng, &[80, 8]);
+        let map = compressed_map(&q, &k, 8, 8, 16);
+        let (c, g) = vision_metrics(&map);
+        assert_eq!(map.text_groups, 2);
+        assert_eq!(c.len(), map.kv_groups - 2);
+        assert_eq!(g.len(), map.q_groups - 2);
+    }
+}

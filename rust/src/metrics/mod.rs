@@ -1,0 +1,458 @@
+//! Quality + efficiency metrics for the evaluation harness.
+//!
+//! The paper reports PSNR / SSIM / LPIPS / FID / CLIP-IQA on images and
+//! VBench dimensions on videos, plus TOPS and Sparsity for efficiency.
+//! Proprietary-network metrics are replaced by deterministic random-feature
+//! proxies (DESIGN.md substitution table):
+//!
+//! * **RPIPS** — LPIPS stand-in: L2 distance between unit-normalized
+//!   activations of a fixed-seed random conv pyramid (3 scales × 8
+//!   channels).
+//! * **rFID** — FID stand-in: Fréchet distance between Gaussians fitted to
+//!   fixed random-projection features of each image set.
+//! * **IQA-proxy** — CLIP-IQA stand-in: sharpness/contrast/colorfulness
+//!   statistic mapped to (0, 1).
+//! * video proxies — smoothness, consistency, flicker, style (Gram), same
+//!   spirit as the VBench dimensions the paper quotes.
+//!
+//! Metric *orderings* between methods are the reproduction target, not the
+//! absolute values.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+
+/// Peak-signal-to-noise ratio for images in [-1, 1] (peak = 2).
+pub fn psnr(a: &Tensor, b: &Tensor) -> f64 {
+    assert_eq!(a.shape(), b.shape());
+    let mse: f64 = a
+        .data()
+        .iter()
+        .zip(b.data())
+        .map(|(x, y)| ((x - y) * (x - y)) as f64)
+        .sum::<f64>()
+        / a.numel() as f64;
+    if mse == 0.0 {
+        return f64::INFINITY;
+    }
+    10.0 * (4.0 / mse).log10()
+}
+
+/// Mean SSIM over 8×8 windows (stride 4), luminance-style on each channel.
+pub fn ssim(a: &Tensor, b: &Tensor) -> f64 {
+    assert_eq!(a.shape(), b.shape());
+    let (h, w, c) = (a.shape()[0], a.shape()[1], a.shape()[2]);
+    let win = 8usize.min(h).min(w);
+    let stride = (win / 2).max(1);
+    let (c1, c2) = (0.01f64 * 2.0, 0.03f64 * 2.0);
+    let (c1, c2) = (c1 * c1, c2 * c2);
+    let mut total = 0.0;
+    let mut count = 0usize;
+    let mut y = 0;
+    while y + win <= h {
+        let mut x = 0;
+        while x + win <= w {
+            for ch in 0..c {
+                let (mut ma, mut mb) = (0.0f64, 0.0f64);
+                for dy in 0..win {
+                    for dx in 0..win {
+                        ma += a.data()[((y + dy) * w + x + dx) * c + ch] as f64;
+                        mb += b.data()[((y + dy) * w + x + dx) * c + ch] as f64;
+                    }
+                }
+                let n = (win * win) as f64;
+                ma /= n;
+                mb /= n;
+                let (mut va, mut vb, mut cov) = (0.0f64, 0.0f64, 0.0f64);
+                for dy in 0..win {
+                    for dx in 0..win {
+                        let pa = a.data()[((y + dy) * w + x + dx) * c + ch] as f64 - ma;
+                        let pb = b.data()[((y + dy) * w + x + dx) * c + ch] as f64 - mb;
+                        va += pa * pa;
+                        vb += pb * pb;
+                        cov += pa * pb;
+                    }
+                }
+                va /= n - 1.0;
+                vb /= n - 1.0;
+                cov /= n - 1.0;
+                total += ((2.0 * ma * mb + c1) * (2.0 * cov + c2))
+                    / ((ma * ma + mb * mb + c1) * (va + vb + c2));
+                count += 1;
+            }
+            x += stride;
+        }
+        y += stride;
+    }
+    total / count.max(1) as f64
+}
+
+/// Fixed random conv filter bank (seeded) for RPIPS / style features.
+fn conv_bank(in_c: usize, out_c: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::seeded(seed);
+    let n = out_c * in_c * 9;
+    let scale = (2.0 / (in_c as f32 * 9.0)).sqrt();
+    (0..n).map(|_| rng.normal() * scale).collect()
+}
+
+/// 3×3 conv (stride 1, pad 1) + ReLU.
+fn conv3x3_relu(img: &Tensor, filt: &[f32], out_c: usize) -> Tensor {
+    let (h, w, c) = (img.shape()[0], img.shape()[1], img.shape()[2]);
+    let mut out = Tensor::zeros(&[h, w, out_c]);
+    for y in 0..h {
+        for x in 0..w {
+            for oc in 0..out_c {
+                let mut s = 0.0f32;
+                for dy in 0..3usize {
+                    for dx in 0..3usize {
+                        let yy = y as isize + dy as isize - 1;
+                        let xx = x as isize + dx as isize - 1;
+                        if yy < 0 || xx < 0 || yy >= h as isize || xx >= w as isize {
+                            continue;
+                        }
+                        for ic in 0..c {
+                            s += img.data()[(yy as usize * w + xx as usize) * c + ic]
+                                * filt[((oc * c + ic) * 3 + dy) * 3 + dx];
+                        }
+                    }
+                }
+                out.data_mut()[(y * w + x) * out_c + oc] = s.max(0.0);
+            }
+        }
+    }
+    out
+}
+
+/// 2× average-pool.
+fn avgpool2(img: &Tensor) -> Tensor {
+    let (h, w, c) = (img.shape()[0], img.shape()[1], img.shape()[2]);
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = Tensor::zeros(&[oh, ow, c]);
+    for y in 0..oh {
+        for x in 0..ow {
+            for ch in 0..c {
+                let mut s = 0.0;
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        s += img.data()[((2 * y + dy) * w + 2 * x + dx) * c + ch];
+                    }
+                }
+                out.data_mut()[(y * ow + x) * c + ch] = s / 4.0;
+            }
+        }
+    }
+    out
+}
+
+/// Random-feature pyramid (3 scales × 8 channels), unit-normalized per
+/// position. Shared by RPIPS and the style metric.
+pub fn feature_pyramid(img: &Tensor) -> Vec<Tensor> {
+    const OUT_C: usize = 8;
+    let mut feats = Vec::new();
+    let mut cur = img.clone();
+    for level in 0..3 {
+        let filt = conv_bank(cur.shape()[2], OUT_C, 0xfeed_0000 + level as u64);
+        let mut f = conv3x3_relu(&cur, &filt, OUT_C);
+        // Unit-normalize each spatial position's channel vector.
+        let (h, w, c) = (f.shape()[0], f.shape()[1], f.shape()[2]);
+        for p in 0..h * w {
+            let seg = &mut f.data_mut()[p * c..(p + 1) * c];
+            let norm = (seg.iter().map(|v| v * v).sum::<f32>() + 1e-10).sqrt();
+            for v in seg.iter_mut() {
+                *v /= norm;
+            }
+        }
+        feats.push(f.clone());
+        if level < 2 {
+            cur = avgpool2(&f);
+        }
+    }
+    feats
+}
+
+/// RPIPS — random perceptual distance (LPIPS proxy, lower = closer).
+pub fn rpips(a: &Tensor, b: &Tensor) -> f64 {
+    let fa = feature_pyramid(a);
+    let fb = feature_pyramid(b);
+    let mut total = 0.0;
+    for (x, y) in fa.iter().zip(&fb) {
+        let mut s = 0.0f64;
+        for (u, v) in x.data().iter().zip(y.data()) {
+            s += ((u - v) * (u - v)) as f64;
+        }
+        total += s / (x.shape()[0] * x.shape()[1]) as f64;
+    }
+    total / fa.len() as f64
+}
+
+/// Random-projection image features for rFID (fixed seed, 16-D).
+fn fid_features(img: &Tensor) -> Vec<f64> {
+    const D: usize = 16;
+    // Downsample to 6×6×C via average pooling, flatten, project.
+    let mut cur = img.clone();
+    while cur.shape()[0] > 6 && cur.shape()[0] % 2 == 0 {
+        cur = avgpool2(&cur);
+    }
+    let flat = cur.data();
+    let mut rng = Pcg32::seeded(0xf1d0);
+    let proj: Vec<f32> = (0..flat.len() * D).map(|_| rng.normal()).collect();
+    (0..D)
+        .map(|j| {
+            flat.iter()
+                .enumerate()
+                .map(|(i, &v)| (v * proj[i * D + j]) as f64)
+                .sum::<f64>()
+                / (flat.len() as f64).sqrt()
+        })
+        .collect()
+}
+
+/// rFID — Fréchet distance between diagonal Gaussians fitted to the two
+/// image sets' random-projection features (FID proxy, lower = closer).
+pub fn rfid(set_a: &[Tensor], set_b: &[Tensor]) -> f64 {
+    assert!(!set_a.is_empty() && !set_b.is_empty());
+    let fa: Vec<Vec<f64>> = set_a.iter().map(fid_features).collect();
+    let fb: Vec<Vec<f64>> = set_b.iter().map(fid_features).collect();
+    let d = fa[0].len();
+    let stats = |fs: &[Vec<f64>]| -> (Vec<f64>, Vec<f64>) {
+        let n = fs.len() as f64;
+        let mu: Vec<f64> = (0..d).map(|j| fs.iter().map(|f| f[j]).sum::<f64>() / n).collect();
+        let var: Vec<f64> = (0..d)
+            .map(|j| fs.iter().map(|f| (f[j] - mu[j]).powi(2)).sum::<f64>() / n.max(2.0))
+            .collect();
+        (mu, var)
+    };
+    let (mu_a, var_a) = stats(&fa);
+    let (mu_b, var_b) = stats(&fb);
+    let mut fid = 0.0;
+    for j in 0..d {
+        fid += (mu_a[j] - mu_b[j]).powi(2)
+            + var_a[j]
+            + var_b[j]
+            - 2.0 * (var_a[j] * var_b[j]).sqrt();
+    }
+    fid
+}
+
+/// CLIP-IQA proxy: sharpness (gradient energy) + contrast + colorfulness,
+/// squashed to (0, 1).
+pub fn iqa_proxy(img: &Tensor) -> f64 {
+    let (h, w, c) = (img.shape()[0], img.shape()[1], img.shape()[2]);
+    let mut grad = 0.0f64;
+    for y in 0..h - 1 {
+        for x in 0..w - 1 {
+            for ch in 0..c {
+                let v = img.data()[(y * w + x) * c + ch];
+                let vx = img.data()[(y * w + x + 1) * c + ch];
+                let vy = img.data()[((y + 1) * w + x) * c + ch];
+                grad += (((vx - v).abs() + (vy - v).abs()) / 2.0) as f64;
+            }
+        }
+    }
+    grad /= ((h - 1) * (w - 1) * c) as f64;
+    let mean: f64 = img.data().iter().map(|&v| v as f64).sum::<f64>() / img.numel() as f64;
+    let var: f64 =
+        img.data().iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / img.numel() as f64;
+    let score = 2.0 * grad + var.sqrt();
+    score / (1.0 + score)
+}
+
+// ------------------------------------------------------------- video --
+
+/// Motion-smoothness proxy: 1 − mean |f_{t+1} − f_t| / 2 (higher = smoother),
+/// scaled ×100 like VBench.
+pub fn smoothness(frames: &[Tensor]) -> f64 {
+    if frames.len() < 2 {
+        return 100.0;
+    }
+    let mut acc = 0.0;
+    for wpair in frames.windows(2) {
+        let d: f64 = wpair[0]
+            .data()
+            .iter()
+            .zip(wpair[1].data())
+            .map(|(a, b)| ((a - b).abs() / 2.0) as f64)
+            .sum::<f64>()
+            / wpair[0].numel() as f64;
+        acc += d;
+    }
+    100.0 * (1.0 - acc / (frames.len() - 1) as f64)
+}
+
+/// Background-consistency proxy: mean correlation of border pixels across
+/// frames (×100).
+pub fn consistency(frames: &[Tensor]) -> f64 {
+    if frames.len() < 2 {
+        return 100.0;
+    }
+    let border = |img: &Tensor| -> Vec<f32> {
+        let (h, w, c) = (img.shape()[0], img.shape()[1], img.shape()[2]);
+        let mut v = Vec::new();
+        for x in 0..w {
+            for ch in 0..c {
+                v.push(img.data()[x * c + ch]);
+                v.push(img.data()[((h - 1) * w + x) * c + ch]);
+            }
+        }
+        for y in 0..h {
+            for ch in 0..c {
+                v.push(img.data()[(y * w) * c + ch]);
+                v.push(img.data()[(y * w + w - 1) * c + ch]);
+            }
+        }
+        v
+    };
+    let corr = |a: &[f32], b: &[f32]| -> f64 {
+        let n = a.len() as f64;
+        let ma = a.iter().map(|&x| x as f64).sum::<f64>() / n;
+        let mb = b.iter().map(|&x| x as f64).sum::<f64>() / n;
+        let (mut num, mut da, mut db) = (0.0, 0.0, 0.0);
+        for (x, y) in a.iter().zip(b) {
+            num += (*x as f64 - ma) * (*y as f64 - mb);
+            da += (*x as f64 - ma).powi(2);
+            db += (*y as f64 - mb).powi(2);
+        }
+        num / (da.sqrt() * db.sqrt() + 1e-12)
+    };
+    let b0 = border(&frames[0]);
+    let mut acc = 0.0;
+    for f in &frames[1..] {
+        acc += corr(&b0, &border(f));
+    }
+    100.0 * (acc / (frames.len() - 1) as f64).clamp(0.0, 1.0)
+}
+
+/// Temporal-flicker proxy: 100 × (1 − high-frequency energy of the mean
+/// intensity across frames).
+pub fn flicker(frames: &[Tensor]) -> f64 {
+    if frames.len() < 3 {
+        return 100.0;
+    }
+    let means: Vec<f64> = frames
+        .iter()
+        .map(|f| f.data().iter().map(|&v| v as f64).sum::<f64>() / f.numel() as f64)
+        .collect();
+    let mut hf = 0.0;
+    for w in means.windows(3) {
+        hf += (w[0] - 2.0 * w[1] + w[2]).abs();
+    }
+    hf /= (means.len() - 2) as f64;
+    100.0 * (1.0 - hf.min(1.0))
+}
+
+/// Style-coherence proxy: mean cosine similarity of Gram matrices of the
+/// level-0 random features between consecutive frames (0–1 scale, like the
+/// paper's ~0.24 "Style" column it is only comparable within a table).
+pub fn style(frames: &[Tensor]) -> f64 {
+    if frames.len() < 2 {
+        return 1.0;
+    }
+    let gram = |img: &Tensor| -> Vec<f64> {
+        let f = &feature_pyramid(img)[0];
+        let (h, w, c) = (f.shape()[0], f.shape()[1], f.shape()[2]);
+        let mut g = vec![0.0f64; c * c];
+        for p in 0..h * w {
+            for i in 0..c {
+                for j in 0..c {
+                    g[i * c + j] +=
+                        (f.data()[p * c + i] * f.data()[p * c + j]) as f64;
+                }
+            }
+        }
+        let n = (h * w) as f64;
+        g.iter_mut().for_each(|v| *v /= n);
+        g
+    };
+    let cos = |a: &[f64], b: &[f64]| -> f64 {
+        let num: f64 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+        let da: f64 = a.iter().map(|x| x * x).sum::<f64>().sqrt();
+        let db: f64 = b.iter().map(|x| x * x).sum::<f64>().sqrt();
+        num / (da * db + 1e-12)
+    };
+    let grams: Vec<Vec<f64>> = frames.iter().map(gram).collect();
+    let mut acc = 0.0;
+    for w in grams.windows(2) {
+        acc += cos(&w[0], &w[1]);
+    }
+    // Scale to the paper's ~0.24 magnitude band for table familiarity.
+    0.25 * acc / (frames.len() - 1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::randn;
+    use crate::util::rng::Pcg32;
+
+    fn img(seed: u64) -> Tensor {
+        let mut rng = Pcg32::seeded(seed);
+        let mut t = randn(&mut rng, &[24, 24, 3]);
+        for v in t.data_mut() {
+            *v = v.clamp(-1.0, 1.0);
+        }
+        t
+    }
+
+    #[test]
+    fn psnr_identity_and_ordering() {
+        let a = img(1);
+        assert!(psnr(&a, &a).is_infinite());
+        let mut near = a.clone();
+        near.data_mut()[0] += 0.05;
+        let far = img(2);
+        assert!(psnr(&a, &near) > psnr(&a, &far));
+    }
+
+    #[test]
+    fn ssim_bounds_and_identity() {
+        let a = img(3);
+        let s = ssim(&a, &a);
+        assert!((s - 1.0).abs() < 1e-9, "{s}");
+        let s2 = ssim(&a, &img(4));
+        assert!(s2 < s && s2 > -1.0);
+    }
+
+    #[test]
+    fn rpips_identity_zero_and_ordering() {
+        let a = img(5);
+        assert!(rpips(&a, &a) < 1e-12);
+        let mut near = a.clone();
+        for v in near.data_mut().iter_mut().take(20) {
+            *v += 0.02;
+        }
+        assert!(rpips(&a, &near) < rpips(&a, &img(6)));
+    }
+
+    #[test]
+    fn rfid_same_set_near_zero() {
+        let set: Vec<Tensor> = (0..6).map(img).collect();
+        let f = rfid(&set, &set);
+        assert!(f.abs() < 1e-9, "{f}");
+        let other: Vec<Tensor> = (10..16).map(img).collect();
+        assert!(rfid(&set, &other) > f);
+    }
+
+    #[test]
+    fn iqa_in_unit_interval() {
+        let v = iqa_proxy(&img(7));
+        assert!(v > 0.0 && v < 1.0);
+    }
+
+    #[test]
+    fn video_metrics_identical_frames() {
+        let f = img(8);
+        let frames = vec![f.clone(), f.clone(), f.clone(), f];
+        assert!((smoothness(&frames) - 100.0).abs() < 1e-9);
+        assert!(consistency(&frames) > 99.0);
+        assert!((flicker(&frames) - 100.0).abs() < 1e-9);
+        assert!(style(&frames) > 0.2);
+    }
+
+    #[test]
+    fn video_metrics_penalize_noise() {
+        let frames: Vec<Tensor> = (0..4).map(|i| img(20 + i)).collect();
+        let f0 = img(8);
+        let stable = vec![f0.clone(), f0.clone(), f0.clone(), f0];
+        assert!(smoothness(&frames) < smoothness(&stable));
+        assert!(flicker(&frames) <= flicker(&stable));
+    }
+}

@@ -1,0 +1,414 @@
+//! MMDiT block building blocks, shared between the dense reference path
+//! and the FlashOmni sparse engine.
+//!
+//! The attention stage is factored so the engine can substitute sparse
+//! kernels tile-by-tile:
+//!
+//! ```text
+//! x ──LN──modulate──► x_mod ──GEMM-Q/K/V──► q,k,v ──headwise RMS+RoPE──►
+//!   joint attention per head ──► O_cat ──GEMM-O──► attn_out
+//!   x += gate₁ ⊙ attn_out ;  x += gate₂ ⊙ MLP(modulate(LN(x)))
+//! ```
+
+use crate::config::ModelConfig;
+use crate::kernels::attention::attention_dense;
+use crate::kernels::elementwise::{gated_add, gelu, layernorm, modulate, rope, silu};
+use crate::kernels::gemm::matmul;
+use crate::model::{BlockWeights, StreamWeights, Weights};
+use crate::tensor::Tensor;
+
+/// RoPE frequency base (matches the JAX model).
+pub const ROPE_THETA: f32 = 10_000.0;
+/// LayerNorm epsilon.
+pub const LN_EPS: f32 = 1e-6;
+/// RMSNorm epsilon.
+pub const RMS_EPS: f32 = 1e-6;
+
+/// `y = x·W + b`.
+pub fn linear(x: &Tensor, w: &Tensor, b: &[f32]) -> Tensor {
+    let mut y = matmul(x, w);
+    let d = y.cols();
+    assert_eq!(b.len(), d);
+    for r in 0..y.rows() {
+        let row = y.row_mut(r);
+        for c in 0..d {
+            row[c] += b[c];
+        }
+    }
+    y
+}
+
+/// Sinusoidal timestep features (dim = model dim; `t` scaled by 1000).
+pub fn timestep_features(cfg: &ModelConfig, t: f64) -> Vec<f32> {
+    let d = cfg.dim;
+    let half = d / 2;
+    let ts = (t * 1000.0) as f32;
+    let mut out = vec![0.0f32; d];
+    for i in 0..half {
+        let freq = (-(10_000.0f32).ln() * i as f32 / half as f32).exp();
+        out[i] = (ts * freq).cos();
+        out[half + i] = (ts * freq).sin();
+    }
+    out
+}
+
+/// Timestep conditioning vector `c = W₂·silu(W₁·sin_emb + b₁) + b₂`.
+pub fn timestep_conditioning(w: &Weights, cfg: &ModelConfig, t: f64) -> Vec<f32> {
+    let emb = Tensor::from_vec(&[1, cfg.dim], timestep_features(cfg, t));
+    let mut h = linear(&emb, &w.time_w1, &w.time_b1);
+    silu(&mut h);
+    linear(&h, &w.time_w2, &w.time_b2).into_vec()
+}
+
+/// adaLN-zero: project `silu(c)` to 6 per-feature vectors
+/// `(shift1, scale1, gate1, shift2, scale2, gate2)`.
+pub fn adaln6(sw: &StreamWeights, cvec: &[f32]) -> [Vec<f32>; 6] {
+    let d = cvec.len();
+    let mut c = Tensor::from_vec(&[1, d], cvec.to_vec());
+    silu(&mut c);
+    let a = linear(&c, &sw.ada_w, &sw.ada_b).into_vec();
+    let chunk = |i: usize| a[i * d..(i + 1) * d].to_vec();
+    [chunk(0), chunk(1), chunk(2), chunk(3), chunk(4), chunk(5)]
+}
+
+/// Final-layer adaLN: `(shift, scale)`.
+pub fn adaln2(w: &Weights, cvec: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let d = cvec.len();
+    let mut c = Tensor::from_vec(&[1, d], cvec.to_vec());
+    silu(&mut c);
+    let a = linear(&c, &w.final_ada_w, &w.final_ada_b).into_vec();
+    (a[..d].to_vec(), a[d..].to_vec())
+}
+
+/// Headwise RMSNorm: normalize each `[head_dim]` slice of every row and
+/// multiply by the learned scale.
+pub fn headwise_rmsnorm(x: &mut Tensor, heads: usize, scale: &[f32]) {
+    let d = x.cols();
+    assert_eq!(d % heads, 0);
+    let hd = d / heads;
+    assert_eq!(scale.len(), hd);
+    for r in 0..x.rows() {
+        let row = x.row_mut(r);
+        for h in 0..heads {
+            let seg = &mut row[h * hd..(h + 1) * hd];
+            let mut ss = 0.0f32;
+            for &v in seg.iter() {
+                ss += v * v;
+            }
+            let inv = 1.0 / (ss / hd as f32 + RMS_EPS).sqrt();
+            for (v, &s) in seg.iter_mut().zip(scale) {
+                *v = *v * inv * s;
+            }
+        }
+    }
+}
+
+/// Headwise RoPE: rotate each `[head_dim]` slice with 1-D positions.
+pub fn headwise_rope(x: &mut Tensor, heads: usize, positions: &[usize]) {
+    let d = x.cols();
+    let hd = d / heads;
+    let n = x.rows();
+    assert_eq!(positions.len(), n);
+    // Reuse the single-head rope on per-head temporaries.
+    let mut tmp = Tensor::zeros(&[n, hd]);
+    for h in 0..heads {
+        for r in 0..n {
+            tmp.row_mut(r).copy_from_slice(&x.row(r)[h * hd..(h + 1) * hd]);
+        }
+        rope(&mut tmp, positions, ROPE_THETA);
+        for r in 0..n {
+            x.row_mut(r)[h * hd..(h + 1) * hd].copy_from_slice(tmp.row(r));
+        }
+    }
+}
+
+/// Vertically stack two `[·, d]` tensors.
+pub fn vstack(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.cols(), b.cols());
+    let mut data = Vec::with_capacity(a.numel() + b.numel());
+    data.extend_from_slice(a.data());
+    data.extend_from_slice(b.data());
+    Tensor::from_vec(&[a.rows() + b.rows(), a.cols()], data)
+}
+
+/// Split rows `[0, t)` and `[t, n)`.
+pub fn vsplit(x: &Tensor, t: usize) -> (Tensor, Tensor) {
+    let d = x.cols();
+    let n = x.rows();
+    (
+        Tensor::from_vec(&[t, d], x.data()[..t * d].to_vec()),
+        Tensor::from_vec(&[n - t, d], x.data()[t * d..].to_vec()),
+    )
+}
+
+/// Copy head `h` of `[n × heads·hd]` into a contiguous `[n × hd]` tensor.
+pub fn extract_head(x: &Tensor, heads: usize, h: usize) -> Tensor {
+    let d = x.cols();
+    let hd = d / heads;
+    let n = x.rows();
+    let mut out = Tensor::zeros(&[n, hd]);
+    for r in 0..n {
+        out.row_mut(r).copy_from_slice(&x.row(r)[h * hd..(h + 1) * hd]);
+    }
+    out
+}
+
+/// Write head `h` back into the concatenated layout.
+pub fn insert_head(dst: &mut Tensor, src: &Tensor, heads: usize, h: usize) {
+    let d = dst.cols();
+    let hd = d / heads;
+    for r in 0..dst.rows() {
+        dst.row_mut(r)[h * hd..(h + 1) * hd].copy_from_slice(src.row(r));
+    }
+}
+
+/// Pre-attention stage shared by dense and sparse paths: LN + modulate per
+/// stream, returning the modulated streams and the adaLN parameter sets.
+pub struct PreAttn {
+    pub txt_mod: Tensor,
+    pub img_mod: Tensor,
+    pub ada_txt: [Vec<f32>; 6],
+    pub ada_img: [Vec<f32>; 6],
+}
+
+pub fn pre_attention(
+    bw: &BlockWeights,
+    cvec: &[f32],
+    txt: &Tensor,
+    img: &Tensor,
+) -> PreAttn {
+    let ada_txt = adaln6(&bw.txt, cvec);
+    let ada_img = adaln6(&bw.img, cvec);
+    let mut txt_mod = txt.clone();
+    layernorm(&mut txt_mod, LN_EPS);
+    modulate(&mut txt_mod, &ada_txt[0], &ada_txt[1]);
+    let mut img_mod = img.clone();
+    layernorm(&mut img_mod, LN_EPS);
+    modulate(&mut img_mod, &ada_img[0], &ada_img[1]);
+    PreAttn { txt_mod, img_mod, ada_txt, ada_img }
+}
+
+/// Project + normalize + rotate the joint Q/K/V from modulated streams
+/// (dense path — the sparse engine uses GEMM-Q for the query instead).
+pub fn qkv_joint(
+    bw: &BlockWeights,
+    cfg: &ModelConfig,
+    txt_mod: &Tensor,
+    img_mod: &Tensor,
+) -> (Tensor, Tensor, Tensor) {
+    let heads = cfg.heads;
+    let mut q_t = linear(txt_mod, &bw.txt.wq, &bw.txt.bq);
+    let mut k_t = linear(txt_mod, &bw.txt.wk, &bw.txt.bk);
+    let v_t = linear(txt_mod, &bw.txt.wv, &bw.txt.bv);
+    let mut q_i = linear(img_mod, &bw.img.wq, &bw.img.bq);
+    let mut k_i = linear(img_mod, &bw.img.wk, &bw.img.bk);
+    let v_i = linear(img_mod, &bw.img.wv, &bw.img.bv);
+    headwise_rmsnorm(&mut q_t, heads, &bw.txt.q_rms);
+    headwise_rmsnorm(&mut k_t, heads, &bw.txt.k_rms);
+    headwise_rmsnorm(&mut q_i, heads, &bw.img.q_rms);
+    headwise_rmsnorm(&mut k_i, heads, &bw.img.k_rms);
+    let mut q = vstack(&q_t, &q_i);
+    let mut k = vstack(&k_t, &k_i);
+    let v = vstack(&v_t, &v_i);
+    let positions: Vec<usize> = (0..cfg.seq_len()).collect();
+    headwise_rope(&mut q, heads, &positions);
+    headwise_rope(&mut k, heads, &positions);
+    (q, k, v)
+}
+
+/// Normalize + rotate an already-projected joint Q (sparse GEMM-Q path).
+/// Cached rows hold zeros; RMS-norm of a zero vector stays zero (eps), and
+/// RoPE is a rotation, so cached rows remain zero and are never read.
+pub fn norm_rope_joint_q(
+    q: &mut Tensor,
+    bw: &BlockWeights,
+    cfg: &ModelConfig,
+    text_rows: usize,
+) {
+    let heads = cfg.heads;
+    let (mut q_t, mut q_i) = vsplit(q, text_rows);
+    headwise_rmsnorm(&mut q_t, heads, &bw.txt.q_rms);
+    headwise_rmsnorm(&mut q_i, heads, &bw.img.q_rms);
+    *q = vstack(&q_t, &q_i);
+    let positions: Vec<usize> = (0..cfg.seq_len()).collect();
+    headwise_rope(q, heads, &positions);
+}
+
+/// Dense joint attention over all heads → concatenated `[N × dim]` output.
+pub fn joint_attention_dense(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    heads: usize,
+    block: usize,
+) -> Tensor {
+    let mut o = Tensor::zeros(&[q.rows(), q.cols()]);
+    for h in 0..heads {
+        let qh = extract_head(q, heads, h);
+        let kh = extract_head(k, heads, h);
+        let vh = extract_head(v, heads, h);
+        let oh = attention_dense(&qh, &kh, &vh, block, block);
+        insert_head(&mut o, &oh, heads, h);
+    }
+    o
+}
+
+/// Post-attention stage: per-stream output projection + gated residual.
+pub fn post_attention(
+    bw: &BlockWeights,
+    pre: &PreAttn,
+    o_cat: &Tensor,
+    txt: &mut Tensor,
+    img: &mut Tensor,
+) {
+    let t = txt.rows();
+    let (o_t, o_i) = vsplit(o_cat, t);
+    let attn_t = linear(&o_t, &bw.txt.wo, &bw.txt.bo);
+    let attn_i = linear(&o_i, &bw.img.wo, &bw.img.bo);
+    gated_add(txt, &pre.ada_txt[2], &attn_t);
+    gated_add(img, &pre.ada_img[2], &attn_i);
+}
+
+/// Per-stream MLP with adaLN modulation and gated residual.
+pub fn mlp_stream(sw: &StreamWeights, ada: &[Vec<f32>; 6], x: &mut Tensor) {
+    let mut h = x.clone();
+    layernorm(&mut h, LN_EPS);
+    modulate(&mut h, &ada[3], &ada[4]);
+    let mut y = linear(&h, &sw.mlp_w1, &sw.mlp_b1);
+    gelu(&mut y);
+    let y = linear(&y, &sw.mlp_w2, &sw.mlp_b2);
+    gated_add(x, &ada[5], &y);
+}
+
+/// Full dense block (the reference executor).
+pub fn block_dense(
+    bw: &BlockWeights,
+    cfg: &ModelConfig,
+    cvec: &[f32],
+    txt: &mut Tensor,
+    img: &mut Tensor,
+) {
+    let pre = pre_attention(bw, cvec, txt, img);
+    let (q, k, v) = qkv_joint(bw, cfg, &pre.txt_mod, &pre.img_mod);
+    let o = joint_attention_dense(&q, &k, &v, cfg.heads, 16);
+    post_attention(bw, &pre, &o, txt, img);
+    mlp_stream(&bw.txt, &pre.ada_txt, txt);
+    mlp_stream(&bw.img, &pre.ada_img, img);
+}
+
+/// Final layer: LN + modulate + decode to per-patch velocity.
+pub fn final_layer(w: &Weights, _cfg: &ModelConfig, cvec: &[f32], img: &Tensor) -> Tensor {
+    let (shift, scale) = adaln2(w, cvec);
+    let mut h = img.clone();
+    layernorm(&mut h, LN_EPS);
+    modulate(&mut h, &shift, &scale);
+    linear(&h, &w.final_w, &w.final_b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::Weights;
+    use crate::testutil::{assert_close, randn};
+    use crate::util::rng::Pcg32;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            dim: 32,
+            heads: 2,
+            layers: 1,
+            text_tokens: 4,
+            patch_h: 4,
+            patch_w: 4,
+            patch_size: 2,
+            channels: 3,
+            mlp_ratio: 2,
+            vocab: 16,
+        }
+    }
+
+    #[test]
+    fn vstack_vsplit_roundtrip() {
+        let mut rng = Pcg32::seeded(1);
+        let a = randn(&mut rng, &[3, 5]);
+        let b = randn(&mut rng, &[7, 5]);
+        let s = vstack(&a, &b);
+        let (a2, b2) = vsplit(&s, 3);
+        assert_eq!(a, a2);
+        assert_eq!(b, b2);
+    }
+
+    #[test]
+    fn head_extract_insert_roundtrip() {
+        let mut rng = Pcg32::seeded(2);
+        let x = randn(&mut rng, &[5, 8]);
+        let mut y = Tensor::zeros(&[5, 8]);
+        for h in 0..2 {
+            let xh = extract_head(&x, 2, h);
+            assert_eq!(xh.shape(), &[5, 4]);
+            insert_head(&mut y, &xh, 2, h);
+        }
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn qkv_matches_norm_rope_on_gemm_q_output() {
+        // The sparse path (project → norm_rope_joint_q) must equal the
+        // dense path when no tile is skipped.
+        let cfg = cfg();
+        let w = Weights::random(&cfg, 5);
+        let bw = &w.blocks[0];
+        let mut rng = Pcg32::seeded(3);
+        let txt_mod = randn(&mut rng, &[cfg.text_tokens, cfg.dim]);
+        let img_mod = randn(&mut rng, &[cfg.vision_tokens(), cfg.dim]);
+        let (q_dense, _, _) = qkv_joint(bw, &cfg, &txt_mod, &img_mod);
+        let q_t = linear(&txt_mod, &bw.txt.wq, &bw.txt.bq);
+        let q_i = linear(&img_mod, &bw.img.wq, &bw.img.bq);
+        let mut q_sparse = vstack(&q_t, &q_i);
+        norm_rope_joint_q(&mut q_sparse, bw, &cfg, cfg.text_tokens);
+        assert_close(&q_sparse, &q_dense, 1e-5, 1e-5);
+    }
+
+    #[test]
+    fn zero_rows_stay_zero_through_norm_rope() {
+        let cfg = cfg();
+        let w = Weights::random(&cfg, 6);
+        let bw = &w.blocks[0];
+        let n = cfg.seq_len();
+        let mut q = Tensor::zeros(&[n, cfg.dim]);
+        // Fill only the text rows; vision rows (as if cached) stay zero.
+        let mut rng = Pcg32::seeded(4);
+        for r in 0..cfg.text_tokens {
+            for c in 0..cfg.dim {
+                q.row_mut(r)[c] = rng.normal();
+            }
+        }
+        norm_rope_joint_q(&mut q, bw, &cfg, cfg.text_tokens);
+        for r in cfg.text_tokens..n {
+            assert!(q.row(r).iter().all(|&x| x == 0.0), "row {r} not zero");
+        }
+    }
+
+    #[test]
+    fn timestep_features_distinct() {
+        let cfg = cfg();
+        let a = timestep_features(&cfg, 0.1);
+        let b = timestep_features(&cfg, 0.9);
+        assert_ne!(a, b);
+        assert_eq!(a.len(), cfg.dim);
+    }
+
+    #[test]
+    fn block_dense_finite_and_text_vision_coupled() {
+        let cfg = cfg();
+        let w = Weights::random(&cfg, 7);
+        let mut rng = Pcg32::seeded(5);
+        let mut txt = randn(&mut rng, &[cfg.text_tokens, cfg.dim]);
+        let mut img = randn(&mut rng, &[cfg.vision_tokens(), cfg.dim]);
+        let img0 = img.clone();
+        let cvec = vec![0.1; cfg.dim];
+        block_dense(&w.blocks[0], &cfg, &cvec, &mut txt, &mut img);
+        assert!(txt.data().iter().all(|x| x.is_finite()));
+        assert!(img.max_abs_diff(&img0) > 0.0);
+    }
+}

@@ -1,0 +1,302 @@
+//! Weight container + `.fot` (de)serialization + random initialization.
+//!
+//! Weight names mirror `python/compile/model.py` exactly so the trained JAX
+//! parameters load unambiguously.
+
+use crate::config::ModelConfig;
+use crate::tensor::Tensor;
+use crate::util::fot::FotFile;
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+
+/// Per-stream (text or vision) block weights.
+#[derive(Clone, Debug)]
+pub struct StreamWeights {
+    /// adaLN-zero conditioning projection `[dim × 6·dim]` (+bias).
+    pub ada_w: Tensor,
+    pub ada_b: Vec<f32>,
+    pub wq: Tensor,
+    pub bq: Vec<f32>,
+    pub wk: Tensor,
+    pub bk: Vec<f32>,
+    pub wv: Tensor,
+    pub bv: Vec<f32>,
+    /// Learned per-head-feature RMSNorm scales for Q/K (`[head_dim]`).
+    pub q_rms: Vec<f32>,
+    pub k_rms: Vec<f32>,
+    /// Attention output projection `[dim × dim]` (+bias).
+    pub wo: Tensor,
+    pub bo: Vec<f32>,
+    pub mlp_w1: Tensor,
+    pub mlp_b1: Vec<f32>,
+    pub mlp_w2: Tensor,
+    pub mlp_b2: Vec<f32>,
+}
+
+/// One double-stream MMDiT block.
+#[derive(Clone, Debug)]
+pub struct BlockWeights {
+    pub txt: StreamWeights,
+    pub img: StreamWeights,
+}
+
+/// All model weights.
+#[derive(Clone, Debug)]
+pub struct Weights {
+    pub cfg: ModelConfig,
+    /// Text hash-embedding table `[vocab × dim]`.
+    pub text_embed: Tensor,
+    /// Patch embedding `[patch_dim × dim]` (+bias).
+    pub patch_w: Tensor,
+    pub patch_b: Vec<f32>,
+    /// Timestep-conditioning MLP.
+    pub time_w1: Tensor,
+    pub time_b1: Vec<f32>,
+    pub time_w2: Tensor,
+    pub time_b2: Vec<f32>,
+    pub blocks: Vec<BlockWeights>,
+    /// Final adaLN `[dim × 2·dim]` and decode `[dim × patch_dim]`.
+    pub final_ada_w: Tensor,
+    pub final_ada_b: Vec<f32>,
+    pub final_w: Tensor,
+    pub final_b: Vec<f32>,
+}
+
+fn randt(rng: &mut Pcg32, shape: &[usize], scale: f32) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.normal() * scale).collect())
+}
+
+impl StreamWeights {
+    fn random(cfg: &ModelConfig, rng: &mut Pcg32) -> Self {
+        let d = cfg.dim;
+        let hd = cfg.head_dim();
+        let m = cfg.mlp_ratio * d;
+        let s = 1.0 / (d as f32).sqrt();
+        StreamWeights {
+            ada_w: randt(rng, &[d, 6 * d], s * 0.1),
+            ada_b: vec![0.0; 6 * d],
+            wq: randt(rng, &[d, d], s),
+            bq: vec![0.0; d],
+            wk: randt(rng, &[d, d], s),
+            bk: vec![0.0; d],
+            wv: randt(rng, &[d, d], s),
+            bv: vec![0.0; d],
+            q_rms: vec![1.0; hd],
+            k_rms: vec![1.0; hd],
+            wo: randt(rng, &[d, d], s),
+            bo: vec![0.0; d],
+            mlp_w1: randt(rng, &[d, m], s),
+            mlp_b1: vec![0.0; m],
+            mlp_w2: randt(rng, &[m, d], 1.0 / (m as f32).sqrt()),
+            mlp_b2: vec![0.0; d],
+        }
+    }
+
+    fn param_count(&self) -> usize {
+        self.ada_w.numel()
+            + self.ada_b.len()
+            + self.wq.numel() * 3
+            + self.bq.len() * 3
+            + self.q_rms.len() * 2
+            + self.wo.numel()
+            + self.bo.len()
+            + self.mlp_w1.numel()
+            + self.mlp_b1.len()
+            + self.mlp_w2.numel()
+            + self.mlp_b2.len()
+    }
+}
+
+impl Weights {
+    /// Random (untrained) weights — used by unit tests and the kernel
+    /// benches; the shipped artifact is trained in JAX.
+    pub fn random(cfg: &ModelConfig, seed: u64) -> Self {
+        let mut rng = Pcg32::seeded(seed);
+        let d = cfg.dim;
+        let s = 1.0 / (d as f32).sqrt();
+        Weights {
+            cfg: cfg.clone(),
+            text_embed: randt(&mut rng, &[cfg.vocab, d], 0.02),
+            patch_w: randt(&mut rng, &[cfg.patch_dim(), d], s),
+            patch_b: vec![0.0; d],
+            time_w1: randt(&mut rng, &[d, d], s),
+            time_b1: vec![0.0; d],
+            time_w2: randt(&mut rng, &[d, d], s),
+            time_b2: vec![0.0; d],
+            blocks: (0..cfg.layers)
+                .map(|_| BlockWeights {
+                    txt: StreamWeights::random(cfg, &mut rng),
+                    img: StreamWeights::random(cfg, &mut rng),
+                })
+                .collect(),
+            final_ada_w: randt(&mut rng, &[d, 2 * d], s * 0.1),
+            final_ada_b: vec![0.0; 2 * d],
+            final_w: randt(&mut rng, &[d, cfg.patch_dim()], s),
+            final_b: vec![0.0; cfg.patch_dim()],
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.text_embed.numel()
+            + self.patch_w.numel()
+            + self.patch_b.len()
+            + self.time_w1.numel()
+            + self.time_b1.len()
+            + self.time_w2.numel()
+            + self.time_b2.len()
+            + self
+                .blocks
+                .iter()
+                .map(|b| b.txt.param_count() + b.img.param_count())
+                .sum::<usize>()
+            + self.final_ada_w.numel()
+            + self.final_ada_b.len()
+            + self.final_w.numel()
+            + self.final_b.len()
+    }
+
+    /// Serialize into a `.fot` file (same names as the python exporter).
+    pub fn to_fot(&self) -> FotFile {
+        let mut f = FotFile::new();
+        let put = |f: &mut FotFile, name: &str, t: &Tensor| {
+            f.insert_f32(name, t.shape(), t.data());
+        };
+        let putv = |f: &mut FotFile, name: &str, v: &[f32]| {
+            f.insert_f32(name, &[v.len()], v);
+        };
+        put(&mut f, "text_embed", &self.text_embed);
+        put(&mut f, "patch_embed.w", &self.patch_w);
+        putv(&mut f, "patch_embed.b", &self.patch_b);
+        put(&mut f, "time_mlp.w1", &self.time_w1);
+        putv(&mut f, "time_mlp.b1", &self.time_b1);
+        put(&mut f, "time_mlp.w2", &self.time_w2);
+        putv(&mut f, "time_mlp.b2", &self.time_b2);
+        for (i, b) in self.blocks.iter().enumerate() {
+            for (s, sw) in [("txt", &b.txt), ("img", &b.img)] {
+                let p = format!("blocks.{i}.{s}");
+                put(&mut f, &format!("{p}.ada.w"), &sw.ada_w);
+                putv(&mut f, &format!("{p}.ada.b"), &sw.ada_b);
+                put(&mut f, &format!("{p}.wq"), &sw.wq);
+                putv(&mut f, &format!("{p}.bq"), &sw.bq);
+                put(&mut f, &format!("{p}.wk"), &sw.wk);
+                putv(&mut f, &format!("{p}.bk"), &sw.bk);
+                put(&mut f, &format!("{p}.wv"), &sw.wv);
+                putv(&mut f, &format!("{p}.bv"), &sw.bv);
+                putv(&mut f, &format!("{p}.q_rms"), &sw.q_rms);
+                putv(&mut f, &format!("{p}.k_rms"), &sw.k_rms);
+                put(&mut f, &format!("{p}.wo"), &sw.wo);
+                putv(&mut f, &format!("{p}.bo"), &sw.bo);
+                put(&mut f, &format!("{p}.mlp.w1"), &sw.mlp_w1);
+                putv(&mut f, &format!("{p}.mlp.b1"), &sw.mlp_b1);
+                put(&mut f, &format!("{p}.mlp.w2"), &sw.mlp_w2);
+                putv(&mut f, &format!("{p}.mlp.b2"), &sw.mlp_b2);
+            }
+        }
+        put(&mut f, "final.ada.w", &self.final_ada_w);
+        putv(&mut f, "final.ada.b", &self.final_ada_b);
+        put(&mut f, "final.w", &self.final_w);
+        putv(&mut f, "final.b", &self.final_b);
+        f.meta.insert("config".into(), self.cfg.to_json());
+        f.meta.insert("format".into(), Json::Str("minimmdit-v1".into()));
+        f
+    }
+
+    /// Load from a `.fot` file produced by `to_fot` or the python exporter.
+    pub fn from_fot(f: &FotFile) -> Result<Self, String> {
+        let cfg = ModelConfig::from_json(
+            f.meta.get("config").ok_or("weights file missing config meta")?,
+        )?;
+        let t = |name: &str| -> Result<Tensor, String> { Tensor::from_fot(f, name) };
+        let v = |name: &str| -> Result<Vec<f32>, String> { Ok(f.get(name)?.to_f32()?) };
+        let stream = |p: &str| -> Result<StreamWeights, String> {
+            Ok(StreamWeights {
+                ada_w: t(&format!("{p}.ada.w"))?,
+                ada_b: v(&format!("{p}.ada.b"))?,
+                wq: t(&format!("{p}.wq"))?,
+                bq: v(&format!("{p}.bq"))?,
+                wk: t(&format!("{p}.wk"))?,
+                bk: v(&format!("{p}.bk"))?,
+                wv: t(&format!("{p}.wv"))?,
+                bv: v(&format!("{p}.bv"))?,
+                q_rms: v(&format!("{p}.q_rms"))?,
+                k_rms: v(&format!("{p}.k_rms"))?,
+                wo: t(&format!("{p}.wo"))?,
+                bo: v(&format!("{p}.bo"))?,
+                mlp_w1: t(&format!("{p}.mlp.w1"))?,
+                mlp_b1: v(&format!("{p}.mlp.b1"))?,
+                mlp_w2: t(&format!("{p}.mlp.w2"))?,
+                mlp_b2: v(&format!("{p}.mlp.b2"))?,
+            })
+        };
+        let blocks = (0..cfg.layers)
+            .map(|i| {
+                Ok(BlockWeights {
+                    txt: stream(&format!("blocks.{i}.txt"))?,
+                    img: stream(&format!("blocks.{i}.img"))?,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(Weights {
+            text_embed: t("text_embed")?,
+            patch_w: t("patch_embed.w")?,
+            patch_b: v("patch_embed.b")?,
+            time_w1: t("time_mlp.w1")?,
+            time_b1: v("time_mlp.b1")?,
+            time_w2: t("time_mlp.w2")?,
+            time_b2: v("time_mlp.b2")?,
+            blocks,
+            final_ada_w: t("final.ada.w")?,
+            final_ada_b: v("final.ada.b")?,
+            final_w: t("final.w")?,
+            final_b: v("final.b")?,
+            cfg,
+        })
+    }
+
+    pub fn save(&self, path: &str) -> Result<(), String> {
+        self.to_fot().save(path)
+    }
+
+    pub fn load(path: &str) -> Result<Self, String> {
+        Self::from_fot(&FotFile::load(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fot_roundtrip_preserves_weights() {
+        let cfg = ModelConfig {
+            dim: 16,
+            heads: 2,
+            layers: 2,
+            text_tokens: 4,
+            patch_h: 2,
+            patch_w: 2,
+            patch_size: 2,
+            channels: 3,
+            mlp_ratio: 2,
+            vocab: 8,
+        };
+        let w = Weights::random(&cfg, 3);
+        let f = w.to_fot();
+        let w2 = Weights::from_fot(&f).unwrap();
+        assert_eq!(w.cfg, w2.cfg);
+        assert_eq!(w.text_embed, w2.text_embed);
+        assert_eq!(w.blocks[1].img.mlp_w2, w2.blocks[1].img.mlp_w2);
+        assert_eq!(w.final_b, w2.final_b);
+        assert_eq!(w.param_count(), w2.param_count());
+    }
+
+    #[test]
+    fn mini_param_count_in_range() {
+        let cfg = ModelConfig::mini();
+        let w = Weights::random(&cfg, 1);
+        let p = w.param_count();
+        // ~2.4M parameters for the shipped config.
+        assert!(p > 1_000_000 && p < 5_000_000, "params = {p}");
+    }
+}

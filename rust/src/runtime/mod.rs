@@ -1,0 +1,220 @@
+//! PJRT runtime — loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them on the CPU PJRT client via the `xla` crate.
+//!
+//! This is the L2/L1 **numerics oracle** path: the same model and Pallas
+//! kernels, lowered once at build time to HLO *text* (see aot.py for why
+//! text, not serialized protos), compiled here with
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Integration tests in `rust/tests/` assert the native engine reproduces
+//! these outputs; the dense PJRT step is also servable through the
+//! coordinator as the reference engine.
+
+use crate::tensor::Tensor;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// An input value for an artifact execution.
+pub enum Input<'a> {
+    /// f32 tensor (any rank; row-major).
+    F32(&'a Tensor),
+    /// i32 array with explicit shape.
+    I32(&'a [i32], &'a [usize]),
+    /// f32 scalar.
+    Scalar(f32),
+}
+
+/// A compiled artifact registry bound to one PJRT client.
+pub struct ArtifactRuntime {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+impl ArtifactRuntime {
+    /// Create a CPU PJRT client rooted at an artifacts directory.
+    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(ArtifactRuntime {
+            client,
+            executables: HashMap::new(),
+            dir: artifacts_dir.as_ref().to_path_buf(),
+        })
+    }
+
+    /// Platform string (e.g. "cpu") — useful for logs.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile `<dir>/<name>.hlo.txt` under the key `name`.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute a loaded artifact. The artifact must have been lowered with
+    /// `return_tuple=True`; returns each tuple element as an f32 tensor
+    /// with the given output shapes.
+    pub fn execute(
+        &self,
+        name: &str,
+        inputs: &[Input<'_>],
+        out_shapes: &[&[usize]],
+    ) -> Result<Vec<Tensor>> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not loaded"))?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|inp| -> Result<xla::Literal> {
+                Ok(match inp {
+                    Input::F32(t) => {
+                        let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+                        xla::Literal::vec1(t.data()).reshape(&dims)?
+                    }
+                    Input::I32(v, shape) => {
+                        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                        xla::Literal::vec1(v).reshape(&dims)?
+                    }
+                    Input::Scalar(x) => xla::Literal::from(*x),
+                })
+            })
+            .collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?
+            .to_tuple()?;
+        if result.len() != out_shapes.len() {
+            return Err(anyhow!(
+                "artifact '{name}' returned {} outputs, expected {}",
+                result.len(),
+                out_shapes.len()
+            ));
+        }
+        result
+            .into_iter()
+            .zip(out_shapes)
+            .map(|(lit, shape)| {
+                let v = lit.to_vec::<f32>()?;
+                Ok(Tensor::from_vec(shape, v))
+            })
+            .collect()
+    }
+
+    /// Convenience: run the `mmdit_step` artifact (params in sorted-name
+    /// order + ids + patches + t → velocity).
+    pub fn mmdit_step(
+        &self,
+        params: &[Tensor],
+        ids: &[i32],
+        patches: &Tensor,
+        t: f32,
+        out_shape: &[usize],
+    ) -> Result<Tensor> {
+        let mut inputs: Vec<Input<'_>> = params.iter().map(Input::F32).collect();
+        let id_shape = [ids.len()];
+        inputs.push(Input::I32(ids, &id_shape));
+        inputs.push(Input::F32(patches));
+        inputs.push(Input::Scalar(t));
+        let mut out = self.execute("mmdit_step", &inputs, &[out_shape])?;
+        Ok(out.remove(0))
+    }
+}
+
+/// A full denoising generator running every step through the AOT-compiled
+/// PJRT artifact — the L2/L1 oracle **as a servable engine**. Dense only
+/// (the lowered HLO is the dense step); used as the reference service and
+/// to prove the artifact path composes at L3 (DESIGN.md dual-engine).
+pub struct PjRtGenerator {
+    rt: ArtifactRuntime,
+    params: Vec<Tensor>,
+    cfg: crate::config::ModelConfig,
+}
+
+impl PjRtGenerator {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref();
+        let mut rt = ArtifactRuntime::cpu(dir)?;
+        rt.load("mmdit_step")?;
+        let params = load_param_list(dir)?;
+        let weights = crate::util::fot::FotFile::load(dir.join("weights.fot"))
+            .map_err(anyhow::Error::msg)?;
+        let cfg = crate::config::ModelConfig::from_json(
+            weights.meta.get("config").ok_or_else(|| anyhow!("weights missing config"))?,
+        )
+        .map_err(anyhow::Error::msg)?;
+        Ok(PjRtGenerator { rt, params, cfg })
+    }
+
+    pub fn config(&self) -> &crate::config::ModelConfig {
+        &self.cfg
+    }
+
+    /// Rectified-flow sampling with every velocity evaluation executed on
+    /// the PJRT artifact. Returns the `[H × W × C]` image and wall seconds.
+    pub fn generate(&self, text_ids: &[usize], seed: u64, steps: usize) -> Result<(Tensor, f64)> {
+        use crate::diffusion::{euler_step, initial_noise, time_grid, unpatchify};
+        let ids: Vec<i32> = text_ids.iter().map(|&i| i as i32).collect();
+        let mut x = initial_noise(&self.cfg, seed);
+        let grid = time_grid(steps);
+        let shape = [self.cfg.vision_tokens(), self.cfg.patch_dim()];
+        let t0 = std::time::Instant::now();
+        for s in 0..steps {
+            let v = self.rt.mmdit_step(&self.params, &ids, &x, grid[s] as f32, &shape)?;
+            euler_step(&mut x, &v, grid[s] - grid[s + 1]);
+        }
+        Ok((unpatchify(&x, &self.cfg), t0.elapsed().as_secs_f64()))
+    }
+}
+
+/// Load the `mmdit_step` parameter list (sorted-name order) from
+/// `weights.fot` + `mmdit_step.params.json`.
+pub fn load_param_list(artifacts_dir: impl AsRef<Path>) -> Result<Vec<Tensor>> {
+    use crate::util::fot::FotFile;
+    use crate::util::json::Json;
+    let dir = artifacts_dir.as_ref();
+    let meta = std::fs::read_to_string(dir.join("mmdit_step.params.json"))
+        .context("reading mmdit_step.params.json")?;
+    let meta = Json::parse(&meta).map_err(|e| anyhow!(e))?;
+    let order = meta
+        .req("order")
+        .map_err(|e| anyhow!(e))?
+        .as_arr()
+        .ok_or_else(|| anyhow!("bad order field"))?;
+    let weights = FotFile::load(dir.join("weights.fot")).map_err(|e| anyhow!(e))?;
+    order
+        .iter()
+        .map(|name| {
+            let name = name.as_str().ok_or_else(|| anyhow!("bad name"))?;
+            Tensor::from_fot(&weights, name).map_err(|e| anyhow!(e))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT-dependent tests live in rust/tests/pjrt_oracle.rs (integration)
+    // so `cargo test --lib` stays fast and artifact-independent.
+
+    #[test]
+    fn input_enum_compiles() {
+        use super::Input;
+        let t = crate::tensor::Tensor::zeros(&[2, 2]);
+        let _ = Input::F32(&t);
+        let _ = Input::Scalar(1.0);
+    }
+}

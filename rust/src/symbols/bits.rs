@@ -1,0 +1,156 @@
+//! Big-end-first packed bit vector — the raw storage for sparse symbols.
+
+/// A bit vector packed MSB-first into bytes (paper Figure 5 convention:
+/// logical index 0 is the most-significant bit of byte 0).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitSymbols {
+    bytes: Vec<u8>,
+    nbits: usize,
+}
+
+impl BitSymbols {
+    /// All-zero (everything cached/skipped) symbols.
+    pub fn zeros(nbits: usize) -> Self {
+        BitSymbols { bytes: vec![0; nbits.div_ceil(8)], nbits }
+    }
+
+    /// All-one (everything computed) symbols.
+    pub fn ones(nbits: usize) -> Self {
+        let mut s = BitSymbols { bytes: vec![0xff; nbits.div_ceil(8)], nbits };
+        s.clear_padding();
+        s
+    }
+
+    /// Pack a bool slice (`true` = 1).
+    pub fn from_bits(bits: &[bool]) -> Self {
+        let mut s = Self::zeros(bits.len());
+        for (i, &b) in bits.iter().enumerate() {
+            if b {
+                s.set(i, true);
+            }
+        }
+        s
+    }
+
+    /// Wrap raw bytes (e.g. symbols read from a `.fot` file).
+    pub fn from_bytes(bytes: Vec<u8>, nbits: usize) -> Self {
+        assert!(bytes.len() * 8 >= nbits, "byte buffer too small for {nbits} bits");
+        let mut s = BitSymbols { bytes, nbits };
+        s.clear_padding();
+        s
+    }
+
+    fn clear_padding(&mut self) {
+        let pad = self.bytes.len() * 8 - self.nbits;
+        if pad > 0 {
+            let last = self.bytes.len() - 1;
+            self.bytes[last] &= 0xffu8 << pad;
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.nbits
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.nbits == 0
+    }
+
+    /// Get bit `i` (MSB-first within each byte).
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.nbits, "bit index {i} out of range {}", self.nbits);
+        (self.bytes[i / 8] >> (7 - i % 8)) & 1 == 1
+    }
+
+    /// Set bit `i`.
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < self.nbits);
+        let mask = 1u8 << (7 - i % 8);
+        if v {
+            self.bytes[i / 8] |= mask;
+        } else {
+            self.bytes[i / 8] &= !mask;
+        }
+    }
+
+    /// Underlying packed bytes.
+    pub fn bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    /// Number of set bits.
+    pub fn count_ones(&self) -> usize {
+        self.bytes.iter().map(|b| b.count_ones() as usize).sum()
+    }
+
+    /// Indices of set bits.
+    pub fn ones_idx(&self) -> Vec<usize> {
+        (0..self.nbits).filter(|&i| self.get(i)).collect()
+    }
+
+    /// Indices of clear bits.
+    pub fn zeros_idx(&self) -> Vec<usize> {
+        (0..self.nbits).filter(|&i| !self.get(i)).collect()
+    }
+
+    /// Unpack to bools.
+    pub fn to_bits(&self) -> Vec<bool> {
+        (0..self.nbits).map(|i| self.get(i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn msb_first_packing() {
+        let b = BitSymbols::from_bits(&[true, true, true, false, false]);
+        assert_eq!(b.bytes(), &[0b1110_0000]);
+        assert!(b.get(0) && b.get(2));
+        assert!(!b.get(3) && !b.get(4));
+    }
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut b = BitSymbols::zeros(19);
+        b.set(0, true);
+        b.set(8, true);
+        b.set(18, true);
+        assert_eq!(b.count_ones(), 3);
+        assert_eq!(b.ones_idx(), vec![0, 8, 18]);
+        b.set(8, false);
+        assert_eq!(b.count_ones(), 2);
+    }
+
+    #[test]
+    fn ones_clears_padding() {
+        let b = BitSymbols::ones(5);
+        assert_eq!(b.bytes(), &[0b1111_1000]);
+        assert_eq!(b.count_ones(), 5);
+    }
+
+    #[test]
+    fn from_bytes_matches_paper_examples() {
+        // 224, 235, 197 are the uint8 values in §3.3.
+        let b = BitSymbols::from_bytes(vec![224], 5);
+        assert_eq!(b.to_bits(), vec![true, true, true, false, false]);
+        let b = BitSymbols::from_bytes(vec![235], 8);
+        assert_eq!(
+            b.to_bits(),
+            vec![true, true, true, false, true, false, true, true]
+        );
+    }
+
+    #[test]
+    fn roundtrip_bits() {
+        let bits: Vec<bool> = (0..37).map(|i| i % 3 == 0).collect();
+        let b = BitSymbols::from_bits(&bits);
+        assert_eq!(b.to_bits(), bits);
+        assert_eq!(b.zeros_idx().len() + b.count_ones(), 37);
+    }
+}

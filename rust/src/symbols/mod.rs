@@ -1,0 +1,336 @@
+//! Unified **sparse symbols** (§3.3 of the paper).
+//!
+//! FlashOmni encodes every sparsity decision into two compact bit-packed
+//! 8-bit symbol streams:
+//!
+//! * `S_c` — *feature-caching* symbols on the **spatial axis**: one bit per
+//!   group of `n` consecutive Q blocks. Bit = 1 ⇒ the block's attention
+//!   output is computed this step; bit = 0 ⇒ the output is reused from the
+//!   feature cache (`OP_reuse`, TaylorSeer).
+//! * `S_s` — *block-sparse-skipping* symbols on the **reduction axis**: one
+//!   bit per (Q-block-group, KV-block-group) pair. Bit = 1 ⇒ the
+//!   `Q_i K_j^T` / `P̃_ij V_j` pair is computed; bit = 0 ⇒ skipped.
+//!
+//! Bits are packed **big-end first** within each byte to match the paper's
+//! Figure 5 example: a caching mask `[1,1,1,0,0]` zero-pads to `0b1110_0000`
+//! and is stored as the uint8 `224`.
+//!
+//! The decode functions of §3.4 are provided both in their naive per-access
+//! form (`F`, `J`) and in the register-cached form the paper uses on the
+//! GPU: a whole symbol byte (covering 8 groups) is decoded once and reused
+//! for the following blocks ([`RowDecoder`]).
+
+mod bits;
+
+pub use bits::BitSymbols;
+
+use crate::util::ceil_div;
+
+/// Sparse symbols for one attention head of one layer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HeadSymbols {
+    /// Spatial-axis caching symbols (one bit per Q-block group).
+    pub s_c: BitSymbols,
+    /// Reduction-axis skipping symbols, row-major
+    /// `[q_groups × kv_groups]`.
+    pub s_s: BitSymbols,
+    /// Number of Q-block groups.
+    pub q_groups: usize,
+    /// Number of KV-block groups.
+    pub kv_groups: usize,
+    /// Pooling factor `n`: logical blocks per symbol bit.
+    pub pool: usize,
+}
+
+impl HeadSymbols {
+    /// Fully-dense symbols (everything computed).
+    pub fn dense(t_q: usize, t_kv: usize, pool: usize) -> Self {
+        let q_groups = ceil_div(t_q, pool);
+        let kv_groups = ceil_div(t_kv, pool);
+        HeadSymbols {
+            s_c: BitSymbols::ones(q_groups),
+            s_s: BitSymbols::ones(q_groups * kv_groups),
+            q_groups,
+            kv_groups,
+            pool,
+        }
+    }
+
+    /// Build from logical block masks (`true` = compute). `m_c` has one
+    /// entry per Q-block group; `m_s` is row-major `[q_groups][kv_groups]`.
+    pub fn from_masks(m_c: &[bool], m_s: &[bool], kv_groups: usize, pool: usize) -> Self {
+        assert_eq!(m_s.len(), m_c.len() * kv_groups, "mask shape mismatch");
+        HeadSymbols {
+            s_c: BitSymbols::from_bits(m_c),
+            s_s: BitSymbols::from_bits(m_s),
+            q_groups: m_c.len(),
+            kv_groups,
+            pool,
+        }
+    }
+
+    /// Spatial-axis decode `F(S_c, i)` for a raw Q-block index `i`
+    /// (§3.4: `(S_c >> i/n) & 1`, big-end within bytes).
+    #[inline]
+    pub fn f(&self, i: usize) -> bool {
+        self.s_c.get(i / self.pool)
+    }
+
+    /// Reduction-axis decode `J(S_s, i, j)` for raw block indices.
+    #[inline]
+    pub fn j(&self, i: usize, j: usize) -> bool {
+        self.s_s.get((i / self.pool) * self.kv_groups + j / self.pool)
+    }
+
+    /// Register-cached decoder for row `i` (raw Q-block index): decodes the
+    /// symbol bytes of that row once, so the inner K-loop does no bit math.
+    pub fn row_decoder(&self, i: usize) -> RowDecoder<'_> {
+        RowDecoder {
+            sym: self,
+            row: i / self.pool,
+            cached_byte: 0,
+            cached_base: usize::MAX,
+        }
+    }
+
+    /// Fraction of Q-block groups that are *cached* (spatial sparsity).
+    pub fn cache_sparsity(&self) -> f64 {
+        1.0 - self.s_c.count_ones() as f64 / self.q_groups.max(1) as f64
+    }
+
+    /// Overall fraction of (Qi, Kj) pairs *not computed*, counting both
+    /// cached rows (whole row skipped) and S_s skips on computed rows —
+    /// the paper's `skip/total` Sparsity metric.
+    pub fn pair_sparsity(&self) -> f64 {
+        let total = self.q_groups * self.kv_groups;
+        if total == 0 {
+            return 0.0;
+        }
+        let mut computed = 0usize;
+        for i in 0..self.q_groups {
+            if !self.s_c.get(i) {
+                continue; // whole row cached
+            }
+            for j in 0..self.kv_groups {
+                if self.s_s.get(i * self.kv_groups + j) {
+                    computed += 1;
+                }
+            }
+        }
+        1.0 - computed as f64 / total as f64
+    }
+
+    /// Density = fraction of pairs computed (Fig. 7 metric).
+    pub fn density(&self) -> f64 {
+        1.0 - self.pair_sparsity()
+    }
+
+    /// Byte size of the packed symbols (the paper's storage-overhead
+    /// argument: 8 blocks per byte).
+    pub fn packed_bytes(&self) -> usize {
+        self.s_c.bytes().len() + self.s_s.bytes().len()
+    }
+
+    /// Restrict to Q-block-group rows `[lo, hi)` — used to hand each
+    /// stream (text prefix / vision suffix) of the joint sequence its own
+    /// view of the symbols for GEMM-Q / GEMM-O.
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> HeadSymbols {
+        assert!(lo <= hi && hi <= self.q_groups);
+        let m_c: Vec<bool> = (lo..hi).map(|g| self.s_c.get(g)).collect();
+        let mut m_s = Vec::with_capacity((hi - lo) * self.kv_groups);
+        for g in lo..hi {
+            for j in 0..self.kv_groups {
+                m_s.push(self.s_s.get(g * self.kv_groups + j));
+            }
+        }
+        HeadSymbols::from_masks(&m_c, &m_s, self.kv_groups, self.pool)
+    }
+}
+
+/// Random symbols at target sparsities — used by the kernel benches
+/// (Figs 6, 8, 10, 11 use "randomly generated sparse symbols", §4.3).
+/// `fc` is the fraction of *cached* Q groups; `bss` the fraction of
+/// *skipped* KV pairs among computed rows.
+pub fn random_symbols(
+    rng: &mut crate::util::rng::Pcg32,
+    q_groups: usize,
+    kv_groups: usize,
+    pool: usize,
+    fc: f64,
+    bss: f64,
+) -> HeadSymbols {
+    let m_c: Vec<bool> = (0..q_groups).map(|_| rng.f64() >= fc).collect();
+    let m_s: Vec<bool> = (0..q_groups * kv_groups).map(|_| rng.f64() >= bss).collect();
+    HeadSymbols::from_masks(&m_c, &m_s, kv_groups, pool)
+}
+
+/// Decoded-once row view of `S_s` mimicking the paper's register cache:
+/// "undecoded bits are processed only once when first encountered, and the
+/// results — covering up to 8n consecutive blocks — are stored in registers
+/// for subsequent reuse" (§3.4).
+pub struct RowDecoder<'a> {
+    sym: &'a HeadSymbols,
+    row: usize,
+    cached_byte: u8,
+    cached_base: usize,
+}
+
+impl<'a> RowDecoder<'a> {
+    /// Decode `J` for raw KV-block index `j`, refreshing the cached byte
+    /// only when crossing an 8-group boundary.
+    #[inline]
+    pub fn j(&mut self, j: usize) -> bool {
+        let group = j / self.sym.pool;
+        let bit_index = self.row * self.sym.kv_groups + group;
+        let base = bit_index / 8;
+        if base != self.cached_base {
+            self.cached_base = base;
+            self.cached_byte = self.sym.s_s.bytes()[base];
+        }
+        (self.cached_byte >> (7 - bit_index % 8)) & 1 == 1
+    }
+}
+
+/// Symbols for all heads of one layer.
+#[derive(Clone, Debug)]
+pub struct LayerSymbols {
+    pub heads: Vec<HeadSymbols>,
+}
+
+impl LayerSymbols {
+    pub fn dense(heads: usize, t_q: usize, t_kv: usize, pool: usize) -> Self {
+        LayerSymbols {
+            heads: (0..heads).map(|_| HeadSymbols::dense(t_q, t_kv, pool)).collect(),
+        }
+    }
+
+    /// Row-slice every head (see [`HeadSymbols::slice_rows`]).
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> LayerSymbols {
+        LayerSymbols { heads: self.heads.iter().map(|h| h.slice_rows(lo, hi)).collect() }
+    }
+
+    /// Mean pair-sparsity across heads.
+    pub fn pair_sparsity(&self) -> f64 {
+        if self.heads.is_empty() {
+            return 0.0;
+        }
+        self.heads.iter().map(|h| h.pair_sparsity()).sum::<f64>() / self.heads.len() as f64
+    }
+
+    pub fn cache_sparsity(&self) -> f64 {
+        if self.heads.is_empty() {
+            return 0.0;
+        }
+        self.heads.iter().map(|h| h.cache_sparsity()).sum::<f64>() / self.heads.len() as f64
+    }
+
+    pub fn density(&self) -> f64 {
+        1.0 - self.pair_sparsity()
+    }
+
+    /// Total packed symbol bytes for the layer.
+    pub fn packed_bytes(&self) -> usize {
+        self.heads.iter().map(|h| h.packed_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{prop_check, rand_mask};
+
+    /// The paper's Figure 5 example: caching mask [1,1,1,0,0] → 224.
+    #[test]
+    fn figure5_encoding() {
+        let m_c = [true, true, true, false, false];
+        let m_s = vec![true; 5 * 1];
+        let h = HeadSymbols::from_masks(&m_c, &m_s, 1, 2);
+        assert_eq!(h.s_c.bytes()[0], 0b1110_0000);
+        assert_eq!(h.s_c.bytes()[0], 224);
+        // M_c[4] = 0 skips blocks 7 and 8 (raw indices with n=2: 8/2=4).
+        assert!(!h.f(8));
+        assert!(!h.f(9));
+        assert!(h.f(0));
+        assert!(h.f(5)); // 5/2 = 2 → group 2 = 1
+    }
+
+    #[test]
+    fn dense_symbols_compute_everything() {
+        let h = HeadSymbols::dense(7, 9, 1);
+        assert_eq!(h.q_groups, 7);
+        assert_eq!(h.kv_groups, 9);
+        for i in 0..7 {
+            assert!(h.f(i));
+            for j in 0..9 {
+                assert!(h.j(i, j));
+            }
+        }
+        assert_eq!(h.pair_sparsity(), 0.0);
+        assert_eq!(h.density(), 1.0);
+    }
+
+    #[test]
+    fn pair_sparsity_counts_cached_rows() {
+        // 2 q-groups, 2 kv-groups; row 0 cached entirely, row 1 dense.
+        let h = HeadSymbols::from_masks(&[false, true], &[true, true, true, true], 2, 1);
+        assert_eq!(h.cache_sparsity(), 0.5);
+        assert_eq!(h.pair_sparsity(), 0.5);
+        // Now additionally skip one pair in the computed row.
+        let h = HeadSymbols::from_masks(&[false, true], &[true, true, false, true], 2, 1);
+        assert_eq!(h.pair_sparsity(), 0.75);
+    }
+
+    #[test]
+    fn row_decoder_matches_naive_j() {
+        prop_check("row_decoder == J", 50, |rng| {
+            let q_groups = 1 + rng.below(20);
+            let kv_groups = 1 + rng.below(40);
+            let pool = 1 + rng.below(3);
+            let m_c = rand_mask(rng, q_groups, 0.6);
+            let m_s = rand_mask(rng, q_groups * kv_groups, 0.5);
+            let h = HeadSymbols::from_masks(&m_c, &m_s, kv_groups, pool);
+            for i in 0..q_groups * pool {
+                let mut dec = h.row_decoder(i);
+                for j in 0..kv_groups * pool {
+                    assert_eq!(dec.j(j), h.j(i, j), "mismatch at ({i},{j})");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn packed_size_is_one_bit_per_group() {
+        let h = HeadSymbols::dense(64, 64, 1);
+        // 64 bits = 8 bytes for s_c; 64*64 bits = 512 bytes for s_s.
+        assert_eq!(h.packed_bytes(), 8 + 512);
+    }
+
+    #[test]
+    fn sparsity_matches_mask_statistics() {
+        prop_check("sparsity accounting", 30, |rng| {
+            let q = 1 + rng.below(16);
+            let kv = 1 + rng.below(16);
+            let m_c = rand_mask(rng, q, 0.7);
+            let m_s = rand_mask(rng, q * kv, 0.6);
+            let h = HeadSymbols::from_masks(&m_c, &m_s, kv, 1);
+            // Reference count.
+            let mut computed = 0;
+            for i in 0..q {
+                for j in 0..kv {
+                    if m_c[i] && m_s[i * kv + j] {
+                        computed += 1;
+                    }
+                }
+            }
+            let want = 1.0 - computed as f64 / (q * kv) as f64;
+            assert!((h.pair_sparsity() - want).abs() < 1e-12);
+        });
+    }
+
+    #[test]
+    fn layer_aggregation() {
+        let l = LayerSymbols::dense(4, 8, 8, 1);
+        assert_eq!(l.density(), 1.0);
+        assert_eq!(l.packed_bytes(), 4 * (1 + 8));
+    }
+}

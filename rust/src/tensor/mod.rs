@@ -1,0 +1,200 @@
+//! Row-major f32 tensor used throughout the native engine.
+//!
+//! Deliberately minimal: contiguous storage, shape bookkeeping, and the
+//! handful of views/ops the kernels need. The heavy math lives in
+//! [`crate::kernels`]; this type stays allocation-transparent so the hot
+//! path can reuse buffers.
+
+use crate::util::fot::{FotFile, FotTensor};
+
+/// A dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    /// Tensor from existing data (length must match shape).
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} does not match data length {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// Filled with a constant.
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Number of rows / row length for a 2-D view of the trailing dimension.
+    /// `[a, b, c]` is viewed as `a*b` rows of length `c`.
+    pub fn rows(&self) -> usize {
+        let cols = self.cols();
+        if cols == 0 {
+            0
+        } else {
+            self.data.len() / cols
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        *self.shape.last().unwrap_or(&0)
+    }
+
+    /// Borrow row `r` of the 2-D view.
+    pub fn row(&self, r: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        let c = self.cols();
+        &mut self.data[r * c..(r + 1) * c]
+    }
+
+    /// Reshape in place (numel must be preserved).
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Elementwise a += b.
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Elementwise a -= b.
+    pub fn sub_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a -= b;
+        }
+    }
+
+    /// Elementwise scale.
+    pub fn scale(&mut self, s: f32) {
+        for a in &mut self.data {
+            *a *= s;
+        }
+    }
+
+    /// Max |a - b| over all elements.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape, "shape mismatch in max_abs_diff");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// Relative L2 error ‖a−b‖ / (‖b‖ + eps).
+    pub fn rel_l2(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (a, b) in self.data.iter().zip(&other.data) {
+            num += ((a - b) * (a - b)) as f64;
+            den += (b * b) as f64;
+        }
+        (num.sqrt() / (den.sqrt() + 1e-12)) as f32
+    }
+
+    /// Convert to a `.fot` tensor record.
+    pub fn to_fot(&self) -> FotTensor {
+        FotTensor::from_f32(&self.shape, &self.data)
+    }
+
+    /// Read a named tensor out of a `.fot` file.
+    pub fn from_fot(file: &FotFile, name: &str) -> Result<Tensor, String> {
+        let t = file.get(name)?;
+        Ok(Tensor::from_vec(&t.shape.clone(), t.to_f32()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_views() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.cols(), 3);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let mut a = Tensor::full(&[4], 2.0);
+        let b = Tensor::full(&[4], 0.5);
+        a.add_assign(&b);
+        assert_eq!(a.data(), &[2.5; 4]);
+        a.sub_assign(&b);
+        a.scale(2.0);
+        assert_eq!(a.data(), &[4.0; 4]);
+    }
+
+    #[test]
+    fn diffs() {
+        let a = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        let b = Tensor::from_vec(&[3], vec![1.0, 2.5, 3.0]);
+        assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-6);
+        assert!(a.rel_l2(&a) < 1e-6);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]).reshape(&[4]);
+        assert_eq!(t.shape(), &[4]);
+        assert_eq!(t.data(), &[1., 2., 3., 4.]);
+    }
+
+    #[test]
+    fn multi_dim_rows() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.rows(), 6);
+        assert_eq!(t.cols(), 4);
+    }
+}

@@ -1,0 +1,94 @@
+//! Test utilities: seeded generators and a lightweight property-test loop.
+//!
+//! proptest is unavailable offline; `prop_check` runs a closure over many
+//! seeded random cases and reports the failing seed so a failure can be
+//! reproduced exactly with `prop_case`.
+
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+
+/// Random tensor with standard-normal entries.
+pub fn randn(rng: &mut Pcg32, shape: &[usize]) -> Tensor {
+    Tensor::from_vec(shape, rng.normal_vec(shape.iter().product()))
+}
+
+/// Random tensor with uniform entries in [lo, hi).
+pub fn rand_uniform(rng: &mut Pcg32, shape: &[usize], lo: f32, hi: f32) -> Tensor {
+    let n = shape.iter().product();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.range_f32(lo, hi)).collect())
+}
+
+/// Random bitmask of `n` bits with approximately `density` ones.
+pub fn rand_mask(rng: &mut Pcg32, n: usize, density: f64) -> Vec<bool> {
+    (0..n).map(|_| rng.f64() < density).collect()
+}
+
+/// Run `cases` property-test iterations; the closure gets a per-case RNG.
+/// Panics with the failing case index + seed on the first failure.
+pub fn prop_check(name: &str, cases: usize, mut f: impl FnMut(&mut Pcg32)) {
+    for case in 0..cases {
+        let seed = 0xf1a5_0000u64 + case as u64;
+        let mut rng = Pcg32::seeded(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed at case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Re-run a single property case by seed (for debugging failures).
+pub fn prop_case(seed: u64, mut f: impl FnMut(&mut Pcg32)) {
+    let mut rng = Pcg32::seeded(seed);
+    f(&mut rng);
+}
+
+/// Assert two tensors are elementwise close.
+#[track_caller]
+pub fn assert_close(a: &Tensor, b: &Tensor, atol: f32, rtol: f32) {
+    assert_eq!(a.shape(), b.shape(), "shape mismatch");
+    for (i, (x, y)) in a.data().iter().zip(b.data()).enumerate() {
+        let tol = atol + rtol * y.abs();
+        assert!(
+            (x - y).abs() <= tol,
+            "element {i}: {x} vs {y} (|diff|={} > tol={tol})",
+            (x - y).abs()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn randn_shape() {
+        let mut r = Pcg32::seeded(1);
+        let t = randn(&mut r, &[3, 5]);
+        assert_eq!(t.shape(), &[3, 5]);
+        assert_eq!(t.numel(), 15);
+    }
+
+    #[test]
+    fn mask_density() {
+        let mut r = Pcg32::seeded(2);
+        let m = rand_mask(&mut r, 10_000, 0.3);
+        let ones = m.iter().filter(|&&b| b).count();
+        assert!((ones as f64 / 10_000.0 - 0.3).abs() < 0.03);
+    }
+
+    #[test]
+    fn prop_check_runs_all_cases() {
+        let mut count = 0;
+        prop_check("counting", 17, |_| count += 1);
+        assert_eq!(count, 17);
+    }
+
+    #[test]
+    #[should_panic]
+    fn assert_close_catches_mismatch() {
+        let a = Tensor::from_vec(&[2], vec![1.0, 1.0]);
+        let b = Tensor::from_vec(&[2], vec![1.0, 1.2]);
+        assert_close(&a, &b, 1e-3, 1e-3);
+    }
+}

@@ -1,0 +1,159 @@
+//! Workload generation: procedural prompts (matching `python/compile/
+//! dataset.py`), request traces with Poisson arrivals, and the video /
+//! editing task variants.
+
+use crate::util::rng::Pcg32;
+
+/// Number of distinct procedural scenes (must match dataset.py).
+pub const N_SHAPES: usize = 4;
+pub const N_COLORS: usize = 6;
+pub const N_POS: usize = 3;
+pub const N_SIZE: usize = 3;
+pub const N_BG: usize = 4;
+
+pub fn num_scenes() -> usize {
+    N_SHAPES * N_COLORS * N_POS * N_POS * N_SIZE * N_BG
+}
+
+/// Caption token ids for a scene — identical formula to dataset.py
+/// (semantic fields + LCG filler words).
+pub fn caption_ids(scene_id: usize, text_tokens: usize) -> Vec<usize> {
+    let mut s = scene_id % num_scenes();
+    let shape = s % N_SHAPES;
+    s /= N_SHAPES;
+    let color = s % N_COLORS;
+    s /= N_COLORS;
+    let px = s % N_POS;
+    s /= N_POS;
+    let py = s % N_POS;
+    s /= N_POS;
+    let size = s % N_SIZE;
+    s /= N_SIZE;
+    let bg = s % N_BG;
+    let mut ids = vec![
+        10 + shape,
+        20 + color,
+        30 + px,
+        40 + py,
+        50 + size,
+        60 + bg,
+    ];
+    let mut h = scene_id as u64;
+    while ids.len() < text_tokens {
+        h = (h.wrapping_mul(1103515245).wrapping_add(12345)) & 0x7FFF_FFFF;
+        ids.push(100 + (h % 100) as usize);
+    }
+    ids.truncate(text_tokens);
+    ids
+}
+
+/// Prompt variant for "video frame f": same scene, one token replaced by a
+/// frame marker so frames share content but differ slightly (the video-task
+/// substitute described in DESIGN.md).
+pub fn video_frame_ids(scene_id: usize, frame: usize, text_tokens: usize) -> Vec<usize> {
+    let mut ids = caption_ids(scene_id, text_tokens);
+    let last = ids.len() - 1;
+    ids[last] = 200 + frame % 50;
+    ids
+}
+
+/// One generation request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub scene: usize,
+    pub prompt_ids: Vec<usize>,
+    pub seed: u64,
+    pub steps: usize,
+    /// Arrival offset from trace start, seconds.
+    pub arrival_s: f64,
+}
+
+/// A synthetic serving trace with Poisson arrivals.
+pub fn poisson_trace(
+    seed: u64,
+    n_requests: usize,
+    rate_per_s: f64,
+    steps: usize,
+    text_tokens: usize,
+) -> Vec<Request> {
+    let mut rng = Pcg32::seeded(seed);
+    let mut t = 0.0;
+    (0..n_requests)
+        .map(|i| {
+            t += rng.exp(rate_per_s);
+            let scene = rng.below(num_scenes());
+            Request {
+                id: i as u64,
+                scene,
+                prompt_ids: caption_ids(scene, text_tokens),
+                seed: rng.next_u64(),
+                steps,
+                arrival_s: t,
+            }
+        })
+        .collect()
+}
+
+/// A fixed evaluation prompt set (deterministic scene ids spread over the
+/// scene space) used by the quality tables so every method sees identical
+/// workloads.
+pub fn eval_scenes(n: usize) -> Vec<usize> {
+    let total = num_scenes();
+    (0..n).map(|i| (i * 997 + 13) % total).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn captions_deterministic_and_in_vocab() {
+        let a = caption_ids(123, 16);
+        let b = caption_ids(123, 16);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 16);
+        assert!(a.iter().all(|&id| id < 256));
+    }
+
+    #[test]
+    fn matches_python_dataset_formula() {
+        // Golden values computed from dataset.py for scene 123:
+        // shape = 123 % 4 = 3; 123/4=30; color = 30 % 6 = 0; 30/6=5;
+        // px = 5 % 3 = 2; 5/3=1; py = 1 % 3 = 1; 1/3=0; size = 0; bg = 0.
+        let ids = caption_ids(123, 8);
+        assert_eq!(&ids[..6], &[13, 20, 32, 41, 50, 60]);
+        // First filler: h = (123*1103515245+12345) & 0x7fffffff.
+        let h = (123u64 * 1103515245 + 12345) & 0x7FFF_FFFF;
+        assert_eq!(ids[6], 100 + (h % 100) as usize);
+    }
+
+    #[test]
+    fn video_ids_differ_only_in_marker() {
+        let a = video_frame_ids(5, 0, 16);
+        let b = video_frame_ids(5, 1, 16);
+        assert_eq!(a[..15], b[..15]);
+        assert_ne!(a[15], b[15]);
+    }
+
+    #[test]
+    fn poisson_trace_monotone_arrivals() {
+        let tr = poisson_trace(1, 20, 5.0, 10, 16);
+        assert_eq!(tr.len(), 20);
+        for w in tr.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+        }
+        // Mean inter-arrival ≈ 1/rate.
+        let mean = tr.last().unwrap().arrival_s / 20.0;
+        assert!(mean > 0.05 && mean < 0.6, "mean={mean}");
+    }
+
+    #[test]
+    fn eval_scenes_distinct() {
+        let s = eval_scenes(8);
+        let mut d = s.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 8);
+    }
+}

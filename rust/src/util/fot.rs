@@ -1,0 +1,255 @@
+//! `.fot` — "FlashOmni tensors" — a minimal safetensors-like container.
+//!
+//! Layout: 4-byte magic `FOT1`, little-endian u64 header length, a JSON
+//! header `{ "tensors": { name: {"dtype": "f32"|"u8"|"i32", "shape": [...],
+//! "offset": n, "nbytes": n }, ... }, "meta": {...} }`, then the raw
+//! little-endian payload. Written by `python/compile/export.py` and by this
+//! module; read by both sides. Used for model weights, golden test vectors,
+//! and generated images.
+
+use super::json::Json;
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"FOT1";
+
+/// Element type of a stored tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    U8,
+    I32,
+}
+
+impl Dtype {
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::U8 => "u8",
+            Dtype::I32 => "i32",
+        }
+    }
+    pub fn size(self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::U8 => 1,
+        }
+    }
+    pub fn from_name(s: &str) -> Result<Self, String> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "u8" => Ok(Dtype::U8),
+            "i32" => Ok(Dtype::I32),
+            other => Err(format!("unknown dtype '{other}'")),
+        }
+    }
+}
+
+/// A tensor as stored in a `.fot` file.
+#[derive(Clone, Debug)]
+pub struct FotTensor {
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl FotTensor {
+    pub fn from_f32(shape: &[usize], values: &[f32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        FotTensor { dtype: Dtype::F32, shape: shape.to_vec(), data }
+    }
+
+    pub fn from_u8(shape: &[usize], values: &[u8]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        FotTensor { dtype: Dtype::U8, shape: shape.to_vec(), data: values.to_vec() }
+    }
+
+    pub fn to_f32(&self) -> Result<Vec<f32>, String> {
+        if self.dtype != Dtype::F32 {
+            return Err(format!("tensor is {}, not f32", self.dtype.name()));
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn to_u8(&self) -> Result<Vec<u8>, String> {
+        if self.dtype != Dtype::U8 {
+            return Err(format!("tensor is {}, not u8", self.dtype.name()));
+        }
+        Ok(self.data.clone())
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// An in-memory `.fot` file: named tensors plus a free-form metadata object.
+#[derive(Clone, Debug, Default)]
+pub struct FotFile {
+    pub tensors: BTreeMap<String, FotTensor>,
+    pub meta: BTreeMap<String, Json>,
+}
+
+impl FotFile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert_f32(&mut self, name: &str, shape: &[usize], values: &[f32]) {
+        self.tensors.insert(name.to_string(), FotTensor::from_f32(shape, values));
+    }
+
+    pub fn insert_u8(&mut self, name: &str, shape: &[usize], values: &[u8]) {
+        self.tensors.insert(name.to_string(), FotTensor::from_u8(shape, values));
+    }
+
+    /// Required tensor lookup.
+    pub fn get(&self, name: &str) -> Result<&FotTensor, String> {
+        self.tensors.get(name).ok_or_else(|| {
+            let have: Vec<&str> = self.tensors.keys().map(|s| s.as_str()).take(8).collect();
+            format!("tensor '{name}' not found (have e.g. {have:?})")
+        })
+    }
+
+    /// Serialize to bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut offset = 0usize;
+        let mut hdr = BTreeMap::new();
+        for (name, t) in &self.tensors {
+            hdr.insert(
+                name.clone(),
+                Json::obj(vec![
+                    ("dtype", Json::Str(t.dtype.name().into())),
+                    ("shape", Json::arr_usize(&t.shape)),
+                    ("offset", Json::Num(offset as f64)),
+                    ("nbytes", Json::Num(t.data.len() as f64)),
+                ]),
+            );
+            offset += t.data.len();
+        }
+        let header = Json::obj(vec![
+            ("tensors", Json::Obj(hdr)),
+            ("meta", Json::Obj(self.meta.clone())),
+        ])
+        .to_string();
+        let mut out = Vec::with_capacity(12 + header.len() + offset);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        for t in self.tensors.values() {
+            out.extend_from_slice(&t.data);
+        }
+        out
+    }
+
+    /// Parse from bytes.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self, String> {
+        if bytes.len() < 12 || &bytes[..4] != MAGIC {
+            return Err("not a FOT1 file".into());
+        }
+        let hlen = u64::from_le_bytes(bytes[4..12].try_into().unwrap()) as usize;
+        if hlen > bytes.len().saturating_sub(12) {
+            return Err("truncated header".into());
+        }
+        let header = std::str::from_utf8(&bytes[12..12 + hlen])
+            .map_err(|_| "header not utf-8".to_string())?;
+        let hv = Json::parse(header)?;
+        let body = &bytes[12 + hlen..];
+        let mut tensors = BTreeMap::new();
+        for (name, spec) in hv.req("tensors")?.as_obj().ok_or("bad tensors field")? {
+            let dtype = Dtype::from_name(spec.req("dtype")?.as_str().ok_or("bad dtype")?)?;
+            let shape: Vec<usize> = spec
+                .req("shape")?
+                .as_arr()
+                .ok_or("bad shape")?
+                .iter()
+                .map(|x| x.as_usize().ok_or("bad dim".to_string()))
+                .collect::<Result<_, _>>()?;
+            let offset = spec.req("offset")?.as_usize().ok_or("bad offset")?;
+            let nbytes = spec.req("nbytes")?.as_usize().ok_or("bad nbytes")?;
+            if offset + nbytes > body.len() {
+                return Err(format!("tensor '{name}' out of bounds"));
+            }
+            if shape.iter().product::<usize>() * dtype.size() != nbytes {
+                return Err(format!("tensor '{name}' shape/nbytes mismatch"));
+            }
+            tensors.insert(
+                name.clone(),
+                FotTensor { dtype, shape, data: body[offset..offset + nbytes].to_vec() },
+            );
+        }
+        let meta = hv
+            .get("meta")
+            .and_then(|m| m.as_obj().cloned())
+            .unwrap_or_default();
+        Ok(FotFile { tensors, meta })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), String> {
+        let bytes = self.to_bytes();
+        let mut f = std::fs::File::create(path.as_ref())
+            .map_err(|e| format!("create {}: {e}", path.as_ref().display()))?;
+        f.write_all(&bytes).map_err(|e| e.to_string())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self, String> {
+        let mut f = std::fs::File::open(path.as_ref())
+            .map_err(|e| format!("open {}: {e}", path.as_ref().display()))?;
+        let mut bytes = Vec::new();
+        f.read_to_end(&mut bytes).map_err(|e| e.to_string())?;
+        Self::from_bytes(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut f = FotFile::new();
+        f.insert_f32("w", &[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.5]);
+        f.insert_u8("sym", &[4], &[224, 235, 197, 0]);
+        f.meta.insert("note".into(), Json::Str("hello".into()));
+        let bytes = f.to_bytes();
+        let g = FotFile::from_bytes(&bytes).unwrap();
+        assert_eq!(g.get("w").unwrap().shape, vec![2, 3]);
+        assert_eq!(g.get("w").unwrap().to_f32().unwrap()[5], 6.5);
+        assert_eq!(g.get("sym").unwrap().to_u8().unwrap(), vec![224, 235, 197, 0]);
+        assert_eq!(g.meta.get("note").unwrap().as_str(), Some("hello"));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(FotFile::from_bytes(b"nope").is_err());
+        assert!(FotFile::from_bytes(b"FOT1\xff\xff\xff\xff\xff\xff\xff\xff").is_err());
+    }
+
+    #[test]
+    fn missing_tensor_message() {
+        let f = FotFile::new();
+        let err = f.get("absent").unwrap_err();
+        assert!(err.contains("absent"));
+    }
+
+    #[test]
+    fn file_io() {
+        let dir = std::env::temp_dir().join("fot_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.fot");
+        let mut f = FotFile::new();
+        f.insert_f32("x", &[3], &[0.5, -1.5, 2.0]);
+        f.save(&path).unwrap();
+        let g = FotFile::load(&path).unwrap();
+        assert_eq!(g.get("x").unwrap().to_f32().unwrap(), vec![0.5, -1.5, 2.0]);
+    }
+}

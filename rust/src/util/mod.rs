@@ -1,0 +1,68 @@
+//! Small self-contained utilities: JSON, RNG, tensor file IO, timing.
+//!
+//! The offline crate registry for this build only carries the `xla` crate's
+//! dependency closure, so serde/serde_json/rand are unavailable; these
+//! modules provide the minimal replacements the rest of the crate needs.
+
+pub mod fot;
+pub mod json;
+pub mod rng;
+
+use std::time::Instant;
+
+/// Measure wall-clock seconds of a closure, returning `(result, seconds)`.
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Ceiling division for usize.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Human-readable engineering formatting (e.g. `1.23G`, `45.6M`).
+pub fn eng(x: f64) -> String {
+    let ax = x.abs();
+    if ax >= 1e12 {
+        format!("{:.2}T", x / 1e12)
+    } else if ax >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if ax >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if ax >= 1e3 {
+        format!("{:.2}K", x / 1e3)
+    } else {
+        format!("{x:.2}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn eng_format() {
+        assert_eq!(eng(1_500_000.0), "1.50M");
+        assert_eq!(eng(2.0e9), "2.00G");
+        assert_eq!(eng(12.0), "12.00");
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, s) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+}

@@ -1,0 +1,154 @@
+//! Cross-validation: the native rust engine must reproduce the JAX/Pallas
+//! goldens in `artifacts/golden.fot` (produced by `make artifacts`), and
+//! the PJRT oracle path must execute the AOT artifacts to the same values.
+//!
+//! These tests are skipped (with a loud message) when `artifacts/` has not
+//! been built yet — run `make artifacts` first.
+
+use flashomni::config::ModelConfig;
+use flashomni::kernels::attention::{flashomni_attention, DecodeMode};
+use flashomni::kernels::gemm_o::{gemm_o_dispatch, WeightPanels};
+use flashomni::kernels::gemm_q::gemm_q;
+use flashomni::model::MiniMMDiT;
+use flashomni::symbols::{BitSymbols, HeadSymbols, LayerSymbols};
+use flashomni::tensor::Tensor;
+use flashomni::util::fot::FotFile;
+
+fn artifacts_dir() -> Option<String> {
+    for dir in ["artifacts", "../artifacts"] {
+        if std::path::Path::new(dir).join("golden.fot").exists() {
+            return Some(dir.to_string());
+        }
+    }
+    eprintln!("SKIP: artifacts/golden.fot not found — run `make artifacts`");
+    None
+}
+
+fn head_syms_from_packed(s_c: &[u8], s_s: &[u8], qg: usize, kg: usize) -> HeadSymbols {
+    let ss_bytes_per_row = kg.div_ceil(8);
+    // golden s_s is row-packed [qg, bytes]; flatten to a row-major bitmask.
+    let mut m_s = Vec::with_capacity(qg * kg);
+    for i in 0..qg {
+        let row = BitSymbols::from_bytes(
+            s_s[i * ss_bytes_per_row..(i + 1) * ss_bytes_per_row].to_vec(),
+            kg,
+        );
+        m_s.extend(row.to_bits());
+    }
+    let m_c = BitSymbols::from_bytes(s_c.to_vec(), qg).to_bits();
+    HeadSymbols::from_masks(&m_c, &m_s, kg, 1)
+}
+
+#[test]
+fn native_attention_matches_pallas_golden() {
+    let Some(dir) = artifacts_dir() else { return };
+    let g = FotFile::load(format!("{dir}/golden.fot")).unwrap();
+    let q = Tensor::from_fot(&g, "attn.q").unwrap();
+    let k = Tensor::from_fot(&g, "attn.k").unwrap();
+    let v = Tensor::from_fot(&g, "attn.v").unwrap();
+    let want = Tensor::from_fot(&g, "attn.out").unwrap();
+    let block = g.get("attn.block").unwrap();
+    // block stored as i32 pair
+    let bq = i32::from_le_bytes(block.data[0..4].try_into().unwrap()) as usize;
+    let bk = i32::from_le_bytes(block.data[4..8].try_into().unwrap()) as usize;
+    let (n, _d) = (q.rows(), q.cols());
+    let (qg, kg) = (n.div_ceil(bq), n.div_ceil(bk));
+    let s_c = g.get("attn.s_c").unwrap().to_u8().unwrap();
+    let s_s = g.get("attn.s_s").unwrap().to_u8().unwrap();
+    let sym = head_syms_from_packed(&s_c, &s_s, qg, kg);
+    let (got, stats) =
+        flashomni_attention(&q, &k, &v, &sym, bq, bk, None, DecodeMode::RowCached);
+    assert!(stats.computed_pairs < stats.total_pairs, "golden symbols should skip work");
+    let diff = got.max_abs_diff(&want);
+    assert!(diff < 5e-5, "native attention vs Pallas golden: max diff {diff}");
+}
+
+#[test]
+fn native_gemm_q_matches_pallas_golden() {
+    let Some(dir) = artifacts_dir() else { return };
+    let g = FotFile::load(format!("{dir}/golden.fot")).unwrap();
+    let x = Tensor::from_fot(&g, "gq.x").unwrap();
+    let w = Tensor::from_fot(&g, "gq.w").unwrap();
+    let want = Tensor::from_fot(&g, "gq.out").unwrap();
+    let s_c = g.get("gq.s_c").unwrap();
+    let heads = s_c.shape[0];
+    let bytes = s_c.shape[1];
+    let bq = 8;
+    let qg = x.rows() / bq;
+    let packed = s_c.to_u8().unwrap();
+    let syms = LayerSymbols {
+        heads: (0..heads)
+            .map(|h| {
+                let m_c =
+                    BitSymbols::from_bytes(packed[h * bytes..(h + 1) * bytes].to_vec(), qg)
+                        .to_bits();
+                HeadSymbols::from_masks(&m_c, &vec![true; qg * qg], qg, 1)
+            })
+            .collect(),
+    };
+    let (got, _) = gemm_q(&x, &w, &syms, bq, None);
+    let diff = got.max_abs_diff(&want);
+    assert!(diff < 5e-4, "native GEMM-Q vs Pallas golden: max diff {diff}");
+}
+
+#[test]
+fn native_gemm_o_matches_pallas_golden() {
+    let Some(dir) = artifacts_dir() else { return };
+    let g = FotFile::load(format!("{dir}/golden.fot")).unwrap();
+    let o = Tensor::from_fot(&g, "go.o").unwrap();
+    let w = Tensor::from_fot(&g, "go.w").unwrap();
+    let bias = Tensor::from_fot(&g, "go.bias").unwrap();
+    let want = Tensor::from_fot(&g, "go.out").unwrap();
+    let s_c = g.get("gq.s_c").unwrap(); // same symbols as gemm-q golden
+    let heads = s_c.shape[0];
+    let bytes = s_c.shape[1];
+    let bq = 8;
+    let qg = o.rows() / bq;
+    let packed = s_c.to_u8().unwrap();
+    let syms = LayerSymbols {
+        heads: (0..heads)
+            .map(|h| {
+                let m_c =
+                    BitSymbols::from_bytes(packed[h * bytes..(h + 1) * bytes].to_vec(), qg)
+                        .to_bits();
+                HeadSymbols::from_masks(&m_c, &vec![true; qg * qg], qg, 1)
+            })
+            .collect(),
+    };
+    let panels = WeightPanels::new(&w, heads);
+    let (got, _) = gemm_o_dispatch(&o, &panels, &syms, bq, &bias);
+    let diff = got.max_abs_diff(&want);
+    assert!(diff < 1e-3, "native GEMM-O vs Pallas golden: max diff {diff}");
+}
+
+#[test]
+fn native_model_matches_jax_golden_step() {
+    // The strongest cross-check: the full rust MiniMMDiT forward on the
+    // trained weights equals the JAX forward (recorded in the golden).
+    let Some(dir) = artifacts_dir() else { return };
+    let g = FotFile::load(format!("{dir}/golden.fot")).unwrap();
+    let model = MiniMMDiT::load(&format!("{dir}/weights.fot")).unwrap();
+    let ids_raw = g.get("mmdit.ids").unwrap();
+    let ids: Vec<usize> = ids_raw
+        .data
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as usize)
+        .collect();
+    let patches = Tensor::from_fot(&g, "mmdit.patches").unwrap();
+    let want = Tensor::from_fot(&g, "mmdit.velocity").unwrap();
+    let got = model.forward_dense(&ids, &patches, 0.5);
+    let rel = got.rel_l2(&want);
+    assert!(
+        rel < 1e-4,
+        "rust model vs JAX model rel-L2 {rel} (max abs diff {})",
+        got.max_abs_diff(&want)
+    );
+}
+
+#[test]
+fn weights_config_matches_mini() {
+    let Some(dir) = artifacts_dir() else { return };
+    let model = MiniMMDiT::load(&format!("{dir}/weights.fot")).unwrap();
+    assert_eq!(model.cfg, ModelConfig::mini());
+    assert!(model.param_count() > 1_000_000);
+}

@@ -1,0 +1,146 @@
+//! PJRT integration: load the AOT HLO-text artifacts, execute them on the
+//! CPU PJRT client from rust, and compare against both the goldens and the
+//! native engine. This is the L3←L2←L1 composition proof.
+
+use flashomni::model::MiniMMDiT;
+use flashomni::runtime::{load_param_list, ArtifactRuntime, Input};
+use flashomni::tensor::Tensor;
+use flashomni::util::fot::FotFile;
+
+fn artifacts_dir() -> Option<String> {
+    for dir in ["artifacts", "../artifacts"] {
+        if std::path::Path::new(dir).join("mmdit_step.hlo.txt").exists() {
+            return Some(dir.to_string());
+        }
+    }
+    eprintln!("SKIP: artifacts not found — run `make artifacts`");
+    None
+}
+
+#[test]
+fn pjrt_attention_artifact_matches_golden() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = ArtifactRuntime::cpu(&dir).unwrap();
+    rt.load("attention_masked").unwrap();
+    let g = FotFile::load(format!("{dir}/golden.fot")).unwrap();
+    let q = Tensor::from_fot(&g, "attn.q").unwrap();
+    let k = Tensor::from_fot(&g, "attn.k").unwrap();
+    let v = Tensor::from_fot(&g, "attn.v").unwrap();
+    let want = Tensor::from_fot(&g, "attn.out").unwrap();
+    let s_c: Vec<i32> =
+        g.get("attn.s_c").unwrap().to_u8().unwrap().iter().map(|&b| b as i32).collect();
+    let s_s_t = g.get("attn.s_s").unwrap().clone();
+    let s_s: Vec<i32> = s_s_t.to_u8().unwrap().iter().map(|&b| b as i32).collect();
+    let out = rt
+        .execute(
+            "attention_masked",
+            &[
+                Input::F32(&q),
+                Input::F32(&k),
+                Input::F32(&v),
+                Input::I32(&s_c, &[s_c.len()]),
+                Input::I32(&s_s, &s_s_t.shape),
+            ],
+            &[q.shape()],
+        )
+        .unwrap();
+    let diff = out[0].max_abs_diff(&want);
+    assert!(diff < 1e-4, "PJRT attention vs golden: {diff}");
+}
+
+#[test]
+fn pjrt_model_step_matches_native_engine() {
+    // Execute the full trained model step on PJRT and compare with the
+    // rust-native dense forward — the dual-engine agreement test.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = ArtifactRuntime::cpu(&dir).unwrap();
+    rt.load("mmdit_step").unwrap();
+    let params = load_param_list(&dir).unwrap();
+    let model = MiniMMDiT::load(&format!("{dir}/weights.fot")).unwrap();
+    let g = FotFile::load(format!("{dir}/golden.fot")).unwrap();
+    let ids_raw = g.get("mmdit.ids").unwrap();
+    let ids_i32: Vec<i32> = ids_raw
+        .data
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    let ids_usize: Vec<usize> = ids_i32.iter().map(|&i| i as usize).collect();
+    let patches = Tensor::from_fot(&g, "mmdit.patches").unwrap();
+    let shape = [model.cfg.vision_tokens(), model.cfg.patch_dim()];
+    for t in [0.1f32, 0.5, 0.9] {
+        let oracle = rt.mmdit_step(&params, &ids_i32, &patches, t, &shape).unwrap();
+        let native = model.forward_dense(&ids_usize, &patches, t as f64);
+        let rel = native.rel_l2(&oracle);
+        assert!(rel < 1e-4, "t={t}: native vs PJRT rel-L2 {rel}");
+    }
+}
+
+#[test]
+fn pjrt_gemm_artifacts_execute() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = ArtifactRuntime::cpu(&dir).unwrap();
+    rt.load("gemm_q").unwrap();
+    rt.load("gemm_o").unwrap();
+    let g = FotFile::load(format!("{dir}/golden.fot")).unwrap();
+    let x = Tensor::from_fot(&g, "gq.x").unwrap();
+    let w = Tensor::from_fot(&g, "gq.w").unwrap();
+    let want = Tensor::from_fot(&g, "gq.out").unwrap();
+    let s_c_t = g.get("gq.s_c").unwrap().clone();
+    let s_c: Vec<i32> = s_c_t.to_u8().unwrap().iter().map(|&b| b as i32).collect();
+    let out = rt
+        .execute(
+            "gemm_q",
+            &[Input::F32(&x), Input::F32(&w), Input::I32(&s_c, &s_c_t.shape)],
+            &[x.shape()],
+        )
+        .unwrap();
+    assert!(out[0].max_abs_diff(&want) < 1e-3);
+
+    let o = Tensor::from_fot(&g, "go.o").unwrap();
+    let wo = Tensor::from_fot(&g, "go.w").unwrap();
+    let bias = Tensor::from_fot(&g, "go.bias").unwrap();
+    let want = Tensor::from_fot(&g, "go.out").unwrap();
+    let out = rt
+        .execute(
+            "gemm_o",
+            &[
+                Input::F32(&o),
+                Input::F32(&wo),
+                Input::F32(&bias),
+                Input::I32(&s_c, &s_c_t.shape),
+            ],
+            &[o.shape()],
+        )
+        .unwrap();
+    assert!(out[0].max_abs_diff(&want) < 1e-3);
+}
+
+#[test]
+fn missing_artifact_is_a_clean_error() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = ArtifactRuntime::cpu(&dir).unwrap();
+    assert!(rt.load("does_not_exist").is_err());
+    assert!(rt.execute("unloaded", &[], &[]).is_err());
+}
+
+#[test]
+fn pjrt_generator_matches_native_dense_generation() {
+    // Full sampling loops on the two engines must agree: dual-engine
+    // agreement at the *generation* level, not just per-step.
+    let Some(dir) = artifacts_dir() else { return };
+    let gen = flashomni::runtime::PjRtGenerator::load(&dir).unwrap();
+    let model = MiniMMDiT::load(&format!("{dir}/weights.fot")).unwrap();
+    let ids: Vec<usize> = flashomni::trace::caption_ids(7, model.cfg.text_tokens);
+    let steps = 6;
+    let (oracle_img, wall) = gen.generate(&ids, 3, steps).unwrap();
+    assert!(wall > 0.0);
+    let mut native = flashomni::engine::DiTEngine::new(
+        model,
+        flashomni::engine::Policy::full(),
+        8,
+        8,
+    );
+    let r = native.generate(&ids, 3, steps);
+    let rel = r.image.rel_l2(&oracle_img);
+    assert!(rel < 1e-3, "native vs PJRT full generation rel-L2 {rel}");
+}
