@@ -8,8 +8,11 @@
 //! Env: FO_SEQS (default "2048,4096"), FO_BUDGET (default 0.3).
 
 use flashomni::bench::{write_csv, Bencher, Measurement};
-use flashomni::kernels::attention::{attention_dense, flashomni_attention, DecodeMode};
+use flashomni::kernels::attention::{
+    attention_dense, flashomni_attention, flashomni_attention_symbols,
+};
 use flashomni::kernels::flops;
+use flashomni::plan::{DecodeMode, HeadPlan};
 use flashomni::symbols::random_symbols;
 use flashomni::testutil::randn;
 use flashomni::util::rng::Pcg32;
@@ -42,16 +45,10 @@ fn main() {
             for fc in [0.1f64, 0.2, 0.4, 0.6, 0.8] {
                 let sym = random_symbols(&mut rng, t, t, 1, fc, bss);
                 let s = sym.pair_sparsity();
+                let plan = HeadPlan::from_symbols(&sym, t, t, DecodeMode::RowCached);
                 let m = bencher.run(&format!("seq={seq} {gname} fc={fc}"), || {
                     std::hint::black_box(flashomni_attention(
-                        &q,
-                        &k,
-                        &v,
-                        &sym,
-                        block,
-                        block,
-                        None,
-                        DecodeMode::RowCached,
+                        &q, &k, &v, &plan, block, block, None,
                     ));
                 });
                 let speedup = m.speedup_vs(&dense);
@@ -64,38 +61,44 @@ fn main() {
             }
         }
         // Decode-overhead ablation (paper: FC beats BSS at equal sparsity
-        // because BSS decodes repeatedly along the reduction axis).
+        // because BSS decodes repeatedly along the reduction axis). The
+        // symbol-decoding kernel shows both decode schemes; the plan-based
+        // kernel is the zero-decode upper bound.
         let sym = random_symbols(&mut rng, t, t, 1, 0.0, 0.6);
+        let plan = HeadPlan::from_symbols(&sym, t, t, DecodeMode::RowCached);
         let cached = bencher.run(&format!("seq={seq} row-cached decode"), || {
-            std::hint::black_box(flashomni_attention(
+            std::hint::black_box(flashomni_attention_symbols(
                 &q, &k, &v, &sym, block, block, None, DecodeMode::RowCached,
             ));
         });
         let naive = bencher.run(&format!("seq={seq} per-access decode"), || {
-            std::hint::black_box(flashomni_attention(
+            std::hint::black_box(flashomni_attention_symbols(
                 &q, &k, &v, &sym, block, block, None, DecodeMode::PerAccess,
             ));
         });
+        let planned = bencher.run(&format!("seq={seq} precompiled plan"), || {
+            std::hint::black_box(flashomni_attention(&q, &k, &v, &plan, block, block, None));
+        });
         println!(
-            "decode ablation: row-cached {:.3}ms vs per-access {:.3}ms ({:+.1}% overhead)",
+            "decode ablation: plan {:.3}ms vs row-cached {:.3}ms vs per-access {:.3}ms ({:+.1}% naive overhead)",
+            planned.median_s * 1e3,
             cached.median_s * 1e3,
             naive.median_s * 1e3,
             100.0 * (naive.median_s / cached.median_s - 1.0)
         );
         rows.push((cached, None));
         rows.push((naive, None));
+        rows.push((planned, None));
         // FC vs BSS at matched sparsity (paper: 4.97× vs 4.6× at 80%).
         let fc_sym = random_symbols(&mut rng, t, t, 1, 0.8, 0.0);
         let bss_sym = random_symbols(&mut rng, t, t, 1, 0.0, 0.8);
+        let fc_plan = HeadPlan::from_symbols(&fc_sym, t, t, DecodeMode::RowCached);
+        let bss_plan = HeadPlan::from_symbols(&bss_sym, t, t, DecodeMode::RowCached);
         let m_fc = bencher.run(&format!("seq={seq} FC80"), || {
-            std::hint::black_box(flashomni_attention(
-                &q, &k, &v, &fc_sym, block, block, None, DecodeMode::RowCached,
-            ));
+            std::hint::black_box(flashomni_attention(&q, &k, &v, &fc_plan, block, block, None));
         });
         let m_bss = bencher.run(&format!("seq={seq} BSS80"), || {
-            std::hint::black_box(flashomni_attention(
-                &q, &k, &v, &bss_sym, block, block, None, DecodeMode::RowCached,
-            ));
+            std::hint::black_box(flashomni_attention(&q, &k, &v, &bss_plan, block, block, None));
         });
         println!(
             "FC vs BSS at ~80%: FC {:.2}x  BSS {:.2}x (paper: FC 4.97x > BSS 4.6x)",

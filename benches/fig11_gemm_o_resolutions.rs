@@ -9,7 +9,7 @@
 use flashomni::bench::{write_csv, Bencher, Measurement};
 use flashomni::kernels::flops;
 use flashomni::kernels::gemm_o::{gemm_o_dispatch, gemm_o_update, WeightPanels};
-
+use flashomni::plan::{DecodeMode, SparsePlan};
 use flashomni::symbols::{random_symbols, LayerSymbols};
 use flashomni::testutil::randn;
 use flashomni::util::rng::Pcg32;
@@ -33,11 +33,11 @@ fn main() {
         let o = randn(&mut rng, &[seq, d]);
         let w = randn(&mut rng, &[d, d]);
         let panels = WeightPanels::new(&w, heads);
-        // Fair baseline: same tiled kernel, dense symbols, zero bias.
-        let dense_syms = LayerSymbols::dense(heads, t, t, 1);
+        // Fair baseline: same tiled kernel, dense plan, zero bias.
+        let dense_plan = SparsePlan::dense(heads, t, t, block, block);
         let zero_bias = flashomni::tensor::Tensor::zeros(&[seq, d]);
         let dense = bencher.run(&format!("{label} dense"), || {
-            std::hint::black_box(gemm_o_dispatch(&o, &panels, &dense_syms, block, &zero_bias));
+            std::hint::black_box(gemm_o_dispatch(&o, &panels, &dense_plan, &zero_bias));
         });
         rows.push((dense.clone(), Some(1.0)));
         for interval in [4usize, 6, 8] {
@@ -46,12 +46,13 @@ fn main() {
                     .map(|_| random_symbols(&mut rng, t, t, 1, sparsity, 0.0))
                     .collect(),
             };
-            let (_, bias, _) = gemm_o_update(&o, &panels, &syms, block);
+            let plan = SparsePlan::compile(&syms, t, t, block, block, DecodeMode::RowCached);
+            let (_, bias, _) = gemm_o_update(&o, &panels, &plan);
             let update = bencher.run(&format!("{label} update N={interval}"), || {
-                std::hint::black_box(gemm_o_update(&o, &panels, &syms, block));
+                std::hint::black_box(gemm_o_update(&o, &panels, &plan));
             });
             let dispatch = bencher.run(&format!("{label} dispatch N={interval}"), || {
-                std::hint::black_box(gemm_o_dispatch(&o, &panels, &syms, block, &bias));
+                std::hint::black_box(gemm_o_dispatch(&o, &panels, &plan, &bias));
             });
             let fo = update.median_s + (interval - 1) as f64 * dispatch.median_s;
             let speedup = interval as f64 * dense.median_s / fo;

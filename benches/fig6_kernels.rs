@@ -2,18 +2,29 @@
 //! sparse GEMM-Q, sparse GEMM-O (N = 6 amortized), and the FlashOmni
 //! attention kernel under FC-only / BSS-only / FC+BSS random symbols.
 //!
+//! All sparse kernels run from a [`SparsePlan`]/[`HeadPlan`] compiled once
+//! outside the timed region (the engine compiles once per Update window
+//! and reuses the plan across Dispatch steps, so per-call compile cost is
+//! amortized away); the one-off compile cost is measured separately and
+//! reported in the JSON output.
+//!
 //! Shapes are 17K-scaled (seq 2048, head dim 64, block 64) per DESIGN.md.
 //! Expected shape (paper): attention and GEMM-Q track the theoretical
 //! linear law ~1:1; GEMM-O lands at 85–95% of the Eq. 5 bound.
 //!
+//! Besides the human-readable table + CSV, the bench emits a
+//! machine-readable `BENCH_fig6.json` (per-kernel ns + sparsity) so later
+//! PRs have a perf trajectory to compare against.
+//!
 //! Env: FO_SEQ (default 2048), FO_BUDGET seconds/case (default 0.4).
 
 use flashomni::bench::{print_table, write_csv, Bencher, Measurement};
-use flashomni::kernels::attention::{attention_dense, flashomni_attention, DecodeMode};
+use flashomni::kernels::attention::{attention_dense, flashomni_attention};
 use flashomni::kernels::flops;
 use flashomni::kernels::gemm_o::{gemm_o_dispatch, gemm_o_update, WeightPanels};
 use flashomni::kernels::gemm_q::gemm_q;
-use flashomni::symbols::{random_symbols, LayerSymbols};
+use flashomni::plan::{DecodeMode, HeadPlan, SparsePlan};
+use flashomni::symbols::random_symbols;
 use flashomni::testutil::randn;
 use flashomni::util::rng::Pcg32;
 
@@ -25,6 +36,17 @@ fn env_f64(key: &str, default: f64) -> f64 {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+/// One machine-readable result row for BENCH_fig6.json.
+fn json_row(kernel: &str, case: &str, sparsity: f64, m: &Measurement, speedup: f64) -> String {
+    format!(
+        "{{\"kernel\":\"{kernel}\",\"case\":\"{case}\",\"sparsity\":{sparsity:.6},\
+         \"median_ns\":{:.0},\"min_ns\":{:.0},\"iters\":{},\"speedup\":{speedup:.4}}}",
+        m.median_s * 1e9,
+        m.min_s * 1e9,
+        m.iters
+    )
+}
+
 fn main() {
     let seq = env_usize("FO_SEQ", 2048);
     let block = 64;
@@ -33,6 +55,7 @@ fn main() {
     let bencher = Bencher { warmup: 1, min_iters: 3, budget_s: env_f64("FO_BUDGET", 0.4) };
     let mut rng = Pcg32::seeded(0x516);
     let t = seq / block;
+    let mut json_rows: Vec<String> = Vec::new();
 
     println!("# Figure 6 — kernel speedup vs sparsity (seq {seq}, block {block}, d {d})");
 
@@ -43,6 +66,7 @@ fn main() {
     let dense = bencher.run("attention dense", || {
         std::hint::black_box(attention_dense(&q, &k, &v, block, block));
     });
+    json_rows.push(json_row("attention", "dense", 0.0, &dense, 1.0));
     let mut rows: Vec<(Measurement, Option<f64>)> = vec![(dense.clone(), Some(1.0))];
     for (label, fc_on, bss_on) in
         [("FC", true, false), ("BSS", false, true), ("FC+BSS", true, true)]
@@ -60,17 +84,10 @@ fn main() {
             };
             let sym = random_symbols(&mut rng, t, t, 1, fc, bss);
             let actual = sym.pair_sparsity();
+            // Symbols → plan, decoded once outside the timed region.
+            let plan = HeadPlan::from_symbols(&sym, t, t, DecodeMode::RowCached);
             let m = bencher.run(&format!("attention {label} s={actual:.2}"), || {
-                std::hint::black_box(flashomni_attention(
-                    &q,
-                    &k,
-                    &v,
-                    &sym,
-                    block,
-                    block,
-                    None,
-                    DecodeMode::RowCached,
-                ));
+                std::hint::black_box(flashomni_attention(&q, &k, &v, &plan, block, block, None));
             });
             let speedup = m.speedup_vs(&dense);
             let theory = flops::attention_theoretical_speedup(actual);
@@ -78,28 +95,41 @@ fn main() {
                 "attention {label:<7} sparsity {actual:.3}  speedup {speedup:.2}x  theory {theory:.2}x  ratio {:.1}%",
                 100.0 * speedup / theory
             );
+            json_rows.push(json_row("attention", label, actual, &m, speedup));
             rows.push((m, Some(speedup)));
         }
+    }
+    // One-off symbol→plan compile cost (amortized over a Dispatch window).
+    let sym = random_symbols(&mut rng, t, t, 1, 0.5, 0.3);
+    for decode in [DecodeMode::RowCached, DecodeMode::PerAccess] {
+        let m = bencher.run(&format!("plan compile {decode:?}"), || {
+            std::hint::black_box(HeadPlan::from_symbols(&sym, t, t, decode));
+        });
+        println!("plan compile {decode:?}: {:.1}us per head", m.median_s * 1e6);
+        json_rows.push(json_row("plan_compile", &format!("{decode:?}"), sym.pair_sparsity(), &m, 0.0));
+        rows.push((m, None));
     }
 
     // ---------------- GEMM-Q (spatial skipping) ----------------
     let d_in = heads * d;
     let x = randn(&mut rng, &[seq, d_in]);
     let w = randn(&mut rng, &[d_in, d_in]);
-    // Fair baseline: gemm_q itself with all-dense symbols.
-    let dense_syms_q = LayerSymbols::dense(heads, t, t, 1);
+    // Fair baseline: gemm_q itself with an all-dense plan.
+    let dense_plan_q = SparsePlan::dense(heads, t, t, block, block);
     let gq_dense = bencher.run("gemm_q dense", || {
-        std::hint::black_box(gemm_q(&x, &w, &dense_syms_q, block, None));
+        std::hint::black_box(gemm_q(&x, &w, &dense_plan_q, None));
     });
+    json_rows.push(json_row("gemm_q", "dense", 0.0, &gq_dense, 1.0));
     rows.push((gq_dense.clone(), Some(1.0)));
     for sparsity in [0.1, 0.2, 0.4, 0.6, 0.8, 0.9] {
-        let syms = LayerSymbols {
+        let syms = flashomni::symbols::LayerSymbols {
             heads: (0..heads)
                 .map(|_| random_symbols(&mut rng, t, t, 1, sparsity, 0.0))
                 .collect(),
         };
+        let plan = SparsePlan::compile(&syms, t, t, block, block, DecodeMode::RowCached);
         let m = bencher.run(&format!("gemm_q s={sparsity}"), || {
-            std::hint::black_box(gemm_q(&x, &w, &syms, block, None));
+            std::hint::black_box(gemm_q(&x, &w, &plan, None));
         });
         let speedup = m.speedup_vs(&gq_dense);
         let theory = 1.0 / (1.0 - sparsity);
@@ -107,6 +137,7 @@ fn main() {
             "gemm_q            sparsity {sparsity:.2}  speedup {speedup:.2}x  theory {theory:.2}x  ratio {:.1}%",
             100.0 * speedup / theory
         );
+        json_rows.push(json_row("gemm_q", "random", sparsity, &m, speedup));
         rows.push((m, Some(speedup)));
     }
 
@@ -115,25 +146,27 @@ fn main() {
     let o = randn(&mut rng, &[seq, d_in]);
     let wo = randn(&mut rng, &[d_in, d_in]);
     let panels = WeightPanels::new(&wo, heads);
-    // Fair baseline: the SAME tiled kernel, dense symbols, zero bias.
-    let dense_syms_o = LayerSymbols::dense(heads, t, t, 1);
+    // Fair baseline: the SAME tiled kernel, a dense plan, zero bias.
+    let dense_plan_o = SparsePlan::dense(heads, t, t, block, block);
     let zero_bias = flashomni::tensor::Tensor::zeros(&[seq, d_in]);
     let go_dense = bencher.run("gemm_o dense", || {
-        std::hint::black_box(gemm_o_dispatch(&o, &panels, &dense_syms_o, block, &zero_bias));
+        std::hint::black_box(gemm_o_dispatch(&o, &panels, &dense_plan_o, &zero_bias));
     });
+    json_rows.push(json_row("gemm_o", "dense", 0.0, &go_dense, 1.0));
     rows.push((go_dense.clone(), Some(1.0)));
     for sparsity in [0.5, 0.7, 0.8, 0.9] {
-        let syms = LayerSymbols {
+        let syms = flashomni::symbols::LayerSymbols {
             heads: (0..heads)
                 .map(|_| random_symbols(&mut rng, t, t, 1, sparsity, 0.0))
                 .collect(),
         };
-        let (_, bias, _) = gemm_o_update(&o, &panels, &syms, block);
+        let plan = SparsePlan::compile(&syms, t, t, block, block, DecodeMode::RowCached);
+        let (_, bias, _) = gemm_o_update(&o, &panels, &plan);
         let update = bencher.run(&format!("gemm_o update s={sparsity}"), || {
-            std::hint::black_box(gemm_o_update(&o, &panels, &syms, block));
+            std::hint::black_box(gemm_o_update(&o, &panels, &plan));
         });
         let dispatch = bencher.run(&format!("gemm_o dispatch s={sparsity}"), || {
-            std::hint::black_box(gemm_o_dispatch(&o, &panels, &syms, block, &bias));
+            std::hint::black_box(gemm_o_dispatch(&o, &panels, &plan, &bias));
         });
         // Amortized: 1 update + (N−1) dispatches vs N dense projections.
         let fo_time = update.median_s + (interval - 1) as f64 * dispatch.median_s;
@@ -144,10 +177,21 @@ fn main() {
             "gemm_o (N={interval})      sparsity {sparsity:.2}  speedup {speedup:.2}x  theory {theory:.2}x  ratio {:.1}%",
             100.0 * speedup / theory
         );
+        json_rows.push(json_row("gemm_o_update", "random", sparsity, &update, 0.0));
+        json_rows.push(json_row("gemm_o_dispatch", "random", sparsity, &dispatch, speedup));
         rows.push((update, None));
         rows.push((dispatch, Some(speedup)));
     }
 
     print_table("fig6 raw measurements", &rows);
     let _ = write_csv("reports/fig6_kernels.csv", &rows);
+    let json = format!(
+        "{{\"bench\":\"fig6_kernels\",\"seq\":{seq},\"block\":{block},\"head_dim\":{d},\
+         \"heads\":{heads},\"gemm_o_interval\":{interval},\"rows\":[\n{}\n]}}\n",
+        json_rows.join(",\n")
+    );
+    match std::fs::write("BENCH_fig6.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_fig6.json ({} rows)", json_rows.len()),
+        Err(e) => eprintln!("could not write BENCH_fig6.json: {e}"),
+    }
 }

@@ -70,30 +70,49 @@ fn main() -> Result<(), String> {
         dense_rep.p50_latency_s / fo_rep.p50_latency_s
     );
 
-    // PJRT oracle path: one dense denoise step through the AOT artifact.
-    if std::path::Path::new("artifacts/mmdit_step.hlo.txt").exists() {
-        use flashomni::runtime::{load_param_list, ArtifactRuntime};
-        let mut rt = ArtifactRuntime::cpu("artifacts").map_err(|e| e.to_string())?;
-        rt.load("mmdit_step").map_err(|e| e.to_string())?;
-        let params = load_param_list("artifacts").map_err(|e| e.to_string())?;
-        let patches = flashomni::diffusion::initial_noise(&model.cfg, 1);
-        let ids: Vec<i32> =
-            trace[0].prompt_ids.iter().map(|&i| i as i32).collect();
-        let t0 = std::time::Instant::now();
-        let v = rt
-            .mmdit_step(
-                &params,
-                &ids,
-                &patches,
-                0.5,
-                &[model.cfg.vision_tokens(), model.cfg.patch_dim()],
-            )
-            .map_err(|e| e.to_string())?;
-        println!(
-            "\nPJRT oracle step: {:.3}s, output norm {:.3} (artifact path live)",
-            t0.elapsed().as_secs_f64(),
-            v.data().iter().map(|x| (x * x) as f64).sum::<f64>().sqrt()
-        );
+    // PJRT oracle path: one dense denoise step through the AOT artifact
+    // (requires the off-by-default `pjrt` feature).
+    pjrt_oracle_step(&model, &trace)?;
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_oracle_step(
+    model: &MiniMMDiT,
+    trace: &[flashomni::trace::Request],
+) -> Result<(), String> {
+    if !std::path::Path::new("artifacts/mmdit_step.hlo.txt").exists() {
+        return Ok(());
     }
+    use flashomni::runtime::{load_param_list, ArtifactRuntime};
+    let mut rt = ArtifactRuntime::cpu("artifacts").map_err(|e| e.to_string())?;
+    rt.load("mmdit_step").map_err(|e| e.to_string())?;
+    let params = load_param_list("artifacts").map_err(|e| e.to_string())?;
+    let patches = flashomni::diffusion::initial_noise(&model.cfg, 1);
+    let ids: Vec<i32> = trace[0].prompt_ids.iter().map(|&i| i as i32).collect();
+    let t0 = std::time::Instant::now();
+    let v = rt
+        .mmdit_step(
+            &params,
+            &ids,
+            &patches,
+            0.5,
+            &[model.cfg.vision_tokens(), model.cfg.patch_dim()],
+        )
+        .map_err(|e| e.to_string())?;
+    println!(
+        "\nPJRT oracle step: {:.3}s, output norm {:.3} (artifact path live)",
+        t0.elapsed().as_secs_f64(),
+        v.data().iter().map(|x| (x * x) as f64).sum::<f64>().sqrt()
+    );
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_oracle_step(
+    _model: &MiniMMDiT,
+    _trace: &[flashomni::trace::Request],
+) -> Result<(), String> {
+    println!("\n(pjrt feature disabled — skipping the PJRT oracle step)");
     Ok(())
 }

@@ -1,17 +1,36 @@
-//! The FlashOmni **Update–Dispatch execution engine** (§3.2, Figure 4).
+//! The FlashOmni **Update–Dispatch execution engine** (§3.2, Figure 4),
+//! organized as a **symbols → plan → kernels** pipeline.
 //!
 //! [`DiTEngine`] drives a full denoising run of the MiniMMDiT model under a
-//! sparsity [`Policy`]. Per layer and step it takes one of three paths:
+//! sparsity [`Policy`]. The division of labour is:
+//!
+//! 1. **Policies emit symbols.** At every refresh point a [`Policy`]
+//!    produces logical masks from the fresh per-head Q/K, which are packed
+//!    into the paper's unified bit symbols (`S_c`/`S_s`,
+//!    [`crate::symbols`]).
+//! 2. **The engine compiles symbols into plans.** The bit streams are
+//!    decoded exactly once into a [`SparsePlan`] per layer
+//!    ([`crate::plan`]): CSR live-block index lists for the joint sequence
+//!    plus row-sliced views for the text and vision streams. Plans are
+//!    **reused across every Dispatch step** of the Update window — no
+//!    per-step, per-tile symbol decoding anywhere in the hot path.
+//! 3. **Kernels consume plans.** GEMM-Q, the FlashOmni attention kernel,
+//!    and GEMM-O all iterate only live indices; independent attention
+//!    heads are dispatched in parallel via `std::thread::scope`. All
+//!    tile/pair statistics are derived from the plan (one source of truth
+//!    for `metrics/` and `report/`).
+//!
+//! Per layer and step the engine takes one of three paths:
 //!
 //! * **Full** (Warmup / Update): dense QKV + attention; the policy refreshes
-//!   the unified sparse symbols from the fresh per-head Q/K; the joint
-//!   attention output is pushed into the layer's TaylorSeer cache; the
-//!   GEMM-O stage-1 pass projects every finite difference of the cached
-//!   tiles into the bias stacks `B_c` (Eq. 4 linearity).
+//!   the symbols, the engine recompiles the plans; the joint attention
+//!   output is pushed into the layer's TaylorSeer cache; the GEMM-O
+//!   stage-1 pass projects every finite difference of the cached tiles
+//!   into the bias stacks `B_c` (Eq. 4 linearity).
 //! * **Sparse** (Dispatch): GEMM-Q skips cached `(block, head)` tiles, the
 //!   FlashOmni attention kernel executes Algorithm 1 with real skipping,
 //!   and GEMM-O initializes its output from the Taylor-combined bias and
-//!   projects only the computed tiles.
+//!   projects only the computed tiles — all driven by the compiled plans.
 //! * **CachedBlock** (degraded layer / whole-block caching policies): the
 //!   entire block update is forecast from the cached residual deltas.
 //!
@@ -24,7 +43,7 @@ pub mod policy;
 use crate::cache::{combine_bias_stack, TaylorCache};
 use crate::config::ModelConfig;
 use crate::diffusion::{euler_step, initial_noise, plan_steps, time_grid, unpatchify, StepKind};
-use crate::kernels::attention::{flashomni_attention, DecodeMode};
+use crate::kernels::attention::flashomni_attention;
 use crate::kernels::flops;
 use crate::kernels::gemm_o::{gemm_o_dispatch, gemm_o_stage1, gemm_o_update, WeightPanels};
 use crate::kernels::gemm_q::gemm_q;
@@ -33,8 +52,10 @@ use crate::model::blocks::{
     pre_attention, qkv_joint, vsplit, vstack,
 };
 use crate::model::{BlockExec, BlockWeights, MiniMMDiT};
+use crate::plan::{AttnStats, DecodeMode, SparsePlan};
 use crate::symbols::LayerSymbols;
 use crate::tensor::Tensor;
+use crate::util::ceil_div;
 pub use policy::{Policy, PolicyKind};
 
 /// Block/pool geometry shared by the whole run.
@@ -50,11 +71,13 @@ pub struct Geometry {
 impl Geometry {
     pub fn from_model(cfg: &ModelConfig, block_q: usize, block_k: usize, pool: usize) -> Self {
         let g = Geometry { block_q, block_k, pool, text_tokens: cfg.text_tokens, seq: cfg.seq_len() };
-        assert_eq!(
-            cfg.text_tokens % (block_q * pool),
-            0,
-            "text prefix must align to Q block groups"
-        );
+        if cfg.text_tokens > 0 {
+            assert_eq!(
+                cfg.text_tokens % (block_q * pool),
+                0,
+                "text prefix must align to Q block groups"
+            );
+        }
         g
     }
     pub fn t_q(&self) -> usize {
@@ -69,8 +92,15 @@ impl Geometry {
     pub fn kv_groups(&self) -> usize {
         self.t_kv().div_ceil(self.pool)
     }
+    /// Symbol groups covering the text prefix. 0-safe ceil-div: a
+    /// text-free (pure-image) config yields 0 groups instead of relying on
+    /// exact divisibility.
     pub fn text_groups(&self) -> usize {
-        self.text_tokens / (self.block_q * self.pool)
+        ceil_div(self.text_tokens, self.block_q * self.pool)
+    }
+    /// Raw Q blocks covering the text prefix (plan-slicing boundary).
+    pub fn text_blocks(&self) -> usize {
+        ceil_div(self.text_tokens, self.block_q)
     }
 }
 
@@ -129,9 +159,36 @@ pub struct GenResult {
     pub stats: RunStats,
 }
 
+/// Plans compiled once per symbol refresh and reused, untouched, across
+/// every Dispatch step of the Update window.
+struct LayerPlans {
+    /// Joint-sequence plan driving the attention kernel.
+    joint: SparsePlan,
+    /// Row slice covering the text prefix (GEMM-Q / GEMM-O, text stream).
+    txt: SparsePlan,
+    /// Row slice covering the vision suffix (GEMM-Q / GEMM-O, image stream).
+    img: SparsePlan,
+}
+
+/// Decode the layer's symbols exactly once into the plan set every sparse
+/// kernel of the layer consumes (symbols → plan compile step).
+fn compile_plans(syms: &LayerSymbols, geo: &Geometry) -> LayerPlans {
+    let joint = SparsePlan::compile(
+        syms,
+        geo.t_q(),
+        geo.t_kv(),
+        geo.block_q,
+        geo.block_k,
+        DecodeMode::RowCached,
+    );
+    let tb = geo.text_blocks();
+    LayerPlans { txt: joint.slice_q(0, tb), img: joint.slice_q(tb, geo.t_q()), joint }
+}
+
 /// Per-layer mutable state across the denoising run.
 struct LayerState {
-    syms: Option<LayerSymbols>,
+    /// Compiled sparse plans (None until the policy first emits symbols).
+    plans: Option<LayerPlans>,
     /// TaylorSeer stack over the joint attention output `O_cat`.
     o_taylor: TaylorCache,
     /// Projected bias stacks per stream (one tensor per Taylor order).
@@ -148,7 +205,7 @@ struct LayerState {
 impl LayerState {
     fn new(order: usize) -> Self {
         LayerState {
-            syms: None,
+            plans: None,
             o_taylor: TaylorCache::new(order),
             bias_txt: Vec::new(),
             bias_img: Vec::new(),
@@ -327,7 +384,7 @@ impl<'a> BlockExec for EngineExec<'a> {
             return;
         }
 
-        let sparse = dispatch_k.is_some() && self.state[layer].syms.is_some();
+        let sparse = dispatch_k.is_some() && self.state[layer].plans.is_some();
         if !sparse {
             self.full_block(layer, bw, cfg, cvec, txt, img);
         } else {
@@ -370,7 +427,9 @@ impl<'a> EngineExec<'a> {
         self.stats.go_total += heads * t_q;
         self.stats.flops_done += DiTEngine::dense_layer_flops(cfg);
 
-        // Refresh symbols from the fresh per-head Q/K (Update semantics).
+        // Refresh symbols from the fresh per-head Q/K (Update semantics),
+        // then compile them once into the plan set reused by every
+        // Dispatch step of this window.
         let uses_symbols = self.policy.uses_symbols();
         if uses_symbols {
             let mut heads_syms = Vec::with_capacity(cfg.heads);
@@ -386,12 +445,13 @@ impl<'a> EngineExec<'a> {
                 ));
             }
             let syms = LayerSymbols { heads: heads_syms };
+            let plans = compile_plans(&syms, &geo);
             // S_q degradation: too few blocks need compute → full caching.
-            let compute_fraction = 1.0 - syms.cache_sparsity();
+            let compute_fraction = 1.0 - plans.joint.cache_sparsity();
             let st = &mut self.state[layer];
             st.degraded =
                 self.policy.s_q() > 0.0 && compute_fraction < self.policy.s_q();
-            st.syms = Some(syms);
+            st.plans = Some(plans);
         }
 
         // Update the TaylorSeer stacks.
@@ -403,55 +463,32 @@ impl<'a> EngineExec<'a> {
         self.state[layer].last_update_step = Some(self.step);
         self.state[layer].o_taylor.update(&o_cat, dt);
 
-        // GEMM-O: exact projection now + bias stacks for Dispatch steps.
+        // GEMM-O: exact projection now + bias stacks for Dispatch steps,
+        // all walking the compiled per-stream plans.
         self.phase(2, |this| {
-            let st = &mut this.state[layer];
-            if let Some(syms) = st.syms.clone() {
-                let tg = geo.text_groups();
-                let qg = geo.q_groups();
-                let syms_txt = syms.slice_rows(0, tg);
-                let syms_img = syms.slice_rows(tg, qg);
-                let (o_txt, o_img) = vsplit(&o_cat, cfg.text_tokens);
-                st.bias_txt.clear();
-                st.bias_img.clear();
-                for (d, stack_entry) in st.o_taylor.stack().iter().enumerate() {
+            let panels = &this.panels[layer];
+            let LayerState { plans, bias_txt, bias_img, o_taylor, .. } =
+                &mut this.state[layer];
+            if let Some(pl) = plans.as_ref() {
+                bias_txt.clear();
+                bias_img.clear();
+                for (d, stack_entry) in o_taylor.stack().iter().enumerate() {
                     let (e_txt, e_img) = vsplit(stack_entry, cfg.text_tokens);
                     if d == 0 {
                         // Exact output for this step + zeroth-order bias.
-                        let (mut out_t, bias_t, _) = gemm_o_update(
-                            &e_txt,
-                            &this.panels[layer].txt,
-                            &syms_txt,
-                            geo.block_q,
-                        );
-                        let (mut out_i, bias_i, _) = gemm_o_update(
-                            &e_img,
-                            &this.panels[layer].img,
-                            &syms_img,
-                            geo.block_q,
-                        );
+                        let (mut out_t, b_t, _) = gemm_o_update(&e_txt, &panels.txt, &pl.txt);
+                        let (mut out_i, b_i, _) = gemm_o_update(&e_img, &panels.img, &pl.img);
                         add_row_bias(&mut out_t, &bw.txt.bo);
                         add_row_bias(&mut out_i, &bw.img.bo);
-                        st.bias_txt.push(bias_t);
-                        st.bias_img.push(bias_i);
+                        bias_txt.push(b_t);
+                        bias_img.push(b_i);
                         let o_joint = vstack(&out_t, &out_i);
                         post_attention_preprojected(&pre, &o_joint, cfg.text_tokens, txt, img);
                     } else {
-                        st.bias_txt.push(gemm_o_stage1(
-                            &e_txt,
-                            &this.panels[layer].txt,
-                            &syms_txt,
-                            geo.block_q,
-                        ));
-                        st.bias_img.push(gemm_o_stage1(
-                            &e_img,
-                            &this.panels[layer].img,
-                            &syms_img,
-                            geo.block_q,
-                        ));
+                        bias_txt.push(gemm_o_stage1(&e_txt, &panels.txt, &pl.txt));
+                        bias_img.push(gemm_o_stage1(&e_img, &panels.img, &pl.img));
                     }
                 }
-                let _ = (o_txt, o_img);
             } else {
                 // Policies without symbols: plain dense projection.
                 post_attention(bw, &pre, &o_cat, txt, img);
@@ -472,7 +509,8 @@ impl<'a> EngineExec<'a> {
         self.state[layer].delta_img.update(&d_img, dt);
     }
 
-    /// Sparse path: GEMM-Q → Algorithm 1 → GEMM-O with bias.
+    /// Sparse path: GEMM-Q → Algorithm 1 → GEMM-O with bias, every kernel
+    /// consuming the plans compiled at the last symbol refresh.
     #[allow(clippy::too_many_arguments)]
     fn sparse_block(
         &mut self,
@@ -503,16 +541,14 @@ impl<'a> EngineExec<'a> {
             blocks::headwise_rope(&mut kj, cfg.heads, &positions);
             let vj = vstack(&v_t, &v_i);
 
-            // GEMM-Q with spatial skipping (per-head tiles).
-            let syms = this.state[layer].syms.as_ref().unwrap();
-            let tg = geo.text_groups();
-            let qg = geo.q_groups();
-            let syms_txt = syms.slice_rows(0, tg);
-            let syms_img = syms.slice_rows(tg, qg);
-            let (q_t, s_t) =
-                gemm_q(&pre.txt_mod, &bw.txt.wq, &syms_txt, geo.block_q, Some(&bw.txt.bq));
-            let (q_i, s_i) =
-                gemm_q(&pre.img_mod, &bw.img.wq, &syms_img, geo.block_q, Some(&bw.img.bq));
+            // GEMM-Q with spatial skipping (per-head live tiles from the
+            // pre-sliced stream plans — no per-step symbol slicing).
+            let (q_t, s_t, q_i, s_i) = {
+                let plans = this.state[layer].plans.as_ref().unwrap();
+                let (q_t, s_t) = gemm_q(&pre.txt_mod, &bw.txt.wq, &plans.txt, Some(&bw.txt.bq));
+                let (q_i, s_i) = gemm_q(&pre.img_mod, &bw.img.wq, &plans.img, Some(&bw.img.bq));
+                (q_t, s_t, q_i, s_i)
+            };
             this.stats.gq_computed += (s_t.computed_tiles + s_i.computed_tiles) as u64;
             this.stats.gq_total += (s_t.total_tiles + s_i.total_tiles) as u64;
             let mut qj = vstack(&q_t, &q_i);
@@ -533,30 +569,40 @@ impl<'a> EngineExec<'a> {
                     geo.pool,
                 ));
             }
-            self.state[layer].syms = Some(LayerSymbols { heads: heads_syms });
+            let syms = LayerSymbols { heads: heads_syms };
+            self.state[layer].plans = Some(compile_plans(&syms, &geo));
         }
 
-        // FlashOmni attention per head (Algorithm 1 with real skipping).
+        // FlashOmni attention (Algorithm 1 with real skipping); independent
+        // heads dispatched in parallel — each scoped worker consumes its
+        // head's compiled plan and writes a disjoint output slice.
         let o_cat = self.phase(1, |this| {
-            let syms = this.state[layer].syms.as_ref().unwrap();
+            let heads = cfg.heads;
+            let plans = this.state[layer].plans.as_ref().unwrap();
+            let per_head: Vec<(Tensor, AttnStats)> = std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..heads)
+                    .map(|h| {
+                        let (qr, kr, vr) = (&q, &k, &v);
+                        let hp = &plans.joint.heads[h];
+                        let (bq, bk) = (geo.block_q, geo.block_k);
+                        scope.spawn(move || {
+                            let qh = extract_head(qr, heads, h);
+                            let kh = extract_head(kr, heads, h);
+                            let vh = extract_head(vr, heads, h);
+                            flashomni_attention(&qh, &kh, &vh, hp, bq, bk, None)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|jh| jh.join().expect("attention worker panicked"))
+                    .collect()
+            });
             let mut o_cat = Tensor::zeros(&[cfg.seq_len(), cfg.dim]);
-            for h in 0..cfg.heads {
-                let qh = extract_head(&q, cfg.heads, h);
-                let kh = extract_head(&k, cfg.heads, h);
-                let vh = extract_head(&v, cfg.heads, h);
-                let (oh, st) = flashomni_attention(
-                    &qh,
-                    &kh,
-                    &vh,
-                    &syms.heads[h],
-                    geo.block_q,
-                    geo.block_k,
-                    None,
-                    DecodeMode::RowCached,
-                );
+            for (h, (oh, st)) in per_head.into_iter().enumerate() {
                 this.stats.attn_computed_pairs += st.computed_pairs as u64;
                 this.stats.attn_total_pairs += st.total_pairs as u64;
-                insert_head(&mut o_cat, &oh, cfg.heads, h);
+                insert_head(&mut o_cat, &oh, heads, h);
             }
             o_cat
         });
@@ -564,11 +610,7 @@ impl<'a> EngineExec<'a> {
         // GEMM-O dispatch: bias init + computed tiles only.
         self.phase(2, |this| {
             let st = &this.state[layer];
-            let syms = st.syms.as_ref().unwrap();
-            let tg = geo.text_groups();
-            let qg = geo.q_groups();
-            let syms_txt = syms.slice_rows(0, tg);
-            let syms_img = syms.slice_rows(tg, qg);
+            let plans = st.plans.as_ref().unwrap();
             let (o_txt, o_img) = vsplit(&o_cat, cfg.text_tokens);
             let coeffs = st.o_taylor.coefficients(k_off as f64);
             let bias_t = if st.bias_txt.is_empty() {
@@ -582,9 +624,9 @@ impl<'a> EngineExec<'a> {
                 combine_bias_stack(&st.bias_img, &coeffs)
             };
             let (mut out_t, g_t) =
-                gemm_o_dispatch(&o_txt, &this.panels[layer].txt, &syms_txt, geo.block_q, &bias_t);
+                gemm_o_dispatch(&o_txt, &this.panels[layer].txt, &plans.txt, &bias_t);
             let (mut out_i, g_i) =
-                gemm_o_dispatch(&o_img, &this.panels[layer].img, &syms_img, geo.block_q, &bias_i);
+                gemm_o_dispatch(&o_img, &this.panels[layer].img, &plans.img, &bias_i);
             this.stats.go_computed += (g_t.computed_tiles + g_i.computed_tiles) as u64;
             this.stats.go_total += (g_t.total_tiles + g_i.total_tiles) as u64;
             add_row_bias(&mut out_t, &bw.txt.bo);
@@ -598,14 +640,16 @@ impl<'a> EngineExec<'a> {
             mlp_stream(&bw.img, &pre.ada_img, img);
         });
 
-        // Approximate FLOP accounting for the sparse step.
-        let syms = self.state[layer].syms.as_ref().unwrap();
-        let density = 1.0 - syms.pair_sparsity();
+        // Approximate FLOP accounting for the sparse step, read off the
+        // plan's precomputed tile/pair counts.
+        let (density, cache_density) = {
+            let plans = self.state[layer].plans.as_ref().unwrap();
+            (plans.joint.density(), 1.0 - plans.joint.cache_sparsity())
+        };
         let n = cfg.seq_len() as f64;
         let d = cfg.dim as f64;
         let m = (cfg.mlp_ratio * cfg.dim) as f64;
         let attn = 4.0 * n * n * d * density;
-        let cache_density = 1.0 - syms.cache_sparsity();
         let qproj = 2.0 * n * d * d * cache_density;
         let kv = 2.0 * 2.0 * n * d * d;
         let oproj = 2.0 * n * d * d * cache_density;
@@ -752,6 +796,50 @@ mod tests {
         // Cached steps don't contribute attention pairs → density < 1 on
         // dispatch steps.
         assert!(res.stats.per_step_density.iter().any(|&d| d == 0.0));
+    }
+
+    #[test]
+    fn text_free_geometry_is_zero_safe() {
+        // Regression: pure-image configs (text_tokens == 0) used to rely
+        // on exact divisibility in `text_groups()`.
+        let cfg = ModelConfig { text_tokens: 0, ..tiny_model().cfg };
+        let geo = Geometry::from_model(&cfg, 8, 8, 1);
+        assert_eq!(geo.text_groups(), 0);
+        assert_eq!(geo.text_blocks(), 0);
+        let geo2 = Geometry::from_model(&cfg, 8, 8, 2);
+        assert_eq!(geo2.text_groups(), 0);
+        // Non-zero prefixes still round up to whole groups.
+        let cfg3 = ModelConfig { text_tokens: 8, ..tiny_model().cfg };
+        let geo3 = Geometry::from_model(&cfg3, 8, 8, 1);
+        assert_eq!(geo3.text_groups(), 1);
+        assert_eq!(geo3.text_blocks(), 1);
+    }
+
+    #[test]
+    fn text_free_model_generates() {
+        // A pure-image model must run end-to-end on the full path and on
+        // the plan-driven sparse path.
+        let cfg = ModelConfig { text_tokens: 0, ..tiny_model().cfg };
+        let model = MiniMMDiT::new(cfg.clone(), Weights::random(&cfg, 13));
+        let mut dense = DiTEngine::new(model.clone(), Policy::full(), 8, 8);
+        let r = dense.generate(&[], 3, 4);
+        assert!(r.image.data().iter().all(|x| x.is_finite()));
+        let scfg = SparsityConfig {
+            tau_q: 0.3,
+            tau_kv: 0.2,
+            interval: 2,
+            order: 1,
+            s_q: 0.0,
+            block_q: 8,
+            block_k: 8,
+            pool: 1,
+            warmup: 1,
+            ramp_steps: 1,
+        };
+        let mut sparse = DiTEngine::new(model, Policy::flashomni(scfg), 8, 8);
+        let r2 = sparse.generate(&[], 3, 6);
+        assert!(r2.image.data().iter().all(|x| x.is_finite()));
+        assert_eq!(r2.stats.per_step_density.len(), 6);
     }
 
     #[test]

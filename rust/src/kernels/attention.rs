@@ -1,61 +1,35 @@
 //! Dense FlashAttention and the **FlashOmni sparse attention kernel**
 //! (paper Algorithm 1).
 //!
-//! Both operate on one head: `Q, K, V ∈ [N × d]` row-major. The sparse
-//! kernel consumes [`HeadSymbols`] and follows Algorithm 1 exactly:
+//! Both operate on one head: `Q, K, V ∈ [N × d]` row-major. The primary
+//! sparse kernel ([`flashomni_attention`]) consumes a compiled
+//! [`HeadPlan`]: the bitwise symbol decode of §3.4 happened once at plan
+//! compile time, so the kernel's loops walk only live block indices —
+//! zero per-tile bit math:
 //!
 //! ```text
-//! for each Q block i (one "CTA"):
-//!     if F(S_c, i) == 0:            # spatial decode, once per CTA
-//!         cache-then-reuse: O_i = OP_reuse(Õ_i)   (or skip the write
-//!         entirely when the GEMM-O bias optimization is active)
-//!     else:
-//!         for each KV block j:
-//!             if J(S_s, i, j) == 1: # reduction decode, register-cached
-//!                 online-softmax update with K_j, V_j
-//!         O_i = diag(l)⁻¹ · acc
+//! for each cached Q block i in plan.cached_q:
+//!     O_i = OP_reuse(Õ_i)          (skipped entirely under the GEMM-O
+//!                                   bias optimization)
+//! for each live Q block i in plan.live_q (one "CTA"):
+//!     for each live KV block j in plan.live_kv(i):
+//!         online-softmax update with K_j, V_j
+//!     O_i = diag(l)⁻¹ · acc
 //! ```
+//!
+//! The seed symbol-decoding kernel is retained as
+//! [`flashomni_attention_symbols`]: it follows Algorithm 1 literally
+//! (per-CTA `F` decode, per-tile `J` decode under a [`DecodeMode`]) and is
+//! the reference for the plan-equivalence property tests and the §4.3
+//! decode-overhead ablation in `benches/fig10_attention.rs`.
 //!
 //! Skipped work is *really* skipped — no loads, no FLOPs — which is what
 //! makes the wall-clock measurements in `benches/` meaningful.
 
+use crate::plan::HeadPlan;
+pub use crate::plan::{AttnStats, DecodeMode};
 use crate::symbols::HeadSymbols;
 use crate::tensor::Tensor;
-
-/// How the reduction-axis symbols are decoded in the inner loop —
-/// used to reproduce the paper's FC-vs-BSS decode-overhead analysis (§4.3).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum DecodeMode {
-    /// Decode a symbol byte once per 8 groups and keep it in a register
-    /// (the paper's optimization).
-    RowCached,
-    /// Re-run the full bitwise decode `J(S_s, i, j)` for every KV block
-    /// (the naive scheme the paper says burns CUDA-core cycles).
-    PerAccess,
-}
-
-/// Execution statistics for one attention call.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct AttnStats {
-    /// (Qi, Kj) block pairs actually computed.
-    pub computed_pairs: usize,
-    /// Total block pairs in a dense computation.
-    pub total_pairs: usize,
-    /// Q blocks served from cache.
-    pub cached_blocks: usize,
-    /// Total Q blocks.
-    pub q_blocks: usize,
-}
-
-impl AttnStats {
-    /// The paper's Sparsity metric: `skip / total`.
-    pub fn sparsity(&self) -> f64 {
-        if self.total_pairs == 0 {
-            return 0.0;
-        }
-        1.0 - self.computed_pairs as f64 / self.total_pairs as f64
-    }
-}
 
 /// Dense FlashAttention (block-partitioned, online softmax). Reference
 /// baseline for every speedup measurement.
@@ -202,18 +176,87 @@ fn finalize_block(o: &mut [f32], acc: &[f32], l: &[f32], bq: usize, d: usize) {
     }
 }
 
-/// FlashOmni sparse attention (Algorithm 1).
+/// FlashOmni sparse attention driven by a compiled [`HeadPlan`].
 ///
-/// * `sym` — unified sparse symbols for this head.
+/// * `plan` — live block indices compiled once from the unified symbols
+///   ([`crate::plan`]); the inner loops do **no** symbol decoding.
 /// * `cached_o` — the forecast features `OP_reuse(Õ)` for cached blocks;
 ///   when `Some`, cached rows of the output are filled from it
 ///   (cache-then-reuse path). When `None`, cached rows are left at zero —
 ///   the caller is using the GEMM-O bias optimization, which makes the
 ///   element-wise reuse write unnecessary (§3.5, Obs. 3).
-/// * `decode` — inner-loop symbol decode strategy (see [`DecodeMode`]).
 ///
-/// Returns the output and the skip statistics.
+/// Returns the output and the plan-derived skip statistics.
 pub fn flashomni_attention(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    plan: &HeadPlan,
+    block_q: usize,
+    block_k: usize,
+    cached_o: Option<&Tensor>,
+) -> (Tensor, AttnStats) {
+    let n = q.rows();
+    let d = q.cols();
+    let n_kv = k.rows();
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut o = Tensor::zeros(&[n, d]);
+    debug_assert_eq!(plan.t_q, n.div_ceil(block_q), "plan Q geometry mismatch");
+    debug_assert_eq!(plan.t_kv, n_kv.div_ceil(block_k), "plan KV geometry mismatch");
+
+    // Cache-then-reuse path: a plain gather over the cached block list.
+    if let Some(co) = cached_o {
+        for &bi in &plan.cached_q {
+            let q_lo = bi * block_q;
+            let q_hi = (q_lo + block_q).min(n);
+            o.data_mut()[q_lo * d..q_hi * d].copy_from_slice(&co.data()[q_lo * d..q_hi * d]);
+        }
+    }
+
+    let mut scores = vec![0.0f32; block_q * block_k];
+    let mut acc = vec![0.0f32; block_q * d];
+    let mut m = vec![f32::NEG_INFINITY; block_q];
+    let mut l = vec![0.0f32; block_q];
+
+    for (li, &bi) in plan.live_q.iter().enumerate() {
+        let q_lo = bi * block_q;
+        let q_hi = (q_lo + block_q).min(n);
+        let bq = q_hi - q_lo;
+        acc[..bq * d].fill(0.0);
+        m[..bq].fill(f32::NEG_INFINITY);
+        l[..bq].fill(0.0);
+        for &bj in plan.live_kv(li) {
+            let k_lo = bj * block_k;
+            let k_hi = (k_lo + block_k).min(n_kv);
+            let bk = k_hi - k_lo;
+            attention_block_update(
+                &q.data()[q_lo * d..q_hi * d],
+                &k.data()[k_lo * d..k_hi * d],
+                &v.data()[k_lo * d..k_hi * d],
+                bq,
+                bk,
+                d,
+                scale,
+                &mut scores,
+                &mut m,
+                &mut l,
+                &mut acc,
+            );
+        }
+        finalize_block(&mut o.data_mut()[q_lo * d..q_hi * d], &acc, &l, bq, d);
+    }
+    (o, plan.attn_stats())
+}
+
+/// FlashOmni sparse attention (Algorithm 1) decoding the symbols in the
+/// kernel loops — the seed implementation, kept as the reference for the
+/// plan-equivalence property tests and the §4.3 decode-overhead ablation.
+///
+/// * `sym` — unified sparse symbols for this head.
+/// * `cached_o` — as in [`flashomni_attention`].
+/// * `decode` — inner-loop symbol decode strategy (see [`DecodeMode`]).
+#[allow(clippy::too_many_arguments)]
+pub fn flashomni_attention_symbols(
     q: &Tensor,
     k: &Tensor,
     v: &Tensor,
@@ -362,6 +405,10 @@ mod tests {
     use crate::symbols::HeadSymbols;
     use crate::testutil::{assert_close, prop_check, rand_mask, randn};
 
+    fn plan_of(sym: &HeadSymbols, n: usize, n_kv: usize, bq: usize, bk: usize) -> HeadPlan {
+        HeadPlan::from_symbols(sym, n.div_ceil(bq), n_kv.div_ceil(bk), DecodeMode::RowCached)
+    }
+
     #[test]
     fn dense_matches_masked_reference() {
         prop_check("dense attention == reference", 15, |rng| {
@@ -401,26 +448,31 @@ mod tests {
             let m_s = rand_mask(rng, qg * kg, 0.6);
             let sym = HeadSymbols::from_masks(&m_c, &m_s, kg, pool);
             let want = masked_reference(&q, &k, &v, &sym, bq, bk, Some(&cached));
+            // Symbol-decoding reference kernel under both decode modes.
             for decode in [DecodeMode::RowCached, DecodeMode::PerAccess] {
                 let (got, stats) =
-                    flashomni_attention(&q, &k, &v, &sym, bq, bk, Some(&cached), decode);
+                    flashomni_attention_symbols(&q, &k, &v, &sym, bq, bk, Some(&cached), decode);
                 assert_close(&got, &want, 1e-4, 1e-3);
                 assert_eq!(stats.total_pairs, t_q * t_kv);
                 assert!(stats.computed_pairs <= stats.total_pairs);
             }
+            // Plan-based kernel.
+            let plan = plan_of(&sym, n, n, bq, bk);
+            let (got, stats) = flashomni_attention(&q, &k, &v, &plan, bq, bk, Some(&cached));
+            assert_close(&got, &want, 1e-4, 1e-3);
+            assert_eq!(stats.total_pairs, t_q * t_kv);
         });
     }
 
     #[test]
-    fn dense_symbols_reduce_to_dense_attention() {
+    fn dense_plan_reduces_to_dense_attention() {
         let mut rng = crate::util::rng::Pcg32::seeded(42);
         let (n, d, b) = (40, 8, 8);
         let q = randn(&mut rng, &[n, d]);
         let k = randn(&mut rng, &[n, d]);
         let v = randn(&mut rng, &[n, d]);
-        let sym = HeadSymbols::dense(n.div_ceil(b), n.div_ceil(b), 1);
-        let (sparse, stats) =
-            flashomni_attention(&q, &k, &v, &sym, b, b, None, DecodeMode::RowCached);
+        let plan = HeadPlan::dense(n.div_ceil(b), n.div_ceil(b));
+        let (sparse, stats) = flashomni_attention(&q, &k, &v, &plan, b, b, None);
         let dense = attention_dense(&q, &k, &v, b, b);
         assert_close(&sparse, &dense, 1e-5, 1e-4);
         assert_eq!(stats.sparsity(), 0.0);
@@ -436,7 +488,8 @@ mod tests {
         let v = randn(&mut rng, &[n, d]);
         // Block 0 cached, block 1 computed.
         let sym = HeadSymbols::from_masks(&[false, true], &[true, true, true, true], 2, 1);
-        let (o, stats) = flashomni_attention(&q, &k, &v, &sym, b, b, None, DecodeMode::RowCached);
+        let plan = plan_of(&sym, n, n, b, b);
+        let (o, stats) = flashomni_attention(&q, &k, &v, &plan, b, b, None);
         assert_eq!(stats.cached_blocks, 1);
         // Cached rows left zero (no element-wise write — bias path).
         assert!(o.data()[..b * d].iter().all(|&x| x == 0.0));
@@ -453,7 +506,8 @@ mod tests {
         let v = randn(&mut rng, &[n, d]);
         // Row block 0: computed spatially but all KV pairs skipped.
         let sym = HeadSymbols::from_masks(&[true, true], &[false, false, true, true], 2, 1);
-        let (o, stats) = flashomni_attention(&q, &k, &v, &sym, b, b, None, DecodeMode::RowCached);
+        let plan = plan_of(&sym, n, n, b, b);
+        let (o, stats) = flashomni_attention(&q, &k, &v, &plan, b, b, None);
         assert!(o.data()[..b * d].iter().all(|&x| x == 0.0));
         assert_eq!(stats.computed_pairs, 2);
     }
@@ -468,11 +522,12 @@ mod tests {
         // 4 q-blocks × 4 kv-blocks; cache 2 rows; skip nothing else.
         let sym =
             HeadSymbols::from_masks(&[false, true, false, true], &[true; 16], 4, 1);
-        let (_, stats) = flashomni_attention(&q, &k, &v, &sym, b, b, None, DecodeMode::RowCached);
+        let plan = plan_of(&sym, n, n, b, b);
+        let (_, stats) = flashomni_attention(&q, &k, &v, &plan, b, b, None);
         assert_eq!(stats.computed_pairs, 8);
         assert_eq!(stats.total_pairs, 16);
         assert!((stats.sparsity() - 0.5).abs() < 1e-12);
-        // Kernel-measured sparsity must agree with the symbol-predicted one.
+        // Plan-derived sparsity must agree with the symbol-predicted one.
         assert!((stats.sparsity() - sym.pair_sparsity()).abs() < 1e-12);
     }
 }

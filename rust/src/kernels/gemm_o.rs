@@ -14,12 +14,18 @@
 //! * [`gemm_o_dispatch`] — initializes the output with (the forecast of)
 //!   `B_c` and projects only the computed tiles.
 //!
+//! The primary kernels consume a compiled
+//! [`SparsePlan`](crate::plan::SparsePlan): stage 1 walks the cached-block
+//! list, stage 2 / dispatch walk the live-block list — no per-tile symbol
+//! decode. The seed symbol-decoding variants (`*_symbols`) are retained
+//! for the plan-equivalence property tests.
+//!
 //! This removes the reduction-axis redundancy *and* the need to keep the
 //! per-head cached features `Õ^h` in memory (the attention kernel's
 //! cache-then-reuse branch can terminate without writing).
 
 use crate::kernels::gemm::matmul_into;
-use crate::kernels::gemm_q::GemmStats;
+use crate::plan::{GemmStats, SparsePlan};
 use crate::symbols::LayerSymbols;
 use crate::tensor::Tensor;
 
@@ -75,15 +81,102 @@ pub fn gemm_o_dense(o_cat: &Tensor, w: &Tensor) -> Tensor {
     crate::kernels::gemm::matmul(o_cat, w)
 }
 
-/// Update-step GEMM-O.
+/// Update-step GEMM-O driven by a compiled plan.
 ///
 /// * `o_cat` — `[N × H·d_h]` attention outputs (all heads valid — the
 ///   Update step ran full attention),
-/// * `syms` — the symbols that will govern the upcoming Dispatch steps:
-///   tile `(i, h)` with `F(S_c^h, i) = 0` is a *to-be-cached* tile,
+/// * `plan` — the plan that will govern the upcoming Dispatch steps: tile
+///   `(i, h)` with `i ∈ plan.heads[h].cached_q` is a *to-be-cached* tile,
 /// * returns `(out, bias)` where `out` is the exact projection for this
 ///   step and `bias` is the refreshed `B_c` (`[N × d_out]`).
 pub fn gemm_o_update(
+    o_cat: &Tensor,
+    panels: &WeightPanels,
+    plan: &SparsePlan,
+) -> (Tensor, Tensor, GemmStats) {
+    let block_q = plan.block_q;
+    let n = o_cat.rows();
+    let heads = plan.heads.len();
+    let d_out = panels.d_out;
+    assert_eq!(plan.t_q, n.div_ceil(block_q), "plan Q-block geometry mismatch");
+    let mut bias = Tensor::zeros(&[n, d_out]);
+    let mut out = Tensor::zeros(&[n, d_out]);
+
+    for (h, hp) in plan.heads.iter().enumerate() {
+        // Stage 2 tiles: always updated during Dispatch.
+        for &bi in &hp.live_q {
+            let lo = bi * block_q;
+            let hi = (lo + block_q).min(n);
+            project_tile(o_cat, panels, h, lo, hi, heads, out.data_mut());
+        }
+        // Stage 1 tiles: record in the cached bias.
+        for &bi in &hp.cached_q {
+            let lo = bi * block_q;
+            let hi = (lo + block_q).min(n);
+            project_tile(o_cat, panels, h, lo, hi, heads, bias.data_mut());
+        }
+    }
+    // The Update step needs the exact dense output: add the bias.
+    out.add_assign(&bias);
+    (out, bias, plan.gemm_stats())
+}
+
+/// Stage 1 only: project the *to-be-cached* tiles of `o_cat` into a bias
+/// tensor. Used to build the per-Taylor-order bias stacks (Eq. 4: the
+/// projection commutes with the element-wise forecast, so each finite
+/// difference of `O` is projected separately at the Update step).
+pub fn gemm_o_stage1(o_cat: &Tensor, panels: &WeightPanels, plan: &SparsePlan) -> Tensor {
+    let block_q = plan.block_q;
+    let n = o_cat.rows();
+    let heads = plan.heads.len();
+    let d_out = panels.d_out;
+    assert_eq!(plan.t_q, n.div_ceil(block_q), "plan Q-block geometry mismatch");
+    let mut bias = Tensor::zeros(&[n, d_out]);
+    for (h, hp) in plan.heads.iter().enumerate() {
+        for &bi in &hp.cached_q {
+            let lo = bi * block_q;
+            let hi = (lo + block_q).min(n);
+            project_tile(o_cat, panels, h, lo, hi, heads, bias.data_mut());
+        }
+    }
+    bias
+}
+
+/// Dispatch-step GEMM-O driven by a compiled plan.
+///
+/// * `o_cat` — `[N × H·d_h]` attention outputs where **only computed tiles
+///   are valid** (cached tiles were never written — that is the point),
+/// * `bias` — `OP_reuse(B_c)`: the (possibly Taylor-forecast) cached bias,
+/// * returns the projected output plus tile statistics.
+pub fn gemm_o_dispatch(
+    o_cat: &Tensor,
+    panels: &WeightPanels,
+    plan: &SparsePlan,
+    bias: &Tensor,
+) -> (Tensor, GemmStats) {
+    let block_q = plan.block_q;
+    let n = o_cat.rows();
+    let heads = plan.heads.len();
+    let d_out = panels.d_out;
+    assert_eq!(bias.shape(), &[n, d_out]);
+    assert_eq!(plan.t_q, n.div_ceil(block_q), "plan Q-block geometry mismatch");
+    // "The GEMM-O output space is initialized via OP_reuse" (§3.5).
+    let mut out = bias.clone();
+
+    for (h, hp) in plan.heads.iter().enumerate() {
+        for &bi in &hp.live_q {
+            let lo = bi * block_q;
+            let hi = (lo + block_q).min(n);
+            project_tile(o_cat, panels, h, lo, hi, heads, out.data_mut());
+        }
+    }
+    (out, plan.gemm_stats())
+}
+
+// ---- seed symbol-decoding variants (plan-equivalence references) ----
+
+/// [`gemm_o_update`] decoding `F(S_c, i)` per tile (seed implementation).
+pub fn gemm_o_update_symbols(
     o_cat: &Tensor,
     panels: &WeightPanels,
     syms: &LayerSymbols,
@@ -111,16 +204,12 @@ pub fn gemm_o_update(
             }
         }
     }
-    // The Update step needs the exact dense output: add the bias.
     out.add_assign(&bias);
     (out, bias, stats)
 }
 
-/// Stage 1 only: project the *to-be-cached* tiles of `o_cat` into a bias
-/// tensor. Used to build the per-Taylor-order bias stacks (Eq. 4: the
-/// projection commutes with the element-wise forecast, so each finite
-/// difference of `O` is projected separately at the Update step).
-pub fn gemm_o_stage1(
+/// [`gemm_o_stage1`] decoding symbols per tile (seed implementation).
+pub fn gemm_o_stage1_symbols(
     o_cat: &Tensor,
     panels: &WeightPanels,
     syms: &LayerSymbols,
@@ -144,13 +233,8 @@ pub fn gemm_o_stage1(
     bias
 }
 
-/// Dispatch-step GEMM-O.
-///
-/// * `o_cat` — `[N × H·d_h]` attention outputs where **only computed tiles
-///   are valid** (cached tiles were never written — that is the point),
-/// * `bias` — `OP_reuse(B_c)`: the (possibly Taylor-forecast) cached bias,
-/// * returns the projected output plus tile statistics.
-pub fn gemm_o_dispatch(
+/// [`gemm_o_dispatch`] decoding symbols per tile (seed implementation).
+pub fn gemm_o_dispatch_symbols(
     o_cat: &Tensor,
     panels: &WeightPanels,
     syms: &LayerSymbols,
@@ -162,7 +246,6 @@ pub fn gemm_o_dispatch(
     let d_out = panels.d_out;
     assert_eq!(bias.shape(), &[n, d_out]);
     let t_q = n.div_ceil(block_q);
-    // "The GEMM-O output space is initialized via OP_reuse" (§3.5).
     let mut out = bias.clone();
     let mut stats = GemmStats { total_tiles: t_q * heads, ..Default::default() };
 
@@ -183,6 +266,7 @@ pub fn gemm_o_dispatch(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::plan::DecodeMode;
     use crate::symbols::{HeadSymbols, LayerSymbols};
     use crate::testutil::{assert_close, prop_check, rand_mask, randn};
 
@@ -194,6 +278,11 @@ mod tests {
                 .map(|m| HeadSymbols::from_masks(m, &vec![true; t_q * t_q], t_q, 1))
                 .collect(),
         }
+    }
+
+    fn plan_of(syms: &LayerSymbols, block_q: usize) -> SparsePlan {
+        let t_q = syms.heads[0].q_groups;
+        SparsePlan::compile(syms, t_q, t_q, block_q, block_q, DecodeMode::RowCached)
     }
 
     #[test]
@@ -211,7 +300,8 @@ mod tests {
             let masks: Vec<Vec<bool>> =
                 (0..heads).map(|_| rand_mask(rng, t_q, 0.5)).collect();
             let syms = syms_from_cache_masks(&masks);
-            let (out, _bias, _stats) = gemm_o_update(&o, &panels, &syms, b);
+            let plan = plan_of(&syms, b);
+            let (out, _bias, _stats) = gemm_o_update(&o, &panels, &plan);
             assert_close(&out, &gemm_o_dense(&o, &w), 1e-3, 1e-3);
         });
     }
@@ -234,7 +324,8 @@ mod tests {
             let masks: Vec<Vec<bool>> =
                 (0..heads).map(|_| rand_mask(rng, t_q, 0.5)).collect();
             let syms = syms_from_cache_masks(&masks);
-            let (_, bias, _) = gemm_o_update(&o_full, &panels, &syms, b);
+            let plan = plan_of(&syms, b);
+            let (_, bias, _) = gemm_o_update(&o_full, &panels, &plan);
             // Dispatch step: only computed tiles valid; cached tiles zeroed
             // to prove they are never read.
             let mut o_partial = o_full.clone();
@@ -253,7 +344,7 @@ mod tests {
                     }
                 }
             }
-            let (out, stats) = gemm_o_dispatch(&o_partial, &panels, &syms, b, &bias);
+            let (out, stats) = gemm_o_dispatch(&o_partial, &panels, &plan, &bias);
             assert!(out.data().iter().all(|x| x.is_finite()), "read a poisoned tile");
             assert_close(&out, &gemm_o_dense(&o_full, &w), 1e-3, 1e-3);
             let computed: usize =
@@ -270,14 +361,30 @@ mod tests {
         let w = randn(&mut rng, &[heads * d_h, d_out]);
         let panels = WeightPanels::new(&w, heads);
         let syms = syms_from_cache_masks(&[vec![false; 2], vec![false; 2]]);
-        let (out_u, bias, _) = gemm_o_update(&o, &panels, &syms, b);
+        let plan = plan_of(&syms, b);
+        let (out_u, bias, _) = gemm_o_update(&o, &panels, &plan);
         // Everything cached → bias IS the dense output.
         assert_close(&bias, &gemm_o_dense(&o, &w), 1e-4, 1e-4);
         assert_close(&out_u, &bias, 1e-4, 1e-4);
         let garbage = Tensor::full(&[n, heads * d_h], f32::NAN);
-        let (out_d, stats) = gemm_o_dispatch(&garbage, &panels, &syms, b, &bias);
+        let (out_d, stats) = gemm_o_dispatch(&garbage, &panels, &plan, &bias);
         assert_eq!(stats.computed_tiles, 0);
         assert_close(&out_d, &bias, 0.0, 0.0);
+    }
+
+    #[test]
+    fn stage1_matches_update_bias() {
+        let mut rng = crate::util::rng::Pcg32::seeded(9);
+        let (n, heads, d_h, d_out, b) = (24, 3, 4, 8, 8);
+        let o = randn(&mut rng, &[n, heads * d_h]);
+        let w = randn(&mut rng, &[heads * d_h, d_out]);
+        let panels = WeightPanels::new(&w, heads);
+        let masks: Vec<Vec<bool>> = (0..heads).map(|_| rand_mask(&mut rng, 3, 0.5)).collect();
+        let syms = syms_from_cache_masks(&masks);
+        let plan = plan_of(&syms, b);
+        let (_, bias, _) = gemm_o_update(&o, &panels, &plan);
+        let stage1 = gemm_o_stage1(&o, &panels, &plan);
+        assert_close(&stage1, &bias, 0.0, 0.0);
     }
 
     #[test]

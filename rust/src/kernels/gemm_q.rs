@@ -3,47 +3,115 @@
 //! Since RMSNorm and RoPE act token-wise, a Q block that the caching
 //! symbols mark as cached (`F(S_c, i) = 0`) never feeds the attention
 //! computation, so its slice of the query projection `Q_i^h = X_i W^h` can
-//! be skipped entirely. The CTA grid maps to `(row block × head)` tiles;
-//! each tile checks its symbol once and either runs a small GEMM or exits
-//! immediately.
+//! be skipped entirely. The CTA grid maps to `(row block × head)` tiles.
+//!
+//! The primary kernel ([`gemm_q`]) consumes a compiled
+//! [`SparsePlan`](crate::plan::SparsePlan) and iterates only the live tile
+//! indices — the symbol decode happened once at plan compile time. The
+//! seed symbol-decoding variant is retained as [`gemm_q_symbols`] for the
+//! plan-equivalence property tests.
 
 use crate::kernels::gemm::matmul_into;
+use crate::plan::SparsePlan;
+pub use crate::plan::GemmStats;
 use crate::symbols::LayerSymbols;
 use crate::tensor::Tensor;
-
-/// Tile statistics for the sparse GEMMs.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct GemmStats {
-    pub computed_tiles: usize,
-    pub total_tiles: usize,
-}
-
-impl GemmStats {
-    pub fn sparsity(&self) -> f64 {
-        if self.total_tiles == 0 {
-            return 0.0;
-        }
-        1.0 - self.computed_tiles as f64 / self.total_tiles as f64
-    }
-}
 
 /// Dense projection baseline: `Y = X · W`.
 pub fn gemm_dense(x: &Tensor, w: &Tensor) -> Tensor {
     crate::kernels::gemm::matmul(x, w)
 }
 
-/// Sparse query projection.
+/// Copy head `h`'s columns of `w` (`[d_in × heads·d_h]`) into a contiguous
+/// `[d_in × d_h]` panel.
+fn gather_head_panel(w: &Tensor, h: usize, d_h: usize) -> Vec<f32> {
+    let d_in = w.rows();
+    let d_out = w.cols();
+    let mut w_h = vec![0.0f32; d_in * d_h];
+    for r in 0..d_in {
+        w_h[r * d_h..(r + 1) * d_h]
+            .copy_from_slice(&w.data()[r * d_out + h * d_h..r * d_out + (h + 1) * d_h]);
+    }
+    w_h
+}
+
+/// Project one `(block, head)` tile of `x` into `y`.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn project_q_tile(
+    x: &Tensor,
+    w_h: &[f32],
+    y: &mut Tensor,
+    h: usize,
+    d_h: usize,
+    d_out: usize,
+    lo: usize,
+    hi: usize,
+    bias: Option<&[f32]>,
+) {
+    let d_in = x.cols();
+    let bq = hi - lo;
+    let mut tile = vec![0.0f32; bq * d_h];
+    matmul_into(&x.data()[lo * d_in..hi * d_in], w_h, &mut tile, bq, d_in, d_h);
+    if let Some(b) = bias {
+        for row in tile.chunks_exact_mut(d_h) {
+            for (c, v) in row.iter_mut().enumerate() {
+                *v += b[h * d_h + c];
+            }
+        }
+    }
+    for (r, row) in tile.chunks_exact(d_h).enumerate() {
+        y.data_mut()[(lo + r) * d_out + h * d_h..(lo + r) * d_out + (h + 1) * d_h]
+            .copy_from_slice(row);
+    }
+}
+
+/// Sparse query projection driven by a compiled plan.
 ///
 /// * `x` — `[N × d_in]` input activations,
 /// * `w` — `[d_in × H·d_h]` projection weight (heads concatenated on the
 ///   output axis),
-/// * `syms` — per-head symbols; tile `(block i, head h)` is computed iff
-///   `F(S_c^h, i) = 1`.
+/// * `plan` — per-head live Q-block lists; tile `(block i, head h)` is
+///   computed iff `i ∈ plan.heads[h].live_q`.
 ///
 /// Rows of skipped tiles are left zero — the attention kernel never reads
 /// them (their CTA takes the cache-then-reuse path). `bias` (`[H·d_h]`),
 /// when given, is added to computed tiles only.
 pub fn gemm_q(
+    x: &Tensor,
+    w: &Tensor,
+    plan: &SparsePlan,
+    bias: Option<&[f32]>,
+) -> (Tensor, GemmStats) {
+    let block_q = plan.block_q;
+    let n = x.rows();
+    let d_in = x.cols();
+    let heads = plan.heads.len();
+    assert!(heads > 0);
+    let d_out = w.cols();
+    assert_eq!(w.rows(), d_in);
+    assert_eq!(d_out % heads, 0, "W output dim must split across heads");
+    let d_h = d_out / heads;
+    assert_eq!(plan.t_q, n.div_ceil(block_q), "plan Q-block geometry mismatch");
+    let mut y = Tensor::zeros(&[n, d_out]);
+
+    for (h, hp) in plan.heads.iter().enumerate() {
+        if hp.live_q.is_empty() {
+            continue; // whole head cached: skip even the panel gather
+        }
+        let w_h = gather_head_panel(w, h, d_h);
+        for &bi in &hp.live_q {
+            let lo = bi * block_q;
+            let hi = (lo + block_q).min(n);
+            project_q_tile(x, &w_h, &mut y, h, d_h, d_out, lo, hi, bias);
+        }
+    }
+    (y, plan.gemm_stats())
+}
+
+/// Seed symbol-decoding variant: decodes `F(S_c, i)` per tile. Kept as the
+/// reference for the plan-equivalence property tests.
+pub fn gemm_q_symbols(
     x: &Tensor,
     w: &Tensor,
     syms: &LayerSymbols,
@@ -62,14 +130,8 @@ pub fn gemm_q(
     let mut y = Tensor::zeros(&[n, d_out]);
     let mut stats = GemmStats { total_tiles: t_q * heads, ..Default::default() };
 
-    // Gather W columns per head once (w is row-major, so a head's columns
-    // are strided; copy into a contiguous [d_in × d_h] panel per head).
     for (h, hs) in syms.heads.iter().enumerate() {
-        let mut w_h = vec![0.0f32; d_in * d_h];
-        for r in 0..d_in {
-            w_h[r * d_h..(r + 1) * d_h]
-                .copy_from_slice(&w.data()[r * d_out + h * d_h..r * d_out + (h + 1) * d_h]);
-        }
+        let w_h = gather_head_panel(w, h, d_h);
         for bi in 0..t_q {
             if !hs.f(bi) {
                 continue; // CTA exits immediately (paper: "without any further operations")
@@ -77,20 +139,7 @@ pub fn gemm_q(
             stats.computed_tiles += 1;
             let lo = bi * block_q;
             let hi = (lo + block_q).min(n);
-            let bq = hi - lo;
-            let mut tile = vec![0.0f32; bq * d_h];
-            matmul_into(&x.data()[lo * d_in..hi * d_in], &w_h, &mut tile, bq, d_in, d_h);
-            if let Some(b) = bias {
-                for row in tile.chunks_exact_mut(d_h) {
-                    for (c, v) in row.iter_mut().enumerate() {
-                        *v += b[h * d_h + c];
-                    }
-                }
-            }
-            for (r, row) in tile.chunks_exact(d_h).enumerate() {
-                y.data_mut()[(lo + r) * d_out + h * d_h..(lo + r) * d_out + (h + 1) * d_h]
-                    .copy_from_slice(row);
-            }
+            project_q_tile(x, &w_h, &mut y, h, d_h, d_out, lo, hi, bias);
         }
     }
     (y, stats)
@@ -99,6 +148,7 @@ pub fn gemm_q(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::plan::DecodeMode;
     use crate::symbols::{HeadSymbols, LayerSymbols};
     use crate::testutil::{assert_close, prop_check, rand_mask, randn};
 
@@ -113,14 +163,19 @@ mod tests {
         }
     }
 
+    fn plan_of(syms: &LayerSymbols, t_q: usize, block_q: usize) -> SparsePlan {
+        let kv = syms.heads[0].kv_groups * syms.heads[0].pool;
+        SparsePlan::compile(syms, t_q, kv, block_q, block_q, DecodeMode::RowCached)
+    }
+
     #[test]
-    fn dense_symbols_match_dense_gemm() {
+    fn dense_plan_matches_dense_gemm() {
         let mut rng = crate::util::rng::Pcg32::seeded(1);
         let (n, d_in, heads, d_h, b) = (32, 12, 3, 4, 8);
         let x = randn(&mut rng, &[n, d_in]);
         let w = randn(&mut rng, &[d_in, heads * d_h]);
-        let syms = LayerSymbols::dense(heads, n / b, n / b, 1);
-        let (y, stats) = gemm_q(&x, &w, &syms, b, None);
+        let plan = SparsePlan::dense(heads, n / b, n / b, b, b);
+        let (y, stats) = gemm_q(&x, &w, &plan, None);
         assert_close(&y, &gemm_dense(&x, &w), 1e-4, 1e-4);
         assert_eq!(stats.sparsity(), 0.0);
     }
@@ -139,7 +194,8 @@ mod tests {
             let masks: Vec<Vec<bool>> =
                 (0..heads).map(|_| rand_mask(rng, t_q, 0.6)).collect();
             let syms = layer_syms_from_cache_masks(&masks, t_q, 1);
-            let (y, stats) = gemm_q(&x, &w, &syms, b, None);
+            let plan = plan_of(&syms, t_q, b);
+            let (y, stats) = gemm_q(&x, &w, &plan, None);
             let dense = gemm_dense(&x, &w);
             let d_out = heads * d_h;
             let mut computed = 0;
@@ -167,6 +223,10 @@ mod tests {
                 }
             }
             assert_eq!(stats.computed_tiles, computed);
+            // Plan kernel is bitwise-identical to the symbol kernel.
+            let (y_sym, s_sym) = gemm_q_symbols(&x, &w, &syms, b, None);
+            assert_eq!(y.data(), y_sym.data());
+            assert_eq!(stats.computed_tiles, s_sym.computed_tiles);
         });
     }
 
@@ -178,7 +238,8 @@ mod tests {
         let x = randn(&mut rng, &[n, d_in]);
         let w = randn(&mut rng, &[d_in, 2 * d_h]);
         let syms = layer_syms_from_cache_masks(&[vec![false; 2], vec![true; 2]], 2, 1);
-        let (y, stats) = gemm_q(&x, &w, &syms, b, None);
+        let plan = plan_of(&syms, 2, b);
+        let (y, stats) = gemm_q(&x, &w, &plan, None);
         assert_eq!(stats.computed_tiles, 2);
         for r in 0..n {
             for c in 0..d_h {

@@ -2,11 +2,13 @@
 //! kernels (see DESIGN.md §"Dual-engine design").
 //!
 //! One iteration of the outer Q-block loop plays the role of one CTA on the
-//! A100: it decodes the spatial symbol once (`F`), optionally early-exits
-//! into the cache-then-reuse path, and otherwise runs the online-softmax
-//! inner loop with the reduction-axis decode (`J`) deciding which KV tiles
-//! are loaded at all. Work that the symbols mark as skipped is *actually
-//! not executed*, so wall-clock speedups here reproduce the paper's curves.
+//! A100. The sparse kernels consume compiled plans ([`crate::plan`]): the
+//! symbol decode (`F`/`J`) ran once at plan-compile time, so the kernel
+//! loops walk only live block indices — no bit math in the hot path. Work
+//! that the symbols mark as skipped is *actually not executed*, so
+//! wall-clock speedups here reproduce the paper's curves. Each kernel also
+//! keeps its seed symbol-decoding variant (`*_symbols`) as the
+//! plan-equivalence reference and §4.3 decode-ablation subject.
 //!
 //! Submodules:
 //! * [`gemm`] — tiled dense GEMM primitives (the substrate for everything),

@@ -13,6 +13,10 @@
 //!   attention map: the `C_{v→t}` / `G_{t→v}` metrics, Eq. 1 selection, and
 //!   the baseline mask families (SpargeAttn-style dynamic, window/arrow
 //!   static).
+//! * [`plan`] — compiled **sparse execution plans**: the symbols are
+//!   decoded once per (layer, refresh) into CSR live-block index lists
+//!   (`SparsePlan`) that every sparse kernel consumes with zero decode
+//!   work in its inner loops; tile/pair statistics derive from the plan.
 //! * [`kernels`] — the **general sparse attention kernel** (Algorithm 1)
 //!   plus **GEMM-Q** / **GEMM-O** with real block skipping, and the dense
 //!   references they are tested against.
@@ -24,7 +28,9 @@
 //! * [`model`] / [`diffusion`] — the MiniMMDiT substrate (double-stream
 //!   multimodal DiT) and a rectified-flow sampler.
 //! * [`runtime`] — PJRT loading/execution of the AOT artifacts produced by
-//!   `python/compile/aot.py` (the L2/L1 numerics oracle).
+//!   `python/compile/aot.py` (the L2/L1 numerics oracle). Behind the
+//!   off-by-default `pjrt` feature: it needs the vendored `xla` crate,
+//!   which the offline build does not carry.
 //! * [`coordinator`] — the serving layer: request queue, shape-bucketing
 //!   batcher, worker pool, latency/throughput accounting.
 //! * [`metrics`] / [`report`] — the paper's quality + efficiency metrics and
@@ -43,7 +49,9 @@ pub mod kernels;
 pub mod masks;
 pub mod metrics;
 pub mod model;
+pub mod plan;
 pub mod report;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod symbols;
 pub mod tensor;

@@ -204,12 +204,21 @@ fn cmd_inspect(flags: HashMap<String, String>) -> Result<(), String> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_selfcheck(_flags: HashMap<String, String>) -> Result<(), String> {
+    Err("selfcheck needs the PJRT oracle — rebuild with `--features pjrt` \
+         (requires the vendored `xla`/`anyhow` crates, see Cargo.toml)"
+        .into())
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_selfcheck(flags: HashMap<String, String>) -> Result<(), String> {
     let dir = flags.get("artifacts").cloned().unwrap_or("artifacts".into());
     println!("PJRT self-check against {dir}/ ...");
     selfcheck(&dir).map_err(|e| format!("{e:#}"))
 }
 
+#[cfg(feature = "pjrt")]
 fn selfcheck(dir: &str) -> anyhow::Result<()> {
     use flashomni::runtime::{ArtifactRuntime, Input};
     use flashomni::tensor::Tensor;

@@ -235,6 +235,8 @@ pub fn norm_rope_joint_q(
 }
 
 /// Dense joint attention over all heads → concatenated `[N × dim]` output.
+/// Independent heads run in parallel (scoped threads); per-head outputs
+/// are disjoint so the result is bit-identical to the sequential loop.
 pub fn joint_attention_dense(
     q: &Tensor,
     k: &Tensor,
@@ -242,13 +244,25 @@ pub fn joint_attention_dense(
     heads: usize,
     block: usize,
 ) -> Tensor {
+    let per_head: Vec<Tensor> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..heads)
+            .map(|h| {
+                scope.spawn(move || {
+                    let qh = extract_head(q, heads, h);
+                    let kh = extract_head(k, heads, h);
+                    let vh = extract_head(v, heads, h);
+                    attention_dense(&qh, &kh, &vh, block, block)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|jh| jh.join().expect("attention worker panicked"))
+            .collect()
+    });
     let mut o = Tensor::zeros(&[q.rows(), q.cols()]);
-    for h in 0..heads {
-        let qh = extract_head(q, heads, h);
-        let kh = extract_head(k, heads, h);
-        let vh = extract_head(v, heads, h);
-        let oh = attention_dense(&qh, &kh, &vh, block, block);
-        insert_head(&mut o, &oh, heads, h);
+    for (h, oh) in per_head.iter().enumerate() {
+        insert_head(&mut o, oh, heads, h);
     }
     o
 }

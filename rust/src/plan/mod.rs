@@ -1,0 +1,458 @@
+//! Compiled **sparse execution plans** — the bridge from symbols to kernels.
+//!
+//! The paper's unified symbols (`S_c`, `S_s`, [`crate::symbols`]) are a
+//! compact *transport* format: one bit per block group. Executing directly
+//! from them forces every kernel to re-run the bitwise decode functions
+//! `F`/`J` per tile, per head, per call — the overhead the paper's §4.3
+//! register-cache optimization fights on the GPU. FlashInfer-style engines
+//! instead *compile* the mask once into compact block-index lists
+//! (`indptr`/`indices`) that every kernel consumes with zero decode work in
+//! its inner loop. This module is that compile step:
+//!
+//! * [`HeadPlan`] — one head's live structure: the list of computed
+//!   (`live_q`) and cached (`cached_q`) Q-block indices from `S_c`, plus a
+//!   CSR (`kv_indptr`/`kv_indices`) of live KV-block indices per live Q
+//!   block from `S_s`.
+//! * [`SparsePlan`] — all heads of one layer plus the block geometry,
+//!   compiled once per (layer, symbol refresh) and reused across every
+//!   Dispatch step until the policy refreshes the symbols.
+//!
+//! [`DecodeMode`] lives here because decode strategy is now a
+//! *plan-construction* concern: both modes must (and are property-tested
+//! to) produce identical plans; the §4.3 decode-overhead benchmark times
+//! plan compilation — and the legacy symbol-decoding kernels — under both.
+//!
+//! [`AttnStats`] and [`GemmStats`] are also defined here and *derived from
+//! the plan* (`attn_stats()` / `gemm_stats()`), so the engine, `metrics/`
+//! and `report/` all read one source of truth for tile/pair accounting.
+
+use crate::symbols::{HeadSymbols, LayerSymbols};
+
+/// How the reduction-axis symbols are decoded while *compiling* a plan —
+/// retained to reproduce the paper's FC-vs-BSS decode-overhead analysis
+/// (§4.3). Both modes yield identical plans.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecodeMode {
+    /// Decode a symbol byte once per 8 groups and keep it in a register
+    /// (the paper's optimization).
+    RowCached,
+    /// Re-run the full bitwise decode `J(S_s, i, j)` for every KV block
+    /// (the naive scheme the paper says burns CUDA-core cycles).
+    PerAccess,
+}
+
+/// Execution statistics for one attention call, derived from a plan.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AttnStats {
+    /// (Qi, Kj) block pairs actually computed.
+    pub computed_pairs: usize,
+    /// Total block pairs in a dense computation.
+    pub total_pairs: usize,
+    /// Q blocks served from cache.
+    pub cached_blocks: usize,
+    /// Total Q blocks.
+    pub q_blocks: usize,
+}
+
+impl AttnStats {
+    /// The paper's Sparsity metric: `skip / total`.
+    pub fn sparsity(&self) -> f64 {
+        if self.total_pairs == 0 {
+            return 0.0;
+        }
+        1.0 - self.computed_pairs as f64 / self.total_pairs as f64
+    }
+}
+
+/// Tile statistics for the sparse GEMMs, derived from a plan.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GemmStats {
+    pub computed_tiles: usize,
+    pub total_tiles: usize,
+}
+
+impl GemmStats {
+    pub fn sparsity(&self) -> f64 {
+        if self.total_tiles == 0 {
+            return 0.0;
+        }
+        1.0 - self.computed_tiles as f64 / self.total_tiles as f64
+    }
+}
+
+/// Compiled sparse structure for one attention head.
+///
+/// All indices are *raw* block indices (`0..t_q` / `0..t_kv`), i.e. the
+/// symbol pooling factor `n` has already been resolved at compile time.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HeadPlan {
+    /// Total Q blocks (`ceil(n / block_q)`).
+    pub t_q: usize,
+    /// Total KV blocks (`ceil(n_kv / block_k)`).
+    pub t_kv: usize,
+    /// Q-block indices computed this step (`F(S_c, i) = 1`), ascending.
+    pub live_q: Vec<usize>,
+    /// Q-block indices served from the feature cache (`F = 0`), ascending.
+    pub cached_q: Vec<usize>,
+    /// CSR row pointers into [`Self::kv_indices`]; `len = live_q.len() + 1`.
+    pub kv_indptr: Vec<usize>,
+    /// Live KV-block indices (`J(S_s, i, j) = 1`) per live Q block,
+    /// ascending within each row.
+    pub kv_indices: Vec<usize>,
+}
+
+impl HeadPlan {
+    /// Compile one head's symbols into index lists. `t_q`/`t_kv` are the
+    /// raw block counts of the sequence the plan will execute on.
+    pub fn from_symbols(sym: &HeadSymbols, t_q: usize, t_kv: usize, decode: DecodeMode) -> Self {
+        assert_eq!(sym.q_groups, t_q.div_ceil(sym.pool.max(1)), "S_c geometry mismatch");
+        assert_eq!(sym.kv_groups, t_kv.div_ceil(sym.pool.max(1)), "S_s geometry mismatch");
+        let mut live_q = Vec::new();
+        let mut cached_q = Vec::new();
+        let mut kv_indptr = vec![0usize];
+        let mut kv_indices = Vec::new();
+        for bi in 0..t_q {
+            if !sym.f(bi) {
+                cached_q.push(bi);
+                continue;
+            }
+            live_q.push(bi);
+            match decode {
+                DecodeMode::RowCached => {
+                    let mut dec = sym.row_decoder(bi);
+                    for bj in 0..t_kv {
+                        if dec.j(bj) {
+                            kv_indices.push(bj);
+                        }
+                    }
+                }
+                DecodeMode::PerAccess => {
+                    for bj in 0..t_kv {
+                        if sym.j(bi, bj) {
+                            kv_indices.push(bj);
+                        }
+                    }
+                }
+            }
+            kv_indptr.push(kv_indices.len());
+        }
+        HeadPlan { t_q, t_kv, live_q, cached_q, kv_indptr, kv_indices }
+    }
+
+    /// Fully-dense plan (every block live, every pair computed).
+    pub fn dense(t_q: usize, t_kv: usize) -> Self {
+        let live_q: Vec<usize> = (0..t_q).collect();
+        let kv_indptr: Vec<usize> = (0..=t_q).map(|i| i * t_kv).collect();
+        let mut kv_indices = Vec::with_capacity(t_q * t_kv);
+        for _ in 0..t_q {
+            kv_indices.extend(0..t_kv);
+        }
+        HeadPlan { t_q, t_kv, live_q, cached_q: Vec::new(), kv_indptr, kv_indices }
+    }
+
+    /// Live KV-block indices of the `li`-th *live* Q block.
+    #[inline]
+    pub fn live_kv(&self, li: usize) -> &[usize] {
+        &self.kv_indices[self.kv_indptr[li]..self.kv_indptr[li + 1]]
+    }
+
+    /// (Qi, Kj) pairs the plan will compute.
+    #[inline]
+    pub fn computed_pairs(&self) -> usize {
+        self.kv_indices.len()
+    }
+
+    /// Pairs of a dense computation.
+    #[inline]
+    pub fn total_pairs(&self) -> usize {
+        self.t_q * self.t_kv
+    }
+
+    /// Attention statistics this plan implies (single source of truth —
+    /// the kernel no longer counts anything in its inner loop).
+    pub fn attn_stats(&self) -> AttnStats {
+        AttnStats {
+            computed_pairs: self.computed_pairs(),
+            total_pairs: self.total_pairs(),
+            cached_blocks: self.cached_q.len(),
+            q_blocks: self.t_q,
+        }
+    }
+
+    /// GEMM tile statistics (spatial axis only: one tile per Q block).
+    pub fn gemm_stats(&self) -> GemmStats {
+        GemmStats { computed_tiles: self.live_q.len(), total_tiles: self.t_q }
+    }
+
+    /// Fraction of block pairs *not* computed (block-granular Sparsity).
+    pub fn pair_sparsity(&self) -> f64 {
+        self.attn_stats().sparsity()
+    }
+
+    /// Fraction of Q blocks served from cache.
+    pub fn cache_sparsity(&self) -> f64 {
+        self.gemm_stats().sparsity()
+    }
+
+    /// Planned attention FLOPs for head dim `d` (`QKᵀ` + `P·V`, one
+    /// multiply-add = 2 FLOPs) — precomputed from the live pair count.
+    pub fn attention_flops(&self, block_q: usize, block_k: usize, d: usize) -> f64 {
+        4.0 * self.computed_pairs() as f64 * (block_q * block_k * d) as f64
+    }
+
+    /// Restrict the plan to Q blocks `[lo, hi)`, rebasing indices to the
+    /// slice — used to hand each stream (text prefix / vision suffix) of
+    /// the joint sequence its own plan for GEMM-Q / GEMM-O.
+    pub fn slice_q(&self, lo: usize, hi: usize) -> HeadPlan {
+        assert!(lo <= hi && hi <= self.t_q, "bad Q-block slice [{lo}, {hi})");
+        let mut live_q = Vec::new();
+        let mut kv_indptr = vec![0usize];
+        let mut kv_indices = Vec::new();
+        for (li, &bi) in self.live_q.iter().enumerate() {
+            if bi < lo || bi >= hi {
+                continue;
+            }
+            live_q.push(bi - lo);
+            kv_indices.extend_from_slice(self.live_kv(li));
+            kv_indptr.push(kv_indices.len());
+        }
+        let cached_q = self
+            .cached_q
+            .iter()
+            .filter(|&&bi| bi >= lo && bi < hi)
+            .map(|&bi| bi - lo)
+            .collect();
+        HeadPlan { t_q: hi - lo, t_kv: self.t_kv, live_q, cached_q, kv_indptr, kv_indices }
+    }
+
+    /// Bytes held by the index lists (plan memory footprint).
+    pub fn index_bytes(&self) -> usize {
+        (self.live_q.len() + self.cached_q.len() + self.kv_indptr.len() + self.kv_indices.len())
+            * std::mem::size_of::<usize>()
+    }
+}
+
+/// Compiled plans for all heads of one layer, plus the block geometry the
+/// kernels need. Built once per (layer, symbol refresh); every sparse
+/// kernel of the layer consumes it read-only.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SparsePlan {
+    pub heads: Vec<HeadPlan>,
+    pub t_q: usize,
+    pub t_kv: usize,
+    pub block_q: usize,
+    pub block_k: usize,
+}
+
+impl SparsePlan {
+    /// Compile a layer's symbols into per-head plans.
+    pub fn compile(
+        syms: &LayerSymbols,
+        t_q: usize,
+        t_kv: usize,
+        block_q: usize,
+        block_k: usize,
+        decode: DecodeMode,
+    ) -> Self {
+        SparsePlan {
+            heads: syms
+                .heads
+                .iter()
+                .map(|h| HeadPlan::from_symbols(h, t_q, t_kv, decode))
+                .collect(),
+            t_q,
+            t_kv,
+            block_q,
+            block_k,
+        }
+    }
+
+    /// Fully-dense plan for `heads` heads.
+    pub fn dense(heads: usize, t_q: usize, t_kv: usize, block_q: usize, block_k: usize) -> Self {
+        SparsePlan {
+            heads: (0..heads).map(|_| HeadPlan::dense(t_q, t_kv)).collect(),
+            t_q,
+            t_kv,
+            block_q,
+            block_k,
+        }
+    }
+
+    /// Row-slice every head (see [`HeadPlan::slice_q`]).
+    pub fn slice_q(&self, lo: usize, hi: usize) -> SparsePlan {
+        SparsePlan {
+            heads: self.heads.iter().map(|h| h.slice_q(lo, hi)).collect(),
+            t_q: hi - lo,
+            t_kv: self.t_kv,
+            block_q: self.block_q,
+            block_k: self.block_k,
+        }
+    }
+
+    /// Aggregated GEMM tile statistics across heads.
+    pub fn gemm_stats(&self) -> GemmStats {
+        let mut s = GemmStats::default();
+        for h in &self.heads {
+            let hs = h.gemm_stats();
+            s.computed_tiles += hs.computed_tiles;
+            s.total_tiles += hs.total_tiles;
+        }
+        s
+    }
+
+    /// Aggregated attention statistics across heads.
+    pub fn attn_stats(&self) -> AttnStats {
+        let mut s = AttnStats::default();
+        for h in &self.heads {
+            let hs = h.attn_stats();
+            s.computed_pairs += hs.computed_pairs;
+            s.total_pairs += hs.total_pairs;
+            s.cached_blocks += hs.cached_blocks;
+            s.q_blocks += hs.q_blocks;
+        }
+        s
+    }
+
+    /// Mean fraction of block pairs not computed across heads.
+    pub fn pair_sparsity(&self) -> f64 {
+        self.attn_stats().sparsity()
+    }
+
+    /// Mean fraction of Q blocks served from cache across heads.
+    pub fn cache_sparsity(&self) -> f64 {
+        self.gemm_stats().sparsity()
+    }
+
+    /// Density = fraction of pairs computed.
+    pub fn density(&self) -> f64 {
+        1.0 - self.pair_sparsity()
+    }
+
+    /// Planned attention FLOPs for head dim `d`, summed over heads.
+    pub fn attention_flops(&self, d: usize) -> f64 {
+        self.heads
+            .iter()
+            .map(|h| h.attention_flops(self.block_q, self.block_k, d))
+            .sum()
+    }
+
+    /// Bytes held by all index lists.
+    pub fn index_bytes(&self) -> usize {
+        self.heads.iter().map(|h| h.index_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::symbols::HeadSymbols;
+    use crate::testutil::{prop_check, rand_mask};
+
+    #[test]
+    fn dense_plan_covers_everything() {
+        let p = HeadPlan::dense(3, 5);
+        assert_eq!(p.live_q, vec![0, 1, 2]);
+        assert!(p.cached_q.is_empty());
+        assert_eq!(p.computed_pairs(), 15);
+        assert_eq!(p.total_pairs(), 15);
+        assert_eq!(p.live_kv(1), &[0, 1, 2, 3, 4]);
+        assert_eq!(p.attn_stats().sparsity(), 0.0);
+        assert_eq!(p.gemm_stats().sparsity(), 0.0);
+        let d = HeadPlan::from_symbols(&HeadSymbols::dense(3, 5, 1), 3, 5, DecodeMode::RowCached);
+        assert_eq!(p, d);
+    }
+
+    #[test]
+    fn compile_matches_naive_decode() {
+        prop_check("plan == per-block F/J decode", 50, |rng| {
+            let pool = 1 + rng.below(3);
+            let t_q = 1 + rng.below(30);
+            let t_kv = 1 + rng.below(30);
+            let qg = t_q.div_ceil(pool);
+            let kg = t_kv.div_ceil(pool);
+            let m_c = rand_mask(rng, qg, 0.6);
+            let m_s = rand_mask(rng, qg * kg, 0.5);
+            let sym = HeadSymbols::from_masks(&m_c, &m_s, kg, pool);
+            let plan = HeadPlan::from_symbols(&sym, t_q, t_kv, DecodeMode::RowCached);
+            let mut li = 0;
+            for bi in 0..t_q {
+                if !sym.f(bi) {
+                    assert!(plan.cached_q.contains(&bi));
+                    continue;
+                }
+                assert_eq!(plan.live_q[li], bi);
+                let want: Vec<usize> = (0..t_kv).filter(|&bj| sym.j(bi, bj)).collect();
+                assert_eq!(plan.live_kv(li), &want[..]);
+                li += 1;
+            }
+            assert_eq!(li, plan.live_q.len());
+            assert_eq!(plan.live_q.len() + plan.cached_q.len(), t_q);
+        });
+    }
+
+    #[test]
+    fn slice_rebases_indices() {
+        let sym = HeadSymbols::from_masks(
+            &[true, false, true, true],
+            &[
+                true, false, true, true, // row 0
+                true, true, true, true, // row 1 (cached)
+                false, false, true, false, // row 2
+                true, true, false, true, // row 3
+            ],
+            4,
+            1,
+        );
+        let plan = HeadPlan::from_symbols(&sym, 4, 4, DecodeMode::RowCached);
+        let head = plan.slice_q(0, 2);
+        assert_eq!(head.live_q, vec![0]);
+        assert_eq!(head.cached_q, vec![1]);
+        assert_eq!(head.live_kv(0), &[0, 2, 3]);
+        let tail = plan.slice_q(2, 4);
+        assert_eq!(tail.live_q, vec![0, 1]);
+        assert!(tail.cached_q.is_empty());
+        assert_eq!(tail.live_kv(0), &[2]);
+        assert_eq!(tail.live_kv(1), &[0, 1, 3]);
+        // The two slices partition the pair count.
+        assert_eq!(
+            head.computed_pairs() + tail.computed_pairs(),
+            plan.computed_pairs()
+        );
+    }
+
+    #[test]
+    fn layer_aggregation_and_sparsity() {
+        let syms = LayerSymbols {
+            heads: vec![
+                HeadSymbols::from_masks(&[false, true], &[true; 4], 2, 1),
+                HeadSymbols::from_masks(&[true, true], &[true; 4], 2, 1),
+            ],
+        };
+        let plan = SparsePlan::compile(&syms, 2, 2, 8, 8, DecodeMode::RowCached);
+        let g = plan.gemm_stats();
+        assert_eq!(g.computed_tiles, 3);
+        assert_eq!(g.total_tiles, 4);
+        let a = plan.attn_stats();
+        assert_eq!(a.computed_pairs, 6);
+        assert_eq!(a.total_pairs, 8);
+        assert!((plan.cache_sparsity() - 0.25).abs() < 1e-12);
+        assert!((plan.pair_sparsity() - 0.25).abs() < 1e-12);
+        assert!(plan.index_bytes() > 0);
+        // FLOP precomputation follows the live pair count.
+        assert!((plan.attention_flops(4) - 4.0 * 6.0 * (8 * 8 * 4) as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stats_match_symbol_accounting_at_pool_1() {
+        prop_check("plan sparsity == symbol sparsity (pool 1)", 30, |rng| {
+            let t_q = 1 + rng.below(20);
+            let t_kv = 1 + rng.below(20);
+            let m_c = rand_mask(rng, t_q, 0.7);
+            let m_s = rand_mask(rng, t_q * t_kv, 0.6);
+            let sym = HeadSymbols::from_masks(&m_c, &m_s, t_kv, 1);
+            let plan = HeadPlan::from_symbols(&sym, t_q, t_kv, DecodeMode::RowCached);
+            assert!((plan.pair_sparsity() - sym.pair_sparsity()).abs() < 1e-12);
+            assert!((plan.cache_sparsity() - sym.cache_sparsity()).abs() < 1e-12);
+        });
+    }
+}

@@ -6,10 +6,11 @@
 //! been built yet — run `make artifacts` first.
 
 use flashomni::config::ModelConfig;
-use flashomni::kernels::attention::{flashomni_attention, DecodeMode};
+use flashomni::kernels::attention::flashomni_attention;
 use flashomni::kernels::gemm_o::{gemm_o_dispatch, WeightPanels};
 use flashomni::kernels::gemm_q::gemm_q;
 use flashomni::model::MiniMMDiT;
+use flashomni::plan::{DecodeMode, HeadPlan, SparsePlan};
 use flashomni::symbols::{BitSymbols, HeadSymbols, LayerSymbols};
 use flashomni::tensor::Tensor;
 use flashomni::util::fot::FotFile;
@@ -56,8 +57,8 @@ fn native_attention_matches_pallas_golden() {
     let s_c = g.get("attn.s_c").unwrap().to_u8().unwrap();
     let s_s = g.get("attn.s_s").unwrap().to_u8().unwrap();
     let sym = head_syms_from_packed(&s_c, &s_s, qg, kg);
-    let (got, stats) =
-        flashomni_attention(&q, &k, &v, &sym, bq, bk, None, DecodeMode::RowCached);
+    let plan = HeadPlan::from_symbols(&sym, qg, kg, DecodeMode::RowCached);
+    let (got, stats) = flashomni_attention(&q, &k, &v, &plan, bq, bk, None);
     assert!(stats.computed_pairs < stats.total_pairs, "golden symbols should skip work");
     let diff = got.max_abs_diff(&want);
     assert!(diff < 5e-5, "native attention vs Pallas golden: max diff {diff}");
@@ -86,7 +87,8 @@ fn native_gemm_q_matches_pallas_golden() {
             })
             .collect(),
     };
-    let (got, _) = gemm_q(&x, &w, &syms, bq, None);
+    let plan = SparsePlan::compile(&syms, qg, qg, bq, bq, DecodeMode::RowCached);
+    let (got, _) = gemm_q(&x, &w, &plan, None);
     let diff = got.max_abs_diff(&want);
     assert!(diff < 5e-4, "native GEMM-Q vs Pallas golden: max diff {diff}");
 }
@@ -116,7 +118,8 @@ fn native_gemm_o_matches_pallas_golden() {
             .collect(),
     };
     let panels = WeightPanels::new(&w, heads);
-    let (got, _) = gemm_o_dispatch(&o, &panels, &syms, bq, &bias);
+    let plan = SparsePlan::compile(&syms, qg, qg, bq, bq, DecodeMode::RowCached);
+    let (got, _) = gemm_o_dispatch(&o, &panels, &plan, &bias);
     let diff = got.max_abs_diff(&want);
     assert!(diff < 1e-3, "native GEMM-O vs Pallas golden: max diff {diff}");
 }

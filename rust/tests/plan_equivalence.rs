@@ -1,0 +1,231 @@
+//! Plan-equivalence property tests (PR 1 acceptance):
+//!
+//! (a) `BitSymbols` pack/unpack round-trips on random masks,
+//! (b) the plan-based kernels are **bitwise-identical** to the seed
+//!     symbol-decoding kernels on random `HeadSymbols` and on symbols
+//!     emitted by a real randomized policy (`flashomni_masks`),
+//! (c) `RowCached` and `PerAccess` plan compilation produce identical
+//!     live-index sets.
+
+use flashomni::kernels::attention::{flashomni_attention, flashomni_attention_symbols};
+use flashomni::kernels::gemm_o::{
+    gemm_o_dispatch, gemm_o_dispatch_symbols, gemm_o_stage1, gemm_o_stage1_symbols,
+    gemm_o_update, gemm_o_update_symbols, WeightPanels,
+};
+use flashomni::kernels::gemm_q::{gemm_q, gemm_q_symbols};
+use flashomni::masks::flashomni_masks;
+use flashomni::plan::{DecodeMode, HeadPlan, SparsePlan};
+use flashomni::symbols::{BitSymbols, HeadSymbols, LayerSymbols};
+use flashomni::testutil::{prop_check, rand_mask, randn};
+use flashomni::util::rng::Pcg32;
+
+fn random_layer_syms(
+    rng: &mut Pcg32,
+    heads: usize,
+    qg: usize,
+    kg: usize,
+    pool: usize,
+) -> LayerSymbols {
+    LayerSymbols {
+        heads: (0..heads)
+            .map(|_| {
+                let m_c = rand_mask(rng, qg, 0.6);
+                let m_s = rand_mask(rng, qg * kg, 0.5);
+                HeadSymbols::from_masks(&m_c, &m_s, kg, pool)
+            })
+            .collect(),
+    }
+}
+
+// ---------------------------------------------------------------- (a) --
+
+#[test]
+fn bitsymbols_roundtrip_random_masks() {
+    prop_check("BitSymbols pack/unpack roundtrip", 100, |rng| {
+        let n = 1 + rng.below(200);
+        let density = rng.f64();
+        let bits = rand_mask(rng, n, density);
+        let b = BitSymbols::from_bits(&bits);
+        assert_eq!(b.len(), n);
+        assert_eq!(b.to_bits(), bits, "unpack must invert pack");
+        assert_eq!(b.count_ones(), bits.iter().filter(|&&x| x).count());
+        // Round-trip through the raw byte representation too (.fot path).
+        let b2 = BitSymbols::from_bytes(b.bytes().to_vec(), n);
+        assert_eq!(b2, b);
+        assert_eq!(b2.to_bits(), bits);
+    });
+}
+
+// ---------------------------------------------------------------- (c) --
+
+#[test]
+fn rowcached_and_peraccess_plans_are_identical() {
+    prop_check("RowCached plan == PerAccess plan", 80, |rng| {
+        let pool = 1 + rng.below(3);
+        let t_q = 1 + rng.below(48);
+        let t_kv = 1 + rng.below(48);
+        let qg = t_q.div_ceil(pool);
+        let kg = t_kv.div_ceil(pool);
+        let (dc, ds) = (rng.f64(), rng.f64());
+        let m_c = rand_mask(rng, qg, dc);
+        let m_s = rand_mask(rng, qg * kg, ds);
+        let sym = HeadSymbols::from_masks(&m_c, &m_s, kg, pool);
+        let a = HeadPlan::from_symbols(&sym, t_q, t_kv, DecodeMode::RowCached);
+        let b = HeadPlan::from_symbols(&sym, t_q, t_kv, DecodeMode::PerAccess);
+        assert_eq!(a, b, "decode modes must yield the same live-index sets");
+    });
+}
+
+// ---------------------------------------------------------------- (b) --
+
+#[test]
+fn plan_attention_bitwise_matches_symbol_kernel() {
+    prop_check("plan attention == symbol attention (bitwise)", 25, |rng| {
+        let n = 16 + rng.below(64);
+        let d = 4 + rng.below(12);
+        let bq = 4 + rng.below(8);
+        let bk = 4 + rng.below(8);
+        let pool = 1 + rng.below(2);
+        let t_q = n.div_ceil(bq);
+        let t_kv = n.div_ceil(bk);
+        let qg = t_q.div_ceil(pool);
+        let kg = t_kv.div_ceil(pool);
+        let q = randn(rng, &[n, d]);
+        let k = randn(rng, &[n, d]);
+        let v = randn(rng, &[n, d]);
+        let cached = randn(rng, &[n, d]);
+        let sym = HeadSymbols::from_masks(
+            &rand_mask(rng, qg, 0.7),
+            &rand_mask(rng, qg * kg, 0.6),
+            kg,
+            pool,
+        );
+        let (want, wstats) =
+            flashomni_attention_symbols(&q, &k, &v, &sym, bq, bk, Some(&cached), DecodeMode::RowCached);
+        let plan = HeadPlan::from_symbols(&sym, t_q, t_kv, DecodeMode::RowCached);
+        let (got, gstats) = flashomni_attention(&q, &k, &v, &plan, bq, bk, Some(&cached));
+        assert_eq!(got.data(), want.data(), "attention outputs must be bitwise equal");
+        assert_eq!(gstats.computed_pairs, wstats.computed_pairs);
+        assert_eq!(gstats.total_pairs, wstats.total_pairs);
+        assert_eq!(gstats.cached_blocks, wstats.cached_blocks);
+        // Bias-optimized path (no cached_o) as well.
+        let (want2, _) =
+            flashomni_attention_symbols(&q, &k, &v, &sym, bq, bk, None, DecodeMode::PerAccess);
+        let (got2, _) = flashomni_attention(&q, &k, &v, &plan, bq, bk, None);
+        assert_eq!(got2.data(), want2.data());
+    });
+}
+
+#[test]
+fn plan_gemm_q_bitwise_matches_symbol_kernel() {
+    prop_check("plan GEMM-Q == symbol GEMM-Q (bitwise)", 25, |rng| {
+        let n = 16 + rng.below(48);
+        let d_in = 4 + rng.below(12);
+        let heads = 1 + rng.below(4);
+        let d_h = 2 + rng.below(6);
+        let b = 4 + rng.below(8);
+        let t_q = n.div_ceil(b);
+        let x = randn(rng, &[n, d_in]);
+        let w = randn(rng, &[d_in, heads * d_h]);
+        let bias: Vec<f32> = (0..heads * d_h).map(|_| rng.normal()).collect();
+        let syms = random_layer_syms(rng, heads, t_q, t_q, 1);
+        let plan = SparsePlan::compile(&syms, t_q, t_q, b, b, DecodeMode::RowCached);
+        for bias_opt in [None, Some(&bias[..])] {
+            let (want, wstats) = gemm_q_symbols(&x, &w, &syms, b, bias_opt);
+            let (got, gstats) = gemm_q(&x, &w, &plan, bias_opt);
+            assert_eq!(got.data(), want.data(), "GEMM-Q outputs must be bitwise equal");
+            assert_eq!(gstats.computed_tiles, wstats.computed_tiles);
+            assert_eq!(gstats.total_tiles, wstats.total_tiles);
+        }
+    });
+}
+
+#[test]
+fn plan_gemm_o_bitwise_matches_symbol_kernels() {
+    prop_check("plan GEMM-O == symbol GEMM-O (bitwise)", 25, |rng| {
+        let n = 16 + rng.below(48);
+        let heads = 1 + rng.below(4);
+        let d_h = 2 + rng.below(6);
+        let d_out = 4 + rng.below(12);
+        let b = 4 + rng.below(8);
+        let t_q = n.div_ceil(b);
+        let o = randn(rng, &[n, heads * d_h]);
+        let w = randn(rng, &[heads * d_h, d_out]);
+        let panels = WeightPanels::new(&w, heads);
+        let syms = random_layer_syms(rng, heads, t_q, t_q, 1);
+        let plan = SparsePlan::compile(&syms, t_q, t_q, b, b, DecodeMode::RowCached);
+
+        let (want_out, want_bias, wstats) = gemm_o_update_symbols(&o, &panels, &syms, b);
+        let (got_out, got_bias, gstats) = gemm_o_update(&o, &panels, &plan);
+        assert_eq!(got_out.data(), want_out.data(), "update outputs must be bitwise equal");
+        assert_eq!(got_bias.data(), want_bias.data(), "update biases must be bitwise equal");
+        assert_eq!(gstats.computed_tiles, wstats.computed_tiles);
+
+        let want_s1 = gemm_o_stage1_symbols(&o, &panels, &syms, b);
+        let got_s1 = gemm_o_stage1(&o, &panels, &plan);
+        assert_eq!(got_s1.data(), want_s1.data(), "stage-1 biases must be bitwise equal");
+
+        let (want_d, wd) = gemm_o_dispatch_symbols(&o, &panels, &syms, b, &want_bias);
+        let (got_d, gd) = gemm_o_dispatch(&o, &panels, &plan, &got_bias);
+        assert_eq!(got_d.data(), want_d.data(), "dispatch outputs must be bitwise equal");
+        assert_eq!(gd.computed_tiles, wd.computed_tiles);
+    });
+}
+
+#[test]
+fn plan_kernels_match_on_randomized_policy_symbols() {
+    // Symbols emitted by the actual FlashOmni mask policy (Eq. 1 + BSS
+    // selection on random Q/K), not just uniform random masks.
+    prop_check("plan == symbols on policy-emitted masks", 15, |rng| {
+        let b = 8;
+        let n = 64 + 8 * rng.below(8); // multiple of 8
+        let d = 8 + rng.below(16);
+        let t = n / b;
+        let q = randn(rng, &[n, d]);
+        let k = randn(rng, &[n, d]);
+        let v = randn(rng, &[n, d]);
+        let tau_q = 0.2 + 0.6 * rng.f64();
+        let tau_kv = 0.1 + 0.4 * rng.f64();
+        let m = flashomni_masks(&q, &k, b, b, 8, tau_q, tau_kv);
+        let sym = HeadSymbols::from_masks(&m.m_c, &m.m_s, m.kv_groups, 1);
+        let plan = HeadPlan::from_symbols(&sym, t, t, DecodeMode::RowCached);
+        let (want, wstats) =
+            flashomni_attention_symbols(&q, &k, &v, &sym, b, b, None, DecodeMode::RowCached);
+        let (got, gstats) = flashomni_attention(&q, &k, &v, &plan, b, b, None);
+        assert_eq!(got.data(), want.data());
+        assert_eq!(gstats.computed_pairs, wstats.computed_pairs);
+
+        let syms = LayerSymbols { heads: vec![sym] };
+        let lplan = SparsePlan::compile(&syms, t, t, b, b, DecodeMode::RowCached);
+        let x = randn(rng, &[n, d]);
+        let wq = randn(rng, &[d, d]);
+        let (want_q, _) = gemm_q_symbols(&x, &wq, &syms, b, None);
+        let (got_q, _) = gemm_q(&x, &wq, &lplan, None);
+        assert_eq!(got_q.data(), want_q.data());
+    });
+}
+
+#[test]
+fn sliced_plans_partition_the_joint_plan() {
+    // The engine slices the joint plan at the text/vision boundary; the
+    // slices must exactly partition live tiles and pairs.
+    prop_check("plan slices partition", 40, |rng| {
+        let heads = 1 + rng.below(4);
+        let t_q = 2 + rng.below(30);
+        let t_kv = 1 + rng.below(30);
+        let split = rng.below(t_q + 1);
+        let syms = random_layer_syms(rng, heads, t_q, t_kv, 1);
+        let plan = SparsePlan::compile(&syms, t_q, t_kv, 8, 8, DecodeMode::RowCached);
+        let head = plan.slice_q(0, split);
+        let tail = plan.slice_q(split, t_q);
+        let g = plan.gemm_stats();
+        let gh = head.gemm_stats();
+        let gt = tail.gemm_stats();
+        assert_eq!(gh.computed_tiles + gt.computed_tiles, g.computed_tiles);
+        assert_eq!(gh.total_tiles + gt.total_tiles, g.total_tiles);
+        let a = plan.attn_stats();
+        let ah = head.attn_stats();
+        let at = tail.attn_stats();
+        assert_eq!(ah.computed_pairs + at.computed_pairs, a.computed_pairs);
+    });
+}
