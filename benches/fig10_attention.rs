@@ -5,9 +5,14 @@
 //!
 //! Also reproduces the FC-vs-BSS decode-overhead claim (§4.3) by timing
 //! the naive per-access decode against the register-cached row decode.
+//!
+//! PR 2: also times the single-head kernel dispatched serially vs on the
+//! persistent `ExecPool` (8 heads) and emits a machine-readable
+//! `BENCH_fig10.json` perf trajectory like fig6.
 //! Env: FO_SEQS (default "2048,4096"), FO_BUDGET (default 0.3).
 
-use flashomni::bench::{write_csv, Bencher, Measurement};
+use flashomni::bench::{json_row, write_bench_json, write_csv, Bencher, Measurement};
+use flashomni::exec::ExecPool;
 use flashomni::kernels::attention::{
     attention_dense, flashomni_attention, flashomni_attention_symbols,
 };
@@ -29,6 +34,8 @@ fn main() {
     let block = 64;
     let d = 64;
     let mut rows: Vec<(Measurement, Option<f64>)> = Vec::new();
+    let mut json_rows: Vec<String> = Vec::new();
+    let pool = ExecPool::global();
 
     for &seq in &seqs {
         let mut rng = Pcg32::seeded(0xa10 + seq as u64);
@@ -40,6 +47,7 @@ fn main() {
         let dense = bencher.run(&format!("dense seq={seq}"), || {
             std::hint::black_box(attention_dense(&q, &k, &v, block, block));
         });
+        json_rows.push(json_row("attention", &format!("dense_seq{seq}"), 0.0, &dense, 1.0));
         rows.push((dense.clone(), Some(1.0)));
         for (gname, bss) in [("@1", 0.1f64), ("@2", 0.3), ("@3", 0.5)] {
             for fc in [0.1f64, 0.2, 0.4, 0.6, 0.8] {
@@ -57,6 +65,13 @@ fn main() {
                     "{gname} fc={fc:.1}  sparsity {s:.3}  speedup {speedup:.2}x  theory {theory:.2}x  ratio {:.1}%",
                     100.0 * speedup / theory
                 );
+                json_rows.push(json_row(
+                    "attention",
+                    &format!("{gname}_fc{fc}_seq{seq}"),
+                    s,
+                    &m,
+                    speedup,
+                ));
                 rows.push((m, Some(speedup)));
             }
         }
@@ -86,9 +101,42 @@ fn main() {
             naive.median_s * 1e3,
             100.0 * (naive.median_s / cached.median_s - 1.0)
         );
+        json_rows.push(json_row("decode", &format!("row_cached_seq{seq}"), 0.6, &cached, 0.0));
+        json_rows.push(json_row("decode", &format!("per_access_seq{seq}"), 0.6, &naive, 0.0));
+        json_rows.push(json_row("decode", &format!("plan_seq{seq}"), 0.6, &planned, 0.0));
+
+        // Serial-vs-pool head dispatch at this sequence length: 8
+        // independent heads through the same sparse kernel and plan.
+        let heads = 8;
+        let serial = bencher.run(&format!("seq={seq} 8-head serial"), || {
+            for _ in 0..heads {
+                std::hint::black_box(flashomni_attention(&q, &k, &v, &plan, block, block, None));
+            }
+        });
+        let pooled = bencher.run(&format!("seq={seq} 8-head pool"), || {
+            std::hint::black_box(pool.parallel_map_indexed(heads, |_| {
+                flashomni_attention(&q, &k, &v, &plan, block, block, None).0
+            }));
+        });
+        println!(
+            "8-head dispatch: serial {:.3}ms vs pool {:.3}ms ({:.2}x)",
+            serial.median_s * 1e3,
+            pooled.median_s * 1e3,
+            serial.median_s / pooled.median_s
+        );
+        json_rows.push(json_row("attention_multihead", &format!("serial_seq{seq}"), 0.6, &serial, 1.0));
+        json_rows.push(json_row(
+            "attention_multihead",
+            &format!("pool_seq{seq}"),
+            0.6,
+            &pooled,
+            pooled.speedup_vs(&serial),
+        ));
         rows.push((cached, None));
         rows.push((naive, None));
         rows.push((planned, None));
+        rows.push((serial, None));
+        rows.push((pooled, None));
         // FC vs BSS at matched sparsity (paper: 4.97× vs 4.6× at 80%).
         let fc_sym = random_symbols(&mut rng, t, t, 1, 0.8, 0.0);
         let bss_sym = random_symbols(&mut rng, t, t, 1, 0.0, 0.8);
@@ -105,8 +153,23 @@ fn main() {
             m_fc.speedup_vs(&dense),
             m_bss.speedup_vs(&dense)
         );
+        json_rows.push(json_row("attention", &format!("FC80_seq{seq}"), 0.8, &m_fc, m_fc.speedup_vs(&dense)));
+        json_rows.push(json_row("attention", &format!("BSS80_seq{seq}"), 0.8, &m_bss, m_bss.speedup_vs(&dense)));
         rows.push((m_fc, None));
         rows.push((m_bss, None));
     }
     let _ = write_csv("reports/fig10_attention.csv", &rows);
+    match write_bench_json(
+        "BENCH_fig10.json",
+        "fig10_attention",
+        &[
+            ("block", block as f64),
+            ("head_dim", d as f64),
+            ("exec_pool_threads", pool.size() as f64),
+        ],
+        &json_rows,
+    ) {
+        Ok(()) => println!("\nwrote BENCH_fig10.json ({} rows)", json_rows.len()),
+        Err(e) => eprintln!("could not write BENCH_fig10.json: {e}"),
+    }
 }

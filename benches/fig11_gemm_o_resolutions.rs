@@ -4,11 +4,19 @@
 //! Paper: ~2.5–3.4× at standard resolution (lower kernel parallelism →
 //! decode overhead more visible), 2.7–3.9× at ultra-high resolution.
 //! Our scaled token lengths: 272 (mini), 1088 (FLUX-1K scale), 4096
-//! (video scale). Env: FO_BUDGET.
+//! (video scale).
+//!
+//! PR 2: also times the pool-backed dispatch kernel and emits a
+//! machine-readable `BENCH_fig11.json` perf trajectory like fig6.
+//! Env: FO_BUDGET; FO_MAX_SEQ skips resolutions above the given token
+//! length (CI smoke runs set it low to keep the bench to seconds).
 
-use flashomni::bench::{write_csv, Bencher, Measurement};
+use flashomni::bench::{json_row, write_bench_json, write_csv, Bencher, Measurement};
+use flashomni::exec::ExecPool;
 use flashomni::kernels::flops;
-use flashomni::kernels::gemm_o::{gemm_o_dispatch, gemm_o_update, WeightPanels};
+use flashomni::kernels::gemm_o::{
+    gemm_o_dispatch, gemm_o_dispatch_pool, gemm_o_update, WeightPanels,
+};
 use flashomni::plan::{DecodeMode, SparsePlan};
 use flashomni::symbols::{random_symbols, LayerSymbols};
 use flashomni::testutil::randn;
@@ -17,17 +25,27 @@ use flashomni::util::rng::Pcg32;
 fn main() {
     let budget: f64 =
         std::env::var("FO_BUDGET").ok().and_then(|v| v.parse().ok()).unwrap_or(0.3);
+    let max_seq: usize = std::env::var("FO_MAX_SEQ")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(usize::MAX);
     let bencher = Bencher { warmup: 1, min_iters: 3, budget_s: budget };
     let heads = 8;
     let d_h = 64;
     let d = heads * d_h;
     let sparsity = 0.8f64;
+    let pool = ExecPool::global();
     let mut rows: Vec<(Measurement, Option<f64>)> = Vec::new();
+    let mut json_rows: Vec<String> = Vec::new();
 
     println!("# Figure 11 — GEMM-O speedup across resolutions (sparsity {sparsity})");
     for (label, seq, block) in
         [("mini-272", 272usize, 16usize), ("flux1k-1088", 1088, 32), ("video-4096", 4096, 64)]
     {
+        if seq > max_seq {
+            println!("{label:<12} skipped (FO_MAX_SEQ={max_seq})");
+            continue;
+        }
         let mut rng = Pcg32::seeded(0xb11 + seq as u64);
         let t = seq.div_ceil(block);
         let o = randn(&mut rng, &[seq, d]);
@@ -39,6 +57,7 @@ fn main() {
         let dense = bencher.run(&format!("{label} dense"), || {
             std::hint::black_box(gemm_o_dispatch(&o, &panels, &dense_plan, &zero_bias));
         });
+        json_rows.push(json_row("gemm_o", &format!("dense_{label}"), 0.0, &dense, 1.0));
         rows.push((dense.clone(), Some(1.0)));
         for interval in [4usize, 6, 8] {
             let syms = LayerSymbols {
@@ -54,16 +73,58 @@ fn main() {
             let dispatch = bencher.run(&format!("{label} dispatch N={interval}"), || {
                 std::hint::black_box(gemm_o_dispatch(&o, &panels, &plan, &bias));
             });
+            let dispatch_pool =
+                bencher.run(&format!("{label} dispatch pool N={interval}"), || {
+                    std::hint::black_box(gemm_o_dispatch_pool(&o, &panels, &plan, &bias, &pool));
+                });
             let fo = update.median_s + (interval - 1) as f64 * dispatch.median_s;
+            let fo_pool = update.median_s + (interval - 1) as f64 * dispatch_pool.median_s;
             let speedup = interval as f64 * dense.median_s / fo;
+            let speedup_pool = interval as f64 * dense.median_s / fo_pool;
             let theory = flops::gemm_o_theoretical_speedup(interval, sparsity);
             println!(
-                "{label:<12} N={interval}  speedup {speedup:.2}x  theory {theory:.2}x  %of-theory {:.1}%",
+                "{label:<12} N={interval}  speedup {speedup:.2}x (pool {speedup_pool:.2}x)  theory {theory:.2}x  %of-theory {:.1}%",
                 100.0 * speedup / theory
             );
+            json_rows.push(json_row(
+                "gemm_o_update",
+                &format!("{label}_N{interval}"),
+                sparsity,
+                &update,
+                0.0,
+            ));
+            json_rows.push(json_row(
+                "gemm_o_dispatch",
+                &format!("{label}_N{interval}"),
+                sparsity,
+                &dispatch,
+                speedup,
+            ));
+            json_rows.push(json_row(
+                "gemm_o_dispatch_pool",
+                &format!("{label}_N{interval}"),
+                sparsity,
+                &dispatch_pool,
+                speedup_pool,
+            ));
             rows.push((update, None));
             rows.push((dispatch, Some(speedup)));
+            rows.push((dispatch_pool, Some(speedup_pool)));
         }
     }
     let _ = write_csv("reports/fig11_gemm_o_resolutions.csv", &rows);
+    match write_bench_json(
+        "BENCH_fig11.json",
+        "fig11_gemm_o_resolutions",
+        &[
+            ("heads", heads as f64),
+            ("head_dim", d_h as f64),
+            ("sparsity", sparsity),
+            ("exec_pool_threads", pool.size() as f64),
+        ],
+        &json_rows,
+    ) {
+        Ok(()) => println!("\nwrote BENCH_fig11.json ({} rows)", json_rows.len()),
+        Err(e) => eprintln!("could not write BENCH_fig11.json: {e}"),
+    }
 }

@@ -14,17 +14,23 @@
 //!
 //! Besides the human-readable table + CSV, the bench emits a
 //! machine-readable `BENCH_fig6.json` (per-kernel ns + sparsity) so later
-//! PRs have a perf trajectory to compare against.
+//! PRs have a perf trajectory to compare against. PR 2 additions: the
+//! multi-head attention dispatch comparison (serial loop vs per-step
+//! `thread::scope` vs persistent `ExecPool` — the pool must be no slower
+//! than the scope path) and the `u32` plan-index footprint report.
 //!
 //! Env: FO_SEQ (default 2048), FO_BUDGET seconds/case (default 0.4).
 
-use flashomni::bench::{print_table, write_csv, Bencher, Measurement};
+use flashomni::bench::{json_row, print_table, write_bench_json, write_csv, Bencher, Measurement};
+use flashomni::exec::ExecPool;
 use flashomni::kernels::attention::{attention_dense, flashomni_attention};
 use flashomni::kernels::flops;
 use flashomni::kernels::gemm_o::{gemm_o_dispatch, gemm_o_update, WeightPanels};
-use flashomni::kernels::gemm_q::gemm_q;
+use flashomni::kernels::gemm_q::{gemm_q, gemm_q_pool};
+use flashomni::model::blocks::{extract_head, insert_head};
 use flashomni::plan::{DecodeMode, HeadPlan, SparsePlan};
 use flashomni::symbols::random_symbols;
+use flashomni::tensor::Tensor;
 use flashomni::testutil::randn;
 use flashomni::util::rng::Pcg32;
 
@@ -34,17 +40,6 @@ fn env_usize(key: &str, default: usize) -> usize {
 
 fn env_f64(key: &str, default: f64) -> f64 {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
-}
-
-/// One machine-readable result row for BENCH_fig6.json.
-fn json_row(kernel: &str, case: &str, sparsity: f64, m: &Measurement, speedup: f64) -> String {
-    format!(
-        "{{\"kernel\":\"{kernel}\",\"case\":\"{case}\",\"sparsity\":{sparsity:.6},\
-         \"median_ns\":{:.0},\"min_ns\":{:.0},\"iters\":{},\"speedup\":{speedup:.4}}}",
-        m.median_s * 1e9,
-        m.min_s * 1e9,
-        m.iters
-    )
 }
 
 fn main() {
@@ -109,6 +104,86 @@ fn main() {
         json_rows.push(json_row("plan_compile", &format!("{decode:?}"), sym.pair_sparsity(), &m, 0.0));
         rows.push((m, None));
     }
+    // u32 index packing (FlashInfer idiom): report the footprint shrink
+    // against the pre-PR-2 usize lists.
+    let probe = HeadPlan::from_symbols(&sym, t, t, DecodeMode::RowCached);
+    let plan_index_bytes = probe.index_bytes();
+    let plan_index_bytes_usize = probe.index_len() * std::mem::size_of::<usize>();
+    println!(
+        "plan index lists: {} B (u32) vs {} B (usize) — {:.1}% smaller",
+        plan_index_bytes,
+        plan_index_bytes_usize,
+        100.0 * (1.0 - plan_index_bytes as f64 / plan_index_bytes_usize.max(1) as f64)
+    );
+
+    // ---------------- multi-head dispatch: serial vs scope vs pool --------
+    // The engine's per-step head fan-out. `thread::scope` pays a spawn per
+    // call (the PR 1 scheme); the persistent pool must be no slower.
+    {
+        let heads_d = heads * d;
+        let qm = randn(&mut rng, &[seq, heads_d]);
+        let km = randn(&mut rng, &[seq, heads_d]);
+        let vm = randn(&mut rng, &[seq, heads_d]);
+        let head_plans: Vec<HeadPlan> = (0..heads)
+            .map(|_| {
+                let s = random_symbols(&mut rng, t, t, 1, 0.5, 0.3);
+                HeadPlan::from_symbols(&s, t, t, DecodeMode::RowCached)
+            })
+            .collect();
+        let gather = |per_head: Vec<Tensor>| {
+            let mut o = Tensor::zeros(&[seq, heads_d]);
+            for (h, oh) in per_head.iter().enumerate() {
+                insert_head(&mut o, oh, heads, h);
+            }
+            o
+        };
+        let run_head = |h: usize| {
+            let qh = extract_head(&qm, heads, h);
+            let kh = extract_head(&km, heads, h);
+            let vh = extract_head(&vm, heads, h);
+            flashomni_attention(&qh, &kh, &vh, &head_plans[h], block, block, None).0
+        };
+        let serial = bencher.run("attention 8-head serial", || {
+            std::hint::black_box(gather((0..heads).map(run_head).collect()));
+        });
+        let scoped = bencher.run("attention 8-head thread::scope", || {
+            let per_head: Vec<Tensor> = std::thread::scope(|scope| {
+                let handles: Vec<_> =
+                    (0..heads).map(|h| scope.spawn(move || run_head(h))).collect();
+                handles.into_iter().map(|jh| jh.join().unwrap()).collect()
+            });
+            std::hint::black_box(gather(per_head));
+        });
+        let pool = ExecPool::global();
+        let pooled = bencher.run("attention 8-head ExecPool", || {
+            std::hint::black_box(gather(pool.parallel_map_indexed(heads, run_head)));
+        });
+        println!(
+            "multi-head dispatch: serial {:.3}ms  scope {:.3}ms  pool {:.3}ms (pool vs scope {:+.1}%)",
+            serial.median_s * 1e3,
+            scoped.median_s * 1e3,
+            pooled.median_s * 1e3,
+            100.0 * (pooled.median_s / scoped.median_s - 1.0)
+        );
+        json_rows.push(json_row("attention_multihead", "serial", 0.0, &serial, 1.0));
+        json_rows.push(json_row(
+            "attention_multihead",
+            "thread_scope",
+            0.0,
+            &scoped,
+            scoped.speedup_vs(&serial),
+        ));
+        json_rows.push(json_row(
+            "attention_multihead",
+            "pool",
+            0.0,
+            &pooled,
+            pooled.speedup_vs(&serial),
+        ));
+        rows.push((serial, Some(1.0)));
+        rows.push((scoped, None));
+        rows.push((pooled, None));
+    }
 
     // ---------------- GEMM-Q (spatial skipping) ----------------
     let d_in = heads * d;
@@ -131,14 +206,21 @@ fn main() {
         let m = bencher.run(&format!("gemm_q s={sparsity}"), || {
             std::hint::black_box(gemm_q(&x, &w, &plan, None));
         });
+        let pool = ExecPool::global();
+        let mp = bencher.run(&format!("gemm_q pool s={sparsity}"), || {
+            std::hint::black_box(gemm_q_pool(&x, &w, &plan, None, &pool));
+        });
         let speedup = m.speedup_vs(&gq_dense);
         let theory = 1.0 / (1.0 - sparsity);
         println!(
-            "gemm_q            sparsity {sparsity:.2}  speedup {speedup:.2}x  theory {theory:.2}x  ratio {:.1}%",
-            100.0 * speedup / theory
+            "gemm_q            sparsity {sparsity:.2}  speedup {speedup:.2}x  theory {theory:.2}x  ratio {:.1}%  pool {:.2}x",
+            100.0 * speedup / theory,
+            mp.speedup_vs(&gq_dense)
         );
         json_rows.push(json_row("gemm_q", "random", sparsity, &m, speedup));
+        json_rows.push(json_row("gemm_q_pool", "random", sparsity, &mp, mp.speedup_vs(&gq_dense)));
         rows.push((m, Some(speedup)));
+        rows.push((mp, None));
     }
 
     // ---------------- GEMM-O (amortized over N = 6) ----------------
@@ -185,12 +267,21 @@ fn main() {
 
     print_table("fig6 raw measurements", &rows);
     let _ = write_csv("reports/fig6_kernels.csv", &rows);
-    let json = format!(
-        "{{\"bench\":\"fig6_kernels\",\"seq\":{seq},\"block\":{block},\"head_dim\":{d},\
-         \"heads\":{heads},\"gemm_o_interval\":{interval},\"rows\":[\n{}\n]}}\n",
-        json_rows.join(",\n")
-    );
-    match std::fs::write("BENCH_fig6.json", &json) {
+    match write_bench_json(
+        "BENCH_fig6.json",
+        "fig6_kernels",
+        &[
+            ("seq", seq as f64),
+            ("block", block as f64),
+            ("head_dim", d as f64),
+            ("heads", heads as f64),
+            ("gemm_o_interval", interval as f64),
+            ("exec_pool_threads", ExecPool::global().size() as f64),
+            ("plan_index_bytes_u32", plan_index_bytes as f64),
+            ("plan_index_bytes_usize_equiv", plan_index_bytes_usize as f64),
+        ],
+        &json_rows,
+    ) {
         Ok(()) => println!("\nwrote BENCH_fig6.json ({} rows)", json_rows.len()),
         Err(e) => eprintln!("could not write BENCH_fig6.json: {e}"),
     }

@@ -3,11 +3,18 @@
 //!
 //! Paper reference points: measured speedup reaches 93.1% / 87.7% / 84.7%
 //! of theory at N = 4 / 6 / 8 (the decode overhead grows with N).
+//!
+//! PR 2: also times the pool-backed dispatch kernel (row-block parallel on
+//! the persistent `ExecPool`) against the serial one and emits a
+//! machine-readable `BENCH_fig8.json` perf trajectory like fig6.
 //! Env: FO_SEQ (default 2048), FO_BUDGET (default 0.4).
 
-use flashomni::bench::{write_csv, Bencher, Measurement};
+use flashomni::bench::{json_row, write_bench_json, write_csv, Bencher, Measurement};
+use flashomni::exec::ExecPool;
 use flashomni::kernels::flops;
-use flashomni::kernels::gemm_o::{gemm_o_dispatch, gemm_o_update, WeightPanels};
+use flashomni::kernels::gemm_o::{
+    gemm_o_dispatch, gemm_o_dispatch_pool, gemm_o_update, gemm_o_update_pool, WeightPanels,
+};
 use flashomni::plan::{DecodeMode, SparsePlan};
 use flashomni::symbols::{random_symbols, LayerSymbols};
 use flashomni::testutil::randn;
@@ -26,6 +33,8 @@ fn main() {
     let bencher = Bencher { warmup: 1, min_iters: 3, budget_s: env("FO_BUDGET", 0.4) };
     let mut rng = Pcg32::seeded(0x816);
     let t = seq / block;
+    let pool = ExecPool::global();
+    let mut json_rows: Vec<String> = Vec::new();
 
     println!("# Figure 8 — GEMM-O speedup vs interval N (seq {seq})");
     let o = randn(&mut rng, &[seq, d]);
@@ -38,6 +47,7 @@ fn main() {
     let dense = bencher.run("gemm_o dense", || {
         std::hint::black_box(gemm_o_dispatch(&o, &panels, &dense_plan, &zero_bias));
     });
+    json_rows.push(json_row("gemm_o", "dense", 0.0, &dense, 1.0));
     let mut rows: Vec<(Measurement, Option<f64>)> = vec![(dense.clone(), Some(1.0))];
 
     for interval in [4usize, 6, 8] {
@@ -56,16 +66,66 @@ fn main() {
                 bencher.run(&format!("dispatch N={interval} s={sparsity}"), || {
                     std::hint::black_box(gemm_o_dispatch(&o, &panels, &plan, &bias));
                 });
+            let update_pool =
+                bencher.run(&format!("update pool N={interval} s={sparsity}"), || {
+                    std::hint::black_box(gemm_o_update_pool(&o, &panels, &plan, &pool));
+                });
+            let dispatch_pool =
+                bencher.run(&format!("dispatch pool N={interval} s={sparsity}"), || {
+                    std::hint::black_box(gemm_o_dispatch_pool(&o, &panels, &plan, &bias, &pool));
+                });
             let fo = update.median_s + (interval - 1) as f64 * dispatch.median_s;
+            let fo_pool =
+                update_pool.median_s + (interval - 1) as f64 * dispatch_pool.median_s;
             let speedup = interval as f64 * dense.median_s / fo;
+            let speedup_pool = interval as f64 * dense.median_s / fo_pool;
             let theory = flops::gemm_o_theoretical_speedup(interval, sparsity);
             println!(
-                "N={interval} sparsity {sparsity:.1}  speedup {speedup:.3}x  theory {theory:.3}x  %of-theory {:.1}%",
+                "N={interval} sparsity {sparsity:.1}  speedup {speedup:.3}x (pool {speedup_pool:.3}x)  theory {theory:.3}x  %of-theory {:.1}%",
                 100.0 * speedup / theory
             );
+            json_rows.push(json_row("gemm_o_update", &format!("N{interval}"), sparsity, &update, 0.0));
+            json_rows.push(json_row(
+                "gemm_o_dispatch",
+                &format!("N{interval}"),
+                sparsity,
+                &dispatch,
+                speedup,
+            ));
+            json_rows.push(json_row(
+                "gemm_o_update_pool",
+                &format!("N{interval}"),
+                sparsity,
+                &update_pool,
+                0.0,
+            ));
+            json_rows.push(json_row(
+                "gemm_o_dispatch_pool",
+                &format!("N{interval}"),
+                sparsity,
+                &dispatch_pool,
+                speedup_pool,
+            ));
             rows.push((update, None));
             rows.push((dispatch, Some(speedup)));
+            rows.push((update_pool, None));
+            rows.push((dispatch_pool, Some(speedup_pool)));
         }
     }
     let _ = write_csv("reports/fig8_gemm_o.csv", &rows);
+    match write_bench_json(
+        "BENCH_fig8.json",
+        "fig8_gemm_o",
+        &[
+            ("seq", seq as f64),
+            ("block", block as f64),
+            ("heads", heads as f64),
+            ("head_dim", d_h as f64),
+            ("exec_pool_threads", pool.size() as f64),
+        ],
+        &json_rows,
+    ) {
+        Ok(()) => println!("\nwrote BENCH_fig8.json ({} rows)", json_rows.len()),
+        Err(e) => eprintln!("could not write BENCH_fig8.json: {e}"),
+    }
 }

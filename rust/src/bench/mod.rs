@@ -104,6 +104,35 @@ pub fn print_table(title: &str, rows: &[(Measurement, Option<f64>)]) {
     }
 }
 
+/// One machine-readable result row for the `BENCH_*.json` perf-trajectory
+/// files (shared by every fig bench so rows stay schema-compatible).
+pub fn json_row(kernel: &str, case: &str, sparsity: f64, m: &Measurement, speedup: f64) -> String {
+    format!(
+        "{{\"kernel\":\"{kernel}\",\"case\":\"{case}\",\"sparsity\":{sparsity:.6},\
+         \"median_ns\":{:.0},\"min_ns\":{:.0},\"iters\":{},\"speedup\":{speedup:.4}}}",
+        m.median_s * 1e9,
+        m.min_s * 1e9,
+        m.iters
+    )
+}
+
+/// Write a `BENCH_<name>.json` perf-trajectory file: a `bench` tag, flat
+/// numeric header fields, and the [`json_row`] rows. Later PRs diff these
+/// files to catch perf regressions.
+pub fn write_bench_json(
+    path: &str,
+    bench: &str,
+    header: &[(&str, f64)],
+    rows: &[String],
+) -> std::io::Result<()> {
+    let mut head = format!("\"bench\":\"{bench}\"");
+    for (k, v) in header {
+        head.push_str(&format!(",\"{k}\":{v}"));
+    }
+    let json = format!("{{{head},\"rows\":[\n{}\n]}}\n", rows.join(",\n"));
+    std::fs::write(path, json)
+}
+
 /// Emit a CSV file of `(case, median_s, min_s, mad_s, iters, extra)` rows.
 pub fn write_csv(
     path: &str,
@@ -147,6 +176,29 @@ mod tests {
         assert!(m.median_s > 0.0);
         assert!(m.min_s <= m.median_s);
         assert!(m.iters >= 3);
+    }
+
+    #[test]
+    fn json_helpers_emit_expected_shape() {
+        let m = Measurement {
+            name: "x".into(),
+            median_s: 1e-3,
+            min_s: 1e-3,
+            mad_s: 0.0,
+            iters: 3,
+        };
+        let row = json_row("k", "c", 0.5, &m, 2.0);
+        assert!(row.starts_with('{') && row.ends_with('}'));
+        assert!(row.contains("\"kernel\":\"k\""));
+        assert!(row.contains("\"speedup\":2.0000"));
+        let path = std::env::temp_dir().join("flashomni_bench_json_test.json");
+        let p = path.to_str().unwrap();
+        write_bench_json(p, "t", &[("seq", 512.0)], &[row]).unwrap();
+        let body = std::fs::read_to_string(p).unwrap();
+        assert!(body.contains("\"bench\":\"t\""));
+        assert!(body.contains("\"seq\":512"));
+        assert!(body.trim_end().ends_with("]}"));
+        let _ = std::fs::remove_file(p);
     }
 
     #[test]

@@ -7,6 +7,18 @@
 //! queue, workers pull *batches* of compatible requests (same step count —
 //! our shape bucket), run them through their engine, and emit per-request
 //! latency breakdowns.
+//!
+//! Idle workers **block** on the queue condvar; [`Coordinator::close`]
+//! flips the closed flag under the queue lock and `notify_all`s, so they
+//! exit promptly instead of spinning on wait timeouts. Closing drains: a
+//! worker only exits once the queue is empty, so every submitted request
+//! still gets served.
+//!
+//! Worker engines default to the process-wide
+//! [`ExecPool`](crate::exec::ExecPool), so N workers × H attention heads
+//! share one fixed thread set instead of oversubscribing N×H scoped
+//! threads (pass a custom pool via `DiTEngine::set_exec_pool` in the
+//! factory to change that).
 
 use crate::engine::{DiTEngine, RunStats};
 use crate::tensor::Tensor;
@@ -46,6 +58,29 @@ struct Shared {
     closed: AtomicBool,
 }
 
+/// Claim a shape bucket from the front of the queue: the first job plus up
+/// to `max_batch - 1` immediately-following jobs with the same step count
+/// (requests in one batch share the worker's warm weight/cache state and
+/// could share one plan compile per layer refresh). Returns an empty batch
+/// only when the queue is empty.
+fn claim_batch(q: &mut VecDeque<Job>, max_batch: usize) -> Vec<Job> {
+    let first = match q.pop_front() {
+        Some(j) => j,
+        None => return Vec::new(),
+    };
+    let first_steps = first.req.steps;
+    let mut batch = vec![first];
+    while batch.len() < max_batch {
+        match q.front() {
+            Some(j) if j.req.steps == first_steps => {
+                batch.push(q.pop_front().unwrap());
+            }
+            _ => break,
+        }
+    }
+    batch
+}
+
 /// Worker-pool coordinator.
 pub struct Coordinator {
     shared: Arc<Shared>,
@@ -76,31 +111,20 @@ impl Coordinator {
             handles.push(std::thread::spawn(move || {
                 let mut engine = factory(wid);
                 loop {
-                    // Claim a batch: block for the first job, then drain up
-                    // to max_batch compatible (same step count) jobs.
+                    // Claim a batch: block for the first job (a plain
+                    // condvar wait — `close()` notifies all waiters under
+                    // the queue lock, so there is no lost-wakeup window and
+                    // no need for a polling timeout), then drain up to
+                    // max_batch compatible (same step count) jobs.
                     let batch: Vec<Job> = {
                         let mut q = shared.queue.lock().unwrap();
                         while q.is_empty() {
                             if shared.closed.load(Ordering::SeqCst) {
                                 return;
                             }
-                            let (guard, _timeout) = shared
-                                .cv
-                                .wait_timeout(q, std::time::Duration::from_millis(50))
-                                .unwrap();
-                            q = guard;
+                            q = shared.cv.wait(q).unwrap();
                         }
-                        let first_steps = q.front().unwrap().req.steps;
-                        let mut batch = vec![q.pop_front().unwrap()];
-                        while batch.len() < max_batch {
-                            match q.front() {
-                                Some(j) if j.req.steps == first_steps => {
-                                    batch.push(q.pop_front().unwrap());
-                                }
-                                _ => break,
-                            }
-                        }
-                        batch
+                        claim_batch(&mut q, max_batch)
                     };
                     let bsize = batch.len();
                     let batch_start = Instant::now();
@@ -142,11 +166,31 @@ impl Coordinator {
         (0..n).map(|_| self.out_rx.recv().expect("worker died")).collect()
     }
 
-    /// Signal shutdown and join workers.
-    pub fn shutdown(self) {
-        self.shared.closed.store(true, Ordering::SeqCst);
+    /// Signal that no more work will be submitted and wake every idle
+    /// worker. Queued requests are still drained: a worker only exits when
+    /// it finds the queue empty. Setting the flag under the queue lock
+    /// pairs with the workers' check-then-wait, so no worker can slip
+    /// between its empty-queue check and the condvar wait and sleep
+    /// through the close notification.
+    pub fn close(&self) {
+        {
+            let _q = self.shared.queue.lock().unwrap();
+            self.shared.closed.store(true, Ordering::SeqCst);
+        }
         self.shared.cv.notify_all();
-        for h in self.handles {
+    }
+
+    /// Close and join workers (drains already-queued requests first).
+    pub fn shutdown(self) {
+        // Drop does the work; the method exists for call-site clarity.
+        drop(self);
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.close();
+        for h in self.handles.drain(..) {
             let _ = h.join();
         }
     }
@@ -285,5 +329,74 @@ mod tests {
     fn shutdown_joins_cleanly() {
         let coord = Coordinator::start(tiny_engine, 1, 1);
         coord.shutdown();
+    }
+
+    #[test]
+    fn close_wakes_idle_workers_promptly() {
+        // Workers are blocked on the condvar (no jobs); close() must get
+        // them out well under the old 50 ms polling period.
+        let coord = Coordinator::start(tiny_engine, 4, 2);
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let t0 = Instant::now();
+        coord.shutdown();
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(2),
+            "close + join took {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn close_drains_queued_requests() {
+        let coord = Coordinator::start(tiny_engine, 1, 2);
+        let trace = poisson_trace(3, 5, 1000.0, 3, 8);
+        for req in &trace {
+            coord.submit(req.clone());
+        }
+        // Close immediately: every already-queued request must still be
+        // served before the worker exits.
+        coord.close();
+        let responses = coord.collect(5);
+        assert_eq!(responses.len(), 5);
+        let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..5).collect::<Vec<u64>>());
+        coord.shutdown();
+    }
+
+    fn job_with_steps(id: u64, steps: usize) -> Job {
+        let mut req = poisson_trace(9, 1, 1000.0, 3, 8).remove(0);
+        req.id = id;
+        req.steps = steps;
+        Job { req, enqueued: Instant::now() }
+    }
+
+    #[test]
+    fn claim_batch_buckets_by_step_count() {
+        let mut q: VecDeque<Job> = VecDeque::new();
+        for (id, steps) in [(0u64, 4usize), (1, 4), (2, 6), (3, 4)] {
+            q.push_back(job_with_steps(id, steps));
+        }
+        // First claim: ids 0 and 1 share steps=4; id 2 breaks the bucket.
+        let b1 = claim_batch(&mut q, 8);
+        assert_eq!(b1.iter().map(|j| j.req.id).collect::<Vec<_>>(), vec![0, 1]);
+        // Second claim: id 2 alone (steps=6).
+        let b2 = claim_batch(&mut q, 8);
+        assert_eq!(b2.iter().map(|j| j.req.id).collect::<Vec<_>>(), vec![2]);
+        // Third claim: trailing id 3.
+        let b3 = claim_batch(&mut q, 8);
+        assert_eq!(b3.iter().map(|j| j.req.id).collect::<Vec<_>>(), vec![3]);
+        assert!(claim_batch(&mut q, 8).is_empty());
+    }
+
+    #[test]
+    fn claim_batch_respects_max_batch() {
+        let mut q: VecDeque<Job> = VecDeque::new();
+        for id in 0..5u64 {
+            q.push_back(job_with_steps(id, 4));
+        }
+        let b = claim_batch(&mut q, 2);
+        assert_eq!(b.len(), 2);
+        assert_eq!(q.len(), 3);
     }
 }

@@ -8,15 +8,20 @@
 //!    produces logical masks from the fresh per-head Q/K, which are packed
 //!    into the paper's unified bit symbols (`S_c`/`S_s`,
 //!    [`crate::symbols`]).
-//! 2. **The engine compiles symbols into plans.** The bit streams are
-//!    decoded exactly once into a [`SparsePlan`] per layer
+//! 2. **The engine compiles symbols into plans — through a cache.** The
+//!    bit streams are decoded exactly once into a [`SparsePlan`] per layer
 //!    ([`crate::plan`]): CSR live-block index lists for the joint sequence
 //!    plus row-sliced views for the text and vision streams. Plans are
-//!    **reused across every Dispatch step** of the Update window — no
-//!    per-step, per-tile symbol decoding anywhere in the hot path.
-//! 3. **Kernels consume plans.** GEMM-Q, the FlashOmni attention kernel,
-//!    and GEMM-O all iterate only live indices; independent attention
-//!    heads are dispatched in parallel via `std::thread::scope`. All
+//!    **reused across every Dispatch step** of the Update window, and a
+//!    [`PlanCache`] keyed by the packed symbol bytes + geometry
+//!    ([`crate::plan::cache`]) skips recompilation entirely when a refresh
+//!    re-emits unchanged symbols (repeated prompts, slowly-changing
+//!    masks); hit/miss counts surface in [`RunStats`].
+//! 3. **Kernels consume plans on the shared execution runtime.** GEMM-Q,
+//!    the FlashOmni attention kernel, and GEMM-O all iterate only live
+//!    indices; attention heads and GEMM tile loops run on the persistent
+//!    [`ExecPool`] ([`crate::exec`]) — no per-step thread spawn, and the
+//!    pool-backed outputs are bitwise-identical to the serial kernels. All
 //!    tile/pair statistics are derived from the plan (one source of truth
 //!    for `metrics/` and `report/`).
 //!
@@ -43,19 +48,24 @@ pub mod policy;
 use crate::cache::{combine_bias_stack, TaylorCache};
 use crate::config::ModelConfig;
 use crate::diffusion::{euler_step, initial_noise, plan_steps, time_grid, unpatchify, StepKind};
+use crate::exec::ExecPool;
 use crate::kernels::attention::flashomni_attention;
 use crate::kernels::flops;
-use crate::kernels::gemm_o::{gemm_o_dispatch, gemm_o_stage1, gemm_o_update, WeightPanels};
-use crate::kernels::gemm_q::gemm_q;
+use crate::kernels::gemm_o::{
+    gemm_o_dispatch_pool, gemm_o_stage1_pool, gemm_o_update_pool, WeightPanels,
+};
+use crate::kernels::gemm_q::gemm_q_pool;
 use crate::model::blocks::{
-    self, extract_head, insert_head, joint_attention_dense, linear, mlp_stream, post_attention,
-    pre_attention, qkv_joint, vsplit, vstack,
+    self, extract_head, insert_head, linear, mlp_stream, post_attention, pre_attention,
+    qkv_joint, vsplit, vstack,
 };
 use crate::model::{BlockExec, BlockWeights, MiniMMDiT};
+use crate::plan::cache::{symbol_key, CacheStats, PlanCache};
 use crate::plan::{AttnStats, DecodeMode, SparsePlan};
 use crate::symbols::LayerSymbols;
 use crate::tensor::Tensor;
 use crate::util::ceil_div;
+use std::sync::Arc;
 pub use policy::{Policy, PolicyKind};
 
 /// Block/pool geometry shared by the whole run.
@@ -120,6 +130,10 @@ pub struct RunStats {
     /// Layer-steps fully served from the block cache.
     pub cached_layer_steps: u64,
     pub total_layer_steps: u64,
+    /// Plan-cache outcomes of this run's symbol refreshes: a hit means a
+    /// refresh re-emitted byte-identical symbols and skipped recompilation.
+    pub plan_cache_hits: u64,
+    pub plan_cache_misses: u64,
     /// Per-step mean attention density (Fig. 7).
     pub per_step_density: Vec<f64>,
     /// FLOPs actually executed vs the dense equivalent.
@@ -170,6 +184,16 @@ struct LayerPlans {
     img: SparsePlan,
 }
 
+/// Cache key for a layer's symbol refresh: packed symbol bytes + every
+/// geometry parameter the compiled plan set depends on (the text/vision
+/// split changes the per-stream slices even for identical joint symbols).
+fn plan_key(syms: &LayerSymbols, geo: &Geometry) -> Vec<u8> {
+    symbol_key(
+        syms,
+        &[geo.t_q(), geo.t_kv(), geo.block_q, geo.block_k, geo.text_blocks()],
+    )
+}
+
 /// Decode the layer's symbols exactly once into the plan set every sparse
 /// kernel of the layer consumes (symbols → plan compile step).
 fn compile_plans(syms: &LayerSymbols, geo: &Geometry) -> LayerPlans {
@@ -188,7 +212,9 @@ fn compile_plans(syms: &LayerSymbols, geo: &Geometry) -> LayerPlans {
 /// Per-layer mutable state across the denoising run.
 struct LayerState {
     /// Compiled sparse plans (None until the policy first emits symbols).
-    plans: Option<LayerPlans>,
+    /// Shared with the plan cache: Dispatch steps keep the window's plan
+    /// alive even if the cache evicts it.
+    plans: Option<Arc<LayerPlans>>,
     /// TaylorSeer stack over the joint attention output `O_cat`.
     o_taylor: TaylorCache,
     /// Projected bias stacks per stream (one tensor per Taylor order).
@@ -223,6 +249,12 @@ struct LayerPanels {
     img: WeightPanels,
 }
 
+/// Default number of compiled plan sets the engine keeps per process
+/// lifetime (per engine). Each entry is one layer refresh — big enough for
+/// repeated prompts across every layer, small enough to bound memory under
+/// per-step-mask policies that emit fresh symbols every Dispatch step.
+const PLAN_CACHE_CAP: usize = 64;
+
 /// The engine: model + policy + per-layer state.
 pub struct DiTEngine {
     pub model: MiniMMDiT,
@@ -230,6 +262,13 @@ pub struct DiTEngine {
     pub geo: Geometry,
     state: Vec<LayerState>,
     panels: Vec<LayerPanels>,
+    /// Shared execution pool every sparse kernel of this engine runs on.
+    /// Defaults to [`ExecPool::global`], so coordinator workers share one
+    /// thread set instead of oversubscribing worker×head scoped threads.
+    exec: Arc<ExecPool>,
+    /// Symbols → compiled-plan cache, persistent across `generate` calls
+    /// (repeated prompts skip every recompilation).
+    plan_cache: PlanCache<LayerPlans>,
 }
 
 impl DiTEngine {
@@ -260,10 +299,35 @@ impl DiTEngine {
             })
             .collect();
         let state = (0..model.cfg.layers).map(|_| LayerState::new(order)).collect();
-        DiTEngine { model, policy, geo, state, panels }
+        DiTEngine {
+            model,
+            policy,
+            geo,
+            state,
+            panels,
+            exec: ExecPool::global(),
+            plan_cache: PlanCache::new(PLAN_CACHE_CAP),
+        }
     }
 
-    /// Reset all per-request state (symbol + cache history).
+    /// Swap the execution pool (tests exercise pool-size determinism; the
+    /// serving layer can hand every worker engine one shared pool).
+    pub fn set_exec_pool(&mut self, pool: Arc<ExecPool>) {
+        self.exec = pool;
+    }
+
+    /// The pool this engine dispatches kernels on.
+    pub fn exec_pool(&self) -> &Arc<ExecPool> {
+        &self.exec
+    }
+
+    /// Lifetime plan-cache counters (hits/misses/evictions).
+    pub fn plan_cache_stats(&self) -> CacheStats {
+        self.plan_cache.stats()
+    }
+
+    /// Reset all per-request state (symbol + cache history). The plan
+    /// cache is deliberately **kept**: cross-request reuse is its point.
     pub fn reset(&mut self) {
         let order = self.policy.order();
         for s in self.state.iter_mut() {
@@ -317,10 +381,19 @@ impl DiTEngine {
         step: usize,
         stats: &mut RunStats,
     ) -> Tensor {
-        let DiTEngine { model, policy, geo, state, panels } = self;
-        let mut exec =
-            EngineExec { policy, geo: *geo, state, panels, kind, step, stats };
-        model.forward_with(&mut exec, text_ids, x, t)
+        let DiTEngine { model, policy, geo, state, panels, exec, plan_cache } = self;
+        let mut block_exec = EngineExec {
+            policy,
+            geo: *geo,
+            state,
+            panels,
+            exec,
+            plan_cache,
+            kind,
+            step,
+            stats,
+        };
+        model.forward_with(&mut block_exec, text_ids, x, t)
     }
 
     /// Dense-equivalent FLOPs of one transformer layer step (used for the
@@ -340,9 +413,26 @@ struct EngineExec<'a> {
     geo: Geometry,
     state: &'a mut [LayerState],
     panels: &'a [LayerPanels],
+    exec: &'a Arc<ExecPool>,
+    plan_cache: &'a mut PlanCache<LayerPlans>,
     kind: StepKind,
     step: usize,
     stats: &'a mut RunStats,
+}
+
+impl<'a> EngineExec<'a> {
+    /// Symbols → plans through the cache, with RunStats accounting.
+    fn cached_compile(&mut self, syms: &LayerSymbols) -> Arc<LayerPlans> {
+        let geo = self.geo;
+        let key = plan_key(syms, &geo);
+        let (plans, hit) = self.plan_cache.get_or_compile(&key, || compile_plans(syms, &geo));
+        if hit {
+            self.stats.plan_cache_hits += 1;
+        } else {
+            self.stats.plan_cache_misses += 1;
+        }
+        plans
+    }
 }
 
 impl<'a> EngineExec<'a> {
@@ -412,8 +502,9 @@ impl<'a> EngineExec<'a> {
         let pre = pre_attention(bw, cvec, txt, img);
         let (q, k, v) =
             self.phase(0, |_| qkv_joint(bw, cfg, &pre.txt_mod, &pre.img_mod));
-        let o_cat =
-            self.phase(1, |_| joint_attention_dense(&q, &k, &v, cfg.heads, geo.block_q));
+        let o_cat = self.phase(1, |this| {
+            blocks::joint_attention_dense_on(this.exec, &q, &k, &v, cfg.heads, geo.block_q)
+        });
 
         // FLOP accounting: everything dense this step.
         let t_q = geo.t_q() as u64;
@@ -445,7 +536,7 @@ impl<'a> EngineExec<'a> {
                 ));
             }
             let syms = LayerSymbols { heads: heads_syms };
-            let plans = compile_plans(&syms, &geo);
+            let plans = self.cached_compile(&syms);
             // S_q degradation: too few blocks need compute → full caching.
             let compute_fraction = 1.0 - plans.joint.cache_sparsity();
             let st = &mut self.state[layer];
@@ -466,6 +557,7 @@ impl<'a> EngineExec<'a> {
         // GEMM-O: exact projection now + bias stacks for Dispatch steps,
         // all walking the compiled per-stream plans.
         self.phase(2, |this| {
+            let exec = Arc::clone(this.exec);
             let panels = &this.panels[layer];
             let LayerState { plans, bias_txt, bias_img, o_taylor, .. } =
                 &mut this.state[layer];
@@ -476,8 +568,10 @@ impl<'a> EngineExec<'a> {
                     let (e_txt, e_img) = vsplit(stack_entry, cfg.text_tokens);
                     if d == 0 {
                         // Exact output for this step + zeroth-order bias.
-                        let (mut out_t, b_t, _) = gemm_o_update(&e_txt, &panels.txt, &pl.txt);
-                        let (mut out_i, b_i, _) = gemm_o_update(&e_img, &panels.img, &pl.img);
+                        let (mut out_t, b_t, _) =
+                            gemm_o_update_pool(&e_txt, &panels.txt, &pl.txt, &exec);
+                        let (mut out_i, b_i, _) =
+                            gemm_o_update_pool(&e_img, &panels.img, &pl.img, &exec);
                         add_row_bias(&mut out_t, &bw.txt.bo);
                         add_row_bias(&mut out_i, &bw.img.bo);
                         bias_txt.push(b_t);
@@ -485,8 +579,8 @@ impl<'a> EngineExec<'a> {
                         let o_joint = vstack(&out_t, &out_i);
                         post_attention_preprojected(&pre, &o_joint, cfg.text_tokens, txt, img);
                     } else {
-                        bias_txt.push(gemm_o_stage1(&e_txt, &panels.txt, &pl.txt));
-                        bias_img.push(gemm_o_stage1(&e_img, &panels.img, &pl.img));
+                        bias_txt.push(gemm_o_stage1_pool(&e_txt, &panels.txt, &pl.txt, &exec));
+                        bias_img.push(gemm_o_stage1_pool(&e_img, &panels.img, &pl.img, &exec));
                     }
                 }
             } else {
@@ -542,11 +636,14 @@ impl<'a> EngineExec<'a> {
             let vj = vstack(&v_t, &v_i);
 
             // GEMM-Q with spatial skipping (per-head live tiles from the
-            // pre-sliced stream plans — no per-step symbol slicing).
+            // pre-sliced stream plans — no per-step symbol slicing), tile
+            // loops chunked over the shared pool.
             let (q_t, s_t, q_i, s_i) = {
                 let plans = this.state[layer].plans.as_ref().unwrap();
-                let (q_t, s_t) = gemm_q(&pre.txt_mod, &bw.txt.wq, &plans.txt, Some(&bw.txt.bq));
-                let (q_i, s_i) = gemm_q(&pre.img_mod, &bw.img.wq, &plans.img, Some(&bw.img.bq));
+                let (q_t, s_t) =
+                    gemm_q_pool(&pre.txt_mod, &bw.txt.wq, &plans.txt, Some(&bw.txt.bq), this.exec);
+                let (q_i, s_i) =
+                    gemm_q_pool(&pre.img_mod, &bw.img.wq, &plans.img, Some(&bw.img.bq), this.exec);
                 (q_t, s_t, q_i, s_i)
             };
             this.stats.gq_computed += (s_t.computed_tiles + s_i.computed_tiles) as u64;
@@ -570,34 +667,29 @@ impl<'a> EngineExec<'a> {
                 ));
             }
             let syms = LayerSymbols { heads: heads_syms };
-            self.state[layer].plans = Some(compile_plans(&syms, &geo));
+            let plans = self.cached_compile(&syms);
+            self.state[layer].plans = Some(plans);
         }
 
         // FlashOmni attention (Algorithm 1 with real skipping); independent
-        // heads dispatched in parallel — each scoped worker consumes its
-        // head's compiled plan and writes a disjoint output slice.
+        // heads dispatched on the persistent pool — each task consumes its
+        // head's compiled plan and produces that head's output slice (the
+        // pool places results by head index, so the gather below is
+        // order-deterministic and bitwise-identical to a serial loop).
         let o_cat = self.phase(1, |this| {
             let heads = cfg.heads;
-            let plans = this.state[layer].plans.as_ref().unwrap();
-            let per_head: Vec<(Tensor, AttnStats)> = std::thread::scope(|scope| {
-                let handles: Vec<_> = (0..heads)
-                    .map(|h| {
-                        let (qr, kr, vr) = (&q, &k, &v);
-                        let hp = &plans.joint.heads[h];
-                        let (bq, bk) = (geo.block_q, geo.block_k);
-                        scope.spawn(move || {
-                            let qh = extract_head(qr, heads, h);
-                            let kh = extract_head(kr, heads, h);
-                            let vh = extract_head(vr, heads, h);
-                            flashomni_attention(&qh, &kh, &vh, hp, bq, bk, None)
-                        })
-                    })
-                    .collect();
-                handles
-                    .into_iter()
-                    .map(|jh| jh.join().expect("attention worker panicked"))
-                    .collect()
-            });
+            let per_head: Vec<(Tensor, AttnStats)> = {
+                let plans = this.state[layer].plans.as_ref().unwrap();
+                let joint = &plans.joint;
+                let (bq, bk) = (geo.block_q, geo.block_k);
+                let (qr, kr, vr) = (&q, &k, &v);
+                this.exec.parallel_map_indexed(heads, |h| {
+                    let qh = extract_head(qr, heads, h);
+                    let kh = extract_head(kr, heads, h);
+                    let vh = extract_head(vr, heads, h);
+                    flashomni_attention(&qh, &kh, &vh, &joint.heads[h], bq, bk, None)
+                })
+            };
             let mut o_cat = Tensor::zeros(&[cfg.seq_len(), cfg.dim]);
             for (h, (oh, st)) in per_head.into_iter().enumerate() {
                 this.stats.attn_computed_pairs += st.computed_pairs as u64;
@@ -624,9 +716,9 @@ impl<'a> EngineExec<'a> {
                 combine_bias_stack(&st.bias_img, &coeffs)
             };
             let (mut out_t, g_t) =
-                gemm_o_dispatch(&o_txt, &this.panels[layer].txt, &plans.txt, &bias_t);
+                gemm_o_dispatch_pool(&o_txt, &this.panels[layer].txt, &plans.txt, &bias_t, this.exec);
             let (mut out_i, g_i) =
-                gemm_o_dispatch(&o_img, &this.panels[layer].img, &plans.img, &bias_i);
+                gemm_o_dispatch_pool(&o_img, &this.panels[layer].img, &plans.img, &bias_i, this.exec);
             this.stats.go_computed += (g_t.computed_tiles + g_i.computed_tiles) as u64;
             this.stats.go_total += (g_t.total_tiles + g_i.total_tiles) as u64;
             add_row_bias(&mut out_t, &bw.txt.bo);
@@ -782,6 +874,38 @@ mod tests {
         let diff = res.image.max_abs_diff(&want.image);
         assert!(diff < 1e-2, "zero-sparsity sparse path deviates by {diff}");
         assert_eq!(res.stats.attn_sparsity(), 0.0);
+    }
+
+    #[test]
+    fn plan_cache_hits_on_repeated_prompts() {
+        let model = tiny_model();
+        let ids: Vec<usize> = (0..model.cfg.text_tokens).collect();
+        let scfg = SparsityConfig {
+            tau_q: 0.6,
+            tau_kv: 0.3,
+            interval: 3,
+            order: 1,
+            s_q: 0.0,
+            block_q: 8,
+            block_k: 8,
+            pool: 1,
+            warmup: 2,
+            ramp_steps: 1,
+        };
+        let mut engine = DiTEngine::new(model, Policy::flashomni(scfg), 8, 8);
+        let r1 = engine.generate(&ids, 3, 10);
+        assert!(r1.stats.plan_cache_misses > 0, "first run must compile plans");
+        // Identical request → byte-identical symbols → every refresh hits.
+        let r2 = engine.generate(&ids, 3, 10);
+        assert_eq!(
+            r2.stats.plan_cache_misses, 0,
+            "repeated prompt must hit the plan cache on every refresh"
+        );
+        assert!(r2.stats.plan_cache_hits > 0);
+        assert_eq!(r1.image, r2.image, "cache reuse must not change the output");
+        let cs = engine.plan_cache_stats();
+        assert_eq!(cs.hits, r1.stats.plan_cache_hits + r2.stats.plan_cache_hits);
+        assert_eq!(cs.misses, r1.stats.plan_cache_misses + r2.stats.plan_cache_misses);
     }
 
     #[test]

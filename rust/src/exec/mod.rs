@@ -1,0 +1,41 @@
+//! Shared **execution runtime**: the persistent worker pool every sparse
+//! kernel runs on.
+//!
+//! FlashOmni's near-linear sparsity:speedup claim depends on the kernel
+//! layer actually saturating the hardware. Before this module existed the
+//! engine spawned a fresh `std::thread::scope` per Dispatch step (paying
+//! thread-spawn latency on every denoising step) and only attention heads
+//! ran in parallel — the GEMM-Q / GEMM-O tile loops were serial. The
+//! runtime fixes both:
+//!
+//! * [`ExecPool`] — a persistent, work-stealing-lite worker pool built on
+//!   `std::thread` + `Mutex<VecDeque>`/`Condvar` (zero external deps, per
+//!   DESIGN.md's offline constraint). Workers are spawned once and reused
+//!   by every parallel section; a per-section atomic index counter gives
+//!   dynamic load balancing, and results are always placed by input index
+//!   so pool-backed kernels are **bitwise-identical** to their serial
+//!   loops (property-tested in `rust/tests/exec_runtime.rs`).
+//! * [`ExecPool::global`] — the process-wide pool, sized to
+//!   `available_parallelism`. Engines default to it, so the serving
+//!   coordinator's N workers × H heads share one fixed thread set instead
+//!   of oversubscribing N×H scoped threads.
+//! * [`SendPtr`] — the one escape hatch for parallel tile loops that write
+//!   disjoint regions of a shared output tensor (GEMM-Q tiles touch
+//!   `(row-block × head-column)` rectangles; GEMM-O row-block tasks touch
+//!   disjoint row slabs).
+//!
+//! Scheduling model: the calling thread is itself a worker lane. A
+//! parallel section enqueues at most `pool.size()` helper jobs, then the
+//! caller drains the same index counter; when the caller finishes first it
+//! executes other queued jobs while waiting on the section latch, which
+//! keeps nested sections (and many concurrent callers, e.g. coordinator
+//! workers) deadlock-free. A pool of size 1 — or a 1-item section —
+//! degenerates to the plain serial loop.
+//!
+//! The plan-compilation cache that rides on top of this runtime lives in
+//! [`crate::plan::cache`] (it is keyed by plan-layer types); the engine
+//! wires the two together: symbols → cached plan → pool-backed kernels.
+
+mod pool;
+
+pub use pool::{ExecPool, SendPtr};

@@ -1,0 +1,404 @@
+//! The persistent worker pool backing every parallel hot path.
+//!
+//! See the [module docs](crate::exec) for the design rationale. The pool is
+//! deliberately minimal: `std::thread` workers blocking on a
+//! `Mutex<VecDeque>` + `Condvar` job queue ("work-stealing-lite" — one
+//! shared deque with an atomic index counter per parallel section rather
+//! than per-worker deques), and a latch per parallel call so borrows of the
+//! caller's stack provably outlive every job that uses them.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// A queued unit of work. Jobs created by the `parallel_*` entry points
+/// borrow the caller's stack; the lifetime is erased (see the `SAFETY`
+/// comment in [`ExecPool::run_indexed`]) because the caller blocks on a
+/// latch until every such job has finished.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Raw-pointer wrapper that is `Send`/`Sync` so parallel sections can write
+/// to *disjoint* regions of one output buffer from several workers.
+///
+/// Safety contract (on the code that uses it, not on construction): no two
+/// concurrent tasks may write the same element, and the pointed-to buffer
+/// must outlive the parallel section — which [`ExecPool`] guarantees by
+/// joining every job before `parallel_for`/`parallel_map` returns.
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(pub *mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+struct PoolShared {
+    queue: Mutex<VecDeque<Job>>,
+    work_cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// Completion latch for one parallel section: counts helper jobs still
+/// running; the caller blocks in [`ExecPool::wait_helping`] until it
+/// reaches zero. Completion is signalled through the pool's queue condvar
+/// (the same one job enqueues notify), so the waiting caller needs no
+/// timed polling: it sleeps on one condvar and is woken both by new work
+/// it can help with and by its own section finishing.
+struct Latch<'p> {
+    remaining: Mutex<usize>,
+    shared: &'p PoolShared,
+}
+
+impl<'p> Latch<'p> {
+    fn new(n: usize, shared: &'p PoolShared) -> Self {
+        Latch { remaining: Mutex::new(n), shared }
+    }
+
+    fn count_down(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        *r -= 1;
+        let done = *r == 0;
+        drop(r);
+        if done {
+            // Pair with the check-then-wait in `wait_helping`: the waiter
+            // performs its `is_done` check while holding the queue lock,
+            // so after we take-and-release that lock it is either parked
+            // on `work_cv` (the broadcast reaches it) or has not yet
+            // checked (it will observe remaining == 0). Never notify while
+            // holding the lock chain remaining → queue: `r` is dropped
+            // above, keeping lock order queue → remaining acyclic.
+            drop(self.shared.queue.lock().unwrap());
+            self.shared.work_cv.notify_all();
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        *self.remaining.lock().unwrap() == 0
+    }
+}
+
+/// Persistent worker pool with deterministic parallel iteration.
+///
+/// * Threads are spawned **once** (at pool construction) and reused by every
+///   parallel section — no per-step `thread::scope` spawn cost.
+/// * [`parallel_map`](Self::parallel_map) returns results **in input
+///   order** regardless of which worker computed what, so pool-backed
+///   kernels are bitwise-identical to their serial loops.
+/// * The calling thread is itself a full worker lane: a pool of size 1
+///   degenerates to the plain serial loop, and a busy pool never stalls a
+///   caller that could make progress on its own items.
+pub struct ExecPool {
+    shared: Arc<PoolShared>,
+    threads: usize,
+    handles: Vec<JoinHandle<()>>,
+}
+
+fn worker_loop(shared: Arc<PoolShared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break j;
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = shared.work_cv.wait(q).unwrap();
+            }
+        };
+        // A panicking job must not kill the worker: the panic is recorded
+        // by the parallel section that queued it and re-raised on the
+        // caller's thread.
+        let _ = catch_unwind(AssertUnwindSafe(job));
+    }
+}
+
+impl ExecPool {
+    /// Spawn a pool with `threads` persistent workers (clamped to ≥ 1).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            work_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (0..threads)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("fo-exec-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("failed to spawn exec worker")
+            })
+            .collect();
+        ExecPool { shared, threads, handles }
+    }
+
+    /// The process-wide shared pool, sized to the hardware parallelism.
+    /// Engines default to this pool, so N coordinator workers × H heads
+    /// share one fixed set of threads instead of oversubscribing.
+    pub fn global() -> Arc<ExecPool> {
+        static GLOBAL: OnceLock<Arc<ExecPool>> = OnceLock::new();
+        Arc::clone(GLOBAL.get_or_init(|| {
+            let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+            Arc::new(ExecPool::new(n))
+        }))
+    }
+
+    /// Number of persistent worker threads.
+    pub fn size(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(0..n)` across the pool. `f` must only touch state that is
+    /// safe to share (`Sync`) — use [`SendPtr`] for disjoint output writes.
+    pub fn parallel_for<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if n <= 1 || self.threads <= 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        self.run_indexed(n, &f);
+    }
+
+    /// Map `f` over `0..n`, returning results in index order. Dynamic
+    /// scheduling (workers grab the next index as they free up) with
+    /// deterministic output placement: slot `i` always holds `f(i)`.
+    pub fn parallel_map_indexed<R, F>(&self, n: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        if n <= 1 || self.threads <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        {
+            let out = SendPtr(slots.as_mut_ptr());
+            self.run_indexed(n, &move |i| {
+                let r = f(i);
+                // SAFETY: run_indexed hands each index to exactly one task,
+                // so slot writes are disjoint; the latch in run_indexed
+                // keeps `slots` alive until every task has finished.
+                unsafe { *out.0.add(i) = Some(r) };
+            });
+        }
+        slots.into_iter().map(|s| s.expect("parallel_map slot left unfilled")).collect()
+    }
+
+    /// Map `f` over a slice, returning results in input order.
+    pub fn parallel_map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        self.parallel_map_indexed(items.len(), |i| f(i, &items[i]))
+    }
+
+    fn submit_locked(q: &mut VecDeque<Job>, job: Job) {
+        q.push_back(job);
+    }
+
+    /// Core dispatcher: an atomic counter hands indices `0..n` to the
+    /// caller plus up to `threads` helper jobs; the caller drains alongside
+    /// the helpers and then blocks on a latch (helping with any queued
+    /// foreign jobs while it waits, so nested sections cannot deadlock).
+    fn run_indexed<F>(&self, n: usize, f: &F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        debug_assert!(n >= 2 && self.threads >= 2);
+        let next = AtomicUsize::new(0);
+        let drain = || loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            f(i);
+        };
+        let helpers = self.threads.min(n - 1);
+        let latch = Latch::new(helpers, &self.shared);
+        let panicked = AtomicBool::new(false);
+        {
+            let drain_ref = &drain;
+            let latch_ref = &latch;
+            let panicked_ref = &panicked;
+            let mut q = self.shared.queue.lock().unwrap();
+            for _ in 0..helpers {
+                let job = move || {
+                    if catch_unwind(AssertUnwindSafe(drain_ref)).is_err() {
+                        panicked_ref.store(true, Ordering::SeqCst);
+                    }
+                    latch_ref.count_down();
+                };
+                let boxed: Box<dyn FnOnce() + Send + '_> = Box::new(job);
+                // SAFETY: the job borrows `drain`/`latch`/`panicked` (and,
+                // through `drain`, the caller's `f` and data). We block on
+                // `latch` below until every helper has counted down, so the
+                // borrows strictly outlive the job's execution; the 'static
+                // bound on `Job` is erased only for queue storage.
+                let boxed: Job = unsafe {
+                    std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(boxed)
+                };
+                Self::submit_locked(&mut q, boxed);
+            }
+            drop(q);
+            self.shared.work_cv.notify_all();
+        }
+        // The caller is a full lane; even if every worker is busy the
+        // section completes at single-thread speed.
+        let caller = catch_unwind(AssertUnwindSafe(&drain));
+        self.wait_helping(&latch);
+        if let Err(payload) = caller {
+            std::panic::resume_unwind(payload);
+        }
+        if panicked.load(Ordering::SeqCst) {
+            panic!("ExecPool: a parallel worker panicked");
+        }
+    }
+
+    /// Block until `latch` opens, executing queued jobs in the meantime.
+    /// Helping keeps nested parallel sections live when every worker is
+    /// occupied. No timed polling: the caller sleeps on the queue condvar,
+    /// which is notified both on job enqueue and (via
+    /// [`Latch::count_down`]) on section completion; the `is_done` check
+    /// happens under the queue lock, closing the lost-wakeup window.
+    fn wait_helping(&self, latch: &Latch<'_>) {
+        loop {
+            let job = {
+                let mut q = self.shared.queue.lock().unwrap();
+                loop {
+                    if latch.is_done() {
+                        return;
+                    }
+                    if let Some(j) = q.pop_front() {
+                        break j;
+                    }
+                    q = self.shared.work_cv.wait(q).unwrap();
+                }
+            };
+            let _ = catch_unwind(AssertUnwindSafe(job));
+        }
+    }
+}
+
+impl Drop for ExecPool {
+    fn drop(&mut self) {
+        {
+            // Setting the flag under the queue lock pairs with the
+            // check-then-wait in `worker_loop`: no worker can slip between
+            // its empty-queue check and the condvar wait and miss the
+            // shutdown notification.
+            let _q = self.shared.queue.lock().unwrap();
+            self.shared.shutdown.store(true, Ordering::SeqCst);
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    fn map_preserves_input_order() {
+        for threads in [1, 2, 3, 8] {
+            let pool = ExecPool::new(threads);
+            let got = pool.parallel_map_indexed(100, |i| {
+                // Stagger so completion order differs from index order.
+                if i % 7 == 0 {
+                    std::thread::sleep(Duration::from_micros(50));
+                }
+                i * i
+            });
+            let want: Vec<usize> = (0..100).map(|i| i * i).collect();
+            assert_eq!(got, want, "pool size {threads}");
+        }
+    }
+
+    #[test]
+    fn map_over_slice_matches_serial() {
+        let items: Vec<f64> = (0..64).map(|i| i as f64 * 0.5).collect();
+        let pool = ExecPool::new(4);
+        let got = pool.parallel_map(&items, |i, x| x * 2.0 + i as f64);
+        let want: Vec<f64> =
+            items.iter().enumerate().map(|(i, x)| x * 2.0 + i as f64).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn for_visits_every_index_once() {
+        let pool = ExecPool::new(3);
+        let hits = AtomicUsize::new(0);
+        let mut flags = vec![0u8; 200];
+        {
+            let ptr = SendPtr(flags.as_mut_ptr());
+            pool.parallel_for(200, |i| {
+                hits.fetch_add(1, Ordering::SeqCst);
+                // SAFETY: each index is dispatched exactly once.
+                unsafe { *ptr.0.add(i) += 1 };
+            });
+        }
+        assert_eq!(hits.load(Ordering::SeqCst), 200);
+        assert!(flags.iter().all(|&f| f == 1));
+    }
+
+    #[test]
+    fn empty_and_single_item_sections() {
+        let pool = ExecPool::new(4);
+        let empty: Vec<usize> = pool.parallel_map_indexed(0, |i| i);
+        assert!(empty.is_empty());
+        assert_eq!(pool.parallel_map_indexed(1, |i| i + 41), vec![41]);
+        pool.parallel_for(0, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn nested_sections_complete() {
+        // Outer tasks spawn inner sections on the same pool; the
+        // help-while-waiting loop must keep everything live.
+        let pool = ExecPool::new(2);
+        let got = pool.parallel_map_indexed(4, |i| {
+            let inner = pool.parallel_map_indexed(8, |j| i * 100 + j);
+            inner.iter().sum::<usize>()
+        });
+        let want: Vec<usize> =
+            (0..4).map(|i| (0..8).map(|j| i * 100 + j).sum()).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = ExecPool::new(2);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.parallel_for(16, |i| {
+                if i == 5 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(result.is_err(), "panic must propagate to the caller");
+        // The pool must still be usable afterwards.
+        let ok = pool.parallel_map_indexed(8, |i| i + 1);
+        assert_eq!(ok, (1..=8).collect::<Vec<usize>>());
+    }
+
+    #[test]
+    fn global_pool_is_shared() {
+        let a = ExecPool::global();
+        let b = ExecPool::global();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(a.size() >= 1);
+    }
+}

@@ -207,7 +207,7 @@ pub fn flashomni_attention(
     // Cache-then-reuse path: a plain gather over the cached block list.
     if let Some(co) = cached_o {
         for &bi in &plan.cached_q {
-            let q_lo = bi * block_q;
+            let q_lo = bi as usize * block_q;
             let q_hi = (q_lo + block_q).min(n);
             o.data_mut()[q_lo * d..q_hi * d].copy_from_slice(&co.data()[q_lo * d..q_hi * d]);
         }
@@ -219,14 +219,14 @@ pub fn flashomni_attention(
     let mut l = vec![0.0f32; block_q];
 
     for (li, &bi) in plan.live_q.iter().enumerate() {
-        let q_lo = bi * block_q;
+        let q_lo = bi as usize * block_q;
         let q_hi = (q_lo + block_q).min(n);
         let bq = q_hi - q_lo;
         acc[..bq * d].fill(0.0);
         m[..bq].fill(f32::NEG_INFINITY);
         l[..bq].fill(0.0);
         for &bj in plan.live_kv(li) {
-            let k_lo = bj * block_k;
+            let k_lo = bj as usize * block_k;
             let k_hi = (k_lo + block_k).min(n_kv);
             let bk = k_hi - k_lo;
             attention_block_update(

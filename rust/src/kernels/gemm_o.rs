@@ -20,10 +20,19 @@
 //! decode. The seed symbol-decoding variants (`*_symbols`) are retained
 //! for the plan-equivalence property tests.
 //!
+//! The `*_pool` variants run the tile loop on a persistent
+//! [`ExecPool`], parallelized over **row blocks** (heads accumulate into
+//! the same output rows, so the head loop must stay inside one task to
+//! preserve the serial per-element accumulation order — which is exactly
+//! what makes the pool outputs bitwise-identical to the serial kernels).
+//! The per-row-block head lists come from inverting the plan's CSR live /
+//! cached lists once per call ([`RowTiles`]).
+//!
 //! This removes the reduction-axis redundancy *and* the need to keep the
 //! per-head cached features `Õ^h` in memory (the attention kernel's
 //! cache-then-reuse branch can terminate without writing).
 
+use crate::exec::{ExecPool, SendPtr};
 use crate::kernels::gemm::matmul_into;
 use crate::plan::{GemmStats, SparsePlan};
 use crate::symbols::LayerSymbols;
@@ -51,7 +60,36 @@ impl WeightPanels {
     }
 }
 
-/// Project one `(block, head)` tile: `out[lo..hi] += O_tile · W^h`.
+/// Accumulate one `(block, head)` tile into a row slab covering rows
+/// `lo..hi`: `out_rows += O_tile · W^h`. Shared by the serial and pool
+/// kernels so both run the identical float sequence.
+#[inline]
+fn project_tile_rows(
+    o_cat: &Tensor,
+    panels: &WeightPanels,
+    h: usize,
+    lo: usize,
+    hi: usize,
+    heads: usize,
+    out_rows: &mut [f32],
+) {
+    let d_h = panels.d_h;
+    let d_out = panels.d_out;
+    let d_cat = heads * d_h;
+    // Gather the head's slice of O rows into a contiguous tile.
+    let bq = hi - lo;
+    debug_assert_eq!(out_rows.len(), bq * d_out);
+    let mut tile = vec![0.0f32; bq * d_h];
+    for r in 0..bq {
+        tile[r * d_h..(r + 1) * d_h].copy_from_slice(
+            &o_cat.data()[(lo + r) * d_cat + h * d_h..(lo + r) * d_cat + (h + 1) * d_h],
+        );
+    }
+    matmul_into(&tile, &panels.panels[h], out_rows, bq, d_h, d_out);
+}
+
+/// Project one `(block, head)` tile: `out[lo..hi] += O_tile · W^h`, where
+/// `out` is the full `[N × d_out]` buffer.
 #[inline]
 fn project_tile(
     o_cat: &Tensor,
@@ -62,18 +100,60 @@ fn project_tile(
     heads: usize,
     out: &mut [f32],
 ) {
-    let d_h = panels.d_h;
     let d_out = panels.d_out;
-    let d_cat = heads * d_h;
-    // Gather the head's slice of O rows into a contiguous tile.
-    let bq = hi - lo;
-    let mut tile = vec![0.0f32; bq * d_h];
-    for r in 0..bq {
-        tile[r * d_h..(r + 1) * d_h].copy_from_slice(
-            &o_cat.data()[(lo + r) * d_cat + h * d_h..(lo + r) * d_cat + (h + 1) * d_h],
-        );
+    project_tile_rows(o_cat, panels, h, lo, hi, heads, &mut out[lo * d_out..hi * d_out]);
+}
+
+/// Per-row-block head lists, inverted once per call from a plan's CSR
+/// live/cached Q-block lists. `live[bi]` / `cached[bi]` hold the heads
+/// whose tile at row block `bi` is live / cached, in ascending head order
+/// (the plan lists are walked head-major, so ascending order — and with it
+/// the serial kernels' per-element accumulation order — is preserved).
+struct RowTiles {
+    live: Vec<Vec<u32>>,
+    cached: Vec<Vec<u32>>,
+}
+
+impl RowTiles {
+    fn from_plan(plan: &SparsePlan) -> Self {
+        let mut live: Vec<Vec<u32>> = vec![Vec::new(); plan.t_q];
+        let mut cached: Vec<Vec<u32>> = vec![Vec::new(); plan.t_q];
+        for (h, hp) in plan.heads.iter().enumerate() {
+            for &bi in &hp.live_q {
+                live[bi as usize].push(h as u32);
+            }
+            for &bi in &hp.cached_q {
+                cached[bi as usize].push(h as u32);
+            }
+        }
+        RowTiles { live, cached }
     }
-    matmul_into(&tile, &panels.panels[h], &mut out[lo * d_out..hi * d_out], bq, d_h, d_out);
+}
+
+/// Run `body(bi, out_rows_ptr)` for every row block on the pool. Each task
+/// owns a disjoint slab of output rows, reconstructed from the raw base
+/// pointer — sound because row blocks partition `0..n`.
+fn for_each_row_block(
+    pool: &ExecPool,
+    t_q: usize,
+    n: usize,
+    block_q: usize,
+    d_out: usize,
+    base: *mut f32,
+    body: impl Fn(usize, usize, usize, &mut [f32]) + Sync,
+) {
+    let ptr = SendPtr(base);
+    pool.parallel_for(t_q, |bi| {
+        let lo = bi * block_q;
+        let hi = (lo + block_q).min(n);
+        // SAFETY: row blocks `[lo, hi)` are disjoint across tasks and
+        // together cover at most `0..n`; the buffer outlives the parallel
+        // section (ExecPool joins every task before returning).
+        let rows = unsafe {
+            std::slice::from_raw_parts_mut(ptr.0.add(lo * d_out), (hi - lo) * d_out)
+        };
+        body(bi, lo, hi, rows);
+    });
 }
 
 /// Dense output projection baseline.
@@ -105,18 +185,65 @@ pub fn gemm_o_update(
     for (h, hp) in plan.heads.iter().enumerate() {
         // Stage 2 tiles: always updated during Dispatch.
         for &bi in &hp.live_q {
-            let lo = bi * block_q;
+            let lo = bi as usize * block_q;
             let hi = (lo + block_q).min(n);
             project_tile(o_cat, panels, h, lo, hi, heads, out.data_mut());
         }
         // Stage 1 tiles: record in the cached bias.
         for &bi in &hp.cached_q {
-            let lo = bi * block_q;
+            let lo = bi as usize * block_q;
             let hi = (lo + block_q).min(n);
             project_tile(o_cat, panels, h, lo, hi, heads, bias.data_mut());
         }
     }
     // The Update step needs the exact dense output: add the bias.
+    out.add_assign(&bias);
+    (out, bias, plan.gemm_stats())
+}
+
+/// [`gemm_o_update`] with both tile loops run on a persistent worker pool,
+/// parallelized over row blocks (see the module docs for why the head loop
+/// stays inside each task). Bitwise-identical to the serial kernel.
+pub fn gemm_o_update_pool(
+    o_cat: &Tensor,
+    panels: &WeightPanels,
+    plan: &SparsePlan,
+    pool: &ExecPool,
+) -> (Tensor, Tensor, GemmStats) {
+    let block_q = plan.block_q;
+    let n = o_cat.rows();
+    let heads = plan.heads.len();
+    let d_out = panels.d_out;
+    assert_eq!(plan.t_q, n.div_ceil(block_q), "plan Q-block geometry mismatch");
+    let mut bias = Tensor::zeros(&[n, d_out]);
+    let mut out = Tensor::zeros(&[n, d_out]);
+    let tiles = RowTiles::from_plan(plan);
+
+    // One fused section: a row-block task projects its live tiles into
+    // `out` and its cached tiles into `bias` (disjoint buffers), so the
+    // Update path pays a single pool dispatch instead of two barriers.
+    {
+        let out_ptr = SendPtr(out.data_mut().as_mut_ptr());
+        let bias_ptr = SendPtr(bias.data_mut().as_mut_ptr());
+        pool.parallel_for(plan.t_q, |bi| {
+            let lo = bi * block_q;
+            let hi = (lo + block_q).min(n);
+            let len = (hi - lo) * d_out;
+            // SAFETY: row blocks `[lo, hi)` are disjoint across tasks and
+            // the two slabs live in different buffers; both outlive the
+            // parallel section (ExecPool joins before returning).
+            let out_rows =
+                unsafe { std::slice::from_raw_parts_mut(out_ptr.0.add(lo * d_out), len) };
+            let bias_rows =
+                unsafe { std::slice::from_raw_parts_mut(bias_ptr.0.add(lo * d_out), len) };
+            for &h in &tiles.live[bi] {
+                project_tile_rows(o_cat, panels, h as usize, lo, hi, heads, out_rows);
+            }
+            for &h in &tiles.cached[bi] {
+                project_tile_rows(o_cat, panels, h as usize, lo, hi, heads, bias_rows);
+            }
+        });
+    }
     out.add_assign(&bias);
     (out, bias, plan.gemm_stats())
 }
@@ -134,11 +261,34 @@ pub fn gemm_o_stage1(o_cat: &Tensor, panels: &WeightPanels, plan: &SparsePlan) -
     let mut bias = Tensor::zeros(&[n, d_out]);
     for (h, hp) in plan.heads.iter().enumerate() {
         for &bi in &hp.cached_q {
-            let lo = bi * block_q;
+            let lo = bi as usize * block_q;
             let hi = (lo + block_q).min(n);
             project_tile(o_cat, panels, h, lo, hi, heads, bias.data_mut());
         }
     }
+    bias
+}
+
+/// [`gemm_o_stage1`] on a persistent worker pool (row-block parallel);
+/// bitwise-identical to the serial kernel.
+pub fn gemm_o_stage1_pool(
+    o_cat: &Tensor,
+    panels: &WeightPanels,
+    plan: &SparsePlan,
+    pool: &ExecPool,
+) -> Tensor {
+    let block_q = plan.block_q;
+    let n = o_cat.rows();
+    let heads = plan.heads.len();
+    let d_out = panels.d_out;
+    assert_eq!(plan.t_q, n.div_ceil(block_q), "plan Q-block geometry mismatch");
+    let mut bias = Tensor::zeros(&[n, d_out]);
+    let tiles = RowTiles::from_plan(plan);
+    for_each_row_block(pool, plan.t_q, n, block_q, d_out, bias.data_mut().as_mut_ptr(), |bi, lo, hi, rows| {
+        for &h in &tiles.cached[bi] {
+            project_tile_rows(o_cat, panels, h as usize, lo, hi, heads, rows);
+        }
+    });
     bias
 }
 
@@ -165,11 +315,36 @@ pub fn gemm_o_dispatch(
 
     for (h, hp) in plan.heads.iter().enumerate() {
         for &bi in &hp.live_q {
-            let lo = bi * block_q;
+            let lo = bi as usize * block_q;
             let hi = (lo + block_q).min(n);
             project_tile(o_cat, panels, h, lo, hi, heads, out.data_mut());
         }
     }
+    (out, plan.gemm_stats())
+}
+
+/// [`gemm_o_dispatch`] on a persistent worker pool (row-block parallel);
+/// bitwise-identical to the serial kernel.
+pub fn gemm_o_dispatch_pool(
+    o_cat: &Tensor,
+    panels: &WeightPanels,
+    plan: &SparsePlan,
+    bias: &Tensor,
+    pool: &ExecPool,
+) -> (Tensor, GemmStats) {
+    let block_q = plan.block_q;
+    let n = o_cat.rows();
+    let heads = plan.heads.len();
+    let d_out = panels.d_out;
+    assert_eq!(bias.shape(), &[n, d_out]);
+    assert_eq!(plan.t_q, n.div_ceil(block_q), "plan Q-block geometry mismatch");
+    let mut out = bias.clone();
+    let tiles = RowTiles::from_plan(plan);
+    for_each_row_block(pool, plan.t_q, n, block_q, d_out, out.data_mut().as_mut_ptr(), |bi, lo, hi, rows| {
+        for &h in &tiles.live[bi] {
+            project_tile_rows(o_cat, panels, h as usize, lo, hi, heads, rows);
+        }
+    });
     (out, plan.gemm_stats())
 }
 
@@ -350,6 +525,37 @@ mod tests {
             let computed: usize =
                 masks.iter().map(|m| m.iter().filter(|&&x| x).count()).sum();
             assert_eq!(stats.computed_tiles, computed);
+        });
+    }
+
+    #[test]
+    fn pool_variants_are_bitwise_identical() {
+        let pool = crate::exec::ExecPool::new(3);
+        prop_check("gemm_o *_pool == serial", 10, |rng| {
+            let n = 16 + rng.below(32);
+            let heads = 1 + rng.below(4);
+            let d_h = 2 + rng.below(6);
+            let d_out = 4 + rng.below(10);
+            let b = 4 + rng.below(8);
+            let t_q = n.div_ceil(b);
+            let o = randn(rng, &[n, heads * d_h]);
+            let w = randn(rng, &[heads * d_h, d_out]);
+            let panels = WeightPanels::new(&w, heads);
+            let masks: Vec<Vec<bool>> =
+                (0..heads).map(|_| rand_mask(rng, t_q, 0.5)).collect();
+            let syms = syms_from_cache_masks(&masks);
+            let plan = SparsePlan::compile(&syms, t_q, t_q, b, b, DecodeMode::RowCached);
+            let (out_s, bias_s, st_s) = gemm_o_update(&o, &panels, &plan);
+            let (out_p, bias_p, st_p) = gemm_o_update_pool(&o, &panels, &plan, &pool);
+            assert_eq!(out_s.data(), out_p.data(), "update out must be bitwise equal");
+            assert_eq!(bias_s.data(), bias_p.data(), "update bias must be bitwise equal");
+            assert_eq!(st_s.computed_tiles, st_p.computed_tiles);
+            let stage_s = gemm_o_stage1(&o, &panels, &plan);
+            let stage_p = gemm_o_stage1_pool(&o, &panels, &plan, &pool);
+            assert_eq!(stage_s.data(), stage_p.data(), "stage1 must be bitwise equal");
+            let (d_s, _) = gemm_o_dispatch(&o, &panels, &plan, &bias_s);
+            let (d_p, _) = gemm_o_dispatch_pool(&o, &panels, &plan, &bias_s, &pool);
+            assert_eq!(d_s.data(), d_p.data(), "dispatch must be bitwise equal");
         });
     }
 

@@ -7,10 +7,15 @@
 //!
 //! The primary kernel ([`gemm_q`]) consumes a compiled
 //! [`SparsePlan`](crate::plan::SparsePlan) and iterates only the live tile
-//! indices — the symbol decode happened once at plan compile time. The
-//! seed symbol-decoding variant is retained as [`gemm_q_symbols`] for the
-//! plan-equivalence property tests.
+//! indices — the symbol decode happened once at plan compile time.
+//! [`gemm_q_pool`] is the same kernel with the `(head × live-block)` tile
+//! loop chunked over a persistent [`ExecPool`]; tiles write disjoint
+//! `(row-block × head-column)` rectangles, so its output is
+//! **bitwise-identical** to [`gemm_q`] (property-tested in
+//! `rust/tests/exec_runtime.rs`). The seed symbol-decoding variant is
+//! retained as [`gemm_q_symbols`] for the plan-equivalence property tests.
 
+use crate::exec::{ExecPool, SendPtr};
 use crate::kernels::gemm::matmul_into;
 use crate::plan::SparsePlan;
 pub use crate::plan::GemmStats;
@@ -35,6 +40,33 @@ fn gather_head_panel(w: &Tensor, h: usize, d_h: usize) -> Vec<f32> {
     w_h
 }
 
+/// Compute one `(block, head)` tile of the projection into a local
+/// `[bq × d_h]` buffer (shared by the serial and pool kernels so both run
+/// the identical float sequence).
+#[inline]
+fn compute_q_tile(
+    x: &Tensor,
+    w_h: &[f32],
+    h: usize,
+    d_h: usize,
+    lo: usize,
+    hi: usize,
+    bias: Option<&[f32]>,
+) -> Vec<f32> {
+    let d_in = x.cols();
+    let bq = hi - lo;
+    let mut tile = vec![0.0f32; bq * d_h];
+    matmul_into(&x.data()[lo * d_in..hi * d_in], w_h, &mut tile, bq, d_in, d_h);
+    if let Some(b) = bias {
+        for row in tile.chunks_exact_mut(d_h) {
+            for (c, v) in row.iter_mut().enumerate() {
+                *v += b[h * d_h + c];
+            }
+        }
+    }
+    tile
+}
+
 /// Project one `(block, head)` tile of `x` into `y`.
 #[allow(clippy::too_many_arguments)]
 #[inline]
@@ -49,17 +81,7 @@ fn project_q_tile(
     hi: usize,
     bias: Option<&[f32]>,
 ) {
-    let d_in = x.cols();
-    let bq = hi - lo;
-    let mut tile = vec![0.0f32; bq * d_h];
-    matmul_into(&x.data()[lo * d_in..hi * d_in], w_h, &mut tile, bq, d_in, d_h);
-    if let Some(b) = bias {
-        for row in tile.chunks_exact_mut(d_h) {
-            for (c, v) in row.iter_mut().enumerate() {
-                *v += b[h * d_h + c];
-            }
-        }
-    }
+    let tile = compute_q_tile(x, w_h, h, d_h, lo, hi, bias);
     for (r, row) in tile.chunks_exact(d_h).enumerate() {
         y.data_mut()[(lo + r) * d_out + h * d_h..(lo + r) * d_out + (h + 1) * d_h]
             .copy_from_slice(row);
@@ -101,10 +123,80 @@ pub fn gemm_q(
         }
         let w_h = gather_head_panel(w, h, d_h);
         for &bi in &hp.live_q {
-            let lo = bi * block_q;
+            let lo = bi as usize * block_q;
             let hi = (lo + block_q).min(n);
             project_q_tile(x, &w_h, &mut y, h, d_h, d_out, lo, hi, bias);
         }
+    }
+    (y, plan.gemm_stats())
+}
+
+/// [`gemm_q`] with the `(head × live-block)` tile loop run on a persistent
+/// worker pool: live tiles are flattened into one work list, chunked, and
+/// dispatched dynamically. Each tile writes a disjoint
+/// `(row-block × head-column)` rectangle of `y`, and every element is
+/// produced by exactly one tile via the same [`compute_q_tile`] float
+/// sequence — so the output is bitwise-identical to the serial kernel.
+pub fn gemm_q_pool(
+    x: &Tensor,
+    w: &Tensor,
+    plan: &SparsePlan,
+    bias: Option<&[f32]>,
+    pool: &ExecPool,
+) -> (Tensor, GemmStats) {
+    let block_q = plan.block_q;
+    let n = x.rows();
+    let d_in = x.cols();
+    let heads = plan.heads.len();
+    assert!(heads > 0);
+    let d_out = w.cols();
+    assert_eq!(w.rows(), d_in);
+    assert_eq!(d_out % heads, 0, "W output dim must split across heads");
+    let d_h = d_out / heads;
+    assert_eq!(plan.t_q, n.div_ceil(block_q), "plan Q-block geometry mismatch");
+    let mut y = Tensor::zeros(&[n, d_out]);
+
+    // Gather the weight panels up front (once per head, as in the serial
+    // kernel), then flatten the live tiles into `(head, block)` work items.
+    let panels: Vec<Vec<f32>> = (0..heads)
+        .map(|h| {
+            if plan.heads[h].live_q.is_empty() {
+                Vec::new()
+            } else {
+                gather_head_panel(w, h, d_h)
+            }
+        })
+        .collect();
+    let mut tiles: Vec<(u32, u32)> = Vec::new();
+    for (h, hp) in plan.heads.iter().enumerate() {
+        for &bi in &hp.live_q {
+            tiles.push((h as u32, bi));
+        }
+    }
+    // Chunk so each task is a slab of tiles (amortizes dispatch overhead)
+    // while still leaving a few tasks per worker for load balancing.
+    let chunk = tiles.len().div_ceil((pool.size() * 4).max(1)).max(1);
+    let n_tasks = tiles.len().div_ceil(chunk);
+    {
+        let yp = SendPtr(y.data_mut().as_mut_ptr());
+        pool.parallel_for(n_tasks, |t| {
+            for &(h, bi) in &tiles[t * chunk..((t + 1) * chunk).min(tiles.len())] {
+                let (h, bi) = (h as usize, bi as usize);
+                let lo = bi * block_q;
+                let hi = (lo + block_q).min(n);
+                let tile = compute_q_tile(x, &panels[h], h, d_h, lo, hi, bias);
+                for (r, row) in tile.chunks_exact(d_h).enumerate() {
+                    let off = (lo + r) * d_out + h * d_h;
+                    // SAFETY: tiles are unique (head, block) pairs, so the
+                    // `(rows lo..hi) × (cols h·d_h..)` rectangles written
+                    // here are disjoint across tasks; `y` outlives the
+                    // parallel section (ExecPool joins before returning).
+                    unsafe {
+                        std::ptr::copy_nonoverlapping(row.as_ptr(), yp.0.add(off), d_h);
+                    }
+                }
+            }
+        });
     }
     (y, plan.gemm_stats())
 }
@@ -227,6 +319,30 @@ mod tests {
             let (y_sym, s_sym) = gemm_q_symbols(&x, &w, &syms, b, None);
             assert_eq!(y.data(), y_sym.data());
             assert_eq!(stats.computed_tiles, s_sym.computed_tiles);
+        });
+    }
+
+    #[test]
+    fn pool_variant_is_bitwise_identical() {
+        let pool = crate::exec::ExecPool::new(3);
+        prop_check("gemm_q_pool == gemm_q", 10, |rng| {
+            let n = 16 + rng.below(48);
+            let d_in = 4 + rng.below(12);
+            let heads = 1 + rng.below(4);
+            let d_h = 2 + rng.below(6);
+            let b = 4 + rng.below(8);
+            let t_q = n.div_ceil(b);
+            let x = randn(rng, &[n, d_in]);
+            let w = randn(rng, &[d_in, heads * d_h]);
+            let bias: Vec<f32> = (0..heads * d_h).map(|i| i as f32 * 0.01).collect();
+            let masks: Vec<Vec<bool>> =
+                (0..heads).map(|_| rand_mask(rng, t_q, 0.6)).collect();
+            let syms = layer_syms_from_cache_masks(&masks, t_q, 1);
+            let plan = plan_of(&syms, t_q, b);
+            let (serial, s1) = gemm_q(&x, &w, &plan, Some(&bias));
+            let (pooled, s2) = gemm_q_pool(&x, &w, &plan, Some(&bias), &pool);
+            assert_eq!(serial.data(), pooled.data(), "pool output must be bitwise equal");
+            assert_eq!(s1.computed_tiles, s2.computed_tiles);
         });
     }
 

@@ -25,6 +25,10 @@
 //! * [`engine`] — the **Update–Dispatch** execution engine over denoising
 //!   steps, and every baseline of the paper expressed as a policy emitting
 //!   unified symbols.
+//! * [`exec`] — the shared execution runtime: a persistent worker pool
+//!   (`ExecPool`) with deterministic `parallel_for`/`parallel_map`; every
+//!   sparse kernel's hot loop (attention heads, GEMM-Q / GEMM-O tiles)
+//!   runs on it, and the serving coordinator's workers share one pool.
 //! * [`model`] / [`diffusion`] — the MiniMMDiT substrate (double-stream
 //!   multimodal DiT) and a rectified-flow sampler.
 //! * [`runtime`] — PJRT loading/execution of the AOT artifacts produced by
@@ -45,6 +49,7 @@ pub mod config;
 pub mod coordinator;
 pub mod diffusion;
 pub mod engine;
+pub mod exec;
 pub mod kernels;
 pub mod masks;
 pub mod metrics;

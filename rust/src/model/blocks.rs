@@ -234,9 +234,35 @@ pub fn norm_rope_joint_q(
     headwise_rope(q, heads, &positions);
 }
 
-/// Dense joint attention over all heads → concatenated `[N × dim]` output.
-/// Independent heads run in parallel (scoped threads); per-head outputs
-/// are disjoint so the result is bit-identical to the sequential loop.
+/// Dense joint attention over all heads → concatenated `[N × dim]` output,
+/// dispatched on an explicit [`ExecPool`](crate::exec::ExecPool) (no
+/// per-call thread spawn); results are placed by head index, so the output
+/// is bit-identical to the sequential loop. The engine passes its
+/// configured pool here so a custom `DiTEngine::set_exec_pool` governs the
+/// dense path too.
+pub fn joint_attention_dense_on(
+    pool: &crate::exec::ExecPool,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    heads: usize,
+    block: usize,
+) -> Tensor {
+    let per_head: Vec<Tensor> = pool.parallel_map_indexed(heads, |h| {
+        let qh = extract_head(q, heads, h);
+        let kh = extract_head(k, heads, h);
+        let vh = extract_head(v, heads, h);
+        attention_dense(&qh, &kh, &vh, block, block)
+    });
+    let mut o = Tensor::zeros(&[q.rows(), q.cols()]);
+    for (h, oh) in per_head.iter().enumerate() {
+        insert_head(&mut o, oh, heads, h);
+    }
+    o
+}
+
+/// [`joint_attention_dense_on`] on the process-wide global pool — the
+/// reference path for standalone model execution (`block_dense`).
 pub fn joint_attention_dense(
     q: &Tensor,
     k: &Tensor,
@@ -244,27 +270,7 @@ pub fn joint_attention_dense(
     heads: usize,
     block: usize,
 ) -> Tensor {
-    let per_head: Vec<Tensor> = std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..heads)
-            .map(|h| {
-                scope.spawn(move || {
-                    let qh = extract_head(q, heads, h);
-                    let kh = extract_head(k, heads, h);
-                    let vh = extract_head(v, heads, h);
-                    attention_dense(&qh, &kh, &vh, block, block)
-                })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|jh| jh.join().expect("attention worker panicked"))
-            .collect()
-    });
-    let mut o = Tensor::zeros(&[q.rows(), q.cols()]);
-    for (h, oh) in per_head.iter().enumerate() {
-        insert_head(&mut o, oh, heads, h);
-    }
-    o
+    joint_attention_dense_on(&crate::exec::ExecPool::global(), q, k, v, heads, block)
 }
 
 /// Post-attention stage: per-stream output projection + gated residual.

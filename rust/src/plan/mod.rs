@@ -25,6 +25,13 @@
 //! [`AttnStats`] and [`GemmStats`] are also defined here and *derived from
 //! the plan* (`attn_stats()` / `gemm_stats()`), so the engine, `metrics/`
 //! and `report/` all read one source of truth for tile/pair accounting.
+//!
+//! Index lists are packed to **`u32`** (the FlashInfer idiom): block
+//! counts never approach 2³², and halving the index footprint matters at
+//! video-scale sequences where the CSR lists are the kernels' hottest
+//! metadata stream. [`HeadPlan::from_symbols`] asserts the geometry fits.
+
+pub mod cache;
 
 use crate::symbols::{HeadSymbols, LayerSymbols};
 
@@ -84,6 +91,9 @@ impl GemmStats {
 ///
 /// All indices are *raw* block indices (`0..t_q` / `0..t_kv`), i.e. the
 /// symbol pooling factor `n` has already been resolved at compile time.
+/// Indices are packed to `u32` (FlashInfer idiom — half the cache
+/// footprint of `usize` on 64-bit targets); kernels widen with `as usize`
+/// at the loop head, which costs nothing.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct HeadPlan {
     /// Total Q blocks (`ceil(n / block_q)`).
@@ -91,14 +101,14 @@ pub struct HeadPlan {
     /// Total KV blocks (`ceil(n_kv / block_k)`).
     pub t_kv: usize,
     /// Q-block indices computed this step (`F(S_c, i) = 1`), ascending.
-    pub live_q: Vec<usize>,
+    pub live_q: Vec<u32>,
     /// Q-block indices served from the feature cache (`F = 0`), ascending.
-    pub cached_q: Vec<usize>,
+    pub cached_q: Vec<u32>,
     /// CSR row pointers into [`Self::kv_indices`]; `len = live_q.len() + 1`.
-    pub kv_indptr: Vec<usize>,
+    pub kv_indptr: Vec<u32>,
     /// Live KV-block indices (`J(S_s, i, j) = 1`) per live Q block,
     /// ascending within each row.
-    pub kv_indices: Vec<usize>,
+    pub kv_indices: Vec<u32>,
 }
 
 impl HeadPlan {
@@ -107,53 +117,62 @@ impl HeadPlan {
     pub fn from_symbols(sym: &HeadSymbols, t_q: usize, t_kv: usize, decode: DecodeMode) -> Self {
         assert_eq!(sym.q_groups, t_q.div_ceil(sym.pool.max(1)), "S_c geometry mismatch");
         assert_eq!(sym.kv_groups, t_kv.div_ceil(sym.pool.max(1)), "S_s geometry mismatch");
+        assert!(
+            t_q <= u32::MAX as usize && t_kv <= u32::MAX as usize,
+            "block counts exceed the u32 index range"
+        );
         let mut live_q = Vec::new();
         let mut cached_q = Vec::new();
-        let mut kv_indptr = vec![0usize];
-        let mut kv_indices = Vec::new();
+        let mut kv_indptr = vec![0u32];
+        let mut kv_indices: Vec<u32> = Vec::new();
         for bi in 0..t_q {
             if !sym.f(bi) {
-                cached_q.push(bi);
+                cached_q.push(bi as u32);
                 continue;
             }
-            live_q.push(bi);
+            live_q.push(bi as u32);
             match decode {
                 DecodeMode::RowCached => {
                     let mut dec = sym.row_decoder(bi);
                     for bj in 0..t_kv {
                         if dec.j(bj) {
-                            kv_indices.push(bj);
+                            kv_indices.push(bj as u32);
                         }
                     }
                 }
                 DecodeMode::PerAccess => {
                     for bj in 0..t_kv {
                         if sym.j(bi, bj) {
-                            kv_indices.push(bj);
+                            kv_indices.push(bj as u32);
                         }
                     }
                 }
             }
-            kv_indptr.push(kv_indices.len());
+            let end = u32::try_from(kv_indices.len()).expect("kv index count exceeds u32");
+            kv_indptr.push(end);
         }
         HeadPlan { t_q, t_kv, live_q, cached_q, kv_indptr, kv_indices }
     }
 
     /// Fully-dense plan (every block live, every pair computed).
     pub fn dense(t_q: usize, t_kv: usize) -> Self {
-        let live_q: Vec<usize> = (0..t_q).collect();
-        let kv_indptr: Vec<usize> = (0..=t_q).map(|i| i * t_kv).collect();
-        let mut kv_indices = Vec::with_capacity(t_q * t_kv);
+        assert!(
+            t_q <= u32::MAX as usize && t_q.saturating_mul(t_kv) <= u32::MAX as usize,
+            "dense plan exceeds the u32 index range"
+        );
+        let live_q: Vec<u32> = (0..t_q as u32).collect();
+        let kv_indptr: Vec<u32> = (0..=t_q).map(|i| (i * t_kv) as u32).collect();
+        let mut kv_indices: Vec<u32> = Vec::with_capacity(t_q * t_kv);
         for _ in 0..t_q {
-            kv_indices.extend(0..t_kv);
+            kv_indices.extend(0..t_kv as u32);
         }
         HeadPlan { t_q, t_kv, live_q, cached_q: Vec::new(), kv_indptr, kv_indices }
     }
 
     /// Live KV-block indices of the `li`-th *live* Q block.
     #[inline]
-    pub fn live_kv(&self, li: usize) -> &[usize] {
-        &self.kv_indices[self.kv_indptr[li]..self.kv_indptr[li + 1]]
+    pub fn live_kv(&self, li: usize) -> &[u32] {
+        &self.kv_indices[self.kv_indptr[li] as usize..self.kv_indptr[li + 1] as usize]
     }
 
     /// (Qi, Kj) pairs the plan will compute.
@@ -205,30 +224,35 @@ impl HeadPlan {
     /// the joint sequence its own plan for GEMM-Q / GEMM-O.
     pub fn slice_q(&self, lo: usize, hi: usize) -> HeadPlan {
         assert!(lo <= hi && hi <= self.t_q, "bad Q-block slice [{lo}, {hi})");
+        let (lo32, hi32) = (lo as u32, hi as u32);
         let mut live_q = Vec::new();
-        let mut kv_indptr = vec![0usize];
-        let mut kv_indices = Vec::new();
+        let mut kv_indptr = vec![0u32];
+        let mut kv_indices: Vec<u32> = Vec::new();
         for (li, &bi) in self.live_q.iter().enumerate() {
-            if bi < lo || bi >= hi {
+            if bi < lo32 || bi >= hi32 {
                 continue;
             }
-            live_q.push(bi - lo);
+            live_q.push(bi - lo32);
             kv_indices.extend_from_slice(self.live_kv(li));
-            kv_indptr.push(kv_indices.len());
+            kv_indptr.push(kv_indices.len() as u32);
         }
         let cached_q = self
             .cached_q
             .iter()
-            .filter(|&&bi| bi >= lo && bi < hi)
-            .map(|&bi| bi - lo)
+            .filter(|&&bi| bi >= lo32 && bi < hi32)
+            .map(|&bi| bi - lo32)
             .collect();
         HeadPlan { t_q: hi - lo, t_kv: self.t_kv, live_q, cached_q, kv_indptr, kv_indices }
     }
 
-    /// Bytes held by the index lists (plan memory footprint).
+    /// Number of `u32` entries across all index lists.
+    pub fn index_len(&self) -> usize {
+        self.live_q.len() + self.cached_q.len() + self.kv_indptr.len() + self.kv_indices.len()
+    }
+
+    /// Bytes held by the index lists (plan memory footprint; `u32`-packed).
     pub fn index_bytes(&self) -> usize {
-        (self.live_q.len() + self.cached_q.len() + self.kv_indptr.len() + self.kv_indices.len())
-            * std::mem::size_of::<usize>()
+        self.index_len() * std::mem::size_of::<u32>()
     }
 }
 
@@ -336,7 +360,12 @@ impl SparsePlan {
             .sum()
     }
 
-    /// Bytes held by all index lists.
+    /// Number of `u32` entries across all heads' index lists.
+    pub fn index_len(&self) -> usize {
+        self.heads.iter().map(|h| h.index_len()).sum()
+    }
+
+    /// Bytes held by all index lists (`u32`-packed).
     pub fn index_bytes(&self) -> usize {
         self.heads.iter().map(|h| h.index_bytes()).sum()
     }
@@ -377,11 +406,12 @@ mod tests {
             let mut li = 0;
             for bi in 0..t_q {
                 if !sym.f(bi) {
-                    assert!(plan.cached_q.contains(&bi));
+                    assert!(plan.cached_q.contains(&(bi as u32)));
                     continue;
                 }
-                assert_eq!(plan.live_q[li], bi);
-                let want: Vec<usize> = (0..t_kv).filter(|&bj| sym.j(bi, bj)).collect();
+                assert_eq!(plan.live_q[li], bi as u32);
+                let want: Vec<u32> =
+                    (0..t_kv).filter(|&bj| sym.j(bi, bj)).map(|bj| bj as u32).collect();
                 assert_eq!(plan.live_kv(li), &want[..]);
                 li += 1;
             }
