@@ -1,0 +1,201 @@
+//! Figure 12 (repo extension) — **batched serving throughput** and the
+//! cross-request plan-sharing invariant.
+//!
+//! Two scenarios per batch size B ∈ {1, 2, 4, 8} (clamped by FO_BATCH),
+//! each on a fresh engine + plan cache:
+//!
+//! * **shared** — B symbol-identical requests (same prompt + seed, the
+//!   repeated-prompt burst). The `RunStats.plan_cache_misses` sum must be
+//!   exactly `layers × refresh points` — **one plan compile per (layer,
+//!   refresh) per batch**, with the other B−1 requests counted in
+//!   `plan_cache_shared`. `compiles_per_refresh` in the JSON asserts it.
+//! * **distinct** — B distinct prompts/seeds (worst case: no symbol
+//!   collisions, the batch still amortizes head dispatch and tile-loop
+//!   overheads but compiles B plans per refresh).
+//!
+//! Emits `BENCH_fig12.json`: one row per (scenario, B) with wall time,
+//! throughput, latency percentiles (p50/p95/p99 via `ServeReport`), and
+//! the plan-compile accounting. Row schema (custom, documented here):
+//! `{case, batch, requests, steps, wall_s, req_per_s, speedup_vs_b1,
+//! plan_compiles, plan_shared, refresh_points, compiles_per_refresh,
+//! p50_s, p95_s, p99_s}`.
+//!
+//! Env: FO_REQUESTS (requests per run, default 8), FO_BATCH (max batch
+//! size, default 8), FO_STEPS (denoising steps, default 8), FO_LAYERS
+//! (default 2), FO_CHUNK (tile-loop chunk override, recorded in header).
+
+use flashomni::batch::{BatchScheduler, BatchedEngine};
+use flashomni::bench::write_bench_json;
+use flashomni::config::{ModelConfig, SparsityConfig};
+use flashomni::coordinator::{Response, ServeReport};
+use flashomni::diffusion::plan_steps;
+use flashomni::engine::Policy;
+use flashomni::exec::ExecPool;
+use flashomni::model::{weights::Weights, MiniMMDiT};
+use flashomni::trace::{caption_ids, Request};
+use std::time::Instant;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn build_model(layers: usize) -> MiniMMDiT {
+    let cfg = ModelConfig {
+        dim: 64,
+        heads: 4,
+        layers,
+        text_tokens: 8,
+        patch_h: 8,
+        patch_w: 8,
+        patch_size: 2,
+        channels: 3,
+        mlp_ratio: 2,
+        vocab: 256,
+    };
+    MiniMMDiT::new(cfg.clone(), Weights::random(&cfg, 0xf12))
+}
+
+fn policy() -> Policy {
+    Policy::flashomni(SparsityConfig {
+        tau_q: 0.5,
+        tau_kv: 0.2,
+        interval: 3,
+        order: 1,
+        s_q: 0.0,
+        block_q: 8,
+        block_k: 8,
+        pool: 1,
+        warmup: 2,
+        ramp_steps: 1,
+    })
+}
+
+fn requests(n: usize, steps: usize, text_tokens: usize, shared: bool) -> Vec<Request> {
+    (0..n as u64)
+        .map(|i| {
+            let (scene, seed) = if shared { (5, 1234) } else { (3 * i as usize + 1, 1000 + i) };
+            Request {
+                id: i,
+                scene,
+                prompt_ids: caption_ids(scene, text_tokens),
+                seed,
+                steps,
+                arrival_s: 0.0,
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let n_req = env_usize("FO_REQUESTS", 8);
+    let max_b = env_usize("FO_BATCH", 8);
+    let steps = env_usize("FO_STEPS", 8);
+    let layers = env_usize("FO_LAYERS", 2);
+    let model = build_model(layers);
+    let pol = policy();
+    let (warmup, interval) = pol.schedule();
+    let full_steps =
+        plan_steps(steps, warmup.min(steps), interval).iter().filter(|k| !k.is_sparse()).count();
+    let refresh_points = (layers * full_steps) as u64;
+
+    println!(
+        "# Figure 12 — batched serving: {n_req} requests × {steps} steps, {layers} layers, policy {}",
+        pol.name()
+    );
+    let mut json_rows: Vec<String> = Vec::new();
+
+    for shared in [true, false] {
+        let case = if shared { "shared" } else { "distinct" };
+        // Throughput scaling is reported against this scenario's B = 1 run.
+        let mut base_rps: Option<f64> = None;
+        for b in [1usize, 2, 4, 8] {
+            if b > max_b {
+                continue;
+            }
+            let reqs = requests(n_req.max(b), steps, model.cfg.text_tokens, shared);
+            let mut sched =
+                BatchScheduler::new(BatchedEngine::new(model.clone(), policy(), 8, 8, b));
+            for r in &reqs {
+                sched.submit(r.clone());
+            }
+            let t0 = Instant::now();
+            let results = sched.run_to_completion();
+            let wall = t0.elapsed().as_secs_f64();
+            let cache = sched.engine().plan_cache_stats();
+
+            let compiles: u64 = results.iter().map(|r| r.stats.plan_cache_misses).sum();
+            let shared_hits: u64 = results.iter().map(|r| r.stats.plan_cache_shared).sum();
+            assert_eq!(compiles, cache.misses, "per-request counters must cover the cache");
+            // Per-batch compile rate: for the shared burst with B = batch
+            // this is exactly 1.0 (the tentpole invariant); later cohorts
+            // of the same run reuse earlier cohorts' plans outright.
+            let cohorts = reqs.len().div_ceil(b) as u64;
+            let compiles_per_refresh = compiles as f64 / (refresh_points * cohorts) as f64;
+            let rps = results.len() as f64 / wall.max(1e-9);
+            if b == 1 {
+                base_rps = Some(rps);
+            }
+            let speedup = base_rps.map(|b0| rps / b0).unwrap_or(1.0);
+            if shared {
+                assert!(
+                    compiles <= refresh_points,
+                    "shared burst must never compile a plan twice (got {compiles} > {refresh_points})"
+                );
+            }
+
+            // Latency percentiles through the coordinator's ServeReport
+            // (the satellite: batched paths print p50/p95/p99).
+            let responses: Vec<Response> = results
+                .iter()
+                .map(|r| Response {
+                    id: r.id,
+                    scene: r.scene,
+                    image: r.image.clone(),
+                    stats: r.stats.clone(),
+                    queue_s: r.queue_s,
+                    exec_s: r.exec_s,
+                    latency_s: r.latency_s,
+                    worker: 0,
+                    batch_size: r.batch_size,
+                })
+                .collect();
+            let report = ServeReport::from_responses(&responses, wall);
+            report.print(&format!("fig12 {case} B={b}"));
+            println!(
+                "    plan compiles {compiles} (shared hits {shared_hits}, {:.3} compiles/refresh over {cohorts} cohort(s))",
+                compiles_per_refresh
+            );
+
+            json_rows.push(format!(
+                "{{\"case\":\"{case}\",\"batch\":{b},\"requests\":{},\"steps\":{steps},\
+                 \"wall_s\":{wall:.6},\"req_per_s\":{rps:.4},\"speedup_vs_b1\":{speedup:.4},\
+                 \"plan_compiles\":{compiles},\"plan_shared\":{shared_hits},\
+                 \"refresh_points\":{refresh_points},\"compiles_per_refresh\":{compiles_per_refresh:.4},\
+                 \"p50_s\":{:.6},\"p95_s\":{:.6},\"p99_s\":{:.6}}}",
+                results.len(),
+                report.p50_latency_s,
+                report.p95_latency_s,
+                report.p99_latency_s,
+            ));
+        }
+    }
+
+    match write_bench_json(
+        "BENCH_fig12.json",
+        "fig12_batched_serving",
+        &[
+            ("requests", n_req as f64),
+            ("steps", steps as f64),
+            ("layers", layers as f64),
+            ("dim", model.cfg.dim as f64),
+            ("heads", model.cfg.heads as f64),
+            ("seq", model.cfg.seq_len() as f64),
+            ("exec_pool_threads", ExecPool::global().size() as f64),
+            ("fo_chunk", flashomni::exec::tile_chunk_override().unwrap_or(0) as f64),
+        ],
+        &json_rows,
+    ) {
+        Ok(()) => println!("\nwrote BENCH_fig12.json ({} rows)", json_rows.len()),
+        Err(e) => eprintln!("could not write BENCH_fig12.json: {e}"),
+    }
+}

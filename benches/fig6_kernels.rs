@@ -19,7 +19,8 @@
 //! `thread::scope` vs persistent `ExecPool` — the pool must be no slower
 //! than the scope path) and the `u32` plan-index footprint report.
 //!
-//! Env: FO_SEQ (default 2048), FO_BUDGET seconds/case (default 0.4).
+//! Env: FO_SEQ (default 2048), FO_BUDGET seconds/case (default 0.4),
+//! FO_CHUNK (tile-loop chunk override; recorded in the JSON header).
 
 use flashomni::bench::{json_row, print_table, write_bench_json, write_csv, Bencher, Measurement};
 use flashomni::exec::ExecPool;
@@ -277,6 +278,9 @@ fn main() {
             ("heads", heads as f64),
             ("gemm_o_interval", interval as f64),
             ("exec_pool_threads", ExecPool::global().size() as f64),
+            // 0 = built-in `tiles/(4·threads)` heuristic; nonzero = the
+            // FO_CHUNK override this run was measured under (autotuner data).
+            ("fo_chunk", flashomni::exec::tile_chunk_override().unwrap_or(0) as f64),
             ("plan_index_bytes_u32", plan_index_bytes as f64),
             ("plan_index_bytes_usize_equiv", plan_index_bytes_usize as f64),
         ],

@@ -7,7 +7,8 @@
 //! PR 2: also times the pool-backed dispatch kernel (row-block parallel on
 //! the persistent `ExecPool`) against the serial one and emits a
 //! machine-readable `BENCH_fig8.json` perf trajectory like fig6.
-//! Env: FO_SEQ (default 2048), FO_BUDGET (default 0.4).
+//! Env: FO_SEQ (default 2048), FO_BUDGET (default 0.4), FO_CHUNK
+//! (tile-loop chunk override; recorded in the JSON header).
 
 use flashomni::bench::{json_row, write_bench_json, write_csv, Bencher, Measurement};
 use flashomni::exec::ExecPool;
@@ -122,6 +123,9 @@ fn main() {
             ("heads", heads as f64),
             ("head_dim", d_h as f64),
             ("exec_pool_threads", pool.size() as f64),
+            // 0 = built-in `tiles/(4·threads)` heuristic; nonzero = the
+            // FO_CHUNK override this run was measured under (autotuner data).
+            ("fo_chunk", flashomni::exec::tile_chunk_override().unwrap_or(0) as f64),
         ],
         &json_rows,
     ) {

@@ -69,6 +69,18 @@ fn main() -> Result<(), String> {
         dense_rep.mean_exec_s / fo_rep.mean_exec_s,
         dense_rep.p50_latency_s / fo_rep.p50_latency_s
     );
+    println!(
+        "latency percentiles (FlashOmni): p50 {:.3}s | p95 {:.3}s | p99 {:.3}s",
+        fo_rep.p50_latency_s, fo_rep.p95_latency_s, fo_rep.p99_latency_s
+    );
+    // Batched-serving accounting: workers advance whole batches in
+    // lockstep and share plan compiles per (layer, refresh).
+    let compiles: u64 = fo_rs.iter().map(|r| r.stats.plan_cache_misses).sum();
+    let hits: u64 = fo_rs.iter().map(|r| r.stats.plan_cache_hits).sum();
+    let shared: u64 = fo_rs.iter().map(|r| r.stats.plan_cache_shared).sum();
+    println!(
+        "plan compiles: {compiles} ({hits} cache hits, {shared} shared within a batch step)"
+    );
 
     // PJRT oracle path: one dense denoise step through the AOT artifact
     // (requires the off-by-default `pjrt` feature).

@@ -1,0 +1,556 @@
+//! The lockstep **batched engine**: N in-flight requests, one denoising
+//! step per [`BatchedEngine::step_forward`] call, cross-request plan
+//! sharing per layer. See the [module docs](crate::batch) for the design.
+
+use crate::cache::combine_bias_stack;
+use crate::diffusion::{euler_step, initial_noise, plan_steps, time_grid, unpatchify, StepKind};
+use crate::engine::{
+    add_row_bias, compile_plans, plan_key, post_attention_preprojected, project_kv_joint,
+    sparse_step_flops, DiTEngine, EngineExec, Geometry, LayerPanels, LayerPlans, LayerState,
+    PlanProvider, Policy, RunStats, PLAN_CACHE_CAP,
+};
+use crate::exec::ExecPool;
+use crate::kernels::attention::flashomni_attention_batched;
+use crate::kernels::gemm_o::gemm_o_dispatch_batched;
+use crate::kernels::gemm_q::gemm_q_batched;
+use crate::model::blocks::{
+    insert_head, mlp_stream, norm_rope_joint_q, pre_attention, vsplit, vstack, PreAttn,
+};
+use crate::model::{BlockExec, BlockWeights, MiniMMDiT};
+use crate::plan::cache::{CacheOutcome, CacheStats, SharedPlanCache};
+use crate::symbols::LayerSymbols;
+use crate::tensor::Tensor;
+use crate::trace::Request;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A request that finished inside the batched engine.
+#[derive(Clone, Debug)]
+pub struct BatchResult {
+    pub id: u64,
+    pub scene: usize,
+    /// `[H × W × C]` image, bitwise-identical to a solo `DiTEngine` run
+    /// of the same request.
+    pub image: Tensor,
+    pub stats: RunStats,
+    /// Seconds between enqueue and admission into the batch.
+    pub queue_s: f64,
+    /// Seconds between admission and completion (lockstep wall time).
+    pub exec_s: f64,
+    /// End-to-end seconds (queue + exec).
+    pub latency_s: f64,
+    /// Peak batch occupancy observed while this request was in flight.
+    pub batch_size: usize,
+}
+
+/// One in-flight request: its own denoising state, policy clone, and
+/// per-layer engine state — everything a solo `DiTEngine::generate` would
+/// hold, minus the model/panels/pool, which the batch shares.
+struct Slot {
+    req: Request,
+    policy: Policy,
+    state: Vec<LayerState>,
+    /// Current latent patches `x_t`.
+    x: Tensor,
+    kinds: Vec<StepKind>,
+    grid: Vec<f64>,
+    step: usize,
+    stats: RunStats,
+    enqueued: Instant,
+    admitted: Instant,
+    batch_peak: usize,
+}
+
+/// Per-slot scratch for one lockstep step.
+struct StepCtx {
+    txt: Tensor,
+    img: Tensor,
+    cvec: Vec<f32>,
+    kind: StepKind,
+    density_before: (u64, u64),
+}
+
+/// [`PlanProvider`] over the process-shared compile cache, tagged with
+/// the batch step's epoch id and the requesting slot's lane so the cache
+/// can attribute same-step cross-request sharing exactly (even when other
+/// engines hammer the same cache concurrently).
+struct SharedPlanProvider<'c> {
+    cache: &'c SharedPlanCache<LayerPlans>,
+    epoch: u64,
+    lane: u64,
+}
+
+impl PlanProvider for SharedPlanProvider<'_> {
+    fn plans_for(
+        &mut self,
+        syms: &LayerSymbols,
+        geo: &Geometry,
+    ) -> (Arc<LayerPlans>, CacheOutcome) {
+        let key = plan_key(syms, geo);
+        self.cache.get_or_compile_shared(&key, self.epoch, self.lane, || {
+            compile_plans(syms, geo)
+        })
+    }
+}
+
+/// Lockstep batched engine (see the [module docs](crate::batch)).
+pub struct BatchedEngine {
+    model: MiniMMDiT,
+    policy: Policy,
+    geo: Geometry,
+    panels: Vec<LayerPanels>,
+    exec: Arc<ExecPool>,
+    cache: SharedPlanCache<LayerPlans>,
+    slots: Vec<Slot>,
+    max_batch: usize,
+}
+
+impl BatchedEngine {
+    /// Batched engine with symbol pooling factor 1.
+    pub fn new(
+        model: MiniMMDiT,
+        policy: Policy,
+        block_q: usize,
+        block_k: usize,
+        max_batch: usize,
+    ) -> Self {
+        Self::with_pool(model, policy, block_q, block_k, 1, max_batch)
+    }
+
+    /// Batched engine with an explicit symbol pooling factor (mirrors
+    /// [`DiTEngine::with_pool`]).
+    pub fn with_pool(
+        model: MiniMMDiT,
+        policy: Policy,
+        block_q: usize,
+        block_k: usize,
+        pool: usize,
+        max_batch: usize,
+    ) -> Self {
+        let geo = Geometry::from_model(&model.cfg, block_q, block_k, pool);
+        let panels = LayerPanels::for_model(&model);
+        BatchedEngine {
+            model,
+            policy,
+            geo,
+            panels,
+            exec: ExecPool::global(),
+            cache: SharedPlanCache::new(PLAN_CACHE_CAP),
+            slots: Vec::new(),
+            max_batch: max_batch.max(1),
+        }
+    }
+
+    /// Build from a configured single-request engine, moving its model,
+    /// policy, geometry, prebuilt panels, and exec pool (no weight clone,
+    /// no panel re-gather). The plan cache starts fresh — swap in a
+    /// shared one via [`Self::set_plan_cache`].
+    pub fn from_engine(engine: DiTEngine, max_batch: usize) -> Self {
+        let (model, policy, geo, panels, exec) = engine.into_batch_parts();
+        BatchedEngine {
+            model,
+            policy,
+            geo,
+            panels,
+            exec,
+            cache: SharedPlanCache::new(PLAN_CACHE_CAP),
+            slots: Vec::new(),
+            max_batch: max_batch.max(1),
+        }
+    }
+
+    /// Swap the execution pool every kernel of this batch dispatches on.
+    pub fn set_exec_pool(&mut self, pool: Arc<ExecPool>) {
+        self.exec = pool;
+    }
+
+    pub fn exec_pool(&self) -> &Arc<ExecPool> {
+        &self.exec
+    }
+
+    /// Share a plan-compile cache with other engines (the coordinator
+    /// hands every worker one handle → cross-worker plan sharing).
+    pub fn set_plan_cache(&mut self, cache: SharedPlanCache<LayerPlans>) {
+        self.cache = cache;
+    }
+
+    pub fn plan_cache(&self) -> &SharedPlanCache<LayerPlans> {
+        &self.cache
+    }
+
+    /// Lifetime counters of the (possibly shared) plan cache.
+    pub fn plan_cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Number of in-flight requests.
+    pub fn active(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Step count of the current cohort (all slots share it — the
+    /// scheduler's bucket key), `None` when the batch is empty.
+    pub fn bucket_steps(&self) -> Option<usize> {
+        self.slots.first().map(|s| s.req.steps)
+    }
+
+    /// True when every in-flight slot is about to run a Full (Warmup /
+    /// Update) step — i.e. no Dispatch window would be broken by growing
+    /// the batch. Trivially true for an empty batch; a slot past its last
+    /// step (e.g. a zero-step request awaiting retirement) counts as at
+    /// the boundary.
+    pub fn at_refresh_boundary(&self) -> bool {
+        self.slots.iter().all(|s| s.kinds.get(s.step).is_none_or(|k| !k.is_sparse()))
+    }
+
+    /// Capacity *and* boundary check for admission.
+    pub fn can_admit(&self) -> bool {
+        self.slots.len() < self.max_batch && self.at_refresh_boundary()
+    }
+
+    /// Admit a request into the batch. Panics unless [`Self::can_admit`];
+    /// the scheduler checks first. `enqueued` is when the request entered
+    /// the serving queue (for latency accounting).
+    pub fn admit(&mut self, req: Request, enqueued: Instant) {
+        assert!(self.slots.len() < self.max_batch, "batch is full");
+        assert!(
+            self.at_refresh_boundary(),
+            "admission is only allowed at refresh boundaries"
+        );
+        let mut policy = self.policy.clone();
+        policy.reset();
+        let (warmup, interval) = policy.schedule();
+        let kinds = plan_steps(req.steps, warmup.min(req.steps), interval);
+        let grid = time_grid(req.steps);
+        let order = policy.order();
+        let state = (0..self.model.cfg.layers).map(|_| LayerState::new(order)).collect();
+        let x = initial_noise(&self.model.cfg, req.seed);
+        let stats = RunStats { steps: req.steps, ..Default::default() };
+        self.slots.push(Slot {
+            req,
+            policy,
+            state,
+            x,
+            kinds,
+            grid,
+            step: 0,
+            stats,
+            enqueued,
+            admitted: Instant::now(),
+            batch_peak: 0,
+        });
+        let occupancy = self.slots.len();
+        for s in &mut self.slots {
+            s.batch_peak = s.batch_peak.max(occupancy);
+        }
+    }
+
+    /// Whether a slot takes the batched sparse path at this layer — the
+    /// exact complement of the paths `EngineExec::block` would special-case
+    /// (Full steps, whole-block forecasts, per-step-mask policies).
+    fn batched_eligible(slot: &Slot, layer: usize, kind: StepKind) -> bool {
+        if !matches!(kind, StepKind::Dispatch { .. }) {
+            return false;
+        }
+        if slot.policy.per_step_masks() {
+            return false;
+        }
+        let st = &slot.state[layer];
+        if st.plans.is_none() {
+            return false;
+        }
+        let block_cached =
+            (slot.policy.block_caching() || st.degraded) && st.delta_txt.is_ready();
+        !block_cached
+    }
+
+    /// Advance every in-flight request by one denoising step and retire
+    /// the ones that finished. Per layer, slots sharing a compiled plan
+    /// `Arc` run the batched kernels (one plan walk for the group);
+    /// everything else reuses the single-request block executor — both
+    /// bitwise-identical per request to a solo run.
+    pub fn step_forward(&mut self) -> Vec<BatchResult> {
+        // Already-finished slots (zero-step requests) retire without
+        // running a step — matching the solo engine's `generate(steps=0)`
+        // semantics, where the image is the unpatchified initial noise.
+        let mut finished = self.retire_finished();
+        if self.slots.is_empty() {
+            return finished;
+        }
+        // One sharing epoch per lockstep step: a hit on an entry another
+        // slot compiled earlier in this same step counts as shared
+        // (RunStats.plan_cache_shared). The id is allocated by the cache,
+        // so concurrent engines sharing it cannot cross-attribute.
+        let epoch = self.cache.begin_epoch();
+        let cfg = self.model.cfg.clone();
+
+        // ---- Phase A: per-slot embeddings + conditioning. ----
+        let mut ctxs: Vec<StepCtx> = Vec::with_capacity(self.slots.len());
+        for slot in &self.slots {
+            let t = slot.grid[slot.step];
+            let (txt, img) = self.model.embed_streams(&slot.req.prompt_ids, &slot.x);
+            ctxs.push(StepCtx {
+                txt,
+                img,
+                cvec: self.model.conditioning(t),
+                kind: slot.kinds[slot.step],
+                density_before: (slot.stats.attn_computed_pairs, slot.stats.attn_total_pairs),
+            });
+        }
+
+        // ---- Phase B: layer loop, grouping by shared plan Arc. ----
+        {
+            let BatchedEngine { model, geo, panels, exec, cache, slots, .. } = self;
+            let model: &MiniMMDiT = model;
+            let exec: &Arc<ExecPool> = exec;
+            for layer in 0..cfg.layers {
+                let bw = &model.w.blocks[layer];
+                let mut groups: Vec<(*const LayerPlans, Vec<usize>)> = Vec::new();
+                let mut singles: Vec<usize> = Vec::new();
+                for (i, slot) in slots.iter().enumerate() {
+                    if Self::batched_eligible(slot, layer, ctxs[i].kind) {
+                        let ptr = Arc::as_ptr(slot.state[layer].plans.as_ref().unwrap());
+                        match groups.iter_mut().find(|(p, _)| *p == ptr) {
+                            Some((_, g)) => g.push(i),
+                            None => groups.push((ptr, vec![i])),
+                        }
+                    } else {
+                        singles.push(i);
+                    }
+                }
+                for (_, group) in groups {
+                    if group.len() >= 2 {
+                        sparse_block_batched(
+                            model, &panels[layer], exec, slots, &mut ctxs, &group, layer, bw,
+                        );
+                    } else {
+                        singles.push(group[0]);
+                    }
+                }
+                for i in singles {
+                    let slot = &mut slots[i];
+                    let ctx = &mut ctxs[i];
+                    let mut provider =
+                        SharedPlanProvider { cache: &*cache, epoch, lane: i as u64 };
+                    let mut block_exec = EngineExec {
+                        policy: &mut slot.policy,
+                        geo: *geo,
+                        state: &mut slot.state,
+                        panels,
+                        exec,
+                        plans: &mut provider,
+                        kind: ctx.kind,
+                        step: slot.step,
+                        stats: &mut slot.stats,
+                    };
+                    block_exec.block(layer, bw, &cfg, &ctx.cvec, &mut ctx.txt, &mut ctx.img);
+                }
+            }
+        }
+
+        // ---- Phase C: decode, integrate, account, retire. ----
+        for (slot, ctx) in self.slots.iter_mut().zip(&ctxs) {
+            let v = self.model.decode(&ctx.cvec, &ctx.img);
+            let dt = slot.grid[slot.step] - slot.grid[slot.step + 1];
+            euler_step(&mut slot.x, &v, dt);
+            let dp = slot.stats.attn_computed_pairs - ctx.density_before.0;
+            let dtot = slot.stats.attn_total_pairs - ctx.density_before.1;
+            slot.stats.per_step_density.push(if dtot == 0 {
+                if ctx.kind.is_sparse() {
+                    0.0
+                } else {
+                    1.0
+                }
+            } else {
+                dp as f64 / dtot as f64
+            });
+            slot.step += 1;
+        }
+        finished.extend(self.retire_finished());
+        finished
+    }
+
+    /// Remove every slot that has run all its steps and convert it into a
+    /// [`BatchResult`].
+    fn retire_finished(&mut self) -> Vec<BatchResult> {
+        let mut finished = Vec::new();
+        let mut i = 0;
+        while i < self.slots.len() {
+            if self.slots[i].step >= self.slots[i].req.steps {
+                let mut slot = self.slots.remove(i);
+                slot.stats.wall_s = slot.admitted.elapsed().as_secs_f64();
+                finished.push(BatchResult {
+                    id: slot.req.id,
+                    scene: slot.req.scene,
+                    image: unpatchify(&slot.x, &self.model.cfg),
+                    queue_s: slot
+                        .admitted
+                        .saturating_duration_since(slot.enqueued)
+                        .as_secs_f64(),
+                    exec_s: slot.stats.wall_s,
+                    latency_s: slot.enqueued.elapsed().as_secs_f64(),
+                    batch_size: slot.batch_peak,
+                    stats: slot.stats,
+                });
+            } else {
+                i += 1;
+            }
+        }
+        finished
+    }
+
+    /// Drive the current batch to completion (no further admissions).
+    pub fn run_to_completion(&mut self) -> Vec<BatchResult> {
+        let mut out = Vec::new();
+        while !self.slots.is_empty() {
+            out.extend(self.step_forward());
+        }
+        out
+    }
+}
+
+/// Batched sparse path for a group of slots sharing one compiled plan set:
+/// mirrors `EngineExec::sparse_block` per request, but walks the shared
+/// plan's live-index lists exactly once per batch (batched GEMM-Q /
+/// attention / GEMM-O). Per-request float sequences are identical to the
+/// serial kernels, so every slot's streams end up bitwise-identical to a
+/// solo run.
+#[allow(clippy::too_many_arguments)]
+fn sparse_block_batched(
+    model: &MiniMMDiT,
+    panels: &LayerPanels,
+    exec: &Arc<ExecPool>,
+    slots: &mut [Slot],
+    ctxs: &mut [StepCtx],
+    group: &[usize],
+    layer: usize,
+    bw: &BlockWeights,
+) {
+    let cfg = &model.cfg;
+    let plans = Arc::clone(slots[group[0]].state[layer].plans.as_ref().unwrap());
+    for &i in group {
+        slots[i].stats.total_layer_steps += 1;
+        slots[i].stats.flops_dense += DiTEngine::dense_layer_flops(cfg);
+    }
+
+    // ---- Phase 0: pre-attention + K/V per request, GEMM-Q batched. ----
+    let p0 = Instant::now();
+    let mut pres: Vec<PreAttn> = Vec::with_capacity(group.len());
+    let mut kjs: Vec<Tensor> = Vec::with_capacity(group.len());
+    let mut vjs: Vec<Tensor> = Vec::with_capacity(group.len());
+    for &i in group {
+        let ctx = &ctxs[i];
+        let pre = pre_attention(bw, &ctx.cvec, &ctx.txt, &ctx.img);
+        let (kj, vj) = project_kv_joint(bw, cfg, &pre);
+        kjs.push(kj);
+        vjs.push(vj);
+        pres.push(pre);
+    }
+    let txt_in: Vec<&Tensor> = pres.iter().map(|p| &p.txt_mod).collect();
+    let img_in: Vec<&Tensor> = pres.iter().map(|p| &p.img_mod).collect();
+    let q_txt = gemm_q_batched(&txt_in, &bw.txt.wq, &plans.txt, Some(&bw.txt.bq), exec);
+    let q_img = gemm_q_batched(&img_in, &bw.img.wq, &plans.img, Some(&bw.img.bq), exec);
+    let mut qjs: Vec<Tensor> = Vec::with_capacity(group.len());
+    for (gi, &i) in group.iter().enumerate() {
+        let (q_t, s_t) = &q_txt[gi];
+        let (q_i, s_i) = &q_img[gi];
+        slots[i].stats.gq_computed += (s_t.computed_tiles + s_i.computed_tiles) as u64;
+        slots[i].stats.gq_total += (s_t.total_tiles + s_i.total_tiles) as u64;
+        let mut qj = vstack(q_t, q_i);
+        norm_rope_joint_q(&mut qj, bw, cfg, cfg.text_tokens);
+        qjs.push(qj);
+    }
+    let p0_s = p0.elapsed().as_secs_f64();
+
+    // ---- Phase 1: attention over batch × heads pool lanes. ----
+    let p1 = Instant::now();
+    let q_refs: Vec<&Tensor> = qjs.iter().collect();
+    let k_refs: Vec<&Tensor> = kjs.iter().collect();
+    let v_refs: Vec<&Tensor> = vjs.iter().collect();
+    let per_req = flashomni_attention_batched(&q_refs, &k_refs, &v_refs, &plans.joint, exec);
+    let mut o_cats: Vec<Tensor> = Vec::with_capacity(group.len());
+    for (gi, &i) in group.iter().enumerate() {
+        let mut o_cat = Tensor::zeros(&[cfg.seq_len(), cfg.dim]);
+        for (h, (oh, st)) in per_req[gi].iter().enumerate() {
+            slots[i].stats.attn_computed_pairs += st.computed_pairs as u64;
+            slots[i].stats.attn_total_pairs += st.total_pairs as u64;
+            insert_head(&mut o_cat, oh, cfg.heads, h);
+        }
+        o_cats.push(o_cat);
+    }
+    let p1_s = p1.elapsed().as_secs_f64();
+
+    // ---- Phase 2: bias combine per request, GEMM-O dispatch batched. ----
+    let p2 = Instant::now();
+    let mut o_ts: Vec<Tensor> = Vec::with_capacity(group.len());
+    let mut o_is: Vec<Tensor> = Vec::with_capacity(group.len());
+    let mut bias_ts: Vec<Tensor> = Vec::with_capacity(group.len());
+    let mut bias_is: Vec<Tensor> = Vec::with_capacity(group.len());
+    for (gi, &i) in group.iter().enumerate() {
+        let st = &slots[i].state[layer];
+        let k_off = match ctxs[i].kind {
+            StepKind::Dispatch { k } => k,
+            _ => unreachable!("batched path only runs Dispatch steps"),
+        };
+        let coeffs = st.o_taylor.coefficients(k_off as f64);
+        let (o_t, o_i) = vsplit(&o_cats[gi], cfg.text_tokens);
+        bias_ts.push(if st.bias_txt.is_empty() {
+            Tensor::zeros(&[cfg.text_tokens, cfg.dim])
+        } else {
+            combine_bias_stack(&st.bias_txt, &coeffs)
+        });
+        bias_is.push(if st.bias_img.is_empty() {
+            Tensor::zeros(&[cfg.vision_tokens(), cfg.dim])
+        } else {
+            combine_bias_stack(&st.bias_img, &coeffs)
+        });
+        o_ts.push(o_t);
+        o_is.push(o_i);
+    }
+    let ot_refs: Vec<&Tensor> = o_ts.iter().collect();
+    let oi_refs: Vec<&Tensor> = o_is.iter().collect();
+    let bt_refs: Vec<&Tensor> = bias_ts.iter().collect();
+    let bi_refs: Vec<&Tensor> = bias_is.iter().collect();
+    let mut out_ts =
+        gemm_o_dispatch_batched(&ot_refs, &panels.txt, &plans.txt, &bt_refs, exec).into_iter();
+    let mut out_is =
+        gemm_o_dispatch_batched(&oi_refs, &panels.img, &plans.img, &bi_refs, exec).into_iter();
+    for (gi, &i) in group.iter().enumerate() {
+        let (mut out_t, g_t) = out_ts.next().unwrap();
+        let (mut out_i, g_i) = out_is.next().unwrap();
+        slots[i].stats.go_computed += (g_t.computed_tiles + g_i.computed_tiles) as u64;
+        slots[i].stats.go_total += (g_t.total_tiles + g_i.total_tiles) as u64;
+        add_row_bias(&mut out_t, &bw.txt.bo);
+        add_row_bias(&mut out_i, &bw.img.bo);
+        let o_joint = vstack(&out_t, &out_i);
+        let ctx = &mut ctxs[i];
+        post_attention_preprojected(&pres[gi], &o_joint, cfg.text_tokens, &mut ctx.txt, &mut ctx.img);
+    }
+    let p2_s = p2.elapsed().as_secs_f64();
+
+    // ---- Phase 3: per-request MLPs. ----
+    let p3 = Instant::now();
+    for (gi, &i) in group.iter().enumerate() {
+        let ctx = &mut ctxs[i];
+        mlp_stream(&bw.txt, &pres[gi].ada_txt, &mut ctx.txt);
+        mlp_stream(&bw.img, &pres[gi].ada_img, &mut ctx.img);
+    }
+    let p3_s = p3.elapsed().as_secs_f64();
+
+    // FLOP + phase accounting per slot, read off the shared plan (same
+    // numbers the per-request path derives via the same helper). Wall
+    // time of the fused group phases is attributed to every member (each
+    // experienced it).
+    let step_flops = sparse_step_flops(cfg, &plans);
+    for &i in group {
+        slots[i].stats.flops_done += step_flops;
+        slots[i].stats.phase_s[0] += p0_s;
+        slots[i].stats.phase_s[1] += p1_s;
+        slots[i].stats.phase_s[2] += p2_s;
+        slots[i].stats.phase_s[3] += p3_s;
+    }
+}

@@ -1,0 +1,50 @@
+//! **Batched generation** — the continuous-batching serving layer on top
+//! of the plan compiler ([`crate::plan`]) and the shared execution runtime
+//! ([`crate::exec`]).
+//!
+//! FlashOmni's sparse symbols are a pure function of a request's
+//! activations per (layer, refresh), and in the serving regimes that
+//! matter — repeated prompts, shared-seed bursts, slowly-changing masks —
+//! whole batches of requests emit **byte-identical symbol streams**. The
+//! single-request engine already deduplicates those through its
+//! [`PlanCache`](crate::plan::cache::PlanCache), but each coordinator
+//! worker still ran one request per engine step, paying plan lookup, head
+//! dispatch, and tile-loop overheads per request. This module amortizes
+//! all three across a batch:
+//!
+//! * [`BatchedEngine`] — advances a group of requests **in lockstep**, one
+//!   denoising step per call. Each layer partitions the batch: slots whose
+//!   compiled [`LayerPlans`](crate::engine::LayerPlans) `Arc` coincide ride
+//!   the **batched sparse path** (one walk of the shared plan's live-index
+//!   lists via `gemm_q_batched` / `flashomni_attention_batched` /
+//!   `gemm_o_dispatch_batched`, dispatched over `batch × heads` and
+//!   `batch × row-block` pool lanes); everything else (Full steps,
+//!   CachedBlock forecasts, per-step-mask policies) reuses the
+//!   single-request block executor verbatim. Either way every request's
+//!   output is **bitwise-identical** to a solo [`DiTEngine`] run
+//!   (property-tested in `rust/tests/batch_serving.rs`).
+//! * Plan compiles go through a process-shared
+//!   [`SharedPlanCache`](crate::plan::cache::SharedPlanCache) with one
+//!   sharing *epoch* per lockstep step, so
+//!   [`RunStats::plan_cache_shared`](crate::engine::RunStats) proves the
+//!   "one plan compile per (layer, refresh) per batch" invariant that
+//!   `benches/fig12_batched_serving.rs` measures.
+//! * [`BatchScheduler`] — continuous batching over a pending queue:
+//!   requests are bucketed by step count (the refresh schedule; geometry
+//!   and policy are engine-level constants), late arrivals are admitted
+//!   only at **refresh boundaries** (every in-flight slot about to run a
+//!   Full step, so no Dispatch window is broken mid-flight), and finished
+//!   requests retire without stalling the rest of the batch.
+//!
+//! The serving [`Coordinator`](crate::coordinator) feeds each worker's
+//! scheduler from the shared request queue and hands every worker one
+//! `SharedPlanCache`, so plan compiles are shared across requests *and*
+//! across workers.
+//!
+//! [`DiTEngine`]: crate::engine::DiTEngine
+
+mod engine;
+mod scheduler;
+
+pub use engine::{BatchResult, BatchedEngine};
+pub use scheduler::BatchScheduler;

@@ -1,0 +1,105 @@
+//! The **continuous-batching scheduler**: a pending queue in front of one
+//! [`BatchedEngine`], with shape bucketing and refresh-boundary admission.
+//!
+//! Bucketing: geometry and policy are fixed per engine (every coordinator
+//! worker serves one model/policy pair), so the runtime bucket key is the
+//! request's **step count** — together with the policy's `(warmup,
+//! interval)` schedule it determines the refresh pattern a cohort shares.
+//! Pending requests are admitted in FIFO order; a front request whose step
+//! count differs from the active cohort waits until the cohort drains
+//! (head-of-line discipline, mirroring the coordinator's `claim_batch`),
+//! which keeps cohorts homogeneous without reordering.
+//!
+//! Admission happens only when the engine reports a **refresh boundary**
+//! (every in-flight slot about to run a Full step): joining mid-window
+//! would leave the newcomer on its dense Warmup steps while the cohort is
+//! mid-Dispatch anyway, and boundary alignment maximizes the window in
+//! which cohort members share plan compiles. Requests admitted together
+//! stay aligned for their whole run; stragglers admitted late simply
+//! retire later — retirement never stalls the rest of the batch.
+
+use super::engine::{BatchResult, BatchedEngine};
+use crate::trace::Request;
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// Continuous-batching scheduler over one batched engine.
+pub struct BatchScheduler {
+    engine: BatchedEngine,
+    pending: VecDeque<(Request, Instant)>,
+}
+
+impl BatchScheduler {
+    pub fn new(engine: BatchedEngine) -> Self {
+        BatchScheduler { engine, pending: VecDeque::new() }
+    }
+
+    /// Enqueue a request (enqueue time = now).
+    pub fn submit(&mut self, req: Request) {
+        self.submit_at(req, Instant::now());
+    }
+
+    /// Enqueue a request with an explicit enqueue timestamp (the serving
+    /// coordinator passes the time the request entered its shared queue,
+    /// so queue-wait accounting spans both queues).
+    pub fn submit_at(&mut self, req: Request, enqueued: Instant) {
+        self.pending.push_back((req, enqueued));
+    }
+
+    /// In-flight request count.
+    pub fn active(&self) -> usize {
+        self.engine.active()
+    }
+
+    /// Requests waiting for admission.
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Nothing in flight and nothing pending.
+    pub fn is_idle(&self) -> bool {
+        self.engine.active() == 0 && self.pending.is_empty()
+    }
+
+    /// Step count of the active cohort, or of the front pending request
+    /// when the engine is empty (the bucket the scheduler will fill next).
+    pub fn bucket_steps(&self) -> Option<usize> {
+        self.engine.bucket_steps().or_else(|| self.pending.front().map(|(r, _)| r.steps))
+    }
+
+    /// The engine (plan-cache stats, boundary state, …).
+    pub fn engine(&self) -> &BatchedEngine {
+        &self.engine
+    }
+
+    /// Admit pending requests while the engine has capacity, is at a
+    /// refresh boundary, and the front request matches the active bucket.
+    fn admit_ready(&mut self) {
+        while self.engine.can_admit() {
+            let bucket = self.engine.bucket_steps();
+            match self.pending.front() {
+                Some((r, _)) if bucket.is_none_or(|b| r.steps == b) => {
+                    let (req, enqueued) = self.pending.pop_front().unwrap();
+                    self.engine.admit(req, enqueued);
+                }
+                _ => break,
+            }
+        }
+    }
+
+    /// One scheduler tick: admit what can be admitted, then advance the
+    /// batch one lockstep step. Returns the requests that finished.
+    pub fn step(&mut self) -> Vec<BatchResult> {
+        self.admit_ready();
+        self.engine.step_forward()
+    }
+
+    /// Drain everything: tick until no request is in flight or pending.
+    pub fn run_to_completion(&mut self) -> Vec<BatchResult> {
+        let mut out = Vec::new();
+        while !self.is_idle() {
+            out.extend(self.step());
+        }
+        out
+    }
+}

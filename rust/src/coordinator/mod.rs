@@ -4,15 +4,27 @@
 //! tokio is unavailable in this offline image (DESIGN.md), so the
 //! coordinator is built on `std::thread` + `Mutex<VecDeque>/Condvar`. The
 //! design mirrors a vLLM-style router at small scale: requests enter a
-//! queue, workers pull *batches* of compatible requests (same step count —
-//! our shape bucket), run them through their engine, and emit per-request
-//! latency breakdowns.
+//! queue, and each worker **feeds a continuous-batching
+//! [`BatchScheduler`](crate::batch::BatchScheduler)** instead of running
+//! one request per engine step. A worker claims a shape bucket (same step
+//! count) from the queue front via [`claim_batch`], advances its batch one
+//! lockstep step at a time, tops the batch up with front-of-queue
+//! bucket-compatible late arrivals between steps (admitted at refresh
+//! boundaries by the scheduler), and emits per-request latency breakdowns
+//! as requests retire. Batched execution is bitwise-identical per request
+//! to a solo engine run, so serving results do not depend on batch
+//! composition or worker count.
+//!
+//! All workers share one [`SharedPlanCache`]: a sparse plan compiled for
+//! any request is reused by every symbol-identical refresh — in the same
+//! batch (one compile per (layer, refresh) per batch), in later requests,
+//! and across workers.
 //!
 //! Idle workers **block** on the queue condvar; [`Coordinator::close`]
 //! flips the closed flag under the queue lock and `notify_all`s, so they
 //! exit promptly instead of spinning on wait timeouts. Closing drains: a
-//! worker only exits once the queue is empty, so every submitted request
-//! still gets served.
+//! worker only exits once the queue is empty and its batch has retired,
+//! so every submitted request still gets served.
 //!
 //! Worker engines default to the process-wide
 //! [`ExecPool`](crate::exec::ExecPool), so N workers × H attention heads
@@ -20,7 +32,9 @@
 //! threads (pass a custom pool via `DiTEngine::set_exec_pool` in the
 //! factory to change that).
 
-use crate::engine::{DiTEngine, RunStats};
+use crate::batch::{BatchScheduler, BatchedEngine};
+use crate::engine::{DiTEngine, LayerPlans, RunStats};
+use crate::plan::cache::SharedPlanCache;
 use crate::tensor::Tensor;
 use crate::trace::Request;
 use std::collections::VecDeque;
@@ -29,6 +43,10 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
+/// Capacity of the coordinator-wide shared plan cache (larger than the
+/// per-engine default: it serves every worker's refreshes at once).
+const COORD_PLAN_CACHE_CAP: usize = 256;
+
 /// A finished request.
 #[derive(Clone, Debug)]
 pub struct Response {
@@ -36,13 +54,13 @@ pub struct Response {
     pub scene: usize,
     pub image: Tensor,
     pub stats: RunStats,
-    /// Seconds spent waiting in the queue.
+    /// Seconds spent waiting in the queue (enqueue → batch admission).
     pub queue_s: f64,
-    /// Seconds of engine execution.
+    /// Seconds of batched engine execution (admission → completion).
     pub exec_s: f64,
-    /// End-to-end seconds (queue + batch wait + exec).
+    /// End-to-end seconds (queue + exec).
     pub latency_s: f64,
-    /// Worker that served it and batch size it rode in.
+    /// Worker that served it and the peak batch occupancy it rode in.
     pub worker: usize,
     pub batch_size: usize,
 }
@@ -81,6 +99,21 @@ fn claim_batch(q: &mut VecDeque<Job>, max_batch: usize) -> Vec<Job> {
     batch
 }
 
+/// Top-up claim for a running batch: take up to `room` front-of-queue jobs
+/// whose step count matches the active bucket (same FIFO head-of-line
+/// discipline as [`claim_batch`], but never starts a new bucket).
+fn claim_matching(q: &mut VecDeque<Job>, steps: Option<usize>, room: usize) -> Vec<Job> {
+    let Some(steps) = steps else { return Vec::new() };
+    let mut out = Vec::new();
+    while out.len() < room {
+        match q.front() {
+            Some(j) if j.req.steps == steps => out.push(q.pop_front().unwrap()),
+            _ => break,
+        }
+    }
+    out
+}
+
 /// Worker-pool coordinator.
 pub struct Coordinator {
     shared: Arc<Shared>,
@@ -89,9 +122,11 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start `workers` threads, each owning an engine built by `factory`.
-    /// `max_batch` bounds how many queued requests a worker claims at once
-    /// (requests in one batch share the worker's warm weight/cache state).
+    /// Start `workers` threads, each driving a [`BatchScheduler`] over a
+    /// batched engine built from `factory`'s single-request engine.
+    /// `max_batch` bounds how many requests a worker's batch holds at once
+    /// (requests in one batch advance in lockstep and share plan compiles
+    /// per (layer, refresh)); all workers share one plan cache.
     pub fn start<F>(factory: F, workers: usize, max_batch: usize) -> Self
     where
         F: Fn(usize) -> DiTEngine + Send + Sync + 'static,
@@ -103,49 +138,57 @@ impl Coordinator {
         });
         let (out_tx, out_rx) = std::sync::mpsc::channel::<Response>();
         let factory = Arc::new(factory);
+        let plan_cache: SharedPlanCache<LayerPlans> =
+            SharedPlanCache::new(COORD_PLAN_CACHE_CAP);
         let mut handles = Vec::new();
         for wid in 0..workers.max(1) {
             let shared = Arc::clone(&shared);
             let out_tx = out_tx.clone();
             let factory = Arc::clone(&factory);
+            let plan_cache = plan_cache.clone();
             handles.push(std::thread::spawn(move || {
-                let mut engine = factory(wid);
+                let mut engine = BatchedEngine::from_engine(factory(wid), max_batch);
+                engine.set_plan_cache(plan_cache);
+                let mut sched = BatchScheduler::new(engine);
                 loop {
-                    // Claim a batch: block for the first job (a plain
-                    // condvar wait — `close()` notifies all waiters under
-                    // the queue lock, so there is no lost-wakeup window and
-                    // no need for a polling timeout), then drain up to
-                    // max_batch compatible (same step count) jobs.
-                    let batch: Vec<Job> = {
+                    // Acquire work. With an idle scheduler, block for the
+                    // first job (a plain condvar wait — `close()` notifies
+                    // all waiters under the queue lock, so there is no
+                    // lost-wakeup window) and claim a fresh shape bucket.
+                    // With a running batch, top up without blocking: only
+                    // front-of-queue jobs matching the active bucket, up
+                    // to the scheduler's remaining capacity.
+                    let jobs: Vec<Job> = {
                         let mut q = shared.queue.lock().unwrap();
-                        while q.is_empty() {
+                        while q.is_empty() && sched.is_idle() {
                             if shared.closed.load(Ordering::SeqCst) {
                                 return;
                             }
                             q = shared.cv.wait(q).unwrap();
                         }
-                        claim_batch(&mut q, max_batch)
+                        if sched.is_idle() {
+                            claim_batch(&mut q, max_batch)
+                        } else {
+                            let room = max_batch
+                                .saturating_sub(sched.active() + sched.pending_len());
+                            claim_matching(&mut q, sched.bucket_steps(), room)
+                        }
                     };
-                    let bsize = batch.len();
-                    let batch_start = Instant::now();
-                    for job in batch {
-                        let queue_s = batch_start
-                            .saturating_duration_since(job.enqueued)
-                            .as_secs_f64();
-                        let t0 = Instant::now();
-                        let res =
-                            engine.generate(&job.req.prompt_ids, job.req.seed, job.req.steps);
-                        let exec_s = t0.elapsed().as_secs_f64();
+                    for job in jobs {
+                        sched.submit_at(job.req, job.enqueued);
+                    }
+                    // One lockstep step; retired requests stream out.
+                    for r in sched.step() {
                         let _ = out_tx.send(Response {
-                            id: job.req.id,
-                            scene: job.req.scene,
-                            image: res.image,
-                            stats: res.stats,
-                            queue_s,
-                            exec_s,
-                            latency_s: job.enqueued.elapsed().as_secs_f64(),
+                            id: r.id,
+                            scene: r.scene,
+                            image: r.image,
+                            stats: r.stats,
+                            queue_s: r.queue_s,
+                            exec_s: r.exec_s,
+                            latency_s: r.latency_s,
                             worker: wid,
-                            batch_size: bsize,
+                            batch_size: r.batch_size,
                         });
                     }
                 }
@@ -204,6 +247,7 @@ pub struct ServeReport {
     pub throughput_rps: f64,
     pub p50_latency_s: f64,
     pub p95_latency_s: f64,
+    pub p99_latency_s: f64,
     pub mean_exec_s: f64,
     pub mean_queue_s: f64,
     pub mean_batch: f64,
@@ -221,6 +265,7 @@ impl ServeReport {
             throughput_rps: rs.len() as f64 / wall_s.max(1e-9),
             p50_latency_s: pct(0.5),
             p95_latency_s: pct(0.95),
+            p99_latency_s: pct(0.99),
             mean_exec_s: rs.iter().map(|r| r.exec_s).sum::<f64>() / rs.len() as f64,
             mean_queue_s: rs.iter().map(|r| r.queue_s).sum::<f64>() / rs.len() as f64,
             mean_batch: rs.iter().map(|r| r.batch_size as f64).sum::<f64>() / rs.len() as f64,
@@ -231,12 +276,13 @@ impl ServeReport {
 
     pub fn print(&self, label: &str) {
         println!(
-            "{label:<32} req={:<4} wall={:>7.2}s thpt={:>6.3}/s p50={:>7.3}s p95={:>7.3}s exec={:>7.3}s queue={:>6.3}s batch={:>4.1} sparsity={:>5.1}%",
+            "{label:<32} req={:<4} wall={:>7.2}s thpt={:>6.3}/s p50={:>7.3}s p95={:>7.3}s p99={:>7.3}s exec={:>7.3}s queue={:>6.3}s batch={:>4.1} sparsity={:>5.1}%",
             self.requests,
             self.wall_s,
             self.throughput_rps,
             self.p50_latency_s,
             self.p95_latency_s,
+            self.p99_latency_s,
             self.mean_exec_s,
             self.mean_queue_s,
             self.mean_batch,
@@ -307,6 +353,7 @@ mod tests {
         assert_eq!(ids, (0..6).collect::<Vec<u64>>());
         assert!(report.throughput_rps > 0.0);
         assert!(report.p95_latency_s >= report.p50_latency_s);
+        assert!(report.p99_latency_s >= report.p95_latency_s);
         for r in &responses {
             assert!(r.image.data().iter().all(|x| x.is_finite()));
             assert!(r.batch_size >= 1 && r.batch_size <= 2);
@@ -398,5 +445,25 @@ mod tests {
         let b = claim_batch(&mut q, 2);
         assert_eq!(b.len(), 2);
         assert_eq!(q.len(), 3);
+    }
+
+    #[test]
+    fn claim_matching_tops_up_only_the_active_bucket() {
+        let mut q: VecDeque<Job> = VecDeque::new();
+        for (id, steps) in [(0u64, 4usize), (1, 4), (2, 6), (3, 4)] {
+            q.push_back(job_with_steps(id, steps));
+        }
+        // No active bucket → nothing claimed.
+        assert!(claim_matching(&mut q, None, 4).is_empty());
+        // Bucket 4: takes the front run of matching jobs, stops at id 2.
+        let got = claim_matching(&mut q, Some(4), 4);
+        assert_eq!(got.iter().map(|j| j.req.id).collect::<Vec<_>>(), vec![0, 1]);
+        // Head-of-line: id 2 (steps 6) blocks the trailing steps-4 job.
+        assert!(claim_matching(&mut q, Some(4), 4).is_empty());
+        assert_eq!(q.len(), 2);
+        // Room is respected.
+        q.push_front(job_with_steps(9, 6));
+        let got = claim_matching(&mut q, Some(6), 1);
+        assert_eq!(got.len(), 1);
     }
 }

@@ -60,7 +60,7 @@ use crate::model::blocks::{
     qkv_joint, vsplit, vstack,
 };
 use crate::model::{BlockExec, BlockWeights, MiniMMDiT};
-use crate::plan::cache::{symbol_key, CacheStats, PlanCache};
+use crate::plan::cache::{symbol_key, CacheOutcome, CacheStats, PlanCache};
 use crate::plan::{AttnStats, DecodeMode, SparsePlan};
 use crate::symbols::LayerSymbols;
 use crate::tensor::Tensor;
@@ -134,6 +134,13 @@ pub struct RunStats {
     /// refresh re-emitted byte-identical symbols and skipped recompilation.
     pub plan_cache_hits: u64,
     pub plan_cache_misses: u64,
+    /// Batched serving: refreshes served by a plan that **another request
+    /// in the same lockstep batch step** compiled (counted inside
+    /// `plan_cache_hits` too). For a batch of B symbol-identical requests
+    /// every (layer, refresh) costs exactly 1 miss + (B−1) shared hits —
+    /// the "one plan compile per (layer, refresh) per batch" invariant the
+    /// fig12 bench verifies. Always 0 on the single-request engine.
+    pub plan_cache_shared: u64,
     /// Per-step mean attention density (Fig. 7).
     pub per_step_density: Vec<f64>,
     /// FLOPs actually executed vs the dense equivalent.
@@ -174,20 +181,22 @@ pub struct GenResult {
 }
 
 /// Plans compiled once per symbol refresh and reused, untouched, across
-/// every Dispatch step of the Update window.
-struct LayerPlans {
+/// every Dispatch step of the Update window. Public because the batched
+/// serving layer ([`crate::batch`]) shares these bundles across requests
+/// through a process-wide [`SharedPlanCache`](crate::plan::cache::SharedPlanCache).
+pub struct LayerPlans {
     /// Joint-sequence plan driving the attention kernel.
-    joint: SparsePlan,
+    pub joint: SparsePlan,
     /// Row slice covering the text prefix (GEMM-Q / GEMM-O, text stream).
-    txt: SparsePlan,
+    pub txt: SparsePlan,
     /// Row slice covering the vision suffix (GEMM-Q / GEMM-O, image stream).
-    img: SparsePlan,
+    pub img: SparsePlan,
 }
 
 /// Cache key for a layer's symbol refresh: packed symbol bytes + every
 /// geometry parameter the compiled plan set depends on (the text/vision
 /// split changes the per-stream slices even for identical joint symbols).
-fn plan_key(syms: &LayerSymbols, geo: &Geometry) -> Vec<u8> {
+pub(crate) fn plan_key(syms: &LayerSymbols, geo: &Geometry) -> Vec<u8> {
     symbol_key(
         syms,
         &[geo.t_q(), geo.t_kv(), geo.block_q, geo.block_k, geo.text_blocks()],
@@ -196,7 +205,7 @@ fn plan_key(syms: &LayerSymbols, geo: &Geometry) -> Vec<u8> {
 
 /// Decode the layer's symbols exactly once into the plan set every sparse
 /// kernel of the layer consumes (symbols → plan compile step).
-fn compile_plans(syms: &LayerSymbols, geo: &Geometry) -> LayerPlans {
+pub(crate) fn compile_plans(syms: &LayerSymbols, geo: &Geometry) -> LayerPlans {
     let joint = SparsePlan::compile(
         syms,
         geo.t_q(),
@@ -209,27 +218,28 @@ fn compile_plans(syms: &LayerSymbols, geo: &Geometry) -> LayerPlans {
     LayerPlans { txt: joint.slice_q(0, tb), img: joint.slice_q(tb, geo.t_q()), joint }
 }
 
-/// Per-layer mutable state across the denoising run.
-struct LayerState {
+/// Per-layer mutable state across the denoising run (`pub(crate)`: the
+/// batched engine keeps one of these vectors per in-flight request).
+pub(crate) struct LayerState {
     /// Compiled sparse plans (None until the policy first emits symbols).
     /// Shared with the plan cache: Dispatch steps keep the window's plan
     /// alive even if the cache evicts it.
-    plans: Option<Arc<LayerPlans>>,
+    pub(crate) plans: Option<Arc<LayerPlans>>,
     /// TaylorSeer stack over the joint attention output `O_cat`.
-    o_taylor: TaylorCache,
+    pub(crate) o_taylor: TaylorCache,
     /// Projected bias stacks per stream (one tensor per Taylor order).
-    bias_txt: Vec<Tensor>,
-    bias_img: Vec<Tensor>,
+    pub(crate) bias_txt: Vec<Tensor>,
+    pub(crate) bias_img: Vec<Tensor>,
     /// Whole-block residual-delta caches (degradation + caching baselines).
-    delta_txt: TaylorCache,
-    delta_img: TaylorCache,
+    pub(crate) delta_txt: TaylorCache,
+    pub(crate) delta_img: TaylorCache,
     /// This Update window degenerated to full-layer caching (`S_q`).
-    degraded: bool,
-    last_update_step: Option<usize>,
+    pub(crate) degraded: bool,
+    pub(crate) last_update_step: Option<usize>,
 }
 
 impl LayerState {
-    fn new(order: usize) -> Self {
+    pub(crate) fn new(order: usize) -> Self {
         LayerState {
             plans: None,
             o_taylor: TaylorCache::new(order),
@@ -244,16 +254,64 @@ impl LayerState {
 }
 
 /// Pre-built output-projection panels per layer.
-struct LayerPanels {
-    txt: WeightPanels,
-    img: WeightPanels,
+pub(crate) struct LayerPanels {
+    pub(crate) txt: WeightPanels,
+    pub(crate) img: WeightPanels,
+}
+
+impl LayerPanels {
+    /// Build the per-layer panel set for a model (pure function of the
+    /// weights — engines and the batched engine build identical sets).
+    pub(crate) fn for_model(model: &MiniMMDiT) -> Vec<LayerPanels> {
+        let heads = model.cfg.heads;
+        model
+            .w
+            .blocks
+            .iter()
+            .map(|b| LayerPanels {
+                txt: WeightPanels::new(&b.txt.wo, heads),
+                img: WeightPanels::new(&b.img.wo, heads),
+            })
+            .collect()
+    }
 }
 
 /// Default number of compiled plan sets the engine keeps per process
 /// lifetime (per engine). Each entry is one layer refresh — big enough for
 /// repeated prompts across every layer, small enough to bound memory under
 /// per-step-mask policies that emit fresh symbols every Dispatch step.
-const PLAN_CACHE_CAP: usize = 64;
+pub(crate) const PLAN_CACHE_CAP: usize = 64;
+
+/// Source of compiled plans for a symbol refresh. Abstracting the cache
+/// lets the same block-execution code ([`EngineExec`]) run against the
+/// single-request engine's private [`PlanCache`] *and* the batched
+/// engine's process-shared
+/// [`SharedPlanCache`](crate::plan::cache::SharedPlanCache).
+pub(crate) trait PlanProvider {
+    /// Symbols → compiled plan set, through whatever cache the provider
+    /// wraps. Returns the plans plus the cache outcome for accounting.
+    fn plans_for(
+        &mut self,
+        syms: &LayerSymbols,
+        geo: &Geometry,
+    ) -> (Arc<LayerPlans>, CacheOutcome);
+}
+
+/// [`PlanProvider`] over the engine's own (single-threaded) cache.
+pub(crate) struct LocalPlanProvider<'c> {
+    pub(crate) cache: &'c mut PlanCache<LayerPlans>,
+}
+
+impl PlanProvider for LocalPlanProvider<'_> {
+    fn plans_for(
+        &mut self,
+        syms: &LayerSymbols,
+        geo: &Geometry,
+    ) -> (Arc<LayerPlans>, CacheOutcome) {
+        let key = plan_key(syms, geo);
+        self.cache.get_or_compile_outcome(&key, || compile_plans(syms, geo))
+    }
+}
 
 /// The engine: model + policy + per-layer state.
 pub struct DiTEngine {
@@ -288,16 +346,7 @@ impl DiTEngine {
     ) -> Self {
         let geo = Geometry::from_model(&model.cfg, block_q, block_k, pool);
         let order = policy.order();
-        let heads = model.cfg.heads;
-        let panels = model
-            .w
-            .blocks
-            .iter()
-            .map(|b| LayerPanels {
-                txt: WeightPanels::new(&b.txt.wo, heads),
-                img: WeightPanels::new(&b.img.wo, heads),
-            })
-            .collect();
+        let panels = LayerPanels::for_model(&model);
         let state = (0..model.cfg.layers).map(|_| LayerState::new(order)).collect();
         DiTEngine {
             model,
@@ -308,6 +357,16 @@ impl DiTEngine {
             exec: ExecPool::global(),
             plan_cache: PlanCache::new(PLAN_CACHE_CAP),
         }
+    }
+
+    /// Decompose into the pieces the batched engine reuses — model,
+    /// policy, geometry, prebuilt projection panels, exec pool — without
+    /// re-cloning weights or re-gathering panels.
+    #[allow(clippy::type_complexity)]
+    pub(crate) fn into_batch_parts(
+        self,
+    ) -> (MiniMMDiT, Policy, Geometry, Vec<LayerPanels>, Arc<ExecPool>) {
+        (self.model, self.policy, self.geo, self.panels, self.exec)
     }
 
     /// Swap the execution pool (tests exercise pool-size determinism; the
@@ -382,13 +441,14 @@ impl DiTEngine {
         stats: &mut RunStats,
     ) -> Tensor {
         let DiTEngine { model, policy, geo, state, panels, exec, plan_cache } = self;
+        let mut plans = LocalPlanProvider { cache: plan_cache };
         let mut block_exec = EngineExec {
             policy,
             geo: *geo,
             state,
             panels,
             exec,
-            plan_cache,
+            plans: &mut plans,
             kind,
             step,
             stats,
@@ -407,29 +467,33 @@ impl DiTEngine {
     }
 }
 
-/// Per-step block executor implementing the three execution paths.
-struct EngineExec<'a> {
-    policy: &'a mut Policy,
-    geo: Geometry,
-    state: &'a mut [LayerState],
-    panels: &'a [LayerPanels],
-    exec: &'a Arc<ExecPool>,
-    plan_cache: &'a mut PlanCache<LayerPlans>,
-    kind: StepKind,
-    step: usize,
-    stats: &'a mut RunStats,
+/// Per-step block executor implementing the three execution paths
+/// (`pub(crate)`: the batched engine builds one per (request, step) to
+/// reuse the Full / CachedBlock / per-request sparse paths verbatim).
+pub(crate) struct EngineExec<'a> {
+    pub(crate) policy: &'a mut Policy,
+    pub(crate) geo: Geometry,
+    pub(crate) state: &'a mut [LayerState],
+    pub(crate) panels: &'a [LayerPanels],
+    pub(crate) exec: &'a Arc<ExecPool>,
+    pub(crate) plans: &'a mut dyn PlanProvider,
+    pub(crate) kind: StepKind,
+    pub(crate) step: usize,
+    pub(crate) stats: &'a mut RunStats,
 }
 
 impl<'a> EngineExec<'a> {
-    /// Symbols → plans through the cache, with RunStats accounting.
+    /// Symbols → plans through the provider, with RunStats accounting.
     fn cached_compile(&mut self, syms: &LayerSymbols) -> Arc<LayerPlans> {
         let geo = self.geo;
-        let key = plan_key(syms, &geo);
-        let (plans, hit) = self.plan_cache.get_or_compile(&key, || compile_plans(syms, &geo));
-        if hit {
-            self.stats.plan_cache_hits += 1;
-        } else {
-            self.stats.plan_cache_misses += 1;
+        let (plans, outcome) = self.plans.plans_for(syms, &geo);
+        match outcome {
+            CacheOutcome::Miss => self.stats.plan_cache_misses += 1,
+            CacheOutcome::Hit => self.stats.plan_cache_hits += 1,
+            CacheOutcome::SharedHit => {
+                self.stats.plan_cache_hits += 1;
+                self.stats.plan_cache_shared += 1;
+            }
         }
         plans
     }
@@ -624,16 +688,7 @@ impl<'a> EngineExec<'a> {
 
         // K/V are always projected in full (all rows may be attended to).
         let (q, k, v) = self.phase(0, |this| {
-            let mut k_t = linear(&pre.txt_mod, &bw.txt.wk, &bw.txt.bk);
-            let v_t = linear(&pre.txt_mod, &bw.txt.wv, &bw.txt.bv);
-            let mut k_i = linear(&pre.img_mod, &bw.img.wk, &bw.img.bk);
-            let v_i = linear(&pre.img_mod, &bw.img.wv, &bw.img.bv);
-            blocks::headwise_rmsnorm(&mut k_t, cfg.heads, &bw.txt.k_rms);
-            blocks::headwise_rmsnorm(&mut k_i, cfg.heads, &bw.img.k_rms);
-            let mut kj = vstack(&k_t, &k_i);
-            let positions: Vec<usize> = (0..cfg.seq_len()).collect();
-            blocks::headwise_rope(&mut kj, cfg.heads, &positions);
-            let vj = vstack(&v_t, &v_i);
+            let (kj, vj) = project_kv_joint(bw, cfg, &pre);
 
             // GEMM-Q with spatial skipping (per-head live tiles from the
             // pre-sliced stream plans — no per-step symbol slicing), tile
@@ -734,24 +789,52 @@ impl<'a> EngineExec<'a> {
 
         // Approximate FLOP accounting for the sparse step, read off the
         // plan's precomputed tile/pair counts.
-        let (density, cache_density) = {
-            let plans = self.state[layer].plans.as_ref().unwrap();
-            (plans.joint.density(), 1.0 - plans.joint.cache_sparsity())
-        };
-        let n = cfg.seq_len() as f64;
-        let d = cfg.dim as f64;
-        let m = (cfg.mlp_ratio * cfg.dim) as f64;
-        let attn = 4.0 * n * n * d * density;
-        let qproj = 2.0 * n * d * d * cache_density;
-        let kv = 2.0 * 2.0 * n * d * d;
-        let oproj = 2.0 * n * d * d * cache_density;
-        let mlp = 2.0 * 2.0 * n * d * m;
-        self.stats.flops_done += attn + qproj + kv + oproj + mlp;
+        self.stats.flops_done +=
+            sparse_step_flops(cfg, self.state[layer].plans.as_ref().unwrap());
     }
 }
 
+/// Sparse-path joint K/V: project both streams in full (all rows may be
+/// attended to), RMS-norm the keys, stack, and rotate. One definition
+/// shared by the single-request sparse path and the batched engine, so
+/// the two can never drift apart numerically.
+pub(crate) fn project_kv_joint(
+    bw: &BlockWeights,
+    cfg: &ModelConfig,
+    pre: &blocks::PreAttn,
+) -> (Tensor, Tensor) {
+    let mut k_t = linear(&pre.txt_mod, &bw.txt.wk, &bw.txt.bk);
+    let v_t = linear(&pre.txt_mod, &bw.txt.wv, &bw.txt.bv);
+    let mut k_i = linear(&pre.img_mod, &bw.img.wk, &bw.img.bk);
+    let v_i = linear(&pre.img_mod, &bw.img.wv, &bw.img.bv);
+    blocks::headwise_rmsnorm(&mut k_t, cfg.heads, &bw.txt.k_rms);
+    blocks::headwise_rmsnorm(&mut k_i, cfg.heads, &bw.img.k_rms);
+    let mut kj = vstack(&k_t, &k_i);
+    let positions: Vec<usize> = (0..cfg.seq_len()).collect();
+    blocks::headwise_rope(&mut kj, cfg.heads, &positions);
+    let vj = vstack(&v_t, &v_i);
+    (kj, vj)
+}
+
+/// Approximate FLOPs actually executed by one sparse (Dispatch) layer
+/// step, read off the compiled plan's tile/pair counts. One definition
+/// shared by the single-request and batched sparse paths.
+pub(crate) fn sparse_step_flops(cfg: &ModelConfig, plans: &LayerPlans) -> f64 {
+    let density = plans.joint.density();
+    let cache_density = 1.0 - plans.joint.cache_sparsity();
+    let n = cfg.seq_len() as f64;
+    let d = cfg.dim as f64;
+    let m = (cfg.mlp_ratio * cfg.dim) as f64;
+    let attn = 4.0 * n * n * d * density;
+    let qproj = 2.0 * n * d * d * cache_density;
+    let kv = 2.0 * 2.0 * n * d * d;
+    let oproj = 2.0 * n * d * d * cache_density;
+    let mlp = 2.0 * 2.0 * n * d * m;
+    attn + qproj + kv + oproj + mlp
+}
+
 /// Add a per-feature bias vector to every row.
-fn add_row_bias(x: &mut Tensor, b: &[f32]) {
+pub(crate) fn add_row_bias(x: &mut Tensor, b: &[f32]) {
     let d = x.cols();
     assert_eq!(b.len(), d);
     for r in 0..x.rows() {
@@ -763,7 +846,7 @@ fn add_row_bias(x: &mut Tensor, b: &[f32]) {
 }
 
 /// Residual add of an already-projected joint attention output.
-fn post_attention_preprojected(
+pub(crate) fn post_attention_preprojected(
     pre: &blocks::PreAttn,
     o_joint: &Tensor,
     text_tokens: usize,

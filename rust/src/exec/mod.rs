@@ -39,3 +39,44 @@
 mod pool;
 
 pub use pool::{ExecPool, SendPtr};
+
+/// Chunk size for the GEMM tile loops: how many `(head, block)` tiles one
+/// pool task processes before grabbing the next index.
+///
+/// Default heuristic: `tiles / (4·threads)` — large enough to amortize
+/// dispatch overhead, small enough to leave ~4 tasks per worker for
+/// dynamic load balancing. The **`FO_CHUNK`** environment variable (parsed
+/// once per process) overrides it outright, giving the ROADMAP's
+/// chunk-size autotuner a knob to sweep; the fig6/fig8/fig12 benches
+/// record the effective setting in their `BENCH_*.json` headers.
+pub fn tile_chunk(tiles: usize, threads: usize) -> usize {
+    match tile_chunk_override() {
+        Some(c) => c,
+        None => tiles.div_ceil((threads * 4).max(1)).max(1),
+    }
+}
+
+/// The `FO_CHUNK` override, if set to a positive integer (`None` = use the
+/// built-in heuristic). Parsed once and cached for the process lifetime.
+pub fn tile_chunk_override() -> Option<usize> {
+    static OVERRIDE: std::sync::OnceLock<Option<usize>> = std::sync::OnceLock::new();
+    *OVERRIDE.get_or_init(|| {
+        std::env::var("FO_CHUNK").ok().and_then(|v| v.parse().ok()).filter(|&c: &usize| c > 0)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tile_chunk_heuristic_bounds() {
+        // Without FO_CHUNK in the test environment the heuristic applies:
+        // ≥ 1 always, and ~4 tasks per worker for big tile counts.
+        if super::tile_chunk_override().is_none() {
+            assert_eq!(super::tile_chunk(0, 8), 1);
+            assert_eq!(super::tile_chunk(1, 8), 1);
+            assert_eq!(super::tile_chunk(256, 8), 8);
+        } else {
+            assert!(super::tile_chunk(256, 8) >= 1);
+        }
+    }
+}

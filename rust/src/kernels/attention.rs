@@ -248,6 +248,45 @@ pub fn flashomni_attention(
     (o, plan.attn_stats())
 }
 
+/// Batched multi-head dispatch of [`flashomni_attention`]: one shared
+/// [`SparsePlan`](crate::plan::SparsePlan) drives **`batch × heads`** pool
+/// lanes, each extracting its `(request, head)` slice of the joint
+/// `[N × H·d]` tensors and running Algorithm 1 against the shared per-head
+/// plan. Results come back `[request][head]` in index order, so the output
+/// is bitwise-identical to the engine's per-request head loop.
+///
+/// `cached_o` is always `None` here: the batched engine runs with the
+/// GEMM-O bias optimization, which makes the cache-then-reuse write
+/// unnecessary (§3.5, Obs. 3).
+pub fn flashomni_attention_batched(
+    qs: &[&Tensor],
+    ks: &[&Tensor],
+    vs: &[&Tensor],
+    plan: &crate::plan::SparsePlan,
+    pool: &crate::exec::ExecPool,
+) -> Vec<Vec<(Tensor, AttnStats)>> {
+    use crate::model::blocks::extract_head;
+    let b = qs.len();
+    assert_eq!(ks.len(), b);
+    assert_eq!(vs.len(), b);
+    assert!(b > 0, "empty batch");
+    let heads = plan.heads.len();
+    let (bq, bk) = (plan.block_q, plan.block_k);
+    let lanes: Vec<(Tensor, AttnStats)> = pool.parallel_map_indexed(b * heads, |lane| {
+        let (r, h) = (lane / heads, lane % heads);
+        let qh = extract_head(qs[r], heads, h);
+        let kh = extract_head(ks[r], heads, h);
+        let vh = extract_head(vs[r], heads, h);
+        flashomni_attention(&qh, &kh, &vh, &plan.heads[h], bq, bk, None)
+    });
+    let mut out = Vec::with_capacity(b);
+    let mut it = lanes.into_iter();
+    for _ in 0..b {
+        out.push(it.by_ref().take(heads).collect());
+    }
+    out
+}
+
 /// FlashOmni sparse attention (Algorithm 1) decoding the symbols in the
 /// kernel loops — the seed implementation, kept as the reference for the
 /// plan-equivalence property tests and the §4.3 decode-overhead ablation.
@@ -407,6 +446,58 @@ mod tests {
 
     fn plan_of(sym: &HeadSymbols, n: usize, n_kv: usize, bq: usize, bk: usize) -> HeadPlan {
         HeadPlan::from_symbols(sym, n.div_ceil(bq), n_kv.div_ceil(bk), DecodeMode::RowCached)
+    }
+
+    #[test]
+    fn batched_dispatch_is_bitwise_identical_per_request() {
+        use crate::model::blocks::{extract_head, insert_head};
+        use crate::plan::SparsePlan;
+        use crate::symbols::LayerSymbols;
+        let pool = crate::exec::ExecPool::new(3);
+        prop_check("attention batch×heads lanes == per-request head loop", 8, |rng| {
+            let heads = 1 + rng.below(4);
+            let d_h = 4 + rng.below(8);
+            let n = 16 + rng.below(48);
+            let (bq, bk) = (8, 8);
+            let batch = 1 + rng.below(4);
+            let t_q = n.div_ceil(bq);
+            let t_kv = n.div_ceil(bk);
+            let syms = LayerSymbols {
+                heads: (0..heads)
+                    .map(|_| {
+                        let m_c = rand_mask(rng, t_q, 0.7);
+                        let m_s = rand_mask(rng, t_q * t_kv, 0.6);
+                        HeadSymbols::from_masks(&m_c, &m_s, t_kv, 1)
+                    })
+                    .collect(),
+            };
+            let plan = SparsePlan::compile(&syms, t_q, t_kv, bq, bk, DecodeMode::RowCached);
+            let d = heads * d_h;
+            let qs: Vec<Tensor> = (0..batch).map(|_| randn(rng, &[n, d])).collect();
+            let ks: Vec<Tensor> = (0..batch).map(|_| randn(rng, &[n, d])).collect();
+            let vs: Vec<Tensor> = (0..batch).map(|_| randn(rng, &[n, d])).collect();
+            let qr: Vec<&Tensor> = qs.iter().collect();
+            let kr: Vec<&Tensor> = ks.iter().collect();
+            let vr: Vec<&Tensor> = vs.iter().collect();
+            let batched = flashomni_attention_batched(&qr, &kr, &vr, &plan, &pool);
+            assert_eq!(batched.len(), batch);
+            for r in 0..batch {
+                assert_eq!(batched[r].len(), heads);
+                let mut got = Tensor::zeros(&[n, d]);
+                let mut want = Tensor::zeros(&[n, d]);
+                for h in 0..heads {
+                    let qh = extract_head(&qs[r], heads, h);
+                    let kh = extract_head(&ks[r], heads, h);
+                    let vh = extract_head(&vs[r], heads, h);
+                    let (oh, st) =
+                        flashomni_attention(&qh, &kh, &vh, &plan.heads[h], bq, bk, None);
+                    insert_head(&mut want, &oh, heads, h);
+                    insert_head(&mut got, &batched[r][h].0, heads, h);
+                    assert_eq!(st.computed_pairs, batched[r][h].1.computed_pairs);
+                }
+                assert_eq!(got.data(), want.data(), "request {r} differs");
+            }
+        });
     }
 
     #[test]

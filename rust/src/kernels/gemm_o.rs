@@ -26,7 +26,11 @@
 //! preserve the serial per-element accumulation order — which is exactly
 //! what makes the pool outputs bitwise-identical to the serial kernels).
 //! The per-row-block head lists come from inverting the plan's CSR live /
-//! cached lists once per call ([`RowTiles`]).
+//! cached lists once per call ([`RowTiles`]). The `*_batched` variants
+//! stack a whole batch of request activations over **one shared plan**
+//! (one `RowTiles` inversion per batch, `batch × row-block` pool lanes)
+//! and are bitwise-identical per request to the serial kernels — the
+//! serving layer's cross-request plan sharing.
 //!
 //! This removes the reduction-axis redundancy *and* the need to keep the
 //! per-head cached features `Õ^h` in memory (the attention kernel's
@@ -348,6 +352,163 @@ pub fn gemm_o_dispatch_pool(
     (out, plan.gemm_stats())
 }
 
+// ---- batched variants: one shared plan, a whole batch of requests ----
+
+/// Check that every tensor of a batched GEMM-O call shares the expected
+/// geometry, returning `(n, heads, d_out)`.
+fn batched_geometry(
+    os: &[&Tensor],
+    panels: &WeightPanels,
+    plan: &SparsePlan,
+) -> (usize, usize, usize) {
+    assert!(!os.is_empty(), "empty batch");
+    let n = os[0].rows();
+    let heads = plan.heads.len();
+    let d_out = panels.d_out;
+    for o in os {
+        assert_eq!(o.rows(), n, "batch inputs must share a shape");
+        assert_eq!(o.cols(), heads * panels.d_h, "batch inputs must share a shape");
+    }
+    assert_eq!(plan.t_q, n.div_ceil(plan.block_q), "plan Q-block geometry mismatch");
+    (n, heads, d_out)
+}
+
+/// Batched [`gemm_o_dispatch_pool`]: one shared plan's live-tile structure
+/// (the [`RowTiles`] inversion) is built **once for the batch** and drives
+/// every request's dispatch projection. Work is dispatched over
+/// `batch × row-block` pool lanes; within a lane the head loop stays in
+/// ascending order, so output `r` is **bitwise-identical** to
+/// `gemm_o_dispatch(os[r], panels, plan, biases[r])`.
+pub fn gemm_o_dispatch_batched(
+    os: &[&Tensor],
+    panels: &WeightPanels,
+    plan: &SparsePlan,
+    biases: &[&Tensor],
+    pool: &ExecPool,
+) -> Vec<(Tensor, GemmStats)> {
+    let (n, heads, d_out) = batched_geometry(os, panels, plan);
+    assert_eq!(os.len(), biases.len());
+    let block_q = plan.block_q;
+    let mut outs: Vec<Tensor> = biases
+        .iter()
+        .map(|b| {
+            assert_eq!(b.shape(), &[n, d_out]);
+            (*b).clone()
+        })
+        .collect();
+    let tiles = RowTiles::from_plan(plan);
+    let t_q = plan.t_q;
+    {
+        let ptrs: Vec<SendPtr<f32>> =
+            outs.iter_mut().map(|o| SendPtr(o.data_mut().as_mut_ptr())).collect();
+        let ptrs = &ptrs;
+        let tiles = &tiles;
+        pool.parallel_for(os.len() * t_q, |task| {
+            let r = task / t_q;
+            let bi = task % t_q;
+            let lo = bi * block_q;
+            let hi = (lo + block_q).min(n);
+            // SAFETY: (request, row-block) pairs are unique across tasks,
+            // so the row slabs are disjoint; every `outs[r]` outlives the
+            // parallel section (ExecPool joins before returning).
+            let rows = unsafe {
+                std::slice::from_raw_parts_mut(ptrs[r].0.add(lo * d_out), (hi - lo) * d_out)
+            };
+            for &h in &tiles.live[bi] {
+                project_tile_rows(os[r], panels, h as usize, lo, hi, heads, rows);
+            }
+        });
+    }
+    outs.into_iter().map(|o| (o, plan.gemm_stats())).collect()
+}
+
+/// Batched [`gemm_o_stage1_pool`]: project every request's *to-be-cached*
+/// tiles into per-request bias tensors, walking one shared plan once.
+/// Bitwise-identical per request to [`gemm_o_stage1`].
+pub fn gemm_o_stage1_batched(
+    os: &[&Tensor],
+    panels: &WeightPanels,
+    plan: &SparsePlan,
+    pool: &ExecPool,
+) -> Vec<Tensor> {
+    let (n, heads, d_out) = batched_geometry(os, panels, plan);
+    let block_q = plan.block_q;
+    let mut biases: Vec<Tensor> =
+        (0..os.len()).map(|_| Tensor::zeros(&[n, d_out])).collect();
+    let tiles = RowTiles::from_plan(plan);
+    let t_q = plan.t_q;
+    {
+        let ptrs: Vec<SendPtr<f32>> =
+            biases.iter_mut().map(|b| SendPtr(b.data_mut().as_mut_ptr())).collect();
+        let ptrs = &ptrs;
+        let tiles = &tiles;
+        pool.parallel_for(os.len() * t_q, |task| {
+            let r = task / t_q;
+            let bi = task % t_q;
+            let lo = bi * block_q;
+            let hi = (lo + block_q).min(n);
+            // SAFETY: as in `gemm_o_dispatch_batched`.
+            let rows = unsafe {
+                std::slice::from_raw_parts_mut(ptrs[r].0.add(lo * d_out), (hi - lo) * d_out)
+            };
+            for &h in &tiles.cached[bi] {
+                project_tile_rows(os[r], panels, h as usize, lo, hi, heads, rows);
+            }
+        });
+    }
+    biases
+}
+
+/// Batched [`gemm_o_update_pool`]: per request, the exact Update-step
+/// output plus the refreshed bias `B_c`, all driven by one shared plan.
+/// Bitwise-identical per request to [`gemm_o_update`].
+pub fn gemm_o_update_batched(
+    os: &[&Tensor],
+    panels: &WeightPanels,
+    plan: &SparsePlan,
+    pool: &ExecPool,
+) -> Vec<(Tensor, Tensor, GemmStats)> {
+    let (n, heads, d_out) = batched_geometry(os, panels, plan);
+    let block_q = plan.block_q;
+    let mut outs: Vec<Tensor> = (0..os.len()).map(|_| Tensor::zeros(&[n, d_out])).collect();
+    let mut biases: Vec<Tensor> =
+        (0..os.len()).map(|_| Tensor::zeros(&[n, d_out])).collect();
+    let tiles = RowTiles::from_plan(plan);
+    let t_q = plan.t_q;
+    {
+        let out_ptrs: Vec<SendPtr<f32>> =
+            outs.iter_mut().map(|o| SendPtr(o.data_mut().as_mut_ptr())).collect();
+        let bias_ptrs: Vec<SendPtr<f32>> =
+            biases.iter_mut().map(|b| SendPtr(b.data_mut().as_mut_ptr())).collect();
+        let (out_ptrs, bias_ptrs) = (&out_ptrs, &bias_ptrs);
+        let tiles = &tiles;
+        pool.parallel_for(os.len() * t_q, |task| {
+            let r = task / t_q;
+            let bi = task % t_q;
+            let lo = bi * block_q;
+            let hi = (lo + block_q).min(n);
+            let len = (hi - lo) * d_out;
+            // SAFETY: as in `gemm_o_dispatch_batched`; the out and bias
+            // slabs live in different buffers.
+            let out_rows =
+                unsafe { std::slice::from_raw_parts_mut(out_ptrs[r].0.add(lo * d_out), len) };
+            let bias_rows =
+                unsafe { std::slice::from_raw_parts_mut(bias_ptrs[r].0.add(lo * d_out), len) };
+            for &h in &tiles.live[bi] {
+                project_tile_rows(os[r], panels, h as usize, lo, hi, heads, out_rows);
+            }
+            for &h in &tiles.cached[bi] {
+                project_tile_rows(os[r], panels, h as usize, lo, hi, heads, bias_rows);
+            }
+        });
+    }
+    outs.iter_mut().zip(&biases).for_each(|(o, b)| o.add_assign(b));
+    outs.into_iter()
+        .zip(biases)
+        .map(|(o, b)| (o, b, plan.gemm_stats()))
+        .collect()
+}
+
 // ---- seed symbol-decoding variants (plan-equivalence references) ----
 
 /// [`gemm_o_update`] decoding `F(S_c, i)` per tile (seed implementation).
@@ -556,6 +717,49 @@ mod tests {
             let (d_s, _) = gemm_o_dispatch(&o, &panels, &plan, &bias_s);
             let (d_p, _) = gemm_o_dispatch_pool(&o, &panels, &plan, &bias_s, &pool);
             assert_eq!(d_s.data(), d_p.data(), "dispatch must be bitwise equal");
+        });
+    }
+
+    #[test]
+    fn batched_variants_are_bitwise_identical_per_request() {
+        let pool = crate::exec::ExecPool::new(3);
+        prop_check("gemm_o *_batched[r] == serial(os[r])", 10, |rng| {
+            let n = 16 + rng.below(32);
+            let heads = 1 + rng.below(4);
+            let d_h = 2 + rng.below(6);
+            let d_out = 4 + rng.below(10);
+            let b = 4 + rng.below(8);
+            let batch = 1 + rng.below(4);
+            let t_q = n.div_ceil(b);
+            let os: Vec<Tensor> = (0..batch).map(|_| randn(rng, &[n, heads * d_h])).collect();
+            let w = randn(rng, &[heads * d_h, d_out]);
+            let panels = WeightPanels::new(&w, heads);
+            let masks: Vec<Vec<bool>> =
+                (0..heads).map(|_| rand_mask(rng, t_q, 0.5)).collect();
+            let syms = syms_from_cache_masks(&masks);
+            let plan = SparsePlan::compile(&syms, t_q, t_q, b, b, DecodeMode::RowCached);
+            let o_refs: Vec<&Tensor> = os.iter().collect();
+
+            let updates = gemm_o_update_batched(&o_refs, &panels, &plan, &pool);
+            let stages = gemm_o_stage1_batched(&o_refs, &panels, &plan, &pool);
+            let serial: Vec<(Tensor, Tensor, GemmStats)> =
+                os.iter().map(|o| gemm_o_update(o, &panels, &plan)).collect();
+            for (r, ((out_b, bias_b, st_b), (out_s, bias_s, st_s))) in
+                updates.iter().zip(&serial).enumerate()
+            {
+                assert_eq!(out_s.data(), out_b.data(), "update out, request {r}");
+                assert_eq!(bias_s.data(), bias_b.data(), "update bias, request {r}");
+                assert_eq!(st_s.computed_tiles, st_b.computed_tiles);
+                assert_eq!(stages[r].data(), bias_s.data(), "stage1, request {r}");
+            }
+
+            let bias_refs: Vec<&Tensor> = serial.iter().map(|(_, b, _)| b).collect();
+            let dispatched =
+                gemm_o_dispatch_batched(&o_refs, &panels, &plan, &bias_refs, &pool);
+            for (r, (d_b, _)) in dispatched.iter().enumerate() {
+                let (d_s, _) = gemm_o_dispatch(&os[r], &panels, &plan, bias_refs[r]);
+                assert_eq!(d_s.data(), d_b.data(), "dispatch, request {r}");
+            }
         });
     }
 

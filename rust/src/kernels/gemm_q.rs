@@ -174,8 +174,9 @@ pub fn gemm_q_pool(
         }
     }
     // Chunk so each task is a slab of tiles (amortizes dispatch overhead)
-    // while still leaving a few tasks per worker for load balancing.
-    let chunk = tiles.len().div_ceil((pool.size() * 4).max(1)).max(1);
+    // while still leaving a few tasks per worker for load balancing;
+    // `FO_CHUNK` overrides the heuristic (see `exec::tile_chunk`).
+    let chunk = crate::exec::tile_chunk(tiles.len(), pool.size());
     let n_tasks = tiles.len().div_ceil(chunk);
     {
         let yp = SendPtr(y.data_mut().as_mut_ptr());
@@ -199,6 +200,92 @@ pub fn gemm_q_pool(
         });
     }
     (y, plan.gemm_stats())
+}
+
+/// Batched [`gemm_q_pool`]: one **shared plan** drives the projections of
+/// a whole batch of request activations (batched Dispatch steps whose
+/// symbols coincide — the serving layer's cross-request plan sharing).
+///
+/// The live `(head, block)` tile list is flattened and the per-head weight
+/// panels are gathered **once for the batch** — the plan's index lists are
+/// iterated exactly once, not once per request. Work is dispatched over
+/// `batch × tile-chunk` pool lanes; each lane computes one request's slab
+/// of tiles via the same [`compute_q_tile`] float sequence as the serial
+/// kernel, so output `r` is **bitwise-identical** to
+/// `gemm_q(xs[r], w, plan, bias)` (property-tested below).
+///
+/// All inputs must share one shape (`[N × d_in]` — the scheduler's
+/// geometry bucket guarantees this).
+pub fn gemm_q_batched(
+    xs: &[&Tensor],
+    w: &Tensor,
+    plan: &SparsePlan,
+    bias: Option<&[f32]>,
+    pool: &ExecPool,
+) -> Vec<(Tensor, GemmStats)> {
+    assert!(!xs.is_empty(), "empty batch");
+    let block_q = plan.block_q;
+    let n = xs[0].rows();
+    let d_in = xs[0].cols();
+    for x in xs {
+        assert_eq!(x.rows(), n, "batch inputs must share a shape");
+        assert_eq!(x.cols(), d_in, "batch inputs must share a shape");
+    }
+    let heads = plan.heads.len();
+    assert!(heads > 0);
+    let d_out = w.cols();
+    assert_eq!(w.rows(), d_in);
+    assert_eq!(d_out % heads, 0, "W output dim must split across heads");
+    let d_h = d_out / heads;
+    assert_eq!(plan.t_q, n.div_ceil(block_q), "plan Q-block geometry mismatch");
+    let mut ys: Vec<Tensor> = (0..xs.len()).map(|_| Tensor::zeros(&[n, d_out])).collect();
+
+    // Shared per-batch preparation: head panels + flattened live tiles.
+    let panels: Vec<Vec<f32>> = (0..heads)
+        .map(|h| {
+            if plan.heads[h].live_q.is_empty() {
+                Vec::new()
+            } else {
+                gather_head_panel(w, h, d_h)
+            }
+        })
+        .collect();
+    let mut tiles: Vec<(u32, u32)> = Vec::new();
+    for (h, hp) in plan.heads.iter().enumerate() {
+        for &bi in &hp.live_q {
+            tiles.push((h as u32, bi));
+        }
+    }
+    let chunk = crate::exec::tile_chunk(tiles.len(), pool.size());
+    let chunks_per_req = tiles.len().div_ceil(chunk);
+    let n_tasks = xs.len() * chunks_per_req;
+    {
+        let ptrs: Vec<SendPtr<f32>> =
+            ys.iter_mut().map(|y| SendPtr(y.data_mut().as_mut_ptr())).collect();
+        let ptrs = &ptrs;
+        pool.parallel_for(n_tasks, |task| {
+            let r = task / chunks_per_req;
+            let c = task % chunks_per_req;
+            let x = xs[r];
+            for &(h, bi) in &tiles[c * chunk..((c + 1) * chunk).min(tiles.len())] {
+                let (h, bi) = (h as usize, bi as usize);
+                let lo = bi * block_q;
+                let hi = (lo + block_q).min(n);
+                let tile = compute_q_tile(x, &panels[h], h, d_h, lo, hi, bias);
+                for (row_i, row) in tile.chunks_exact(d_h).enumerate() {
+                    let off = (lo + row_i) * d_out + h * d_h;
+                    // SAFETY: (request, head, block) triples are unique
+                    // across tasks, so the written rectangles are disjoint;
+                    // each `ys[r]` outlives the parallel section (ExecPool
+                    // joins before returning).
+                    unsafe {
+                        std::ptr::copy_nonoverlapping(row.as_ptr(), ptrs[r].0.add(off), d_h);
+                    }
+                }
+            }
+        });
+    }
+    ys.into_iter().map(|y| (y, plan.gemm_stats())).collect()
 }
 
 /// Seed symbol-decoding variant: decodes `F(S_c, i)` per tile. Kept as the
@@ -343,6 +430,35 @@ mod tests {
             let (pooled, s2) = gemm_q_pool(&x, &w, &plan, Some(&bias), &pool);
             assert_eq!(serial.data(), pooled.data(), "pool output must be bitwise equal");
             assert_eq!(s1.computed_tiles, s2.computed_tiles);
+        });
+    }
+
+    #[test]
+    fn batched_variant_is_bitwise_identical_per_request() {
+        let pool = crate::exec::ExecPool::new(3);
+        prop_check("gemm_q_batched[r] == gemm_q(xs[r])", 10, |rng| {
+            let n = 16 + rng.below(48);
+            let d_in = 4 + rng.below(12);
+            let heads = 1 + rng.below(4);
+            let d_h = 2 + rng.below(6);
+            let b = 4 + rng.below(8);
+            let batch = 1 + rng.below(4);
+            let t_q = n.div_ceil(b);
+            let xs: Vec<Tensor> = (0..batch).map(|_| randn(rng, &[n, d_in])).collect();
+            let w = randn(rng, &[d_in, heads * d_h]);
+            let bias: Vec<f32> = (0..heads * d_h).map(|i| i as f32 * 0.01).collect();
+            let masks: Vec<Vec<bool>> =
+                (0..heads).map(|_| rand_mask(rng, t_q, 0.6)).collect();
+            let syms = layer_syms_from_cache_masks(&masks, t_q, 1);
+            let plan = plan_of(&syms, t_q, b);
+            let refs: Vec<&Tensor> = xs.iter().collect();
+            let batched = gemm_q_batched(&refs, &w, &plan, Some(&bias), &pool);
+            assert_eq!(batched.len(), batch);
+            for (x, (yb, sb)) in xs.iter().zip(&batched) {
+                let (ys, ss) = gemm_q(x, &w, &plan, Some(&bias));
+                assert_eq!(ys.data(), yb.data(), "batched output must be bitwise equal");
+                assert_eq!(ss.computed_tiles, sb.computed_tiles);
+            }
         });
     }
 

@@ -35,14 +35,23 @@
 //!   `python/compile/aot.py` (the L2/L1 numerics oracle). Behind the
 //!   off-by-default `pjrt` feature: it needs the vendored `xla` crate,
 //!   which the offline build does not carry.
+//! * [`batch`] — the **batched generation subsystem**: a lockstep
+//!   `BatchedEngine` that advances a whole batch of requests per step with
+//!   cross-request plan sharing (one plan compile per (layer, refresh) per
+//!   batch; batched GEMM-Q / attention / GEMM-O entry points over
+//!   `batch × heads` and `batch × row-block` pool lanes, bitwise-identical
+//!   per request to a solo run), plus a continuous-batching
+//!   `BatchScheduler` with refresh-boundary admission.
 //! * [`coordinator`] — the serving layer: request queue, shape-bucketing
-//!   batcher, worker pool, latency/throughput accounting.
+//!   batcher, worker pool feeding per-worker batch schedulers,
+//!   latency/throughput accounting (p50/p95/p99).
 //! * [`metrics`] / [`report`] — the paper's quality + efficiency metrics and
 //!   the harness that regenerates every table and figure.
 //!
 //! See `DESIGN.md` for the full experiment index and every substitution made
 //! relative to the paper's A100/FLUX/Hunyuan testbed.
 
+pub mod batch;
 pub mod bench;
 pub mod cache;
 pub mod config;

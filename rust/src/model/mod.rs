@@ -88,25 +88,45 @@ impl MiniMMDiT {
         t: f64,
     ) -> Tensor {
         let cfg = &self.cfg;
-        assert_eq!(text_ids.len(), cfg.text_tokens);
-        assert_eq!(patches.shape(), &[cfg.vision_tokens(), cfg.patch_dim()]);
-
-        // Embeddings.
-        let mut txt = Tensor::zeros(&[cfg.text_tokens, cfg.dim]);
-        for (r, &id) in text_ids.iter().enumerate() {
-            assert!(id < cfg.vocab, "text id {id} out of vocab {}", cfg.vocab);
-            txt.row_mut(r).copy_from_slice(self.w.text_embed.row(id));
-        }
-        let mut img = blocks::linear(patches, &self.w.patch_w, &self.w.patch_b);
-        let cvec = blocks::timestep_conditioning(&self.w, cfg, t);
+        let (mut txt, mut img) = self.embed_streams(text_ids, patches);
+        let cvec = self.conditioning(t);
 
         // Transformer blocks.
         for (layer, bw) in self.w.blocks.iter().enumerate() {
             exec.block(layer, bw, cfg, &cvec, &mut txt, &mut img);
         }
 
-        // Final layer → per-patch velocity.
-        blocks::final_layer(&self.w, cfg, &cvec, &img)
+        self.decode(&cvec, &img)
+    }
+
+    /// Embed prompt ids + noisy patches into the two residual streams —
+    /// the shared prefix of every forward pass. Exposed so drivers that
+    /// run the block loop themselves (the batched engine advances many
+    /// requests layer-by-layer in lockstep) produce bit-identical streams.
+    pub fn embed_streams(&self, text_ids: &[usize], patches: &Tensor) -> (Tensor, Tensor) {
+        let cfg = &self.cfg;
+        assert_eq!(text_ids.len(), cfg.text_tokens);
+        assert_eq!(patches.shape(), &[cfg.vision_tokens(), cfg.patch_dim()]);
+        let mut txt = Tensor::zeros(&[cfg.text_tokens, cfg.dim]);
+        for (r, &id) in text_ids.iter().enumerate() {
+            assert!(id < cfg.vocab, "text id {id} out of vocab {}", cfg.vocab);
+            txt.row_mut(r).copy_from_slice(self.w.text_embed.row(id));
+        }
+        let img = blocks::linear(patches, &self.w.patch_w, &self.w.patch_b);
+        (txt, img)
+    }
+
+    /// Timestep-conditioning vector for diffusion time `t` (`[dim]`) —
+    /// depends only on `t`, so lockstep batch members at the same step
+    /// could share it (each slot keeps its own `t`, so it is per-slot).
+    pub fn conditioning(&self, t: f64) -> Vec<f32> {
+        blocks::timestep_conditioning(&self.w, &self.cfg, t)
+    }
+
+    /// Final layer: decode the vision stream into per-patch rectified-flow
+    /// velocities — the shared suffix of every forward pass.
+    pub fn decode(&self, cvec: &[f32], img: &Tensor) -> Tensor {
+        blocks::final_layer(&self.w, &self.cfg, cvec, img)
     }
 
     /// Dense forward (reference path).

@@ -22,10 +22,32 @@
 //!
 //! Hit/miss/eviction counters are kept inside the cache and surfaced per
 //! run through `RunStats` by the engine.
+//!
+//! **Batched serving** adds two layers on top:
+//!
+//! * **Epoch ids** ([`PlanCache::begin_epoch`] *allocates* a fresh id) —
+//!   the batched engine opens one epoch per lockstep step and tags every
+//!   lookup of that step with the id plus the requesting slot's *lane*.
+//!   A hit on an entry inserted under the **same epoch id by a different
+//!   lane** means another request of the same batch step just compiled it
+//!   ([`CacheOutcome::SharedHit`], counted in [`CacheStats::shared_hits`]).
+//!   Because ids are allocated from the cache's own counter, they stay
+//!   unique across engines sharing one cache: another worker opening its
+//!   epoch concurrently can neither steal nor spoil this batch's sharing
+//!   attribution, and a slot re-hitting its own compile (same lane) is a
+//!   plain hit. This is the counter that proves "one plan compile per
+//!   (layer, refresh) per batch": for a batch of B symbol-identical
+//!   requests every refresh produces exactly 1 miss and B−1 shared hits.
+//! * **[`SharedPlanCache`]** — a `Mutex`-guarded handle cloneable across
+//!   coordinator workers, so plan compiles are shared process-wide. The
+//!   compile closure runs *under the lock*: plan compilation is cheap
+//!   relative to a Dispatch step, and holding the lock is what makes the
+//!   counters exact (never two compiles for one key, no lost counts) under
+//!   `ExecPool` contention.
 
 use crate::symbols::LayerSymbols;
 use std::collections::{HashMap, VecDeque};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Cache accounting counters (monotonic over the cache's lifetime).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -33,6 +55,30 @@ pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
+    /// Hits on entries inserted *in the same epoch by a different lane* —
+    /// i.e. refreshes served by a plan another request of the same batch
+    /// step compiled. Always 0 for callers that never open an epoch.
+    pub shared_hits: u64,
+}
+
+/// Outcome of one [`PlanCache::get_or_compile_outcome`] lookup.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheOutcome {
+    /// Key absent: the compile closure ran.
+    Miss,
+    /// Key present from an earlier epoch / another engine's epoch / this
+    /// very lane.
+    Hit,
+    /// Key present *and* inserted under the caller's epoch id by a
+    /// different lane: another request in the same batched step paid for
+    /// this compile.
+    SharedHit,
+}
+
+impl CacheOutcome {
+    pub fn is_hit(&self) -> bool {
+        !matches!(self, CacheOutcome::Miss)
+    }
 }
 
 /// Build the cache key for a layer's symbols under a given block geometry.
@@ -67,10 +113,14 @@ pub fn symbol_key(syms: &LayerSymbols, geometry: &[usize]) -> Vec<u8> {
 /// Values are handed out as `Arc`s so the engine's per-layer state can
 /// hold a plan across Dispatch steps while the cache stays free to evict.
 pub struct PlanCache<V> {
-    map: HashMap<Vec<u8>, Arc<V>>,
+    /// Value plus the (epoch id, lane) it was inserted under
+    /// (epoch 0 = outside any epoch).
+    map: HashMap<Vec<u8>, (Arc<V>, u64, u64)>,
     /// Insertion order for FIFO eviction.
     order: VecDeque<Vec<u8>>,
     cap: usize,
+    /// Last allocated epoch id (ids start at 1; 0 is "no epoch").
+    epoch: u64,
     stats: CacheStats,
 }
 
@@ -81,16 +131,59 @@ impl<V> PlanCache<V> {
             map: HashMap::new(),
             order: VecDeque::new(),
             cap: cap.max(1),
+            epoch: 0,
             stats: CacheStats::default(),
         }
+    }
+
+    /// Allocate a fresh sharing-epoch id (the batched engine calls this
+    /// once per lockstep step and tags that step's lookups with it via
+    /// [`Self::get_or_compile_shared`]). Ids are unique per cache, so
+    /// concurrent engines sharing one cache cannot confuse each other's
+    /// sharing attribution.
+    pub fn begin_epoch(&mut self) -> u64 {
+        self.epoch += 1;
+        self.epoch
     }
 
     /// Look up `key`, compiling (and inserting) on miss. Returns the plan
     /// and whether this was a hit.
     pub fn get_or_compile(&mut self, key: &[u8], compile: impl FnOnce() -> V) -> (Arc<V>, bool) {
-        if let Some(v) = self.map.get(key) {
+        let (v, outcome) = self.get_or_compile_outcome(key, compile);
+        (v, outcome.is_hit())
+    }
+
+    /// [`Self::get_or_compile`] with a [`CacheOutcome`] (never
+    /// `SharedHit`: this entry point runs outside any epoch).
+    pub fn get_or_compile_outcome(
+        &mut self,
+        key: &[u8],
+        compile: impl FnOnce() -> V,
+    ) -> (Arc<V>, CacheOutcome) {
+        self.get_or_compile_shared(key, 0, 0, compile)
+    }
+
+    /// Epoch-tagged lookup: `epoch` is an id from [`Self::begin_epoch`]
+    /// (or 0 for "outside any epoch") and `lane` identifies the requesting
+    /// slot within that epoch. A hit on an entry inserted under the same
+    /// epoch id by a **different** lane reports
+    /// [`CacheOutcome::SharedHit`] (see the module docs).
+    pub fn get_or_compile_shared(
+        &mut self,
+        key: &[u8],
+        epoch: u64,
+        lane: u64,
+        compile: impl FnOnce() -> V,
+    ) -> (Arc<V>, CacheOutcome) {
+        if let Some((v, e, l)) = self.map.get(key) {
             self.stats.hits += 1;
-            return (Arc::clone(v), true);
+            let outcome = if epoch > 0 && *e == epoch && *l != lane {
+                self.stats.shared_hits += 1;
+                CacheOutcome::SharedHit
+            } else {
+                CacheOutcome::Hit
+            };
+            return (Arc::clone(v), outcome);
         }
         self.stats.misses += 1;
         let v = Arc::new(compile());
@@ -100,9 +193,9 @@ impl<V> PlanCache<V> {
                 self.stats.evictions += 1;
             }
         }
-        self.map.insert(key.to_vec(), Arc::clone(&v));
+        self.map.insert(key.to_vec(), (Arc::clone(&v), epoch, lane));
         self.order.push_back(key.to_vec());
-        (v, false)
+        (v, CacheOutcome::Miss)
     }
 
     /// Drop every cached plan (counters are preserved). Call when the
@@ -124,6 +217,85 @@ impl<V> PlanCache<V> {
     /// Lifetime hit/miss/eviction counters.
     pub fn stats(&self) -> CacheStats {
         self.stats
+    }
+}
+
+/// Thread-safe, cloneable handle to one [`PlanCache`] — the batched
+/// serving layer's **cross-request, cross-worker** compile cache.
+///
+/// Cloning shares the underlying cache (it is an `Arc<Mutex<..>>`), so a
+/// coordinator can hand every worker's `BatchedEngine` the same handle and
+/// a plan compiled for one request is reused by every other request — in
+/// the same batch (a [`CacheOutcome::SharedHit`] if within the same
+/// epoch), a later batch, or another worker's batch.
+///
+/// The compile closure runs **while holding the lock**. That serializes
+/// compiles, but it is what makes the guarantees exact under `ExecPool`
+/// contention: a key is compiled at most once process-wide, and
+/// `hits + misses` equals the number of lookups with no interleaving
+/// races. Plan compilation is cheap relative to the Dispatch work the plan
+/// then drives (see the fig6 compile-cost rows), so the critical section
+/// stays short.
+pub struct SharedPlanCache<V> {
+    inner: Arc<Mutex<PlanCache<V>>>,
+}
+
+impl<V> Clone for SharedPlanCache<V> {
+    fn clone(&self) -> Self {
+        SharedPlanCache { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl<V> SharedPlanCache<V> {
+    /// Shared cache holding at most `cap` compiled plans.
+    pub fn new(cap: usize) -> Self {
+        SharedPlanCache { inner: Arc::new(Mutex::new(PlanCache::new(cap))) }
+    }
+
+    /// Allocate a fresh sharing-epoch id (see [`PlanCache::begin_epoch`]).
+    /// Unique across every engine sharing this cache.
+    pub fn begin_epoch(&self) -> u64 {
+        self.inner.lock().unwrap().begin_epoch()
+    }
+
+    /// Look up `key`, compiling under the lock on miss (outside any
+    /// epoch — never reports `SharedHit`).
+    pub fn get_or_compile(
+        &self,
+        key: &[u8],
+        compile: impl FnOnce() -> V,
+    ) -> (Arc<V>, CacheOutcome) {
+        self.inner.lock().unwrap().get_or_compile_outcome(key, compile)
+    }
+
+    /// Epoch-tagged lookup (see [`PlanCache::get_or_compile_shared`]).
+    pub fn get_or_compile_shared(
+        &self,
+        key: &[u8],
+        epoch: u64,
+        lane: u64,
+        compile: impl FnOnce() -> V,
+    ) -> (Arc<V>, CacheOutcome) {
+        self.inner.lock().unwrap().get_or_compile_shared(key, epoch, lane, compile)
+    }
+
+    /// Lifetime hit/miss/eviction/shared counters.
+    pub fn stats(&self) -> CacheStats {
+        self.inner.lock().unwrap().stats()
+    }
+
+    /// Number of cached plans.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.lock().unwrap().is_empty()
+    }
+
+    /// Drop every cached plan (counters are preserved).
+    pub fn clear(&self) {
+        self.inner.lock().unwrap().clear();
     }
 }
 
@@ -183,6 +355,53 @@ mod tests {
         assert!(!hit, "evicted entry must recompile");
         let (_, hit) = cache.get_or_compile(&keys[2], || 2);
         assert!(hit, "newest entry must survive");
+    }
+
+    #[test]
+    fn epoch_distinguishes_shared_hits() {
+        let mut cache: PlanCache<u32> = PlanCache::new(4);
+        // Outside any epoch: hits are plain hits.
+        cache.get_or_compile(&[1], || 1);
+        let (_, o) = cache.get_or_compile_outcome(&[1], || unreachable!());
+        assert_eq!(o, CacheOutcome::Hit);
+        // Epoch e: lane 0 compiles; lanes 1 and 2 ride it (shared); lane 0
+        // re-hitting its own compile is a plain hit; the pre-epoch entry
+        // stays a plain hit.
+        let e = cache.begin_epoch();
+        let (_, o) = cache.get_or_compile_shared(&[2], e, 0, || 2);
+        assert_eq!(o, CacheOutcome::Miss);
+        let (_, o) = cache.get_or_compile_shared(&[2], e, 1, || unreachable!());
+        assert_eq!(o, CacheOutcome::SharedHit);
+        let (_, o) = cache.get_or_compile_shared(&[2], e, 2, || unreachable!());
+        assert_eq!(o, CacheOutcome::SharedHit);
+        let (_, o) = cache.get_or_compile_shared(&[2], e, 0, || unreachable!());
+        assert_eq!(o, CacheOutcome::Hit, "own compile is not a shared hit");
+        let (_, o) = cache.get_or_compile_shared(&[1], e, 1, || unreachable!());
+        assert_eq!(o, CacheOutcome::Hit, "pre-epoch entry is not shared");
+        // A different epoch id (another step, or another engine on a
+        // shared cache) sees only plain hits — even for lane values that
+        // collide with the inserting epoch's lanes.
+        let e2 = cache.begin_epoch();
+        assert_ne!(e, e2);
+        let (_, o) = cache.get_or_compile_shared(&[2], e2, 1, || unreachable!());
+        assert_eq!(o, CacheOutcome::Hit);
+        let s = cache.stats();
+        assert_eq!(s.shared_hits, 2);
+        assert_eq!(s.hits, 6);
+        assert_eq!(s.misses, 2);
+    }
+
+    #[test]
+    fn shared_cache_clones_share_state() {
+        let a: SharedPlanCache<u32> = SharedPlanCache::new(4);
+        let b = a.clone();
+        let (_, o) = a.get_or_compile(&[7], || 70);
+        assert_eq!(o, CacheOutcome::Miss);
+        let (v, o) = b.get_or_compile(&[7], || unreachable!("must share"));
+        assert_eq!(*v, 70);
+        assert_eq!(o, CacheOutcome::Hit);
+        assert_eq!(a.len(), 1);
+        assert_eq!(b.stats().misses, 1);
     }
 
     #[test]

@@ -1,0 +1,347 @@
+//! Integration tests for the batched generation subsystem
+//! (`rust/src/batch/`): bitwise equivalence of batched vs solo execution,
+//! the one-compile-per-(layer, refresh)-per-batch invariant, refresh-
+//! boundary admission, scheduler bucketing, and `PlanCache` exactness
+//! under concurrent batched access.
+
+use flashomni::batch::{BatchScheduler, BatchedEngine};
+use flashomni::config::{ModelConfig, SparsityConfig};
+use flashomni::diffusion::plan_steps;
+use flashomni::engine::{DiTEngine, Policy, RunStats};
+use flashomni::exec::ExecPool;
+use flashomni::model::{weights::Weights, MiniMMDiT};
+use flashomni::plan::cache::{CacheOutcome, SharedPlanCache};
+use flashomni::trace::{caption_ids, Request};
+use std::time::Instant;
+
+fn tiny_model(layers: usize, seed: u64) -> MiniMMDiT {
+    let cfg = ModelConfig {
+        dim: 32,
+        heads: 2,
+        layers,
+        text_tokens: 8,
+        patch_h: 4,
+        patch_w: 4,
+        patch_size: 2,
+        channels: 3,
+        mlp_ratio: 2,
+        vocab: 256,
+    };
+    MiniMMDiT::new(cfg.clone(), Weights::random(&cfg, seed))
+}
+
+fn fo_policy(interval: usize, warmup: usize) -> Policy {
+    Policy::flashomni(SparsityConfig {
+        tau_q: 0.6,
+        tau_kv: 0.3,
+        interval,
+        order: 1,
+        s_q: 0.0,
+        block_q: 8,
+        block_k: 8,
+        pool: 1,
+        warmup,
+        ramp_steps: 1,
+    })
+}
+
+fn request(id: u64, scene: usize, seed: u64, steps: usize, text_tokens: usize) -> Request {
+    Request {
+        id,
+        scene,
+        prompt_ids: caption_ids(scene, text_tokens),
+        seed,
+        steps,
+        arrival_s: 0.0,
+    }
+}
+
+/// Solo reference: run each request through a fresh single-request engine.
+fn solo_runs(
+    model: &MiniMMDiT,
+    policy: &Policy,
+    reqs: &[Request],
+) -> Vec<(flashomni::tensor::Tensor, RunStats)> {
+    reqs.iter()
+        .map(|r| {
+            let mut engine = DiTEngine::new(model.clone(), policy.clone(), 8, 8);
+            let res = engine.generate(&r.prompt_ids, r.seed, r.steps);
+            (res.image, res.stats)
+        })
+        .collect()
+}
+
+/// Run requests through one batched engine (all admitted up front) and
+/// return results sorted by request id.
+fn batched_run(
+    model: &MiniMMDiT,
+    policy: &Policy,
+    reqs: &[Request],
+) -> (Vec<flashomni::batch::BatchResult>, BatchedEngine) {
+    let mut engine = BatchedEngine::new(model.clone(), policy.clone(), 8, 8, reqs.len());
+    for r in reqs {
+        assert!(engine.can_admit());
+        engine.admit(r.clone(), Instant::now());
+    }
+    let mut out = engine.run_to_completion();
+    out.sort_by_key(|r| r.id);
+    (out, engine)
+}
+
+fn assert_same_compute(batched: &RunStats, solo: &RunStats) {
+    assert_eq!(batched.attn_computed_pairs, solo.attn_computed_pairs);
+    assert_eq!(batched.attn_total_pairs, solo.attn_total_pairs);
+    assert_eq!(batched.gq_computed, solo.gq_computed);
+    assert_eq!(batched.gq_total, solo.gq_total);
+    assert_eq!(batched.go_computed, solo.go_computed);
+    assert_eq!(batched.go_total, solo.go_total);
+    assert_eq!(batched.cached_layer_steps, solo.cached_layer_steps);
+    assert_eq!(batched.total_layer_steps, solo.total_layer_steps);
+    assert_eq!(batched.per_step_density, solo.per_step_density);
+}
+
+#[test]
+fn batched_flashomni_bitwise_equals_solo() {
+    // Distinct prompts AND seeds: batch members emit different symbols, so
+    // the grouped fast path, the shared cache, and the serial fallback all
+    // interleave — every request must still match its solo run bit-for-bit.
+    let model = tiny_model(2, 11);
+    let policy = fo_policy(3, 2);
+    let reqs: Vec<Request> = (0..4)
+        .map(|i| request(i, 3 * i as usize + 1, 100 + i, 9, model.cfg.text_tokens))
+        .collect();
+    let solo = solo_runs(&model, &policy, &reqs);
+    let (batched, _) = batched_run(&model, &policy, &reqs);
+    assert_eq!(batched.len(), 4);
+    for (b, (img, stats)) in batched.iter().zip(&solo) {
+        assert_eq!(&b.image, img, "request {} image differs from solo run", b.id);
+        assert_same_compute(&b.stats, stats);
+    }
+}
+
+#[test]
+fn batched_identical_prompts_share_and_still_match() {
+    // Symbol-identical burst: maximal sharing, still bitwise-equal output.
+    let model = tiny_model(2, 7);
+    let policy = fo_policy(3, 1);
+    let reqs: Vec<Request> =
+        (0..3).map(|i| request(i, 5, 42, 7, model.cfg.text_tokens)).collect();
+    let solo = solo_runs(&model, &policy, &reqs[..1]);
+    let (batched, _) = batched_run(&model, &policy, &reqs);
+    for b in &batched {
+        assert_eq!(b.image, solo[0].0, "shared-prompt request {} differs", b.id);
+    }
+}
+
+#[test]
+fn batched_other_policies_bitwise_equal_solo() {
+    let model = tiny_model(2, 13);
+    // FORA: whole-block caching (CachedBlock path inside the batch).
+    // SpargeAttn: per-step masks (always the serial fallback inside the
+    // batch). Full: dense path.
+    for policy in [Policy::fora(2, 1), Policy::sparge(0.2, 0.2, 1), Policy::full()] {
+        let reqs: Vec<Request> = (0..3)
+            .map(|i| request(i, 7 * i as usize + 2, 50 + i, 6, model.cfg.text_tokens))
+            .collect();
+        let solo = solo_runs(&model, &policy, &reqs);
+        let (batched, _) = batched_run(&model, &policy, &reqs);
+        for (b, (img, stats)) in batched.iter().zip(&solo) {
+            assert_eq!(&b.image, img, "policy {} request {} differs", policy.name(), b.id);
+            assert_same_compute(&b.stats, stats);
+        }
+    }
+}
+
+#[test]
+fn one_plan_compile_per_layer_refresh_per_batch() {
+    // B symbol-identical requests: every (layer, refresh) must cost
+    // exactly one compile (miss), with the other B−1 requests riding it as
+    // same-epoch shared hits — the fig12 invariant.
+    let layers = 2;
+    let steps = 10;
+    let (warmup, interval) = (2, 3);
+    let model = tiny_model(layers, 11);
+    let policy = fo_policy(interval, warmup);
+    let batch = 4u64;
+    let reqs: Vec<Request> =
+        (0..batch).map(|i| request(i, 9, 77, steps, model.cfg.text_tokens)).collect();
+    let (batched, engine) = batched_run(&model, &policy, &reqs);
+
+    // A FlashOmni slot refreshes symbols at every Full (Warmup/Update) step.
+    let full_steps =
+        plan_steps(steps, warmup.min(steps), interval).iter().filter(|k| !k.is_sparse()).count();
+    let refresh_points = (layers * full_steps) as u64;
+    // Sanity on the workload: a solo run compiles once per (layer,
+    // refresh) with zero hits — every refresh emits distinct symbols, so
+    // the sharing arithmetic below is exact.
+    let solo = solo_runs(&model, &policy, &reqs[..1]).remove(0).1;
+    assert_eq!(solo.plan_cache_misses, refresh_points, "degenerate workload: colliding refreshes");
+    assert_eq!(solo.plan_cache_hits, 0);
+    let misses: u64 = batched.iter().map(|b| b.stats.plan_cache_misses).sum();
+    let hits: u64 = batched.iter().map(|b| b.stats.plan_cache_hits).sum();
+    let shared: u64 = batched.iter().map(|b| b.stats.plan_cache_shared).sum();
+    assert_eq!(misses, refresh_points, "exactly one compile per (layer, refresh) per batch");
+    assert_eq!(misses + hits, batch * refresh_points, "one lookup per slot per refresh");
+    assert_eq!(shared, (batch - 1) * refresh_points, "everyone else rides the shared compile");
+    let cs = engine.plan_cache_stats();
+    assert_eq!(cs.misses, refresh_points);
+    assert_eq!(cs.shared_hits, shared);
+}
+
+#[test]
+fn admission_only_at_refresh_boundaries() {
+    let model = tiny_model(1, 5);
+    let policy = fo_policy(3, 1); // kinds: W U D D U D D ...
+    let steps = 8;
+    let mut sched =
+        BatchScheduler::new(BatchedEngine::new(model.clone(), policy.clone(), 8, 8, 4));
+    sched.submit(request(0, 1, 9, steps, model.cfg.text_tokens));
+    let mut done = sched.step(); // runs step 0 (Warmup)
+    assert_eq!(sched.active(), 1);
+    // Next step is Update (full) → boundary: a new request joins now.
+    sched.submit(request(1, 2, 10, steps, model.cfg.text_tokens));
+    done.extend(sched.step());
+    assert_eq!(sched.active(), 2, "admitted at the Update boundary");
+    // Mid-window submission must wait: the cohort's next steps are
+    // Dispatch, so the request stays pending.
+    sched.submit(request(2, 3, 11, steps, model.cfg.text_tokens));
+    done.extend(sched.step());
+    assert_eq!(sched.active(), 2, "mid-window arrival must stay pending");
+    assert_eq!(sched.pending_len(), 1);
+    // Drain; everyone gets served exactly once.
+    done.extend(sched.run_to_completion());
+    let mut ids: Vec<u64> = done.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, vec![0, 1, 2]);
+    // Late admits are bitwise-identical to solo runs too.
+    let solo = solo_runs(&model, &policy, &[request(2, 3, 11, steps, model.cfg.text_tokens)]);
+    let late = done.iter().find(|r| r.id == 2).unwrap();
+    assert_eq!(late.image, solo[0].0);
+}
+
+#[test]
+fn scheduler_buckets_by_step_count() {
+    let model = tiny_model(1, 3);
+    let policy = Policy::full();
+    let engine = BatchedEngine::new(model.clone(), policy, 8, 8, 4);
+    let mut sched = BatchScheduler::new(engine);
+    for (id, steps) in [(0u64, 4usize), (1, 4), (2, 6), (3, 4)] {
+        sched.submit(request(id, id as usize, id, steps, model.cfg.text_tokens));
+    }
+    // First cohort: ids 0 and 1 (steps 4); id 2 (steps 6) blocks id 3.
+    let _ = sched.step();
+    assert_eq!(sched.active(), 2);
+    assert_eq!(sched.bucket_steps(), Some(4));
+    assert_eq!(sched.pending_len(), 2);
+    let done = sched.run_to_completion();
+    let mut ids: Vec<u64> = done.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, vec![0, 1, 2, 3]);
+    for r in &done {
+        assert!(r.image.data().iter().all(|x| x.is_finite()));
+        assert!(r.latency_s >= r.exec_s);
+    }
+}
+
+#[test]
+fn zero_step_requests_are_served() {
+    // A steps == 0 request must retire immediately with the initial-noise
+    // image (solo `generate(steps=0)` semantics) instead of panicking the
+    // engine, and must not wedge the scheduler or later cohorts.
+    let model = tiny_model(1, 3);
+    let policy = Policy::full();
+    let mut sched =
+        BatchScheduler::new(BatchedEngine::new(model.clone(), policy.clone(), 8, 8, 2));
+    sched.submit(request(0, 1, 5, 0, model.cfg.text_tokens));
+    sched.submit(request(1, 2, 6, 3, model.cfg.text_tokens));
+    let done = sched.run_to_completion();
+    assert!(sched.is_idle());
+    let mut ids: Vec<u64> = done.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, vec![0, 1]);
+    let solo = solo_runs(&model, &policy, &[request(0, 1, 5, 0, model.cfg.text_tokens)]);
+    let zero = done.iter().find(|r| r.id == 0).unwrap();
+    assert_eq!(zero.image, solo[0].0, "zero-step image must be the initial noise");
+    assert_eq!(zero.stats.steps, 0);
+}
+
+#[test]
+fn plan_cache_counters_exact_under_pool_contention() {
+    // Hammer one SharedPlanCache from several threads whose compile
+    // closures themselves run parallel sections on the global ExecPool
+    // (the situation inside a batched engine under load). Counter
+    // invariants must hold exactly.
+    let cache: SharedPlanCache<Vec<usize>> = SharedPlanCache::new(8);
+    let threads = 4;
+    let lookups_per_thread = 200;
+    let key_space = 16u8;
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let cache = cache.clone();
+            scope.spawn(move || {
+                let pool = ExecPool::global();
+                for i in 0..lookups_per_thread {
+                    let key = [((i + t * 7) % key_space as usize) as u8];
+                    let (v, _) = cache.get_or_compile(&key, || {
+                        // Simulated plan compile doing pool work.
+                        pool.parallel_map_indexed(8, |j| j * (key[0] as usize + 1))
+                    });
+                    assert_eq!(v[3], 3 * (key[0] as usize + 1));
+                }
+            });
+        }
+    });
+    let s = cache.stats();
+    assert_eq!(
+        s.hits + s.misses,
+        (threads * lookups_per_thread) as u64,
+        "every lookup is exactly one hit or one miss"
+    );
+    // Every miss inserted an entry; inserts − evictions = current size.
+    assert_eq!(s.misses - s.evictions, cache.len() as u64);
+    assert!(cache.len() <= 8);
+    assert!(s.misses >= key_space as u64, "each key must compile at least once");
+    assert_eq!(s.shared_hits, 0, "no epochs opened → no shared hits");
+}
+
+#[test]
+fn shared_cache_eviction_is_fifo() {
+    let cache: SharedPlanCache<u8> = SharedPlanCache::new(2);
+    cache.get_or_compile(&[0], || 0);
+    cache.get_or_compile(&[1], || 1);
+    cache.get_or_compile(&[2], || 2); // evicts key 0 (FIFO)
+    assert_eq!(cache.stats().evictions, 1);
+    let (_, o) = cache.get_or_compile(&[1], || unreachable!("1 must survive"));
+    assert_eq!(o, CacheOutcome::Hit);
+    let (_, o) = cache.get_or_compile(&[2], || unreachable!("2 must survive"));
+    assert_eq!(o, CacheOutcome::Hit);
+    let (_, o) = cache.get_or_compile(&[0], || 0);
+    assert_eq!(o, CacheOutcome::Miss, "FIFO-evicted key must recompile");
+}
+
+#[test]
+fn cross_engine_plan_sharing_via_shared_cache() {
+    // Two batched engines (two "workers") sharing one cache: the second
+    // engine's identical request hits on every refresh and compiles
+    // nothing — cross-worker plan sharing.
+    let model = tiny_model(2, 11);
+    let policy = fo_policy(3, 1);
+    let cache: SharedPlanCache<flashomni::engine::LayerPlans> = SharedPlanCache::new(64);
+    let req = request(0, 4, 21, 7, model.cfg.text_tokens);
+
+    let mut e1 = BatchedEngine::new(model.clone(), policy.clone(), 8, 8, 1);
+    e1.set_plan_cache(cache.clone());
+    e1.admit(req.clone(), Instant::now());
+    let r1 = e1.run_to_completion().remove(0);
+    assert!(r1.stats.plan_cache_misses > 0);
+
+    let mut e2 = BatchedEngine::new(model.clone(), policy.clone(), 8, 8, 1);
+    e2.set_plan_cache(cache.clone());
+    let mut req2 = req.clone();
+    req2.id = 1;
+    e2.admit(req2, Instant::now());
+    let r2 = e2.run_to_completion().remove(0);
+    assert_eq!(r2.stats.plan_cache_misses, 0, "second worker must reuse every plan");
+    assert!(r2.stats.plan_cache_hits > 0);
+    assert_eq!(r1.image, r2.image);
+}
