@@ -3,7 +3,8 @@
 //! long sequence) where the FLOP mix matches HunyuanVideo's regime
 //! (attention ≫ projections), plus the trained mini model for reference.
 //!
-//! Env: FO_SEQ_VIDEO (default 2048), FO_STEPS (default 10).
+//! Env: FO_SEQ_VIDEO (default 1936), FO_STEPS (default 10) — see
+//! `docs/benchmarks.md` for the full knob index.
 
 use flashomni::config::{ModelConfig, SparsityConfig};
 use flashomni::engine::{DiTEngine, Policy};

@@ -10,6 +10,7 @@
 //! persistent `ExecPool` (8 heads) and emits a machine-readable
 //! `BENCH_fig10.json` perf trajectory like fig6.
 //! Env: FO_SEQS (default "2048,4096"), FO_BUDGET (default 0.3).
+//! Knobs + the `BENCH_fig10.json` schema: `docs/benchmarks.md`.
 
 use flashomni::bench::{json_row, write_bench_json, write_csv, Bencher, Measurement};
 use flashomni::exec::ExecPool;

@@ -10,6 +10,7 @@
 //! machine-readable `BENCH_fig11.json` perf trajectory like fig6.
 //! Env: FO_BUDGET; FO_MAX_SEQ skips resolutions above the given token
 //! length (CI smoke runs set it low to keep the bench to seconds).
+//! Knobs + the `BENCH_fig11.json` schema: `docs/benchmarks.md`.
 
 use flashomni::bench::{json_row, write_bench_json, write_csv, Bencher, Measurement};
 use flashomni::exec::ExecPool;

@@ -23,6 +23,7 @@
 //! Env: FO_REQUESTS (requests per run, default 8), FO_BATCH (max batch
 //! size, default 8), FO_STEPS (denoising steps, default 8), FO_LAYERS
 //! (default 2), FO_CHUNK (tile-loop chunk override, recorded in header).
+//! Knobs + the `BENCH_fig12.json` schema: `docs/benchmarks.md`.
 
 use flashomni::batch::{BatchScheduler, BatchedEngine};
 use flashomni::bench::write_bench_json;

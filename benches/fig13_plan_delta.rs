@@ -1,0 +1,175 @@
+//! Figure 13 (repo extension) — **incremental plan recompile** latency:
+//! Update-path symbol→plan compilation vs. the fraction of row-groups
+//! whose symbols flipped since the previous refresh.
+//!
+//! Slowly-drifting masks are the common case for caching-style policies
+//! (and per-step mask policies on slowly-evolving activations): between
+//! refreshes most rows keep their `S_c`/`S_s` bytes, so recompiling the
+//! whole layer wastes decode work. The delta path diffs the packed symbol
+//! bytes against the cached plan's key (`PlanDelta::between`) and rebuilds
+//! only the changed row-groups (`SparsePlan::apply_delta`), structurally
+//! sharing the rest.
+//!
+//! For flip fractions {0%, 1%, 10%, 50%, 100%} this bench times four
+//! compile paths on one layer's symbols — full/delta × serial/pool (the
+//! pool variants fan per-head work over the shared `ExecPool`) — and
+//! asserts the delta output equals the full recompile bitwise before
+//! timing. The delta rows *include* the key-diff cost: they measure the
+//! real Update-path alternative to a full compile.
+//!
+//! Emits `BENCH_fig13.json` (row schema and env knobs documented in
+//! `docs/benchmarks.md`): `case` is `{full,delta}_{serial,pool}`, the
+//! shared-schema `sparsity` column carries the flip fraction, and
+//! `speedup` is that flip fraction's `full_serial` median over the row's
+//! median.
+//!
+//! Env: FO_SEQ (sequence length, default 4096), FO_HEADS (default 8),
+//! FO_BUDGET (seconds per measurement, default 0.3), FO_CHUNK (tile-chunk
+//! override, recorded in the header). Knobs + the `BENCH_fig13.json`
+//! schema: `docs/benchmarks.md`.
+
+use flashomni::bench::{json_row, print_table, write_bench_json, Bencher, Measurement};
+use flashomni::exec::ExecPool;
+use flashomni::plan::cache::symbol_key;
+use flashomni::plan::{DecodeMode, PlanDelta, SparsePlan};
+use flashomni::symbols::{HeadSymbols, LayerSymbols};
+use flashomni::util::rng::Pcg32;
+use std::hint::black_box;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+type Masks = Vec<(Vec<bool>, Vec<bool>)>;
+
+fn pack(masks: &Masks, kg: usize) -> LayerSymbols {
+    LayerSymbols {
+        heads: masks
+            .iter()
+            .map(|(m_c, m_s)| HeadSymbols::from_masks(m_c, m_s, kg, 1))
+            .collect(),
+    }
+}
+
+/// Flip `flips` distinct, evenly-spread row-groups per head: toggle the
+/// group's `S_c` bit and re-randomize its `S_s` row.
+fn flip(rng: &mut Pcg32, base: &Masks, t: usize, flips: usize) -> Masks {
+    let mut out = base.clone();
+    for (m_c, m_s) in out.iter_mut() {
+        for i in 0..flips {
+            let g = i * t / flips.max(1);
+            m_c[g] = !m_c[g];
+            for j in 0..t {
+                m_s[g * t + j] = rng.f64() >= 0.5;
+            }
+        }
+    }
+    out
+}
+
+fn main() {
+    let seq = env_usize("FO_SEQ", 4096);
+    let heads = env_usize("FO_HEADS", 8);
+    let block = 16;
+    let t = seq.div_ceil(block);
+    let bencher = Bencher { warmup: 1, min_iters: 3, budget_s: env_f64("FO_BUDGET", 0.3) };
+    let exec = ExecPool::global();
+    let mut rng = Pcg32::seeded(0xf13);
+
+    // Base refresh: ~30% cached rows, ~50% KV skips on live rows.
+    let base_masks: Masks = (0..heads)
+        .map(|_| {
+            let m_c: Vec<bool> = (0..t).map(|_| rng.f64() >= 0.3).collect();
+            let m_s: Vec<bool> = (0..t * t).map(|_| rng.f64() >= 0.5).collect();
+            (m_c, m_s)
+        })
+        .collect();
+    let base_syms = pack(&base_masks, t);
+    let geometry = [t, t, block, block];
+    let base_key = symbol_key(&base_syms, &geometry);
+    let base_plan = SparsePlan::compile(&base_syms, t, t, block, block, DecodeMode::RowCached);
+
+    println!(
+        "# Figure 13 — incremental plan recompile: seq {seq}, {heads} heads, t_q {t}, \
+         exec pool {} threads",
+        exec.size()
+    );
+
+    let mut rows: Vec<(Measurement, Option<f64>)> = Vec::new();
+    let mut json_rows: Vec<String> = Vec::new();
+    for frac in [0.0, 0.01, 0.1, 0.5, 1.0] {
+        let flips = ((frac * t as f64).ceil() as usize).min(t);
+        let new_masks = flip(&mut rng, &base_masks, t, flips);
+        let new_syms = pack(&new_masks, t);
+        let new_key = symbol_key(&new_syms, &geometry);
+        let delta = PlanDelta::between(&base_key, &new_key, &new_syms, geometry.len())
+            .expect("same geometry must be row-diffable");
+
+        // Correctness gate before timing anything.
+        let full = SparsePlan::compile(&new_syms, t, t, block, block, DecodeMode::RowCached);
+        let inc = base_plan.apply_delta(&delta, &new_syms, DecodeMode::RowCached);
+        assert_eq!(inc, full, "delta recompile must be bitwise-identical to full");
+        drop(inc);
+
+        let full_serial = bencher.run(&format!("full_serial flip={frac}"), || {
+            black_box(SparsePlan::compile(
+                &new_syms,
+                t,
+                t,
+                block,
+                block,
+                DecodeMode::RowCached,
+            ));
+        });
+        let delta_serial = bencher.run(&format!("delta_serial flip={frac}"), || {
+            let d = PlanDelta::between(&base_key, &new_key, &new_syms, geometry.len())
+                .expect("diffable");
+            black_box(base_plan.apply_delta(&d, &new_syms, DecodeMode::RowCached));
+        });
+        let full_pool = bencher.run(&format!("full_pool flip={frac}"), || {
+            black_box(SparsePlan::compile_on(
+                &new_syms,
+                t,
+                t,
+                block,
+                block,
+                DecodeMode::RowCached,
+                &exec,
+            ));
+        });
+        let delta_pool = bencher.run(&format!("delta_pool flip={frac}"), || {
+            let d = PlanDelta::between(&base_key, &new_key, &new_syms, geometry.len())
+                .expect("diffable");
+            black_box(base_plan.apply_delta_on(&d, &new_syms, DecodeMode::RowCached, &exec));
+        });
+
+        for m in [&full_serial, &delta_serial, &full_pool, &delta_pool] {
+            let speedup = full_serial.median_s / m.median_s;
+            let case = m.name.split_whitespace().next().unwrap_or("?").to_string();
+            json_rows.push(json_row("plan_update", &case, frac, m, speedup));
+            rows.push((m.clone(), Some(speedup)));
+        }
+    }
+    print_table("fig13 — plan Update/recompile latency vs rows flipped", &rows);
+
+    match write_bench_json(
+        "BENCH_fig13.json",
+        "fig13_plan_delta",
+        &[
+            ("seq", seq as f64),
+            ("heads", heads as f64),
+            ("t_q", t as f64),
+            ("block", block as f64),
+            ("exec_pool_threads", exec.size() as f64),
+            ("fo_chunk", flashomni::exec::tile_chunk_override().unwrap_or(0) as f64),
+        ],
+        &json_rows,
+    ) {
+        Ok(()) => println!("\nwrote BENCH_fig13.json ({} rows)", json_rows.len()),
+        Err(e) => eprintln!("could not write BENCH_fig13.json: {e}"),
+    }
+}

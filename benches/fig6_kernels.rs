@@ -21,6 +21,7 @@
 //!
 //! Env: FO_SEQ (default 2048), FO_BUDGET seconds/case (default 0.4),
 //! FO_CHUNK (tile-loop chunk override; recorded in the JSON header).
+//! Knobs + the `BENCH_fig6.json` schema: `docs/benchmarks.md`.
 
 use flashomni::bench::{json_row, print_table, write_bench_json, write_csv, Bencher, Measurement};
 use flashomni::exec::ExecPool;

@@ -9,6 +9,7 @@
 //! machine-readable `BENCH_fig8.json` perf trajectory like fig6.
 //! Env: FO_SEQ (default 2048), FO_BUDGET (default 0.4), FO_CHUNK
 //! (tile-loop chunk override; recorded in the JSON header).
+//! Knobs + the `BENCH_fig8.json` schema: `docs/benchmarks.md`.
 
 use flashomni::bench::{json_row, write_bench_json, write_csv, Bencher, Measurement};
 use flashomni::exec::ExecPool;

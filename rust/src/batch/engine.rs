@@ -5,7 +5,7 @@
 use crate::cache::combine_bias_stack;
 use crate::diffusion::{euler_step, initial_noise, plan_steps, time_grid, unpatchify, StepKind};
 use crate::engine::{
-    add_row_bias, compile_plans, plan_key, post_attention_preprojected, project_kv_joint,
+    add_row_bias, build_plans, plan_key, post_attention_preprojected, project_kv_joint,
     sparse_step_flops, DiTEngine, EngineExec, Geometry, LayerPanels, LayerPlans, LayerState,
     PlanProvider, Policy, RunStats, PLAN_CACHE_CAP,
 };
@@ -27,11 +27,14 @@ use std::time::Instant;
 /// A request that finished inside the batched engine.
 #[derive(Clone, Debug)]
 pub struct BatchResult {
+    /// Request id (as submitted).
     pub id: u64,
+    /// Scene/prompt id of the request.
     pub scene: usize,
     /// `[H × W × C]` image, bitwise-identical to a solo `DiTEngine` run
     /// of the same request.
     pub image: Tensor,
+    /// Per-request run statistics (FLOPs, densities, plan-cache outcomes).
     pub stats: RunStats,
     /// Seconds between enqueue and admission into the batch.
     pub queue_s: f64,
@@ -73,11 +76,17 @@ struct StepCtx {
 /// [`PlanProvider`] over the process-shared compile cache, tagged with
 /// the batch step's epoch id and the requesting slot's lane so the cache
 /// can attribute same-step cross-request sharing exactly (even when other
-/// engines hammer the same cache concurrently).
+/// engines hammer the same cache concurrently). On a miss, the slot's
+/// previous plan set (its per-layer `base`) is offered for an incremental
+/// recompile — so a batch whose symbols drift by a few rows between
+/// refreshes pays one *delta* compile (plus B−1 shared hits) instead of a
+/// full one.
 struct SharedPlanProvider<'c> {
     cache: &'c SharedPlanCache<LayerPlans>,
     epoch: u64,
     lane: u64,
+    /// Delta compilation on a miss (mirrors `DiTEngine::set_delta_compile`).
+    delta: bool,
 }
 
 impl PlanProvider for SharedPlanProvider<'_> {
@@ -85,10 +94,12 @@ impl PlanProvider for SharedPlanProvider<'_> {
         &mut self,
         syms: &LayerSymbols,
         geo: &Geometry,
+        base: Option<&LayerPlans>,
     ) -> (Arc<LayerPlans>, CacheOutcome) {
         let key = plan_key(syms, geo);
-        self.cache.get_or_compile_shared(&key, self.epoch, self.lane, || {
-            compile_plans(syms, geo)
+        let base = if self.delta { base } else { None };
+        self.cache.get_or_build_shared(&key, self.epoch, self.lane, || {
+            build_plans(syms, geo, key.clone(), base)
         })
     }
 }
@@ -103,6 +114,9 @@ pub struct BatchedEngine {
     cache: SharedPlanCache<LayerPlans>,
     slots: Vec<Slot>,
     max_batch: usize,
+    /// Delta-compile refreshes that miss the shared cache but row-diff
+    /// against the slot's previous plan (on by default).
+    delta_enabled: bool,
 }
 
 impl BatchedEngine {
@@ -138,6 +152,7 @@ impl BatchedEngine {
             cache: SharedPlanCache::new(PLAN_CACHE_CAP),
             slots: Vec::new(),
             max_batch: max_batch.max(1),
+            delta_enabled: true,
         }
     }
 
@@ -156,7 +171,14 @@ impl BatchedEngine {
             cache: SharedPlanCache::new(PLAN_CACHE_CAP),
             slots: Vec::new(),
             max_batch: max_batch.max(1),
+            delta_enabled: true,
         }
+    }
+
+    /// Enable/disable incremental plan recompiles for this batch (on by
+    /// default; see `DiTEngine::set_delta_compile`).
+    pub fn set_delta_compile(&mut self, on: bool) {
+        self.delta_enabled = on;
     }
 
     /// Swap the execution pool every kernel of this batch dispatches on.
@@ -164,6 +186,7 @@ impl BatchedEngine {
         self.exec = pool;
     }
 
+    /// The pool this batch dispatches kernels on.
     pub fn exec_pool(&self) -> &Arc<ExecPool> {
         &self.exec
     }
@@ -174,6 +197,7 @@ impl BatchedEngine {
         self.cache = cache;
     }
 
+    /// The (possibly shared) plan-compile cache handle.
     pub fn plan_cache(&self) -> &SharedPlanCache<LayerPlans> {
         &self.cache
     }
@@ -188,6 +212,7 @@ impl BatchedEngine {
         self.slots.len()
     }
 
+    /// Maximum number of concurrently in-flight requests.
     pub fn max_batch(&self) -> usize {
         self.max_batch
     }
@@ -304,7 +329,8 @@ impl BatchedEngine {
 
         // ---- Phase B: layer loop, grouping by shared plan Arc. ----
         {
-            let BatchedEngine { model, geo, panels, exec, cache, slots, .. } = self;
+            let BatchedEngine { model, geo, panels, exec, cache, slots, delta_enabled, .. } =
+                self;
             let model: &MiniMMDiT = model;
             let exec: &Arc<ExecPool> = exec;
             for layer in 0..cfg.layers {
@@ -334,8 +360,12 @@ impl BatchedEngine {
                 for i in singles {
                     let slot = &mut slots[i];
                     let ctx = &mut ctxs[i];
-                    let mut provider =
-                        SharedPlanProvider { cache: &*cache, epoch, lane: i as u64 };
+                    let mut provider = SharedPlanProvider {
+                        cache: &*cache,
+                        epoch,
+                        lane: i as u64,
+                        delta: *delta_enabled,
+                    };
                     let mut block_exec = EngineExec {
                         policy: &mut slot.policy,
                         geo: *geo,

@@ -28,7 +28,12 @@
 //!   sharing *epoch* per lockstep step, so
 //!   [`RunStats::plan_cache_shared`](crate::engine::RunStats) proves the
 //!   "one plan compile per (layer, refresh) per batch" invariant that
-//!   `benches/fig12_batched_serving.rs` measures.
+//!   `benches/fig12_batched_serving.rs` measures. Misses whose symbols
+//!   row-diff against the slot's previous plan are served by an
+//!   **incremental recompile** ([`crate::plan::PlanDelta`] +
+//!   [`SparsePlan::apply_delta`](crate::plan::SparsePlan::apply_delta)):
+//!   a batch whose masks drift by a few rows between refreshes pays one
+//!   delta compile (plus B−1 shared hits) instead of a full compile.
 //! * [`BatchScheduler`] — continuous batching over a pending queue:
 //!   requests are bucketed by step count (the refresh schedule; geometry
 //!   and policy are engine-level constants), late arrivals are admitted
@@ -42,6 +47,8 @@
 //! across workers.
 //!
 //! [`DiTEngine`]: crate::engine::DiTEngine
+
+#![warn(missing_docs)]
 
 mod engine;
 mod scheduler;

@@ -30,6 +30,7 @@ pub struct BatchScheduler {
 }
 
 impl BatchScheduler {
+    /// Scheduler over one batched engine with an empty pending queue.
     pub fn new(engine: BatchedEngine) -> Self {
         BatchScheduler { engine, pending: VecDeque::new() }
     }

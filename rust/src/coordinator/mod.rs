@@ -7,7 +7,7 @@
 //! queue, and each worker **feeds a continuous-batching
 //! [`BatchScheduler`](crate::batch::BatchScheduler)** instead of running
 //! one request per engine step. A worker claims a shape bucket (same step
-//! count) from the queue front via [`claim_batch`], advances its batch one
+//! count) from the queue front via `claim_batch`, advances its batch one
 //! lockstep step at a time, tops the batch up with front-of-queue
 //! bucket-compatible late arrivals between steps (admitted at refresh
 //! boundaries by the scheduler), and emits per-request latency breakdowns

@@ -16,7 +16,13 @@
 //!    [`PlanCache`] keyed by the packed symbol bytes + geometry
 //!    ([`crate::plan::cache`]) skips recompilation entirely when a refresh
 //!    re-emits unchanged symbols (repeated prompts, slowly-changing
-//!    masks); hit/miss counts surface in [`RunStats`].
+//!    masks); hit/miss counts surface in [`RunStats`]. When a refresh
+//!    *misses* the cache but differs from the layer's previous symbols in
+//!    only a few rows, the engine **delta-compiles**: it diffs the packed
+//!    bytes against the held plan's key ([`PlanDelta`](crate::plan::PlanDelta))
+//!    and rebuilds only the changed row-groups via
+//!    [`SparsePlan::apply_delta`], structurally sharing the rest —
+//!    counted in [`RunStats::plan_cache_delta`].
 //! 3. **Kernels consume plans on the shared execution runtime.** GEMM-Q,
 //!    the FlashOmni attention kernel, and GEMM-O all iterate only live
 //!    indices; attention heads and GEMM tile loops run on the persistent
@@ -60,8 +66,8 @@ use crate::model::blocks::{
     qkv_joint, vsplit, vstack,
 };
 use crate::model::{BlockExec, BlockWeights, MiniMMDiT};
-use crate::plan::cache::{symbol_key, CacheOutcome, CacheStats, PlanCache};
-use crate::plan::{AttnStats, DecodeMode, SparsePlan};
+use crate::plan::cache::{symbol_key, CacheOutcome, CacheStats, Compiled, PlanCache};
+use crate::plan::{AttnStats, DecodeMode, PlanDelta, SparsePlan};
 use crate::symbols::LayerSymbols;
 use crate::tensor::Tensor;
 use crate::util::ceil_div;
@@ -141,6 +147,14 @@ pub struct RunStats {
     /// the "one plan compile per (layer, refresh) per batch" invariant the
     /// fig12 bench verifies. Always 0 on the single-request engine.
     pub plan_cache_shared: u64,
+    /// Cache misses served by an **incremental recompile**: the refresh's
+    /// symbols differed from the layer's previous plan in a few rows, so
+    /// only those row-groups were re-decoded
+    /// ([`SparsePlan::apply_delta`]) and the rest structurally shared.
+    /// Counted inside `plan_cache_misses` too (a delta compile is still a
+    /// key miss). 0 when delta compilation is disabled
+    /// ([`DiTEngine::set_delta_compile`]).
+    pub plan_cache_delta: u64,
     /// Per-step mean attention density (Fig. 7).
     pub per_step_density: Vec<f64>,
     /// FLOPs actually executed vs the dense equivalent.
@@ -191,7 +205,15 @@ pub struct LayerPlans {
     pub txt: SparsePlan,
     /// Row slice covering the vision suffix (GEMM-Q / GEMM-O, image stream).
     pub img: SparsePlan,
+    /// The plan-cache key ([`LayerPlans::cache_key`]) this set was compiled
+    /// under — the packed symbol bytes + geometry an incoming refresh is
+    /// diffed against for an incremental recompile ([`LayerPlans::delta_from`]).
+    pub key: Vec<u8>,
 }
+
+/// Number of geometry parameters in a plan-cache key (the prefix
+/// [`PlanDelta::between`] verifies before diffing symbol bytes).
+const PLAN_KEY_GEOMETRY_PARAMS: usize = 5;
 
 /// Cache key for a layer's symbol refresh: packed symbol bytes + every
 /// geometry parameter the compiled plan set depends on (the text/vision
@@ -205,7 +227,7 @@ pub(crate) fn plan_key(syms: &LayerSymbols, geo: &Geometry) -> Vec<u8> {
 
 /// Decode the layer's symbols exactly once into the plan set every sparse
 /// kernel of the layer consumes (symbols → plan compile step).
-pub(crate) fn compile_plans(syms: &LayerSymbols, geo: &Geometry) -> LayerPlans {
+pub(crate) fn compile_plans(syms: &LayerSymbols, geo: &Geometry, key: Vec<u8>) -> LayerPlans {
     let joint = SparsePlan::compile(
         syms,
         geo.t_q(),
@@ -215,7 +237,87 @@ pub(crate) fn compile_plans(syms: &LayerSymbols, geo: &Geometry) -> LayerPlans {
         DecodeMode::RowCached,
     );
     let tb = geo.text_blocks();
-    LayerPlans { txt: joint.slice_q(0, tb), img: joint.slice_q(tb, geo.t_q()), joint }
+    LayerPlans { txt: joint.slice_q(0, tb), img: joint.slice_q(tb, geo.t_q()), joint, key }
+}
+
+/// Incremental recompile of a whole plan set: apply the delta to the
+/// joint plan and to both row-slice plans, sharing every unchanged
+/// segment with `base`. The slices delta-compile straight off the joint
+/// symbols at a row-group offset (no sliced symbol copies), and a slice
+/// whose delta is empty reuses the base slice outright.
+fn apply_layer_delta(
+    base: &LayerPlans,
+    delta: &PlanDelta,
+    syms: &LayerSymbols,
+    geo: &Geometry,
+    key: Vec<u8>,
+) -> LayerPlans {
+    let tbg = geo.text_groups();
+    let qg = geo.q_groups();
+    let joint = base.joint.apply_delta(delta, syms, DecodeMode::RowCached);
+    let txt_delta = delta.slice_groups(0, tbg);
+    let txt = if txt_delta.is_empty() {
+        base.txt.clone()
+    } else {
+        base.txt.apply_delta_at(&txt_delta, syms, 0, DecodeMode::RowCached)
+    };
+    let img_delta = delta.slice_groups(tbg, qg);
+    let img = if img_delta.is_empty() {
+        base.img.clone()
+    } else {
+        base.img.apply_delta_at(&img_delta, syms, tbg, DecodeMode::RowCached)
+    };
+    LayerPlans { joint, txt, img, key }
+}
+
+/// Build a plan set for a refresh: delta-compile off `base` when the keys
+/// are row-diffable, else compile from scratch. The providers pass the
+/// already-computed cache key in, so it is never recomputed.
+pub(crate) fn build_plans(
+    syms: &LayerSymbols,
+    geo: &Geometry,
+    key: Vec<u8>,
+    base: Option<&LayerPlans>,
+) -> Compiled<LayerPlans> {
+    if let Some(b) = base {
+        if let Some(delta) = PlanDelta::between(&b.key, &key, syms, PLAN_KEY_GEOMETRY_PARAMS) {
+            return Compiled::Delta(apply_layer_delta(b, &delta, syms, geo, key));
+        }
+    }
+    Compiled::Full(compile_plans(syms, geo, key))
+}
+
+impl LayerPlans {
+    /// The plan-cache key for a layer's symbols under `geo`: the packed
+    /// `S_c`/`S_s` bytes plus every geometry parameter the compiled set
+    /// depends on. Two refreshes collide iff their plans are identical by
+    /// construction.
+    pub fn cache_key(syms: &LayerSymbols, geo: &Geometry) -> Vec<u8> {
+        plan_key(syms, geo)
+    }
+
+    /// Compile a layer's symbols from scratch into the joint plan plus the
+    /// text/vision row slices (what the engine does on a plan-cache miss
+    /// with no delta base).
+    pub fn compile(syms: &LayerSymbols, geo: &Geometry) -> LayerPlans {
+        compile_plans(syms, geo, plan_key(syms, geo))
+    }
+
+    /// Incremental recompile: diff `syms` against `base`'s key and rebuild
+    /// only the changed row-groups of all three plans, structurally
+    /// sharing the rest. `None` when the refreshes are not row-diffable
+    /// (geometry changed) — fall back to [`LayerPlans::compile`]. The
+    /// result is logically identical to a from-scratch compile
+    /// (property-tested in `rust/tests/plan_delta.rs`).
+    pub fn delta_from(
+        base: &LayerPlans,
+        syms: &LayerSymbols,
+        geo: &Geometry,
+    ) -> Option<LayerPlans> {
+        let key = plan_key(syms, geo);
+        let delta = PlanDelta::between(&base.key, &key, syms, PLAN_KEY_GEOMETRY_PARAMS)?;
+        Some(apply_layer_delta(base, &delta, syms, geo, key))
+    }
 }
 
 /// Per-layer mutable state across the denoising run (`pub(crate)`: the
@@ -289,17 +391,23 @@ pub(crate) const PLAN_CACHE_CAP: usize = 64;
 /// [`SharedPlanCache`](crate::plan::cache::SharedPlanCache).
 pub(crate) trait PlanProvider {
     /// Symbols → compiled plan set, through whatever cache the provider
-    /// wraps. Returns the plans plus the cache outcome for accounting.
+    /// wraps. `base` is the layer's previous plan set (if any): on a cache
+    /// miss the provider may delta-compile off it instead of compiling
+    /// from scratch. Returns the plans plus the cache outcome for
+    /// accounting.
     fn plans_for(
         &mut self,
         syms: &LayerSymbols,
         geo: &Geometry,
+        base: Option<&LayerPlans>,
     ) -> (Arc<LayerPlans>, CacheOutcome);
 }
 
 /// [`PlanProvider`] over the engine's own (single-threaded) cache.
 pub(crate) struct LocalPlanProvider<'c> {
     pub(crate) cache: &'c mut PlanCache<LayerPlans>,
+    /// Delta compilation on a miss (true unless disabled for A/B tests).
+    pub(crate) delta: bool,
 }
 
 impl PlanProvider for LocalPlanProvider<'_> {
@@ -307,9 +415,12 @@ impl PlanProvider for LocalPlanProvider<'_> {
         &mut self,
         syms: &LayerSymbols,
         geo: &Geometry,
+        base: Option<&LayerPlans>,
     ) -> (Arc<LayerPlans>, CacheOutcome) {
         let key = plan_key(syms, geo);
-        self.cache.get_or_compile_outcome(&key, || compile_plans(syms, geo))
+        let base = if self.delta { base } else { None };
+        self.cache
+            .get_or_build_shared(&key, 0, 0, || build_plans(syms, geo, key.clone(), base))
     }
 }
 
@@ -327,6 +438,9 @@ pub struct DiTEngine {
     /// Symbols → compiled-plan cache, persistent across `generate` calls
     /// (repeated prompts skip every recompilation).
     plan_cache: PlanCache<LayerPlans>,
+    /// Delta-compile refreshes that miss the cache but row-diff against
+    /// the layer's previous plan (on by default).
+    delta_enabled: bool,
 }
 
 impl DiTEngine {
@@ -356,6 +470,7 @@ impl DiTEngine {
             panels,
             exec: ExecPool::global(),
             plan_cache: PlanCache::new(PLAN_CACHE_CAP),
+            delta_enabled: true,
         }
     }
 
@@ -380,9 +495,18 @@ impl DiTEngine {
         &self.exec
     }
 
-    /// Lifetime plan-cache counters (hits/misses/evictions).
+    /// Lifetime plan-cache counters (hits/misses/evictions/deltas).
     pub fn plan_cache_stats(&self) -> CacheStats {
         self.plan_cache.stats()
+    }
+
+    /// Enable/disable incremental plan recompiles (on by default). With
+    /// delta off, every cache miss compiles from scratch — outputs are
+    /// identical either way (the delta path is property-tested bitwise
+    /// against full compiles); the switch exists for A/B tests and the
+    /// fig13 bench.
+    pub fn set_delta_compile(&mut self, on: bool) {
+        self.delta_enabled = on;
     }
 
     /// Reset all per-request state (symbol + cache history). The plan
@@ -440,8 +564,9 @@ impl DiTEngine {
         step: usize,
         stats: &mut RunStats,
     ) -> Tensor {
-        let DiTEngine { model, policy, geo, state, panels, exec, plan_cache } = self;
-        let mut plans = LocalPlanProvider { cache: plan_cache };
+        let DiTEngine { model, policy, geo, state, panels, exec, plan_cache, delta_enabled } =
+            self;
+        let mut plans = LocalPlanProvider { cache: plan_cache, delta: *delta_enabled };
         let mut block_exec = EngineExec {
             policy,
             geo: *geo,
@@ -484,15 +609,23 @@ pub(crate) struct EngineExec<'a> {
 
 impl<'a> EngineExec<'a> {
     /// Symbols → plans through the provider, with RunStats accounting.
-    fn cached_compile(&mut self, syms: &LayerSymbols) -> Arc<LayerPlans> {
+    /// The layer's previous plan set (if any) is offered as the delta
+    /// base: a miss whose symbols row-diff against it is served by an
+    /// incremental recompile instead of a full one.
+    fn cached_compile(&mut self, layer: usize, syms: &LayerSymbols) -> Arc<LayerPlans> {
         let geo = self.geo;
-        let (plans, outcome) = self.plans.plans_for(syms, &geo);
+        let base = self.state[layer].plans.clone();
+        let (plans, outcome) = self.plans.plans_for(syms, &geo, base.as_deref());
         match outcome {
             CacheOutcome::Miss => self.stats.plan_cache_misses += 1,
             CacheOutcome::Hit => self.stats.plan_cache_hits += 1,
             CacheOutcome::SharedHit => {
                 self.stats.plan_cache_hits += 1;
                 self.stats.plan_cache_shared += 1;
+            }
+            CacheOutcome::DeltaHit => {
+                self.stats.plan_cache_misses += 1;
+                self.stats.plan_cache_delta += 1;
             }
         }
         plans
@@ -600,7 +733,7 @@ impl<'a> EngineExec<'a> {
                 ));
             }
             let syms = LayerSymbols { heads: heads_syms };
-            let plans = self.cached_compile(&syms);
+            let plans = self.cached_compile(layer, &syms);
             // S_q degradation: too few blocks need compute → full caching.
             let compute_fraction = 1.0 - plans.joint.cache_sparsity();
             let st = &mut self.state[layer];
@@ -722,7 +855,7 @@ impl<'a> EngineExec<'a> {
                 ));
             }
             let syms = LayerSymbols { heads: heads_syms };
-            let plans = self.cached_compile(&syms);
+            let plans = self.cached_compile(layer, &syms);
             self.state[layer].plans = Some(plans);
         }
 

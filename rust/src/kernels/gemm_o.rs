@@ -26,7 +26,7 @@
 //! preserve the serial per-element accumulation order — which is exactly
 //! what makes the pool outputs bitwise-identical to the serial kernels).
 //! The per-row-block head lists come from inverting the plan's CSR live /
-//! cached lists once per call ([`RowTiles`]). The `*_batched` variants
+//! cached lists once per call (`RowTiles`). The `*_batched` variants
 //! stack a whole batch of request activations over **one shared plan**
 //! (one `RowTiles` inversion per batch, `batch × row-block` pool lanes)
 //! and are bitwise-identical per request to the serial kernels — the

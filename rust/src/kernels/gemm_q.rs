@@ -135,7 +135,7 @@ pub fn gemm_q(
 /// worker pool: live tiles are flattened into one work list, chunked, and
 /// dispatched dynamically. Each tile writes a disjoint
 /// `(row-block × head-column)` rectangle of `y`, and every element is
-/// produced by exactly one tile via the same [`compute_q_tile`] float
+/// produced by exactly one tile via the same `compute_q_tile` float
 /// sequence — so the output is bitwise-identical to the serial kernel.
 pub fn gemm_q_pool(
     x: &Tensor,
@@ -210,7 +210,7 @@ pub fn gemm_q_pool(
 /// panels are gathered **once for the batch** — the plan's index lists are
 /// iterated exactly once, not once per request. Work is dispatched over
 /// `batch × tile-chunk` pool lanes; each lane computes one request's slab
-/// of tiles via the same [`compute_q_tile`] float sequence as the serial
+/// of tiles via the same `compute_q_tile` float sequence as the serial
 /// kernel, so output `r` is **bitwise-identical** to
 /// `gemm_q(xs[r], w, plan, bias)` (property-tested below).
 ///

@@ -17,6 +17,9 @@
 //!   decoded once per (layer, refresh) into CSR live-block index lists
 //!   (`SparsePlan`) that every sparse kernel consumes with zero decode
 //!   work in its inner loops; tile/pair statistics derive from the plan.
+//!   Plans own rows in `Arc`-shared row-group segments, so a refresh that
+//!   differs in a few rows is **delta-compiled** (`PlanDelta` +
+//!   `SparsePlan::apply_delta`) instead of rebuilt from scratch.
 //! * [`kernels`] — the **general sparse attention kernel** (Algorithm 1)
 //!   plus **GEMM-Q** / **GEMM-O** with real block skipping, and the dense
 //!   references they are tested against.
@@ -31,7 +34,8 @@
 //!   runs on it, and the serving coordinator's workers share one pool.
 //! * [`model`] / [`diffusion`] — the MiniMMDiT substrate (double-stream
 //!   multimodal DiT) and a rectified-flow sampler.
-//! * [`runtime`] — PJRT loading/execution of the AOT artifacts produced by
+//! * `runtime` (behind the `pjrt` feature, so not linked in default
+//!   builds) — PJRT loading/execution of the AOT artifacts produced by
 //!   `python/compile/aot.py` (the L2/L1 numerics oracle). Behind the
 //!   off-by-default `pjrt` feature: it needs the vendored `xla` crate,
 //!   which the offline build does not carry.

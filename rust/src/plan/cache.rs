@@ -23,6 +23,19 @@
 //! Hit/miss/eviction counters are kept inside the cache and surfaced per
 //! run through `RunStats` by the engine.
 //!
+//! **Incremental recompiles** ride the miss path: when a lookup misses but
+//! the caller holds the previous refresh's plan, it can diff the two keys
+//! with [`PlanDelta`](super::PlanDelta) and build the new value via
+//! [`SparsePlan::apply_delta`](super::SparsePlan::apply_delta) instead of
+//! a full compile. The cache itself stays policy-free — the caller passes
+//! the built value tagged as [`Compiled::Full`] or [`Compiled::Delta`]
+//! through [`PlanCache::get_or_build_shared`], and the cache accounts the
+//! delta case in [`CacheStats::delta_hits`] /
+//! [`CacheOutcome::DeltaHit`] (a *partial* hit: the key missed, but the
+//! base plan's unchanged rows were reused). `hits + misses` still equals
+//! the number of lookups; `delta_hits` counts the subset of misses served
+//! incrementally.
+//!
 //! **Batched serving** adds two layers on top:
 //!
 //! * **Epoch ids** ([`PlanCache::begin_epoch`] *allocates* a fresh id) —
@@ -52,19 +65,27 @@ use std::sync::{Arc, Mutex};
 /// Cache accounting counters (monotonic over the cache's lifetime).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
+    /// Lookups whose key was already cached.
     pub hits: u64,
+    /// Lookups whose key was absent — a (full or delta) compile ran.
     pub misses: u64,
+    /// Entries dropped by FIFO eviction at capacity.
     pub evictions: u64,
     /// Hits on entries inserted *in the same epoch by a different lane* —
     /// i.e. refreshes served by a plan another request of the same batch
     /// step compiled. Always 0 for callers that never open an epoch.
     pub shared_hits: u64,
+    /// Misses filled by an **incremental recompile** ([`Compiled::Delta`]):
+    /// the key was absent, but the value was delta-compiled from the
+    /// previous refresh's plan instead of from scratch. A subset of
+    /// [`Self::misses`]; always 0 for callers that never delta-compile.
+    pub delta_hits: u64,
 }
 
 /// Outcome of one [`PlanCache::get_or_compile_outcome`] lookup.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CacheOutcome {
-    /// Key absent: the compile closure ran.
+    /// Key absent: the compile closure ran a full compile.
     Miss,
     /// Key present from an earlier epoch / another engine's epoch / this
     /// very lane.
@@ -73,12 +94,29 @@ pub enum CacheOutcome {
     /// different lane: another request in the same batched step paid for
     /// this compile.
     SharedHit,
+    /// Key absent, but the value was **delta-compiled** from the caller's
+    /// base plan ([`Compiled::Delta`]) — only the changed row-groups were
+    /// re-decoded. Counted as a miss *and* in [`CacheStats::delta_hits`].
+    DeltaHit,
 }
 
 impl CacheOutcome {
+    /// Whether the key was already cached (a delta compile is *not* a hit:
+    /// the key was absent and a — cheaper — compile still ran).
     pub fn is_hit(&self) -> bool {
-        !matches!(self, CacheOutcome::Miss)
+        matches!(self, CacheOutcome::Hit | CacheOutcome::SharedHit)
     }
+}
+
+/// How a cache-miss value was built — the tag callers pass through
+/// [`PlanCache::get_or_build_shared`] so the cache can account
+/// incremental recompiles without owning the delta policy.
+pub enum Compiled<V> {
+    /// Compiled from scratch (symbols decoded in full).
+    Full(V),
+    /// Delta-compiled from the previous refresh's plan (only changed
+    /// row-groups decoded; unchanged segments structurally shared).
+    Delta(V),
 }
 
 /// Build the cache key for a layer's symbols under a given block geometry.
@@ -112,6 +150,17 @@ pub fn symbol_key(syms: &LayerSymbols, geometry: &[usize]) -> Vec<u8> {
 ///
 /// Values are handed out as `Arc`s so the engine's per-layer state can
 /// hold a plan across Dispatch steps while the cache stays free to evict.
+///
+/// ```
+/// use flashomni::plan::cache::{CacheOutcome, PlanCache};
+///
+/// let mut cache: PlanCache<u32> = PlanCache::new(4);
+/// let (v, outcome) = cache.get_or_compile_outcome(b"key", || 7);
+/// assert_eq!((*v, outcome), (7, CacheOutcome::Miss));
+/// let (v, outcome) = cache.get_or_compile_outcome(b"key", || unreachable!());
+/// assert_eq!((*v, outcome), (7, CacheOutcome::Hit));
+/// assert_eq!((cache.stats().hits, cache.stats().misses), (1, 1));
+/// ```
 pub struct PlanCache<V> {
     /// Value plus the (epoch id, lane) it was inserted under
     /// (epoch 0 = outside any epoch).
@@ -175,6 +224,21 @@ impl<V> PlanCache<V> {
         lane: u64,
         compile: impl FnOnce() -> V,
     ) -> (Arc<V>, CacheOutcome) {
+        self.get_or_build_shared(key, epoch, lane, || Compiled::Full(compile()))
+    }
+
+    /// The general entry point: like [`Self::get_or_compile_shared`], but
+    /// the build closure reports *how* it built the value — a miss filled
+    /// by [`Compiled::Delta`] (an incremental recompile off the caller's
+    /// base plan) is returned as [`CacheOutcome::DeltaHit`] and counted in
+    /// [`CacheStats::delta_hits`] on top of the plain miss count.
+    pub fn get_or_build_shared(
+        &mut self,
+        key: &[u8],
+        epoch: u64,
+        lane: u64,
+        build: impl FnOnce() -> Compiled<V>,
+    ) -> (Arc<V>, CacheOutcome) {
         if let Some((v, e, l)) = self.map.get(key) {
             self.stats.hits += 1;
             let outcome = if epoch > 0 && *e == epoch && *l != lane {
@@ -186,7 +250,13 @@ impl<V> PlanCache<V> {
             return (Arc::clone(v), outcome);
         }
         self.stats.misses += 1;
-        let v = Arc::new(compile());
+        let (v, outcome) = match build() {
+            Compiled::Full(v) => (Arc::new(v), CacheOutcome::Miss),
+            Compiled::Delta(v) => {
+                self.stats.delta_hits += 1;
+                (Arc::new(v), CacheOutcome::DeltaHit)
+            }
+        };
         if self.map.len() >= self.cap {
             if let Some(oldest) = self.order.pop_front() {
                 self.map.remove(&oldest);
@@ -195,7 +265,7 @@ impl<V> PlanCache<V> {
         }
         self.map.insert(key.to_vec(), (Arc::clone(&v), epoch, lane));
         self.order.push_back(key.to_vec());
-        (v, CacheOutcome::Miss)
+        (v, outcome)
     }
 
     /// Drop every cached plan (counters are preserved). Call when the
@@ -210,11 +280,12 @@ impl<V> PlanCache<V> {
         self.map.len()
     }
 
+    /// No plans cached.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }
 
-    /// Lifetime hit/miss/eviction counters.
+    /// Lifetime hit/miss/eviction/shared/delta counters.
     pub fn stats(&self) -> CacheStats {
         self.stats
     }
@@ -279,7 +350,20 @@ impl<V> SharedPlanCache<V> {
         self.inner.lock().unwrap().get_or_compile_shared(key, epoch, lane, compile)
     }
 
-    /// Lifetime hit/miss/eviction/shared counters.
+    /// Epoch-tagged lookup with a full/delta build closure (see
+    /// [`PlanCache::get_or_build_shared`]). The closure runs under the
+    /// lock, like every compile on this handle.
+    pub fn get_or_build_shared(
+        &self,
+        key: &[u8],
+        epoch: u64,
+        lane: u64,
+        build: impl FnOnce() -> Compiled<V>,
+    ) -> (Arc<V>, CacheOutcome) {
+        self.inner.lock().unwrap().get_or_build_shared(key, epoch, lane, build)
+    }
+
+    /// Lifetime hit/miss/eviction/shared/delta counters.
     pub fn stats(&self) -> CacheStats {
         self.inner.lock().unwrap().stats()
     }
@@ -289,6 +373,7 @@ impl<V> SharedPlanCache<V> {
         self.inner.lock().unwrap().len()
     }
 
+    /// No plans cached.
     pub fn is_empty(&self) -> bool {
         self.inner.lock().unwrap().is_empty()
     }
@@ -389,6 +474,30 @@ mod tests {
         assert_eq!(s.shared_hits, 2);
         assert_eq!(s.hits, 6);
         assert_eq!(s.misses, 2);
+    }
+
+    #[test]
+    fn delta_builds_count_as_delta_hits() {
+        let mut cache: PlanCache<u32> = PlanCache::new(4);
+        // A delta-built miss: key absent, value built incrementally.
+        let (v, o) = cache.get_or_build_shared(&[1], 0, 0, || Compiled::Delta(10));
+        assert_eq!((*v, o), (10, CacheOutcome::DeltaHit));
+        assert!(!o.is_hit(), "a delta compile is not a key hit");
+        // Re-lookup is a plain hit; no extra delta accounting.
+        let (_, o) = cache.get_or_build_shared(&[1], 0, 0, || unreachable!());
+        assert_eq!(o, CacheOutcome::Hit);
+        // A full-built miss on a fresh key.
+        let (_, o) = cache.get_or_build_shared(&[2], 0, 0, || Compiled::Full(20));
+        assert_eq!(o, CacheOutcome::Miss);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.delta_hits), (1, 2, 1));
+        // Epoch sharing still works for delta-inserted entries.
+        let e = cache.begin_epoch();
+        let (_, o) = cache.get_or_build_shared(&[3], e, 0, || Compiled::Delta(30));
+        assert_eq!(o, CacheOutcome::DeltaHit);
+        let (_, o) = cache.get_or_build_shared(&[3], e, 1, || unreachable!());
+        assert_eq!(o, CacheOutcome::SharedHit);
+        assert_eq!(cache.stats().delta_hits, 2);
     }
 
     #[test]

@@ -1,0 +1,272 @@
+//! **Plan deltas** — which symbol row-groups changed between two refreshes.
+//!
+//! The [`PlanCache`](super::cache::PlanCache) already makes byte-identical
+//! refreshes free, but the common serving regimes (caching-style policies
+//! late in denoising, per-step mask policies on slowly-evolving
+//! activations) emit symbol streams that differ in a *few rows* — and a
+//! one-bit flip used to recompile the whole layer. [`PlanDelta`] closes
+//! that gap: it diffs the **packed symbol bytes** of an incoming refresh
+//! against the cached plan's key (the exact bytes
+//! [`symbol_key`](super::cache::symbol_key) hashed, so no extra state has
+//! to be retained) and reports, per head, the ascending list of changed
+//! **row-groups** — the granularity at which
+//! [`SparsePlan::apply_delta`](super::SparsePlan::apply_delta) can rebuild
+//! a plan incrementally.
+//!
+//! Granularity: `S_c` flips are resolved to exact groups (the spatial
+//! symbol stream is one bit per group). `S_s` flips are resolved at *byte*
+//! granularity — a changed byte marks every row-group whose bit range
+//! touches that byte, which can conservatively include one unchanged
+//! neighbour row when rows are not byte-aligned. Over-marking only costs a
+//! little extra decode work; it can never change the result, because a
+//! re-decoded unchanged row compiles to identical indices.
+//!
+//! A structural mismatch (different geometry prefix, head count, pooling,
+//! or group shape) is not diffable: [`PlanDelta::between`] returns `None`
+//! and the caller falls back to a full compile.
+
+use crate::symbols::LayerSymbols;
+
+/// Changed row-groups between two symbol refreshes of one layer, per head.
+///
+/// Produced by [`PlanDelta::between`]; consumed by
+/// [`SparsePlan::apply_delta`](super::SparsePlan::apply_delta) /
+/// [`HeadPlan::apply_delta`](super::HeadPlan::apply_delta). See the
+/// [module docs](self) for the diff granularity.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlanDelta {
+    /// Per head: ascending, deduplicated changed row-group indices.
+    heads: Vec<Vec<u32>>,
+    /// Total row-groups across heads (denominator of
+    /// [`Self::group_fraction`]).
+    total_groups: usize,
+}
+
+impl PlanDelta {
+    /// Diff two plan-cache keys at row-group granularity.
+    ///
+    /// `old_key` is the key the cached base plan was compiled under;
+    /// `new_key` is the key of the incoming refresh, and `syms` the
+    /// symbols it was built from (they describe the key's layout:
+    /// `geometry_len` little-endian `u64` geometry parameters, the head
+    /// count, then per head its pooling/group geometry and the packed
+    /// `S_c`/`S_s` bytes — exactly what
+    /// [`symbol_key`](super::cache::symbol_key) emits).
+    ///
+    /// Returns `None` when the keys are not structurally diffable (any
+    /// geometry byte differs, or the lengths disagree) — the caller must
+    /// fall back to a full compile. Identical keys yield an
+    /// [empty](Self::is_empty) delta.
+    pub fn between(
+        old_key: &[u8],
+        new_key: &[u8],
+        syms: &LayerSymbols,
+        geometry_len: usize,
+    ) -> Option<PlanDelta> {
+        if old_key.len() != new_key.len() {
+            return None;
+        }
+        // Geometry prefix + head count must agree byte-for-byte.
+        let mut off = geometry_len * 8 + 8;
+        if old_key.len() < off || old_key[..off] != new_key[..off] {
+            return None;
+        }
+        let mut heads = Vec::with_capacity(syms.heads.len());
+        let mut total_groups = 0usize;
+        for h in &syms.heads {
+            // Per-head (pool, q_groups, kv_groups) triplet.
+            let geom_end = off + 24;
+            if old_key.len() < geom_end || old_key[off..geom_end] != new_key[off..geom_end] {
+                return None;
+            }
+            off = geom_end;
+            let (qg, kg) = (h.q_groups, h.kv_groups);
+            total_groups += qg;
+            let sc_len = qg.div_ceil(8);
+            let ss_len = (qg * kg).div_ceil(8);
+            if old_key.len() < off + sc_len + ss_len {
+                return None;
+            }
+            let old_sc = &old_key[off..off + sc_len];
+            let new_sc = &new_key[off..off + sc_len];
+            off += sc_len;
+            let old_ss = &old_key[off..off + ss_len];
+            let new_ss = &new_key[off..off + ss_len];
+            off += ss_len;
+
+            let mut changed: Vec<u32> = Vec::new();
+            // S_c: one bit per group — exact resolution.
+            for (i, (&o, &n)) in old_sc.iter().zip(new_sc).enumerate() {
+                let x = o ^ n;
+                if x == 0 {
+                    continue;
+                }
+                for bit in 0..8 {
+                    if (x >> (7 - bit)) & 1 == 1 {
+                        let g = i * 8 + bit;
+                        if g < qg {
+                            changed.push(g as u32);
+                        }
+                    }
+                }
+            }
+            // S_s: rows are kv_groups bits long and not byte-aligned in
+            // general — map each changed byte to the (conservative) range
+            // of row-groups whose bits it holds.
+            if kg > 0 {
+                for (i, (&o, &n)) in old_ss.iter().zip(new_ss).enumerate() {
+                    if o == n {
+                        continue;
+                    }
+                    let first = (i * 8) / kg;
+                    let last = ((i * 8 + 7) / kg).min(qg.saturating_sub(1));
+                    for g in first..=last {
+                        if g < qg {
+                            changed.push(g as u32);
+                        }
+                    }
+                }
+            }
+            changed.sort_unstable();
+            changed.dedup();
+            heads.push(changed);
+        }
+        if off != old_key.len() {
+            return None;
+        }
+        Some(PlanDelta { heads, total_groups })
+    }
+
+    /// Number of heads this delta describes.
+    pub fn head_count(&self) -> usize {
+        self.heads.len()
+    }
+
+    /// Ascending changed row-group indices of `head`.
+    pub fn changed(&self, head: usize) -> &[u32] {
+        &self.heads[head]
+    }
+
+    /// No row-group changed in any head (the refresh was byte-identical —
+    /// normally caught earlier by a plan-cache hit, but reachable after an
+    /// eviction).
+    pub fn is_empty(&self) -> bool {
+        self.heads.iter().all(|h| h.is_empty())
+    }
+
+    /// Total changed row-groups summed over heads.
+    pub fn changed_groups(&self) -> usize {
+        self.heads.iter().map(|h| h.len()).sum()
+    }
+
+    /// Changed fraction of all row-groups (0.0 for an empty layer).
+    pub fn group_fraction(&self) -> f64 {
+        if self.total_groups == 0 {
+            return 0.0;
+        }
+        self.changed_groups() as f64 / self.total_groups as f64
+    }
+
+    /// Restrict the delta to row-groups `[lo, hi)` of every head, rebased
+    /// to the slice — used to delta-recompile the engine's text/vision
+    /// row-slice plans alongside the joint plan.
+    pub fn slice_groups(&self, lo: usize, hi: usize) -> PlanDelta {
+        assert!(lo <= hi, "bad group slice [{lo}, {hi})");
+        PlanDelta {
+            heads: self
+                .heads
+                .iter()
+                .map(|h| {
+                    h.iter()
+                        .filter(|&&g| (g as usize) >= lo && (g as usize) < hi)
+                        .map(|&g| g - lo as u32)
+                        .collect()
+                })
+                .collect(),
+            total_groups: (hi - lo) * self.heads.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::cache::symbol_key;
+    use super::*;
+    use crate::symbols::HeadSymbols;
+
+    fn layer(m_c: &[bool], m_s: &[bool], kg: usize, pool: usize) -> LayerSymbols {
+        LayerSymbols { heads: vec![HeadSymbols::from_masks(m_c, m_s, kg, pool)] }
+    }
+
+    const GEO: [usize; 3] = [4, 4, 8];
+
+    #[test]
+    fn identical_keys_give_empty_delta() {
+        let s = layer(&[true; 4], &[true; 16], 4, 1);
+        let k = symbol_key(&s, &GEO);
+        let d = PlanDelta::between(&k, &k, &s, GEO.len()).unwrap();
+        assert!(d.is_empty());
+        assert_eq!(d.changed_groups(), 0);
+        assert_eq!(d.group_fraction(), 0.0);
+    }
+
+    #[test]
+    fn sc_flip_is_exact() {
+        let old = layer(&[true, true, true, true], &[true; 16], 4, 1);
+        let mut m_c = [true; 4];
+        m_c[2] = false;
+        let new = layer(&m_c, &[true; 16], 4, 1);
+        let d = PlanDelta::between(
+            &symbol_key(&old, &GEO),
+            &symbol_key(&new, &GEO),
+            &new,
+            GEO.len(),
+        )
+        .unwrap();
+        assert_eq!(d.changed(0), &[2]);
+        assert!((d.group_fraction() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ss_flip_marks_the_rows_sharing_the_byte() {
+        // kv_groups = 4 → rows are nibble-sized: flipping a bit of row 1
+        // conservatively marks rows 0 and 1 (they share byte 0).
+        let old = layer(&[true; 4], &[true; 16], 4, 1);
+        let mut m_s = [true; 16];
+        m_s[5] = false; // row 1, kv 1
+        let new = layer(&[true; 4], &m_s, 4, 1);
+        let d = PlanDelta::between(
+            &symbol_key(&old, &GEO),
+            &symbol_key(&new, &GEO),
+            &new,
+            GEO.len(),
+        )
+        .unwrap();
+        assert_eq!(d.changed(0), &[0, 1]);
+    }
+
+    #[test]
+    fn geometry_mismatch_is_not_diffable() {
+        let a = layer(&[true; 4], &[true; 16], 4, 1);
+        let b = layer(&[true; 8], &[true; 64], 8, 1);
+        let ka = symbol_key(&a, &GEO);
+        let kb = symbol_key(&b, &GEO);
+        assert!(PlanDelta::between(&ka, &kb, &b, GEO.len()).is_none());
+        // Same symbols, different geometry parameters.
+        let ka2 = symbol_key(&a, &[4, 4, 16]);
+        assert!(PlanDelta::between(&ka, &ka2, &a, 3).is_none());
+        // Different pooling factor changes the per-head geometry triplet.
+        let c = layer(&[true; 4], &[true; 16], 4, 2);
+        let kc = symbol_key(&c, &GEO);
+        assert!(PlanDelta::between(&ka, &kc, &c, GEO.len()).is_none());
+    }
+
+    #[test]
+    fn slice_groups_filters_and_rebase() {
+        let d = PlanDelta { heads: vec![vec![0, 2, 3], vec![1]], total_groups: 8 };
+        let s = d.slice_groups(2, 4);
+        assert_eq!(s.changed(0), &[0, 1]);
+        assert!(s.changed(1).is_empty());
+        assert_eq!(s.changed_groups(), 2);
+    }
+}

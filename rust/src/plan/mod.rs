@@ -16,6 +16,34 @@
 //! * [`SparsePlan`] — all heads of one layer plus the block geometry,
 //!   compiled once per (layer, symbol refresh) and reused across every
 //!   Dispatch step until the policy refreshes the symbols.
+//! * [`PlanDelta`] ([`delta`]) — the *changed row-groups* between two
+//!   symbol refreshes, computed by diffing packed symbol bytes;
+//!   [`SparsePlan::apply_delta`] turns it into an **incremental recompile**
+//!   that decodes only the changed rows.
+//!
+//! # Plan storage: segmented, `Arc`-shared row-groups
+//!
+//! A plan's row structure is owned in **segments**: one
+//! `Arc<RowSegment>` per symbol row-group (`pool` consecutive Q-block
+//! rows — the granularity at which a symbol refresh can change anything).
+//! [`SparsePlan::apply_delta`] recompiles only the segments named by a
+//! [`PlanDelta`] and `Arc`-clones every other segment from the base plan,
+//! so an incremental recompile does `O(changed rows · t_kv)` decode work
+//! instead of `O(t_q · t_kv)`, and unchanged KV index lists are *shared*
+//! (not copied) between consecutive plans.
+//!
+//! The tradeoff vs. the `Arc`-per-row alternative: per-row `Arc`s would
+//! make the delta granularity exact (a one-row flip re-decodes one row,
+//! not `pool` rows) but cost one allocation + refcount per row and scatter
+//! each row's KV list into its own heap cell — bad for the kernels, which
+//! stream the CSR lists as their hottest metadata. Per-group segments
+//! amortize the `Arc` overhead over `pool` rows, keep each group's KV
+//! indices contiguous, and line up exactly with the unit a symbol byte
+//! diff can report — which is why the whole delta pipeline (diff → apply)
+//! speaks row-groups. The small kernel-facing flat views (`live_q`,
+//! `cached_q`, and the per-live-row segment locators behind
+//! [`HeadPlan::live_kv`]) are rebuilt in `O(t_q)` on every delta, so the
+//! kernels keep dense, branch-free iteration and did not change at all.
 //!
 //! [`DecodeMode`] lives here because decode strategy is now a
 //! *plan-construction* concern: both modes must (and are property-tested
@@ -31,9 +59,16 @@
 //! video-scale sequences where the CSR lists are the kernels' hottest
 //! metadata stream. [`HeadPlan::from_symbols`] asserts the geometry fits.
 
-pub mod cache;
+#![warn(missing_docs)]
 
+pub mod cache;
+pub mod delta;
+
+pub use delta::PlanDelta;
+
+use crate::exec::ExecPool;
 use crate::symbols::{HeadSymbols, LayerSymbols};
+use std::sync::Arc;
 
 /// How the reduction-axis symbols are decoded while *compiling* a plan —
 /// retained to reproduce the paper's FC-vs-BSS decode-overhead analysis
@@ -74,16 +109,135 @@ impl AttnStats {
 /// Tile statistics for the sparse GEMMs, derived from a plan.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct GemmStats {
+    /// Row-block tiles actually projected.
     pub computed_tiles: usize,
+    /// Tiles of the dense equivalent.
     pub total_tiles: usize,
 }
 
 impl GemmStats {
+    /// Fraction of tiles skipped: `1 - computed / total`.
     pub fn sparsity(&self) -> f64 {
         if self.total_tiles == 0 {
             return 0.0;
         }
         1.0 - self.computed_tiles as f64 / self.total_tiles as f64
+    }
+}
+
+/// One contiguous run of Q-block rows compiled as a unit — the plan's
+/// ownership (and delta) granularity. Indices are in the owning plan's
+/// frame; `kv_indptr` is local to the segment (`kv_indptr[0] == 0`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct RowSegment {
+    /// First Q-block row this segment covers (plan frame).
+    start: u32,
+    /// Number of Q-block rows covered.
+    rows: u32,
+    /// Live (computed) Q-block indices within the covered range, ascending.
+    live: Vec<u32>,
+    /// Cached Q-block indices within the covered range, ascending.
+    cached: Vec<u32>,
+    /// Local CSR row pointers into `kv_indices`; `len = live.len() + 1`.
+    kv_indptr: Vec<u32>,
+    /// Live KV-block indices per live row, ascending within each row.
+    kv_indices: Vec<u32>,
+}
+
+impl RowSegment {
+    /// Decode rows `[start, start + rows)` (plan frame) of one head's
+    /// symbols. `off` rebases plan-frame rows into the symbols' frame
+    /// (`raw = off + bi`): 0 for a full plan, the slice's first raw row
+    /// for a row-slice plan delta-compiled straight off the joint symbols.
+    fn from_symbols(
+        sym: &HeadSymbols,
+        off: usize,
+        start: usize,
+        rows: usize,
+        t_kv: usize,
+        decode: DecodeMode,
+    ) -> RowSegment {
+        let mut live = Vec::new();
+        let mut cached = Vec::new();
+        let mut kv_indptr = vec![0u32];
+        let mut kv_indices: Vec<u32> = Vec::new();
+        for bi in start..start + rows {
+            let raw = off + bi;
+            if !sym.f(raw) {
+                cached.push(bi as u32);
+                continue;
+            }
+            live.push(bi as u32);
+            match decode {
+                DecodeMode::RowCached => {
+                    let mut dec = sym.row_decoder(raw);
+                    for bj in 0..t_kv {
+                        if dec.j(bj) {
+                            kv_indices.push(bj as u32);
+                        }
+                    }
+                }
+                DecodeMode::PerAccess => {
+                    for bj in 0..t_kv {
+                        if sym.j(raw, bj) {
+                            kv_indices.push(bj as u32);
+                        }
+                    }
+                }
+            }
+            let end = u32::try_from(kv_indices.len()).expect("kv index count exceeds u32");
+            kv_indptr.push(end);
+        }
+        RowSegment {
+            start: start as u32,
+            rows: rows as u32,
+            live,
+            cached,
+            kv_indptr,
+            kv_indices,
+        }
+    }
+
+    /// KV indices of the segment's `r`-th live row.
+    #[inline]
+    fn kv_row(&self, r: usize) -> &[u32] {
+        &self.kv_indices[self.kv_indptr[r] as usize..self.kv_indptr[r + 1] as usize]
+    }
+
+    /// Copy of rows `[a, b)` (plan frame of the parent), rebased by `off`.
+    fn sliced(&self, a: usize, b: usize, off: usize) -> RowSegment {
+        let mut live = Vec::new();
+        let mut cached = Vec::new();
+        let mut kv_indptr = vec![0u32];
+        let mut kv_indices: Vec<u32> = Vec::new();
+        for (r, &bi) in self.live.iter().enumerate() {
+            let bi = bi as usize;
+            if bi < a || bi >= b {
+                continue;
+            }
+            live.push((bi - off) as u32);
+            kv_indices.extend_from_slice(self.kv_row(r));
+            kv_indptr.push(kv_indices.len() as u32);
+        }
+        for &bi in &self.cached {
+            let bi = bi as usize;
+            if bi >= a && bi < b {
+                cached.push((bi - off) as u32);
+            }
+        }
+        RowSegment {
+            start: (a - off) as u32,
+            rows: (b - a) as u32,
+            live,
+            cached,
+            kv_indptr,
+            kv_indices,
+        }
+    }
+
+    /// `u32` entries held by this segment's index lists.
+    fn index_len(&self) -> usize {
+        self.live.len() + self.cached.len() + self.kv_indptr.len() + self.kv_indices.len()
     }
 }
 
@@ -94,7 +248,15 @@ impl GemmStats {
 /// Indices are packed to `u32` (FlashInfer idiom — half the cache
 /// footprint of `usize` on 64-bit targets); kernels widen with `as usize`
 /// at the loop head, which costs nothing.
-#[derive(Clone, Debug, PartialEq, Eq)]
+///
+/// Rows are *owned* in `Arc`-shared segments of one symbol row-group each
+/// (see the [module docs](self) for the segmented-vs-per-row tradeoff);
+/// the flat `live_q`/`cached_q` views and [`Self::live_kv`] keep the
+/// kernel-facing access pattern of a plain CSR. Two plans compare equal
+/// ([`PartialEq`]) iff their *logical* index content is identical,
+/// independent of how the rows are segmented — this is the "bitwise
+/// identical" relation the delta-recompile property tests assert.
+#[derive(Clone, Debug)]
 pub struct HeadPlan {
     /// Total Q blocks (`ceil(n / block_q)`).
     pub t_q: usize,
@@ -104,81 +266,177 @@ pub struct HeadPlan {
     pub live_q: Vec<u32>,
     /// Q-block indices served from the feature cache (`F = 0`), ascending.
     pub cached_q: Vec<u32>,
-    /// CSR row pointers into [`Self::kv_indices`]; `len = live_q.len() + 1`.
-    pub kv_indptr: Vec<u32>,
-    /// Live KV-block indices (`J(S_s, i, j) = 1`) per live Q block,
-    /// ascending within each row.
-    pub kv_indices: Vec<u32>,
+    /// Row-group segments owning the CSR data, ordered by `start`.
+    segs: Vec<Arc<RowSegment>>,
+    /// Per live row: `(segment index, local live-row index)` — the locator
+    /// behind [`Self::live_kv`], rebuilt on every (delta) compile.
+    row_locs: Vec<(u32, u32)>,
 }
 
+impl PartialEq for HeadPlan {
+    fn eq(&self, other: &Self) -> bool {
+        self.t_q == other.t_q
+            && self.t_kv == other.t_kv
+            && self.live_q == other.live_q
+            && self.cached_q == other.cached_q
+            && (0..self.live_q.len()).all(|li| self.live_kv(li) == other.live_kv(li))
+    }
+}
+
+impl Eq for HeadPlan {}
+
 impl HeadPlan {
+    /// Build the flat kernel-facing views over a segment list.
+    fn assemble(t_q: usize, t_kv: usize, segs: Vec<Arc<RowSegment>>) -> Self {
+        let live_n: usize = segs.iter().map(|s| s.live.len()).sum();
+        let cached_n: usize = segs.iter().map(|s| s.cached.len()).sum();
+        let mut live_q = Vec::with_capacity(live_n);
+        let mut cached_q = Vec::with_capacity(cached_n);
+        let mut row_locs = Vec::with_capacity(live_n);
+        for (si, seg) in segs.iter().enumerate() {
+            live_q.extend_from_slice(&seg.live);
+            cached_q.extend_from_slice(&seg.cached);
+            for r in 0..seg.live.len() {
+                row_locs.push((si as u32, r as u32));
+            }
+        }
+        HeadPlan { t_q, t_kv, live_q, cached_q, segs, row_locs }
+    }
+
     /// Compile one head's symbols into index lists. `t_q`/`t_kv` are the
-    /// raw block counts of the sequence the plan will execute on.
+    /// raw block counts of the sequence the plan will execute on. One
+    /// segment is built per symbol row-group, so the plan can later be
+    /// delta-recompiled at that granularity ([`Self::apply_delta`]).
     pub fn from_symbols(sym: &HeadSymbols, t_q: usize, t_kv: usize, decode: DecodeMode) -> Self {
-        assert_eq!(sym.q_groups, t_q.div_ceil(sym.pool.max(1)), "S_c geometry mismatch");
-        assert_eq!(sym.kv_groups, t_kv.div_ceil(sym.pool.max(1)), "S_s geometry mismatch");
+        let pool = sym.pool.max(1);
+        assert_eq!(sym.q_groups, t_q.div_ceil(pool), "S_c geometry mismatch");
+        assert_eq!(sym.kv_groups, t_kv.div_ceil(pool), "S_s geometry mismatch");
         assert!(
             t_q <= u32::MAX as usize && t_kv <= u32::MAX as usize,
             "block counts exceed the u32 index range"
         );
-        let mut live_q = Vec::new();
-        let mut cached_q = Vec::new();
-        let mut kv_indptr = vec![0u32];
-        let mut kv_indices: Vec<u32> = Vec::new();
-        for bi in 0..t_q {
-            if !sym.f(bi) {
-                cached_q.push(bi as u32);
-                continue;
-            }
-            live_q.push(bi as u32);
-            match decode {
-                DecodeMode::RowCached => {
-                    let mut dec = sym.row_decoder(bi);
-                    for bj in 0..t_kv {
-                        if dec.j(bj) {
-                            kv_indices.push(bj as u32);
-                        }
-                    }
-                }
-                DecodeMode::PerAccess => {
-                    for bj in 0..t_kv {
-                        if sym.j(bi, bj) {
-                            kv_indices.push(bj as u32);
-                        }
-                    }
-                }
-            }
-            let end = u32::try_from(kv_indices.len()).expect("kv index count exceeds u32");
-            kv_indptr.push(end);
-        }
-        HeadPlan { t_q, t_kv, live_q, cached_q, kv_indptr, kv_indices }
+        let segs = (0..sym.q_groups)
+            .map(|g| {
+                let start = g * pool;
+                let rows = pool.min(t_q - start);
+                Arc::new(RowSegment::from_symbols(sym, 0, start, rows, t_kv, decode))
+            })
+            .collect();
+        Self::assemble(t_q, t_kv, segs)
     }
 
-    /// Fully-dense plan (every block live, every pair computed).
+    /// Incremental recompile: re-decode only the row-groups listed in
+    /// `changed` (ascending, as produced by [`PlanDelta`]) from the *new*
+    /// symbols `sym`, and share every other segment with `self` by `Arc`
+    /// clone. The result is logically identical to
+    /// [`Self::from_symbols`]`(sym, ..)` — property-tested bitwise across
+    /// random mask flips in `rust/tests/plan_delta.rs`.
+    ///
+    /// Panics if `sym`'s geometry disagrees with the plan's, or if the
+    /// plan was not compiled at symbol row-group granularity (plans from
+    /// [`Self::from_symbols`] always are; [`Self::dense`] plans and
+    /// arbitrary [`Self::slice_q`] slices are not).
+    pub fn apply_delta(&self, changed: &[u32], sym: &HeadSymbols, decode: DecodeMode) -> Self {
+        let pool = sym.pool.max(1);
+        assert_eq!(
+            sym.q_groups,
+            self.t_q.div_ceil(pool),
+            "delta symbols disagree with the plan's Q geometry"
+        );
+        self.apply_delta_at(changed, sym, 0, decode)
+    }
+
+    /// [`Self::apply_delta`] for a **row-slice** plan, reading the *joint*
+    /// symbols at a row-group offset: this plan covers the symbols' groups
+    /// `[group_off, group_off + groups)`, and `changed` is in the slice's
+    /// group frame. Avoids materializing sliced symbol copies on the
+    /// engine's delta path — changed segments decode straight out of the
+    /// joint `S_c`/`S_s` streams, rebased into the slice frame.
+    pub fn apply_delta_at(
+        &self,
+        changed: &[u32],
+        sym: &HeadSymbols,
+        group_off: usize,
+        decode: DecodeMode,
+    ) -> Self {
+        let pool = sym.pool.max(1);
+        let groups = self.t_q.div_ceil(pool);
+        assert!(
+            group_off + groups <= sym.q_groups,
+            "slice [{group_off}, {}) exceeds the symbols' {} row-groups",
+            group_off + groups,
+            sym.q_groups
+        );
+        assert_eq!(
+            sym.kv_groups,
+            self.t_kv.div_ceil(pool),
+            "delta symbols disagree with the plan's KV geometry"
+        );
+        assert_eq!(
+            self.segs.len(),
+            groups,
+            "base plan is not segmented at symbol row-group granularity"
+        );
+        let off_blocks = group_off * pool;
+        let mut next = changed.iter().peekable();
+        let segs: Vec<Arc<RowSegment>> = (0..groups)
+            .map(|g| {
+                let start = g * pool;
+                let rows = pool.min(self.t_q - start);
+                debug_assert_eq!(self.segs[g].start as usize, start, "segment misaligned");
+                debug_assert_eq!(self.segs[g].rows as usize, rows, "segment misaligned");
+                if next.peek().is_some_and(|&&c| c as usize == g) {
+                    next.next();
+                    Arc::new(RowSegment::from_symbols(
+                        sym, off_blocks, start, rows, self.t_kv, decode,
+                    ))
+                } else {
+                    Arc::clone(&self.segs[g])
+                }
+            })
+            .collect();
+        assert!(
+            next.peek().is_none(),
+            "changed row-groups must be ascending and < q_groups"
+        );
+        Self::assemble(self.t_q, self.t_kv, segs)
+    }
+
+    /// Fully-dense plan (every block live, every pair computed). Owned as
+    /// a single segment — dense plans are never delta-recompiled.
     pub fn dense(t_q: usize, t_kv: usize) -> Self {
         assert!(
             t_q <= u32::MAX as usize && t_q.saturating_mul(t_kv) <= u32::MAX as usize,
             "dense plan exceeds the u32 index range"
         );
-        let live_q: Vec<u32> = (0..t_q as u32).collect();
+        let live: Vec<u32> = (0..t_q as u32).collect();
         let kv_indptr: Vec<u32> = (0..=t_q).map(|i| (i * t_kv) as u32).collect();
         let mut kv_indices: Vec<u32> = Vec::with_capacity(t_q * t_kv);
         for _ in 0..t_q {
             kv_indices.extend(0..t_kv as u32);
         }
-        HeadPlan { t_q, t_kv, live_q, cached_q: Vec::new(), kv_indptr, kv_indices }
+        let seg = Arc::new(RowSegment {
+            start: 0,
+            rows: t_q as u32,
+            live,
+            cached: Vec::new(),
+            kv_indptr,
+            kv_indices,
+        });
+        Self::assemble(t_q, t_kv, vec![seg])
     }
 
     /// Live KV-block indices of the `li`-th *live* Q block.
     #[inline]
     pub fn live_kv(&self, li: usize) -> &[u32] {
-        &self.kv_indices[self.kv_indptr[li] as usize..self.kv_indptr[li + 1] as usize]
+        let (si, r) = self.row_locs[li];
+        self.segs[si as usize].kv_row(r as usize)
     }
 
     /// (Qi, Kj) pairs the plan will compute.
     #[inline]
     pub fn computed_pairs(&self) -> usize {
-        self.kv_indices.len()
+        self.segs.iter().map(|s| s.kv_indices.len()).sum()
     }
 
     /// Pairs of a dense computation.
@@ -222,54 +480,91 @@ impl HeadPlan {
     /// Restrict the plan to Q blocks `[lo, hi)`, rebasing indices to the
     /// slice — used to hand each stream (text prefix / vision suffix) of
     /// the joint sequence its own plan for GEMM-Q / GEMM-O.
+    ///
+    /// Segments that fall entirely inside a `lo == 0` slice are shared by
+    /// `Arc` clone (the engine's text slice); every other overlap is
+    /// copied and rebased.
     pub fn slice_q(&self, lo: usize, hi: usize) -> HeadPlan {
         assert!(lo <= hi && hi <= self.t_q, "bad Q-block slice [{lo}, {hi})");
-        let (lo32, hi32) = (lo as u32, hi as u32);
-        let mut live_q = Vec::new();
-        let mut kv_indptr = vec![0u32];
-        let mut kv_indices: Vec<u32> = Vec::new();
-        for (li, &bi) in self.live_q.iter().enumerate() {
-            if bi < lo32 || bi >= hi32 {
+        let mut segs: Vec<Arc<RowSegment>> = Vec::new();
+        for seg in &self.segs {
+            let s = seg.start as usize;
+            let e = s + seg.rows as usize;
+            let (a, b) = (s.max(lo), e.min(hi));
+            if a >= b {
                 continue;
             }
-            live_q.push(bi - lo32);
-            kv_indices.extend_from_slice(self.live_kv(li));
-            kv_indptr.push(kv_indices.len() as u32);
+            if lo == 0 && a == s && b == e {
+                segs.push(Arc::clone(seg));
+            } else {
+                segs.push(Arc::new(seg.sliced(a, b, lo)));
+            }
         }
-        let cached_q = self
-            .cached_q
-            .iter()
-            .filter(|&&bi| bi >= lo32 && bi < hi32)
-            .map(|&bi| bi - lo32)
-            .collect();
-        HeadPlan { t_q: hi - lo, t_kv: self.t_kv, live_q, cached_q, kv_indptr, kv_indices }
+        Self::assemble(hi - lo, self.t_kv, segs)
     }
 
-    /// Number of `u32` entries across all index lists.
+    /// Number of `u32` entries across all index lists (flat views, the
+    /// per-live-row locators, and the owning segments).
     pub fn index_len(&self) -> usize {
-        self.live_q.len() + self.cached_q.len() + self.kv_indptr.len() + self.kv_indices.len()
+        self.live_q.len()
+            + self.cached_q.len()
+            + 2 * self.row_locs.len()
+            + self.segs.iter().map(|s| s.index_len()).sum::<usize>()
     }
 
     /// Bytes held by the index lists (plan memory footprint; `u32`-packed).
+    /// Segments shared with other plans are counted once per plan.
     pub fn index_bytes(&self) -> usize {
         self.index_len() * std::mem::size_of::<u32>()
+    }
+
+    /// How many of this plan's segments are `Arc`-shared with `other`
+    /// (same allocation, not merely equal content) — the structural-
+    /// sharing measure the delta tests and the fig13 bench report.
+    pub fn shared_segments_with(&self, other: &HeadPlan) -> usize {
+        self.segs
+            .iter()
+            .filter(|s| other.segs.iter().any(|o| Arc::ptr_eq(s, o)))
+            .count()
+    }
+
+    /// Number of row-group segments owning this plan's rows.
+    pub fn segments(&self) -> usize {
+        self.segs.len()
     }
 }
 
 /// Compiled plans for all heads of one layer, plus the block geometry the
-/// kernels need. Built once per (layer, symbol refresh); every sparse
-/// kernel of the layer consumes it read-only.
+/// kernels need. Built once per (layer, symbol refresh) — in full via
+/// [`SparsePlan::compile`], or incrementally from the previous refresh via
+/// [`SparsePlan::apply_delta`] — and consumed read-only by every sparse
+/// kernel of the layer.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SparsePlan {
+    /// Per-head compiled plans (one entry per attention head).
     pub heads: Vec<HeadPlan>,
+    /// Total Q blocks per head.
     pub t_q: usize,
+    /// Total KV blocks per head.
     pub t_kv: usize,
+    /// Q-block side length in tokens.
     pub block_q: usize,
+    /// KV-block side length in tokens.
     pub block_k: usize,
 }
 
 impl SparsePlan {
     /// Compile a layer's symbols into per-head plans.
+    ///
+    /// ```
+    /// use flashomni::plan::{DecodeMode, SparsePlan};
+    /// use flashomni::symbols::LayerSymbols;
+    ///
+    /// let syms = LayerSymbols::dense(2, 4, 4, 1);
+    /// let plan = SparsePlan::compile(&syms, 4, 4, 8, 8, DecodeMode::RowCached);
+    /// assert_eq!(plan.heads.len(), 2);
+    /// assert_eq!(plan.attn_stats().sparsity(), 0.0);
+    /// ```
     pub fn compile(
         syms: &LayerSymbols,
         t_q: usize,
@@ -288,6 +583,132 @@ impl SparsePlan {
             t_kv,
             block_q,
             block_k,
+        }
+    }
+
+    /// [`Self::compile`] with the per-head decode fanned out over an
+    /// [`ExecPool`] — the "pool" variant the fig13 bench compares against
+    /// the serial compile. Bitwise-identical to the serial path (heads are
+    /// independent and results are placed by head index).
+    pub fn compile_on(
+        syms: &LayerSymbols,
+        t_q: usize,
+        t_kv: usize,
+        block_q: usize,
+        block_k: usize,
+        decode: DecodeMode,
+        exec: &ExecPool,
+    ) -> Self {
+        SparsePlan {
+            heads: exec.parallel_map_indexed(syms.heads.len(), |h| {
+                HeadPlan::from_symbols(&syms.heads[h], t_q, t_kv, decode)
+            }),
+            t_q,
+            t_kv,
+            block_q,
+            block_k,
+        }
+    }
+
+    /// Incremental recompile: rebuild only the row-groups a [`PlanDelta`]
+    /// marks as changed (per head) from the new symbols `syms`, sharing
+    /// every unchanged segment of `self` by `Arc` clone.
+    ///
+    /// Logically identical to [`Self::compile`]`(syms, ..)` — see the
+    /// module docs for the delta pipeline and `rust/tests/plan_delta.rs`
+    /// for the bitwise property tests.
+    ///
+    /// ```
+    /// use flashomni::plan::{DecodeMode, PlanDelta, SparsePlan};
+    /// use flashomni::plan::cache::symbol_key;
+    /// use flashomni::symbols::{HeadSymbols, LayerSymbols};
+    ///
+    /// let m_c = [true; 4];
+    /// let old_m = [true; 16];
+    /// let mut new_m = old_m;
+    /// new_m[5] = false; // flip one KV pair in row-group 1
+    /// let old = LayerSymbols { heads: vec![HeadSymbols::from_masks(&m_c, &old_m, 4, 1)] };
+    /// let new = LayerSymbols { heads: vec![HeadSymbols::from_masks(&m_c, &new_m, 4, 1)] };
+    ///
+    /// let geometry = [4usize, 4, 8, 8];
+    /// let delta = PlanDelta::between(
+    ///     &symbol_key(&old, &geometry),
+    ///     &symbol_key(&new, &geometry),
+    ///     &new,
+    ///     geometry.len(),
+    /// )
+    /// .expect("matching geometry diffs at row granularity");
+    /// assert!(!delta.is_empty());
+    ///
+    /// let base = SparsePlan::compile(&old, 4, 4, 8, 8, DecodeMode::RowCached);
+    /// let fast = base.apply_delta(&delta, &new, DecodeMode::RowCached);
+    /// let full = SparsePlan::compile(&new, 4, 4, 8, 8, DecodeMode::RowCached);
+    /// assert_eq!(fast, full); // bitwise-identical index content
+    /// ```
+    pub fn apply_delta(&self, delta: &PlanDelta, syms: &LayerSymbols, decode: DecodeMode) -> Self {
+        assert_eq!(self.heads.len(), syms.heads.len(), "head count changed");
+        assert_eq!(self.heads.len(), delta.head_count(), "delta head count mismatch");
+        SparsePlan {
+            heads: self
+                .heads
+                .iter()
+                .enumerate()
+                .map(|(h, hp)| hp.apply_delta(delta.changed(h), &syms.heads[h], decode))
+                .collect(),
+            t_q: self.t_q,
+            t_kv: self.t_kv,
+            block_q: self.block_q,
+            block_k: self.block_k,
+        }
+    }
+
+    /// [`Self::apply_delta`] for a layer of **row-slice** plans, reading
+    /// the *joint* symbols at row-group offset `group_off` (see
+    /// [`HeadPlan::apply_delta_at`]) — the engine's text/vision slices
+    /// delta-compile through this without materializing sliced symbols.
+    pub fn apply_delta_at(
+        &self,
+        delta: &PlanDelta,
+        syms: &LayerSymbols,
+        group_off: usize,
+        decode: DecodeMode,
+    ) -> Self {
+        assert_eq!(self.heads.len(), syms.heads.len(), "head count changed");
+        assert_eq!(self.heads.len(), delta.head_count(), "delta head count mismatch");
+        SparsePlan {
+            heads: self
+                .heads
+                .iter()
+                .enumerate()
+                .map(|(h, hp)| hp.apply_delta_at(delta.changed(h), &syms.heads[h], group_off, decode))
+                .collect(),
+            t_q: self.t_q,
+            t_kv: self.t_kv,
+            block_q: self.block_q,
+            block_k: self.block_k,
+        }
+    }
+
+    /// [`Self::apply_delta`] with the per-head work fanned out over an
+    /// [`ExecPool`] (fig13's "pool" delta path). Bitwise-identical to the
+    /// serial delta.
+    pub fn apply_delta_on(
+        &self,
+        delta: &PlanDelta,
+        syms: &LayerSymbols,
+        decode: DecodeMode,
+        exec: &ExecPool,
+    ) -> Self {
+        assert_eq!(self.heads.len(), syms.heads.len(), "head count changed");
+        assert_eq!(self.heads.len(), delta.head_count(), "delta head count mismatch");
+        SparsePlan {
+            heads: exec.parallel_map_indexed(self.heads.len(), |h| {
+                self.heads[h].apply_delta(delta.changed(h), &syms.heads[h], decode)
+            }),
+            t_q: self.t_q,
+            t_kv: self.t_kv,
+            block_q: self.block_q,
+            block_k: self.block_k,
         }
     }
 
@@ -369,6 +790,16 @@ impl SparsePlan {
     pub fn index_bytes(&self) -> usize {
         self.heads.iter().map(|h| h.index_bytes()).sum()
     }
+
+    /// Total segments `Arc`-shared with `other`, summed over heads (see
+    /// [`HeadPlan::shared_segments_with`]).
+    pub fn shared_segments_with(&self, other: &SparsePlan) -> usize {
+        self.heads
+            .iter()
+            .zip(&other.heads)
+            .map(|(a, b)| a.shared_segments_with(b))
+            .sum()
+    }
 }
 
 #[cfg(test)]
@@ -389,6 +820,10 @@ mod tests {
         assert_eq!(p.gemm_stats().sparsity(), 0.0);
         let d = HeadPlan::from_symbols(&HeadSymbols::dense(3, 5, 1), 3, 5, DecodeMode::RowCached);
         assert_eq!(p, d);
+        // Logical equality is independent of segmentation: the dense plan
+        // is one segment, the compiled plan one per row-group.
+        assert_eq!(p.segments(), 1);
+        assert_eq!(d.segments(), 3);
     }
 
     #[test]
@@ -417,6 +852,7 @@ mod tests {
             }
             assert_eq!(li, plan.live_q.len());
             assert_eq!(plan.live_q.len() + plan.cached_q.len(), t_q);
+            assert_eq!(plan.segments(), qg, "one segment per symbol row-group");
         });
     }
 
@@ -448,6 +884,64 @@ mod tests {
             head.computed_pairs() + tail.computed_pairs(),
             plan.computed_pairs()
         );
+        // A lo == 0 slice shares its segments with the parent plan.
+        assert_eq!(head.shared_segments_with(&plan), 2);
+    }
+
+    #[test]
+    fn apply_delta_recompiles_only_changed_groups() {
+        let m_c = [true, true, false, true];
+        let mut m_s = [true; 16];
+        m_s[4] = false; // row 1 skips KV 0
+        let sym_old = HeadSymbols::from_masks(&m_c, &m_s, 4, 1);
+        let old = HeadPlan::from_symbols(&sym_old, 4, 4, DecodeMode::RowCached);
+        // Flip row 1's skip and un-cache row 2.
+        let m_c2 = [true, true, true, true];
+        let m_s2 = [true; 16];
+        let sym_new = HeadSymbols::from_masks(&m_c2, &m_s2, 4, 1);
+        let got = old.apply_delta(&[1, 2], &sym_new, DecodeMode::RowCached);
+        let want = HeadPlan::from_symbols(&sym_new, 4, 4, DecodeMode::RowCached);
+        assert_eq!(got, want);
+        // Rows 0 and 3 were untouched: their segments are shared.
+        assert_eq!(got.shared_segments_with(&old), 2);
+    }
+
+    #[test]
+    fn apply_delta_with_no_changes_shares_everything() {
+        let sym = HeadSymbols::from_masks(&[true, false, true], &[true; 9], 3, 1);
+        let old = HeadPlan::from_symbols(&sym, 3, 3, DecodeMode::RowCached);
+        let got = old.apply_delta(&[], &sym, DecodeMode::RowCached);
+        assert_eq!(got, old);
+        assert_eq!(got.shared_segments_with(&old), 3);
+    }
+
+    #[test]
+    fn apply_delta_at_reads_joint_symbols_at_offset() {
+        // Joint: 4 rows (pool 1); the "vision" slice covers rows [2, 4).
+        let old_sym = HeadSymbols::from_masks(&[true, true, true, false], &[true; 16], 4, 1);
+        let joint = HeadPlan::from_symbols(&old_sym, 4, 4, DecodeMode::RowCached);
+        let img = joint.slice_q(2, 4);
+        // New refresh: row 3 becomes live but skips KV 1 — joint group 3,
+        // slice-frame group 1.
+        let mut m_s = [true; 16];
+        m_s[3 * 4 + 1] = false;
+        let new_sym = HeadSymbols::from_masks(&[true; 4], &m_s, 4, 1);
+        let got = img.apply_delta_at(&[1], &new_sym, 2, DecodeMode::RowCached);
+        let want =
+            HeadPlan::from_symbols(&new_sym, 4, 4, DecodeMode::RowCached).slice_q(2, 4);
+        assert_eq!(got, want);
+        assert_eq!(got.live_q, vec![0, 1]);
+        assert_eq!(got.live_kv(1), &[0, 2, 3]);
+        // The unchanged slice group (joint row 2) stays Arc-shared.
+        assert_eq!(got.shared_segments_with(&img), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "row-group granularity")]
+    fn apply_delta_rejects_dense_plans() {
+        let sym = HeadSymbols::from_masks(&[true, true, true], &[true; 9], 3, 1);
+        let dense = HeadPlan::dense(3, 3);
+        let _ = dense.apply_delta(&[0], &sym, DecodeMode::RowCached);
     }
 
     #[test]
@@ -470,6 +964,34 @@ mod tests {
         assert!(plan.index_bytes() > 0);
         // FLOP precomputation follows the live pair count.
         assert!((plan.attention_flops(4) - 4.0 * 6.0 * (8 * 8 * 4) as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pool_compile_matches_serial() {
+        prop_check("compile_on == compile", 10, |rng| {
+            let heads = 1 + rng.below(4);
+            let t = 4 + rng.below(24);
+            let syms = LayerSymbols {
+                heads: (0..heads)
+                    .map(|_| {
+                        let m_c = rand_mask(rng, t, 0.6);
+                        let m_s = rand_mask(rng, t * t, 0.5);
+                        HeadSymbols::from_masks(&m_c, &m_s, t, 1)
+                    })
+                    .collect(),
+            };
+            let serial = SparsePlan::compile(&syms, t, t, 8, 8, DecodeMode::RowCached);
+            let pool = SparsePlan::compile_on(
+                &syms,
+                t,
+                t,
+                8,
+                8,
+                DecodeMode::RowCached,
+                &ExecPool::global(),
+            );
+            assert_eq!(serial, pool);
+        });
     }
 
     #[test]

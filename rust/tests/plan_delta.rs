@@ -1,0 +1,330 @@
+//! Incremental plan recompile (PR 5 acceptance):
+//!
+//! (a) `SparsePlan::apply_delta` is **bitwise-identical** to a
+//!     from-scratch compile across randomized mask flips, under both
+//!     decode modes (including the RowCached == PerAccess equivalence),
+//!     serial and pool-fanned, with unchanged row-group segments
+//!     structurally shared with the base plan;
+//! (b) the engine-level `LayerPlans::delta_from` rebuilds the joint plan
+//!     *and* both text/vision row slices identically to a full compile;
+//! (c) a full denoising run with delta compilation on is bitwise-identical
+//!     to the same run with delta off, and every post-first-refresh miss
+//!     is served incrementally (`plan_cache_delta == misses - layers`);
+//! (d) regression: a **byte-identical** refresh still takes the plan-cache
+//!     hit fast path — no delta compile runs and `delta_hits` stays
+//!     unchanged — so the delta machinery never penalizes the PR 2 cache;
+//! (e) the batched engine's shared-plan epochs compose with delta: a
+//!     shared burst pays one (delta) compile per (layer, refresh) and
+//!     stays bitwise-identical to solo runs.
+
+use flashomni::batch::BatchedEngine;
+use flashomni::config::{ModelConfig, SparsityConfig};
+use flashomni::engine::{DiTEngine, Geometry, LayerPlans, Policy};
+use flashomni::exec::ExecPool;
+use flashomni::model::{weights::Weights, MiniMMDiT};
+use flashomni::plan::cache::symbol_key;
+use flashomni::plan::{DecodeMode, PlanDelta, SparsePlan};
+use flashomni::symbols::{HeadSymbols, LayerSymbols};
+use flashomni::testutil::{prop_check, rand_mask};
+use flashomni::trace::{caption_ids, Request};
+use flashomni::util::rng::Pcg32;
+use std::time::Instant;
+
+/// Random per-head logical masks for one layer.
+fn random_masks(
+    rng: &mut Pcg32,
+    heads: usize,
+    qg: usize,
+    kg: usize,
+) -> Vec<(Vec<bool>, Vec<bool>)> {
+    (0..heads)
+        .map(|_| (rand_mask(rng, qg, 0.6), rand_mask(rng, qg * kg, 0.5)))
+        .collect()
+}
+
+/// Flip a random number of row-groups (possibly zero) in each head.
+fn flip_masks(rng: &mut Pcg32, masks: &mut [(Vec<bool>, Vec<bool>)], qg: usize, kg: usize) {
+    for (m_c, m_s) in masks.iter_mut() {
+        let flips = rng.below(qg + 1);
+        for _ in 0..flips {
+            let g = rng.below(qg);
+            if rng.below(2) == 0 {
+                m_c[g] = !m_c[g];
+            }
+            let j = rng.below(kg);
+            m_s[g * kg + j] = !m_s[g * kg + j];
+        }
+    }
+}
+
+fn pack(masks: &[(Vec<bool>, Vec<bool>)], kg: usize, pool: usize) -> LayerSymbols {
+    LayerSymbols {
+        heads: masks
+            .iter()
+            .map(|(m_c, m_s)| HeadSymbols::from_masks(m_c, m_s, kg, pool))
+            .collect(),
+    }
+}
+
+// ---------------------------------------------------------------- (a) --
+
+#[test]
+fn apply_delta_bitwise_matches_full_recompile() {
+    prop_check("apply_delta == full compile (bitwise)", 60, |rng| {
+        let heads = 1 + rng.below(4);
+        let pool = 1 + rng.below(3);
+        let t_q = 1 + rng.below(40);
+        let t_kv = 1 + rng.below(40);
+        let qg = t_q.div_ceil(pool);
+        let kg = t_kv.div_ceil(pool);
+        let mut masks = random_masks(rng, heads, qg, kg);
+        let old = pack(&masks, kg, pool);
+        flip_masks(rng, &mut masks, qg, kg);
+        let new = pack(&masks, kg, pool);
+
+        let geometry = [t_q, t_kv, 8, 8];
+        let old_key = symbol_key(&old, &geometry);
+        let new_key = symbol_key(&new, &geometry);
+        let delta = PlanDelta::between(&old_key, &new_key, &new, geometry.len())
+            .expect("same geometry must be row-diffable");
+
+        let base = SparsePlan::compile(&old, t_q, t_kv, 8, 8, DecodeMode::RowCached);
+        let full_rc = SparsePlan::compile(&new, t_q, t_kv, 8, 8, DecodeMode::RowCached);
+        let full_pa = SparsePlan::compile(&new, t_q, t_kv, 8, 8, DecodeMode::PerAccess);
+
+        // Serial delta, both decode modes (RowCached == PerAccess holds
+        // through the incremental path too).
+        let got_rc = base.apply_delta(&delta, &new, DecodeMode::RowCached);
+        let got_pa = base.apply_delta(&delta, &new, DecodeMode::PerAccess);
+        assert_eq!(got_rc, full_rc, "delta(RowCached) must equal full recompile");
+        assert_eq!(got_pa, full_pa, "delta(PerAccess) must equal full recompile");
+        assert_eq!(got_rc, got_pa, "decode modes must agree on the delta path");
+
+        // Pool-fanned delta is bitwise-identical to the serial one.
+        let got_pool =
+            base.apply_delta_on(&delta, &new, DecodeMode::RowCached, &ExecPool::global());
+        assert_eq!(got_pool, got_rc);
+
+        // Unchanged row-groups are structurally shared (same Arc), not
+        // copied: exactly q_groups − |changed| segments per head.
+        for (h, (got_h, base_h)) in got_rc.heads.iter().zip(&base.heads).enumerate() {
+            let unchanged = qg - delta.changed(h).len();
+            assert_eq!(
+                got_h.shared_segments_with(base_h),
+                unchanged,
+                "head {h}: unchanged segments must be Arc-shared with the base"
+            );
+        }
+
+        // A byte-identical "refresh" shares every segment.
+        let same = PlanDelta::between(&new_key, &new_key, &new, geometry.len()).unwrap();
+        assert!(same.is_empty());
+        let noop = got_rc.apply_delta(&same, &new, DecodeMode::RowCached);
+        assert_eq!(noop, got_rc);
+        assert_eq!(noop.shared_segments_with(&got_rc), heads * qg);
+    });
+}
+
+// ---------------------------------------------------------------- (b) --
+
+#[test]
+fn layer_plans_delta_matches_full_compile_including_slices() {
+    prop_check("LayerPlans::delta_from == LayerPlans::compile", 30, |rng| {
+        let pool = 1 + rng.below(2);
+        let heads = 1 + rng.below(3);
+        let qg = 2 + rng.below(8);
+        let tbg = rng.below(qg + 1); // text prefix in row-groups
+        let block = 8;
+        let t_q = qg * pool;
+        let geo = Geometry {
+            block_q: block,
+            block_k: block,
+            pool,
+            text_tokens: tbg * pool * block,
+            seq: t_q * block,
+        };
+        assert_eq!(geo.q_groups(), qg);
+        let kg = geo.kv_groups();
+        let mut masks = random_masks(rng, heads, qg, kg);
+        let old = pack(&masks, kg, pool);
+        flip_masks(rng, &mut masks, qg, kg);
+        let new = pack(&masks, kg, pool);
+
+        let base = LayerPlans::compile(&old, &geo);
+        let got = LayerPlans::delta_from(&base, &new, &geo)
+            .expect("same geometry must be row-diffable");
+        let want = LayerPlans::compile(&new, &geo);
+        assert_eq!(got.joint, want.joint, "joint plan must match full compile");
+        assert_eq!(got.txt, want.txt, "text slice must match full compile");
+        assert_eq!(got.img, want.img, "vision slice must match full compile");
+        assert_eq!(got.key, want.key, "delta result must carry the new key");
+
+        // Base plans under a different geometry are not diffable.
+        let other = Geometry { text_tokens: 0, ..geo };
+        if geo.text_tokens != 0 {
+            assert!(LayerPlans::delta_from(&base, &new, &other).is_none());
+        }
+    });
+}
+
+// ---------------------------------------------------------------- (c) --
+
+fn tiny_model() -> MiniMMDiT {
+    // 8×8 patches → 64 vision tokens + 8 text tokens = seq 72, t_q = 9:
+    // big enough that per-layer symbol streams don't collide by accident.
+    let cfg = ModelConfig {
+        dim: 32,
+        heads: 2,
+        layers: 2,
+        text_tokens: 8,
+        patch_h: 8,
+        patch_w: 8,
+        patch_size: 2,
+        channels: 3,
+        mlp_ratio: 2,
+        vocab: 16,
+    };
+    MiniMMDiT::new(cfg.clone(), Weights::random(&cfg, 11))
+}
+
+fn scfg() -> SparsityConfig {
+    SparsityConfig {
+        tau_q: 0.6,
+        tau_kv: 0.3,
+        interval: 3,
+        order: 1,
+        s_q: 0.0,
+        block_q: 8,
+        block_k: 8,
+        pool: 1,
+        warmup: 2,
+        ramp_steps: 1,
+    }
+}
+
+#[test]
+fn delta_on_and_off_generate_identical_images() {
+    let model = tiny_model();
+    let ids: Vec<usize> = (0..model.cfg.text_tokens).collect();
+    let layers = model.cfg.layers as u64;
+    let mut on = DiTEngine::new(model.clone(), Policy::flashomni(scfg()), 8, 8);
+    let mut off = DiTEngine::new(model, Policy::flashomni(scfg()), 8, 8);
+    off.set_delta_compile(false);
+    let r_on = on.generate(&ids, 3, 12);
+    let r_off = off.generate(&ids, 3, 12);
+    assert_eq!(
+        r_on.image, r_off.image,
+        "delta compilation must not change the output"
+    );
+    assert_eq!(r_off.stats.plan_cache_delta, 0, "delta disabled must never delta-compile");
+    // With delta on, only a layer's *first* refresh of the run (no base
+    // plan yet) may compile from scratch — every further miss must be
+    // served incrementally. (A layer whose first refresh hits an entry
+    // another layer compiled full-compiles zero times, hence the bound.)
+    let (misses, deltas) = (r_on.stats.plan_cache_misses, r_on.stats.plan_cache_delta);
+    assert!(deltas <= misses, "delta compiles are a subset of misses");
+    assert!(
+        deltas >= misses.saturating_sub(layers),
+        "at most one full compile per layer per run (got {deltas} deltas / {misses} misses)"
+    );
+    if misses > layers {
+        assert!(deltas > 0, "a repeat miss has a base plan and must delta-compile");
+    }
+    assert_eq!(r_on.stats.plan_cache_misses, r_off.stats.plan_cache_misses);
+}
+
+#[test]
+fn per_step_mask_policy_rides_the_delta_path() {
+    // SpargeAttn-style policies regenerate S_s every Dispatch step from
+    // evolving activations — the heaviest recompile traffic, and exactly
+    // the slowly-drifting regime delta compilation targets.
+    let model = tiny_model();
+    let ids: Vec<usize> = (0..model.cfg.text_tokens).collect();
+    let layers = model.cfg.layers as u64;
+    let mut engine = DiTEngine::new(model, Policy::sparge(0.08, 0.09, 1), 8, 8);
+    let res = engine.generate(&ids, 5, 8);
+    assert!(res.image.data().iter().all(|x| x.is_finite()));
+    let (misses, deltas) = (res.stats.plan_cache_misses, res.stats.plan_cache_delta);
+    assert!(deltas <= misses);
+    assert!(
+        deltas >= misses.saturating_sub(layers),
+        "per-step refreshes must delta-compile after each layer's first \
+         (got {deltas} deltas / {misses} misses)"
+    );
+    if misses > layers {
+        assert!(deltas > 0, "repeat per-step refreshes must ride the delta path");
+    }
+}
+
+// ---------------------------------------------------------------- (d) --
+
+#[test]
+fn byte_identical_refresh_keeps_the_hit_fast_path() {
+    let model = tiny_model();
+    let ids: Vec<usize> = (0..model.cfg.text_tokens).collect();
+    let mut engine = DiTEngine::new(model, Policy::flashomni(scfg()), 8, 8);
+    let r1 = engine.generate(&ids, 3, 10);
+    assert!(r1.stats.plan_cache_misses > 0, "first run must compile plans");
+    let delta_after_r1 = engine.plan_cache_stats().delta_hits;
+    // Identical request → byte-identical symbols → every refresh takes the
+    // plain hit path: no misses, no delta compiles, delta_hits unchanged.
+    let r2 = engine.generate(&ids, 3, 10);
+    assert_eq!(r2.stats.plan_cache_misses, 0, "repeated prompt must hit on every refresh");
+    assert_eq!(r2.stats.plan_cache_delta, 0, "a hit must not delta-compile");
+    assert!(r2.stats.plan_cache_hits > 0);
+    assert_eq!(
+        engine.plan_cache_stats().delta_hits,
+        delta_after_r1,
+        "byte-identical refreshes must leave the cache's delta counter untouched"
+    );
+    assert_eq!(r1.image, r2.image, "cache reuse must not change the output");
+}
+
+// ---------------------------------------------------------------- (e) --
+
+#[test]
+fn batched_shared_burst_delta_compiles_once_per_refresh() {
+    let model = tiny_model();
+    let steps = 10;
+    let ids = caption_ids(5, model.cfg.text_tokens);
+    let layers = model.cfg.layers as u64;
+
+    let mut solo = DiTEngine::new(model.clone(), Policy::flashomni(scfg()), 8, 8);
+    let want = solo.generate(&ids, 1234, steps);
+
+    let mut batch = BatchedEngine::new(model, Policy::flashomni(scfg()), 8, 8, 2);
+    for id in 0..2u64 {
+        batch.admit(
+            Request {
+                id,
+                scene: 5,
+                prompt_ids: ids.clone(),
+                seed: 1234,
+                steps,
+                arrival_s: 0.0,
+            },
+            Instant::now(),
+        );
+    }
+    let results = batch.run_to_completion();
+    assert_eq!(results.len(), 2);
+    for r in &results {
+        assert_eq!(
+            r.image, want.image,
+            "batched + delta output must stay bitwise-identical to solo"
+        );
+    }
+    let misses: u64 = results.iter().map(|r| r.stats.plan_cache_misses).sum();
+    let deltas: u64 = results.iter().map(|r| r.stats.plan_cache_delta).sum();
+    let shared: u64 = results.iter().map(|r| r.stats.plan_cache_shared).sum();
+    let cache = batch.plan_cache_stats();
+    assert_eq!(misses, cache.misses, "per-request counters must cover the cache");
+    assert_eq!(deltas, cache.delta_hits);
+    assert!(shared > 0, "a symbol-identical pair must share compiles");
+    assert!(deltas <= misses);
+    assert!(
+        deltas >= misses.saturating_sub(layers),
+        "after each layer's first refresh, the one compile per (layer, refresh) is a delta \
+         (got {deltas} deltas / {misses} misses)"
+    );
+}
