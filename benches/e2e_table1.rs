@@ -46,6 +46,12 @@ fn main() {
         model.cfg.seq_len(),
         attn_frac * 100.0
     );
+    println!(
+        "microkernel isa: {} (simd available: {}, autotune: {})",
+        flashomni::kernels::microkernel::isa_name(flashomni::kernels::microkernel::active()),
+        flashomni::kernels::microkernel::simd_available(),
+        flashomni::kernels::tune::enabled()
+    );
     let ids = caption_ids(1, model.cfg.text_tokens);
 
     let mut dense = DiTEngine::new(model.clone(), Policy::full(), 64, 64);

@@ -12,7 +12,7 @@
 //! Env: FO_SEQS (default "2048,4096"), FO_BUDGET (default 0.3).
 //! Knobs + the `BENCH_fig10.json` schema: `docs/benchmarks.md`.
 
-use flashomni::bench::{json_row, write_bench_json, write_csv, Bencher, Measurement};
+use flashomni::bench::{json_row, write_bench_json_tagged, write_csv, Bencher, Measurement};
 use flashomni::exec::ExecPool;
 use flashomni::kernels::attention::{
     attention_dense, flashomni_attention, flashomni_attention_symbols,
@@ -160,13 +160,28 @@ fn main() {
         rows.push((m_bss, None));
     }
     let _ = write_csv("reports/fig10_attention.csv", &rows);
-    match write_bench_json(
+    let tune_cache = flashomni::kernels::tune::cache_path().unwrap_or_default();
+    match write_bench_json_tagged(
         "BENCH_fig10.json",
         "fig10_attention",
         &[
             ("block", block as f64),
             ("head_dim", d as f64),
             ("exec_pool_threads", pool.size() as f64),
+            ("fo_tune", flashomni::kernels::tune::enabled() as u8 as f64),
+            (
+                "simd_available",
+                flashomni::kernels::microkernel::simd_available() as u8 as f64,
+            ),
+        ],
+        &[
+            (
+                "isa",
+                flashomni::kernels::microkernel::isa_name(
+                    flashomni::kernels::microkernel::active(),
+                ),
+            ),
+            ("fo_tune_cache", &tune_cache),
         ],
         &json_rows,
     ) {

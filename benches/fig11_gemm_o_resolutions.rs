@@ -12,7 +12,7 @@
 //! length (CI smoke runs set it low to keep the bench to seconds).
 //! Knobs + the `BENCH_fig11.json` schema: `docs/benchmarks.md`.
 
-use flashomni::bench::{json_row, write_bench_json, write_csv, Bencher, Measurement};
+use flashomni::bench::{json_row, write_bench_json_tagged, write_csv, Bencher, Measurement};
 use flashomni::exec::ExecPool;
 use flashomni::kernels::flops;
 use flashomni::kernels::gemm_o::{
@@ -114,7 +114,8 @@ fn main() {
         }
     }
     let _ = write_csv("reports/fig11_gemm_o_resolutions.csv", &rows);
-    match write_bench_json(
+    let tune_cache = flashomni::kernels::tune::cache_path().unwrap_or_default();
+    match write_bench_json_tagged(
         "BENCH_fig11.json",
         "fig11_gemm_o_resolutions",
         &[
@@ -122,6 +123,20 @@ fn main() {
             ("head_dim", d_h as f64),
             ("sparsity", sparsity),
             ("exec_pool_threads", pool.size() as f64),
+            ("fo_tune", flashomni::kernels::tune::enabled() as u8 as f64),
+            (
+                "simd_available",
+                flashomni::kernels::microkernel::simd_available() as u8 as f64,
+            ),
+        ],
+        &[
+            (
+                "isa",
+                flashomni::kernels::microkernel::isa_name(
+                    flashomni::kernels::microkernel::active(),
+                ),
+            ),
+            ("fo_tune_cache", &tune_cache),
         ],
         &json_rows,
     ) {

@@ -26,7 +26,7 @@
 //! Knobs + the `BENCH_fig12.json` schema: `docs/benchmarks.md`.
 
 use flashomni::batch::{BatchScheduler, BatchedEngine};
-use flashomni::bench::write_bench_json;
+use flashomni::bench::write_bench_json_tagged;
 use flashomni::config::{ModelConfig, SparsityConfig};
 use flashomni::coordinator::{Response, ServeReport};
 use flashomni::diffusion::plan_steps;
@@ -181,7 +181,8 @@ fn main() {
         }
     }
 
-    match write_bench_json(
+    let tune_cache = flashomni::kernels::tune::cache_path().unwrap_or_default();
+    match write_bench_json_tagged(
         "BENCH_fig12.json",
         "fig12_batched_serving",
         &[
@@ -193,6 +194,20 @@ fn main() {
             ("seq", model.cfg.seq_len() as f64),
             ("exec_pool_threads", ExecPool::global().size() as f64),
             ("fo_chunk", flashomni::exec::tile_chunk_override().unwrap_or(0) as f64),
+            ("fo_tune", flashomni::kernels::tune::enabled() as u8 as f64),
+            (
+                "simd_available",
+                flashomni::kernels::microkernel::simd_available() as u8 as f64,
+            ),
+        ],
+        &[
+            (
+                "isa",
+                flashomni::kernels::microkernel::isa_name(
+                    flashomni::kernels::microkernel::active(),
+                ),
+            ),
+            ("fo_tune_cache", &tune_cache),
         ],
         &json_rows,
     ) {

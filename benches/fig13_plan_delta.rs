@@ -23,12 +23,20 @@
 //! `speedup` is that flip fraction's `full_serial` median over the row's
 //! median.
 //!
+//! PR 6: the symbol **pooling factor** is a sweep axis. FlashOmni packs
+//! `pool` logical blocks per symbol bit (§3.4's `n`), shrinking the
+//! symbol bytes — and therefore the key diff and recompile work — by
+//! `pool`² on the S_s grid. `FO_POOLS` (comma list, default `"1,4"`)
+//! selects the factors; pool = 1 rows keep their original case names and
+//! pool > 1 rows get a `_p<pool>` suffix, so existing trajectory diffs
+//! stay aligned.
+//!
 //! Env: FO_SEQ (sequence length, default 4096), FO_HEADS (default 8),
-//! FO_BUDGET (seconds per measurement, default 0.3), FO_CHUNK (tile-chunk
-//! override, recorded in the header). Knobs + the `BENCH_fig13.json`
-//! schema: `docs/benchmarks.md`.
+//! FO_BUDGET (seconds per measurement, default 0.3), FO_POOLS, FO_CHUNK
+//! (tile-chunk override, recorded in the header). Knobs + the
+//! `BENCH_fig13.json` schema: `docs/benchmarks.md`.
 
-use flashomni::bench::{json_row, print_table, write_bench_json, Bencher, Measurement};
+use flashomni::bench::{json_row, print_table, write_bench_json_tagged, Bencher, Measurement};
 use flashomni::exec::ExecPool;
 use flashomni::plan::cache::symbol_key;
 use flashomni::plan::{DecodeMode, PlanDelta, SparsePlan};
@@ -46,25 +54,26 @@ fn env_f64(key: &str, default: f64) -> f64 {
 
 type Masks = Vec<(Vec<bool>, Vec<bool>)>;
 
-fn pack(masks: &Masks, kg: usize) -> LayerSymbols {
+fn pack(masks: &Masks, kg: usize, pool: usize) -> LayerSymbols {
     LayerSymbols {
         heads: masks
             .iter()
-            .map(|(m_c, m_s)| HeadSymbols::from_masks(m_c, m_s, kg, 1))
+            .map(|(m_c, m_s)| HeadSymbols::from_masks(m_c, m_s, kg, pool))
             .collect(),
     }
 }
 
 /// Flip `flips` distinct, evenly-spread row-groups per head: toggle the
-/// group's `S_c` bit and re-randomize its `S_s` row.
-fn flip(rng: &mut Pcg32, base: &Masks, t: usize, flips: usize) -> Masks {
+/// group's `S_c` bit and re-randomize its `S_s` row. Masks are over the
+/// pooled `[qg × kg]` symbol grid, not raw blocks.
+fn flip(rng: &mut Pcg32, base: &Masks, qg: usize, kg: usize, flips: usize) -> Masks {
     let mut out = base.clone();
     for (m_c, m_s) in out.iter_mut() {
         for i in 0..flips {
-            let g = i * t / flips.max(1);
+            let g = i * qg / flips.max(1);
             m_c[g] = !m_c[g];
-            for j in 0..t {
-                m_s[g * t + j] = rng.f64() >= 0.5;
+            for j in 0..kg {
+                m_s[g * kg + j] = rng.f64() >= 0.5;
             }
         }
     }
@@ -79,84 +88,100 @@ fn main() {
     let bencher = Bencher { warmup: 1, min_iters: 3, budget_s: env_f64("FO_BUDGET", 0.3) };
     let exec = ExecPool::global();
     let mut rng = Pcg32::seeded(0xf13);
-
-    // Base refresh: ~30% cached rows, ~50% KV skips on live rows.
-    let base_masks: Masks = (0..heads)
-        .map(|_| {
-            let m_c: Vec<bool> = (0..t).map(|_| rng.f64() >= 0.3).collect();
-            let m_s: Vec<bool> = (0..t * t).map(|_| rng.f64() >= 0.5).collect();
-            (m_c, m_s)
-        })
+    let pools_env = std::env::var("FO_POOLS").unwrap_or_else(|_| "1,4".to_string());
+    let pools: Vec<usize> = pools_env
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .filter(|&p| p > 0 && p <= t)
         .collect();
-    let base_syms = pack(&base_masks, t);
-    let geometry = [t, t, block, block];
-    let base_key = symbol_key(&base_syms, &geometry);
-    let base_plan = SparsePlan::compile(&base_syms, t, t, block, block, DecodeMode::RowCached);
+    assert!(!pools.is_empty(), "FO_POOLS={pools_env:?} selected no valid pooling factors");
 
     println!(
         "# Figure 13 — incremental plan recompile: seq {seq}, {heads} heads, t_q {t}, \
-         exec pool {} threads",
+         pools {pools:?}, exec pool {} threads",
         exec.size()
     );
 
     let mut rows: Vec<(Measurement, Option<f64>)> = Vec::new();
     let mut json_rows: Vec<String> = Vec::new();
-    for frac in [0.0, 0.01, 0.1, 0.5, 1.0] {
-        let flips = ((frac * t as f64).ceil() as usize).min(t);
-        let new_masks = flip(&mut rng, &base_masks, t, flips);
-        let new_syms = pack(&new_masks, t);
-        let new_key = symbol_key(&new_syms, &geometry);
-        let delta = PlanDelta::between(&base_key, &new_key, &new_syms, geometry.len())
-            .expect("same geometry must be row-diffable");
+    for &pool in &pools {
+        // pool = 1 keeps the original case names so trajectory diffs stay
+        // aligned; pooled sweeps get a `_p<pool>` suffix.
+        let suffix = if pool == 1 { String::new() } else { format!("_p{pool}") };
+        let qg = t.div_ceil(pool);
+        let kg = t.div_ceil(pool);
+        // Base refresh: ~30% cached row-groups, ~50% KV skips on live rows.
+        let base_masks: Masks = (0..heads)
+            .map(|_| {
+                let m_c: Vec<bool> = (0..qg).map(|_| rng.f64() >= 0.3).collect();
+                let m_s: Vec<bool> = (0..qg * kg).map(|_| rng.f64() >= 0.5).collect();
+                (m_c, m_s)
+            })
+            .collect();
+        let base_syms = pack(&base_masks, kg, pool);
+        let geometry = [t, t, block, block];
+        let base_key = symbol_key(&base_syms, &geometry);
+        let base_plan =
+            SparsePlan::compile(&base_syms, t, t, block, block, DecodeMode::RowCached);
 
-        // Correctness gate before timing anything.
-        let full = SparsePlan::compile(&new_syms, t, t, block, block, DecodeMode::RowCached);
-        let inc = base_plan.apply_delta(&delta, &new_syms, DecodeMode::RowCached);
-        assert_eq!(inc, full, "delta recompile must be bitwise-identical to full");
-        drop(inc);
+        for frac in [0.0, 0.01, 0.1, 0.5, 1.0] {
+            let flips = ((frac * qg as f64).ceil() as usize).min(qg);
+            let new_masks = flip(&mut rng, &base_masks, qg, kg, flips);
+            let new_syms = pack(&new_masks, kg, pool);
+            let new_key = symbol_key(&new_syms, &geometry);
+            let delta = PlanDelta::between(&base_key, &new_key, &new_syms, geometry.len())
+                .expect("same geometry must be row-diffable");
 
-        let full_serial = bencher.run(&format!("full_serial flip={frac}"), || {
-            black_box(SparsePlan::compile(
-                &new_syms,
-                t,
-                t,
-                block,
-                block,
-                DecodeMode::RowCached,
-            ));
-        });
-        let delta_serial = bencher.run(&format!("delta_serial flip={frac}"), || {
-            let d = PlanDelta::between(&base_key, &new_key, &new_syms, geometry.len())
-                .expect("diffable");
-            black_box(base_plan.apply_delta(&d, &new_syms, DecodeMode::RowCached));
-        });
-        let full_pool = bencher.run(&format!("full_pool flip={frac}"), || {
-            black_box(SparsePlan::compile_on(
-                &new_syms,
-                t,
-                t,
-                block,
-                block,
-                DecodeMode::RowCached,
-                &exec,
-            ));
-        });
-        let delta_pool = bencher.run(&format!("delta_pool flip={frac}"), || {
-            let d = PlanDelta::between(&base_key, &new_key, &new_syms, geometry.len())
-                .expect("diffable");
-            black_box(base_plan.apply_delta_on(&d, &new_syms, DecodeMode::RowCached, &exec));
-        });
+            // Correctness gate before timing anything.
+            let full =
+                SparsePlan::compile(&new_syms, t, t, block, block, DecodeMode::RowCached);
+            let inc = base_plan.apply_delta(&delta, &new_syms, DecodeMode::RowCached);
+            assert_eq!(inc, full, "delta recompile must be bitwise-identical to full");
+            drop(inc);
 
-        for m in [&full_serial, &delta_serial, &full_pool, &delta_pool] {
-            let speedup = full_serial.median_s / m.median_s;
-            let case = m.name.split_whitespace().next().unwrap_or("?").to_string();
-            json_rows.push(json_row("plan_update", &case, frac, m, speedup));
-            rows.push((m.clone(), Some(speedup)));
+            let full_serial = bencher.run(&format!("full_serial{suffix} flip={frac}"), || {
+                black_box(SparsePlan::compile(
+                    &new_syms,
+                    t,
+                    t,
+                    block,
+                    block,
+                    DecodeMode::RowCached,
+                ));
+            });
+            let delta_serial = bencher.run(&format!("delta_serial{suffix} flip={frac}"), || {
+                let d = PlanDelta::between(&base_key, &new_key, &new_syms, geometry.len())
+                    .expect("diffable");
+                black_box(base_plan.apply_delta(&d, &new_syms, DecodeMode::RowCached));
+            });
+            let full_pool = bencher.run(&format!("full_pool{suffix} flip={frac}"), || {
+                black_box(SparsePlan::compile_on(
+                    &new_syms,
+                    t,
+                    t,
+                    block,
+                    block,
+                    DecodeMode::RowCached,
+                    &exec,
+                ));
+            });
+            let delta_pool = bencher.run(&format!("delta_pool{suffix} flip={frac}"), || {
+                let d = PlanDelta::between(&base_key, &new_key, &new_syms, geometry.len())
+                    .expect("diffable");
+                black_box(base_plan.apply_delta_on(&d, &new_syms, DecodeMode::RowCached, &exec));
+            });
+
+            for m in [&full_serial, &delta_serial, &full_pool, &delta_pool] {
+                let speedup = full_serial.median_s / m.median_s;
+                let case = m.name.split_whitespace().next().unwrap_or("?").to_string();
+                json_rows.push(json_row("plan_update", &case, frac, m, speedup));
+                rows.push((m.clone(), Some(speedup)));
+            }
         }
     }
     print_table("fig13 — plan Update/recompile latency vs rows flipped", &rows);
 
-    match write_bench_json(
+    match write_bench_json_tagged(
         "BENCH_fig13.json",
         "fig13_plan_delta",
         &[
@@ -167,6 +192,7 @@ fn main() {
             ("exec_pool_threads", exec.size() as f64),
             ("fo_chunk", flashomni::exec::tile_chunk_override().unwrap_or(0) as f64),
         ],
+        &[("fo_pools", pools_env.as_str())],
         &json_rows,
     ) {
         Ok(()) => println!("\nwrote BENCH_fig13.json ({} rows)", json_rows.len()),

@@ -19,16 +19,29 @@
 //! `thread::scope` vs persistent `ExecPool` — the pool must be no slower
 //! than the scope path) and the `u32` plan-index footprint report.
 //!
+//! PR 6 additions: per-kernel `scalar` / `simd` / `tuned` microkernel rows
+//! on the dense baselines (the SIMD layer's headline numbers), a
+//! sparsity:speedup `ratio` field on every kernel row, and the microkernel
+//! ISA / autotuner state in the JSON header.
+//!
 //! Env: FO_SEQ (default 2048), FO_BUDGET seconds/case (default 0.4),
-//! FO_CHUNK (tile-loop chunk override; recorded in the JSON header).
+//! FO_CHUNK (tile-loop chunk override; recorded in the JSON header),
+//! FO_SIMD / FO_TUNE / FO_TUNE_CACHE (microkernel + autotuner knobs).
 //! Knobs + the `BENCH_fig6.json` schema: `docs/benchmarks.md`.
 
-use flashomni::bench::{json_row, print_table, write_bench_json, write_csv, Bencher, Measurement};
+use flashomni::bench::{
+    json_row, json_row_ratio, print_table, write_bench_json_tagged, write_csv, Bencher,
+    Measurement,
+};
 use flashomni::exec::ExecPool;
-use flashomni::kernels::attention::{attention_dense, flashomni_attention};
+use flashomni::kernels::attention::{attention_dense, attention_dense_isa, flashomni_attention};
 use flashomni::kernels::flops;
-use flashomni::kernels::gemm_o::{gemm_o_dispatch, gemm_o_update, WeightPanels};
-use flashomni::kernels::gemm_q::{gemm_q, gemm_q_pool};
+use flashomni::kernels::gemm_o::{
+    gemm_o_dispatch, gemm_o_dispatch_isa, gemm_o_update, WeightPanels,
+};
+use flashomni::kernels::gemm_q::{gemm_q, gemm_q_isa, gemm_q_pool};
+use flashomni::kernels::microkernel::{self, Isa};
+use flashomni::kernels::tune::{self, Family};
 use flashomni::model::blocks::{extract_head, insert_head};
 use flashomni::plan::{DecodeMode, HeadPlan, SparsePlan};
 use flashomni::symbols::random_symbols;
@@ -65,6 +78,46 @@ fn main() {
     });
     json_rows.push(json_row("attention", "dense", 0.0, &dense, 1.0));
     let mut rows: Vec<(Measurement, Option<f64>)> = vec![(dense.clone(), Some(1.0))];
+    // Microkernel comparison on the dense baseline: scalar vs SIMD vs the
+    // autotuner's pick for this geometry (`tune_now` measures without
+    // touching the process-wide table, so the sparse rows below still run
+    // under whatever FO_SIMD/FO_TUNE the caller set).
+    let att_scalar = bencher.run("attention dense scalar", || {
+        std::hint::black_box(attention_dense_isa(Isa::Scalar, &q, &k, &v, block, block));
+    });
+    let att_simd = bencher.run("attention dense simd", || {
+        std::hint::black_box(attention_dense_isa(Isa::Simd, &q, &k, &v, block, block));
+    });
+    let att_cfg = tune::tune_now(Family::Attention, [block, d, block], 1);
+    let att_tuned = bencher.run("attention dense tuned", || {
+        std::hint::black_box(attention_dense_isa(att_cfg.isa, &q, &k, &v, block, block));
+    });
+    println!(
+        "attention microkernels: scalar {:.3}ms  simd[{}] {:.2}x  tuned[{}] {:.2}x",
+        att_scalar.median_s * 1e3,
+        microkernel::isa_name(Isa::Simd),
+        att_simd.speedup_vs(&att_scalar),
+        microkernel::isa_name(att_cfg.isa),
+        att_tuned.speedup_vs(&att_scalar)
+    );
+    json_rows.push(json_row("attention", "dense_scalar", 0.0, &att_scalar, 1.0));
+    json_rows.push(json_row(
+        "attention",
+        "dense_simd",
+        0.0,
+        &att_simd,
+        att_simd.speedup_vs(&att_scalar),
+    ));
+    json_rows.push(json_row(
+        "attention",
+        "dense_tuned",
+        0.0,
+        &att_tuned,
+        att_tuned.speedup_vs(&att_scalar),
+    ));
+    rows.push((att_scalar.clone(), None));
+    rows.push((att_simd, None));
+    rows.push((att_tuned, None));
     for (label, fc_on, bss_on) in
         [("FC", true, false), ("BSS", false, true), ("FC+BSS", true, true)]
     {
@@ -92,7 +145,7 @@ fn main() {
                 "attention {label:<7} sparsity {actual:.3}  speedup {speedup:.2}x  theory {theory:.2}x  ratio {:.1}%",
                 100.0 * speedup / theory
             );
-            json_rows.push(json_row("attention", label, actual, &m, speedup));
+            json_rows.push(json_row_ratio("attention", label, actual, &m, speedup));
             rows.push((m, Some(speedup)));
         }
     }
@@ -198,6 +251,45 @@ fn main() {
     });
     json_rows.push(json_row("gemm_q", "dense", 0.0, &gq_dense, 1.0));
     rows.push((gq_dense.clone(), Some(1.0)));
+    // Microkernel comparison on the dense GEMM-Q baseline (same all-dense
+    // plan, explicit ISA). The tuned row runs the autotuner's pick for the
+    // per-tile geometry `[block, d_in, d_h]`.
+    let gq_scalar = bencher.run("gemm_q dense scalar", || {
+        std::hint::black_box(gemm_q_isa(Isa::Scalar, &x, &w, &dense_plan_q, None));
+    });
+    let gq_simd = bencher.run("gemm_q dense simd", || {
+        std::hint::black_box(gemm_q_isa(Isa::Simd, &x, &w, &dense_plan_q, None));
+    });
+    let gq_cfg = tune::tune_now(Family::GemmQ, [block, d_in, d], 1);
+    let gq_tuned = bencher.run("gemm_q dense tuned", || {
+        std::hint::black_box(gemm_q_isa(gq_cfg.isa, &x, &w, &dense_plan_q, None));
+    });
+    println!(
+        "gemm_q microkernels: scalar {:.3}ms  simd[{}] {:.2}x  tuned[{}] {:.2}x",
+        gq_scalar.median_s * 1e3,
+        microkernel::isa_name(Isa::Simd),
+        gq_simd.speedup_vs(&gq_scalar),
+        microkernel::isa_name(gq_cfg.isa),
+        gq_tuned.speedup_vs(&gq_scalar)
+    );
+    json_rows.push(json_row("gemm_q", "dense_scalar", 0.0, &gq_scalar, 1.0));
+    json_rows.push(json_row(
+        "gemm_q",
+        "dense_simd",
+        0.0,
+        &gq_simd,
+        gq_simd.speedup_vs(&gq_scalar),
+    ));
+    json_rows.push(json_row(
+        "gemm_q",
+        "dense_tuned",
+        0.0,
+        &gq_tuned,
+        gq_tuned.speedup_vs(&gq_scalar),
+    ));
+    rows.push((gq_scalar, None));
+    rows.push((gq_simd, None));
+    rows.push((gq_tuned, None));
     for sparsity in [0.1, 0.2, 0.4, 0.6, 0.8, 0.9] {
         let syms = flashomni::symbols::LayerSymbols {
             heads: (0..heads)
@@ -219,8 +311,14 @@ fn main() {
             100.0 * speedup / theory,
             mp.speedup_vs(&gq_dense)
         );
-        json_rows.push(json_row("gemm_q", "random", sparsity, &m, speedup));
-        json_rows.push(json_row("gemm_q_pool", "random", sparsity, &mp, mp.speedup_vs(&gq_dense)));
+        json_rows.push(json_row_ratio("gemm_q", "random", sparsity, &m, speedup));
+        json_rows.push(json_row_ratio(
+            "gemm_q_pool",
+            "random",
+            sparsity,
+            &mp,
+            mp.speedup_vs(&gq_dense),
+        ));
         rows.push((m, Some(speedup)));
         rows.push((mp, None));
     }
@@ -238,6 +336,61 @@ fn main() {
     });
     json_rows.push(json_row("gemm_o", "dense", 0.0, &go_dense, 1.0));
     rows.push((go_dense.clone(), Some(1.0)));
+    // Microkernel comparison on the dense GEMM-O baseline.
+    let go_scalar = bencher.run("gemm_o dense scalar", || {
+        std::hint::black_box(gemm_o_dispatch_isa(
+            Isa::Scalar,
+            &o,
+            &panels,
+            &dense_plan_o,
+            &zero_bias,
+        ));
+    });
+    let go_simd = bencher.run("gemm_o dense simd", || {
+        std::hint::black_box(gemm_o_dispatch_isa(
+            Isa::Simd,
+            &o,
+            &panels,
+            &dense_plan_o,
+            &zero_bias,
+        ));
+    });
+    let go_cfg = tune::tune_now(Family::GemmO, [block, d, d_in], 1);
+    let go_tuned = bencher.run("gemm_o dense tuned", || {
+        std::hint::black_box(gemm_o_dispatch_isa(
+            go_cfg.isa,
+            &o,
+            &panels,
+            &dense_plan_o,
+            &zero_bias,
+        ));
+    });
+    println!(
+        "gemm_o microkernels: scalar {:.3}ms  simd[{}] {:.2}x  tuned[{}] {:.2}x",
+        go_scalar.median_s * 1e3,
+        microkernel::isa_name(Isa::Simd),
+        go_simd.speedup_vs(&go_scalar),
+        microkernel::isa_name(go_cfg.isa),
+        go_tuned.speedup_vs(&go_scalar)
+    );
+    json_rows.push(json_row("gemm_o", "dense_scalar", 0.0, &go_scalar, 1.0));
+    json_rows.push(json_row(
+        "gemm_o",
+        "dense_simd",
+        0.0,
+        &go_simd,
+        go_simd.speedup_vs(&go_scalar),
+    ));
+    json_rows.push(json_row(
+        "gemm_o",
+        "dense_tuned",
+        0.0,
+        &go_tuned,
+        go_tuned.speedup_vs(&go_scalar),
+    ));
+    rows.push((go_scalar, None));
+    rows.push((go_simd, None));
+    rows.push((go_tuned, None));
     for sparsity in [0.5, 0.7, 0.8, 0.9] {
         let syms = flashomni::symbols::LayerSymbols {
             heads: (0..heads)
@@ -262,14 +415,15 @@ fn main() {
             100.0 * speedup / theory
         );
         json_rows.push(json_row("gemm_o_update", "random", sparsity, &update, 0.0));
-        json_rows.push(json_row("gemm_o_dispatch", "random", sparsity, &dispatch, speedup));
+        json_rows.push(json_row_ratio("gemm_o_dispatch", "random", sparsity, &dispatch, speedup));
         rows.push((update, None));
         rows.push((dispatch, Some(speedup)));
     }
 
     print_table("fig6 raw measurements", &rows);
     let _ = write_csv("reports/fig6_kernels.csv", &rows);
-    match write_bench_json(
+    let tune_cache = tune::cache_path().unwrap_or_default();
+    match write_bench_json_tagged(
         "BENCH_fig6.json",
         "fig6_kernels",
         &[
@@ -282,9 +436,13 @@ fn main() {
             // 0 = built-in `tiles/(4·threads)` heuristic; nonzero = the
             // FO_CHUNK override this run was measured under (autotuner data).
             ("fo_chunk", flashomni::exec::tile_chunk_override().unwrap_or(0) as f64),
+            ("fo_tune", tune::enabled() as u8 as f64),
+            ("simd_available", microkernel::simd_available() as u8 as f64),
+            ("tune_table_len", tune::table_len() as f64),
             ("plan_index_bytes_u32", plan_index_bytes as f64),
             ("plan_index_bytes_usize_equiv", plan_index_bytes_usize as f64),
         ],
+        &[("isa", microkernel::isa_name(microkernel::active())), ("fo_tune_cache", &tune_cache)],
         &json_rows,
     ) {
         Ok(()) => println!("\nwrote BENCH_fig6.json ({} rows)", json_rows.len()),

@@ -7,16 +7,25 @@
 //! PR 2: also times the pool-backed dispatch kernel (row-block parallel on
 //! the persistent `ExecPool`) against the serial one and emits a
 //! machine-readable `BENCH_fig8.json` perf trajectory like fig6.
+//! PR 6: scalar/simd/tuned microkernel rows on the dense baseline, a
+//! `ratio` field on the amortized dispatch rows, and the microkernel ISA /
+//! autotuner state in the JSON header.
 //! Env: FO_SEQ (default 2048), FO_BUDGET (default 0.4), FO_CHUNK
-//! (tile-loop chunk override; recorded in the JSON header).
+//! (tile-loop chunk override; recorded in the JSON header), FO_SIMD /
+//! FO_TUNE / FO_TUNE_CACHE (microkernel + autotuner knobs).
 //! Knobs + the `BENCH_fig8.json` schema: `docs/benchmarks.md`.
 
-use flashomni::bench::{json_row, write_bench_json, write_csv, Bencher, Measurement};
+use flashomni::bench::{
+    json_row, json_row_ratio, write_bench_json_tagged, write_csv, Bencher, Measurement,
+};
 use flashomni::exec::ExecPool;
 use flashomni::kernels::flops;
 use flashomni::kernels::gemm_o::{
-    gemm_o_dispatch, gemm_o_dispatch_pool, gemm_o_update, gemm_o_update_pool, WeightPanels,
+    gemm_o_dispatch, gemm_o_dispatch_isa, gemm_o_dispatch_pool, gemm_o_update,
+    gemm_o_update_pool, WeightPanels,
 };
+use flashomni::kernels::microkernel::{self, Isa};
+use flashomni::kernels::tune::{self, Family};
 use flashomni::plan::{DecodeMode, SparsePlan};
 use flashomni::symbols::{random_symbols, LayerSymbols};
 use flashomni::testutil::randn;
@@ -51,6 +60,46 @@ fn main() {
     });
     json_rows.push(json_row("gemm_o", "dense", 0.0, &dense, 1.0));
     let mut rows: Vec<(Measurement, Option<f64>)> = vec![(dense.clone(), Some(1.0))];
+
+    // Microkernel comparison on the dense baseline: scalar vs SIMD vs the
+    // autotuner's pick for the per-tile geometry `[block, d_h, d_out]`
+    // (`tune_now` measures without touching the process-wide table).
+    let go_scalar = bencher.run("gemm_o dense scalar", || {
+        std::hint::black_box(gemm_o_dispatch_isa(Isa::Scalar, &o, &panels, &dense_plan, &zero_bias));
+    });
+    let go_simd = bencher.run("gemm_o dense simd", || {
+        std::hint::black_box(gemm_o_dispatch_isa(Isa::Simd, &o, &panels, &dense_plan, &zero_bias));
+    });
+    let go_cfg = tune::tune_now(Family::GemmO, [block, d_h, d], 1);
+    let go_tuned = bencher.run("gemm_o dense tuned", || {
+        std::hint::black_box(gemm_o_dispatch_isa(go_cfg.isa, &o, &panels, &dense_plan, &zero_bias));
+    });
+    println!(
+        "gemm_o microkernels: scalar {:.3}ms  simd[{}] {:.2}x  tuned[{}] {:.2}x",
+        go_scalar.median_s * 1e3,
+        microkernel::isa_name(Isa::Simd),
+        go_simd.speedup_vs(&go_scalar),
+        microkernel::isa_name(go_cfg.isa),
+        go_tuned.speedup_vs(&go_scalar)
+    );
+    json_rows.push(json_row("gemm_o", "dense_scalar", 0.0, &go_scalar, 1.0));
+    json_rows.push(json_row(
+        "gemm_o",
+        "dense_simd",
+        0.0,
+        &go_simd,
+        go_simd.speedup_vs(&go_scalar),
+    ));
+    json_rows.push(json_row(
+        "gemm_o",
+        "dense_tuned",
+        0.0,
+        &go_tuned,
+        go_tuned.speedup_vs(&go_scalar),
+    ));
+    rows.push((go_scalar, None));
+    rows.push((go_simd, None));
+    rows.push((go_tuned, None));
 
     for interval in [4usize, 6, 8] {
         for sparsity in [0.5f64, 0.7, 0.9] {
@@ -87,7 +136,7 @@ fn main() {
                 100.0 * speedup / theory
             );
             json_rows.push(json_row("gemm_o_update", &format!("N{interval}"), sparsity, &update, 0.0));
-            json_rows.push(json_row(
+            json_rows.push(json_row_ratio(
                 "gemm_o_dispatch",
                 &format!("N{interval}"),
                 sparsity,
@@ -101,7 +150,7 @@ fn main() {
                 &update_pool,
                 0.0,
             ));
-            json_rows.push(json_row(
+            json_rows.push(json_row_ratio(
                 "gemm_o_dispatch_pool",
                 &format!("N{interval}"),
                 sparsity,
@@ -115,7 +164,8 @@ fn main() {
         }
     }
     let _ = write_csv("reports/fig8_gemm_o.csv", &rows);
-    match write_bench_json(
+    let tune_cache = tune::cache_path().unwrap_or_default();
+    match write_bench_json_tagged(
         "BENCH_fig8.json",
         "fig8_gemm_o",
         &[
@@ -127,7 +177,11 @@ fn main() {
             // 0 = built-in `tiles/(4·threads)` heuristic; nonzero = the
             // FO_CHUNK override this run was measured under (autotuner data).
             ("fo_chunk", flashomni::exec::tile_chunk_override().unwrap_or(0) as f64),
+            ("fo_tune", tune::enabled() as u8 as f64),
+            ("simd_available", microkernel::simd_available() as u8 as f64),
+            ("tune_table_len", tune::table_len() as f64),
         ],
+        &[("isa", microkernel::isa_name(microkernel::active())), ("fo_tune_cache", &tune_cache)],
         &json_rows,
     ) {
         Ok(()) => println!("\nwrote BENCH_fig8.json ({} rows)", json_rows.len()),

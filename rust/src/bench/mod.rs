@@ -116,6 +116,30 @@ pub fn json_row(kernel: &str, case: &str, sparsity: f64, m: &Measurement, speedu
     )
 }
 
+/// [`json_row`] plus a `ratio` field: the row's sparsity:speedup ratio
+/// (`speedup / (1 / (1 - sparsity))`, i.e. achieved speedup over the ideal
+/// work-proportional speedup; 1.0 = perfectly linear, 0 when the row is
+/// dense). The fig6/fig8 benches emit this per row so the trajectory files
+/// track how close each kernel stays to the paper's near-linear claim.
+pub fn json_row_ratio(
+    kernel: &str,
+    case: &str,
+    sparsity: f64,
+    m: &Measurement,
+    speedup: f64,
+) -> String {
+    let ideal = 1.0 / (1.0 - sparsity).max(1e-9);
+    let ratio = if sparsity > 0.0 { speedup / ideal } else { 0.0 };
+    format!(
+        "{{\"kernel\":\"{kernel}\",\"case\":\"{case}\",\"sparsity\":{sparsity:.6},\
+         \"median_ns\":{:.0},\"min_ns\":{:.0},\"iters\":{},\"speedup\":{speedup:.4},\
+         \"ratio\":{ratio:.4}}}",
+        m.median_s * 1e9,
+        m.min_s * 1e9,
+        m.iters
+    )
+}
+
 /// Write a `BENCH_<name>.json` perf-trajectory file: a `bench` tag, flat
 /// numeric header fields, and the [`json_row`] rows. Later PRs diff these
 /// files to catch perf regressions.
@@ -125,9 +149,26 @@ pub fn write_bench_json(
     header: &[(&str, f64)],
     rows: &[String],
 ) -> std::io::Result<()> {
+    write_bench_json_tagged(path, bench, header, &[], rows)
+}
+
+/// [`write_bench_json`] with additional *string* header tags (e.g. the
+/// microkernel ISA and `FO_TUNE_CACHE` path the run used) alongside the
+/// numeric header fields. The numeric-only helper delegates here so every
+/// `BENCH_*.json` keeps one shape.
+pub fn write_bench_json_tagged(
+    path: &str,
+    bench: &str,
+    header: &[(&str, f64)],
+    tags: &[(&str, &str)],
+    rows: &[String],
+) -> std::io::Result<()> {
     let mut head = format!("\"bench\":\"{bench}\"");
     for (k, v) in header {
         head.push_str(&format!(",\"{k}\":{v}"));
+    }
+    for (k, v) in tags {
+        head.push_str(&format!(",\"{k}\":\"{v}\""));
     }
     let json = format!("{{{head},\"rows\":[\n{}\n]}}\n", rows.join(",\n"));
     std::fs::write(path, json)
@@ -198,6 +239,31 @@ mod tests {
         assert!(body.contains("\"bench\":\"t\""));
         assert!(body.contains("\"seq\":512"));
         assert!(body.trim_end().ends_with("]}"));
+        let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn tagged_json_and_ratio_rows() {
+        let m = Measurement {
+            name: "x".into(),
+            median_s: 1e-3,
+            min_s: 1e-3,
+            mad_s: 0.0,
+            iters: 3,
+        };
+        // sparsity 0.5 → ideal 2×; measured 1.5× → ratio 0.75.
+        let row = json_row_ratio("k", "c", 0.5, &m, 1.5);
+        assert!(row.contains("\"ratio\":0.7500"), "row: {row}");
+        // Dense rows carry ratio 0 (no skip → no meaningful ratio).
+        let dense = json_row_ratio("k", "dense", 0.0, &m, 1.0);
+        assert!(dense.contains("\"ratio\":0.0000"), "row: {dense}");
+        let path = std::env::temp_dir().join("flashomni_bench_json_tagged_test.json");
+        let p = path.to_str().unwrap();
+        write_bench_json_tagged(p, "t", &[("seq", 512.0)], &[("isa", "avx2")], &[row])
+            .unwrap();
+        let body = std::fs::read_to_string(p).unwrap();
+        assert!(body.contains("\"isa\":\"avx2\""));
+        assert!(body.contains("\"seq\":512"));
         let _ = std::fs::remove_file(p);
     }
 

@@ -58,10 +58,23 @@ pub fn tile_chunk(tiles: usize, threads: usize) -> usize {
 
 /// The `FO_CHUNK` override, if set to a positive integer (`None` = use the
 /// built-in heuristic). Parsed once and cached for the process lifetime.
+/// A set-but-unparseable (or zero) value is ignored with a one-time
+/// warning on stderr rather than silently dropped — a mistyped sweep knob
+/// would otherwise masquerade as the heuristic.
 pub fn tile_chunk_override() -> Option<usize> {
     static OVERRIDE: std::sync::OnceLock<Option<usize>> = std::sync::OnceLock::new();
-    *OVERRIDE.get_or_init(|| {
-        std::env::var("FO_CHUNK").ok().and_then(|v| v.parse().ok()).filter(|&c: &usize| c > 0)
+    *OVERRIDE.get_or_init(|| match std::env::var("FO_CHUNK") {
+        Err(_) => None,
+        Ok(v) => match v.parse::<usize>() {
+            Ok(c) if c > 0 => Some(c),
+            _ => {
+                eprintln!(
+                    "warning: ignoring FO_CHUNK={v:?} (expected a positive integer); \
+                     using the built-in chunk heuristic"
+                );
+                None
+            }
+        },
     })
 }
 

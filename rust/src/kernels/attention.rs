@@ -26,14 +26,40 @@
 //! Skipped work is *really* skipped — no loads, no FLOPs — which is what
 //! makes the wall-clock measurements in `benches/` meaningful.
 
+use crate::kernels::microkernel::{self, Isa};
+use crate::kernels::tune::{self, Family};
 use crate::plan::HeadPlan;
 pub use crate::plan::{AttnStats, DecodeMode};
 use crate::symbols::HeadSymbols;
 use crate::tensor::Tensor;
 
+/// Resolve the microkernel flavor for an attention call from the tuning
+/// table (falling back to the process default). Keyed on the tile geometry
+/// `(block_q, head_dim, block_k)` only — every variant (dense, plan,
+/// symbols, batched) with the same geometry resolves the same flavor, so
+/// their bitwise-equivalence tests survive tuning.
+fn resolve_isa(block_q: usize, d: usize, block_k: usize) -> Isa {
+    tune::config_for(Family::Attention, [block_q, d, block_k], 1).isa
+}
+
 /// Dense FlashAttention (block-partitioned, online softmax). Reference
-/// baseline for every speedup measurement.
+/// baseline for every speedup measurement. Runs the tuned/default
+/// microkernel flavor; [`attention_dense_isa`] pins one explicitly.
 pub fn attention_dense(q: &Tensor, k: &Tensor, v: &Tensor, block_q: usize, block_k: usize) -> Tensor {
+    attention_dense_isa(resolve_isa(block_q, q.cols(), block_k), q, k, v, block_q, block_k)
+}
+
+/// [`attention_dense`] with an explicit microkernel flavor (benches pin
+/// scalar/SIMD rows; [`Isa::Scalar`] reproduces the seed float sequence
+/// bit-for-bit).
+pub fn attention_dense_isa(
+    isa: Isa,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    block_q: usize,
+    block_k: usize,
+) -> Tensor {
     let n = q.rows();
     let d = q.cols();
     assert_eq!(k.rows(), v.rows());
@@ -62,6 +88,7 @@ pub fn attention_dense(q: &Tensor, k: &Tensor, v: &Tensor, block_q: usize, block
             let k_hi = (k_lo + block_k).min(n_kv);
             let bk = k_hi - k_lo;
             attention_block_update(
+                isa,
                 &q.data()[q_lo * d..q_hi * d],
                 &k.data()[k_lo * d..k_hi * d],
                 &v.data()[k_lo * d..k_hi * d],
@@ -84,6 +111,7 @@ pub fn attention_dense(q: &Tensor, k: &Tensor, v: &Tensor, block_q: usize, block
 #[allow(clippy::too_many_arguments)]
 #[inline]
 fn attention_block_update(
+    isa: Isa,
     q: &[f32],
     k: &[f32],
     v: &[f32],
@@ -96,29 +124,14 @@ fn attention_block_update(
     l: &mut [f32],
     acc: &mut [f32],
 ) {
-    // S = Q Kᵀ · scale (dot-product form). Four accumulators break the
-    // FMA dependency chain — ~2× on the QKᵀ stage (see EXPERIMENTS.md
-    // §Perf, L3 iteration 1).
+    // S = Q Kᵀ · scale (dot-product form). The scalar microkernel keeps the
+    // seed's 8-lane accumulator (bounds checks vanish, LLVM emits packed
+    // FMAs at target-cpu=native); the SIMD flavor issues explicit FMAs.
     for i in 0..bq {
         let qrow = &q[i * d..(i + 1) * d];
         for j in 0..bk {
             let krow = &k[j * d..(j + 1) * d];
-            // 8-lane accumulator via chunks_exact: bounds checks vanish and
-            // LLVM emits packed FMAs (vmulps/vfmadd) at target-cpu=native.
-            let mut acc = [0.0f32; 8];
-            let qc = qrow.chunks_exact(8);
-            let kc = krow.chunks_exact(8);
-            let (qr, kr) = (qc.remainder(), kc.remainder());
-            for (qa, ka) in qc.zip(kc) {
-                for l in 0..8 {
-                    acc[l] += qa[l] * ka[l];
-                }
-            }
-            let mut s: f32 = acc.iter().sum();
-            for (a, b) in qr.iter().zip(kr) {
-                s += a * b;
-            }
-            scores[i * bk + j] = s * scale;
+            scores[i * bk + j] = microkernel::dot8(isa, qrow, krow) * scale;
         }
     }
     // Online softmax per row.
@@ -151,17 +164,13 @@ fn attention_block_update(
             let (p0, p1) = (row[j], row[j + 1]);
             let v0 = &v[j * d..(j + 1) * d];
             let v1 = &v[(j + 1) * d..(j + 2) * d];
-            for ((a, x), y) in arow.iter_mut().zip(v0).zip(v1) {
-                *a += p0 * x + p1 * y;
-            }
+            microkernel::axpy2(isa, arow, p0, v0, p1, v1);
             j += 2;
         }
         if j < bk {
             let pij = row[j];
             let vrow = &v[j * d..(j + 1) * d];
-            for (a, x) in arow.iter_mut().zip(vrow) {
-                *a += pij * x;
-            }
+            microkernel::axpy1(isa, arow, pij, vrow);
         }
     }
 }
@@ -186,8 +195,36 @@ fn finalize_block(o: &mut [f32], acc: &[f32], l: &[f32], bq: usize, d: usize) {
 ///   the caller is using the GEMM-O bias optimization, which makes the
 ///   element-wise reuse write unnecessary (§3.5, Obs. 3).
 ///
-/// Returns the output and the plan-derived skip statistics.
+/// Returns the output and the plan-derived skip statistics. Runs the
+/// tuned/default microkernel flavor; [`flashomni_attention_isa`] pins one
+/// explicitly.
 pub fn flashomni_attention(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    plan: &HeadPlan,
+    block_q: usize,
+    block_k: usize,
+    cached_o: Option<&Tensor>,
+) -> (Tensor, AttnStats) {
+    flashomni_attention_isa(
+        resolve_isa(block_q, q.cols(), block_k),
+        q,
+        k,
+        v,
+        plan,
+        block_q,
+        block_k,
+        cached_o,
+    )
+}
+
+/// [`flashomni_attention`] with an explicit microkernel flavor (benches pin
+/// scalar/SIMD rows; [`Isa::Scalar`] reproduces the seed float sequence
+/// bit-for-bit).
+#[allow(clippy::too_many_arguments)]
+pub fn flashomni_attention_isa(
+    isa: Isa,
     q: &Tensor,
     k: &Tensor,
     v: &Tensor,
@@ -230,6 +267,7 @@ pub fn flashomni_attention(
             let k_hi = (k_lo + block_k).min(n_kv);
             let bk = k_hi - k_lo;
             attention_block_update(
+                isa,
                 &q.data()[q_lo * d..q_hi * d],
                 &k.data()[k_lo * d..k_hi * d],
                 &v.data()[k_lo * d..k_hi * d],
@@ -272,12 +310,17 @@ pub fn flashomni_attention_batched(
     assert!(b > 0, "empty batch");
     let heads = plan.heads.len();
     let (bq, bk) = (plan.block_q, plan.block_k);
+    // Resolve the flavor once on the caller thread (same `(bq, d_h, bk)`
+    // key each per-head call would use, so lanes stay bitwise-identical to
+    // the serial head loop) instead of racing first-use tuning in workers.
+    let d_h = qs[0].cols() / heads.max(1);
+    let isa = resolve_isa(bq, d_h, bk);
     let lanes: Vec<(Tensor, AttnStats)> = pool.parallel_map_indexed(b * heads, |lane| {
         let (r, h) = (lane / heads, lane % heads);
         let qh = extract_head(qs[r], heads, h);
         let kh = extract_head(ks[r], heads, h);
         let vh = extract_head(vs[r], heads, h);
-        flashomni_attention(&qh, &kh, &vh, &plan.heads[h], bq, bk, None)
+        flashomni_attention_isa(isa, &qh, &kh, &vh, &plan.heads[h], bq, bk, None)
     });
     let mut out = Vec::with_capacity(b);
     let mut it = lanes.into_iter();
@@ -309,6 +352,9 @@ pub fn flashomni_attention_symbols(
     let d = q.cols();
     let n_kv = k.rows();
     let scale = 1.0 / (d as f32).sqrt();
+    // Same geometry key as the plan-based kernel, so plan == symbols stays
+    // bitwise under tuning.
+    let isa = resolve_isa(block_q, d, block_k);
     let mut o = Tensor::zeros(&[n, d]);
     let t_q = n.div_ceil(block_q);
     let t_kv = n_kv.div_ceil(block_k);
@@ -360,6 +406,7 @@ pub fn flashomni_attention_symbols(
             let k_hi = (k_lo + block_k).min(n_kv);
             let bk = k_hi - k_lo;
             attention_block_update(
+                isa,
                 &q.data()[q_lo * d..q_hi * d],
                 &k.data()[k_lo * d..k_hi * d],
                 &v.data()[k_lo * d..k_hi * d],

@@ -1,11 +1,15 @@
 //! Dense GEMM primitives.
 //!
 //! Row-major f32 matmul with an axpy-style inner loop (`C[i,:] += a * B[p,:]`)
-//! that LLVM auto-vectorizes well on a single core, plus a dot-product
-//! variant for `A·Bᵀ` (used by `QKᵀ`). These are the building blocks the
-//! sparse kernels skip over; keeping them scalar-simple makes the *relative*
-//! speedup measurements clean.
+//! plus a dot-product variant for `A·Bᵀ` (used by `QKᵀ`). Since PR 6 the
+//! inner loops run through the explicit [`microkernel`] layer: the `_isa`
+//! entry points take a [`Isa`] flavor (the scalar flavor reproduces the
+//! seed float sequences bit-for-bit; the SIMD flavor uses AVX2/NEON behind
+//! runtime detection), and the plain entry points resolve the process-wide
+//! default ([`microkernel::active`]). These are the building blocks the
+//! sparse kernels skip over.
 
+use crate::kernels::microkernel::{self, Isa};
 use crate::tensor::Tensor;
 
 /// `C = A · B` for row-major `A [m×k]`, `B [k×n]` → `C [m×n]`.
@@ -18,9 +22,19 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     c
 }
 
-/// `C += A · B` on raw slices (row-major). The workhorse.
+/// `C += A · B` on raw slices (row-major). The workhorse; runs the
+/// process-wide default microkernel flavor.
 #[inline]
 pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    matmul_into_isa(microkernel::active(), a, b, c, m, k, n);
+}
+
+/// [`matmul_into`] with an explicit microkernel flavor. The scalar flavor
+/// is the seed kernel's exact float sequence (register-blocked over p with
+/// the axpy inner loop, p unrolled by 4); the SIMD flavor runs the same
+/// structure through vector axpy microkernels.
+#[inline]
+pub fn matmul_into_isa(isa: Isa, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
@@ -31,22 +45,18 @@ pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
         let crow = &mut c[i * n..(i + 1) * n];
         let mut p = 0;
         while p + 4 <= k {
-            let (a0, a1, a2, a3) = (arow[p], arow[p + 1], arow[p + 2], arow[p + 3]);
+            let coef = [arow[p], arow[p + 1], arow[p + 2], arow[p + 3]];
             let b0 = &b[p * n..(p + 1) * n];
             let b1 = &b[(p + 1) * n..(p + 2) * n];
             let b2 = &b[(p + 2) * n..(p + 3) * n];
             let b3 = &b[(p + 3) * n..(p + 4) * n];
-            for j in 0..n {
-                crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
-            }
+            microkernel::axpy4(isa, crow, coef, b0, b1, b2, b3);
             p += 4;
         }
         while p < k {
             let ap = arow[p];
             let brow = &b[p * n..(p + 1) * n];
-            for j in 0..n {
-                crow[j] += ap * brow[j];
-            }
+            microkernel::axpy1(isa, crow, ap, brow);
             p += 1;
         }
     }
@@ -63,9 +73,25 @@ pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
     c
 }
 
-/// `C += A · Bᵀ` on raw slices.
+/// `C += A · Bᵀ` on raw slices; runs the process-wide default microkernel
+/// flavor.
 #[inline]
 pub fn matmul_nt_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    matmul_nt_into_isa(microkernel::active(), a, b, c, m, k, n);
+}
+
+/// [`matmul_nt_into`] with an explicit microkernel flavor (the scalar
+/// flavor is the seed kernel's plain left-to-right dot accumulation).
+#[inline]
+pub fn matmul_nt_into_isa(
+    isa: Isa,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
     debug_assert_eq!(c.len(), m * n);
@@ -73,11 +99,7 @@ pub fn matmul_nt_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n
         let arow = &a[i * k..(i + 1) * k];
         for j in 0..n {
             let brow = &b[j * k..(j + 1) * k];
-            let mut s = 0.0f32;
-            for p in 0..k {
-                s += arow[p] * brow[p];
-            }
-            c[i * n + j] += s;
+            c[i * n + j] += microkernel::dot(isa, arow, brow);
         }
     }
 }

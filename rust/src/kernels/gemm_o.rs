@@ -37,10 +37,21 @@
 //! cache-then-reuse branch can terminate without writing).
 
 use crate::exec::{ExecPool, SendPtr};
-use crate::kernels::gemm::matmul_into;
+use crate::kernels::gemm::matmul_into_isa;
+use crate::kernels::microkernel::Isa;
+use crate::kernels::tune::{self, Family};
 use crate::plan::{GemmStats, SparsePlan};
 use crate::symbols::LayerSymbols;
 use crate::tensor::Tensor;
+
+/// Resolve the microkernel flavor for a GEMM-O call from the tuning table
+/// (falling back to the process default). Keyed on the tile geometry
+/// `(block_q, d_h, d_out)` only — every variant (serial, pool, batched,
+/// symbols) with the same geometry resolves the same flavor, so their
+/// bitwise-equivalence tests survive tuning.
+fn resolve_isa(block_q: usize, d_h: usize, d_out: usize) -> Isa {
+    tune::config_for(Family::GemmO, [block_q, d_h, d_out], 1).isa
+}
 
 /// Contiguous per-head weight panels for `W_out` (`[H·d_h × d_out]`), so
 /// each tile GEMM reads a dense panel. Build once per layer, reuse.
@@ -66,9 +77,13 @@ impl WeightPanels {
 
 /// Accumulate one `(block, head)` tile into a row slab covering rows
 /// `lo..hi`: `out_rows += O_tile · W^h`. Shared by the serial and pool
-/// kernels so both run the identical float sequence.
+/// kernels so both run the identical float sequence. No lane padding here:
+/// the tile GEMM accumulates in place into `out_rows`, whose `d_out`
+/// stride is fixed by the caller.
+#[allow(clippy::too_many_arguments)]
 #[inline]
 fn project_tile_rows(
+    isa: Isa,
     o_cat: &Tensor,
     panels: &WeightPanels,
     h: usize,
@@ -89,13 +104,15 @@ fn project_tile_rows(
             &o_cat.data()[(lo + r) * d_cat + h * d_h..(lo + r) * d_cat + (h + 1) * d_h],
         );
     }
-    matmul_into(&tile, &panels.panels[h], out_rows, bq, d_h, d_out);
+    matmul_into_isa(isa, &tile, &panels.panels[h], out_rows, bq, d_h, d_out);
 }
 
 /// Project one `(block, head)` tile: `out[lo..hi] += O_tile · W^h`, where
 /// `out` is the full `[N × d_out]` buffer.
+#[allow(clippy::too_many_arguments)]
 #[inline]
 fn project_tile(
+    isa: Isa,
     o_cat: &Tensor,
     panels: &WeightPanels,
     h: usize,
@@ -105,7 +122,7 @@ fn project_tile(
     out: &mut [f32],
 ) {
     let d_out = panels.d_out;
-    project_tile_rows(o_cat, panels, h, lo, hi, heads, &mut out[lo * d_out..hi * d_out]);
+    project_tile_rows(isa, o_cat, panels, h, lo, hi, heads, &mut out[lo * d_out..hi * d_out]);
 }
 
 /// Per-row-block head lists, inverted once per call from a plan's CSR
@@ -173,7 +190,22 @@ pub fn gemm_o_dense(o_cat: &Tensor, w: &Tensor) -> Tensor {
 ///   `(i, h)` with `i ∈ plan.heads[h].cached_q` is a *to-be-cached* tile,
 /// * returns `(out, bias)` where `out` is the exact projection for this
 ///   step and `bias` is the refreshed `B_c` (`[N × d_out]`).
+///
+/// Runs the tuned/default microkernel flavor; [`gemm_o_update_isa`] pins
+/// one explicitly.
 pub fn gemm_o_update(
+    o_cat: &Tensor,
+    panels: &WeightPanels,
+    plan: &SparsePlan,
+) -> (Tensor, Tensor, GemmStats) {
+    let isa = resolve_isa(plan.block_q, panels.d_h, panels.d_out);
+    gemm_o_update_isa(isa, o_cat, panels, plan)
+}
+
+/// [`gemm_o_update`] with an explicit microkernel flavor ([`Isa::Scalar`]
+/// reproduces the seed float sequence bit-for-bit).
+pub fn gemm_o_update_isa(
+    isa: Isa,
     o_cat: &Tensor,
     panels: &WeightPanels,
     plan: &SparsePlan,
@@ -191,13 +223,13 @@ pub fn gemm_o_update(
         for &bi in &hp.live_q {
             let lo = bi as usize * block_q;
             let hi = (lo + block_q).min(n);
-            project_tile(o_cat, panels, h, lo, hi, heads, out.data_mut());
+            project_tile(isa, o_cat, panels, h, lo, hi, heads, out.data_mut());
         }
         // Stage 1 tiles: record in the cached bias.
         for &bi in &hp.cached_q {
             let lo = bi as usize * block_q;
             let hi = (lo + block_q).min(n);
-            project_tile(o_cat, panels, h, lo, hi, heads, bias.data_mut());
+            project_tile(isa, o_cat, panels, h, lo, hi, heads, bias.data_mut());
         }
     }
     // The Update step needs the exact dense output: add the bias.
@@ -219,6 +251,7 @@ pub fn gemm_o_update_pool(
     let heads = plan.heads.len();
     let d_out = panels.d_out;
     assert_eq!(plan.t_q, n.div_ceil(block_q), "plan Q-block geometry mismatch");
+    let isa = resolve_isa(block_q, panels.d_h, d_out);
     let mut bias = Tensor::zeros(&[n, d_out]);
     let mut out = Tensor::zeros(&[n, d_out]);
     let tiles = RowTiles::from_plan(plan);
@@ -241,10 +274,10 @@ pub fn gemm_o_update_pool(
             let bias_rows =
                 unsafe { std::slice::from_raw_parts_mut(bias_ptr.0.add(lo * d_out), len) };
             for &h in &tiles.live[bi] {
-                project_tile_rows(o_cat, panels, h as usize, lo, hi, heads, out_rows);
+                project_tile_rows(isa, o_cat, panels, h as usize, lo, hi, heads, out_rows);
             }
             for &h in &tiles.cached[bi] {
-                project_tile_rows(o_cat, panels, h as usize, lo, hi, heads, bias_rows);
+                project_tile_rows(isa, o_cat, panels, h as usize, lo, hi, heads, bias_rows);
             }
         });
     }
@@ -262,12 +295,13 @@ pub fn gemm_o_stage1(o_cat: &Tensor, panels: &WeightPanels, plan: &SparsePlan) -
     let heads = plan.heads.len();
     let d_out = panels.d_out;
     assert_eq!(plan.t_q, n.div_ceil(block_q), "plan Q-block geometry mismatch");
+    let isa = resolve_isa(block_q, panels.d_h, d_out);
     let mut bias = Tensor::zeros(&[n, d_out]);
     for (h, hp) in plan.heads.iter().enumerate() {
         for &bi in &hp.cached_q {
             let lo = bi as usize * block_q;
             let hi = (lo + block_q).min(n);
-            project_tile(o_cat, panels, h, lo, hi, heads, bias.data_mut());
+            project_tile(isa, o_cat, panels, h, lo, hi, heads, bias.data_mut());
         }
     }
     bias
@@ -286,11 +320,12 @@ pub fn gemm_o_stage1_pool(
     let heads = plan.heads.len();
     let d_out = panels.d_out;
     assert_eq!(plan.t_q, n.div_ceil(block_q), "plan Q-block geometry mismatch");
+    let isa = resolve_isa(block_q, panels.d_h, d_out);
     let mut bias = Tensor::zeros(&[n, d_out]);
     let tiles = RowTiles::from_plan(plan);
     for_each_row_block(pool, plan.t_q, n, block_q, d_out, bias.data_mut().as_mut_ptr(), |bi, lo, hi, rows| {
         for &h in &tiles.cached[bi] {
-            project_tile_rows(o_cat, panels, h as usize, lo, hi, heads, rows);
+            project_tile_rows(isa, o_cat, panels, h as usize, lo, hi, heads, rows);
         }
     });
     bias
@@ -302,7 +337,23 @@ pub fn gemm_o_stage1_pool(
 ///   are valid** (cached tiles were never written — that is the point),
 /// * `bias` — `OP_reuse(B_c)`: the (possibly Taylor-forecast) cached bias,
 /// * returns the projected output plus tile statistics.
+///
+/// Runs the tuned/default microkernel flavor; [`gemm_o_dispatch_isa`] pins
+/// one explicitly.
 pub fn gemm_o_dispatch(
+    o_cat: &Tensor,
+    panels: &WeightPanels,
+    plan: &SparsePlan,
+    bias: &Tensor,
+) -> (Tensor, GemmStats) {
+    let isa = resolve_isa(plan.block_q, panels.d_h, panels.d_out);
+    gemm_o_dispatch_isa(isa, o_cat, panels, plan, bias)
+}
+
+/// [`gemm_o_dispatch`] with an explicit microkernel flavor ([`Isa::Scalar`]
+/// reproduces the seed float sequence bit-for-bit).
+pub fn gemm_o_dispatch_isa(
+    isa: Isa,
     o_cat: &Tensor,
     panels: &WeightPanels,
     plan: &SparsePlan,
@@ -321,7 +372,7 @@ pub fn gemm_o_dispatch(
         for &bi in &hp.live_q {
             let lo = bi as usize * block_q;
             let hi = (lo + block_q).min(n);
-            project_tile(o_cat, panels, h, lo, hi, heads, out.data_mut());
+            project_tile(isa, o_cat, panels, h, lo, hi, heads, out.data_mut());
         }
     }
     (out, plan.gemm_stats())
@@ -342,11 +393,12 @@ pub fn gemm_o_dispatch_pool(
     let d_out = panels.d_out;
     assert_eq!(bias.shape(), &[n, d_out]);
     assert_eq!(plan.t_q, n.div_ceil(block_q), "plan Q-block geometry mismatch");
+    let isa = resolve_isa(block_q, panels.d_h, d_out);
     let mut out = bias.clone();
     let tiles = RowTiles::from_plan(plan);
     for_each_row_block(pool, plan.t_q, n, block_q, d_out, out.data_mut().as_mut_ptr(), |bi, lo, hi, rows| {
         for &h in &tiles.live[bi] {
-            project_tile_rows(o_cat, panels, h as usize, lo, hi, heads, rows);
+            project_tile_rows(isa, o_cat, panels, h as usize, lo, hi, heads, rows);
         }
     });
     (out, plan.gemm_stats())
@@ -389,6 +441,7 @@ pub fn gemm_o_dispatch_batched(
     let (n, heads, d_out) = batched_geometry(os, panels, plan);
     assert_eq!(os.len(), biases.len());
     let block_q = plan.block_q;
+    let isa = resolve_isa(block_q, panels.d_h, d_out);
     let mut outs: Vec<Tensor> = biases
         .iter()
         .map(|b| {
@@ -415,7 +468,7 @@ pub fn gemm_o_dispatch_batched(
                 std::slice::from_raw_parts_mut(ptrs[r].0.add(lo * d_out), (hi - lo) * d_out)
             };
             for &h in &tiles.live[bi] {
-                project_tile_rows(os[r], panels, h as usize, lo, hi, heads, rows);
+                project_tile_rows(isa, os[r], panels, h as usize, lo, hi, heads, rows);
             }
         });
     }
@@ -433,6 +486,7 @@ pub fn gemm_o_stage1_batched(
 ) -> Vec<Tensor> {
     let (n, heads, d_out) = batched_geometry(os, panels, plan);
     let block_q = plan.block_q;
+    let isa = resolve_isa(block_q, panels.d_h, d_out);
     let mut biases: Vec<Tensor> =
         (0..os.len()).map(|_| Tensor::zeros(&[n, d_out])).collect();
     let tiles = RowTiles::from_plan(plan);
@@ -452,7 +506,7 @@ pub fn gemm_o_stage1_batched(
                 std::slice::from_raw_parts_mut(ptrs[r].0.add(lo * d_out), (hi - lo) * d_out)
             };
             for &h in &tiles.cached[bi] {
-                project_tile_rows(os[r], panels, h as usize, lo, hi, heads, rows);
+                project_tile_rows(isa, os[r], panels, h as usize, lo, hi, heads, rows);
             }
         });
     }
@@ -470,6 +524,7 @@ pub fn gemm_o_update_batched(
 ) -> Vec<(Tensor, Tensor, GemmStats)> {
     let (n, heads, d_out) = batched_geometry(os, panels, plan);
     let block_q = plan.block_q;
+    let isa = resolve_isa(block_q, panels.d_h, d_out);
     let mut outs: Vec<Tensor> = (0..os.len()).map(|_| Tensor::zeros(&[n, d_out])).collect();
     let mut biases: Vec<Tensor> =
         (0..os.len()).map(|_| Tensor::zeros(&[n, d_out])).collect();
@@ -495,10 +550,10 @@ pub fn gemm_o_update_batched(
             let bias_rows =
                 unsafe { std::slice::from_raw_parts_mut(bias_ptrs[r].0.add(lo * d_out), len) };
             for &h in &tiles.live[bi] {
-                project_tile_rows(os[r], panels, h as usize, lo, hi, heads, out_rows);
+                project_tile_rows(isa, os[r], panels, h as usize, lo, hi, heads, out_rows);
             }
             for &h in &tiles.cached[bi] {
-                project_tile_rows(os[r], panels, h as usize, lo, hi, heads, bias_rows);
+                project_tile_rows(isa, os[r], panels, h as usize, lo, hi, heads, bias_rows);
             }
         });
     }
@@ -521,6 +576,9 @@ pub fn gemm_o_update_symbols(
     let n = o_cat.rows();
     let heads = syms.heads.len();
     let d_out = panels.d_out;
+    // Same geometry key as the plan-based kernel, so plan == symbols stays
+    // bitwise under tuning.
+    let isa = resolve_isa(block_q, panels.d_h, d_out);
     let t_q = n.div_ceil(block_q);
     let mut bias = Tensor::zeros(&[n, d_out]);
     let mut out = Tensor::zeros(&[n, d_out]);
@@ -532,11 +590,11 @@ pub fn gemm_o_update_symbols(
             let hi = (lo + block_q).min(n);
             if hs.f(bi) {
                 // Stage 2 tile: always updated during Dispatch.
-                project_tile(o_cat, panels, h, lo, hi, heads, out.data_mut());
+                project_tile(isa, o_cat, panels, h, lo, hi, heads, out.data_mut());
                 stats.computed_tiles += 1;
             } else {
                 // Stage 1 tile: record in the cached bias.
-                project_tile(o_cat, panels, h, lo, hi, heads, bias.data_mut());
+                project_tile(isa, o_cat, panels, h, lo, hi, heads, bias.data_mut());
             }
         }
     }
@@ -554,6 +612,7 @@ pub fn gemm_o_stage1_symbols(
     let n = o_cat.rows();
     let heads = syms.heads.len();
     let d_out = panels.d_out;
+    let isa = resolve_isa(block_q, panels.d_h, d_out);
     let t_q = n.div_ceil(block_q);
     let mut bias = Tensor::zeros(&[n, d_out]);
     for (h, hs) in syms.heads.iter().enumerate() {
@@ -563,7 +622,7 @@ pub fn gemm_o_stage1_symbols(
             }
             let lo = bi * block_q;
             let hi = (lo + block_q).min(n);
-            project_tile(o_cat, panels, h, lo, hi, heads, bias.data_mut());
+            project_tile(isa, o_cat, panels, h, lo, hi, heads, bias.data_mut());
         }
     }
     bias
@@ -580,6 +639,7 @@ pub fn gemm_o_dispatch_symbols(
     let n = o_cat.rows();
     let heads = syms.heads.len();
     let d_out = panels.d_out;
+    let isa = resolve_isa(block_q, panels.d_h, d_out);
     assert_eq!(bias.shape(), &[n, d_out]);
     let t_q = n.div_ceil(block_q);
     let mut out = bias.clone();
@@ -593,7 +653,7 @@ pub fn gemm_o_dispatch_symbols(
             stats.computed_tiles += 1;
             let lo = bi * block_q;
             let hi = (lo + block_q).min(n);
-            project_tile(o_cat, panels, h, lo, hi, heads, out.data_mut());
+            project_tile(isa, o_cat, panels, h, lo, hi, heads, out.data_mut());
         }
     }
     (out, stats)

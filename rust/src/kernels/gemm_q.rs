@@ -14,9 +14,17 @@
 //! **bitwise-identical** to [`gemm_q`] (property-tested in
 //! `rust/tests/exec_runtime.rs`). The seed symbol-decoding variant is
 //! retained as [`gemm_q_symbols`] for the plan-equivalence property tests.
+//!
+//! Under the SIMD microkernel flavor the per-head weight panels are
+//! gathered with their rows zero-padded to the vector lane width
+//! ([`microkernel::LANES`]), so the tile GEMM's column loop never enters a
+//! scalar remainder; the pad columns are dropped on copy-out. The scalar
+//! flavor gathers unpadded panels and is byte-identical to the seed kernel.
 
 use crate::exec::{ExecPool, SendPtr};
-use crate::kernels::gemm::matmul_into;
+use crate::kernels::gemm::matmul_into_isa;
+use crate::kernels::microkernel::{self, Isa};
+use crate::kernels::tune::{self, Family, KernelConfig};
 use crate::plan::SparsePlan;
 pub use crate::plan::GemmStats;
 use crate::symbols::LayerSymbols;
@@ -27,39 +35,73 @@ pub fn gemm_dense(x: &Tensor, w: &Tensor) -> Tensor {
     crate::kernels::gemm::matmul(x, w)
 }
 
+/// [`gemm_dense`] with an explicit microkernel flavor (benches pin
+/// scalar/SIMD baseline rows).
+pub fn gemm_dense_isa(isa: Isa, x: &Tensor, w: &Tensor) -> Tensor {
+    let (m, k) = (x.rows(), x.cols());
+    let n = w.cols();
+    assert_eq!(w.rows(), k, "gemm_dense inner dims: {} vs {}", k, w.rows());
+    let mut y = Tensor::zeros(&[m, n]);
+    matmul_into_isa(isa, x.data(), w.data(), y.data_mut(), m, k, n);
+    y
+}
+
+/// Resolve the kernel configuration for a GEMM-Q call from the tuning
+/// table (falling back to the heuristic). Keyed on the tile geometry
+/// `(block_q, d_in, d_h)`; the ISA component is threads-independent, so
+/// the serial, pool, batched, and symbols variants all resolve the same
+/// flavor and their bitwise-equivalence tests survive tuning.
+fn resolve_cfg(block_q: usize, d_in: usize, d_h: usize, threads: usize) -> KernelConfig {
+    tune::config_for(Family::GemmQ, [block_q, d_in, d_h], threads)
+}
+
+/// Panel row stride for a flavor: the SIMD flavor pads head panels to the
+/// vector lane width so the column loop never enters a scalar remainder.
+#[inline]
+fn panel_stride(isa: Isa, d_h: usize) -> usize {
+    match isa {
+        Isa::Scalar => d_h,
+        Isa::Simd => d_h.next_multiple_of(microkernel::LANES),
+    }
+}
+
 /// Copy head `h`'s columns of `w` (`[d_in × heads·d_h]`) into a contiguous
-/// `[d_in × d_h]` panel.
-fn gather_head_panel(w: &Tensor, h: usize, d_h: usize) -> Vec<f32> {
+/// `[d_in × d_pad]` panel; columns `d_h..d_pad` are zero padding.
+fn gather_head_panel(w: &Tensor, h: usize, d_h: usize, d_pad: usize) -> Vec<f32> {
     let d_in = w.rows();
     let d_out = w.cols();
-    let mut w_h = vec![0.0f32; d_in * d_h];
+    let mut w_h = vec![0.0f32; d_in * d_pad];
     for r in 0..d_in {
-        w_h[r * d_h..(r + 1) * d_h]
+        w_h[r * d_pad..r * d_pad + d_h]
             .copy_from_slice(&w.data()[r * d_out + h * d_h..r * d_out + (h + 1) * d_h]);
     }
     w_h
 }
 
 /// Compute one `(block, head)` tile of the projection into a local
-/// `[bq × d_h]` buffer (shared by the serial and pool kernels so both run
-/// the identical float sequence).
+/// `[bq × d_pad]` buffer (shared by the serial and pool kernels so both run
+/// the identical float sequence). Columns `d_h..d_pad` are lane padding
+/// and stay zero; callers copy out the first `d_h` of each row.
+#[allow(clippy::too_many_arguments)]
 #[inline]
 fn compute_q_tile(
+    isa: Isa,
     x: &Tensor,
     w_h: &[f32],
     h: usize,
     d_h: usize,
+    d_pad: usize,
     lo: usize,
     hi: usize,
     bias: Option<&[f32]>,
 ) -> Vec<f32> {
     let d_in = x.cols();
     let bq = hi - lo;
-    let mut tile = vec![0.0f32; bq * d_h];
-    matmul_into(&x.data()[lo * d_in..hi * d_in], w_h, &mut tile, bq, d_in, d_h);
+    let mut tile = vec![0.0f32; bq * d_pad];
+    matmul_into_isa(isa, &x.data()[lo * d_in..hi * d_in], w_h, &mut tile, bq, d_in, d_pad);
     if let Some(b) = bias {
-        for row in tile.chunks_exact_mut(d_h) {
-            for (c, v) in row.iter_mut().enumerate() {
+        for row in tile.chunks_exact_mut(d_pad) {
+            for (c, v) in row.iter_mut().take(d_h).enumerate() {
                 *v += b[h * d_h + c];
             }
         }
@@ -71,20 +113,22 @@ fn compute_q_tile(
 #[allow(clippy::too_many_arguments)]
 #[inline]
 fn project_q_tile(
+    isa: Isa,
     x: &Tensor,
     w_h: &[f32],
     y: &mut Tensor,
     h: usize,
     d_h: usize,
+    d_pad: usize,
     d_out: usize,
     lo: usize,
     hi: usize,
     bias: Option<&[f32]>,
 ) {
-    let tile = compute_q_tile(x, w_h, h, d_h, lo, hi, bias);
-    for (r, row) in tile.chunks_exact(d_h).enumerate() {
+    let tile = compute_q_tile(isa, x, w_h, h, d_h, d_pad, lo, hi, bias);
+    for (r, row) in tile.chunks_exact(d_pad).enumerate() {
         y.data_mut()[(lo + r) * d_out + h * d_h..(lo + r) * d_out + (h + 1) * d_h]
-            .copy_from_slice(row);
+            .copy_from_slice(&row[..d_h]);
     }
 }
 
@@ -98,8 +142,23 @@ fn project_q_tile(
 ///
 /// Rows of skipped tiles are left zero — the attention kernel never reads
 /// them (their CTA takes the cache-then-reuse path). `bias` (`[H·d_h]`),
-/// when given, is added to computed tiles only.
+/// when given, is added to computed tiles only. Runs the tuned/default
+/// microkernel flavor; [`gemm_q_isa`] pins one explicitly.
 pub fn gemm_q(
+    x: &Tensor,
+    w: &Tensor,
+    plan: &SparsePlan,
+    bias: Option<&[f32]>,
+) -> (Tensor, GemmStats) {
+    let heads = plan.heads.len().max(1);
+    let isa = resolve_cfg(plan.block_q, x.cols(), w.cols() / heads, 1).isa;
+    gemm_q_isa(isa, x, w, plan, bias)
+}
+
+/// [`gemm_q`] with an explicit microkernel flavor ([`Isa::Scalar`]
+/// reproduces the seed float sequence bit-for-bit).
+pub fn gemm_q_isa(
+    isa: Isa,
     x: &Tensor,
     w: &Tensor,
     plan: &SparsePlan,
@@ -114,6 +173,7 @@ pub fn gemm_q(
     assert_eq!(w.rows(), d_in);
     assert_eq!(d_out % heads, 0, "W output dim must split across heads");
     let d_h = d_out / heads;
+    let d_pad = panel_stride(isa, d_h);
     assert_eq!(plan.t_q, n.div_ceil(block_q), "plan Q-block geometry mismatch");
     let mut y = Tensor::zeros(&[n, d_out]);
 
@@ -121,11 +181,11 @@ pub fn gemm_q(
         if hp.live_q.is_empty() {
             continue; // whole head cached: skip even the panel gather
         }
-        let w_h = gather_head_panel(w, h, d_h);
+        let w_h = gather_head_panel(w, h, d_h, d_pad);
         for &bi in &hp.live_q {
             let lo = bi as usize * block_q;
             let hi = (lo + block_q).min(n);
-            project_q_tile(x, &w_h, &mut y, h, d_h, d_out, lo, hi, bias);
+            project_q_tile(isa, x, &w_h, &mut y, h, d_h, d_pad, d_out, lo, hi, bias);
         }
     }
     (y, plan.gemm_stats())
@@ -137,12 +197,29 @@ pub fn gemm_q(
 /// `(row-block × head-column)` rectangle of `y`, and every element is
 /// produced by exactly one tile via the same `compute_q_tile` float
 /// sequence — so the output is bitwise-identical to the serial kernel.
+/// Resolves the tuned/default configuration; [`gemm_q_pool_with`] pins one
+/// explicitly.
 pub fn gemm_q_pool(
     x: &Tensor,
     w: &Tensor,
     plan: &SparsePlan,
     bias: Option<&[f32]>,
     pool: &ExecPool,
+) -> (Tensor, GemmStats) {
+    gemm_q_pool_with(x, w, plan, bias, pool, None)
+}
+
+/// [`gemm_q_pool`] with an explicit kernel configuration (`None` resolves
+/// the tuned/default one). The configuration's chunking only regroups
+/// tiles into tasks — any configuration yields bitwise-identical output
+/// (property-tested in `rust/tests/simd_tune.rs`).
+pub fn gemm_q_pool_with(
+    x: &Tensor,
+    w: &Tensor,
+    plan: &SparsePlan,
+    bias: Option<&[f32]>,
+    pool: &ExecPool,
+    cfg: Option<KernelConfig>,
 ) -> (Tensor, GemmStats) {
     let block_q = plan.block_q;
     let n = x.rows();
@@ -153,6 +230,8 @@ pub fn gemm_q_pool(
     assert_eq!(w.rows(), d_in);
     assert_eq!(d_out % heads, 0, "W output dim must split across heads");
     let d_h = d_out / heads;
+    let cfg = cfg.unwrap_or_else(|| resolve_cfg(block_q, d_in, d_h, pool.size()));
+    let d_pad = panel_stride(cfg.isa, d_h);
     assert_eq!(plan.t_q, n.div_ceil(block_q), "plan Q-block geometry mismatch");
     let mut y = Tensor::zeros(&[n, d_out]);
 
@@ -163,20 +242,16 @@ pub fn gemm_q_pool(
             if plan.heads[h].live_q.is_empty() {
                 Vec::new()
             } else {
-                gather_head_panel(w, h, d_h)
+                gather_head_panel(w, h, d_h, d_pad)
             }
         })
         .collect();
-    let mut tiles: Vec<(u32, u32)> = Vec::new();
-    for (h, hp) in plan.heads.iter().enumerate() {
-        for &bi in &hp.live_q {
-            tiles.push((h as u32, bi));
-        }
-    }
+    let tiles = plan.live_tiles();
     // Chunk so each task is a slab of tiles (amortizes dispatch overhead)
-    // while still leaving a few tasks per worker for load balancing;
-    // `FO_CHUNK` overrides the heuristic (see `exec::tile_chunk`).
-    let chunk = crate::exec::tile_chunk(tiles.len(), pool.size());
+    // while still leaving tasks per worker for load balancing; precedence
+    // is `FO_CHUNK` override > tuned tasks-per-thread > heuristic (see
+    // `KernelConfig::chunk`).
+    let chunk = cfg.chunk(tiles.len(), pool.size());
     let n_tasks = tiles.len().div_ceil(chunk);
     {
         let yp = SendPtr(y.data_mut().as_mut_ptr());
@@ -185,8 +260,8 @@ pub fn gemm_q_pool(
                 let (h, bi) = (h as usize, bi as usize);
                 let lo = bi * block_q;
                 let hi = (lo + block_q).min(n);
-                let tile = compute_q_tile(x, &panels[h], h, d_h, lo, hi, bias);
-                for (r, row) in tile.chunks_exact(d_h).enumerate() {
+                let tile = compute_q_tile(cfg.isa, x, &panels[h], h, d_h, d_pad, lo, hi, bias);
+                for (r, row) in tile.chunks_exact(d_pad).enumerate() {
                     let off = (lo + r) * d_out + h * d_h;
                     // SAFETY: tiles are unique (head, block) pairs, so the
                     // `(rows lo..hi) × (cols h·d_h..)` rectangles written
@@ -237,6 +312,10 @@ pub fn gemm_q_batched(
     assert_eq!(w.rows(), d_in);
     assert_eq!(d_out % heads, 0, "W output dim must split across heads");
     let d_h = d_out / heads;
+    // Same `(block_q, d_in, d_h)` key as the serial kernel, so each
+    // request's output stays bitwise-identical to `gemm_q` under tuning.
+    let cfg = resolve_cfg(block_q, d_in, d_h, pool.size());
+    let d_pad = panel_stride(cfg.isa, d_h);
     assert_eq!(plan.t_q, n.div_ceil(block_q), "plan Q-block geometry mismatch");
     let mut ys: Vec<Tensor> = (0..xs.len()).map(|_| Tensor::zeros(&[n, d_out])).collect();
 
@@ -246,17 +325,12 @@ pub fn gemm_q_batched(
             if plan.heads[h].live_q.is_empty() {
                 Vec::new()
             } else {
-                gather_head_panel(w, h, d_h)
+                gather_head_panel(w, h, d_h, d_pad)
             }
         })
         .collect();
-    let mut tiles: Vec<(u32, u32)> = Vec::new();
-    for (h, hp) in plan.heads.iter().enumerate() {
-        for &bi in &hp.live_q {
-            tiles.push((h as u32, bi));
-        }
-    }
-    let chunk = crate::exec::tile_chunk(tiles.len(), pool.size());
+    let tiles = plan.live_tiles();
+    let chunk = cfg.chunk(tiles.len(), pool.size());
     let chunks_per_req = tiles.len().div_ceil(chunk);
     let n_tasks = xs.len() * chunks_per_req;
     {
@@ -271,8 +345,8 @@ pub fn gemm_q_batched(
                 let (h, bi) = (h as usize, bi as usize);
                 let lo = bi * block_q;
                 let hi = (lo + block_q).min(n);
-                let tile = compute_q_tile(x, &panels[h], h, d_h, lo, hi, bias);
-                for (row_i, row) in tile.chunks_exact(d_h).enumerate() {
+                let tile = compute_q_tile(cfg.isa, x, &panels[h], h, d_h, d_pad, lo, hi, bias);
+                for (row_i, row) in tile.chunks_exact(d_pad).enumerate() {
                     let off = (lo + row_i) * d_out + h * d_h;
                     // SAFETY: (request, head, block) triples are unique
                     // across tasks, so the written rectangles are disjoint;
@@ -305,12 +379,16 @@ pub fn gemm_q_symbols(
     assert_eq!(w.rows(), d_in);
     assert_eq!(d_out % heads, 0, "W output dim must split across heads");
     let d_h = d_out / heads;
+    // Same geometry key as the plan-based kernel, so plan == symbols stays
+    // bitwise under tuning.
+    let isa = resolve_cfg(block_q, d_in, d_h, 1).isa;
+    let d_pad = panel_stride(isa, d_h);
     let t_q = n.div_ceil(block_q);
     let mut y = Tensor::zeros(&[n, d_out]);
     let mut stats = GemmStats { total_tiles: t_q * heads, ..Default::default() };
 
     for (h, hs) in syms.heads.iter().enumerate() {
-        let w_h = gather_head_panel(w, h, d_h);
+        let w_h = gather_head_panel(w, h, d_h, d_pad);
         for bi in 0..t_q {
             if !hs.f(bi) {
                 continue; // CTA exits immediately (paper: "without any further operations")
@@ -318,7 +396,7 @@ pub fn gemm_q_symbols(
             stats.computed_tiles += 1;
             let lo = bi * block_q;
             let hi = (lo + block_q).min(n);
-            project_q_tile(x, &w_h, &mut y, h, d_h, d_out, lo, hi, bias);
+            project_q_tile(isa, x, &w_h, &mut y, h, d_h, d_pad, d_out, lo, hi, bias);
         }
     }
     (y, stats)

@@ -1,0 +1,623 @@
+//! **SIMD microkernels** — the explicit vector layer under every GEMM /
+//! attention inner loop (PR 6 tentpole).
+//!
+//! The seed kernels relied on LLVM auto-vectorizing an axpy loop; this
+//! module makes the lane structure explicit. Each primitive exists in two
+//! flavors selected by an [`Isa`] value threaded through the kernel entry
+//! points:
+//!
+//! * [`Isa::Scalar`] — portable loops that replicate the seed kernels'
+//!   float sequences **exactly** (same association order, no FMA). This is
+//!   the property-test oracle: every pool/batched/plan bitwise-equivalence
+//!   invariant in `rust/tests/` is stated against it.
+//! * [`Isa::Simd`] — `core::arch` vector paths behind runtime feature
+//!   detection: AVX2+FMA on `x86_64` (via `is_x86_feature_detected!`),
+//!   NEON on `aarch64` (baseline feature), scalar elsewhere. FMA and
+//!   lane-wise horizontal sums change the reduction order, so Simd results
+//!   are *tolerance*-close, not bitwise-equal, to Scalar (bound documented
+//!   in `rust/tests/simd_tune.rs`).
+//!
+//! A [`Isa::Simd`] request on hardware without the detected features
+//! silently degrades to the scalar loops — constructing the enum is never
+//! unsafe; the `unsafe` target-feature calls are confined behind the
+//! runtime check in this module.
+//!
+//! The primitives mirror the exact shapes the kernels need:
+//! [`axpy4`]/[`axpy1`] are the `matmul_into` register-blocked update,
+//! [`axpy2`]/[`axpy1`] the attention `P·V` update, [`dot`] the
+//! `matmul_nt_into` inner product and [`dot8`] the attention `QKᵀ`
+//! 8-lane-accumulator inner product (two distinct scalar flavors because
+//! the seed kernels used two distinct float sequences).
+
+#![warn(missing_docs)]
+
+/// Accumulator lane width of the scalar `dot8` flavor and the unit the
+/// GEMM-Q panel shim pads row lengths to (see
+/// [`gemm_q`](crate::kernels::gemm_q)); matches one AVX2 `f32x8` register.
+pub const LANES: usize = 8;
+
+/// Which microkernel flavor a kernel call runs with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable scalar loops — bit-for-bit the seed kernels' float
+    /// sequences; the oracle every SIMD path is property-tested against.
+    Scalar,
+    /// Runtime-detected vector path: AVX2+FMA on `x86_64`, NEON on
+    /// `aarch64`; degrades to [`Isa::Scalar`] loops when the features are
+    /// absent.
+    Simd,
+}
+
+/// Whether a vector path exists on this machine (`x86_64`: AVX2 and FMA
+/// detected at runtime; `aarch64`: always — NEON is a baseline feature;
+/// other targets: never). Detection runs once and is cached.
+pub fn simd_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        static AVAIL: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+        *AVAIL.get_or_init(|| {
+            is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+        })
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        true
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        false
+    }
+}
+
+/// Process-wide default ISA, resolved once from the **`FO_SIMD`**
+/// environment variable: `0`/`scalar`/`off` forces [`Isa::Scalar`];
+/// anything else (including unset) selects [`Isa::Simd`] when
+/// [`simd_available`], else [`Isa::Scalar`]. Kernel entry points without
+/// an explicit `_isa` suffix resolve through this (possibly refined by the
+/// [`tune`](crate::kernels::tune) table), so one process always picks one
+/// deterministic flavor — which is what keeps the pool/batched bitwise
+/// invariants intact.
+pub fn active() -> Isa {
+    static ACTIVE: std::sync::OnceLock<Isa> = std::sync::OnceLock::new();
+    *ACTIVE.get_or_init(|| match std::env::var("FO_SIMD").as_deref() {
+        Ok("0") | Ok("scalar") | Ok("off") => Isa::Scalar,
+        _ => {
+            if simd_available() {
+                Isa::Simd
+            } else {
+                Isa::Scalar
+            }
+        }
+    })
+}
+
+/// Short name of the path `isa` actually executes on this machine
+/// (`"scalar"`, `"avx2"` or `"neon"`) — recorded in `BENCH_*.json`
+/// headers and the tune-cache file.
+pub fn isa_name(isa: Isa) -> &'static str {
+    match isa {
+        Isa::Scalar => "scalar",
+        Isa::Simd => {
+            if cfg!(target_arch = "aarch64") {
+                "neon"
+            } else if simd_available() {
+                "avx2"
+            } else {
+                "scalar"
+            }
+        }
+    }
+}
+
+/// Parse an ISA name as written by [`isa_name`] / accepted by `FO_SIMD`.
+pub fn parse_isa(s: &str) -> Option<Isa> {
+    match s {
+        "scalar" => Some(Isa::Scalar),
+        "simd" | "avx2" | "neon" => Some(Isa::Simd),
+        _ => None,
+    }
+}
+
+// ---- public dispatched primitives ----
+
+/// `c[j] += a * b[j]` — the seed `matmul_into` remainder / attention `P·V`
+/// single-column update.
+#[inline]
+pub fn axpy1(isa: Isa, c: &mut [f32], a: f32, b: &[f32]) {
+    match isa {
+        Isa::Scalar => scalar::axpy1(c, a, b),
+        Isa::Simd => vec::axpy1(c, a, b),
+    }
+}
+
+/// `c[j] += a0 * b0[j] + a1 * b1[j]` — the attention `P·V` two-column
+/// update.
+#[inline]
+pub fn axpy2(isa: Isa, c: &mut [f32], a0: f32, b0: &[f32], a1: f32, b1: &[f32]) {
+    match isa {
+        Isa::Scalar => scalar::axpy2(c, a0, b0, a1, b1),
+        Isa::Simd => vec::axpy2(c, a0, b0, a1, b1),
+    }
+}
+
+/// `c[j] += a[0]·b0[j] + a[1]·b1[j] + a[2]·b2[j] + a[3]·b3[j]` — the seed
+/// `matmul_into` register-blocked (p-unrolled-by-4) update.
+#[inline]
+pub fn axpy4(isa: Isa, c: &mut [f32], a: [f32; 4], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) {
+    match isa {
+        Isa::Scalar => scalar::axpy4(c, a, b0, b1, b2, b3),
+        Isa::Simd => vec::axpy4(c, a, b0, b1, b2, b3),
+    }
+}
+
+/// `Σ a[p]·b[p]` with the seed `matmul_nt_into` float sequence (plain
+/// left-to-right accumulation) under [`Isa::Scalar`].
+#[inline]
+pub fn dot(isa: Isa, a: &[f32], b: &[f32]) -> f32 {
+    match isa {
+        Isa::Scalar => scalar::dot(a, b),
+        Isa::Simd => vec::dot(a, b),
+    }
+}
+
+/// `Σ a[p]·b[p]` with the seed attention `QKᵀ` float sequence (8 lane
+/// accumulators summed left-to-right, then a scalar tail) under
+/// [`Isa::Scalar`]. Under [`Isa::Simd`] this coincides with [`dot`].
+#[inline]
+pub fn dot8(isa: Isa, a: &[f32], b: &[f32]) -> f32 {
+    match isa {
+        Isa::Scalar => scalar::dot8(a, b),
+        Isa::Simd => vec::dot(a, b),
+    }
+}
+
+// ---- scalar oracle (the seed kernels' exact float sequences) ----
+
+mod scalar {
+    use super::LANES;
+
+    #[inline]
+    pub fn axpy1(c: &mut [f32], a: f32, b: &[f32]) {
+        for (cv, &bv) in c.iter_mut().zip(b) {
+            *cv += a * bv;
+        }
+    }
+
+    #[inline]
+    pub fn axpy2(c: &mut [f32], a0: f32, b0: &[f32], a1: f32, b1: &[f32]) {
+        for ((cv, &x), &y) in c.iter_mut().zip(b0).zip(b1) {
+            *cv += a0 * x + a1 * y;
+        }
+    }
+
+    #[inline]
+    pub fn axpy4(c: &mut [f32], a: [f32; 4], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) {
+        let n = c.len();
+        for j in 0..n {
+            c[j] += a[0] * b0[j] + a[1] * b1[j] + a[2] * b2[j] + a[3] * b3[j];
+        }
+    }
+
+    #[inline]
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let mut s = 0.0f32;
+        for (&x, &y) in a.iter().zip(b) {
+            s += x * y;
+        }
+        s
+    }
+
+    #[inline]
+    pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
+        let mut acc = [0.0f32; LANES];
+        let ac = a.chunks_exact(LANES);
+        let bc = b.chunks_exact(LANES);
+        let (ar, br) = (ac.remainder(), bc.remainder());
+        for (xa, ya) in ac.zip(bc) {
+            for l in 0..LANES {
+                acc[l] += xa[l] * ya[l];
+            }
+        }
+        let mut s: f32 = acc.iter().sum();
+        for (&x, &y) in ar.iter().zip(br) {
+            s += x * y;
+        }
+        s
+    }
+}
+
+// ---- per-arch vector dispatch ----
+
+#[cfg(target_arch = "x86_64")]
+mod vec {
+    use super::{avx2, scalar, simd_available};
+
+    #[inline]
+    pub fn axpy1(c: &mut [f32], a: f32, b: &[f32]) {
+        if simd_available() {
+            // SAFETY: avx2+fma verified present by `simd_available`.
+            unsafe { avx2::axpy1(c, a, b) }
+        } else {
+            scalar::axpy1(c, a, b)
+        }
+    }
+
+    #[inline]
+    pub fn axpy2(c: &mut [f32], a0: f32, b0: &[f32], a1: f32, b1: &[f32]) {
+        if simd_available() {
+            // SAFETY: avx2+fma verified present by `simd_available`.
+            unsafe { avx2::axpy2(c, a0, b0, a1, b1) }
+        } else {
+            scalar::axpy2(c, a0, b0, a1, b1)
+        }
+    }
+
+    #[inline]
+    pub fn axpy4(c: &mut [f32], a: [f32; 4], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) {
+        if simd_available() {
+            // SAFETY: avx2+fma verified present by `simd_available`.
+            unsafe { avx2::axpy4(c, a, b0, b1, b2, b3) }
+        } else {
+            scalar::axpy4(c, a, b0, b1, b2, b3)
+        }
+    }
+
+    #[inline]
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        if simd_available() {
+            // SAFETY: avx2+fma verified present by `simd_available`.
+            unsafe { avx2::dot(a, b) }
+        } else {
+            scalar::dot(a, b)
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod vec {
+    pub use super::neon::{axpy1, axpy2, axpy4, dot};
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod vec {
+    pub use super::scalar::{axpy1, axpy2, axpy4, dot};
+}
+
+// ---- AVX2+FMA implementations (x86_64) ----
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! All functions require AVX2 and FMA; callers must verify via
+    //! `simd_available()` before dispatching here.
+
+    use core::arch::x86_64::*;
+
+    /// Horizontal sum of one `f32x8` register.
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps::<1>(v);
+        let s = _mm_add_ps(lo, hi);
+        let shuf = _mm_movehdup_ps(s);
+        let sums = _mm_add_ps(s, shuf);
+        let hi2 = _mm_movehl_ps(shuf, sums);
+        _mm_cvtss_f32(_mm_add_ss(sums, hi2))
+    }
+
+    /// # Safety
+    /// Requires AVX2+FMA.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy1(c: &mut [f32], a: f32, b: &[f32]) {
+        let n = c.len().min(b.len());
+        let av = _mm256_set1_ps(a);
+        let mut j = 0;
+        while j + 8 <= n {
+            let cv = _mm256_loadu_ps(c.as_ptr().add(j));
+            let bv = _mm256_loadu_ps(b.as_ptr().add(j));
+            _mm256_storeu_ps(c.as_mut_ptr().add(j), _mm256_fmadd_ps(av, bv, cv));
+            j += 8;
+        }
+        while j < n {
+            c[j] += a * b[j];
+            j += 1;
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2+FMA.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy2(c: &mut [f32], a0: f32, b0: &[f32], a1: f32, b1: &[f32]) {
+        let n = c.len().min(b0.len()).min(b1.len());
+        let a0v = _mm256_set1_ps(a0);
+        let a1v = _mm256_set1_ps(a1);
+        let mut j = 0;
+        while j + 8 <= n {
+            let mut cv = _mm256_loadu_ps(c.as_ptr().add(j));
+            cv = _mm256_fmadd_ps(a0v, _mm256_loadu_ps(b0.as_ptr().add(j)), cv);
+            cv = _mm256_fmadd_ps(a1v, _mm256_loadu_ps(b1.as_ptr().add(j)), cv);
+            _mm256_storeu_ps(c.as_mut_ptr().add(j), cv);
+            j += 8;
+        }
+        while j < n {
+            c[j] += a0 * b0[j] + a1 * b1[j];
+            j += 1;
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2+FMA.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy4(
+        c: &mut [f32],
+        a: [f32; 4],
+        b0: &[f32],
+        b1: &[f32],
+        b2: &[f32],
+        b3: &[f32],
+    ) {
+        let n = c.len();
+        let a0v = _mm256_set1_ps(a[0]);
+        let a1v = _mm256_set1_ps(a[1]);
+        let a2v = _mm256_set1_ps(a[2]);
+        let a3v = _mm256_set1_ps(a[3]);
+        let mut j = 0;
+        while j + 8 <= n {
+            let mut cv = _mm256_loadu_ps(c.as_ptr().add(j));
+            cv = _mm256_fmadd_ps(a0v, _mm256_loadu_ps(b0.as_ptr().add(j)), cv);
+            cv = _mm256_fmadd_ps(a1v, _mm256_loadu_ps(b1.as_ptr().add(j)), cv);
+            cv = _mm256_fmadd_ps(a2v, _mm256_loadu_ps(b2.as_ptr().add(j)), cv);
+            cv = _mm256_fmadd_ps(a3v, _mm256_loadu_ps(b3.as_ptr().add(j)), cv);
+            _mm256_storeu_ps(c.as_mut_ptr().add(j), cv);
+            j += 8;
+        }
+        while j < n {
+            c[j] += a[0] * b0[j] + a[1] * b1[j] + a[2] * b2[j] + a[3] * b3[j];
+            j += 1;
+        }
+    }
+
+    /// # Safety
+    /// Requires AVX2+FMA.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let k = a.len().min(b.len());
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut p = 0;
+        while p + 16 <= k {
+            acc0 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(a.as_ptr().add(p)),
+                _mm256_loadu_ps(b.as_ptr().add(p)),
+                acc0,
+            );
+            acc1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(a.as_ptr().add(p + 8)),
+                _mm256_loadu_ps(b.as_ptr().add(p + 8)),
+                acc1,
+            );
+            p += 16;
+        }
+        if p + 8 <= k {
+            acc0 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(a.as_ptr().add(p)),
+                _mm256_loadu_ps(b.as_ptr().add(p)),
+                acc0,
+            );
+            p += 8;
+        }
+        let mut s = hsum(_mm256_add_ps(acc0, acc1));
+        while p < k {
+            s += a[p] * b[p];
+            p += 1;
+        }
+        s
+    }
+}
+
+// ---- NEON implementations (aarch64; baseline feature, safe wrappers) ----
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use core::arch::aarch64::*;
+
+    #[inline]
+    pub fn axpy1(c: &mut [f32], a: f32, b: &[f32]) {
+        let n = c.len().min(b.len());
+        // SAFETY: NEON is a baseline aarch64 feature; loads/stores stay in
+        // bounds (j + 4 <= n).
+        unsafe {
+            let av = vdupq_n_f32(a);
+            let mut j = 0;
+            while j + 4 <= n {
+                let cv = vld1q_f32(c.as_ptr().add(j));
+                let bv = vld1q_f32(b.as_ptr().add(j));
+                vst1q_f32(c.as_mut_ptr().add(j), vfmaq_f32(cv, av, bv));
+                j += 4;
+            }
+            while j < n {
+                c[j] += a * b[j];
+                j += 1;
+            }
+        }
+    }
+
+    #[inline]
+    pub fn axpy2(c: &mut [f32], a0: f32, b0: &[f32], a1: f32, b1: &[f32]) {
+        let n = c.len().min(b0.len()).min(b1.len());
+        // SAFETY: as in `axpy1`.
+        unsafe {
+            let a0v = vdupq_n_f32(a0);
+            let a1v = vdupq_n_f32(a1);
+            let mut j = 0;
+            while j + 4 <= n {
+                let mut cv = vld1q_f32(c.as_ptr().add(j));
+                cv = vfmaq_f32(cv, a0v, vld1q_f32(b0.as_ptr().add(j)));
+                cv = vfmaq_f32(cv, a1v, vld1q_f32(b1.as_ptr().add(j)));
+                vst1q_f32(c.as_mut_ptr().add(j), cv);
+                j += 4;
+            }
+            while j < n {
+                c[j] += a0 * b0[j] + a1 * b1[j];
+                j += 1;
+            }
+        }
+    }
+
+    #[inline]
+    pub fn axpy4(c: &mut [f32], a: [f32; 4], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) {
+        let n = c.len();
+        // SAFETY: as in `axpy1`.
+        unsafe {
+            let a0v = vdupq_n_f32(a[0]);
+            let a1v = vdupq_n_f32(a[1]);
+            let a2v = vdupq_n_f32(a[2]);
+            let a3v = vdupq_n_f32(a[3]);
+            let mut j = 0;
+            while j + 4 <= n {
+                let mut cv = vld1q_f32(c.as_ptr().add(j));
+                cv = vfmaq_f32(cv, a0v, vld1q_f32(b0.as_ptr().add(j)));
+                cv = vfmaq_f32(cv, a1v, vld1q_f32(b1.as_ptr().add(j)));
+                cv = vfmaq_f32(cv, a2v, vld1q_f32(b2.as_ptr().add(j)));
+                cv = vfmaq_f32(cv, a3v, vld1q_f32(b3.as_ptr().add(j)));
+                vst1q_f32(c.as_mut_ptr().add(j), cv);
+                j += 4;
+            }
+            while j < n {
+                c[j] += a[0] * b0[j] + a[1] * b1[j] + a[2] * b2[j] + a[3] * b3[j];
+                j += 1;
+            }
+        }
+    }
+
+    #[inline]
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let k = a.len().min(b.len());
+        // SAFETY: as in `axpy1`.
+        unsafe {
+            let mut acc = vdupq_n_f32(0.0);
+            let mut p = 0;
+            while p + 4 <= k {
+                acc = vfmaq_f32(
+                    acc,
+                    vld1q_f32(a.as_ptr().add(p)),
+                    vld1q_f32(b.as_ptr().add(p)),
+                );
+                p += 4;
+            }
+            let mut s = vaddvq_f32(acc);
+            while p < k {
+                s += a[p] * b[p];
+                p += 1;
+            }
+            s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn randv(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+        rng.normal_vec(n)
+    }
+
+    fn close(a: f32, b: f32, atol: f32, rtol: f32) -> bool {
+        (a - b).abs() <= atol + rtol * b.abs()
+    }
+
+    #[test]
+    fn scalar_dot_flavors_match_seed_sequences() {
+        let mut rng = Pcg32::seeded(0x51f0);
+        for k in [1usize, 7, 8, 9, 16, 31, 64] {
+            let a = randv(&mut rng, k);
+            let b = randv(&mut rng, k);
+            // dot: plain left-to-right accumulation.
+            let mut want = 0.0f32;
+            for p in 0..k {
+                want += a[p] * b[p];
+            }
+            assert_eq!(dot(Isa::Scalar, &a, &b), want, "dot k={k}");
+            // dot8: 8-lane accumulator then tail (the attention sequence).
+            let mut acc = [0.0f32; 8];
+            let mut p = 0;
+            while p + 8 <= k {
+                for l in 0..8 {
+                    acc[l] += a[p + l] * b[p + l];
+                }
+                p += 8;
+            }
+            let mut want8: f32 = acc.iter().sum();
+            while p < k {
+                want8 += a[p] * b[p];
+                p += 1;
+            }
+            assert_eq!(dot8(Isa::Scalar, &a, &b), want8, "dot8 k={k}");
+        }
+    }
+
+    #[test]
+    fn simd_ops_are_tolerance_close_to_scalar() {
+        // FMA + lane-order sums change the reduction order, so the SIMD
+        // path is tolerance-close, not bitwise: for k ≤ 512 N(0,1) data,
+        // 1e-4 absolute + 1e-4 relative comfortably bounds the drift.
+        let mut rng = Pcg32::seeded(0x51f1);
+        for n in [1usize, 3, 5, 7, 8, 9, 15, 16, 17, 33, 64, 100] {
+            let b0 = randv(&mut rng, n);
+            let b1 = randv(&mut rng, n);
+            let b2 = randv(&mut rng, n);
+            let b3 = randv(&mut rng, n);
+            let base = randv(&mut rng, n);
+            let coef = [0.3f32, -1.2, 0.7, 2.1];
+
+            let mut cs = base.clone();
+            let mut cv = base.clone();
+            axpy1(Isa::Scalar, &mut cs, 0.5, &b0);
+            axpy1(Isa::Simd, &mut cv, 0.5, &b0);
+            for j in 0..n {
+                assert!(close(cv[j], cs[j], 1e-4, 1e-4), "axpy1 n={n} j={j}");
+            }
+
+            let mut cs = base.clone();
+            let mut cv = base.clone();
+            axpy2(Isa::Scalar, &mut cs, 0.5, &b0, -0.25, &b1);
+            axpy2(Isa::Simd, &mut cv, 0.5, &b0, -0.25, &b1);
+            for j in 0..n {
+                assert!(close(cv[j], cs[j], 1e-4, 1e-4), "axpy2 n={n} j={j}");
+            }
+
+            let mut cs = base.clone();
+            let mut cv = base.clone();
+            axpy4(Isa::Scalar, &mut cs, coef, &b0, &b1, &b2, &b3);
+            axpy4(Isa::Simd, &mut cv, coef, &b0, &b1, &b2, &b3);
+            for j in 0..n {
+                assert!(close(cv[j], cs[j], 1e-4, 1e-4), "axpy4 n={n} j={j}");
+            }
+
+            let ds = dot(Isa::Scalar, &b0, &b1);
+            let dv = dot(Isa::Simd, &b0, &b1);
+            assert!(close(dv, ds, 1e-3, 1e-4), "dot n={n}: {dv} vs {ds}");
+            let d8v = dot8(Isa::Simd, &b0, &b1);
+            assert!(close(d8v, ds, 1e-3, 1e-4), "dot8 n={n}: {d8v} vs {ds}");
+        }
+    }
+
+    #[test]
+    fn active_is_deterministic_and_named() {
+        let a = active();
+        assert_eq!(a, active(), "active() must be stable for the process");
+        let name = isa_name(a);
+        assert!(["scalar", "avx2", "neon"].contains(&name), "bad name {name}");
+        assert_eq!(isa_name(Isa::Scalar), "scalar");
+        assert_eq!(parse_isa("scalar"), Some(Isa::Scalar));
+        let simd_name = isa_name(Isa::Simd);
+        let parsed = parse_isa(simd_name).unwrap();
+        if simd_name == "scalar" {
+            assert_eq!(parsed, Isa::Scalar);
+        } else {
+            assert_eq!(parsed, Isa::Simd);
+        }
+    }
+}

@@ -19,7 +19,11 @@
 //!   (reduction-axis skipping, Obs. 3, two-stage),
 //! * [`elementwise`] — RMSNorm, RoPE, GELU, adaLN modulation, softmax,
 //! * [`flops`] — operation counting and the paper's theoretical-speedup
-//!   formulas (Eq. 5).
+//!   formulas (Eq. 5),
+//! * [`microkernel`] — the explicit SIMD layer (scalar oracle + AVX2/NEON
+//!   paths behind runtime detection) every inner loop above runs through,
+//! * [`tune`] — the per-geometry autotuner resolving (ISA, chunking)
+//!   configurations at first use (`FO_TUNE`/`FO_TUNE_CACHE`).
 
 pub mod attention;
 pub mod elementwise;
@@ -27,3 +31,5 @@ pub mod flops;
 pub mod gemm;
 pub mod gemm_o;
 pub mod gemm_q;
+pub mod microkernel;
+pub mod tune;

@@ -1,0 +1,491 @@
+//! **Kernel autotuner** — grows the static `FO_CHUNK` knob into a measured,
+//! per-geometry tuning table (PR 6 tentpole).
+//!
+//! Every kernel family resolves a [`KernelConfig`] at entry:
+//!
+//! * **microkernel ISA** — scalar vs. SIMD ([`Isa`]), keyed per
+//!   `(family, tile geometry)` and deliberately *not* per thread count, so
+//!   the serial, pool-backed and batched variants of one kernel always run
+//!   the same float sequences (the bitwise-equivalence invariant of
+//!   `rust/tests/` survives tuning).
+//! * **tile-loop chunking** — stored as *tasks per thread* rather than a
+//!   raw chunk so a tuned value transfers across tile counts:
+//!   `chunk = tiles.div_ceil(threads · tasks_per_thread)`. Only the
+//!   GEMM-Q tile loop chunks (GEMM-O and attention parallelize over row
+//!   blocks / heads), so chunk candidates are measured for
+//!   [`Family::GemmQ`] with `threads > 1` and everything else tunes ISA
+//!   only.
+//!
+//! Resolution order at a kernel entry point: an explicit `FO_CHUNK`
+//! override always wins the chunk decision; otherwise a tuning-table hit
+//! (measured earlier this process, or loaded from **`FO_TUNE_CACHE`**)
+//! supplies the config; otherwise, when tuning is enabled (**`FO_TUNE=1`**
+//! or [`set_enabled`]), candidates are measured **at first use** on
+//! synthetic same-geometry inputs and the winner is cached; otherwise the
+//! heuristic config ([`KernelConfig::heuristic`]: the process-wide
+//! [`active`] ISA and the seed `tiles/(4·threads)` chunking) applies.
+//!
+//! Measurements call only the explicit `_isa` kernel variants, which skip
+//! config resolution — tuning never recurses. The table is process-wide
+//! (`Mutex<HashMap>`); the mutex is released while measuring, so
+//! concurrent first uses at worst measure twice and agree on the result
+//! shape. `FO_TUNE_CACHE=<path>` loads the table lazily at first use and
+//! rewrites the file after each insert, making warmed tables shareable
+//! across processes; [`dump`]/[`load`] expose the same text format
+//! programmatically.
+
+#![warn(missing_docs)]
+
+use crate::kernels::microkernel::{self, Isa};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicI8, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Kernel family a tuned configuration applies to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Family {
+    /// Sparse query projection — tile GEMM `[block_q × d_in] · [d_in × d_h]`,
+    /// chunked `(head, block)` tile loop on the pool.
+    GemmQ,
+    /// Sparse output projection — tile GEMM `[block_q × d_h] · [d_h × d_out]`,
+    /// row-block parallel (no chunking).
+    GemmO,
+    /// FlashOmni attention — `QKᵀ` dot products and `P·V` axpy updates per
+    /// `(block_q × block_k)` tile (no chunking).
+    Attention,
+}
+
+impl Family {
+    /// Stable name used in the `FO_TUNE_CACHE` text format.
+    pub fn name(self) -> &'static str {
+        match self {
+            Family::GemmQ => "gemm_q",
+            Family::GemmO => "gemm_o",
+            Family::Attention => "attention",
+        }
+    }
+
+    /// Inverse of [`Family::name`].
+    pub fn parse(s: &str) -> Option<Family> {
+        match s {
+            "gemm_q" => Some(Family::GemmQ),
+            "gemm_o" => Some(Family::GemmO),
+            "attention" => Some(Family::Attention),
+            _ => None,
+        }
+    }
+}
+
+/// One resolved kernel configuration: which microkernel flavor to run and
+/// how to chunk the pool tile loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelConfig {
+    /// Microkernel flavor for the kernel's inner loops.
+    pub isa: Isa,
+    /// Target pool tasks per worker for chunked tile loops; the effective
+    /// chunk is [`KernelConfig::chunk`]. The seed heuristic is 4.
+    pub tasks_per_thread: usize,
+}
+
+impl KernelConfig {
+    /// The untuned fallback: the process-wide [`active`] ISA and the seed
+    /// `tiles/(4·threads)` chunking heuristic.
+    pub fn heuristic() -> KernelConfig {
+        KernelConfig { isa: microkernel::active(), tasks_per_thread: 4 }
+    }
+
+    /// Effective tile-loop chunk for `tiles` work items on `threads`
+    /// workers. An explicit `FO_CHUNK` override always wins; otherwise
+    /// `tiles.div_ceil(threads · tasks_per_thread)`, clamped to ≥ 1.
+    pub fn chunk(&self, tiles: usize, threads: usize) -> usize {
+        match crate::exec::tile_chunk_override() {
+            Some(c) => c,
+            None => tiles
+                .div_ceil((threads * self.tasks_per_thread).max(1))
+                .max(1),
+        }
+    }
+}
+
+type Key = (Family, [usize; 3], usize);
+
+fn table() -> &'static Mutex<HashMap<Key, KernelConfig>> {
+    static TABLE: OnceLock<Mutex<HashMap<Key, KernelConfig>>> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut map = HashMap::new();
+        if let Some(path) = cache_path() {
+            match std::fs::read_to_string(&path) {
+                Ok(body) => {
+                    parse_cache(&body, &mut map);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                Err(e) => eprintln!(
+                    "flashomni: warning: FO_TUNE_CACHE {path:?} unreadable ({e}); starting empty"
+                ),
+            }
+        }
+        Mutex::new(map)
+    })
+}
+
+/// The `FO_TUNE_CACHE` path, if set (read once per process). Recorded in
+/// `BENCH_*.json` headers so a trajectory row is traceable to its table.
+pub fn cache_path() -> Option<String> {
+    static PATH: OnceLock<Option<String>> = OnceLock::new();
+    PATH.get_or_init(|| std::env::var("FO_TUNE_CACHE").ok().filter(|p| !p.is_empty()))
+        .clone()
+}
+
+// -1 = follow FO_TUNE, 0 = forced off, 1 = forced on.
+static FORCED: AtomicI8 = AtomicI8::new(-1);
+
+/// Whether first-use measurement is active: a [`set_enabled`] override if
+/// one was made, else the **`FO_TUNE`** environment variable (`1`/`on`).
+/// Table *lookups* happen regardless — a table loaded via
+/// `FO_TUNE_CACHE` applies even with tuning off; only new measurements are
+/// gated.
+pub fn enabled() -> bool {
+    match FORCED.load(Ordering::Relaxed) {
+        1 => true,
+        0 => false,
+        _ => {
+            static ENV: OnceLock<bool> = OnceLock::new();
+            *ENV.get_or_init(|| {
+                matches!(std::env::var("FO_TUNE").as_deref(), Ok("1") | Ok("on") | Ok("true"))
+            })
+        }
+    }
+}
+
+/// Force tuning on/off for this process, overriding `FO_TUNE`. Meant for
+/// bench binaries that interleave tuned and untuned rows; tests should use
+/// [`tune_now`] instead (this is process-global state).
+pub fn set_enabled(on: bool) {
+    FORCED.store(if on { 1 } else { 0 }, Ordering::Relaxed);
+}
+
+/// Resolve the configuration for one kernel call.
+///
+/// `dims` is the family's tile geometry (`[m, k, n]` of the tile GEMM for
+/// GEMM-Q/GEMM-O, `[block_q, head_dim, block_k]` for attention) and
+/// `threads` the pool size driving the call (1 for serial kernels). The
+/// ISA decision is keyed on `(family, dims)` only — every thread count
+/// resolves the same flavor — while chunking is keyed per thread count.
+pub fn config_for(family: Family, dims: [usize; 3], threads: usize) -> KernelConfig {
+    // ISA: threads-normalized key so serial == pool == batched flavors.
+    let isa_key: Key = (family, dims, 1);
+    let mut cfg = {
+        let map = table().lock().unwrap();
+        map.get(&isa_key).copied()
+    }
+    .unwrap_or_else(|| {
+        if enabled() {
+            let tuned = tune_isa(family, dims);
+            insert(isa_key, tuned);
+            tuned
+        } else {
+            KernelConfig::heuristic()
+        }
+    });
+
+    // Chunking: only the GEMM-Q pool tile loop chunks.
+    if family == Family::GemmQ && threads > 1 {
+        let key: Key = (family, dims, threads);
+        let hit = { table().lock().unwrap().get(&key).copied() };
+        cfg = match hit {
+            Some(c) => KernelConfig { isa: cfg.isa, ..c },
+            None if enabled() => {
+                let tuned = tune_chunk(dims, threads, cfg.isa);
+                insert(key, tuned);
+                tuned
+            }
+            None => KernelConfig { isa: cfg.isa, ..KernelConfig::heuristic() },
+        };
+    }
+    cfg
+}
+
+/// Measure candidates for `(family, dims, threads)` and return the winner
+/// **without** touching the process-wide table or the `enabled` gate —
+/// the side-effect-free probe used by the autotuner regression test.
+pub fn tune_now(family: Family, dims: [usize; 3], threads: usize) -> KernelConfig {
+    let isa_cfg = tune_isa(family, dims);
+    if family == Family::GemmQ && threads > 1 {
+        tune_chunk(dims, threads, isa_cfg.isa)
+    } else {
+        isa_cfg
+    }
+}
+
+fn insert(key: Key, cfg: KernelConfig) {
+    table().lock().unwrap().insert(key, cfg);
+    if let Some(path) = cache_path() {
+        if let Err(e) = dump(&path) {
+            static WARNED: OnceLock<()> = OnceLock::new();
+            WARNED.get_or_init(|| {
+                eprintln!("flashomni: warning: cannot write FO_TUNE_CACHE {path:?}: {e}");
+            });
+        }
+    }
+}
+
+// ---- measurement ----
+
+/// Min-of-3 wall time (seconds) after one warmup call.
+fn time_min(mut f: impl FnMut()) -> f64 {
+    f(); // warmup
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t = Instant::now();
+        f();
+        best = best.min(t.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn synth(len: usize, seed: u64) -> Vec<f32> {
+    crate::util::rng::Pcg32::seeded(seed).normal_vec(len)
+}
+
+/// Candidate ISAs: scalar always; the vector path only when the process
+/// default allows it (respects `FO_SIMD=scalar`).
+fn isa_candidates() -> Vec<Isa> {
+    if microkernel::active() == Isa::Simd {
+        vec![Isa::Scalar, Isa::Simd]
+    } else {
+        vec![Isa::Scalar]
+    }
+}
+
+/// Time one tile of `family` at `dims` under `isa`, on synthetic inputs
+/// (GEMM-O accumulates in place, so real buffers cannot be re-run — the
+/// synthetic same-geometry proxy sidesteps that).
+fn measure_tile(family: Family, dims: [usize; 3], isa: Isa) -> f64 {
+    let [m, k, n] = [dims[0].max(1), dims[1].max(1), dims[2].max(1)];
+    match family {
+        Family::GemmQ | Family::GemmO => {
+            let a = synth(m * k, 0x7e57);
+            let b = synth(k * n, 0x7e58);
+            let mut c = vec![0.0f32; m * n];
+            time_min(|| {
+                c.fill(0.0);
+                crate::kernels::gemm::matmul_into_isa(isa, &a, &b, &mut c, m, k, n);
+                std::hint::black_box(&c);
+            })
+        }
+        Family::Attention => {
+            // QKᵀ (dot form) + P·V (axpy form) for one (block_q × block_k)
+            // tile pair with head_dim k.
+            let q = synth(m * k, 0x7e59);
+            let kv = synth(n * k, 0x7e5a);
+            let p = synth(m * n, 0x7e5b);
+            let mut s = vec![0.0f32; m * n];
+            let mut acc = vec![0.0f32; m * k];
+            time_min(|| {
+                s.fill(0.0);
+                crate::kernels::gemm::matmul_nt_into_isa(isa, &q, &kv, &mut s, m, k, n);
+                acc.fill(0.0);
+                crate::kernels::gemm::matmul_into_isa(isa, &p, &kv, &mut acc, m, n, k);
+                std::hint::black_box((&s, &acc));
+            })
+        }
+    }
+}
+
+fn tune_isa(family: Family, dims: [usize; 3]) -> KernelConfig {
+    let mut best = (f64::INFINITY, Isa::Scalar);
+    for isa in isa_candidates() {
+        let t = measure_tile(family, dims, isa);
+        if t < best.0 {
+            best = (t, isa);
+        }
+    }
+    KernelConfig { isa: best.1, tasks_per_thread: 4 }
+}
+
+/// Measure chunk candidates for the GEMM-Q pool tile loop: a synthetic
+/// work list of `16 · threads` tiles of the given geometry, dispatched on
+/// a dedicated pool of the caller's size with each candidate granularity.
+fn tune_chunk(dims: [usize; 3], threads: usize, isa: Isa) -> KernelConfig {
+    let [m, k, n] = [dims[0].max(1), dims[1].max(1), dims[2].max(1)];
+    let pool = crate::exec::ExecPool::new(threads);
+    let tiles = 16 * threads;
+    let a = synth(m * k, 0x7e5c);
+    let b = synth(k * n, 0x7e5d);
+    let (a, b) = (&a, &b);
+    let mut best = (f64::INFINITY, 4usize);
+    for tpt in [1usize, 2, 4, 8, 16] {
+        let chunk = tiles.div_ceil((threads * tpt).max(1)).max(1);
+        let n_tasks = tiles.div_ceil(chunk);
+        let t = time_min(|| {
+            pool.parallel_for(n_tasks, |t| {
+                let lo = t * chunk;
+                let hi = (lo + chunk).min(tiles);
+                for _ in lo..hi {
+                    let mut c = vec![0.0f32; m * n];
+                    crate::kernels::gemm::matmul_into_isa(isa, a, b, &mut c, m, k, n);
+                    std::hint::black_box(&c);
+                }
+            });
+        });
+        if t < best.0 {
+            best = (t, tpt);
+        }
+    }
+    KernelConfig { isa, tasks_per_thread: best.1 }
+}
+
+// ---- persistence (FO_TUNE_CACHE text format) ----
+
+fn isa_tag(isa: Isa) -> &'static str {
+    match isa {
+        Isa::Scalar => "scalar",
+        Isa::Simd => "simd",
+    }
+}
+
+fn parse_cache(body: &str, map: &mut HashMap<Key, KernelConfig>) -> usize {
+    let mut loaded = 0;
+    for line in body.lines() {
+        let f: Vec<&str> = line.split_whitespace().collect();
+        if f.len() != 8 || f[0] != "v1" {
+            continue; // ignore comments / foreign versions
+        }
+        let (Some(family), Ok(d0), Ok(d1), Ok(d2), Ok(threads), Some(isa), Ok(tpt)) = (
+            Family::parse(f[1]),
+            f[2].parse::<usize>(),
+            f[3].parse::<usize>(),
+            f[4].parse::<usize>(),
+            f[5].parse::<usize>(),
+            microkernel::parse_isa(f[6]),
+            f[7].parse::<usize>(),
+        ) else {
+            continue;
+        };
+        map.insert(
+            (family, [d0, d1, d2], threads),
+            KernelConfig { isa, tasks_per_thread: tpt.max(1) },
+        );
+        loaded += 1;
+    }
+    loaded
+}
+
+/// Load tuning-table entries from `path` (the [`dump`] text format) into
+/// the process-wide table, returning how many entries were read.
+/// Malformed lines are skipped, not errors.
+pub fn load(path: &str) -> std::io::Result<usize> {
+    let body = std::fs::read_to_string(path)?;
+    let mut fresh = HashMap::new();
+    let n = parse_cache(&body, &mut fresh);
+    table().lock().unwrap().extend(fresh);
+    Ok(n)
+}
+
+/// Write the process-wide tuning table to `path` as sorted
+/// `v1 <family> <m> <k> <n> <threads> <isa> <tasks_per_thread>` lines.
+pub fn dump(path: &str) -> std::io::Result<()> {
+    let mut lines: Vec<String> = {
+        let map = table().lock().unwrap();
+        map.iter()
+            .map(|(&(family, d, threads), cfg)| {
+                format!(
+                    "v1 {} {} {} {} {threads} {} {}",
+                    family.name(),
+                    d[0],
+                    d[1],
+                    d[2],
+                    isa_tag(cfg.isa),
+                    cfg.tasks_per_thread
+                )
+            })
+            .collect()
+    };
+    lines.sort();
+    std::fs::write(path, lines.join("\n") + "\n")
+}
+
+/// Number of entries currently in the process-wide table (bench reporting).
+pub fn table_len() -> usize {
+    table().lock().unwrap().len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heuristic_chunk_matches_seed_formula() {
+        let h = KernelConfig::heuristic();
+        assert_eq!(h.tasks_per_thread, 4);
+        if crate::exec::tile_chunk_override().is_none() {
+            // Same numbers the seed `tile_chunk` heuristic produced.
+            assert_eq!(h.chunk(256, 8), 8);
+            assert_eq!(h.chunk(0, 8), 1);
+            assert_eq!(h.chunk(1, 8), 1);
+            let fine = KernelConfig { tasks_per_thread: 16, ..h };
+            assert_eq!(fine.chunk(256, 8), 2);
+        }
+    }
+
+    #[test]
+    fn config_for_disabled_falls_back_to_heuristic() {
+        // Tests never call set_enabled (process-global); with FO_TUNE
+        // unset in the test environment this exercises the fallback arm.
+        if !enabled() && cache_path().is_none() {
+            let cfg = config_for(Family::GemmO, [9999, 7, 3], 1);
+            assert_eq!(cfg, KernelConfig::heuristic());
+        }
+    }
+
+    #[test]
+    fn tune_now_is_side_effect_free_and_valid() {
+        let before = table_len();
+        let cfg = tune_now(Family::GemmQ, [8, 8, 8], 1);
+        assert_eq!(table_len(), before, "tune_now must not touch the table");
+        assert!(cfg.tasks_per_thread >= 1);
+        if crate::kernels::microkernel::active() == Isa::Scalar {
+            assert_eq!(cfg.isa, Isa::Scalar, "tuner must respect FO_SIMD=scalar");
+        }
+    }
+
+    #[test]
+    fn cache_roundtrip_and_malformed_lines() {
+        let mut map = HashMap::new();
+        let body = "v1 gemm_q 64 512 64 1 simd 4\n\
+                    v1 attention 64 64 64 2 scalar 8\n\
+                    # comment\n\
+                    v1 bogus_family 1 2 3 4 simd 4\n\
+                    v2 gemm_q 1 2 3 4 simd 4\n\
+                    v1 gemm_o not_a_number 2 3 4 simd 4\n";
+        assert_eq!(parse_cache(body, &mut map), 2);
+        assert_eq!(
+            map.get(&(Family::GemmQ, [64, 512, 64], 1)),
+            Some(&KernelConfig { isa: Isa::Simd, tasks_per_thread: 4 })
+        );
+        assert_eq!(
+            map.get(&(Family::Attention, [64, 64, 64], 2)),
+            Some(&KernelConfig { isa: Isa::Scalar, tasks_per_thread: 8 })
+        );
+
+        // dump → load roundtrip through the global table.
+        let path = std::env::temp_dir().join("flashomni_tune_cache_test.txt");
+        let p = path.to_str().unwrap();
+        let probe: Key = (Family::GemmO, [5, 6, 7], 1);
+        table()
+            .lock()
+            .unwrap()
+            .insert(probe, KernelConfig { isa: Isa::Scalar, tasks_per_thread: 2 });
+        dump(p).unwrap();
+        table().lock().unwrap().remove(&probe);
+        let n = load(p).unwrap();
+        assert!(n >= 1);
+        assert_eq!(
+            table().lock().unwrap().get(&probe),
+            Some(&KernelConfig { isa: Isa::Scalar, tasks_per_thread: 2 })
+        );
+        table().lock().unwrap().remove(&probe);
+        let _ = std::fs::remove_file(p);
+    }
+}

@@ -734,6 +734,21 @@ impl SparsePlan {
         }
     }
 
+    /// Flatten the per-head live Q-block lists into one `(head, block)`
+    /// work list — the tile order the GEMM-Q kernels walk (head-major,
+    /// ascending block within a head). The pool kernels chunk this list
+    /// into tasks; sharing the flattening here keeps every variant's task
+    /// decomposition identical.
+    pub fn live_tiles(&self) -> Vec<(u32, u32)> {
+        let mut tiles = Vec::new();
+        for (h, hp) in self.heads.iter().enumerate() {
+            for &bi in &hp.live_q {
+                tiles.push((h as u32, bi));
+            }
+        }
+        tiles
+    }
+
     /// Aggregated GEMM tile statistics across heads.
     pub fn gemm_stats(&self) -> GemmStats {
         let mut s = GemmStats::default();

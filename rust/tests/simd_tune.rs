@@ -1,0 +1,219 @@
+//! PR 6 property tests for the SIMD microkernel layer and the tiling
+//! autotuner.
+//!
+//! Invariants pinned here:
+//!
+//! * Every SIMD kernel path is **tolerance-close** to the scalar oracle
+//!   (the seed kernels' exact float sequences) across odd, padded, and
+//!   lane-aligned geometries. SIMD changes the reduction order (8-lane
+//!   trees vs left-to-right), so these are tolerance comparisons — the
+//!   tolerances (atol 1e-3, rtol 1e-4) bound the reassociation error at
+//!   these sizes with unit-normal inputs.
+//! * The chunk half of a [`KernelConfig`] is **bitwise-irrelevant**: the
+//!   pool kernel partitions work, never float math, so any
+//!   `tasks_per_thread` gives the bit-identical tensor.
+//! * The autotuner's measured config and the heuristic config produce
+//!   identical outputs (bitwise when they agree on ISA, tolerance-close
+//!   otherwise) — tuning can never change *what* is computed.
+//! * The FO_TUNE_CACHE dump/load round-trip preserves decisions.
+
+use flashomni::exec::ExecPool;
+use flashomni::kernels::attention::{attention_dense_isa, flashomni_attention_isa};
+use flashomni::kernels::gemm::{matmul_into_isa, matmul_nt_into_isa};
+use flashomni::kernels::gemm_o::{gemm_o_dispatch_isa, gemm_o_update_isa, WeightPanels};
+use flashomni::kernels::gemm_q::{gemm_q_isa, gemm_q_pool_with};
+use flashomni::kernels::microkernel::Isa;
+use flashomni::kernels::tune::{self, Family, KernelConfig};
+use flashomni::plan::{DecodeMode, HeadPlan, SparsePlan};
+use flashomni::symbols::random_symbols;
+use flashomni::tensor::Tensor;
+use flashomni::testutil::{assert_close, prop_check, randn};
+use flashomni::util::rng::Pcg32;
+
+const ATOL: f32 = 1e-3;
+const RTOL: f32 = 1e-4;
+
+fn random_plan(rng: &mut Pcg32, heads: usize, t: usize, block: usize) -> SparsePlan {
+    let syms = flashomni::symbols::LayerSymbols {
+        heads: (0..heads).map(|_| random_symbols(rng, t, t, 1, 0.3, 0.3)).collect(),
+    };
+    SparsePlan::compile(&syms, t, t, block, block, DecodeMode::RowCached)
+}
+
+// ---------------------------------------------------------------- matmul
+
+#[test]
+fn matmul_simd_matches_scalar_oracle() {
+    // Odd / sub-lane / lane-multiple / lane+tail inner dims all hit
+    // different microkernel body-vs-tail splits.
+    prop_check("matmul simd≈scalar", 12, |rng| {
+        let case = rng.below(4);
+        let (m, k, n) = [(3, 5, 7), (4, 8, 16), (5, 17, 9), (1, 1, 1)][case];
+        let a = randn(rng, &[m, k]);
+        let b = randn(rng, &[k, n]);
+        let mut c_s = Tensor::zeros(&[m, n]);
+        let mut c_v = Tensor::zeros(&[m, n]);
+        matmul_into_isa(Isa::Scalar, a.data(), b.data(), c_s.data_mut(), m, k, n);
+        matmul_into_isa(Isa::Simd, a.data(), b.data(), c_v.data_mut(), m, k, n);
+        assert_close(&c_v, &c_s, ATOL, RTOL);
+
+        // B-transposed flavor (dot microkernel).
+        let bt = randn(rng, &[n, k]);
+        let mut d_s = Tensor::zeros(&[m, n]);
+        let mut d_v = Tensor::zeros(&[m, n]);
+        matmul_nt_into_isa(Isa::Scalar, a.data(), bt.data(), d_s.data_mut(), m, k, n);
+        matmul_nt_into_isa(Isa::Simd, a.data(), bt.data(), d_v.data_mut(), m, k, n);
+        assert_close(&d_v, &d_s, ATOL, RTOL);
+    });
+}
+
+// ---------------------------------------------------------------- gemm_q
+
+#[test]
+fn gemm_q_simd_matches_scalar_across_odd_geometries() {
+    // d_h = 7 (sub-lane, padded to 8), 20 (lane + tail, padded to 24) and
+    // 16 (lane-aligned, padding is a no-op) exercise the gemm_q panel
+    // padding shim; n = 50 with block 16 leaves a 2-row tail tile.
+    for (heads, d_h) in [(3usize, 7usize), (2, 20), (2, 16)] {
+        prop_check(&format!("gemm_q simd≈scalar d_h={d_h}"), 4, |rng| {
+            let (n, block) = (50, 16);
+            let t = n_div_ceil(n, block);
+            let d_in = 24;
+            let x = randn(rng, &[n, d_in]);
+            let w = randn(rng, &[d_in, heads * d_h]);
+            let plan = random_plan(rng, heads, t, block);
+            let bias: Vec<f32> = randn(rng, &[1, heads * d_h]).data().to_vec();
+            let (y_s, _) = gemm_q_isa(Isa::Scalar, &x, &w, &plan, Some(&bias));
+            let (y_v, _) = gemm_q_isa(Isa::Simd, &x, &w, &plan, Some(&bias));
+            assert_close(&y_v, &y_s, ATOL, RTOL);
+        });
+    }
+}
+
+// ------------------------------------------------------------- attention
+
+#[test]
+fn attention_simd_matches_scalar() {
+    // Odd d (no full lane), d = 8 (exactly one lane), d = 20 (lane+tail);
+    // n = 40 with block 16 leaves a ragged tail block.
+    for d in [5usize, 8, 20] {
+        prop_check(&format!("attention simd≈scalar d={d}"), 4, |rng| {
+            let (n, block) = (40, 16);
+            let t = n_div_ceil(n, block);
+            let q = randn(rng, &[n, d]);
+            let k = randn(rng, &[n, d]);
+            let v = randn(rng, &[n, d]);
+            let dense_s = attention_dense_isa(Isa::Scalar, &q, &k, &v, block, block);
+            let dense_v = attention_dense_isa(Isa::Simd, &q, &k, &v, block, block);
+            assert_close(&dense_v, &dense_s, ATOL, RTOL);
+
+            let sym = random_symbols(rng, t, t, 1, 0.3, 0.3);
+            let plan = HeadPlan::from_symbols(&sym, t, t, DecodeMode::RowCached);
+            let (o_s, _) = flashomni_attention_isa(Isa::Scalar, &q, &k, &v, &plan, block, block, None);
+            let (o_v, _) = flashomni_attention_isa(Isa::Simd, &q, &k, &v, &plan, block, block, None);
+            assert_close(&o_v, &o_s, ATOL, RTOL);
+        });
+    }
+}
+
+// ---------------------------------------------------------------- gemm_o
+
+#[test]
+fn gemm_o_simd_matches_scalar() {
+    // d_h = 20 (lane + tail) and d_out = heads·d_h = 60: GEMM-O is NOT
+    // lane-padded (it accumulates in place into d_out-strided rows), so
+    // this pins the unpadded SIMD path.
+    prop_check("gemm_o simd≈scalar", 4, |rng| {
+        let (heads, d_h, n, block) = (3usize, 20usize, 50usize, 16usize);
+        let t = n_div_ceil(n, block);
+        let d = heads * d_h;
+        let o = randn(rng, &[n, d]);
+        let w = randn(rng, &[d, d]);
+        let panels = WeightPanels::new(&w, heads);
+        let plan = random_plan(rng, heads, t, block);
+        let (y_s, b_s, _) = gemm_o_update_isa(Isa::Scalar, &o, &panels, &plan);
+        let (y_v, b_v, _) = gemm_o_update_isa(Isa::Simd, &o, &panels, &plan);
+        assert_close(&y_v, &y_s, ATOL, RTOL);
+        assert_close(&b_v, &b_s, ATOL, RTOL);
+        let (z_s, _) = gemm_o_dispatch_isa(Isa::Scalar, &o, &panels, &plan, &b_s);
+        let (z_v, _) = gemm_o_dispatch_isa(Isa::Simd, &o, &panels, &plan, &b_s);
+        assert_close(&z_v, &z_s, ATOL, RTOL);
+    });
+}
+
+// ------------------------------------------------- config ⟂ float output
+
+#[test]
+fn chunk_config_never_changes_bits() {
+    // The tasks_per_thread half of a KernelConfig only partitions the tile
+    // loop; for a fixed ISA every partition must give the bit-identical
+    // tensor (and match the serial kernel).
+    let pool = ExecPool::new(3);
+    let mut rng = Pcg32::seeded(0xc0f9);
+    let (heads, d_h, n, block) = (2usize, 16usize, 64usize, 16usize);
+    let t = n_div_ceil(n, block);
+    let d_in = 32;
+    let x = randn(&mut rng, &[n, d_in]);
+    let w = randn(&mut rng, &[d_in, heads * d_h]);
+    let plan = random_plan(&mut rng, heads, t, block);
+    for isa in [Isa::Scalar, Isa::Simd] {
+        let (serial, _) = gemm_q_isa(isa, &x, &w, &plan, None);
+        for tpt in [1usize, 2, 7, 100] {
+            let cfg = KernelConfig { isa, tasks_per_thread: tpt };
+            let (pooled, _) = gemm_q_pool_with(&x, &w, &plan, None, &pool, Some(cfg));
+            assert_eq!(
+                pooled.data(),
+                serial.data(),
+                "pool output must be bitwise-identical to serial (isa {isa:?}, tpt {tpt})"
+            );
+        }
+    }
+}
+
+#[test]
+fn tuned_config_matches_heuristic_output() {
+    // Regression for the autotuner: whatever config `tune_now` measures
+    // for a geometry, running the kernel under it computes the same thing
+    // as the heuristic config — bitwise when the ISA agrees, within the
+    // scalar-oracle tolerance when tuning flipped the ISA.
+    let pool = ExecPool::new(2);
+    let mut rng = Pcg32::seeded(0x7a9e);
+    let (heads, d_h, n, block) = (2usize, 8usize, 32usize, 16usize);
+    let t = n_div_ceil(n, block);
+    let d_in = 16;
+    let x = randn(&mut rng, &[n, d_in]);
+    let w = randn(&mut rng, &[d_in, heads * d_h]);
+    let plan = random_plan(&mut rng, heads, t, block);
+    let tuned = tune::tune_now(Family::GemmQ, [block, d_in, d_h], pool.size());
+    let heuristic = KernelConfig::heuristic();
+    let (y_t, _) = gemm_q_pool_with(&x, &w, &plan, None, &pool, Some(tuned));
+    let (y_h, _) = gemm_q_pool_with(&x, &w, &plan, None, &pool, Some(heuristic));
+    if tuned.isa == heuristic.isa {
+        assert_eq!(y_t.data(), y_h.data(), "same ISA ⇒ bitwise-identical");
+    } else {
+        assert_close(&y_t, &y_h, ATOL, RTOL);
+    }
+}
+
+// ------------------------------------------------------------ tune cache
+
+#[test]
+fn tune_cache_roundtrip_preserves_decisions() {
+    // Populate the table via the enabled config_for path, dump, reload.
+    tune::set_enabled(true);
+    let before = tune::config_for(Family::Attention, [16, 8, 16], 1);
+    let path = std::env::temp_dir().join("flashomni_simd_tune_cache_test.txt");
+    let p = path.to_str().unwrap();
+    tune::dump(p).expect("dump must succeed");
+    let n = tune::load(p).expect("load must succeed");
+    assert!(n >= 1, "dump/load must round-trip at least the entry we created");
+    // A second resolve hits the (re)loaded table and returns the same pick.
+    let after = tune::config_for(Family::Attention, [16, 8, 16], 1);
+    assert_eq!(before.isa, after.isa, "cache round-trip must preserve the ISA decision");
+    tune::set_enabled(false);
+    let _ = std::fs::remove_file(p);
+}
+
+fn n_div_ceil(n: usize, d: usize) -> usize {
+    n.div_ceil(d)
+}
