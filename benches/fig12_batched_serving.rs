@@ -1,7 +1,7 @@
 //! Figure 12 (repo extension) — **batched serving throughput** and the
 //! cross-request plan-sharing invariant.
 //!
-//! Two scenarios per batch size B ∈ {1, 2, 4, 8} (clamped by FO_BATCH),
+//! Three scenarios per batch size B ∈ {1, 2, 4, 8} (clamped by FO_BATCH),
 //! each on a fresh engine + plan cache:
 //!
 //! * **shared** — B symbol-identical requests (same prompt + seed, the
@@ -12,6 +12,10 @@
 //! * **distinct** — B distinct prompts/seeds (worst case: no symbol
 //!   collisions, the batch still amortizes head dispatch and tile-loop
 //!   overheads but compiles B plans per refresh).
+//! * **mixed** — B distinct prompts/seeds at **mixed resolutions**
+//!   (`patch_hw` cycles 8×8 / 6×6 / 4×4, so sequence lengths 72/44/24
+//!   ride one ragged kernel walk). Exercises the cu-seqlen path the
+//!   dedicated fig14 bench measures against bucketing baselines.
 //!
 //! Emits `BENCH_fig12.json`: one row per (scenario, B) with wall time,
 //! throughput, latency percentiles (p50/p95/p99 via `ServeReport`), and
@@ -71,10 +75,13 @@ fn policy() -> Policy {
     })
 }
 
-fn requests(n: usize, steps: usize, text_tokens: usize, shared: bool) -> Vec<Request> {
+fn requests(n: usize, steps: usize, text_tokens: usize, case: &str) -> Vec<Request> {
+    // Mixed-geometry stream: native 8×8 (seq 72) plus 6×6 (44) and 4×4 (24).
+    const GRIDS: [Option<(usize, usize)>; 3] = [None, Some((6, 6)), Some((4, 4))];
     (0..n as u64)
         .map(|i| {
-            let (scene, seed) = if shared { (5, 1234) } else { (3 * i as usize + 1, 1000 + i) };
+            let (scene, seed) =
+                if case == "shared" { (5, 1234) } else { (3 * i as usize + 1, 1000 + i) };
             Request {
                 id: i,
                 scene,
@@ -82,6 +89,7 @@ fn requests(n: usize, steps: usize, text_tokens: usize, shared: bool) -> Vec<Req
                 seed,
                 steps,
                 arrival_s: 0.0,
+                patch_hw: if case == "mixed" { GRIDS[i as usize % GRIDS.len()] } else { None },
             }
         })
         .collect()
@@ -105,15 +113,15 @@ fn main() {
     );
     let mut json_rows: Vec<String> = Vec::new();
 
-    for shared in [true, false] {
-        let case = if shared { "shared" } else { "distinct" };
+    for case in ["shared", "distinct", "mixed"] {
+        let shared = case == "shared";
         // Throughput scaling is reported against this scenario's B = 1 run.
         let mut base_rps: Option<f64> = None;
         for b in [1usize, 2, 4, 8] {
             if b > max_b {
                 continue;
             }
-            let reqs = requests(n_req.max(b), steps, model.cfg.text_tokens, shared);
+            let reqs = requests(n_req.max(b), steps, model.cfg.text_tokens, case);
             let mut sched =
                 BatchScheduler::new(BatchedEngine::new(model.clone(), policy(), 8, 8, b));
             for r in &reqs {

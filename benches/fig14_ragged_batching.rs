@@ -1,0 +1,253 @@
+//! Figure 14 (repo extension) — **ragged batching** throughput: one
+//! mixed-resolution request stream served three ways, bitwise-equivalence
+//! asserted against solo runs before any timing row is emitted.
+//!
+//! * **solo** — each request through a fresh single-request `DiTEngine`
+//!   at its own resolution, sequentially (the per-request baseline).
+//! * **uniform** — exact-geometry bucketing: requests partitioned by
+//!   resolution, one `BatchedEngine` per bucket, buckets run to
+//!   completion one after another (what the pre-ragged engine had to do).
+//! * **ragged** — one `BatchedEngine` behind a token-budget
+//!   `BatchScheduler`: the whole mixed stream rides one engine, every
+//!   Dispatch layer walking one concatenated token buffer with cu-seqlen
+//!   offsets (`FO_TOKEN_BUDGET` caps total in-flight tokens; 0 =
+//!   unbounded).
+//!
+//! Emits `BENCH_fig14.json`: one row per scenario with wall time,
+//! request throughput, speedup vs solo, and token occupancy. Row schema
+//! (custom, documented here): `{case, requests, steps, wall_s, req_per_s,
+//! speedup_vs_solo, mean_tokens_in_flight, peak_tokens, token_budget}`.
+//!
+//! Env: FO_REQUESTS (default 6), FO_STEPS (default 8), FO_LAYERS
+//! (default 2), FO_BATCH (max slots, default 8), FO_TOKEN_BUDGET
+//! (default 0 = unbounded). Knobs + schema: `docs/benchmarks.md`.
+
+use flashomni::batch::{BatchScheduler, BatchedEngine};
+use flashomni::bench::write_bench_json_tagged;
+use flashomni::config::{ModelConfig, SparsityConfig};
+use flashomni::engine::{DiTEngine, Policy};
+use flashomni::exec::ExecPool;
+use flashomni::model::{weights::Weights, MiniMMDiT};
+use flashomni::tensor::Tensor;
+use flashomni::trace::{caption_ids, Request};
+use std::time::Instant;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn build_model(layers: usize) -> MiniMMDiT {
+    let cfg = ModelConfig {
+        dim: 64,
+        heads: 4,
+        layers,
+        text_tokens: 8,
+        patch_h: 4,
+        patch_w: 4,
+        patch_size: 2,
+        channels: 3,
+        mlp_ratio: 2,
+        vocab: 256,
+    };
+    MiniMMDiT::new(cfg.clone(), Weights::random(&cfg, 0xf14))
+}
+
+fn policy() -> Policy {
+    Policy::flashomni(SparsityConfig {
+        tau_q: 0.5,
+        tau_kv: 0.2,
+        interval: 3,
+        order: 1,
+        s_q: 0.0,
+        block_q: 8,
+        block_k: 8,
+        pool: 1,
+        warmup: 2,
+        ramp_steps: 1,
+    })
+}
+
+/// Mixed-resolution stream: requests cycle through three vision grids
+/// (seq 24 / 44 / 72 at text_tokens = 8) with distinct prompts + seeds.
+fn requests(n: usize, steps: usize) -> Vec<Request> {
+    const GRIDS: [Option<(usize, usize)>; 3] = [None, Some((6, 6)), Some((8, 8))];
+    (0..n as u64)
+        .map(|i| Request {
+            id: i,
+            scene: 3 * i as usize + 1,
+            prompt_ids: caption_ids(3 * i as usize + 1, 8),
+            seed: 1000 + i,
+            steps,
+            arrival_s: 0.0,
+            patch_hw: GRIDS[i as usize % GRIDS.len()],
+        })
+        .collect()
+}
+
+/// Solo reference at the request's own resolution.
+fn solo_run(model: &MiniMMDiT, req: &Request) -> Tensor {
+    let mut cfg = model.cfg.clone();
+    if let Some((ph, pw)) = req.patch_hw {
+        cfg.patch_h = ph;
+        cfg.patch_w = pw;
+    }
+    let mut engine = DiTEngine::new(MiniMMDiT::new(cfg, model.w.clone()), policy(), 8, 8);
+    engine.generate(&req.prompt_ids, req.seed, req.steps).image
+}
+
+struct Scenario {
+    wall_s: f64,
+    tok_sum: usize,
+    tok_peak: usize,
+    ticks: usize,
+}
+
+/// Drive one engine to completion, sampling token occupancy per tick and
+/// checking every retiring image against the solo baseline.
+fn drive(
+    sched: &mut BatchScheduler,
+    solo: &[(u64, Tensor)],
+    sc: &mut Scenario,
+) -> usize {
+    let mut served = 0;
+    while !sched.is_idle() {
+        let done = sched.step();
+        let tok = sched.engine().tokens_in_flight();
+        sc.tok_sum += tok;
+        sc.tok_peak = sc.tok_peak.max(tok);
+        sc.ticks += 1;
+        for r in done {
+            let (_, img) = solo.iter().find(|(id, _)| *id == r.id).unwrap();
+            assert_eq!(
+                &r.image, img,
+                "request {} diverged from its solo run — refusing to time a wrong result",
+                r.id
+            );
+            served += 1;
+        }
+    }
+    served
+}
+
+fn main() {
+    let n_req = env_usize("FO_REQUESTS", 6);
+    let steps = env_usize("FO_STEPS", 8);
+    let layers = env_usize("FO_LAYERS", 2);
+    let max_batch = env_usize("FO_BATCH", 8);
+    let budget = env_usize("FO_TOKEN_BUDGET", 0);
+    let model = build_model(layers);
+    let reqs = requests(n_req, steps);
+
+    println!(
+        "# Figure 14 — ragged batching: {n_req} mixed-resolution requests × {steps} steps, \
+         {layers} layers, token budget {budget} (0 = unbounded)"
+    );
+
+    // ---- solo baseline (also the bitwise reference). ----
+    let t0 = Instant::now();
+    let solo: Vec<(u64, Tensor)> =
+        reqs.iter().map(|r| (r.id, solo_run(&model, r))).collect();
+    let wall_solo = t0.elapsed().as_secs_f64();
+    println!("  solo     wall={wall_solo:>7.3}s");
+
+    let mut rows: Vec<String> = Vec::new();
+    let mut push_row = |case: &str, wall: f64, sc: &Scenario| {
+        let rps = n_req as f64 / wall.max(1e-9);
+        let mean_tok =
+            if sc.ticks == 0 { 0.0 } else { sc.tok_sum as f64 / sc.ticks as f64 };
+        println!(
+            "  {case:<8} wall={wall:>7.3}s thpt={rps:>6.3}/s speedup={:>5.2}x \
+             mean_tokens={mean_tok:>6.1} peak={}",
+            wall_solo / wall.max(1e-9),
+            sc.tok_peak
+        );
+        rows.push(format!(
+            "{{\"case\":\"{case}\",\"requests\":{n_req},\"steps\":{steps},\
+             \"wall_s\":{wall:.6},\"req_per_s\":{rps:.4},\
+             \"speedup_vs_solo\":{:.4},\"mean_tokens_in_flight\":{mean_tok:.2},\
+             \"peak_tokens\":{},\"token_budget\":{budget}}}",
+            wall_solo / wall.max(1e-9),
+            sc.tok_peak
+        ));
+    };
+    push_row(
+        "solo",
+        wall_solo,
+        &Scenario { wall_s: wall_solo, tok_sum: 0, tok_peak: 0, ticks: 0 },
+    );
+
+    // ---- uniform: exact-geometry buckets, run one after another. ----
+    {
+        let mut buckets: Vec<(Option<(usize, usize)>, Vec<Request>)> = Vec::new();
+        for r in &reqs {
+            match buckets.iter_mut().find(|(hw, _)| *hw == r.patch_hw) {
+                Some((_, b)) => b.push(r.clone()),
+                None => buckets.push((r.patch_hw, vec![r.clone()])),
+            }
+        }
+        let mut sc = Scenario { wall_s: 0.0, tok_sum: 0, tok_peak: 0, ticks: 0 };
+        let t0 = Instant::now();
+        let mut served = 0;
+        for (_, bucket) in &buckets {
+            let engine =
+                BatchedEngine::new(model.clone(), policy(), 8, 8, max_batch.min(bucket.len()));
+            let mut sched = BatchScheduler::with_token_budget(engine, budget);
+            for r in bucket {
+                sched.submit(r.clone());
+            }
+            served += drive(&mut sched, &solo, &mut sc);
+        }
+        assert_eq!(served, n_req);
+        sc.wall_s = t0.elapsed().as_secs_f64();
+        push_row("uniform", sc.wall_s, &sc);
+    }
+
+    // ---- ragged: the whole mixed stream through one engine. ----
+    {
+        let engine = BatchedEngine::new(model.clone(), policy(), 8, 8, max_batch);
+        let mut sched = BatchScheduler::with_token_budget(engine, budget);
+        for r in &reqs {
+            sched.submit(r.clone());
+        }
+        let mut sc = Scenario { wall_s: 0.0, tok_sum: 0, tok_peak: 0, ticks: 0 };
+        let t0 = Instant::now();
+        let served = drive(&mut sched, &solo, &mut sc);
+        assert_eq!(served, n_req);
+        sc.wall_s = t0.elapsed().as_secs_f64();
+        push_row("ragged", sc.wall_s, &sc);
+    }
+
+    let tune_cache = flashomni::kernels::tune::cache_path().unwrap_or_default();
+    match write_bench_json_tagged(
+        "BENCH_fig14.json",
+        "fig14_ragged_batching",
+        &[
+            ("requests", n_req as f64),
+            ("steps", steps as f64),
+            ("layers", layers as f64),
+            ("dim", model.cfg.dim as f64),
+            ("heads", model.cfg.heads as f64),
+            ("max_batch", max_batch as f64),
+            ("token_budget", budget as f64),
+            ("exec_pool_threads", ExecPool::global().size() as f64),
+            ("fo_tune", flashomni::kernels::tune::enabled() as u8 as f64),
+            (
+                "simd_available",
+                flashomni::kernels::microkernel::simd_available() as u8 as f64,
+            ),
+        ],
+        &[
+            (
+                "isa",
+                flashomni::kernels::microkernel::isa_name(
+                    flashomni::kernels::microkernel::active(),
+                ),
+            ),
+            ("fo_tune_cache", &tune_cache),
+        ],
+        &rows,
+    ) {
+        Ok(()) => println!("\nwrote BENCH_fig14.json ({} rows)", rows.len()),
+        Err(e) => eprintln!("could not write BENCH_fig14.json: {e}"),
+    }
+}

@@ -3,21 +3,24 @@
 //! sharing per layer. See the [module docs](crate::batch) for the design.
 
 use crate::cache::combine_bias_stack;
+use crate::config::ModelConfig;
 use crate::diffusion::{euler_step, initial_noise, plan_steps, time_grid, unpatchify, StepKind};
 use crate::engine::{
-    add_row_bias, build_plans, plan_key, post_attention_preprojected, project_kv_joint,
-    sparse_step_flops, DiTEngine, EngineExec, Geometry, LayerPanels, LayerPlans, LayerState,
-    PlanProvider, Policy, RunStats, PLAN_CACHE_CAP,
+    add_row_bias, build_plans, plan_key, post_attention_preprojected, sparse_step_flops,
+    DiTEngine, EngineExec, Geometry, LayerPanels, LayerPlans, LayerState, PlanProvider, Policy,
+    RunStats, PLAN_CACHE_CAP,
 };
 use crate::exec::ExecPool;
-use crate::kernels::attention::flashomni_attention_batched;
-use crate::kernels::gemm_o::gemm_o_dispatch_batched;
-use crate::kernels::gemm_q::gemm_q_batched;
+use crate::kernels::attention::flashomni_attention_ragged;
+use crate::kernels::gemm_o::gemm_o_dispatch_ragged;
+use crate::kernels::gemm_q::gemm_q_ragged;
 use crate::model::blocks::{
-    insert_head, mlp_stream, norm_rope_joint_q, pre_attention, vsplit, vstack, PreAttn,
+    headwise_rmsnorm, headwise_rope, insert_head, linear, mlp_stream, pre_attention, vsplit,
+    vstack, vstack_all, PreAttn,
 };
 use crate::model::{BlockExec, BlockWeights, MiniMMDiT};
 use crate::plan::cache::{CacheOutcome, CacheStats, SharedPlanCache};
+use crate::plan::SparsePlan;
 use crate::symbols::LayerSymbols;
 use crate::tensor::Tensor;
 use crate::trace::Request;
@@ -51,6 +54,13 @@ pub struct BatchResult {
 /// hold, minus the model/panels/pool, which the batch shares.
 struct Slot {
     req: Request,
+    /// Per-request model config: the engine's config with the request's
+    /// `patch_hw` override applied (weights are resolution-independent,
+    /// so only the vision grid — and thus the sequence length — differs).
+    cfg: ModelConfig,
+    /// Per-request tile geometry derived from `cfg` (same `block_q` /
+    /// `block_k` / `pool` as the engine — those are engine-constant).
+    geo: Geometry,
     policy: Policy,
     state: Vec<LayerState>,
     /// Current latent patches `x_t`.
@@ -217,10 +227,25 @@ impl BatchedEngine {
         self.max_batch
     }
 
-    /// Step count of the current cohort (all slots share it — the
-    /// scheduler's bucket key), `None` when the batch is empty.
+    /// Step count of the oldest in-flight request, `None` when the batch
+    /// is empty. Historical name: the scheduler used to bucket admissions
+    /// by exact step count; the token-budget packer admits mixed step
+    /// counts, so this is now diagnostic only.
     pub fn bucket_steps(&self) -> Option<usize> {
         self.slots.first().map(|s| s.req.steps)
+    }
+
+    /// Total tokens (text + vision) currently in flight — the quantity
+    /// the token-budget packer caps (`FO_TOKEN_BUDGET`).
+    pub fn tokens_in_flight(&self) -> usize {
+        self.slots.iter().map(|s| s.geo.seq).sum()
+    }
+
+    /// Token cost a request would add to the batch if admitted — its
+    /// sequence length under this engine's base config plus the request's
+    /// `patch_hw` override.
+    pub fn token_cost(&self, req: &Request) -> usize {
+        req.token_cost(&self.model.cfg)
     }
 
     /// True when every in-flight slot is about to run a Full (Warmup /
@@ -253,10 +278,22 @@ impl BatchedEngine {
         let grid = time_grid(req.steps);
         let order = policy.order();
         let state = (0..self.model.cfg.layers).map(|_| LayerState::new(order)).collect();
-        let x = initial_noise(&self.model.cfg, req.seed);
+        // Per-request resolution: apply the request's vision-grid override
+        // to a copy of the engine config and rederive the tile geometry.
+        // Weight-shaping fields are untouched, so the same weights serve
+        // every slot; only the sequence length (and plan keys) differ.
+        let mut cfg = self.model.cfg.clone();
+        if let Some((ph, pw)) = req.patch_hw {
+            cfg.patch_h = ph;
+            cfg.patch_w = pw;
+        }
+        let geo = Geometry::from_model(&cfg, self.geo.block_q, self.geo.block_k, self.geo.pool);
+        let x = initial_noise(&cfg, req.seed);
         let stats = RunStats { steps: req.steps, ..Default::default() };
         self.slots.push(Slot {
             req,
+            cfg,
+            geo,
             policy,
             state,
             x,
@@ -294,10 +331,12 @@ impl BatchedEngine {
     }
 
     /// Advance every in-flight request by one denoising step and retire
-    /// the ones that finished. Per layer, slots sharing a compiled plan
-    /// `Arc` run the batched kernels (one plan walk for the group);
-    /// everything else reuses the single-request block executor — both
-    /// bitwise-identical per request to a solo run.
+    /// the ones that finished. Per layer, every Dispatch-step slot rides
+    /// one **ragged** kernel walk over a concatenated token buffer with
+    /// cu-seqlen offsets, each keeping its own compiled plan view (plans
+    /// are still shared through the compile cache when symbols + geometry
+    /// match); everything else reuses the single-request block executor —
+    /// both bitwise-identical per request to a solo run.
     pub fn step_forward(&mut self) -> Vec<BatchResult> {
         // Already-finished slots (zero-step requests) retire without
         // running a step — matching the solo engine's `generate(steps=0)`
@@ -311,13 +350,14 @@ impl BatchedEngine {
         // (RunStats.plan_cache_shared). The id is allocated by the cache,
         // so concurrent engines sharing it cannot cross-attribute.
         let epoch = self.cache.begin_epoch();
-        let cfg = self.model.cfg.clone();
+        let layers = self.model.cfg.layers;
 
         // ---- Phase A: per-slot embeddings + conditioning. ----
         let mut ctxs: Vec<StepCtx> = Vec::with_capacity(self.slots.len());
         for slot in &self.slots {
             let t = slot.grid[slot.step];
-            let (txt, img) = self.model.embed_streams(&slot.req.prompt_ids, &slot.x);
+            let (txt, img) =
+                self.model.embed_streams_with(&slot.cfg, &slot.req.prompt_ids, &slot.x);
             ctxs.push(StepCtx {
                 txt,
                 img,
@@ -327,38 +367,34 @@ impl BatchedEngine {
             });
         }
 
-        // ---- Phase B: layer loop, grouping by shared plan Arc. ----
+        // ---- Phase B: layer loop — one ragged group per layer. ----
         {
-            let BatchedEngine { model, geo, panels, exec, cache, slots, delta_enabled, .. } =
-                self;
+            let BatchedEngine { model, panels, exec, cache, slots, delta_enabled, .. } = self;
             let model: &MiniMMDiT = model;
             let exec: &Arc<ExecPool> = exec;
-            for layer in 0..cfg.layers {
+            for layer in 0..layers {
                 let bw = &model.w.blocks[layer];
-                let mut groups: Vec<(*const LayerPlans, Vec<usize>)> = Vec::new();
+                let mut ragged: Vec<usize> = Vec::new();
                 let mut singles: Vec<usize> = Vec::new();
                 for (i, slot) in slots.iter().enumerate() {
                     if Self::batched_eligible(slot, layer, ctxs[i].kind) {
-                        let ptr = Arc::as_ptr(slot.state[layer].plans.as_ref().unwrap());
-                        match groups.iter_mut().find(|(p, _)| *p == ptr) {
-                            Some((_, g)) => g.push(i),
-                            None => groups.push((ptr, vec![i])),
-                        }
+                        ragged.push(i);
                     } else {
                         singles.push(i);
                     }
                 }
-                for (_, group) in groups {
-                    if group.len() >= 2 {
-                        sparse_block_batched(
-                            model, &panels[layer], exec, slots, &mut ctxs, &group, layer, bw,
-                        );
-                    } else {
-                        singles.push(group[0]);
-                    }
+                if ragged.len() >= 2 {
+                    sparse_block_ragged(
+                        model, &panels[layer], exec, slots, &mut ctxs, &ragged, layer, bw,
+                    );
+                } else {
+                    singles.extend(ragged);
+                    singles.sort_unstable();
                 }
                 for i in singles {
                     let slot = &mut slots[i];
+                    let slot_cfg = slot.cfg.clone();
+                    let slot_geo = slot.geo;
                     let ctx = &mut ctxs[i];
                     let mut provider = SharedPlanProvider {
                         cache: &*cache,
@@ -368,7 +404,7 @@ impl BatchedEngine {
                     };
                     let mut block_exec = EngineExec {
                         policy: &mut slot.policy,
-                        geo: *geo,
+                        geo: slot_geo,
                         state: &mut slot.state,
                         panels,
                         exec,
@@ -377,14 +413,14 @@ impl BatchedEngine {
                         step: slot.step,
                         stats: &mut slot.stats,
                     };
-                    block_exec.block(layer, bw, &cfg, &ctx.cvec, &mut ctx.txt, &mut ctx.img);
+                    block_exec.block(layer, bw, &slot_cfg, &ctx.cvec, &mut ctx.txt, &mut ctx.img);
                 }
             }
         }
 
         // ---- Phase C: decode, integrate, account, retire. ----
         for (slot, ctx) in self.slots.iter_mut().zip(&ctxs) {
-            let v = self.model.decode(&ctx.cvec, &ctx.img);
+            let v = self.model.decode_with(&slot.cfg, &ctx.cvec, &ctx.img);
             let dt = slot.grid[slot.step] - slot.grid[slot.step + 1];
             euler_step(&mut slot.x, &v, dt);
             let dp = slot.stats.attn_computed_pairs - ctx.density_before.0;
@@ -416,7 +452,7 @@ impl BatchedEngine {
                 finished.push(BatchResult {
                     id: slot.req.id,
                     scene: slot.req.scene,
-                    image: unpatchify(&slot.x, &self.model.cfg),
+                    image: unpatchify(&slot.x, &slot.cfg),
                     queue_s: slot
                         .admitted
                         .saturating_duration_since(slot.enqueued)
@@ -443,14 +479,37 @@ impl BatchedEngine {
     }
 }
 
-/// Batched sparse path for a group of slots sharing one compiled plan set:
-/// mirrors `EngineExec::sparse_block` per request, but walks the shared
-/// plan's live-index lists exactly once per batch (batched GEMM-Q /
-/// attention / GEMM-O). Per-request float sequences are identical to the
-/// serial kernels, so every slot's streams end up bitwise-identical to a
-/// solo run.
+/// Interleave two stream-major concatenations into joint order: for each
+/// request `r`, its text rows (`t_cat[txt_indptr[r]..txt_indptr[r+1]]`)
+/// followed by its image rows (`i_cat[img_indptr[r]..img_indptr[r+1]]`) —
+/// the ragged equivalent of per-request `vstack(t, i)`.
+fn interleave_joint(
+    t_cat: &Tensor,
+    i_cat: &Tensor,
+    txt_indptr: &[usize],
+    img_indptr: &[usize],
+) -> Tensor {
+    let d = t_cat.cols();
+    assert_eq!(i_cat.cols(), d);
+    let batch = txt_indptr.len() - 1;
+    let mut data = Vec::with_capacity((t_cat.rows() + i_cat.rows()) * d);
+    for r in 0..batch {
+        data.extend_from_slice(&t_cat.data()[txt_indptr[r] * d..txt_indptr[r + 1] * d]);
+        data.extend_from_slice(&i_cat.data()[img_indptr[r] * d..img_indptr[r + 1] * d]);
+    }
+    Tensor::from_vec(&[t_cat.rows() + i_cat.rows(), d], data)
+}
+
+/// Ragged sparse path for the group of Dispatch-step slots: every member
+/// rides one kernel walk over a concatenated token buffer with cu-seqlen
+/// offsets (`indptr`), each keeping its **own** compiled plan view — so
+/// mixed resolutions, mixed step counts, and per-request sparsity ride
+/// the same GEMM-Q / attention / GEMM-O sweep. All heavy lifting is
+/// row-local or request-tiled, so per-request float sequences are
+/// identical to the serial kernels and every slot's streams end up
+/// bitwise-identical to a solo run.
 #[allow(clippy::too_many_arguments)]
-fn sparse_block_batched(
+fn sparse_block_ragged(
     model: &MiniMMDiT,
     panels: &LayerPanels,
     exec: &Arc<ExecPool>,
@@ -460,95 +519,129 @@ fn sparse_block_batched(
     layer: usize,
     bw: &BlockWeights,
 ) {
-    let cfg = &model.cfg;
-    let plans = Arc::clone(slots[group[0]].state[layer].plans.as_ref().unwrap());
+    let heads = model.cfg.heads;
+    let dim = model.cfg.dim;
+    let text = model.cfg.text_tokens;
+    let plans: Vec<Arc<LayerPlans>> = group
+        .iter()
+        .map(|&i| Arc::clone(slots[i].state[layer].plans.as_ref().unwrap()))
+        .collect();
     for &i in group {
         slots[i].stats.total_layer_steps += 1;
-        slots[i].stats.flops_dense += DiTEngine::dense_layer_flops(cfg);
+        slots[i].stats.flops_dense += DiTEngine::dense_layer_flops(&slots[i].cfg);
+    }
+    let txt_plans: Vec<&SparsePlan> = plans.iter().map(|p| &p.txt).collect();
+    let img_plans: Vec<&SparsePlan> = plans.iter().map(|p| &p.img).collect();
+    let joint_plans: Vec<&SparsePlan> = plans.iter().map(|p| &p.joint).collect();
+
+    // Cu-seqlen offsets per stream. Text prefixes are engine-constant
+    // (uniform), vision suffixes are ragged.
+    let seqs: Vec<usize> = group.iter().map(|&i| slots[i].geo.seq).collect();
+    let mut txt_indptr = vec![0usize];
+    let mut img_indptr = vec![0usize];
+    let mut joint_indptr = vec![0usize];
+    for (gi, &s) in seqs.iter().enumerate() {
+        txt_indptr.push(txt_indptr[gi] + text);
+        img_indptr.push(img_indptr[gi] + (s - text));
+        joint_indptr.push(joint_indptr[gi] + s);
     }
 
-    // ---- Phase 0: pre-attention + K/V per request, GEMM-Q batched. ----
+    // ---- Phase 0: pre-attention, stacked K/V projection, GEMM-Q. ----
     let p0 = Instant::now();
     let mut pres: Vec<PreAttn> = Vec::with_capacity(group.len());
-    let mut kjs: Vec<Tensor> = Vec::with_capacity(group.len());
-    let mut vjs: Vec<Tensor> = Vec::with_capacity(group.len());
     for &i in group {
         let ctx = &ctxs[i];
-        let pre = pre_attention(bw, &ctx.cvec, &ctx.txt, &ctx.img);
-        let (kj, vj) = project_kv_joint(bw, cfg, &pre);
-        kjs.push(kj);
-        vjs.push(vj);
-        pres.push(pre);
+        pres.push(pre_attention(bw, &ctx.cvec, &ctx.txt, &ctx.img));
     }
-    let txt_in: Vec<&Tensor> = pres.iter().map(|p| &p.txt_mod).collect();
-    let img_in: Vec<&Tensor> = pres.iter().map(|p| &p.img_mod).collect();
-    let q_txt = gemm_q_batched(&txt_in, &bw.txt.wq, &plans.txt, Some(&bw.txt.bq), exec);
-    let q_img = gemm_q_batched(&img_in, &bw.img.wq, &plans.img, Some(&bw.img.bq), exec);
-    let mut qjs: Vec<Tensor> = Vec::with_capacity(group.len());
+    let txt_cat = vstack_all(&pres.iter().map(|p| &p.txt_mod).collect::<Vec<_>>());
+    let img_cat = vstack_all(&pres.iter().map(|p| &p.img_mod).collect::<Vec<_>>());
+    // Stacked K/V: one GEMM per (stream, projection) for the whole group
+    // instead of a per-request `project_kv_joint` loop. `linear` and
+    // `headwise_rmsnorm` are row-local, so each request's rows match its
+    // solo projection float-for-float.
+    let mut k_t_cat = linear(&txt_cat, &bw.txt.wk, &bw.txt.bk);
+    let v_t_cat = linear(&txt_cat, &bw.txt.wv, &bw.txt.bv);
+    let mut k_i_cat = linear(&img_cat, &bw.img.wk, &bw.img.bk);
+    let v_i_cat = linear(&img_cat, &bw.img.wv, &bw.img.bv);
+    headwise_rmsnorm(&mut k_t_cat, heads, &bw.txt.k_rms);
+    headwise_rmsnorm(&mut k_i_cat, heads, &bw.img.k_rms);
+    let q_txt =
+        gemm_q_ragged(&txt_cat, &txt_indptr, &bw.txt.wq, &txt_plans, Some(&bw.txt.bq), exec);
+    let q_img =
+        gemm_q_ragged(&img_cat, &img_indptr, &bw.img.wq, &img_plans, Some(&bw.img.bq), exec);
+    let mut q_t_cat = vstack_all(&q_txt.iter().map(|(q, _)| q).collect::<Vec<_>>());
+    let mut q_i_cat = vstack_all(&q_img.iter().map(|(q, _)| q).collect::<Vec<_>>());
     for (gi, &i) in group.iter().enumerate() {
-        let (q_t, s_t) = &q_txt[gi];
-        let (q_i, s_i) = &q_img[gi];
+        let (_, s_t) = &q_txt[gi];
+        let (_, s_i) = &q_img[gi];
         slots[i].stats.gq_computed += (s_t.computed_tiles + s_i.computed_tiles) as u64;
         slots[i].stats.gq_total += (s_t.total_tiles + s_i.total_tiles) as u64;
-        let mut qj = vstack(q_t, q_i);
-        norm_rope_joint_q(&mut qj, bw, cfg, cfg.text_tokens);
-        qjs.push(qj);
     }
+    headwise_rmsnorm(&mut q_t_cat, heads, &bw.txt.q_rms);
+    headwise_rmsnorm(&mut q_i_cat, heads, &bw.img.q_rms);
+    // Interleave the stream buffers into joint order (txt_r then img_r
+    // per request) and rotate once with per-request positions `0..seq_r`
+    // — row-local, so identical to each solo `norm_rope_joint_q` /
+    // joint-K rope.
+    let mut qj_cat = interleave_joint(&q_t_cat, &q_i_cat, &txt_indptr, &img_indptr);
+    let mut kj_cat = interleave_joint(&k_t_cat, &k_i_cat, &txt_indptr, &img_indptr);
+    let vj_cat = interleave_joint(&v_t_cat, &v_i_cat, &txt_indptr, &img_indptr);
+    let positions: Vec<usize> = seqs.iter().flat_map(|&s| 0..s).collect();
+    headwise_rope(&mut qj_cat, heads, &positions);
+    headwise_rope(&mut kj_cat, heads, &positions);
     let p0_s = p0.elapsed().as_secs_f64();
 
     // ---- Phase 1: attention over batch × heads pool lanes. ----
     let p1 = Instant::now();
-    let q_refs: Vec<&Tensor> = qjs.iter().collect();
-    let k_refs: Vec<&Tensor> = kjs.iter().collect();
-    let v_refs: Vec<&Tensor> = vjs.iter().collect();
-    let per_req = flashomni_attention_batched(&q_refs, &k_refs, &v_refs, &plans.joint, exec);
-    let mut o_cats: Vec<Tensor> = Vec::with_capacity(group.len());
+    let per_req =
+        flashomni_attention_ragged(&qj_cat, &kj_cat, &vj_cat, &joint_indptr, &joint_plans, exec);
+    let mut o_ts: Vec<Tensor> = Vec::with_capacity(group.len());
+    let mut o_is: Vec<Tensor> = Vec::with_capacity(group.len());
     for (gi, &i) in group.iter().enumerate() {
-        let mut o_cat = Tensor::zeros(&[cfg.seq_len(), cfg.dim]);
+        let mut o_cat = Tensor::zeros(&[seqs[gi], dim]);
         for (h, (oh, st)) in per_req[gi].iter().enumerate() {
             slots[i].stats.attn_computed_pairs += st.computed_pairs as u64;
             slots[i].stats.attn_total_pairs += st.total_pairs as u64;
-            insert_head(&mut o_cat, oh, cfg.heads, h);
+            insert_head(&mut o_cat, oh, heads, h);
         }
-        o_cats.push(o_cat);
+        let (o_t, o_i) = vsplit(&o_cat, text);
+        o_ts.push(o_t);
+        o_is.push(o_i);
     }
     let p1_s = p1.elapsed().as_secs_f64();
 
-    // ---- Phase 2: bias combine per request, GEMM-O dispatch batched. ----
+    // ---- Phase 2: bias combine per request, GEMM-O dispatch ragged. ----
     let p2 = Instant::now();
-    let mut o_ts: Vec<Tensor> = Vec::with_capacity(group.len());
-    let mut o_is: Vec<Tensor> = Vec::with_capacity(group.len());
     let mut bias_ts: Vec<Tensor> = Vec::with_capacity(group.len());
     let mut bias_is: Vec<Tensor> = Vec::with_capacity(group.len());
-    for (gi, &i) in group.iter().enumerate() {
+    for &i in group {
         let st = &slots[i].state[layer];
         let k_off = match ctxs[i].kind {
             StepKind::Dispatch { k } => k,
             _ => unreachable!("batched path only runs Dispatch steps"),
         };
         let coeffs = st.o_taylor.coefficients(k_off as f64);
-        let (o_t, o_i) = vsplit(&o_cats[gi], cfg.text_tokens);
         bias_ts.push(if st.bias_txt.is_empty() {
-            Tensor::zeros(&[cfg.text_tokens, cfg.dim])
+            Tensor::zeros(&[text, dim])
         } else {
             combine_bias_stack(&st.bias_txt, &coeffs)
         });
         bias_is.push(if st.bias_img.is_empty() {
-            Tensor::zeros(&[cfg.vision_tokens(), cfg.dim])
+            Tensor::zeros(&[slots[i].cfg.vision_tokens(), dim])
         } else {
             combine_bias_stack(&st.bias_img, &coeffs)
         });
-        o_ts.push(o_t);
-        o_is.push(o_i);
     }
-    let ot_refs: Vec<&Tensor> = o_ts.iter().collect();
-    let oi_refs: Vec<&Tensor> = o_is.iter().collect();
+    let o_t_cat = vstack_all(&o_ts.iter().collect::<Vec<_>>());
+    let o_i_cat = vstack_all(&o_is.iter().collect::<Vec<_>>());
     let bt_refs: Vec<&Tensor> = bias_ts.iter().collect();
     let bi_refs: Vec<&Tensor> = bias_is.iter().collect();
     let mut out_ts =
-        gemm_o_dispatch_batched(&ot_refs, &panels.txt, &plans.txt, &bt_refs, exec).into_iter();
+        gemm_o_dispatch_ragged(&o_t_cat, &txt_indptr, &panels.txt, &txt_plans, &bt_refs, exec)
+            .into_iter();
     let mut out_is =
-        gemm_o_dispatch_batched(&oi_refs, &panels.img, &plans.img, &bi_refs, exec).into_iter();
+        gemm_o_dispatch_ragged(&o_i_cat, &img_indptr, &panels.img, &img_plans, &bi_refs, exec)
+            .into_iter();
     for (gi, &i) in group.iter().enumerate() {
         let (mut out_t, g_t) = out_ts.next().unwrap();
         let (mut out_i, g_i) = out_is.next().unwrap();
@@ -558,7 +651,7 @@ fn sparse_block_batched(
         add_row_bias(&mut out_i, &bw.img.bo);
         let o_joint = vstack(&out_t, &out_i);
         let ctx = &mut ctxs[i];
-        post_attention_preprojected(&pres[gi], &o_joint, cfg.text_tokens, &mut ctx.txt, &mut ctx.img);
+        post_attention_preprojected(&pres[gi], &o_joint, text, &mut ctx.txt, &mut ctx.img);
     }
     let p2_s = p2.elapsed().as_secs_f64();
 
@@ -571,13 +664,12 @@ fn sparse_block_batched(
     }
     let p3_s = p3.elapsed().as_secs_f64();
 
-    // FLOP + phase accounting per slot, read off the shared plan (same
+    // FLOP + phase accounting per slot, read off its own plan (same
     // numbers the per-request path derives via the same helper). Wall
     // time of the fused group phases is attributed to every member (each
     // experienced it).
-    let step_flops = sparse_step_flops(cfg, &plans);
-    for &i in group {
-        slots[i].stats.flops_done += step_flops;
+    for (gi, &i) in group.iter().enumerate() {
+        slots[i].stats.flops_done += sparse_step_flops(&slots[i].cfg, &plans[gi]);
         slots[i].stats.phase_s[0] += p0_s;
         slots[i].stats.phase_s[1] += p1_s;
         slots[i].stats.phase_s[2] += p2_s;

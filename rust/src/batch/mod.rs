@@ -13,16 +13,20 @@
 //! all three across a batch:
 //!
 //! * [`BatchedEngine`] — advances a group of requests **in lockstep**, one
-//!   denoising step per call. Each layer partitions the batch: slots whose
-//!   compiled [`LayerPlans`](crate::engine::LayerPlans) `Arc` coincide ride
-//!   the **batched sparse path** (one walk of the shared plan's live-index
-//!   lists via `gemm_q_batched` / `flashomni_attention_batched` /
-//!   `gemm_o_dispatch_batched`, dispatched over `batch × heads` and
-//!   `batch × row-block` pool lanes); everything else (Full steps,
-//!   CachedBlock forecasts, per-step-mask policies) reuses the
-//!   single-request block executor verbatim. Either way every request's
-//!   output is **bitwise-identical** to a solo [`DiTEngine`] run
-//!   (property-tested in `rust/tests/batch_serving.rs`).
+//!   denoising step per call. Requests may have **different resolutions**
+//!   (a per-request `patch_hw` override; weights are resolution-
+//!   independent) and different step counts. Each layer partitions the
+//!   batch: every Dispatch-step slot rides the **ragged sparse path** —
+//!   one walk of `gemm_q_ragged` / `flashomni_attention_ragged` /
+//!   `gemm_o_dispatch_ragged` over a concatenated token buffer with
+//!   cu-seqlen (`indptr`) offsets, each slot keeping its *own* compiled
+//!   [`LayerPlans`](crate::engine::LayerPlans) view (plans still dedupe
+//!   through the compile cache when symbols + geometry match); everything
+//!   else (Full steps, CachedBlock forecasts, per-step-mask policies)
+//!   reuses the single-request block executor verbatim. Either way every
+//!   request's output is **bitwise-identical** to a solo [`DiTEngine`]
+//!   run (property-tested in `rust/tests/batch_serving.rs` and
+//!   `rust/tests/ragged_batching.rs`).
 //! * Plan compiles go through a process-shared
 //!   [`SharedPlanCache`](crate::plan::cache::SharedPlanCache) with one
 //!   sharing *epoch* per lockstep step, so
@@ -35,11 +39,13 @@
 //!   a batch whose masks drift by a few rows between refreshes pays one
 //!   delta compile (plus B−1 shared hits) instead of a full compile.
 //! * [`BatchScheduler`] — continuous batching over a pending queue:
-//!   requests are bucketed by step count (the refresh schedule; geometry
-//!   and policy are engine-level constants), late arrivals are admitted
-//!   only at **refresh boundaries** (every in-flight slot about to run a
-//!   Full step, so no Dispatch window is broken mid-flight), and finished
-//!   requests retire without stalling the rest of the batch.
+//!   admission is FIFO under a **total-token budget** (`FO_TOKEN_BUDGET`:
+//!   the sum of in-flight sequence lengths; 0 = unbounded, capped only by
+//!   `max_batch` slots), late arrivals are admitted only at **refresh
+//!   boundaries** (every in-flight slot about to run a Full step, so no
+//!   Dispatch window is broken mid-flight), and finished requests retire
+//!   without stalling the rest of the batch, returning their tokens to
+//!   the budget immediately.
 //!
 //! The serving [`Coordinator`](crate::coordinator) feeds each worker's
 //! scheduler from the shared request queue and hands every worker one

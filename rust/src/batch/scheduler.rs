@@ -1,22 +1,26 @@
 //! The **continuous-batching scheduler**: a pending queue in front of one
-//! [`BatchedEngine`], with shape bucketing and refresh-boundary admission.
+//! [`BatchedEngine`], with token-budget packing and refresh-boundary
+//! admission.
 //!
-//! Bucketing: geometry and policy are fixed per engine (every coordinator
-//! worker serves one model/policy pair), so the runtime bucket key is the
-//! request's **step count** — together with the policy's `(warmup,
-//! interval)` schedule it determines the refresh pattern a cohort shares.
-//! Pending requests are admitted in FIFO order; a front request whose step
-//! count differs from the active cohort waits until the cohort drains
-//! (head-of-line discipline, mirroring the coordinator's `claim_batch`),
-//! which keeps cohorts homogeneous without reordering.
+//! Admission used to bucket by exact step count; the ragged engine runs
+//! mixed step counts and mixed resolutions in one kernel walk, so the
+//! packer's only capacity constraint is the **total-token budget**: the
+//! sum of in-flight sequence lengths (text + vision tokens per request)
+//! must stay within `token_budget` (`FO_TOKEN_BUDGET`, 0 = unbounded —
+//! then only the engine's `max_batch` slot count caps the batch). Pending
+//! requests are admitted in FIFO order; a front request that does not fit
+//! the remaining budget waits until enough in-flight tokens retire
+//! (head-of-line discipline — no reordering, no starvation). A request
+//! larger than the whole budget is still admitted when the engine is
+//! empty, so it runs solo instead of stalling the queue forever.
 //!
 //! Admission happens only when the engine reports a **refresh boundary**
 //! (every in-flight slot about to run a Full step): joining mid-window
 //! would leave the newcomer on its dense Warmup steps while the cohort is
 //! mid-Dispatch anyway, and boundary alignment maximizes the window in
-//! which cohort members share plan compiles. Requests admitted together
-//! stay aligned for their whole run; stragglers admitted late simply
-//! retire later — retirement never stalls the rest of the batch.
+//! which batch members share plan compiles. Finished requests retire
+//! without stalling the rest of the batch, and their tokens return to the
+//! budget immediately.
 
 use super::engine::{BatchResult, BatchedEngine};
 use crate::trace::Request;
@@ -27,12 +31,25 @@ use std::time::Instant;
 pub struct BatchScheduler {
     engine: BatchedEngine,
     pending: VecDeque<(Request, Instant)>,
+    /// Max total in-flight tokens (0 = unbounded).
+    token_budget: usize,
 }
 
 impl BatchScheduler {
-    /// Scheduler over one batched engine with an empty pending queue.
+    /// Scheduler over one batched engine with an empty pending queue. The
+    /// token budget comes from `FO_TOKEN_BUDGET` (unset or 0 = unbounded).
     pub fn new(engine: BatchedEngine) -> Self {
-        BatchScheduler { engine, pending: VecDeque::new() }
+        let budget = std::env::var("FO_TOKEN_BUDGET")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0);
+        Self::with_token_budget(engine, budget)
+    }
+
+    /// Scheduler with an explicit token budget (0 = unbounded), ignoring
+    /// `FO_TOKEN_BUDGET`.
+    pub fn with_token_budget(engine: BatchedEngine, token_budget: usize) -> Self {
+        BatchScheduler { engine, pending: VecDeque::new(), token_budget }
     }
 
     /// Enqueue a request (enqueue time = now).
@@ -62,10 +79,16 @@ impl BatchScheduler {
         self.engine.active() == 0 && self.pending.is_empty()
     }
 
-    /// Step count of the active cohort, or of the front pending request
-    /// when the engine is empty (the bucket the scheduler will fill next).
+    /// Step count of the oldest in-flight request, or of the front pending
+    /// request when the engine is empty. Kept for diagnostics; the packer
+    /// no longer buckets admissions by it.
     pub fn bucket_steps(&self) -> Option<usize> {
         self.engine.bucket_steps().or_else(|| self.pending.front().map(|(r, _)| r.steps))
+    }
+
+    /// The configured max total in-flight tokens (0 = unbounded).
+    pub fn token_budget(&self) -> usize {
+        self.token_budget
     }
 
     /// The engine (plan-cache stats, boundary state, …).
@@ -73,13 +96,24 @@ impl BatchScheduler {
         &self.engine
     }
 
-    /// Admit pending requests while the engine has capacity, is at a
-    /// refresh boundary, and the front request matches the active bucket.
+    /// Whether the front pending request fits the remaining token budget.
+    /// An oversized request (cost > whole budget) fits an **empty** engine
+    /// so it can run solo rather than stall the queue.
+    fn front_fits(&self, req: &Request) -> bool {
+        if self.token_budget == 0 {
+            return true;
+        }
+        let in_flight = self.engine.tokens_in_flight();
+        in_flight + self.engine.token_cost(req) <= self.token_budget || in_flight == 0
+    }
+
+    /// Admit pending requests in FIFO order while the engine has slot
+    /// capacity, sits at a refresh boundary, and the front request fits
+    /// the token budget.
     fn admit_ready(&mut self) {
         while self.engine.can_admit() {
-            let bucket = self.engine.bucket_steps();
             match self.pending.front() {
-                Some((r, _)) if bucket.is_none_or(|b| r.steps == b) => {
+                Some((r, _)) if self.front_fits(r) => {
                     let (req, enqueued) = self.pending.pop_front().unwrap();
                     self.engine.admit(req, enqueued);
                 }

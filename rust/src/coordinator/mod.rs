@@ -1,19 +1,20 @@
-//! Serving coordinator: request queue, shape-bucketing batcher, worker
-//! pool, and latency/throughput accounting.
+//! Serving coordinator: request queue, FIFO batcher, worker pool, and
+//! latency/throughput accounting.
 //!
 //! tokio is unavailable in this offline image (DESIGN.md), so the
 //! coordinator is built on `std::thread` + `Mutex<VecDeque>/Condvar`. The
 //! design mirrors a vLLM-style router at small scale: requests enter a
 //! queue, and each worker **feeds a continuous-batching
 //! [`BatchScheduler`](crate::batch::BatchScheduler)** instead of running
-//! one request per engine step. A worker claims a shape bucket (same step
-//! count) from the queue front via `claim_batch`, advances its batch one
-//! lockstep step at a time, tops the batch up with front-of-queue
-//! bucket-compatible late arrivals between steps (admitted at refresh
-//! boundaries by the scheduler), and emits per-request latency breakdowns
-//! as requests retire. Batched execution is bitwise-identical per request
-//! to a solo engine run, so serving results do not depend on batch
-//! composition or worker count.
+//! one request per engine step. A worker claims a FIFO prefix of the
+//! queue via `claim_batch` (the ragged engine batches mixed step counts
+//! and mixed resolutions, so no step-count bucketing is needed), advances
+//! its batch one lockstep step at a time, tops the batch up with
+//! front-of-queue late arrivals between steps (admitted at refresh
+//! boundaries, under the scheduler's token budget), and emits per-request
+//! latency breakdowns as requests retire. Batched execution is
+//! bitwise-identical per request to a solo engine run, so serving results
+//! do not depend on batch composition or worker count.
 //!
 //! All workers share one [`SharedPlanCache`]: a sparse plan compiled for
 //! any request is reused by every symbol-identical refresh — in the same
@@ -76,42 +77,20 @@ struct Shared {
     closed: AtomicBool,
 }
 
-/// Claim a shape bucket from the front of the queue: the first job plus up
-/// to `max_batch - 1` immediately-following jobs with the same step count
-/// (requests in one batch share the worker's warm weight/cache state and
-/// could share one plan compile per layer refresh). Returns an empty batch
-/// only when the queue is empty.
+/// Claim a FIFO prefix of the queue: up to `max_batch` front jobs,
+/// regardless of step count or resolution (the ragged engine batches
+/// mixed shapes; the scheduler's token budget meters actual admission).
+/// Returns an empty batch only when the queue is empty.
 fn claim_batch(q: &mut VecDeque<Job>, max_batch: usize) -> Vec<Job> {
-    let first = match q.pop_front() {
-        Some(j) => j,
-        None => return Vec::new(),
-    };
-    let first_steps = first.req.steps;
-    let mut batch = vec![first];
-    while batch.len() < max_batch {
-        match q.front() {
-            Some(j) if j.req.steps == first_steps => {
-                batch.push(q.pop_front().unwrap());
-            }
-            _ => break,
-        }
-    }
-    batch
+    claim_upto(q, max_batch)
 }
 
-/// Top-up claim for a running batch: take up to `room` front-of-queue jobs
-/// whose step count matches the active bucket (same FIFO head-of-line
-/// discipline as [`claim_batch`], but never starts a new bucket).
-fn claim_matching(q: &mut VecDeque<Job>, steps: Option<usize>, room: usize) -> Vec<Job> {
-    let Some(steps) = steps else { return Vec::new() };
-    let mut out = Vec::new();
-    while out.len() < room {
-        match q.front() {
-            Some(j) if j.req.steps == steps => out.push(q.pop_front().unwrap()),
-            _ => break,
-        }
-    }
-    out
+/// Top-up claim for a running batch: take up to `room` front-of-queue
+/// jobs in FIFO order. The worker computes `room` from the scheduler's
+/// remaining slot capacity so a worker never hoards jobs it cannot run.
+fn claim_upto(q: &mut VecDeque<Job>, room: usize) -> Vec<Job> {
+    let take = room.min(q.len());
+    q.drain(..take).collect()
 }
 
 /// Worker-pool coordinator.
@@ -154,10 +133,12 @@ impl Coordinator {
                     // Acquire work. With an idle scheduler, block for the
                     // first job (a plain condvar wait — `close()` notifies
                     // all waiters under the queue lock, so there is no
-                    // lost-wakeup window) and claim a fresh shape bucket.
-                    // With a running batch, top up without blocking: only
-                    // front-of-queue jobs matching the active bucket, up
-                    // to the scheduler's remaining capacity.
+                    // lost-wakeup window) and claim a fresh FIFO prefix.
+                    // With a running batch, top up without blocking:
+                    // front-of-queue jobs up to the scheduler's remaining
+                    // slot capacity (admission itself is still metered by
+                    // the scheduler's refresh-boundary + token-budget
+                    // checks).
                     let jobs: Vec<Job> = {
                         let mut q = shared.queue.lock().unwrap();
                         while q.is_empty() && sched.is_idle() {
@@ -171,7 +152,7 @@ impl Coordinator {
                         } else {
                             let room = max_batch
                                 .saturating_sub(sched.active() + sched.pending_len());
-                            claim_matching(&mut q, sched.bucket_steps(), room)
+                            claim_upto(&mut q, room)
                         }
                     };
                     for job in jobs {
@@ -419,20 +400,16 @@ mod tests {
     }
 
     #[test]
-    fn claim_batch_buckets_by_step_count() {
+    fn claim_batch_takes_fifo_prefix_across_step_counts() {
         let mut q: VecDeque<Job> = VecDeque::new();
         for (id, steps) in [(0u64, 4usize), (1, 4), (2, 6), (3, 4)] {
             q.push_back(job_with_steps(id, steps));
         }
-        // First claim: ids 0 and 1 share steps=4; id 2 breaks the bucket.
+        // Mixed step counts ride one batch: the ragged engine does not
+        // need homogeneous cohorts, so a step-count change no longer
+        // splits the claim.
         let b1 = claim_batch(&mut q, 8);
-        assert_eq!(b1.iter().map(|j| j.req.id).collect::<Vec<_>>(), vec![0, 1]);
-        // Second claim: id 2 alone (steps=6).
-        let b2 = claim_batch(&mut q, 8);
-        assert_eq!(b2.iter().map(|j| j.req.id).collect::<Vec<_>>(), vec![2]);
-        // Third claim: trailing id 3.
-        let b3 = claim_batch(&mut q, 8);
-        assert_eq!(b3.iter().map(|j| j.req.id).collect::<Vec<_>>(), vec![3]);
+        assert_eq!(b1.iter().map(|j| j.req.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
         assert!(claim_batch(&mut q, 8).is_empty());
     }
 
@@ -448,22 +425,21 @@ mod tests {
     }
 
     #[test]
-    fn claim_matching_tops_up_only_the_active_bucket() {
+    fn claim_upto_respects_room_and_fifo_order() {
         let mut q: VecDeque<Job> = VecDeque::new();
         for (id, steps) in [(0u64, 4usize), (1, 4), (2, 6), (3, 4)] {
             q.push_back(job_with_steps(id, steps));
         }
-        // No active bucket → nothing claimed.
-        assert!(claim_matching(&mut q, None, 4).is_empty());
-        // Bucket 4: takes the front run of matching jobs, stops at id 2.
-        let got = claim_matching(&mut q, Some(4), 4);
-        assert_eq!(got.iter().map(|j| j.req.id).collect::<Vec<_>>(), vec![0, 1]);
-        // Head-of-line: id 2 (steps 6) blocks the trailing steps-4 job.
-        assert!(claim_matching(&mut q, Some(4), 4).is_empty());
-        assert_eq!(q.len(), 2);
-        // Room is respected.
-        q.push_front(job_with_steps(9, 6));
-        let got = claim_matching(&mut q, Some(6), 1);
-        assert_eq!(got.len(), 1);
+        // No room → nothing claimed, queue untouched.
+        assert!(claim_upto(&mut q, 0).is_empty());
+        assert_eq!(q.len(), 4);
+        // Takes exactly `room` front jobs in order, mixed step counts
+        // included (the ragged engine batches them).
+        let got = claim_upto(&mut q, 3);
+        assert_eq!(got.iter().map(|j| j.req.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        // Remaining tail is claimed next, even when room exceeds it.
+        let got = claim_upto(&mut q, 5);
+        assert_eq!(got.iter().map(|j| j.req.id).collect::<Vec<_>>(), vec![3]);
+        assert!(q.is_empty());
     }
 }

@@ -330,6 +330,77 @@ pub fn flashomni_attention_batched(
     out
 }
 
+/// Copy head `h` of rows `lo..hi` of a concatenated `[ΣN × H·d]` buffer
+/// into a contiguous `[hi-lo × d]` tensor. Row-for-row the same copies as
+/// `extract_head` on the request's own tensor, so the ragged dispatch sees
+/// byte-identical head inputs.
+fn extract_head_rows(x: &Tensor, heads: usize, h: usize, lo: usize, hi: usize) -> Tensor {
+    let d = x.cols();
+    let hd = d / heads;
+    let mut out = Tensor::zeros(&[hi - lo, hd]);
+    for r in lo..hi {
+        out.row_mut(r - lo).copy_from_slice(&x.row(r)[h * hd..(h + 1) * hd]);
+    }
+    out
+}
+
+/// Ragged batched dispatch of [`flashomni_attention`]: **per-request
+/// plans** over concatenated `[ΣNᵣ × H·d]` Q/K/V buffers with cu-seqlen
+/// offsets — the varlen analogue of [`flashomni_attention_batched`] for
+/// mixed-resolution batches. Request `r` owns rows
+/// `indptr[r]..indptr[r+1]`; `batch × heads` pool lanes each extract their
+/// `(request, head)` row range and run Algorithm 1 against
+/// `plans[r].heads[h]`. Results come back `[request][head]` in index
+/// order; output `r` is **bitwise-identical** to the per-request head loop
+/// on request `r`'s own tensors (property-tested below).
+///
+/// All plans must share `(block_q, block_k)` (engine-constant); sequence
+/// lengths may differ per request. `cached_o` is always `None` — the
+/// ragged engine runs with the GEMM-O bias optimization (§3.5, Obs. 3).
+pub fn flashomni_attention_ragged(
+    q_cat: &Tensor,
+    k_cat: &Tensor,
+    v_cat: &Tensor,
+    indptr: &[usize],
+    plans: &[&crate::plan::SparsePlan],
+    pool: &crate::exec::ExecPool,
+) -> Vec<Vec<(Tensor, AttnStats)>> {
+    let b = plans.len();
+    assert!(b > 0, "empty ragged batch");
+    assert_eq!(indptr.len(), b + 1, "indptr must have batch+1 entries");
+    assert_eq!(indptr[0], 0, "indptr must start at 0");
+    assert_eq!(indptr[b], q_cat.rows(), "indptr must cover q_cat");
+    assert_eq!(k_cat.rows(), q_cat.rows());
+    assert_eq!(v_cat.rows(), q_cat.rows());
+    let heads = plans[0].heads.len();
+    let (bq, bk) = (plans[0].block_q, plans[0].block_k);
+    for (r, plan) in plans.iter().enumerate() {
+        assert!(indptr[r] <= indptr[r + 1], "indptr must be monotone");
+        assert_eq!(plan.heads.len(), heads, "ragged batch must share heads");
+        assert_eq!(plan.block_q, bq, "ragged batch must share block_q");
+        assert_eq!(plan.block_k, bk, "ragged batch must share block_k");
+    }
+    // Resolve the flavor once on the caller thread; the `(bq, d_h, bk)` key
+    // is sequence-length independent, so every request resolves the same
+    // flavor its solo run would.
+    let d_h = q_cat.cols() / heads.max(1);
+    let isa = resolve_isa(bq, d_h, bk);
+    let lanes: Vec<(Tensor, AttnStats)> = pool.parallel_map_indexed(b * heads, |lane| {
+        let (r, h) = (lane / heads, lane % heads);
+        let (lo, hi) = (indptr[r], indptr[r + 1]);
+        let qh = extract_head_rows(q_cat, heads, h, lo, hi);
+        let kh = extract_head_rows(k_cat, heads, h, lo, hi);
+        let vh = extract_head_rows(v_cat, heads, h, lo, hi);
+        flashomni_attention_isa(isa, &qh, &kh, &vh, &plans[r].heads[h], bq, bk, None)
+    });
+    let mut out = Vec::with_capacity(b);
+    let mut it = lanes.into_iter();
+    for _ in 0..b {
+        out.push(it.by_ref().take(heads).collect());
+    }
+    out
+}
+
 /// FlashOmni sparse attention (Algorithm 1) decoding the symbols in the
 /// kernel loops — the seed implementation, kept as the reference for the
 /// plan-equivalence property tests and the §4.3 decode-overhead ablation.
@@ -543,6 +614,72 @@ mod tests {
                     assert_eq!(st.computed_pairs, batched[r][h].1.computed_pairs);
                 }
                 assert_eq!(got.data(), want.data(), "request {r} differs");
+            }
+        });
+    }
+
+    #[test]
+    fn ragged_dispatch_is_bitwise_identical_per_request() {
+        use crate::model::blocks::extract_head;
+        use crate::plan::SparsePlan;
+        use crate::symbols::LayerSymbols;
+        let pool = crate::exec::ExecPool::new(3);
+        prop_check("ragged attention lanes == per-request head loop", 8, |rng| {
+            let heads = 1 + rng.below(4);
+            let d_h = 4 + rng.below(8);
+            let (bq, bk) = (8, 8);
+            let batch = 1 + rng.below(4);
+            let d = heads * d_h;
+            // Mixed (often odd) per-request lengths.
+            let ns: Vec<usize> = (0..batch).map(|_| 9 + rng.below(55)).collect();
+            let mut plans = Vec::new();
+            let mut qs = Vec::new();
+            let mut ks = Vec::new();
+            let mut vs = Vec::new();
+            for &n in &ns {
+                let t_q = n.div_ceil(bq);
+                let t_kv = n.div_ceil(bk);
+                let syms = LayerSymbols {
+                    heads: (0..heads)
+                        .map(|_| {
+                            let m_c = rand_mask(rng, t_q, 0.7);
+                            let m_s = rand_mask(rng, t_q * t_kv, 0.6);
+                            HeadSymbols::from_masks(&m_c, &m_s, t_kv, 1)
+                        })
+                        .collect(),
+                };
+                plans.push(SparsePlan::compile(&syms, t_q, t_kv, bq, bk, DecodeMode::RowCached));
+                qs.push(randn(rng, &[n, d]));
+                ks.push(randn(rng, &[n, d]));
+                vs.push(randn(rng, &[n, d]));
+            }
+            let mut indptr = vec![0usize];
+            let cat = |ts: &[Tensor]| {
+                let mut data = Vec::new();
+                for t in ts {
+                    data.extend_from_slice(t.data());
+                }
+                Tensor::from_vec(&[ts.iter().map(|t| t.rows()).sum(), d], data)
+            };
+            for &n in &ns {
+                indptr.push(indptr.last().unwrap() + n);
+            }
+            let (q_cat, k_cat, v_cat) = (cat(&qs), cat(&ks), cat(&vs));
+            let plan_refs: Vec<&SparsePlan> = plans.iter().collect();
+            let ragged =
+                flashomni_attention_ragged(&q_cat, &k_cat, &v_cat, &indptr, &plan_refs, &pool);
+            assert_eq!(ragged.len(), batch);
+            for r in 0..batch {
+                assert_eq!(ragged[r].len(), heads);
+                for h in 0..heads {
+                    let qh = extract_head(&qs[r], heads, h);
+                    let kh = extract_head(&ks[r], heads, h);
+                    let vh = extract_head(&vs[r], heads, h);
+                    let (oh, st) =
+                        flashomni_attention(&qh, &kh, &vh, &plans[r].heads[h], bq, bk, None);
+                    assert_eq!(oh.data(), ragged[r][h].0.data(), "request {r} head {h} differs");
+                    assert_eq!(st.computed_pairs, ragged[r][h].1.computed_pairs);
+                }
             }
         });
     }

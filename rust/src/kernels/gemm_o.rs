@@ -564,6 +564,206 @@ pub fn gemm_o_update_batched(
         .collect()
 }
 
+// ---- ragged variants: per-request plans, one concatenated buffer ----
+
+/// Validate a ragged GEMM-O call (`indptr` layout, shared head count /
+/// block size across plans, per-request plan geometry), returning
+/// `(heads, d_out, block_q)`.
+fn ragged_geometry(
+    o_cat: &Tensor,
+    indptr: &[usize],
+    panels: &WeightPanels,
+    plans: &[&SparsePlan],
+) -> (usize, usize, usize) {
+    let batch = plans.len();
+    assert!(batch > 0, "empty ragged batch");
+    assert_eq!(indptr.len(), batch + 1, "indptr must have batch+1 entries");
+    assert_eq!(indptr[0], 0, "indptr must start at 0");
+    assert_eq!(indptr[batch], o_cat.rows(), "indptr must cover o_cat");
+    let heads = plans[0].heads.len();
+    let block_q = plans[0].block_q;
+    assert_eq!(o_cat.cols(), heads * panels.d_h);
+    for (r, plan) in plans.iter().enumerate() {
+        assert!(indptr[r] <= indptr[r + 1], "indptr must be monotone");
+        let n_r = indptr[r + 1] - indptr[r];
+        assert_eq!(plan.heads.len(), heads, "ragged batch must share heads");
+        assert_eq!(plan.block_q, block_q, "ragged batch must share block_q");
+        assert_eq!(plan.t_q, n_r.div_ceil(block_q), "plan Q-block geometry mismatch");
+    }
+    (heads, panels.d_out, block_q)
+}
+
+/// Flatten per-request row blocks into one `(request, block)` work list.
+fn ragged_row_tasks(plans: &[&SparsePlan]) -> Vec<(u32, u32)> {
+    let mut tasks = Vec::new();
+    for (r, plan) in plans.iter().enumerate() {
+        for bi in 0..plan.t_q {
+            tasks.push((r as u32, bi as u32));
+        }
+    }
+    tasks
+}
+
+/// Ragged [`gemm_o_dispatch_batched`]: **per-request plans** over one
+/// concatenated `[ΣNᵣ × H·d_h]` attention-output buffer with cu-seqlen
+/// offsets — the varlen analogue for mixed-resolution batches. Request `r`
+/// owns rows `indptr[r]..indptr[r+1]`; its [`RowTiles`] inversion drives
+/// its own row blocks, reading at global row offsets and writing into its
+/// own `[Nᵣ × d_out]` output (initialized from `biases[r]`). Within a row
+/// block the head loop stays in ascending order, so output `r` is
+/// **bitwise-identical** to `gemm_o_dispatch(o_r, panels, plans[r],
+/// biases[r])` (property-tested below, tail blocks clamped at
+/// `indptr[r+1]`).
+pub fn gemm_o_dispatch_ragged(
+    o_cat: &Tensor,
+    indptr: &[usize],
+    panels: &WeightPanels,
+    plans: &[&SparsePlan],
+    biases: &[&Tensor],
+    pool: &ExecPool,
+) -> Vec<(Tensor, GemmStats)> {
+    let (heads, d_out, block_q) = ragged_geometry(o_cat, indptr, panels, plans);
+    assert_eq!(plans.len(), biases.len());
+    let isa = resolve_isa(block_q, panels.d_h, d_out);
+    let mut outs: Vec<Tensor> = biases
+        .iter()
+        .enumerate()
+        .map(|(r, b)| {
+            assert_eq!(b.shape(), &[indptr[r + 1] - indptr[r], d_out]);
+            (*b).clone()
+        })
+        .collect();
+    let row_tiles: Vec<RowTiles> = plans.iter().map(|p| RowTiles::from_plan(p)).collect();
+    let tasks = ragged_row_tasks(plans);
+    {
+        let ptrs: Vec<SendPtr<f32>> =
+            outs.iter_mut().map(|o| SendPtr(o.data_mut().as_mut_ptr())).collect();
+        let ptrs = &ptrs;
+        let row_tiles = &row_tiles;
+        pool.parallel_for(tasks.len(), |task| {
+            let (r, bi) = tasks[task];
+            let (r, bi) = (r as usize, bi as usize);
+            // Global read offsets; the tail block clamps at the request's
+            // end, exactly like the solo kernel clamps at `n`.
+            let lo = indptr[r] + bi * block_q;
+            let hi = (lo + block_q).min(indptr[r + 1]);
+            // SAFETY: (request, row-block) pairs are unique across tasks,
+            // so the row slabs are disjoint; every `outs[r]` outlives the
+            // parallel section (ExecPool joins before returning).
+            let rows = unsafe {
+                std::slice::from_raw_parts_mut(
+                    ptrs[r].0.add(bi * block_q * d_out),
+                    (hi - lo) * d_out,
+                )
+            };
+            for &h in &row_tiles[r].live[bi] {
+                project_tile_rows(isa, o_cat, panels, h as usize, lo, hi, heads, rows);
+            }
+        });
+    }
+    outs.into_iter().zip(plans).map(|(o, p)| (o, p.gemm_stats())).collect()
+}
+
+/// Ragged [`gemm_o_stage1_batched`]: per-request *to-be-cached* tiles
+/// projected into per-request bias tensors off one concatenated buffer.
+/// Bitwise-identical per request to [`gemm_o_stage1`].
+pub fn gemm_o_stage1_ragged(
+    o_cat: &Tensor,
+    indptr: &[usize],
+    panels: &WeightPanels,
+    plans: &[&SparsePlan],
+    pool: &ExecPool,
+) -> Vec<Tensor> {
+    let (heads, d_out, block_q) = ragged_geometry(o_cat, indptr, panels, plans);
+    let isa = resolve_isa(block_q, panels.d_h, d_out);
+    let mut biases: Vec<Tensor> = (0..plans.len())
+        .map(|r| Tensor::zeros(&[indptr[r + 1] - indptr[r], d_out]))
+        .collect();
+    let row_tiles: Vec<RowTiles> = plans.iter().map(|p| RowTiles::from_plan(p)).collect();
+    let tasks = ragged_row_tasks(plans);
+    {
+        let ptrs: Vec<SendPtr<f32>> =
+            biases.iter_mut().map(|b| SendPtr(b.data_mut().as_mut_ptr())).collect();
+        let ptrs = &ptrs;
+        let row_tiles = &row_tiles;
+        pool.parallel_for(tasks.len(), |task| {
+            let (r, bi) = tasks[task];
+            let (r, bi) = (r as usize, bi as usize);
+            let lo = indptr[r] + bi * block_q;
+            let hi = (lo + block_q).min(indptr[r + 1]);
+            // SAFETY: as in `gemm_o_dispatch_ragged`.
+            let rows = unsafe {
+                std::slice::from_raw_parts_mut(
+                    ptrs[r].0.add(bi * block_q * d_out),
+                    (hi - lo) * d_out,
+                )
+            };
+            for &h in &row_tiles[r].cached[bi] {
+                project_tile_rows(isa, o_cat, panels, h as usize, lo, hi, heads, rows);
+            }
+        });
+    }
+    biases
+}
+
+/// Ragged [`gemm_o_update_batched`]: per request, the exact Update-step
+/// output plus the refreshed bias `B_c`, each driven by its own plan off
+/// one concatenated buffer. Bitwise-identical per request to
+/// [`gemm_o_update`].
+pub fn gemm_o_update_ragged(
+    o_cat: &Tensor,
+    indptr: &[usize],
+    panels: &WeightPanels,
+    plans: &[&SparsePlan],
+    pool: &ExecPool,
+) -> Vec<(Tensor, Tensor, GemmStats)> {
+    let (heads, d_out, block_q) = ragged_geometry(o_cat, indptr, panels, plans);
+    let isa = resolve_isa(block_q, panels.d_h, d_out);
+    let mut outs: Vec<Tensor> = (0..plans.len())
+        .map(|r| Tensor::zeros(&[indptr[r + 1] - indptr[r], d_out]))
+        .collect();
+    let mut biases: Vec<Tensor> = (0..plans.len())
+        .map(|r| Tensor::zeros(&[indptr[r + 1] - indptr[r], d_out]))
+        .collect();
+    let row_tiles: Vec<RowTiles> = plans.iter().map(|p| RowTiles::from_plan(p)).collect();
+    let tasks = ragged_row_tasks(plans);
+    {
+        let out_ptrs: Vec<SendPtr<f32>> =
+            outs.iter_mut().map(|o| SendPtr(o.data_mut().as_mut_ptr())).collect();
+        let bias_ptrs: Vec<SendPtr<f32>> =
+            biases.iter_mut().map(|b| SendPtr(b.data_mut().as_mut_ptr())).collect();
+        let (out_ptrs, bias_ptrs) = (&out_ptrs, &bias_ptrs);
+        let row_tiles = &row_tiles;
+        pool.parallel_for(tasks.len(), |task| {
+            let (r, bi) = tasks[task];
+            let (r, bi) = (r as usize, bi as usize);
+            let lo = indptr[r] + bi * block_q;
+            let hi = (lo + block_q).min(indptr[r + 1]);
+            let len = (hi - lo) * d_out;
+            // SAFETY: as in `gemm_o_dispatch_ragged`; the out and bias
+            // slabs live in different buffers.
+            let out_rows = unsafe {
+                std::slice::from_raw_parts_mut(out_ptrs[r].0.add(bi * block_q * d_out), len)
+            };
+            let bias_rows = unsafe {
+                std::slice::from_raw_parts_mut(bias_ptrs[r].0.add(bi * block_q * d_out), len)
+            };
+            for &h in &row_tiles[r].live[bi] {
+                project_tile_rows(isa, o_cat, panels, h as usize, lo, hi, heads, out_rows);
+            }
+            for &h in &row_tiles[r].cached[bi] {
+                project_tile_rows(isa, o_cat, panels, h as usize, lo, hi, heads, bias_rows);
+            }
+        });
+    }
+    outs.iter_mut().zip(&biases).for_each(|(o, b)| o.add_assign(b));
+    outs.into_iter()
+        .zip(biases)
+        .zip(plans)
+        .map(|((o, b), p)| (o, b, p.gemm_stats()))
+        .collect()
+}
+
 // ---- seed symbol-decoding variants (plan-equivalence references) ----
 
 /// [`gemm_o_update`] decoding `F(S_c, i)` per tile (seed implementation).
@@ -818,6 +1018,65 @@ mod tests {
                 gemm_o_dispatch_batched(&o_refs, &panels, &plan, &bias_refs, &pool);
             for (r, (d_b, _)) in dispatched.iter().enumerate() {
                 let (d_s, _) = gemm_o_dispatch(&os[r], &panels, &plan, bias_refs[r]);
+                assert_eq!(d_s.data(), d_b.data(), "dispatch, request {r}");
+            }
+        });
+    }
+
+    #[test]
+    fn ragged_variants_are_bitwise_identical_per_request() {
+        let pool = crate::exec::ExecPool::new(3);
+        prop_check("gemm_o *_ragged[r] == serial(o_r)", 10, |rng| {
+            let heads = 1 + rng.below(4);
+            let d_h = 2 + rng.below(6);
+            let d_out = 4 + rng.below(10);
+            let b = 4 + rng.below(8);
+            let batch = 1 + rng.below(4);
+            // Mixed (often odd) per-request lengths exercise tail clamping.
+            let ns: Vec<usize> = (0..batch).map(|_| 9 + rng.below(39)).collect();
+            let w = randn(rng, &[heads * d_h, d_out]);
+            let panels = WeightPanels::new(&w, heads);
+            let os: Vec<Tensor> = ns.iter().map(|&n| randn(rng, &[n, heads * d_h])).collect();
+            let plans: Vec<SparsePlan> = ns
+                .iter()
+                .map(|&n| {
+                    let t_q = n.div_ceil(b);
+                    let masks: Vec<Vec<bool>> =
+                        (0..heads).map(|_| rand_mask(rng, t_q, 0.5)).collect();
+                    let syms = syms_from_cache_masks(&masks);
+                    SparsePlan::compile(&syms, t_q, t_q, b, b, DecodeMode::RowCached)
+                })
+                .collect();
+            let mut indptr = vec![0usize];
+            let mut cat = Vec::new();
+            for o in &os {
+                cat.extend_from_slice(o.data());
+                indptr.push(indptr.last().unwrap() + o.rows());
+            }
+            let o_cat = Tensor::from_vec(&[indptr[batch], heads * d_h], cat);
+            let plan_refs: Vec<&SparsePlan> = plans.iter().collect();
+
+            let updates = gemm_o_update_ragged(&o_cat, &indptr, &panels, &plan_refs, &pool);
+            let stages = gemm_o_stage1_ragged(&o_cat, &indptr, &panels, &plan_refs, &pool);
+            let serial: Vec<(Tensor, Tensor, GemmStats)> = os
+                .iter()
+                .zip(&plans)
+                .map(|(o, p)| gemm_o_update(o, &panels, p))
+                .collect();
+            for (r, ((out_b, bias_b, st_b), (out_s, bias_s, st_s))) in
+                updates.iter().zip(&serial).enumerate()
+            {
+                assert_eq!(out_s.data(), out_b.data(), "update out, request {r}");
+                assert_eq!(bias_s.data(), bias_b.data(), "update bias, request {r}");
+                assert_eq!(st_s.computed_tiles, st_b.computed_tiles);
+                assert_eq!(stages[r].data(), bias_s.data(), "stage1, request {r}");
+            }
+
+            let bias_refs: Vec<&Tensor> = serial.iter().map(|(_, bb, _)| bb).collect();
+            let dispatched =
+                gemm_o_dispatch_ragged(&o_cat, &indptr, &panels, &plan_refs, &bias_refs, &pool);
+            for (r, (d_b, _)) in dispatched.iter().enumerate() {
+                let (d_s, _) = gemm_o_dispatch(&os[r], &panels, &plans[r], bias_refs[r]);
                 assert_eq!(d_s.data(), d_b.data(), "dispatch, request {r}");
             }
         });

@@ -362,6 +362,111 @@ pub fn gemm_q_batched(
     ys.into_iter().map(|y| (y, plan.gemm_stats())).collect()
 }
 
+/// Ragged batched GEMM-Q: **per-request plans** over one concatenated
+/// token buffer with cu-seqlen offsets — the varlen analogue of
+/// [`gemm_q_batched`] for mixed-resolution batches.
+///
+/// * `x_cat` — `[ΣNᵣ × d_in]`, the batch's activations stacked row-wise,
+/// * `indptr` — `batch+1` token offsets (`qo_indptr` layout): request `r`
+///   owns rows `indptr[r]..indptr[r+1]`,
+/// * `plans` — one compiled plan per request; each must satisfy its own
+///   geometry (`plans[r].t_q == Nᵣ.div_ceil(block_q)`), but sequence
+///   lengths may differ per request.
+///
+/// All plans must share `block_q` (the engine's block size is
+/// batch-constant); the microkernel flavor is resolved from the same
+/// `(block_q, d_in, d_h)` key as the serial kernel, and every tile runs the
+/// identical `compute_q_tile` float sequence at its request's global row
+/// offset — so output `r` is **bitwise-identical** to
+/// `gemm_q(x_r, w, plans[r], bias)` (property-tested below, including
+/// odd tail blocks clamped at `indptr[r+1]`).
+pub fn gemm_q_ragged(
+    x_cat: &Tensor,
+    indptr: &[usize],
+    w: &Tensor,
+    plans: &[&SparsePlan],
+    bias: Option<&[f32]>,
+    pool: &ExecPool,
+) -> Vec<(Tensor, GemmStats)> {
+    let batch = plans.len();
+    assert!(batch > 0, "empty ragged batch");
+    assert_eq!(indptr.len(), batch + 1, "indptr must have batch+1 entries");
+    assert_eq!(indptr[0], 0, "indptr must start at 0");
+    assert_eq!(indptr[batch], x_cat.rows(), "indptr must cover x_cat");
+    let block_q = plans[0].block_q;
+    let d_in = x_cat.cols();
+    let heads = plans[0].heads.len();
+    assert!(heads > 0);
+    let d_out = w.cols();
+    assert_eq!(w.rows(), d_in);
+    assert_eq!(d_out % heads, 0, "W output dim must split across heads");
+    let d_h = d_out / heads;
+    // Same `(block_q, d_in, d_h)` key as the serial kernel, so each
+    // request's output stays bitwise-identical to `gemm_q` under tuning.
+    let cfg = resolve_cfg(block_q, d_in, d_h, pool.size());
+    let d_pad = panel_stride(cfg.isa, d_h);
+    for (r, plan) in plans.iter().enumerate() {
+        assert!(indptr[r] <= indptr[r + 1], "indptr must be monotone");
+        let n_r = indptr[r + 1] - indptr[r];
+        assert_eq!(plan.block_q, block_q, "ragged batch must share block_q");
+        assert_eq!(plan.heads.len(), heads, "ragged batch must share heads");
+        assert_eq!(plan.t_q, n_r.div_ceil(block_q), "plan Q-block geometry mismatch");
+    }
+    let mut ys: Vec<Tensor> =
+        (0..batch).map(|r| Tensor::zeros(&[indptr[r + 1] - indptr[r], d_out])).collect();
+
+    // Panels are shared across requests: gather head `h` once if any
+    // request's plan keeps a live tile in it.
+    let panels: Vec<Vec<f32>> = (0..heads)
+        .map(|h| {
+            if plans.iter().all(|p| p.heads[h].live_q.is_empty()) {
+                Vec::new()
+            } else {
+                gather_head_panel(w, h, d_h, d_pad)
+            }
+        })
+        .collect();
+    // One global `(request, head, block)` work list — requests with more
+    // live tiles naturally get more lanes (no per-geometry bucketing).
+    let mut tiles: Vec<(u32, u32, u32)> = Vec::new();
+    for (r, plan) in plans.iter().enumerate() {
+        for (h, bi) in plan.live_tiles() {
+            tiles.push((r as u32, h, bi));
+        }
+    }
+    let chunk = cfg.chunk(tiles.len(), pool.size());
+    let n_tasks = tiles.len().div_ceil(chunk);
+    {
+        let ptrs: Vec<SendPtr<f32>> =
+            ys.iter_mut().map(|y| SendPtr(y.data_mut().as_mut_ptr())).collect();
+        let ptrs = &ptrs;
+        pool.parallel_for(n_tasks, |t| {
+            for &(r, h, bi) in &tiles[t * chunk..((t + 1) * chunk).min(tiles.len())] {
+                let (r, h, bi) = (r as usize, h as usize, bi as usize);
+                // Global read offsets into the concatenated buffer; the
+                // tail block clamps at the request's end, exactly like the
+                // solo kernel clamps at `n`.
+                let lo = indptr[r] + bi * block_q;
+                let hi = (lo + block_q).min(indptr[r + 1]);
+                let tile =
+                    compute_q_tile(cfg.isa, x_cat, &panels[h], h, d_h, d_pad, lo, hi, bias);
+                for (row_i, row) in tile.chunks_exact(d_pad).enumerate() {
+                    // Request-local write offset into ys[r].
+                    let off = (bi * block_q + row_i) * d_out + h * d_h;
+                    // SAFETY: (request, head, block) triples are unique
+                    // across tasks, so the written rectangles are disjoint;
+                    // each `ys[r]` outlives the parallel section (ExecPool
+                    // joins before returning).
+                    unsafe {
+                        std::ptr::copy_nonoverlapping(row.as_ptr(), ptrs[r].0.add(off), d_h);
+                    }
+                }
+            }
+        });
+    }
+    ys.into_iter().zip(plans).map(|(y, p)| (y, p.gemm_stats())).collect()
+}
+
 /// Seed symbol-decoding variant: decodes `F(S_c, i)` per tile. Kept as the
 /// reference for the plan-equivalence property tests.
 pub fn gemm_q_symbols(
@@ -536,6 +641,47 @@ mod tests {
                 let (ys, ss) = gemm_q(x, &w, &plan, Some(&bias));
                 assert_eq!(ys.data(), yb.data(), "batched output must be bitwise equal");
                 assert_eq!(ss.computed_tiles, sb.computed_tiles);
+            }
+        });
+    }
+
+    #[test]
+    fn ragged_variant_is_bitwise_identical_per_request() {
+        let pool = crate::exec::ExecPool::new(3);
+        prop_check("gemm_q_ragged[r] == gemm_q(x_r)", 10, |rng| {
+            let d_in = 4 + rng.below(12);
+            let heads = 1 + rng.below(4);
+            let d_h = 2 + rng.below(6);
+            let b = 4 + rng.below(8);
+            let batch = 1 + rng.below(4);
+            // Mixed (often odd) per-request lengths exercise tail clamping.
+            let ns: Vec<usize> = (0..batch).map(|_| 7 + rng.below(57)).collect();
+            let w = randn(rng, &[d_in, heads * d_h]);
+            let bias: Vec<f32> = (0..heads * d_h).map(|i| i as f32 * 0.01).collect();
+            let xs: Vec<Tensor> = ns.iter().map(|&n| randn(rng, &[n, d_in])).collect();
+            let plans: Vec<SparsePlan> = ns
+                .iter()
+                .map(|&n| {
+                    let t_q = n.div_ceil(b);
+                    let masks: Vec<Vec<bool>> =
+                        (0..heads).map(|_| rand_mask(rng, t_q, 0.6)).collect();
+                    plan_of(&layer_syms_from_cache_masks(&masks, t_q, 1), t_q, b)
+                })
+                .collect();
+            let mut indptr = vec![0usize];
+            let mut cat = Vec::new();
+            for x in &xs {
+                cat.extend_from_slice(x.data());
+                indptr.push(indptr.last().unwrap() + x.rows());
+            }
+            let x_cat = Tensor::from_vec(&[indptr[batch], d_in], cat);
+            let plan_refs: Vec<&SparsePlan> = plans.iter().collect();
+            let ragged = gemm_q_ragged(&x_cat, &indptr, &w, &plan_refs, Some(&bias), &pool);
+            assert_eq!(ragged.len(), batch);
+            for ((x, plan), (yr, sr)) in xs.iter().zip(&plans).zip(&ragged) {
+                let (ys, ss) = gemm_q(x, &w, plan, Some(&bias));
+                assert_eq!(ys.data(), yr.data(), "ragged output must be bitwise equal");
+                assert_eq!(ss.computed_tiles, sr.computed_tiles);
             }
         });
     }

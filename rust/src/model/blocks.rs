@@ -131,6 +131,24 @@ pub fn vstack(a: &Tensor, b: &Tensor) -> Tensor {
     Tensor::from_vec(&[a.rows() + b.rows(), a.cols()], data)
 }
 
+/// Vertically stack any number of `[·, d]` tensors (row counts may
+/// differ; column counts must agree). An empty list yields `[0 × 0]`.
+/// The ragged batch path uses this to build the concatenated token
+/// buffers its cu-seqlen kernels walk.
+pub fn vstack_all(ts: &[&Tensor]) -> Tensor {
+    let Some(first) = ts.first() else {
+        return Tensor::zeros(&[0, 0]);
+    };
+    let d = first.cols();
+    let rows: usize = ts.iter().map(|t| t.rows()).sum();
+    let mut data = Vec::with_capacity(rows * d);
+    for t in ts {
+        assert_eq!(t.cols(), d, "vstack_all: column counts must agree");
+        data.extend_from_slice(t.data());
+    }
+    Tensor::from_vec(&[rows, d], data)
+}
+
 /// Split rows `[0, t)` and `[t, n)`.
 pub fn vsplit(x: &Tensor, t: usize) -> (Tensor, Tensor) {
     let d = x.cols();

@@ -104,7 +104,23 @@ impl MiniMMDiT {
     /// run the block loop themselves (the batched engine advances many
     /// requests layer-by-layer in lockstep) produce bit-identical streams.
     pub fn embed_streams(&self, text_ids: &[usize], patches: &Tensor) -> (Tensor, Tensor) {
-        let cfg = &self.cfg;
+        self.embed_streams_with(&self.cfg, text_ids, patches)
+    }
+
+    /// [`MiniMMDiT::embed_streams`] under an explicit per-request config —
+    /// the ragged batch path runs requests whose `patch_h × patch_w` grid
+    /// differs from the model's native one (weights are
+    /// resolution-independent; only the sequence length changes). `cfg`
+    /// must agree with the model on every weight-shaping field
+    /// (`dim`, `text_tokens`, `patch_size`, `channels`, `vocab`).
+    pub fn embed_streams_with(
+        &self,
+        cfg: &ModelConfig,
+        text_ids: &[usize],
+        patches: &Tensor,
+    ) -> (Tensor, Tensor) {
+        assert_eq!(cfg.patch_dim(), self.cfg.patch_dim(), "patch_dim is weight-shaping");
+        assert_eq!(cfg.dim, self.cfg.dim, "dim is weight-shaping");
         assert_eq!(text_ids.len(), cfg.text_tokens);
         assert_eq!(patches.shape(), &[cfg.vision_tokens(), cfg.patch_dim()]);
         let mut txt = Tensor::zeros(&[cfg.text_tokens, cfg.dim]);
@@ -127,6 +143,12 @@ impl MiniMMDiT {
     /// velocities — the shared suffix of every forward pass.
     pub fn decode(&self, cvec: &[f32], img: &Tensor) -> Tensor {
         blocks::final_layer(&self.w, &self.cfg, cvec, img)
+    }
+
+    /// [`MiniMMDiT::decode`] under an explicit per-request config (the
+    /// final layer is row-local, so only the row count differs).
+    pub fn decode_with(&self, cfg: &ModelConfig, cvec: &[f32], img: &Tensor) -> Tensor {
+        blocks::final_layer(&self.w, cfg, cvec, img)
     }
 
     /// Dense forward (reference path).

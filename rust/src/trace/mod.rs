@@ -67,6 +67,22 @@ pub struct Request {
     pub steps: usize,
     /// Arrival offset from trace start, seconds.
     pub arrival_s: f64,
+    /// Vision latent grid override `(patch_h, patch_w)` — `None` keeps the
+    /// model's native resolution. A request with an override runs with a
+    /// per-request `ModelConfig`/`Geometry` (same weights, different
+    /// sequence length) and can share a ragged batch with requests of any
+    /// other resolution.
+    pub patch_hw: Option<(usize, usize)>,
+}
+
+impl Request {
+    /// Joint sequence length this request will run at under `base`:
+    /// `text_tokens + patch_h·patch_w`, with the resolution override
+    /// applied. This is the scheduler's token-budget cost.
+    pub fn token_cost(&self, base: &crate::config::ModelConfig) -> usize {
+        let (ph, pw) = self.patch_hw.unwrap_or((base.patch_h, base.patch_w));
+        base.text_tokens + ph * pw
+    }
 }
 
 /// A synthetic serving trace with Poisson arrivals.
@@ -90,6 +106,7 @@ pub fn poisson_trace(
                 seed: rng.next_u64(),
                 steps,
                 arrival_s: t,
+                patch_hw: None,
             }
         })
         .collect()

@@ -1,8 +1,9 @@
 //! Integration tests for the batched generation subsystem
 //! (`rust/src/batch/`): bitwise equivalence of batched vs solo execution,
 //! the one-compile-per-(layer, refresh)-per-batch invariant, refresh-
-//! boundary admission, scheduler bucketing, and `PlanCache` exactness
-//! under concurrent batched access.
+//! boundary admission, FIFO token-budget packing, and `PlanCache`
+//! exactness under concurrent batched access. Ragged (mixed-resolution)
+//! coverage lives in `rust/tests/ragged_batching.rs`.
 
 use flashomni::batch::{BatchScheduler, BatchedEngine};
 use flashomni::config::{ModelConfig, SparsityConfig};
@@ -53,6 +54,7 @@ fn request(id: u64, scene: usize, seed: u64, steps: usize, text_tokens: usize) -
         seed,
         steps,
         arrival_s: 0.0,
+        patch_hw: None,
     }
 }
 
@@ -220,19 +222,20 @@ fn admission_only_at_refresh_boundaries() {
 }
 
 #[test]
-fn scheduler_buckets_by_step_count() {
+fn scheduler_admits_mixed_step_counts_fifo() {
+    // The token-budget packer replaced step-count bucketing: requests
+    // with different step counts ride one batch, each retiring on its own
+    // schedule without stalling the rest.
     let model = tiny_model(1, 3);
     let policy = Policy::full();
-    let engine = BatchedEngine::new(model.clone(), policy, 8, 8, 4);
-    let mut sched = BatchScheduler::new(engine);
+    let engine = BatchedEngine::new(model.clone(), policy.clone(), 8, 8, 4);
+    let mut sched = BatchScheduler::with_token_budget(engine, 0);
     for (id, steps) in [(0u64, 4usize), (1, 4), (2, 6), (3, 4)] {
         sched.submit(request(id, id as usize, id, steps, model.cfg.text_tokens));
     }
-    // First cohort: ids 0 and 1 (steps 4); id 2 (steps 6) blocks id 3.
     let _ = sched.step();
-    assert_eq!(sched.active(), 2);
-    assert_eq!(sched.bucket_steps(), Some(4));
-    assert_eq!(sched.pending_len(), 2);
+    assert_eq!(sched.active(), 4, "mixed step counts share one batch");
+    assert_eq!(sched.pending_len(), 0);
     let done = sched.run_to_completion();
     let mut ids: Vec<u64> = done.iter().map(|r| r.id).collect();
     ids.sort_unstable();
@@ -240,6 +243,13 @@ fn scheduler_buckets_by_step_count() {
     for r in &done {
         assert!(r.image.data().iter().all(|x| x.is_finite()));
         assert!(r.latency_s >= r.exec_s);
+        // Each request still matches its solo run despite the mixed batch.
+        let solo = solo_runs(
+            &model,
+            &policy,
+            &[request(r.id, r.id as usize, r.id, r.stats.steps, model.cfg.text_tokens)],
+        );
+        assert_eq!(r.image, solo[0].0, "request {} differs from solo", r.id);
     }
 }
 

@@ -302,6 +302,7 @@ fn batched_shared_burst_delta_compiles_once_per_refresh() {
                 seed: 1234,
                 steps,
                 arrival_s: 0.0,
+                patch_hw: None,
             },
             Instant::now(),
         );

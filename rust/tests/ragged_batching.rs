@@ -1,0 +1,324 @@
+//! Ragged-batching acceptance tests (tentpole PR):
+//!
+//! (a) kernel level — `gemm_q_ragged` / `flashomni_attention_ragged` /
+//!     `gemm_o_dispatch_ragged` walking one concatenated token buffer
+//!     with cu-seqlen offsets are **bitwise-identical** per request to
+//!     the solo kernels, at odd sequence lengths (ragged last blocks,
+//!     SIMD lane-padding edges under whatever `FO_SIMD` selects),
+//! (b) engine level — a mixed-resolution batch (per-request `patch_hw`
+//!     overrides) produces images and compute stats bitwise-identical to
+//!     per-request solo `DiTEngine` runs,
+//! (c) the token-budget packer — over-budget rejection, refresh-boundary
+//!     admission under a budget, and non-stalling retirement that
+//!     returns tokens to the budget.
+
+use flashomni::batch::{BatchScheduler, BatchedEngine};
+use flashomni::config::{ModelConfig, SparsityConfig};
+use flashomni::engine::{DiTEngine, Policy, RunStats};
+use flashomni::exec::ExecPool;
+use flashomni::kernels::attention::{flashomni_attention, flashomni_attention_ragged};
+use flashomni::kernels::gemm_o::{gemm_o_dispatch, gemm_o_dispatch_ragged, WeightPanels};
+use flashomni::kernels::gemm_q::{gemm_q, gemm_q_ragged};
+use flashomni::model::blocks::{extract_head, vstack_all};
+use flashomni::model::{weights::Weights, MiniMMDiT};
+use flashomni::plan::{DecodeMode, SparsePlan};
+use flashomni::symbols::{HeadSymbols, LayerSymbols};
+use flashomni::tensor::Tensor;
+use flashomni::testutil::{prop_check, rand_mask, randn};
+use flashomni::trace::{caption_ids, Request};
+use flashomni::util::rng::Pcg32;
+use std::time::Instant;
+
+fn random_layer_syms(rng: &mut Pcg32, heads: usize, qg: usize, kg: usize) -> LayerSymbols {
+    LayerSymbols {
+        heads: (0..heads)
+            .map(|_| {
+                let m_c = rand_mask(rng, qg, 0.6);
+                let m_s = rand_mask(rng, qg * kg, 0.5);
+                HeadSymbols::from_masks(&m_c, &m_s, kg, 1)
+            })
+            .collect(),
+    }
+}
+
+// ---------------------------------------------------------------- (a) --
+
+#[test]
+fn ragged_kernels_bitwise_equal_solo_at_odd_lengths() {
+    let pool = ExecPool::global();
+    prop_check("ragged kernels == per-request solo kernels", 8, |rng| {
+        let heads = 1 + rng.below(3);
+        let d_h = 4 + rng.below(5);
+        let (bq, bk) = (8usize, 8usize);
+        let batch = 2 + rng.below(3);
+        let d_in = 6 + rng.below(6);
+        let d_out = 5 + rng.below(7);
+        // Odd per-request lengths: ragged last blocks + lane-padding edges.
+        let ns: Vec<usize> = (0..batch).map(|_| 7 + rng.below(57)).collect();
+        let plans: Vec<SparsePlan> = ns
+            .iter()
+            .map(|&n| {
+                let (t_q, t_kv) = (n.div_ceil(bq), n.div_ceil(bk));
+                let syms = random_layer_syms(rng, heads, t_q, t_kv);
+                SparsePlan::compile(&syms, t_q, t_kv, bq, bk, DecodeMode::RowCached)
+            })
+            .collect();
+        let plan_refs: Vec<&SparsePlan> = plans.iter().collect();
+        let mut indptr = vec![0usize];
+        for (i, &n) in ns.iter().enumerate() {
+            indptr.push(indptr[i] + n);
+        }
+
+        // GEMM-Q.
+        let xs: Vec<Tensor> = ns.iter().map(|&n| randn(rng, &[n, d_in])).collect();
+        let wq = randn(rng, &[d_in, heads * d_h]);
+        let x_cat = vstack_all(&xs.iter().collect::<Vec<_>>());
+        let ragged_q = gemm_q_ragged(&x_cat, &indptr, &wq, &plan_refs, None, &pool);
+        for (r, x) in xs.iter().enumerate() {
+            let (ys, ss) = gemm_q(x, &wq, &plans[r], None);
+            assert_eq!(ys.data(), ragged_q[r].0.data(), "gemm_q request {r} (n={})", ns[r]);
+            assert_eq!(ss.computed_tiles, ragged_q[r].1.computed_tiles);
+        }
+
+        // Attention.
+        let qs: Vec<Tensor> = ns.iter().map(|&n| randn(rng, &[n, heads * d_h])).collect();
+        let ks: Vec<Tensor> = ns.iter().map(|&n| randn(rng, &[n, heads * d_h])).collect();
+        let vs: Vec<Tensor> = ns.iter().map(|&n| randn(rng, &[n, heads * d_h])).collect();
+        let q_cat = vstack_all(&qs.iter().collect::<Vec<_>>());
+        let k_cat = vstack_all(&ks.iter().collect::<Vec<_>>());
+        let v_cat = vstack_all(&vs.iter().collect::<Vec<_>>());
+        let ragged_a =
+            flashomni_attention_ragged(&q_cat, &k_cat, &v_cat, &indptr, &plan_refs, &pool);
+        for r in 0..batch {
+            for h in 0..heads {
+                let (oh, st) = flashomni_attention(
+                    &extract_head(&qs[r], heads, h),
+                    &extract_head(&ks[r], heads, h),
+                    &extract_head(&vs[r], heads, h),
+                    &plans[r].heads[h],
+                    bq,
+                    bk,
+                    None,
+                );
+                assert_eq!(oh.data(), ragged_a[r][h].0.data(), "attention req {r} head {h}");
+                assert_eq!(st.computed_pairs, ragged_a[r][h].1.computed_pairs);
+            }
+        }
+
+        // GEMM-O dispatch (cached bias path).
+        let os: Vec<Tensor> = ns.iter().map(|&n| randn(rng, &[n, heads * d_h])).collect();
+        let wo = randn(rng, &[heads * d_h, d_out]);
+        let panels = WeightPanels::new(&wo, heads);
+        let biases: Vec<Tensor> = ns.iter().map(|&n| randn(rng, &[n, d_out])).collect();
+        let o_cat = vstack_all(&os.iter().collect::<Vec<_>>());
+        let bias_refs: Vec<&Tensor> = biases.iter().collect();
+        let ragged_o =
+            gemm_o_dispatch_ragged(&o_cat, &indptr, &panels, &plan_refs, &bias_refs, &pool);
+        for r in 0..batch {
+            let (solo, ss) = gemm_o_dispatch(&os[r], &panels, &plans[r], &biases[r]);
+            assert_eq!(solo.data(), ragged_o[r].0.data(), "gemm_o_dispatch request {r}");
+            assert_eq!(ss.computed_tiles, ragged_o[r].1.computed_tiles);
+        }
+    });
+}
+
+// ---------------------------------------------------------------- (b) --
+
+fn tiny_model(layers: usize, seed: u64) -> MiniMMDiT {
+    let cfg = ModelConfig {
+        dim: 32,
+        heads: 2,
+        layers,
+        text_tokens: 8,
+        patch_h: 4,
+        patch_w: 4,
+        patch_size: 2,
+        channels: 3,
+        mlp_ratio: 2,
+        vocab: 256,
+    };
+    MiniMMDiT::new(cfg.clone(), Weights::random(&cfg, seed))
+}
+
+fn fo_policy(interval: usize, warmup: usize) -> Policy {
+    Policy::flashomni(SparsityConfig {
+        tau_q: 0.6,
+        tau_kv: 0.3,
+        interval,
+        order: 1,
+        s_q: 0.0,
+        block_q: 8,
+        block_k: 8,
+        pool: 1,
+        warmup,
+        ramp_steps: 1,
+    })
+}
+
+fn request(id: u64, scene: usize, seed: u64, steps: usize, hw: Option<(usize, usize)>) -> Request {
+    Request {
+        id,
+        scene,
+        prompt_ids: caption_ids(scene, 8),
+        seed,
+        steps,
+        arrival_s: 0.0,
+        patch_hw: hw,
+    }
+}
+
+/// Solo reference at the request's own resolution: same weights, config
+/// with the `patch_hw` override applied.
+fn solo_at(model: &MiniMMDiT, policy: &Policy, req: &Request) -> (Tensor, RunStats) {
+    let mut cfg = model.cfg.clone();
+    if let Some((ph, pw)) = req.patch_hw {
+        cfg.patch_h = ph;
+        cfg.patch_w = pw;
+    }
+    let m = MiniMMDiT::new(cfg, model.w.clone());
+    let mut engine = DiTEngine::new(m, policy.clone(), 8, 8);
+    let res = engine.generate(&req.prompt_ids, req.seed, req.steps);
+    (res.image, res.stats)
+}
+
+fn assert_same_compute(batched: &RunStats, solo: &RunStats) {
+    assert_eq!(batched.attn_computed_pairs, solo.attn_computed_pairs);
+    assert_eq!(batched.attn_total_pairs, solo.attn_total_pairs);
+    assert_eq!(batched.gq_computed, solo.gq_computed);
+    assert_eq!(batched.gq_total, solo.gq_total);
+    assert_eq!(batched.go_computed, solo.go_computed);
+    assert_eq!(batched.go_total, solo.go_total);
+    assert_eq!(batched.total_layer_steps, solo.total_layer_steps);
+    assert_eq!(batched.per_step_density, solo.per_step_density);
+}
+
+#[test]
+fn mixed_resolution_batch_bitwise_equals_solo() {
+    // Four resolutions in one batch — native 4×4 (seq 24), 6×4 (seq 32),
+    // 6×6 (seq 44: ragged joint blocks), 8×8 (seq 72) — with distinct
+    // prompts and seeds. Every request must match its solo run at its own
+    // resolution bit-for-bit, images and compute accounting alike.
+    let model = tiny_model(2, 11);
+    let policy = fo_policy(3, 2);
+    let reqs: Vec<Request> = [None, Some((6, 4)), Some((6, 6)), Some((8, 8))]
+        .into_iter()
+        .enumerate()
+        .map(|(i, hw)| request(i as u64, 3 * i + 1, 100 + i as u64, 9, hw))
+        .collect();
+    let mut engine = BatchedEngine::new(model.clone(), policy.clone(), 8, 8, reqs.len());
+    for r in &reqs {
+        assert!(engine.can_admit());
+        engine.admit(r.clone(), Instant::now());
+    }
+    let expected_tokens: usize = [24, 32, 44, 72].iter().sum();
+    assert_eq!(engine.tokens_in_flight(), expected_tokens);
+    let mut out = engine.run_to_completion();
+    out.sort_by_key(|r| r.id);
+    assert_eq!(out.len(), reqs.len());
+    for (b, req) in out.iter().zip(&reqs) {
+        let (img, stats) = solo_at(&model, &policy, req);
+        assert_eq!(b.image, img, "request {} (patch {:?}) differs from solo", b.id, req.patch_hw);
+        assert_same_compute(&b.stats, &stats);
+    }
+}
+
+#[test]
+fn native_resolution_override_is_identity() {
+    // `patch_hw: Some(native)` must behave exactly like `None`.
+    let model = tiny_model(1, 7);
+    let policy = fo_policy(3, 1);
+    let base = request(0, 5, 42, 7, None);
+    let forced = request(1, 5, 42, 7, Some((4, 4)));
+    let mut engine = BatchedEngine::new(model.clone(), policy.clone(), 8, 8, 2);
+    engine.admit(base, Instant::now());
+    engine.admit(forced, Instant::now());
+    let out = engine.run_to_completion();
+    assert_eq!(out[0].image, out[1].image);
+}
+
+// ---------------------------------------------------------------- (c) --
+
+#[test]
+fn token_budget_rejects_over_budget_admissions() {
+    // seq = 24 tokens per request at the native grid; a budget of 2×seq
+    // admits exactly two, the third waits (FIFO, no reordering).
+    let model = tiny_model(1, 3);
+    let seq = model.cfg.seq_len();
+    let engine = BatchedEngine::new(model.clone(), Policy::full(), 8, 8, 8);
+    let mut sched = BatchScheduler::with_token_budget(engine, 2 * seq);
+    assert_eq!(sched.token_budget(), 2 * seq);
+    for id in 0..3u64 {
+        sched.submit(request(id, 1 + id as usize, id, 2, None));
+    }
+    let _ = sched.step();
+    assert_eq!(sched.active(), 2, "budget 2×seq admits exactly two");
+    assert_eq!(sched.pending_len(), 1);
+    assert_eq!(sched.engine().tokens_in_flight(), 2 * seq);
+    let done = sched.run_to_completion();
+    assert_eq!(done.len(), 2 + 1, "the queued request is served once budget frees");
+}
+
+#[test]
+fn oversized_request_runs_solo_instead_of_stalling() {
+    // A request bigger than the whole budget must still run (alone) —
+    // otherwise the queue deadlocks.
+    let model = tiny_model(1, 3);
+    let seq = model.cfg.seq_len();
+    let engine = BatchedEngine::new(model.clone(), Policy::full(), 8, 8, 8);
+    let mut sched = BatchScheduler::with_token_budget(engine, seq / 2);
+    sched.submit(request(0, 1, 5, 2, None));
+    sched.submit(request(1, 2, 6, 2, None));
+    let _ = sched.step();
+    assert_eq!(sched.active(), 1, "oversized request admitted solo into an empty engine");
+    assert_eq!(sched.pending_len(), 1);
+    let done = sched.run_to_completion();
+    assert_eq!(done.len(), 2);
+}
+
+#[test]
+fn token_budget_admission_waits_for_refresh_boundary() {
+    // Fitting the budget is necessary but not sufficient: admission still
+    // only happens when every in-flight slot is about to run a Full step.
+    let model = tiny_model(1, 5);
+    let policy = fo_policy(3, 1); // kinds: W U D D U D D ...
+    let engine = BatchedEngine::new(model.clone(), policy, 8, 8, 4);
+    let mut sched = BatchScheduler::with_token_budget(engine, 10 * model.cfg.seq_len());
+    sched.submit(request(0, 1, 9, 8, None));
+    let _ = sched.step(); // step 0 (Warmup); next is Update → boundary
+    sched.submit(request(1, 2, 10, 8, None));
+    let _ = sched.step();
+    assert_eq!(sched.active(), 2, "budget-fitting request admitted at the Update boundary");
+    // Mid-window submission must wait even though it fits the budget.
+    sched.submit(request(2, 3, 11, 8, None));
+    let _ = sched.step();
+    assert_eq!(sched.active(), 2, "mid-Dispatch arrival stays pending");
+    assert_eq!(sched.pending_len(), 1);
+    let done = sched.run_to_completion();
+    assert_eq!(done.len(), 3);
+}
+
+#[test]
+fn retirement_frees_budget_without_stalling() {
+    // A short request retires mid-flight and returns its tokens; the
+    // waiting request joins without the long request ever pausing.
+    let model = tiny_model(1, 3);
+    let seq = model.cfg.seq_len();
+    let engine = BatchedEngine::new(model.clone(), Policy::full(), 8, 8, 8);
+    let mut sched = BatchScheduler::with_token_budget(engine, 2 * seq);
+    sched.submit(request(0, 1, 5, 2, None)); // short
+    sched.submit(request(1, 2, 6, 6, None)); // long
+    sched.submit(request(2, 3, 7, 2, None)); // waits on budget
+    let mut done = sched.step();
+    assert_eq!(sched.active(), 2);
+    done.extend(sched.step()); // short request finishes its 2nd step
+    assert!(done.iter().any(|r| r.id == 0), "short request retired");
+    assert_eq!(sched.engine().tokens_in_flight(), seq, "its tokens returned to the budget");
+    done.extend(sched.step());
+    assert_eq!(sched.active(), 2, "waiting request admitted as soon as budget freed");
+    done.extend(sched.run_to_completion());
+    let mut ids: Vec<u64> = done.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, vec![0, 1, 2]);
+    // The long request ran all its steps despite churn around it.
+    assert_eq!(done.iter().find(|r| r.id == 1).unwrap().stats.per_step_density.len(), 6);
+}
