@@ -9,7 +9,7 @@
 use flashomni::config::{ModelConfig, SparsityConfig};
 use flashomni::engine::{DiTEngine, Policy};
 use flashomni::model::{weights::Weights, MiniMMDiT};
-use flashomni::trace::caption_ids;
+use flashomni::workload::caption_ids;
 
 fn env<T: std::str::FromStr>(key: &str, default: T) -> T {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -110,4 +110,7 @@ fn main() {
     std::fs::create_dir_all("reports").ok();
     let _ = std::fs::write("reports/e2e_table1.csv", csv);
     println!("(paper reference: ~1.5x end-to-end at 46% sparsity on Hunyuan 33K)");
+    for p in flashomni::obs::export_if_enabled() {
+        println!("wrote {p}");
+    }
 }

@@ -188,4 +188,7 @@ fn main() {
         Ok(()) => println!("\nwrote BENCH_fig10.json ({} rows)", json_rows.len()),
         Err(e) => eprintln!("could not write BENCH_fig10.json: {e}"),
     }
+    for p in flashomni::obs::export_if_enabled() {
+        println!("wrote {p}");
+    }
 }

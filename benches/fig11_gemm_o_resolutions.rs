@@ -143,4 +143,7 @@ fn main() {
         Ok(()) => println!("\nwrote BENCH_fig11.json ({} rows)", json_rows.len()),
         Err(e) => eprintln!("could not write BENCH_fig11.json: {e}"),
     }
+    for p in flashomni::obs::export_if_enabled() {
+        println!("wrote {p}");
+    }
 }

@@ -18,26 +18,36 @@
 //!   dedicated fig14 bench measures against bucketing baselines.
 //!
 //! Emits `BENCH_fig12.json`: one row per (scenario, B) with wall time,
-//! throughput, latency percentiles (p50/p95/p99 via `ServeReport`), and
-//! the plan-compile accounting. Row schema (custom, documented here):
+//! throughput, latency percentiles (p50/p95/p99 via `ServeReport`, split
+//! into queue-wait and execution components), the plan-compile
+//! accounting, and the uniform `plan_cache_*` counters every bench row
+//! carries. Row schema (custom, documented here):
 //! `{case, batch, requests, steps, wall_s, req_per_s, speedup_vs_b1,
 //! plan_compiles, plan_shared, refresh_points, compiles_per_refresh,
-//! p50_s, p95_s, p99_s}`.
+//! p50_s, p95_s, p99_s, p50_queue_s, p95_queue_s, p99_queue_s,
+//! p50_exec_s, p95_exec_s, p99_exec_s, plan_cache_hits,
+//! plan_cache_misses, plan_cache_shared, plan_cache_delta}`.
+//!
+//! With `FO_METRICS`/`FO_TRACE` set, the run also exports the Prometheus
+//! dump / Chrome trace at exit, and asserts the accounted per-kernel span
+//! time covers ≥ 95% of `engine.step` wall time (the tentpole coverage
+//! gate; `docs/observability.md`).
 //!
 //! Env: FO_REQUESTS (requests per run, default 8), FO_BATCH (max batch
 //! size, default 8), FO_STEPS (denoising steps, default 8), FO_LAYERS
-//! (default 2), FO_CHUNK (tile-loop chunk override, recorded in header).
+//! (default 2), FO_CHUNK (tile-loop chunk override, recorded in header),
+//! FO_METRICS / FO_TRACE (observability exports).
 //! Knobs + the `BENCH_fig12.json` schema: `docs/benchmarks.md`.
 
 use flashomni::batch::{BatchScheduler, BatchedEngine};
-use flashomni::bench::write_bench_json_tagged;
+use flashomni::bench::{write_bench_json_tagged, PlanCacheCounters};
 use flashomni::config::{ModelConfig, SparsityConfig};
 use flashomni::coordinator::{Response, ServeReport};
 use flashomni::diffusion::plan_steps;
 use flashomni::engine::Policy;
 use flashomni::exec::ExecPool;
 use flashomni::model::{weights::Weights, MiniMMDiT};
-use flashomni::trace::{caption_ids, Request};
+use flashomni::workload::{caption_ids, Request};
 use std::time::Instant;
 
 fn env_usize(key: &str, default: usize) -> usize {
@@ -175,16 +185,38 @@ fn main() {
                 compiles_per_refresh
             );
 
+            // The uniform plan-cache counter schema, from the per-request
+            // stats (works with FO_METRICS unset).
+            let counters = PlanCacheCounters {
+                hits: results.iter().map(|r| r.stats.plan_cache_hits).sum(),
+                misses: compiles,
+                shared: shared_hits,
+                delta: results.iter().map(|r| r.stats.plan_cache_delta).sum(),
+            };
             json_rows.push(format!(
                 "{{\"case\":\"{case}\",\"batch\":{b},\"requests\":{},\"steps\":{steps},\
                  \"wall_s\":{wall:.6},\"req_per_s\":{rps:.4},\"speedup_vs_b1\":{speedup:.4},\
                  \"plan_compiles\":{compiles},\"plan_shared\":{shared_hits},\
                  \"refresh_points\":{refresh_points},\"compiles_per_refresh\":{compiles_per_refresh:.4},\
-                 \"p50_s\":{:.6},\"p95_s\":{:.6},\"p99_s\":{:.6}}}",
+                 \"p50_s\":{:.6},\"p95_s\":{:.6},\"p99_s\":{:.6},\
+                 \"p50_queue_s\":{:.6},\"p95_queue_s\":{:.6},\"p99_queue_s\":{:.6},\
+                 \"p50_exec_s\":{:.6},\"p95_exec_s\":{:.6},\"p99_exec_s\":{:.6},\
+                 \"plan_cache_hits\":{},\"plan_cache_misses\":{},\
+                 \"plan_cache_shared\":{},\"plan_cache_delta\":{}}}",
                 results.len(),
                 report.p50_latency_s,
                 report.p95_latency_s,
                 report.p99_latency_s,
+                report.p50_queue_s,
+                report.p95_queue_s,
+                report.p99_queue_s,
+                report.p50_exec_s,
+                report.p95_exec_s,
+                report.p99_exec_s,
+                counters.hits,
+                counters.misses,
+                counters.shared,
+                counters.delta,
             ));
         }
     }
@@ -221,5 +253,21 @@ fn main() {
     ) {
         Ok(()) => println!("\nwrote BENCH_fig12.json ({} rows)", json_rows.len()),
         Err(e) => eprintln!("could not write BENCH_fig12.json: {e}"),
+    }
+
+    // Tentpole coverage gate: with metrics on, the accounted per-kernel /
+    // per-phase span time must explain ≥ 95% of engine.step wall time.
+    if flashomni::obs::metrics_enabled() {
+        let frac = flashomni::obs::accounted_step_fraction();
+        println!("obs: accounted span time covers {:.2}% of engine.step", frac * 100.0);
+        assert!(
+            frac >= 0.95,
+            "accounted kernel-family span time covers only {:.2}% of engine.step wall \
+             time (bound: 95%)",
+            frac * 100.0
+        );
+    }
+    for p in flashomni::obs::export_if_enabled() {
+        println!("wrote {p}");
     }
 }

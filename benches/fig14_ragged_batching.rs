@@ -14,22 +14,30 @@
 //!   unbounded).
 //!
 //! Emits `BENCH_fig14.json`: one row per scenario with wall time,
-//! request throughput, speedup vs solo, and token occupancy. Row schema
-//! (custom, documented here): `{case, requests, steps, wall_s, req_per_s,
-//! speedup_vs_solo, mean_tokens_in_flight, peak_tokens, token_budget}`.
+//! request throughput, speedup vs solo, token occupancy, the per-request
+//! queue-wait / execution latency split, and the uniform `plan_cache_*`
+//! counters every bench row carries. Row schema (custom, documented
+//! here): `{case, requests, steps, wall_s, req_per_s, speedup_vs_solo,
+//! mean_tokens_in_flight, peak_tokens, token_budget, p50_queue_s,
+//! p95_queue_s, p99_queue_s, p50_exec_s, p95_exec_s, p99_exec_s,
+//! plan_cache_hits, plan_cache_misses, plan_cache_shared,
+//! plan_cache_delta}` (the solo row carries zeros for the scheduler-only
+//! columns).
 //!
 //! Env: FO_REQUESTS (default 6), FO_STEPS (default 8), FO_LAYERS
 //! (default 2), FO_BATCH (max slots, default 8), FO_TOKEN_BUDGET
-//! (default 0 = unbounded). Knobs + schema: `docs/benchmarks.md`.
+//! (default 0 = unbounded), FO_METRICS / FO_TRACE (observability
+//! exports; `docs/observability.md`). Knobs + schema:
+//! `docs/benchmarks.md`.
 
 use flashomni::batch::{BatchScheduler, BatchedEngine};
-use flashomni::bench::write_bench_json_tagged;
+use flashomni::bench::{write_bench_json_tagged, PlanCacheCounters};
 use flashomni::config::{ModelConfig, SparsityConfig};
 use flashomni::engine::{DiTEngine, Policy};
 use flashomni::exec::ExecPool;
 use flashomni::model::{weights::Weights, MiniMMDiT};
 use flashomni::tensor::Tensor;
-use flashomni::trace::{caption_ids, Request};
+use flashomni::workload::{caption_ids, Request};
 use std::time::Instant;
 
 fn env_usize(key: &str, default: usize) -> usize {
@@ -95,14 +103,31 @@ fn solo_run(model: &MiniMMDiT, req: &Request) -> Tensor {
     engine.generate(&req.prompt_ids, req.seed, req.steps).image
 }
 
+#[derive(Default)]
 struct Scenario {
     wall_s: f64,
     tok_sum: usize,
     tok_peak: usize,
     ticks: usize,
+    /// Per-request latency breakdowns (queue-wait / execution seconds).
+    queue_s: Vec<f64>,
+    exec_s: Vec<f64>,
+    counters: PlanCacheCounters,
 }
 
-/// Drive one engine to completion, sampling token occupancy per tick and
+/// Nearest-rank percentile over an unsorted sample (0.0 when empty —
+/// the solo scenario has no scheduler data).
+fn pct(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s[((s.len() as f64 - 1.0) * p) as usize]
+}
+
+/// Drive one engine to completion, sampling token occupancy per tick,
+/// collecting per-request latency splits + plan-cache counters, and
 /// checking every retiring image against the solo baseline.
 fn drive(
     sched: &mut BatchScheduler,
@@ -123,6 +148,12 @@ fn drive(
                 "request {} diverged from its solo run — refusing to time a wrong result",
                 r.id
             );
+            sc.queue_s.push(r.queue_s);
+            sc.exec_s.push(r.exec_s);
+            sc.counters.hits += r.stats.plan_cache_hits;
+            sc.counters.misses += r.stats.plan_cache_misses;
+            sc.counters.shared += r.stats.plan_cache_shared;
+            sc.counters.delta += r.stats.plan_cache_delta;
             served += 1;
         }
     }
@@ -165,16 +196,35 @@ fn main() {
             "{{\"case\":\"{case}\",\"requests\":{n_req},\"steps\":{steps},\
              \"wall_s\":{wall:.6},\"req_per_s\":{rps:.4},\
              \"speedup_vs_solo\":{:.4},\"mean_tokens_in_flight\":{mean_tok:.2},\
-             \"peak_tokens\":{},\"token_budget\":{budget}}}",
+             \"peak_tokens\":{},\"token_budget\":{budget},\
+             \"p50_queue_s\":{:.6},\"p95_queue_s\":{:.6},\"p99_queue_s\":{:.6},\
+             \"p50_exec_s\":{:.6},\"p95_exec_s\":{:.6},\"p99_exec_s\":{:.6},\
+             \"plan_cache_hits\":{},\"plan_cache_misses\":{},\
+             \"plan_cache_shared\":{},\"plan_cache_delta\":{}}}",
             wall_solo / wall.max(1e-9),
-            sc.tok_peak
+            sc.tok_peak,
+            pct(&sc.queue_s, 0.5),
+            pct(&sc.queue_s, 0.95),
+            pct(&sc.queue_s, 0.99),
+            pct(&sc.exec_s, 0.5),
+            pct(&sc.exec_s, 0.95),
+            pct(&sc.exec_s, 0.99),
+            sc.counters.hits,
+            sc.counters.misses,
+            sc.counters.shared,
+            sc.counters.delta,
         ));
+        if !sc.queue_s.is_empty() {
+            println!(
+                "           queue p50={:.4}s p99={:.4}s | exec p50={:.4}s p99={:.4}s",
+                pct(&sc.queue_s, 0.5),
+                pct(&sc.queue_s, 0.99),
+                pct(&sc.exec_s, 0.5),
+                pct(&sc.exec_s, 0.99)
+            );
+        }
     };
-    push_row(
-        "solo",
-        wall_solo,
-        &Scenario { wall_s: wall_solo, tok_sum: 0, tok_peak: 0, ticks: 0 },
-    );
+    push_row("solo", wall_solo, &Scenario { wall_s: wall_solo, ..Scenario::default() });
 
     // ---- uniform: exact-geometry buckets, run one after another. ----
     {
@@ -185,7 +235,7 @@ fn main() {
                 None => buckets.push((r.patch_hw, vec![r.clone()])),
             }
         }
-        let mut sc = Scenario { wall_s: 0.0, tok_sum: 0, tok_peak: 0, ticks: 0 };
+        let mut sc = Scenario::default();
         let t0 = Instant::now();
         let mut served = 0;
         for (_, bucket) in &buckets {
@@ -209,7 +259,7 @@ fn main() {
         for r in &reqs {
             sched.submit(r.clone());
         }
-        let mut sc = Scenario { wall_s: 0.0, tok_sum: 0, tok_peak: 0, ticks: 0 };
+        let mut sc = Scenario::default();
         let t0 = Instant::now();
         let served = drive(&mut sched, &solo, &mut sc);
         assert_eq!(served, n_req);
@@ -249,5 +299,8 @@ fn main() {
     ) {
         Ok(()) => println!("\nwrote BENCH_fig14.json ({} rows)", rows.len()),
         Err(e) => eprintln!("could not write BENCH_fig14.json: {e}"),
+    }
+    for p in flashomni::obs::export_if_enabled() {
+        println!("wrote {p}");
     }
 }

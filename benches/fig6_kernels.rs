@@ -24,9 +24,15 @@
 //! sparsity:speedup `ratio` field on every kernel row, and the microkernel
 //! ISA / autotuner state in the JSON header.
 //!
+//! PR 8 additions: an `obs_overhead` row measuring the disabled
+//! observability span guard (asserted < 2% of the dense attention kernel
+//! per enter/drop), uniform `plan_cache_*` counter fields on every row,
+//! and `FO_METRICS`/`FO_TRACE` exports on exit.
+//!
 //! Env: FO_SEQ (default 2048), FO_BUDGET seconds/case (default 0.4),
 //! FO_CHUNK (tile-loop chunk override; recorded in the JSON header),
-//! FO_SIMD / FO_TUNE / FO_TUNE_CACHE (microkernel + autotuner knobs).
+//! FO_SIMD / FO_TUNE / FO_TUNE_CACHE (microkernel + autotuner knobs),
+//! FO_METRICS / FO_TRACE (observability exports; `docs/observability.md`).
 //! Knobs + the `BENCH_fig6.json` schema: `docs/benchmarks.md`.
 
 use flashomni::bench::{
@@ -420,6 +426,40 @@ fn main() {
         rows.push((dispatch, Some(speedup)));
     }
 
+    // ---------------- observability span overhead ----------------
+    // With FO_METRICS/FO_TRACE unset, a Span::enter/drop pair is a single
+    // gate load and must be vanishingly cheap next to any kernel: the
+    // acceptance bound is per-guard cost < 2% of the dense attention
+    // median (in practice it is orders of magnitude below that).
+    {
+        let spans_per_iter = 1024usize;
+        let ov = bencher.run("obs span enter/drop x1024", || {
+            for _ in 0..spans_per_iter {
+                let sp = flashomni::obs::Span::enter(
+                    "bench.overhead",
+                    &flashomni::obs::metrics::ENGINE_STEP,
+                );
+                std::hint::black_box(&sp);
+            }
+        });
+        let per_guard_ns = ov.median_s * 1e9 / spans_per_iter as f64;
+        let share = per_guard_ns / (dense.median_s * 1e9);
+        println!(
+            "obs span overhead: {per_guard_ns:.1}ns per enter/drop ({:.5}% of dense attention)",
+            share * 100.0
+        );
+        json_rows.push(json_row("obs_overhead", "span_enter_drop", 0.0, &ov, 0.0));
+        if !flashomni::obs::metrics_enabled() && !flashomni::obs::trace_enabled() {
+            assert!(
+                share < 0.02,
+                "disabled span guard costs {per_guard_ns:.1}ns — {:.2}% of the dense \
+                 attention kernel (bound: 2%)",
+                share * 100.0
+            );
+        }
+        rows.push((ov, None));
+    }
+
     print_table("fig6 raw measurements", &rows);
     let _ = write_csv("reports/fig6_kernels.csv", &rows);
     let tune_cache = tune::cache_path().unwrap_or_default();
@@ -447,5 +487,8 @@ fn main() {
     ) {
         Ok(()) => println!("\nwrote BENCH_fig6.json ({} rows)", json_rows.len()),
         Err(e) => eprintln!("could not write BENCH_fig6.json: {e}"),
+    }
+    for p in flashomni::obs::export_if_enabled() {
+        println!("wrote {p}");
     }
 }

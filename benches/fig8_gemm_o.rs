@@ -10,9 +10,14 @@
 //! PR 6: scalar/simd/tuned microkernel rows on the dense baseline, a
 //! `ratio` field on the amortized dispatch rows, and the microkernel ISA /
 //! autotuner state in the JSON header.
+//! PR 8: an `obs_overhead` row asserting the disabled observability span
+//! guard costs < 2% of the dense kernel per enter/drop, uniform
+//! `plan_cache_*` counter fields on every row, and `FO_METRICS`/`FO_TRACE`
+//! exports on exit.
 //! Env: FO_SEQ (default 2048), FO_BUDGET (default 0.4), FO_CHUNK
 //! (tile-loop chunk override; recorded in the JSON header), FO_SIMD /
-//! FO_TUNE / FO_TUNE_CACHE (microkernel + autotuner knobs).
+//! FO_TUNE / FO_TUNE_CACHE (microkernel + autotuner knobs), FO_METRICS /
+//! FO_TRACE (observability exports; `docs/observability.md`).
 //! Knobs + the `BENCH_fig8.json` schema: `docs/benchmarks.md`.
 
 use flashomni::bench::{
@@ -163,6 +168,36 @@ fn main() {
             rows.push((dispatch_pool, Some(speedup_pool)));
         }
     }
+    // Observability span-guard overhead vs the dense GEMM-O kernel (same
+    // bound fig6 asserts against dense attention).
+    {
+        let spans_per_iter = 1024usize;
+        let ov = bencher.run("obs span enter/drop x1024", || {
+            for _ in 0..spans_per_iter {
+                let sp = flashomni::obs::Span::enter(
+                    "bench.overhead",
+                    &flashomni::obs::metrics::ENGINE_STEP,
+                );
+                std::hint::black_box(&sp);
+            }
+        });
+        let per_guard_ns = ov.median_s * 1e9 / spans_per_iter as f64;
+        let share = per_guard_ns / (dense.median_s * 1e9);
+        println!(
+            "obs span overhead: {per_guard_ns:.1}ns per enter/drop ({:.5}% of dense gemm_o)",
+            share * 100.0
+        );
+        json_rows.push(json_row("obs_overhead", "span_enter_drop", 0.0, &ov, 0.0));
+        if !flashomni::obs::metrics_enabled() && !flashomni::obs::trace_enabled() {
+            assert!(
+                share < 0.02,
+                "disabled span guard costs {per_guard_ns:.1}ns — {:.2}% of the dense \
+                 gemm_o kernel (bound: 2%)",
+                share * 100.0
+            );
+        }
+        rows.push((ov, None));
+    }
     let _ = write_csv("reports/fig8_gemm_o.csv", &rows);
     let tune_cache = tune::cache_path().unwrap_or_default();
     match write_bench_json_tagged(
@@ -186,5 +221,8 @@ fn main() {
     ) {
         Ok(()) => println!("\nwrote BENCH_fig8.json ({} rows)", json_rows.len()),
         Err(e) => eprintln!("could not write BENCH_fig8.json: {e}"),
+    }
+    for p in flashomni::obs::export_if_enabled() {
+        println!("wrote {p}");
     }
 }

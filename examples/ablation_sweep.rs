@@ -10,7 +10,7 @@ use flashomni::engine::{DiTEngine, Policy};
 use flashomni::metrics;
 use flashomni::model::MiniMMDiT;
 use flashomni::tensor::Tensor;
-use flashomni::trace::{caption_ids, eval_scenes};
+use flashomni::workload::{caption_ids, eval_scenes};
 
 fn run_set(model: &MiniMMDiT, policy: Policy, scenes: &[usize], steps: usize) -> Vec<Tensor> {
     let mut engine = DiTEngine::new(model.clone(), policy, 8, 8);

@@ -10,7 +10,7 @@ use flashomni::config::SparsityConfig;
 use flashomni::engine::{DiTEngine, Policy};
 use flashomni::metrics;
 use flashomni::model::MiniMMDiT;
-use flashomni::trace::caption_ids;
+use flashomni::workload::caption_ids;
 
 fn main() -> Result<(), String> {
     let weights = std::env::args().nth(1).unwrap_or("artifacts/weights.fot".into());

@@ -13,7 +13,7 @@ use flashomni::coordinator::replay_trace;
 use flashomni::engine::{DiTEngine, Policy};
 use flashomni::metrics;
 use flashomni::model::MiniMMDiT;
-use flashomni::trace::poisson_trace;
+use flashomni::workload::poisson_trace;
 
 fn main() -> Result<(), String> {
     let weights = "artifacts/weights.fot";
@@ -73,6 +73,10 @@ fn main() -> Result<(), String> {
         "latency percentiles (FlashOmni): p50 {:.3}s | p95 {:.3}s | p99 {:.3}s",
         fo_rep.p50_latency_s, fo_rep.p95_latency_s, fo_rep.p99_latency_s
     );
+    println!(
+        "latency split (FlashOmni): queue p50 {:.3}s p99 {:.3}s | exec p50 {:.3}s p99 {:.3}s",
+        fo_rep.p50_queue_s, fo_rep.p99_queue_s, fo_rep.p50_exec_s, fo_rep.p99_exec_s
+    );
     // Batched-serving accounting: workers advance whole batches in
     // lockstep and share plan compiles per (layer, refresh).
     let compiles: u64 = fo_rs.iter().map(|r| r.stats.plan_cache_misses).sum();
@@ -85,13 +89,18 @@ fn main() -> Result<(), String> {
     // PJRT oracle path: one dense denoise step through the AOT artifact
     // (requires the off-by-default `pjrt` feature).
     pjrt_oracle_step(&model, &trace)?;
+    // With FO_METRICS / FO_TRACE set, dump the Prometheus text and the
+    // Perfetto-loadable Chrome trace for this serving run.
+    for p in flashomni::obs::export_if_enabled() {
+        println!("wrote {p}");
+    }
     Ok(())
 }
 
 #[cfg(feature = "pjrt")]
 fn pjrt_oracle_step(
     model: &MiniMMDiT,
-    trace: &[flashomni::trace::Request],
+    trace: &[flashomni::workload::Request],
 ) -> Result<(), String> {
     if !std::path::Path::new("artifacts/mmdit_step.hlo.txt").exists() {
         return Ok(());
@@ -123,7 +132,7 @@ fn pjrt_oracle_step(
 #[cfg(not(feature = "pjrt"))]
 fn pjrt_oracle_step(
     _model: &MiniMMDiT,
-    _trace: &[flashomni::trace::Request],
+    _trace: &[flashomni::workload::Request],
 ) -> Result<(), String> {
     println!("\n(pjrt feature disabled — skipping the PJRT oracle step)");
     Ok(())

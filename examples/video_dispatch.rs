@@ -13,7 +13,7 @@ use flashomni::metrics;
 use flashomni::model::MiniMMDiT;
 use flashomni::report::merge_stats;
 use flashomni::tensor::Tensor;
-use flashomni::trace::video_frame_ids;
+use flashomni::workload::video_frame_ids;
 
 fn render_frames(
     model: &MiniMMDiT,

@@ -19,11 +19,12 @@ use crate::model::blocks::{
     vstack, vstack_all, PreAttn,
 };
 use crate::model::{BlockExec, BlockWeights, MiniMMDiT};
+use crate::obs::{self, Span};
 use crate::plan::cache::{CacheOutcome, CacheStats, SharedPlanCache};
 use crate::plan::SparsePlan;
 use crate::symbols::LayerSymbols;
 use crate::tensor::Tensor;
-use crate::trace::Request;
+use crate::workload::Request;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -309,6 +310,7 @@ impl BatchedEngine {
         for s in &mut self.slots {
             s.batch_peak = s.batch_peak.max(occupancy);
         }
+        obs::metrics::REQUESTS_ADMITTED.inc();
     }
 
     /// Whether a slot takes the batched sparse path at this layer — the
@@ -338,6 +340,7 @@ impl BatchedEngine {
     /// match); everything else reuses the single-request block executor —
     /// both bitwise-identical per request to a solo run.
     pub fn step_forward(&mut self) -> Vec<BatchResult> {
+        let _step_span = Span::enter("engine.step", &obs::metrics::ENGINE_STEP);
         // Already-finished slots (zero-step requests) retire without
         // running a step — matching the solo engine's `generate(steps=0)`
         // semantics, where the image is the unpatchified initial noise.
@@ -345,6 +348,7 @@ impl BatchedEngine {
         if self.slots.is_empty() {
             return finished;
         }
+        obs::metrics::ENGINE_STEPS.inc();
         // One sharing epoch per lockstep step: a hit on an entry another
         // slot compiled earlier in this same step counts as shared
         // (RunStats.plan_cache_shared). The id is allocated by the cache,
@@ -443,22 +447,35 @@ impl BatchedEngine {
     /// Remove every slot that has run all its steps and convert it into a
     /// [`BatchResult`].
     fn retire_finished(&mut self) -> Vec<BatchResult> {
+        let _sp = Span::enter("engine.retire", &obs::metrics::ENGINE_RETIRE);
         let mut finished = Vec::new();
         let mut i = 0;
         while i < self.slots.len() {
             if self.slots[i].step >= self.slots[i].req.steps {
                 let mut slot = self.slots.remove(i);
-                slot.stats.wall_s = slot.admitted.elapsed().as_secs_f64();
+                let queue_d = slot.admitted.saturating_duration_since(slot.enqueued);
+                let exec_d = slot.admitted.elapsed();
+                slot.stats.wall_s = exec_d.as_secs_f64();
+                // Lifecycle telemetry: retire counter, queue-wait vs
+                // execution histograms, and the per-request trace slices
+                // (one row per request id on the request track).
+                obs::metrics::REQUESTS_RETIRED.inc();
+                obs::metrics::REQUEST_QUEUE_WAIT.observe_ns(queue_d.as_nanos() as u64);
+                obs::metrics::REQUEST_EXEC.observe_ns(exec_d.as_nanos() as u64);
+                obs::trace::push_request_slice(
+                    "request.queue_wait",
+                    slot.req.id,
+                    slot.enqueued,
+                    queue_d,
+                );
+                obs::trace::push_request_slice("request.exec", slot.req.id, slot.admitted, exec_d);
                 finished.push(BatchResult {
                     id: slot.req.id,
                     scene: slot.req.scene,
                     image: unpatchify(&slot.x, &slot.cfg),
-                    queue_s: slot
-                        .admitted
-                        .saturating_duration_since(slot.enqueued)
-                        .as_secs_f64(),
+                    queue_s: queue_d.as_secs_f64(),
                     exec_s: slot.stats.wall_s,
-                    latency_s: slot.enqueued.elapsed().as_secs_f64(),
+                    latency_s: (queue_d + exec_d).as_secs_f64(),
                     batch_size: slot.batch_peak,
                     stats: slot.stats,
                 });
@@ -522,6 +539,9 @@ fn sparse_block_ragged(
     let heads = model.cfg.heads;
     let dim = model.cfg.dim;
     let text = model.cfg.text_tokens;
+    // The gemm_q.ragged span opens here so plan/indptr gathering is
+    // accounted to the projection phase it feeds.
+    let sp = Span::enter("gemm_q.ragged", &obs::metrics::KERNEL_GEMM_Q_RAGGED);
     let plans: Vec<Arc<LayerPlans>> = group
         .iter()
         .map(|&i| Arc::clone(slots[i].state[layer].plans.as_ref().unwrap()))
@@ -590,8 +610,10 @@ fn sparse_block_ragged(
     headwise_rope(&mut qj_cat, heads, &positions);
     headwise_rope(&mut kj_cat, heads, &positions);
     let p0_s = p0.elapsed().as_secs_f64();
+    drop(sp);
 
     // ---- Phase 1: attention over batch × heads pool lanes. ----
+    let sp = Span::enter("attention.ragged", &obs::metrics::KERNEL_ATTENTION_RAGGED);
     let p1 = Instant::now();
     let per_req =
         flashomni_attention_ragged(&qj_cat, &kj_cat, &vj_cat, &joint_indptr, &joint_plans, exec);
@@ -609,8 +631,10 @@ fn sparse_block_ragged(
         o_is.push(o_i);
     }
     let p1_s = p1.elapsed().as_secs_f64();
+    drop(sp);
 
     // ---- Phase 2: bias combine per request, GEMM-O dispatch ragged. ----
+    let sp = Span::enter("gemm_o.ragged", &obs::metrics::KERNEL_GEMM_O_RAGGED);
     let p2 = Instant::now();
     let mut bias_ts: Vec<Tensor> = Vec::with_capacity(group.len());
     let mut bias_is: Vec<Tensor> = Vec::with_capacity(group.len());
@@ -654,8 +678,10 @@ fn sparse_block_ragged(
         post_attention_preprojected(&pres[gi], &o_joint, text, &mut ctx.txt, &mut ctx.img);
     }
     let p2_s = p2.elapsed().as_secs_f64();
+    drop(sp);
 
     // ---- Phase 3: per-request MLPs. ----
+    let _sp = Span::enter("mlp.ragged", &obs::metrics::KERNEL_MLP_RAGGED);
     let p3 = Instant::now();
     for (gi, &i) in group.iter().enumerate() {
         let ctx = &mut ctxs[i];

@@ -23,7 +23,7 @@
 //! budget immediately.
 
 use super::engine::{BatchResult, BatchedEngine};
-use crate::trace::Request;
+use crate::workload::Request;
 use std::collections::VecDeque;
 use std::time::Instant;
 
@@ -54,6 +54,7 @@ impl BatchScheduler {
 
     /// Enqueue a request (enqueue time = now).
     pub fn submit(&mut self, req: Request) {
+        crate::obs::metrics::REQUESTS_ENQUEUED.inc();
         self.submit_at(req, Instant::now());
     }
 

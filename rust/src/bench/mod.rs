@@ -104,15 +104,74 @@ pub fn print_table(title: &str, rows: &[(Measurement, Option<f64>)]) {
     }
 }
 
+/// Plan-cache counters attached to every `BENCH_*.json` row so the
+/// trajectory files share one counter schema. Kernel-level benches carry
+/// zeros (no plan cache in play); engine-level benches splice in real
+/// values with [`with_plan_cache`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlanCacheCounters {
+    pub hits: u64,
+    pub misses: u64,
+    pub shared: u64,
+    pub delta: u64,
+}
+
+impl PlanCacheCounters {
+    /// Snapshot the process-wide [`obs`](crate::obs) plan-cache counters
+    /// (all zero unless `FO_METRICS` is on — engine benches that must work
+    /// without the knob read their plan cache's own stats instead).
+    pub fn snapshot() -> Self {
+        use crate::obs::metrics as m;
+        PlanCacheCounters {
+            hits: m::PLAN_CACHE_HITS.get(),
+            misses: m::PLAN_CACHE_MISSES.get(),
+            shared: m::PLAN_CACHE_SHARED.get(),
+            delta: m::PLAN_CACHE_DELTA.get(),
+        }
+    }
+
+    /// Counters accumulated since an `earlier` snapshot.
+    pub fn since(&self, earlier: &Self) -> Self {
+        PlanCacheCounters {
+            hits: self.hits.saturating_sub(earlier.hits),
+            misses: self.misses.saturating_sub(earlier.misses),
+            shared: self.shared.saturating_sub(earlier.shared),
+            delta: self.delta.saturating_sub(earlier.delta),
+        }
+    }
+
+    fn json_fields(&self) -> String {
+        format!(
+            "\"plan_cache_hits\":{},\"plan_cache_misses\":{},\
+             \"plan_cache_shared\":{},\"plan_cache_delta\":{}",
+            self.hits, self.misses, self.shared, self.delta
+        )
+    }
+}
+
+/// Replace the plan-cache counter fields of a [`json_row`] /
+/// [`json_row_ratio`] row with measured values. Panics if the row does
+/// not carry the counter fields (i.e. was not built by those helpers).
+pub fn with_plan_cache(row: &str, c: &PlanCacheCounters) -> String {
+    let at = row
+        .find(",\"plan_cache_hits\":")
+        .expect("row has no plan-cache fields; build it with json_row/json_row_ratio");
+    let end = row.rfind('}').expect("row is not a JSON object");
+    format!("{},{}{}", &row[..at], c.json_fields(), &row[end..])
+}
+
 /// One machine-readable result row for the `BENCH_*.json` perf-trajectory
 /// files (shared by every fig bench so rows stay schema-compatible).
+/// Every row carries the four `plan_cache_*` counter fields (zero here;
+/// see [`with_plan_cache`]).
 pub fn json_row(kernel: &str, case: &str, sparsity: f64, m: &Measurement, speedup: f64) -> String {
     format!(
         "{{\"kernel\":\"{kernel}\",\"case\":\"{case}\",\"sparsity\":{sparsity:.6},\
-         \"median_ns\":{:.0},\"min_ns\":{:.0},\"iters\":{},\"speedup\":{speedup:.4}}}",
+         \"median_ns\":{:.0},\"min_ns\":{:.0},\"iters\":{},\"speedup\":{speedup:.4},{}}}",
         m.median_s * 1e9,
         m.min_s * 1e9,
-        m.iters
+        m.iters,
+        PlanCacheCounters::default().json_fields()
     )
 }
 
@@ -133,10 +192,11 @@ pub fn json_row_ratio(
     format!(
         "{{\"kernel\":\"{kernel}\",\"case\":\"{case}\",\"sparsity\":{sparsity:.6},\
          \"median_ns\":{:.0},\"min_ns\":{:.0},\"iters\":{},\"speedup\":{speedup:.4},\
-         \"ratio\":{ratio:.4}}}",
+         \"ratio\":{ratio:.4},{}}}",
         m.median_s * 1e9,
         m.min_s * 1e9,
-        m.iters
+        m.iters,
+        PlanCacheCounters::default().json_fields()
     )
 }
 
@@ -232,6 +292,17 @@ mod tests {
         assert!(row.starts_with('{') && row.ends_with('}'));
         assert!(row.contains("\"kernel\":\"k\""));
         assert!(row.contains("\"speedup\":2.0000"));
+        // Every row carries the uniform plan-cache counter schema.
+        assert!(row.contains("\"plan_cache_hits\":0"));
+        assert!(row.contains("\"plan_cache_delta\":0"));
+        let c = PlanCacheCounters { hits: 7, misses: 3, shared: 2, delta: 1 };
+        let spliced = with_plan_cache(&row, &c);
+        assert!(spliced.contains("\"plan_cache_hits\":7"));
+        assert!(spliced.contains("\"plan_cache_misses\":3"));
+        assert!(spliced.contains("\"plan_cache_shared\":2"));
+        assert!(spliced.contains("\"plan_cache_delta\":1"));
+        assert!(!spliced.contains("\"plan_cache_hits\":0"));
+        assert!(spliced.ends_with('}') && spliced.contains("\"speedup\":2.0000"));
         let path = std::env::temp_dir().join("flashomni_bench_json_test.json");
         let p = path.to_str().unwrap();
         write_bench_json(p, "t", &[("seq", 512.0)], &[row]).unwrap();
@@ -254,6 +325,7 @@ mod tests {
         // sparsity 0.5 → ideal 2×; measured 1.5× → ratio 0.75.
         let row = json_row_ratio("k", "c", 0.5, &m, 1.5);
         assert!(row.contains("\"ratio\":0.7500"), "row: {row}");
+        assert!(row.contains("\"plan_cache_shared\":0"), "row: {row}");
         // Dense rows carry ratio 0 (no skip → no meaningful ratio).
         let dense = json_row_ratio("k", "dense", 0.0, &m, 1.0);
         assert!(dense.contains("\"ratio\":0.0000"), "row: {dense}");
@@ -265,6 +337,13 @@ mod tests {
         assert!(body.contains("\"isa\":\"avx2\""));
         assert!(body.contains("\"seq\":512"));
         let _ = std::fs::remove_file(p);
+    }
+
+    #[test]
+    fn plan_cache_counter_diffs() {
+        let a = PlanCacheCounters { hits: 10, misses: 4, shared: 3, delta: 2 };
+        let b = PlanCacheCounters { hits: 7, misses: 4, shared: 1, delta: 0 };
+        assert_eq!(a.since(&b), PlanCacheCounters { hits: 3, misses: 0, shared: 2, delta: 2 });
     }
 
     #[test]

@@ -37,7 +37,7 @@ use crate::batch::{BatchScheduler, BatchedEngine};
 use crate::engine::{DiTEngine, LayerPlans, RunStats};
 use crate::plan::cache::SharedPlanCache;
 use crate::tensor::Tensor;
-use crate::trace::Request;
+use crate::workload::Request;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -180,6 +180,7 @@ impl Coordinator {
 
     /// Enqueue a request.
     pub fn submit(&self, req: Request) {
+        crate::obs::metrics::REQUESTS_ENQUEUED.inc();
         let mut q = self.shared.queue.lock().unwrap();
         q.push_back(Job { req, enqueued: Instant::now() });
         self.shared.cv.notify_one();
@@ -220,7 +221,11 @@ impl Drop for Coordinator {
     }
 }
 
-/// Aggregate serving statistics.
+/// Aggregate serving statistics. End-to-end latency percentiles are
+/// split into their queue-wait and execution components (each with its
+/// own p50/p95/p99 over the per-request breakdowns in [`Response`]), so
+/// "slow because overloaded" (queue grows) and "slow because steps are
+/// expensive" (exec grows) are distinguishable at a glance.
 #[derive(Clone, Debug)]
 pub struct ServeReport {
     pub requests: usize,
@@ -229,24 +234,43 @@ pub struct ServeReport {
     pub p50_latency_s: f64,
     pub p95_latency_s: f64,
     pub p99_latency_s: f64,
+    pub p50_queue_s: f64,
+    pub p95_queue_s: f64,
+    pub p99_queue_s: f64,
+    pub p50_exec_s: f64,
+    pub p95_exec_s: f64,
+    pub p99_exec_s: f64,
     pub mean_exec_s: f64,
     pub mean_queue_s: f64,
     pub mean_batch: f64,
     pub mean_attn_sparsity: f64,
 }
 
+/// Sorted copy of `xs` + the nearest-rank percentile accessor used for
+/// every latency column.
+fn percentiles(mut xs: Vec<f64>) -> impl Fn(f64) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    move |p: f64| xs[((xs.len() as f64 - 1.0) * p) as usize]
+}
+
 impl ServeReport {
     pub fn from_responses(rs: &[Response], wall_s: f64) -> Self {
-        let mut lats: Vec<f64> = rs.iter().map(|r| r.latency_s).collect();
-        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let pct = |p: f64| lats[((lats.len() as f64 - 1.0) * p) as usize];
+        let lat = percentiles(rs.iter().map(|r| r.latency_s).collect());
+        let que = percentiles(rs.iter().map(|r| r.queue_s).collect());
+        let exe = percentiles(rs.iter().map(|r| r.exec_s).collect());
         ServeReport {
             requests: rs.len(),
             wall_s,
             throughput_rps: rs.len() as f64 / wall_s.max(1e-9),
-            p50_latency_s: pct(0.5),
-            p95_latency_s: pct(0.95),
-            p99_latency_s: pct(0.99),
+            p50_latency_s: lat(0.5),
+            p95_latency_s: lat(0.95),
+            p99_latency_s: lat(0.99),
+            p50_queue_s: que(0.5),
+            p95_queue_s: que(0.95),
+            p99_queue_s: que(0.99),
+            p50_exec_s: exe(0.5),
+            p95_exec_s: exe(0.95),
+            p99_exec_s: exe(0.99),
             mean_exec_s: rs.iter().map(|r| r.exec_s).sum::<f64>() / rs.len() as f64,
             mean_queue_s: rs.iter().map(|r| r.queue_s).sum::<f64>() / rs.len() as f64,
             mean_batch: rs.iter().map(|r| r.batch_size as f64).sum::<f64>() / rs.len() as f64,
@@ -268,6 +292,16 @@ impl ServeReport {
             self.mean_queue_s,
             self.mean_batch,
             self.mean_attn_sparsity * 100.0
+        );
+        println!(
+            "{:<32} queue p50={:>7.3}s p95={:>7.3}s p99={:>7.3}s | exec p50={:>7.3}s p95={:>7.3}s p99={:>7.3}s",
+            "",
+            self.p50_queue_s,
+            self.p95_queue_s,
+            self.p99_queue_s,
+            self.p50_exec_s,
+            self.p95_exec_s,
+            self.p99_exec_s
         );
     }
 }
@@ -306,7 +340,7 @@ mod tests {
     use crate::config::ModelConfig;
     use crate::engine::Policy;
     use crate::model::{weights::Weights, MiniMMDiT};
-    use crate::trace::poisson_trace;
+    use crate::workload::poisson_trace;
 
     fn tiny_engine(_wid: usize) -> DiTEngine {
         let cfg = ModelConfig {
@@ -335,6 +369,13 @@ mod tests {
         assert!(report.throughput_rps > 0.0);
         assert!(report.p95_latency_s >= report.p50_latency_s);
         assert!(report.p99_latency_s >= report.p95_latency_s);
+        assert!(report.p95_queue_s >= report.p50_queue_s);
+        assert!(report.p99_queue_s >= report.p95_queue_s);
+        assert!(report.p95_exec_s >= report.p50_exec_s);
+        assert!(report.p99_exec_s >= report.p95_exec_s);
+        for r in &responses {
+            assert!((r.queue_s + r.exec_s - r.latency_s).abs() < 1e-6);
+        }
         for r in &responses {
             assert!(r.image.data().iter().all(|x| x.is_finite()));
             assert!(r.batch_size >= 1 && r.batch_size <= 2);

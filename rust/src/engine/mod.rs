@@ -66,6 +66,7 @@ use crate::model::blocks::{
     qkv_joint, vsplit, vstack,
 };
 use crate::model::{BlockExec, BlockWeights, MiniMMDiT};
+use crate::obs::{self, Span};
 use crate::plan::cache::{symbol_key, CacheOutcome, CacheStats, Compiled, PlanCache};
 use crate::plan::{AttnStats, DecodeMode, PlanDelta, SparsePlan};
 use crate::symbols::LayerSymbols;
@@ -281,9 +282,11 @@ pub(crate) fn build_plans(
 ) -> Compiled<LayerPlans> {
     if let Some(b) = base {
         if let Some(delta) = PlanDelta::between(&b.key, &key, syms, PLAN_KEY_GEOMETRY_PARAMS) {
+            let _sp = Span::enter("plan.compile_delta", &obs::metrics::PLAN_COMPILE_DELTA);
             return Compiled::Delta(apply_layer_delta(b, &delta, syms, geo, key));
         }
     }
+    let _sp = Span::enter("plan.compile_full", &obs::metrics::PLAN_COMPILE_FULL);
     Compiled::Full(compile_plans(syms, geo, key))
 }
 
@@ -564,6 +567,8 @@ impl DiTEngine {
         step: usize,
         stats: &mut RunStats,
     ) -> Tensor {
+        let _step_span = Span::enter("engine.step", &obs::metrics::ENGINE_STEP);
+        obs::metrics::ENGINE_STEPS.inc();
         let DiTEngine { model, policy, geo, state, panels, exec, plan_cache, delta_enabled } =
             self;
         let mut plans = LocalPlanProvider { cache: plan_cache, delta: *delta_enabled };
@@ -617,15 +622,25 @@ impl<'a> EngineExec<'a> {
         let base = self.state[layer].plans.clone();
         let (plans, outcome) = self.plans.plans_for(syms, &geo, base.as_deref());
         match outcome {
-            CacheOutcome::Miss => self.stats.plan_cache_misses += 1,
-            CacheOutcome::Hit => self.stats.plan_cache_hits += 1,
+            CacheOutcome::Miss => {
+                self.stats.plan_cache_misses += 1;
+                obs::metrics::PLAN_CACHE_MISSES.inc();
+            }
+            CacheOutcome::Hit => {
+                self.stats.plan_cache_hits += 1;
+                obs::metrics::PLAN_CACHE_HITS.inc();
+            }
             CacheOutcome::SharedHit => {
                 self.stats.plan_cache_hits += 1;
                 self.stats.plan_cache_shared += 1;
+                obs::metrics::PLAN_CACHE_HITS.inc();
+                obs::metrics::PLAN_CACHE_SHARED.inc();
             }
             CacheOutcome::DeltaHit => {
                 self.stats.plan_cache_misses += 1;
                 self.stats.plan_cache_delta += 1;
+                obs::metrics::PLAN_CACHE_MISSES.inc();
+                obs::metrics::PLAN_CACHE_DELTA.inc();
             }
         }
         plans
@@ -664,6 +679,7 @@ impl<'a> BlockExec for EngineExec<'a> {
 
         if let (Some(k), true) = (dispatch_k, block_cached) {
             // ---- CachedBlock path: forecast the whole block update. ----
+            let _sp = Span::enter("block.cached", &obs::metrics::BLOCK_CACHED);
             self.stats.cached_layer_steps += 1;
             let st = &self.state[layer];
             txt.add_assign(&st.delta_txt.forecast(k as f64));
@@ -694,11 +710,14 @@ impl<'a> EngineExec<'a> {
         img: &mut Tensor,
     ) {
         let geo = self.geo;
+        let sp = Span::enter("gemm_q.dense", &obs::metrics::KERNEL_GEMM_Q_DENSE);
         let txt0 = txt.clone();
         let img0 = img.clone();
         let pre = pre_attention(bw, cvec, txt, img);
         let (q, k, v) =
             self.phase(0, |_| qkv_joint(bw, cfg, &pre.txt_mod, &pre.img_mod));
+        drop(sp);
+        let sp = Span::enter("attention.dense", &obs::metrics::KERNEL_ATTENTION_DENSE);
         let o_cat = self.phase(1, |this| {
             blocks::joint_attention_dense_on(this.exec, &q, &k, &v, cfg.heads, geo.block_q)
         });
@@ -714,10 +733,13 @@ impl<'a> EngineExec<'a> {
         self.stats.go_computed += heads * t_q;
         self.stats.go_total += heads * t_q;
         self.stats.flops_done += DiTEngine::dense_layer_flops(cfg);
+        drop(sp);
 
         // Refresh symbols from the fresh per-head Q/K (Update semantics),
         // then compile them once into the plan set reused by every
-        // Dispatch step of this window.
+        // Dispatch step of this window. The whole region — mask emission,
+        // packing, [delta-]compile, TaylorSeer update — is `plan.refresh`.
+        let sp = Span::enter("plan.refresh", &obs::metrics::PLAN_REFRESH);
         let uses_symbols = self.policy.uses_symbols();
         if uses_symbols {
             let mut heads_syms = Vec::with_capacity(cfg.heads);
@@ -750,9 +772,11 @@ impl<'a> EngineExec<'a> {
             .unwrap_or(1.0);
         self.state[layer].last_update_step = Some(self.step);
         self.state[layer].o_taylor.update(&o_cat, dt);
+        drop(sp);
 
         // GEMM-O: exact projection now + bias stacks for Dispatch steps,
         // all walking the compiled per-stream plans.
+        let sp = Span::enter("gemm_o.dense", &obs::metrics::KERNEL_GEMM_O_DENSE);
         self.phase(2, |this| {
             let exec = Arc::clone(this.exec);
             let panels = &this.panels[layer];
@@ -785,7 +809,9 @@ impl<'a> EngineExec<'a> {
                 post_attention(bw, &pre, &o_cat, txt, img);
             }
         });
+        drop(sp);
 
+        let _sp = Span::enter("mlp.dense", &obs::metrics::KERNEL_MLP_DENSE);
         self.phase(3, |_| {
             mlp_stream(&bw.txt, &pre.ada_txt, txt);
             mlp_stream(&bw.img, &pre.ada_img, img);
@@ -814,6 +840,7 @@ impl<'a> EngineExec<'a> {
         img: &mut Tensor,
     ) {
         let geo = self.geo;
+        let sp = Span::enter("gemm_q.sparse", &obs::metrics::KERNEL_GEMM_Q_SPARSE);
         let pre = pre_attention(bw, cvec, txt, img);
 
         // Per-step-mask policies (SpargeAttn) regenerate S_s from fresh Q/K.
@@ -840,8 +867,10 @@ impl<'a> EngineExec<'a> {
             blocks::norm_rope_joint_q(&mut qj, bw, cfg, cfg.text_tokens);
             (qj, kj, vj)
         });
+        drop(sp);
 
         if per_step {
+            let _sp = Span::enter("plan.refresh", &obs::metrics::PLAN_REFRESH);
             let mut heads_syms = Vec::with_capacity(cfg.heads);
             for h in 0..cfg.heads {
                 let qh = extract_head(&q, cfg.heads, h);
@@ -864,6 +893,7 @@ impl<'a> EngineExec<'a> {
         // head's compiled plan and produces that head's output slice (the
         // pool places results by head index, so the gather below is
         // order-deterministic and bitwise-identical to a serial loop).
+        let sp = Span::enter("attention.sparse", &obs::metrics::KERNEL_ATTENTION_SPARSE);
         let o_cat = self.phase(1, |this| {
             let heads = cfg.heads;
             let per_head: Vec<(Tensor, AttnStats)> = {
@@ -886,8 +916,10 @@ impl<'a> EngineExec<'a> {
             }
             o_cat
         });
+        drop(sp);
 
         // GEMM-O dispatch: bias init + computed tiles only.
+        let sp = Span::enter("gemm_o.sparse", &obs::metrics::KERNEL_GEMM_O_SPARSE);
         self.phase(2, |this| {
             let st = &this.state[layer];
             let plans = st.plans.as_ref().unwrap();
@@ -914,7 +946,9 @@ impl<'a> EngineExec<'a> {
             let o_joint = vstack(&out_t, &out_i);
             post_attention_preprojected(&pre, &o_joint, cfg.text_tokens, txt, img);
         });
+        drop(sp);
 
+        let _sp = Span::enter("mlp.sparse", &obs::metrics::KERNEL_MLP_SPARSE);
         self.phase(3, |_| {
             mlp_stream(&bw.txt, &pre.ada_txt, txt);
             mlp_stream(&bw.img, &pre.ada_img, img);

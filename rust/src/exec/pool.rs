@@ -215,6 +215,9 @@ impl ExecPool {
         F: Fn(usize) + Sync,
     {
         debug_assert!(n >= 2 && self.threads >= 2);
+        let _section_span =
+            crate::obs::Span::enter("exec.section", &crate::obs::metrics::EXEC_SECTION);
+        crate::obs::metrics::EXEC_SECTIONS.inc();
         let next = AtomicUsize::new(0);
         let drain = || loop {
             let i = next.fetch_add(1, Ordering::Relaxed);
@@ -224,6 +227,10 @@ impl ExecPool {
             f(i);
         };
         let helpers = self.threads.min(n - 1);
+        // Occupancy telemetry: lanes = caller + helpers; queue depth is
+        // sampled after this section's jobs are enqueued (both no-ops
+        // unless FO_METRICS is on).
+        crate::obs::metrics::EXEC_ACTIVE_LANES.set(helpers as i64 + 1);
         let latch = Latch::new(helpers, &self.shared);
         let panicked = AtomicBool::new(false);
         {
@@ -249,6 +256,7 @@ impl ExecPool {
                 };
                 Self::submit_locked(&mut q, boxed);
             }
+            crate::obs::metrics::EXEC_QUEUE_DEPTH.set(q.len() as i64);
             drop(q);
             self.shared.work_cv.notify_all();
         }

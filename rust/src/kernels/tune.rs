@@ -219,6 +219,7 @@ pub fn tune_now(family: Family, dims: [usize; 3], threads: usize) -> KernelConfi
 }
 
 fn insert(key: Key, cfg: KernelConfig) {
+    crate::obs::metrics::TUNE_MEASUREMENTS.inc();
     table().lock().unwrap().insert(key, cfg);
     if let Some(path) = cache_path() {
         if let Err(e) = dump(&path) {

@@ -51,6 +51,13 @@
 //!   latency/throughput accounting (p50/p95/p99).
 //! * [`metrics`] / [`report`] — the paper's quality + efficiency metrics and
 //!   the harness that regenerates every table and figure.
+//! * [`obs`] — the process-wide observability layer: atomic
+//!   counters/gauges/histograms, RAII timing spans over every kernel
+//!   family and engine phase, per-request lifecycle events, and the
+//!   Prometheus / Chrome-trace exporters behind `FO_METRICS`/`FO_TRACE`
+//!   (no-ops when unset).
+//! * [`workload`] — synthetic workload generation: prompts, scenes and
+//!   Poisson arrival traces that feed the serving layers.
 //!
 //! See `DESIGN.md` for the full experiment index and every substitution made
 //! relative to the paper's A100/FLUX/Hunyuan testbed.
@@ -67,6 +74,7 @@ pub mod kernels;
 pub mod masks;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod plan;
 pub mod report;
 #[cfg(feature = "pjrt")]
@@ -74,8 +82,8 @@ pub mod runtime;
 pub mod symbols;
 pub mod tensor;
 pub mod testutil;
-pub mod trace;
 pub mod util;
+pub mod workload;
 
 /// Crate version string (mirrors `Cargo.toml`).
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -18,7 +18,7 @@ use flashomni::coordinator::replay_trace;
 use flashomni::engine::{DiTEngine, Policy};
 use flashomni::model::MiniMMDiT;
 use flashomni::report::Reporter;
-use flashomni::trace::{caption_ids, poisson_trace};
+use flashomni::workload::{caption_ids, poisson_trace};
 use std::collections::HashMap;
 use std::process::ExitCode;
 

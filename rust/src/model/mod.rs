@@ -119,6 +119,7 @@ impl MiniMMDiT {
         text_ids: &[usize],
         patches: &Tensor,
     ) -> (Tensor, Tensor) {
+        let _sp = crate::obs::Span::enter("model.embed", &crate::obs::metrics::MODEL_EMBED);
         assert_eq!(cfg.patch_dim(), self.cfg.patch_dim(), "patch_dim is weight-shaping");
         assert_eq!(cfg.dim, self.cfg.dim, "dim is weight-shaping");
         assert_eq!(text_ids.len(), cfg.text_tokens);
@@ -142,12 +143,13 @@ impl MiniMMDiT {
     /// Final layer: decode the vision stream into per-patch rectified-flow
     /// velocities — the shared suffix of every forward pass.
     pub fn decode(&self, cvec: &[f32], img: &Tensor) -> Tensor {
-        blocks::final_layer(&self.w, &self.cfg, cvec, img)
+        self.decode_with(&self.cfg, cvec, img)
     }
 
     /// [`MiniMMDiT::decode`] under an explicit per-request config (the
     /// final layer is row-local, so only the row count differs).
     pub fn decode_with(&self, cfg: &ModelConfig, cvec: &[f32], img: &Tensor) -> Tensor {
+        let _sp = crate::obs::Span::enter("model.decode", &crate::obs::metrics::MODEL_DECODE);
         blocks::final_layer(&self.w, cfg, cvec, img)
     }
 

@@ -1,0 +1,538 @@
+//! The process-wide **metrics registry**: statically-declared atomic
+//! counters, gauges, and log₂-ns-bucketed latency histograms, plus the
+//! Prometheus text exporter.
+//!
+//! Every instrument is a `static` declared in this file — registration is
+//! the `const` initializer, enumeration is the explicit `all_*()` slices,
+//! and the hot path is a handful of relaxed `fetch_add`s with no locking,
+//! no hashing and no allocation. Counters and gauges self-gate on
+//! [`metrics_enabled`](super::metrics_enabled); histogram recording is
+//! driven by [`Span`](super::Span) guards which carry the gate decision
+//! from construction time.
+
+use super::metrics_enabled;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+
+/// Number of log₂ latency buckets: bucket `i` covers `[2^i, 2^{i+1})` ns
+/// (bucket 0 also absorbs 0 ns), so 40 buckets span 1 ns … ~18 minutes.
+pub const HIST_BUCKETS: usize = 40;
+
+// ---------------------------------------------------------------------------
+// Instruments
+// ---------------------------------------------------------------------------
+
+/// Monotonic counter (Prometheus `counter`).
+pub struct Counter {
+    name: &'static str,
+    help: &'static str,
+    value: AtomicU64,
+}
+
+impl Counter {
+    /// Declare a counter (const: used in `static` initializers).
+    pub const fn new(name: &'static str, help: &'static str) -> Self {
+        Counter { name, help, value: AtomicU64::new(0) }
+    }
+    /// Add `n`, if metrics are enabled (one relaxed load when disabled).
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if metrics_enabled() {
+            self.value.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+    /// Increment by one (gated like [`Counter::add`]).
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+    /// Add unconditionally — internal bookkeeping that must count even
+    /// when only tracing is enabled (e.g. dropped trace events).
+    #[inline]
+    pub(crate) fn add_ungated(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+    /// Metric name (Prometheus identifier).
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+/// Instantaneous gauge (Prometheus `gauge`): signed so transient
+/// dec-past-zero interleavings under concurrency can never wrap.
+pub struct Gauge {
+    name: &'static str,
+    help: &'static str,
+    value: AtomicI64,
+}
+
+impl Gauge {
+    /// Declare a gauge (const: used in `static` initializers).
+    pub const fn new(name: &'static str, help: &'static str) -> Self {
+        Gauge { name, help, value: AtomicI64::new(0) }
+    }
+    /// Set to an absolute value (gated on metrics being enabled).
+    #[inline]
+    pub fn set(&self, v: i64) {
+        if metrics_enabled() {
+            self.value.store(v, Ordering::Relaxed);
+        }
+    }
+    /// Add `n` (gated).
+    #[inline]
+    pub fn add(&self, n: i64) {
+        if metrics_enabled() {
+            self.value.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+    /// Subtract `n` (gated).
+    #[inline]
+    pub fn sub(&self, n: i64) {
+        self.add(-n);
+    }
+    /// Current value.
+    pub fn get(&self) -> i64 {
+        self.value.load(Ordering::Relaxed)
+    }
+    /// Metric name (Prometheus identifier).
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+/// Log₂-bucketed latency histogram over nanoseconds (Prometheus
+/// `histogram` with power-of-two `le` bounds), with p50/p95/p99 readout.
+pub struct Histogram {
+    name: &'static str,
+    help: &'static str,
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+/// Bucket index for a duration: `floor(log2(ns))` clamped to the table
+/// (0 and 1 ns land in bucket 0).
+#[inline]
+pub fn bucket_index(ns: u64) -> usize {
+    if ns < 2 {
+        0
+    } else {
+        ((63 - ns.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// Inclusive lower bound of bucket `i` in ns.
+pub fn bucket_lo(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        1u64 << i
+    }
+}
+
+/// Exclusive upper bound of bucket `i` in ns.
+pub fn bucket_hi(i: usize) -> u64 {
+    1u64 << (i + 1)
+}
+
+impl Histogram {
+    /// Declare a histogram (const: used in `static` initializers).
+    pub const fn new(name: &'static str, help: &'static str) -> Self {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Histogram {
+            name,
+            help,
+            buckets: [ZERO; HIST_BUCKETS],
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+    /// Record one observation, **unconditionally** — callers carry the
+    /// gate (a [`Span`](super::Span) decides at construction time so a
+    /// run cannot tear between enter and drop).
+    #[inline]
+    pub fn record_ns(&self, ns: u64) {
+        self.buckets[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+    /// Record one observation iff metrics are enabled.
+    #[inline]
+    pub fn observe_ns(&self, ns: u64) {
+        if metrics_enabled() {
+            self.record_ns(ns);
+        }
+    }
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+    /// Sum of all observations in ns.
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns.load(Ordering::Relaxed)
+    }
+    /// Metric name (Prometheus identifier).
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+    /// Estimated `q`-quantile (0 < q ≤ 1) in ns: walk the cumulative
+    /// bucket counts and interpolate linearly inside the target bucket.
+    /// 0 when empty.
+    pub fn quantile_ns(&self, q: f64) -> f64 {
+        let counts: Vec<u64> =
+            self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = q.clamp(0.0, 1.0) * total as f64;
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let next = cum + c;
+            if (next as f64) >= target {
+                let frac = ((target - cum as f64) / c as f64).clamp(0.0, 1.0);
+                let lo = bucket_lo(i) as f64;
+                let hi = bucket_hi(i) as f64;
+                return lo + frac * (hi - lo);
+            }
+            cum = next;
+        }
+        bucket_hi(HIST_BUCKETS - 1) as f64
+    }
+    /// p50 in seconds.
+    pub fn p50_s(&self) -> f64 {
+        self.quantile_ns(0.50) * 1e-9
+    }
+    /// p95 in seconds.
+    pub fn p95_s(&self) -> f64 {
+        self.quantile_ns(0.95) * 1e-9
+    }
+    /// p99 in seconds.
+    pub fn p99_s(&self) -> f64 {
+        self.quantile_ns(0.99) * 1e-9
+    }
+    fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum_ns.store(0, Ordering::Relaxed);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The registry: every instrument in the process, statically declared.
+// ---------------------------------------------------------------------------
+
+/// Plan-cache refresh outcomes (mirrors `RunStats::plan_cache_*`).
+pub static PLAN_CACHE_HITS: Counter =
+    Counter::new("fo_plan_cache_hits_total", "Symbol refreshes served from the plan cache");
+/// Plan-cache misses (full or delta compiles).
+pub static PLAN_CACHE_MISSES: Counter =
+    Counter::new("fo_plan_cache_misses_total", "Symbol refreshes that compiled a plan");
+/// Hits on a plan another request of the same batch step compiled.
+pub static PLAN_CACHE_SHARED: Counter = Counter::new(
+    "fo_plan_cache_shared_total",
+    "Refreshes served by a plan compiled by a batch peer",
+);
+/// Misses served by an incremental (delta) recompile.
+pub static PLAN_CACHE_DELTA: Counter = Counter::new(
+    "fo_plan_cache_delta_total",
+    "Cache misses served by an incremental (delta) recompile",
+);
+/// Requests entering a scheduler/coordinator queue.
+pub static REQUESTS_ENQUEUED: Counter =
+    Counter::new("fo_requests_enqueued_total", "Requests submitted to a scheduler queue");
+/// Requests admitted into an engine slot.
+pub static REQUESTS_ADMITTED: Counter =
+    Counter::new("fo_requests_admitted_total", "Requests admitted into an engine slot");
+/// Requests retired with a finished image.
+pub static REQUESTS_RETIRED: Counter =
+    Counter::new("fo_requests_retired_total", "Requests retired with a finished image");
+/// Engine steps executed (solo or batched lockstep ticks).
+pub static ENGINE_STEPS: Counter =
+    Counter::new("fo_engine_steps_total", "Denoising engine steps executed");
+/// Autotuner measurements committed to the process-wide tune cache.
+pub static TUNE_MEASUREMENTS: Counter = Counter::new(
+    "fo_tune_measurements_total",
+    "Autotuner configs measured and cached (FO_TUNE=1)",
+);
+/// Parallel sections dispatched on the exec pool.
+pub static EXEC_SECTIONS: Counter =
+    Counter::new("fo_exec_sections_total", "Parallel sections dispatched on the ExecPool");
+/// Trace events discarded once the bounded buffer filled.
+pub static TRACE_EVENTS_DROPPED: Counter = Counter::new(
+    "fo_trace_events_dropped_total",
+    "Trace events discarded after the bounded buffer filled",
+);
+
+/// Jobs pending in the exec pool queue at dispatch time.
+pub static EXEC_QUEUE_DEPTH: Gauge =
+    Gauge::new("fo_exec_queue_depth", "Jobs pending in the ExecPool queue at dispatch");
+/// Worker lanes participating in the current parallel section.
+pub static EXEC_ACTIVE_LANES: Gauge = Gauge::new(
+    "fo_exec_active_lanes",
+    "Worker lanes participating in the current parallel section",
+);
+
+/// GEMM-Q dense (full path: joint QKV projection region).
+pub static KERNEL_GEMM_Q_DENSE: Histogram =
+    Histogram::new("fo_kernel_gemm_q_dense_ns", "Dense QKV projection region (full path)");
+/// GEMM-Q sparse (plan-driven Q projection with tile skipping).
+pub static KERNEL_GEMM_Q_SPARSE: Histogram =
+    Histogram::new("fo_kernel_gemm_q_sparse_ns", "Sparse GEMM-Q region (Dispatch path)");
+/// GEMM-Q ragged (stacked multi-request projection walk).
+pub static KERNEL_GEMM_Q_RAGGED: Histogram =
+    Histogram::new("fo_kernel_gemm_q_ragged_ns", "Ragged GEMM-Q region (batched walk)");
+/// Attention dense (full-path joint attention).
+pub static KERNEL_ATTENTION_DENSE: Histogram =
+    Histogram::new("fo_kernel_attention_dense_ns", "Dense joint attention (full path)");
+/// Attention sparse (Algorithm 1 with block skipping).
+pub static KERNEL_ATTENTION_SPARSE: Histogram =
+    Histogram::new("fo_kernel_attention_sparse_ns", "Sparse FlashOmni attention (Alg. 1)");
+/// Attention ragged (one kernel walk over concatenated requests).
+pub static KERNEL_ATTENTION_RAGGED: Histogram =
+    Histogram::new("fo_kernel_attention_ragged_ns", "Ragged FlashOmni attention walk");
+/// GEMM-O dense (full-path output projection + bias-stack build).
+pub static KERNEL_GEMM_O_DENSE: Histogram =
+    Histogram::new("fo_kernel_gemm_o_dense_ns", "Dense GEMM-O region (full path)");
+/// GEMM-O sparse (bias init + computed tiles only).
+pub static KERNEL_GEMM_O_SPARSE: Histogram =
+    Histogram::new("fo_kernel_gemm_o_sparse_ns", "Sparse GEMM-O dispatch region");
+/// GEMM-O ragged.
+pub static KERNEL_GEMM_O_RAGGED: Histogram =
+    Histogram::new("fo_kernel_gemm_o_ragged_ns", "Ragged GEMM-O region (batched walk)");
+/// MLP + residual tail, dense/full path.
+pub static KERNEL_MLP_DENSE: Histogram =
+    Histogram::new("fo_kernel_mlp_dense_ns", "MLP + residual tail (full path)");
+/// MLP + residual tail, sparse path.
+pub static KERNEL_MLP_SPARSE: Histogram =
+    Histogram::new("fo_kernel_mlp_sparse_ns", "MLP + residual tail (Dispatch path)");
+/// MLP + residual tail, ragged path.
+pub static KERNEL_MLP_RAGGED: Histogram =
+    Histogram::new("fo_kernel_mlp_ragged_ns", "MLP + residual tail (ragged walk)");
+
+/// Full (from-scratch) plan compiles.
+pub static PLAN_COMPILE_FULL: Histogram =
+    Histogram::new("fo_plan_compile_full_ns", "Full (from-scratch) plan compiles");
+/// Incremental (delta) plan recompiles.
+pub static PLAN_COMPILE_DELTA: Histogram =
+    Histogram::new("fo_plan_compile_delta_ns", "Incremental (delta) plan recompiles");
+/// Whole symbol-refresh region: mask emission + packing + [delta-]compile
+/// + TaylorSeer update ([`PLAN_COMPILE_FULL`]/[`PLAN_COMPILE_DELTA`] nest
+/// inside and are excluded from step-coverage accounting).
+pub static PLAN_REFRESH: Histogram = Histogram::new(
+    "fo_plan_refresh_ns",
+    "Symbol refresh region (masks + packing + plan [delta-]compile)",
+);
+/// Whole-block forecast path (CachedBlock).
+pub static BLOCK_CACHED: Histogram =
+    Histogram::new("fo_block_cached_ns", "Whole-block forecast path (CachedBlock)");
+/// Per-request noise/patchify/embedding region of a batched step.
+pub static MODEL_EMBED: Histogram =
+    Histogram::new("fo_model_embed_ns", "Embedding/patchify region of an engine step");
+/// Per-request sampler/decode region of a batched step.
+pub static MODEL_DECODE: Histogram =
+    Histogram::new("fo_model_decode_ns", "Sampler/decode region of an engine step");
+/// One engine step (solo `DiTEngine` or batched lockstep tick).
+pub static ENGINE_STEP: Histogram =
+    Histogram::new("fo_engine_step_ns", "One engine step (solo or batched lockstep tick)");
+/// Retirement sweep: unpatchify + stats finalization for finished slots.
+pub static ENGINE_RETIRE: Histogram =
+    Histogram::new("fo_engine_retire_ns", "Retirement sweep for finished slots");
+/// One parallel section on the exec pool (dispatch → last lane done).
+pub static EXEC_SECTION: Histogram =
+    Histogram::new("fo_exec_section_ns", "One parallel section on the ExecPool");
+/// Per-request queue wait (enqueue → admit).
+pub static REQUEST_QUEUE_WAIT: Histogram =
+    Histogram::new("fo_request_queue_wait_ns", "Per-request queue wait (enqueue to admit)");
+/// Per-request execution time (admit → retire).
+pub static REQUEST_EXEC: Histogram =
+    Histogram::new("fo_request_exec_ns", "Per-request execution time (admit to retire)");
+
+/// Every counter in the process, for exporters and tests.
+pub fn all_counters() -> &'static [&'static Counter] {
+    &[
+        &PLAN_CACHE_HITS,
+        &PLAN_CACHE_MISSES,
+        &PLAN_CACHE_SHARED,
+        &PLAN_CACHE_DELTA,
+        &REQUESTS_ENQUEUED,
+        &REQUESTS_ADMITTED,
+        &REQUESTS_RETIRED,
+        &ENGINE_STEPS,
+        &TUNE_MEASUREMENTS,
+        &EXEC_SECTIONS,
+        &TRACE_EVENTS_DROPPED,
+    ]
+}
+
+/// Every gauge in the process.
+pub fn all_gauges() -> &'static [&'static Gauge] {
+    &[&EXEC_QUEUE_DEPTH, &EXEC_ACTIVE_LANES]
+}
+
+/// Every histogram in the process.
+pub fn all_histograms() -> &'static [&'static Histogram] {
+    &[
+        &KERNEL_GEMM_Q_DENSE,
+        &KERNEL_GEMM_Q_SPARSE,
+        &KERNEL_GEMM_Q_RAGGED,
+        &KERNEL_ATTENTION_DENSE,
+        &KERNEL_ATTENTION_SPARSE,
+        &KERNEL_ATTENTION_RAGGED,
+        &KERNEL_GEMM_O_DENSE,
+        &KERNEL_GEMM_O_SPARSE,
+        &KERNEL_GEMM_O_RAGGED,
+        &KERNEL_MLP_DENSE,
+        &KERNEL_MLP_SPARSE,
+        &KERNEL_MLP_RAGGED,
+        &PLAN_COMPILE_FULL,
+        &PLAN_COMPILE_DELTA,
+        &PLAN_REFRESH,
+        &BLOCK_CACHED,
+        &MODEL_EMBED,
+        &MODEL_DECODE,
+        &ENGINE_STEP,
+        &ENGINE_RETIRE,
+        &EXEC_SECTION,
+        &REQUEST_QUEUE_WAIT,
+        &REQUEST_EXEC,
+    ]
+}
+
+/// The mutually-exclusive regions that tile an engine step: the twelve
+/// kernel-family histograms plus refresh/cache/embed/decode/retire. Their
+/// `sum_ns` over [`ENGINE_STEP`]'s `sum_ns` is the step coverage the
+/// fig12 acceptance gate asserts ≥ 0.95 (`plan.compile_*` nests inside
+/// `plan.refresh` and is deliberately absent).
+pub fn accounted_histograms() -> &'static [&'static Histogram] {
+    &[
+        &KERNEL_GEMM_Q_DENSE,
+        &KERNEL_GEMM_Q_SPARSE,
+        &KERNEL_GEMM_Q_RAGGED,
+        &KERNEL_ATTENTION_DENSE,
+        &KERNEL_ATTENTION_SPARSE,
+        &KERNEL_ATTENTION_RAGGED,
+        &KERNEL_GEMM_O_DENSE,
+        &KERNEL_GEMM_O_SPARSE,
+        &KERNEL_GEMM_O_RAGGED,
+        &KERNEL_MLP_DENSE,
+        &KERNEL_MLP_SPARSE,
+        &KERNEL_MLP_RAGGED,
+        &PLAN_REFRESH,
+        &BLOCK_CACHED,
+        &MODEL_EMBED,
+        &MODEL_DECODE,
+        &ENGINE_RETIRE,
+    ]
+}
+
+/// Fraction of [`ENGINE_STEP`] wall time covered by the accounted
+/// per-kernel-family regions ([`accounted_histograms`]). 0 when no steps
+/// were recorded.
+pub fn accounted_step_fraction() -> f64 {
+    let step = ENGINE_STEP.sum_ns();
+    if step == 0 {
+        return 0.0;
+    }
+    let covered: u64 = accounted_histograms().iter().map(|h| h.sum_ns()).sum();
+    covered as f64 / step as f64
+}
+
+/// Zero every instrument (tests only: the registry is process-global).
+pub fn reset_metrics() {
+    for c in all_counters() {
+        c.value.store(0, Ordering::Relaxed);
+    }
+    for g in all_gauges() {
+        g.value.store(0, Ordering::Relaxed);
+    }
+    for h in all_histograms() {
+        h.reset();
+    }
+}
+
+/// Render the whole registry in Prometheus text exposition format.
+/// Histograms use power-of-two `le` bounds in ns plus `+Inf`, with a
+/// comment line carrying the p50/p95/p99 readout.
+pub fn prometheus_text() -> String {
+    let mut out = String::with_capacity(1 << 14);
+    for c in all_counters() {
+        out.push_str(&format!("# HELP {} {}\n", c.name, c.help));
+        out.push_str(&format!("# TYPE {} counter\n", c.name));
+        out.push_str(&format!("{} {}\n", c.name, c.get()));
+    }
+    for g in all_gauges() {
+        out.push_str(&format!("# HELP {} {}\n", g.name, g.help));
+        out.push_str(&format!("# TYPE {} gauge\n", g.name));
+        out.push_str(&format!("{} {}\n", g.name, g.get()));
+    }
+    for h in all_histograms() {
+        out.push_str(&format!("# HELP {} {}\n", h.name, h.help));
+        out.push_str(&format!("# TYPE {} histogram\n", h.name));
+        out.push_str(&format!(
+            "# p50 {:.0}ns p95 {:.0}ns p99 {:.0}ns\n",
+            h.quantile_ns(0.50),
+            h.quantile_ns(0.95),
+            h.quantile_ns(0.99)
+        ));
+        let mut cum = 0u64;
+        for (i, b) in h.buckets.iter().enumerate() {
+            let n = b.load(Ordering::Relaxed);
+            // Keep the dump short: only emit buckets once data appears.
+            cum += n;
+            if n > 0 {
+                out.push_str(&format!(
+                    "{}_bucket{{le=\"{}\"}} {}\n",
+                    h.name,
+                    bucket_hi(i),
+                    cum
+                ));
+            }
+        }
+        out.push_str(&format!("{}_bucket{{le=\"+Inf\"}} {}\n", h.name, h.count()));
+        out.push_str(&format!("{}_sum {}\n", h.name, h.sum_ns()));
+        out.push_str(&format!("{}_count {}\n", h.name, h.count()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 1);
+        assert_eq!(bucket_index(3), 1);
+        assert_eq!(bucket_index(4), 2);
+        assert_eq!(bucket_index(1023), 9);
+        assert_eq!(bucket_index(1024), 10);
+        assert_eq!(bucket_index(u64::MAX), HIST_BUCKETS - 1);
+        assert_eq!(bucket_lo(0), 0);
+        assert_eq!(bucket_hi(0), 2);
+        assert_eq!(bucket_lo(10), 1024);
+        assert_eq!(bucket_hi(10), 2048);
+    }
+
+    #[test]
+    fn registry_names_are_unique() {
+        let mut names: Vec<&str> = all_counters().iter().map(|c| c.name).collect();
+        names.extend(all_gauges().iter().map(|g| g.name));
+        names.extend(all_histograms().iter().map(|h| h.name));
+        let total = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), total, "duplicate metric names in the registry");
+    }
+}

@@ -1,0 +1,189 @@
+//! Process-wide **observability layer**: metrics registry, timing spans,
+//! request-lifecycle tracing, and Prometheus / Chrome-trace export.
+//!
+//! Everything here is std-only and **off by default**. Two env knobs gate
+//! the two concerns independently:
+//!
+//! * `FO_METRICS` — atomic counters, gauges and log₂-ns-bucketed latency
+//!   histograms ([`metrics`]). `FO_METRICS=1` enables recording and makes
+//!   [`export_if_enabled`] write the registry in Prometheus text format
+//!   to `fo_metrics.prom`; any other truthy value is used as the output
+//!   path instead.
+//! * `FO_TRACE` — Chrome trace-event collection ([`trace`]): every
+//!   [`Span`] becomes a complete (`"X"`) slice, every request a pair of
+//!   `request.queue_wait` / `request.exec` slices on a dedicated track.
+//!   `FO_TRACE=1` writes `fo_trace.json` on [`export_if_enabled`]; any
+//!   other truthy value is the output path. The file loads directly in
+//!   [Perfetto](https://ui.perfetto.dev) or `chrome://tracing`.
+//!
+//! With both unset the layer is inert: a [`Span`] is two relaxed atomic
+//! loads and no `Instant::now()`, counters are a single load, and nothing
+//! allocates — engine outputs are bitwise-identical either way
+//! (`rust/tests/observability.rs`).
+//!
+//! The full metric/span vocabulary and both exporter schemas are
+//! documented in `docs/observability.md`.
+
+pub mod metrics;
+pub mod span;
+pub mod trace;
+
+pub use metrics::{
+    accounted_step_fraction, prometheus_text, reset_metrics, Counter, Gauge, Histogram,
+};
+pub use span::Span;
+
+use std::sync::atomic::{AtomicI8, Ordering};
+use std::sync::OnceLock;
+
+/// Tri-state override: −1 = follow the env knob, 0 = forced off,
+/// 1 = forced on (tests flip these process-wide).
+static METRICS_FORCED: AtomicI8 = AtomicI8::new(-1);
+static TRACE_FORCED: AtomicI8 = AtomicI8::new(-1);
+
+static METRICS_ENV: OnceLock<Option<String>> = OnceLock::new();
+static TRACE_ENV: OnceLock<Option<String>> = OnceLock::new();
+
+/// Read a gate knob once: `None` when unset/off ("", "0", "off",
+/// "false"), otherwise the raw value (truthy).
+fn knob(name: &str) -> Option<String> {
+    match std::env::var(name) {
+        Ok(v) if !matches!(v.as_str(), "" | "0" | "off" | "false") => Some(v),
+        _ => None,
+    }
+}
+
+fn metrics_knob() -> &'static Option<String> {
+    METRICS_ENV.get_or_init(|| knob("FO_METRICS"))
+}
+
+fn trace_knob() -> &'static Option<String> {
+    TRACE_ENV.get_or_init(|| knob("FO_TRACE"))
+}
+
+/// Is metric recording on (`FO_METRICS` truthy, or forced by
+/// [`set_metrics_enabled`])? Hot-path cheap: one relaxed load plus a
+/// cached env lookup.
+#[inline]
+pub fn metrics_enabled() -> bool {
+    match METRICS_FORCED.load(Ordering::Relaxed) {
+        0 => false,
+        1 => true,
+        _ => metrics_knob().is_some(),
+    }
+}
+
+/// Is trace-event collection on (`FO_TRACE` truthy, or forced by
+/// [`set_trace_enabled`])?
+#[inline]
+pub fn trace_enabled() -> bool {
+    match TRACE_FORCED.load(Ordering::Relaxed) {
+        0 => false,
+        1 => true,
+        _ => trace_knob().is_some(),
+    }
+}
+
+/// Force metrics on/off for this process (`None` = follow `FO_METRICS`).
+/// Test hook — the knob itself is read once and cached.
+pub fn set_metrics_enabled(on: Option<bool>) {
+    let v = match on {
+        None => -1,
+        Some(false) => 0,
+        Some(true) => 1,
+    };
+    METRICS_FORCED.store(v, Ordering::Relaxed);
+}
+
+/// Force tracing on/off for this process (`None` = follow `FO_TRACE`).
+pub fn set_trace_enabled(on: Option<bool>) {
+    let v = match on {
+        None => -1,
+        Some(false) => 0,
+        Some(true) => 1,
+    };
+    TRACE_FORCED.store(v, Ordering::Relaxed);
+}
+
+/// Default Prometheus dump path when `FO_METRICS` is a bare "1"/"on"/"true".
+pub const DEFAULT_METRICS_PATH: &str = "fo_metrics.prom";
+/// Default Chrome-trace path when `FO_TRACE` is a bare "1"/"on"/"true".
+pub const DEFAULT_TRACE_PATH: &str = "fo_trace.json";
+
+fn export_path(raw: &Option<String>, default: &str) -> String {
+    match raw {
+        Some(v) if !matches!(v.as_str(), "1" | "on" | "true") => v.clone(),
+        _ => default.to_string(),
+    }
+}
+
+/// Where [`export_if_enabled`] writes the Prometheus text dump.
+pub fn metrics_export_path() -> String {
+    export_path(metrics_knob(), DEFAULT_METRICS_PATH)
+}
+
+/// Where [`export_if_enabled`] writes the Chrome trace JSON.
+pub fn trace_export_path() -> String {
+    export_path(trace_knob(), DEFAULT_TRACE_PATH)
+}
+
+/// Export whatever is enabled: the Prometheus text dump when metrics are
+/// on, the Chrome trace JSON when tracing is on. Returns the paths
+/// written (empty when both knobs are off); write errors go to stderr
+/// rather than panicking — telemetry must never take a run down.
+pub fn export_if_enabled() -> Vec<String> {
+    let mut written = Vec::new();
+    if metrics_enabled() {
+        let path = metrics_export_path();
+        match std::fs::write(&path, prometheus_text()) {
+            Ok(()) => written.push(path),
+            Err(e) => eprintln!("obs: could not write {path}: {e}"),
+        }
+    }
+    if trace_enabled() {
+        let path = trace_export_path();
+        match trace::write_chrome_trace(&path) {
+            Ok(_) => written.push(path),
+            Err(e) => eprintln!("obs: could not write {path}: {e}"),
+        }
+    }
+    written
+}
+
+/// Serializes tests that flip the process-global gates (the registry and
+/// the gates are shared by every test thread in a binary).
+#[cfg(test)]
+pub(crate) static TEST_GATE: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forced_gates_override() {
+        let _g = TEST_GATE.lock().unwrap_or_else(|e| e.into_inner());
+        // Default: follows env (unset in the test harness → off).
+        set_metrics_enabled(Some(true));
+        assert!(metrics_enabled());
+        set_metrics_enabled(Some(false));
+        assert!(!metrics_enabled());
+        set_metrics_enabled(None);
+        set_trace_enabled(Some(true));
+        assert!(trace_enabled());
+        set_trace_enabled(None);
+    }
+
+    #[test]
+    fn export_paths_default() {
+        // With the knobs unset (or bare "1"), the defaults apply.
+        assert_eq!(export_path(&None, DEFAULT_METRICS_PATH), DEFAULT_METRICS_PATH);
+        assert_eq!(
+            export_path(&Some("1".to_string()), DEFAULT_TRACE_PATH),
+            DEFAULT_TRACE_PATH
+        );
+        assert_eq!(
+            export_path(&Some("/tmp/x.json".to_string()), DEFAULT_TRACE_PATH),
+            "/tmp/x.json"
+        );
+    }
+}

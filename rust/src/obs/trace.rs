@@ -1,0 +1,180 @@
+//! Chrome **trace-event** collection: a bounded, process-global buffer of
+//! complete (`"X"`) slices written as Trace Event Format JSON —
+//! loadable directly in [Perfetto](https://ui.perfetto.dev) or
+//! `chrome://tracing`.
+//!
+//! Two tracks keep nesting trivially valid:
+//!
+//! * **pid 1 — engine threads.** Every [`Span`](super::Span) becomes a
+//!   slice on its OS thread's own `tid` (assigned in first-use order), so
+//!   per-thread slices nest exactly as the call stack did.
+//! * **pid 2 — requests.** Per-request lifecycle slices
+//!   (`request.queue_wait`, `request.exec`) use `tid = request id`: one
+//!   row per request, two adjacent slices, never interleaved with kernel
+//!   spans.
+//!
+//! The buffer is bounded ([`EVENT_CAP`]); once full, new events are
+//! counted in `fo_trace_events_dropped_total` and discarded — tracing
+//! must never grow without bound inside a serving process.
+
+use super::metrics::TRACE_EVENTS_DROPPED;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Engine-thread track (every [`Span`](super::Span) slice).
+pub const PID_ENGINE: u32 = 1;
+/// Request-lifecycle track (`tid` = request id).
+pub const PID_REQUESTS: u32 = 2;
+
+/// Maximum buffered events; beyond this, events are dropped (and counted).
+pub const EVENT_CAP: usize = 1 << 20;
+
+#[derive(Clone, Copy)]
+struct TraceEvent {
+    name: &'static str,
+    pid: u32,
+    tid: u64,
+    ts_ns: u64,
+    dur_ns: u64,
+}
+
+static EVENTS: Mutex<Vec<TraceEvent>> = Mutex::new(Vec::new());
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// Stable per-thread trace `tid`, assigned in first-use order.
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+/// The process trace epoch (`ts = 0`), pinned on first use.
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn push(ev: TraceEvent) {
+    let mut events = EVENTS.lock().unwrap_or_else(|e| e.into_inner());
+    if events.len() >= EVENT_CAP {
+        TRACE_EVENTS_DROPPED.add_ungated(1);
+        return;
+    }
+    events.push(ev);
+}
+
+/// Append a complete slice for the current thread on the engine track.
+/// Called by [`Span`](super::Span) on drop; the span already checked the
+/// gate.
+pub(crate) fn push_complete(name: &'static str, start: Instant, dur: Duration) {
+    let ts_ns = start.saturating_duration_since(epoch()).as_nanos() as u64;
+    push(TraceEvent {
+        name,
+        pid: PID_ENGINE,
+        tid: TID.with(|t| *t),
+        ts_ns,
+        dur_ns: dur.as_nanos() as u64,
+    });
+}
+
+/// Append a per-request lifecycle slice (`request.queue_wait` /
+/// `request.exec`) on the request track, `tid = request id`. No-op when
+/// tracing is disabled.
+pub fn push_request_slice(name: &'static str, request_id: u64, start: Instant, dur: Duration) {
+    if !super::trace_enabled() {
+        return;
+    }
+    let ts_ns = start.saturating_duration_since(epoch()).as_nanos() as u64;
+    push(TraceEvent {
+        name,
+        pid: PID_REQUESTS,
+        tid: request_id,
+        ts_ns,
+        dur_ns: dur.as_nanos() as u64,
+    });
+}
+
+/// Number of buffered events (tests and export logging).
+pub fn event_count() -> usize {
+    EVENTS.lock().unwrap_or_else(|e| e.into_inner()).len()
+}
+
+/// Drop all buffered events (tests: the buffer is process-global).
+pub fn clear() {
+    EVENTS.lock().unwrap_or_else(|e| e.into_inner()).clear();
+}
+
+/// Serialize the buffer as Trace Event Format JSON. Events are sorted by
+/// `(pid, tid, ts, −dur)` so each track reads top-down as a well-nested
+/// stack; `ts`/`dur` are microseconds (the format's unit) with ns
+/// precision kept in the fraction.
+pub fn chrome_trace_json() -> String {
+    let events: Vec<TraceEvent> = {
+        let guard = EVENTS.lock().unwrap_or_else(|e| e.into_inner());
+        guard.clone()
+    };
+    let mut sorted = events;
+    sorted.sort_by(|a, b| {
+        (a.pid, a.tid, a.ts_ns)
+            .cmp(&(b.pid, b.tid, b.ts_ns))
+            .then(b.dur_ns.cmp(&a.dur_ns))
+    });
+    let mut out = String::with_capacity(64 + sorted.len() * 96);
+    out.push_str("{\"traceEvents\":[\n");
+    out.push_str(&format!(
+        "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{PID_ENGINE},\"tid\":0,\
+         \"args\":{{\"name\":\"flashomni engine\"}}}},\n"
+    ));
+    out.push_str(&format!(
+        "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{PID_REQUESTS},\"tid\":0,\
+         \"args\":{{\"name\":\"requests\"}}}}"
+    ));
+    for ev in &sorted {
+        out.push_str(&format!(
+            ",\n{{\"name\":\"{}\",\"cat\":\"fo\",\"ph\":\"X\",\"pid\":{},\"tid\":{},\
+             \"ts\":{:.3},\"dur\":{:.3}}}",
+            ev.name,
+            ev.pid,
+            ev.tid,
+            ev.ts_ns as f64 / 1e3,
+            ev.dur_ns as f64 / 1e3,
+        ));
+    }
+    out.push_str("\n],\"displayTimeUnit\":\"ms\"}\n");
+    out
+}
+
+/// Write the buffered trace to `path`; returns the number of slices
+/// written (metadata records excluded).
+pub fn write_chrome_trace(path: &str) -> std::io::Result<usize> {
+    let n = event_count();
+    std::fs::write(path, chrome_trace_json())?;
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{set_trace_enabled, TEST_GATE};
+    use super::*;
+
+    #[test]
+    fn request_slices_buffer_and_serialize() {
+        let _g = TEST_GATE.lock().unwrap_or_else(|e| e.into_inner());
+        set_trace_enabled(Some(true));
+        clear();
+        let t0 = Instant::now();
+        push_request_slice("request.queue_wait", 7, t0, Duration::from_micros(5));
+        push_request_slice("request.exec", 7, t0, Duration::from_micros(9));
+        assert_eq!(event_count(), 2);
+        let json = chrome_trace_json();
+        assert!(json.contains("\"request.queue_wait\""));
+        assert!(json.contains("\"request.exec\""));
+        assert!(json.contains("\"traceEvents\""));
+        clear();
+        set_trace_enabled(None);
+        // Disabled: push is a no-op.
+        set_trace_enabled(Some(false));
+        push_request_slice("request.exec", 8, Instant::now(), Duration::ZERO);
+        assert_eq!(event_count(), 0);
+        set_trace_enabled(None);
+    }
+}

@@ -8,7 +8,7 @@ use crate::engine::{DiTEngine, GenResult, Policy, RunStats};
 use crate::metrics;
 use crate::model::MiniMMDiT;
 use crate::tensor::Tensor;
-use crate::trace::{caption_ids, eval_scenes, video_frame_ids};
+use crate::workload::{caption_ids, eval_scenes, video_frame_ids};
 use std::fmt::Write as _;
 use std::io::Write as _;
 
@@ -229,7 +229,7 @@ impl Reporter {
             for (i, &scene) in self.scenes.iter().enumerate() {
                 // Edit: start from a *different* scene's trajectory blended
                 // with noise, guided by this scene's caption.
-                let src_scene = (scene + 37) % crate::trace::num_scenes();
+                let src_scene = (scene + 37) % crate::workload::num_scenes();
                 let ids = caption_ids(scene, self.model.cfg.text_tokens);
                 let r = self.generate_edit(&mut engine, &ids, src_scene, 2000 + i as u64, t_start);
                 merge_stats(&mut agg, &r.stats);

@@ -12,7 +12,7 @@ use flashomni::engine::{DiTEngine, Policy, RunStats};
 use flashomni::exec::ExecPool;
 use flashomni::model::{weights::Weights, MiniMMDiT};
 use flashomni::plan::cache::{CacheOutcome, SharedPlanCache};
-use flashomni::trace::{caption_ids, Request};
+use flashomni::workload::{caption_ids, Request};
 use std::time::Instant;
 
 fn tiny_model(layers: usize, seed: u64) -> MiniMMDiT {

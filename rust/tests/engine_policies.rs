@@ -5,7 +5,7 @@ use flashomni::config::SparsityConfig;
 use flashomni::engine::{DiTEngine, Policy};
 use flashomni::metrics;
 use flashomni::model::MiniMMDiT;
-use flashomni::trace::caption_ids;
+use flashomni::workload::caption_ids;
 
 fn load_model() -> Option<MiniMMDiT> {
     for dir in ["artifacts", "../artifacts"] {

@@ -26,7 +26,7 @@ use flashomni::plan::{DecodeMode, SparsePlan};
 use flashomni::symbols::{HeadSymbols, LayerSymbols};
 use flashomni::tensor::Tensor;
 use flashomni::testutil::{prop_check, rand_mask, randn};
-use flashomni::trace::poisson_trace;
+use flashomni::workload::poisson_trace;
 use flashomni::util::rng::Pcg32;
 use std::sync::Arc;
 

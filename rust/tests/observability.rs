@@ -1,0 +1,324 @@
+//! Observability-layer contract tests (`rust/src/obs/`):
+//!
+//! * engine outputs are **bitwise-identical** whether the metrics/trace
+//!   knobs are on or off (telemetry must never perturb numerics);
+//! * histogram bucketing and quantile interpolation are correct on known
+//!   distributions;
+//! * the Chrome trace export is valid JSON with per-track ordering and
+//!   stack-discipline nesting, and carries the expected span vocabulary;
+//! * the Prometheus dump covers the registry after an instrumented run.
+//!
+//! The gates and the registry are process-global, so every test that
+//! flips them (or reads registry state it just produced) serializes on a
+//! file-local mutex — the library's own unit tests run in a separate
+//! process and cannot interfere.
+
+use flashomni::batch::{BatchScheduler, BatchedEngine};
+use flashomni::config::{ModelConfig, SparsityConfig};
+use flashomni::engine::{DiTEngine, Policy};
+use flashomni::model::{weights::Weights, MiniMMDiT};
+use flashomni::obs;
+use flashomni::obs::metrics::{bucket_hi, bucket_index, bucket_lo, Histogram, HIST_BUCKETS};
+use flashomni::tensor::Tensor;
+use flashomni::util::json::Json;
+use flashomni::workload::poisson_trace;
+use std::sync::Mutex;
+
+/// Serializes the tests in this binary that touch the process-global
+/// gates/registry/trace buffer.
+static GATE: Mutex<()> = Mutex::new(());
+
+fn tiny_model() -> MiniMMDiT {
+    let cfg = ModelConfig {
+        dim: 32,
+        heads: 2,
+        layers: 2,
+        text_tokens: 8,
+        patch_h: 4,
+        patch_w: 4,
+        patch_size: 2,
+        channels: 3,
+        mlp_ratio: 2,
+        vocab: 256,
+    };
+    MiniMMDiT::new(cfg.clone(), Weights::random(&cfg, 0x0b5))
+}
+
+/// A policy that exercises dense warmup, sparse Dispatch steps and plan
+/// refreshes in a 6-step run.
+fn sparse_policy() -> Policy {
+    Policy::flashomni(SparsityConfig {
+        tau_q: 0.5,
+        tau_kv: 0.2,
+        interval: 3,
+        order: 1,
+        s_q: 0.0,
+        block_q: 8,
+        block_k: 8,
+        pool: 1,
+        warmup: 2,
+        ramp_steps: 1,
+    })
+}
+
+fn solo_image(model: &MiniMMDiT) -> Tensor {
+    let mut engine = DiTEngine::new(model.clone(), sparse_policy(), 8, 8);
+    let ids: Vec<usize> = (0..model.cfg.text_tokens).map(|i| (3 * i + 1) % 256).collect();
+    engine.generate(&ids, 42, 6).image
+}
+
+fn batched_images(model: &MiniMMDiT) -> Vec<(u64, Tensor)> {
+    let trace = poisson_trace(7, 3, 1000.0, 6, model.cfg.text_tokens);
+    let mut sched =
+        BatchScheduler::with_token_budget(BatchedEngine::new(model.clone(), sparse_policy(), 8, 8, 3), 0);
+    for r in &trace {
+        sched.submit(r.clone());
+    }
+    let mut out: Vec<(u64, Tensor)> =
+        sched.run_to_completion().into_iter().map(|r| (r.id, r.image)).collect();
+    out.sort_by_key(|(id, _)| *id);
+    out
+}
+
+#[test]
+fn outputs_bitwise_identical_with_and_without_obs() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let model = tiny_model();
+
+    obs::set_metrics_enabled(Some(false));
+    obs::set_trace_enabled(Some(false));
+    let solo_off = solo_image(&model);
+    let batch_off = batched_images(&model);
+
+    obs::set_metrics_enabled(Some(true));
+    obs::set_trace_enabled(Some(true));
+    let solo_on = solo_image(&model);
+    let batch_on = batched_images(&model);
+
+    obs::set_metrics_enabled(None);
+    obs::set_trace_enabled(None);
+    flashomni::obs::trace::clear();
+
+    assert_eq!(solo_off, solo_on, "solo output must not depend on the obs gates");
+    assert_eq!(batch_off.len(), batch_on.len());
+    for ((id_a, img_a), (id_b, img_b)) in batch_off.iter().zip(&batch_on) {
+        assert_eq!(id_a, id_b);
+        assert_eq!(img_a, img_b, "batched output of request {id_a} changed under obs");
+    }
+}
+
+#[test]
+fn histogram_buckets_and_quantiles() {
+    // Pure data-structure test: a local histogram, no gate involved
+    // (`record_ns` is deliberately unconditional).
+    static H: Histogram = Histogram::new("fo_test_hist_ns", "test-only histogram");
+
+    // Bucket boundary law: bucket i covers [2^i, 2^{i+1}), 0/1 ns share
+    // bucket 0, and the top bucket absorbs everything else.
+    for i in 1..HIST_BUCKETS {
+        assert_eq!(bucket_index(bucket_lo(i)), i);
+        assert_eq!(bucket_index(bucket_hi(i) - 1), i.min(HIST_BUCKETS - 1));
+    }
+    assert_eq!(bucket_index(0), 0);
+    assert_eq!(bucket_index(1), 0);
+    assert_eq!(bucket_index(u64::MAX), HIST_BUCKETS - 1);
+
+    // Known bimodal distribution: 1000 × 100ns, 1000 × 10_000ns.
+    for _ in 0..1000 {
+        H.record_ns(100);
+    }
+    for _ in 0..1000 {
+        H.record_ns(10_000);
+    }
+    assert_eq!(H.count(), 2000);
+    assert_eq!(H.sum_ns(), 1000 * 100 + 1000 * 10_000);
+
+    // p50 must land in 100ns's bucket [64, 128); p99 in 10_000ns's bucket
+    // [8192, 16384). Interpolation stays inside the bucket bounds.
+    let p50 = H.quantile_ns(0.50);
+    assert!((64.0..=128.0).contains(&p50), "p50 = {p50}");
+    let p99 = H.quantile_ns(0.99);
+    assert!((8192.0..=16384.0).contains(&p99), "p99 = {p99}");
+    // Degenerate quantiles: q→0 stays in the lowest populated bucket,
+    // q = 1 in the highest.
+    let p0 = H.quantile_ns(0.001);
+    assert!((0.0..=128.0).contains(&p0), "p~0 = {p0}");
+    let p100 = H.quantile_ns(1.0);
+    assert!((8192.0..=16384.0).contains(&p100), "p100 = {p100}");
+    // Monotonicity across the sweep.
+    let mut last = 0.0;
+    for q in [0.1, 0.25, 0.5, 0.75, 0.9, 0.99] {
+        let v = H.quantile_ns(q);
+        assert!(v >= last, "quantiles must be monotone (q={q}: {v} < {last})");
+        last = v;
+    }
+}
+
+/// Timestamp-rounding slack in µs: ts/dur are serialized with 3 decimals
+/// (ns precision), so ends can round apart by ≤ 1ns per endpoint.
+const EPS_US: f64 = 0.005;
+
+#[test]
+fn trace_export_is_valid_nested_json() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let model = tiny_model();
+
+    obs::set_metrics_enabled(Some(false));
+    obs::set_trace_enabled(Some(true));
+    flashomni::obs::trace::clear();
+    let _ = solo_image(&model);
+    let _ = batched_images(&model);
+    obs::set_trace_enabled(None);
+    obs::set_metrics_enabled(None);
+
+    let json_text = flashomni::obs::trace::chrome_trace_json();
+    flashomni::obs::trace::clear();
+    let doc = Json::parse(&json_text).expect("trace must be valid JSON");
+
+    assert_eq!(doc.get("displayTimeUnit").and_then(|v| v.as_str()), Some("ms"));
+    let events = doc
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .expect("traceEvents array");
+    assert!(events.len() > 2, "expected events beyond the two metadata records");
+
+    // Metadata: both process tracks are named.
+    let meta: Vec<&Json> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(|v| v.as_str()) == Some("M"))
+        .collect();
+    assert_eq!(meta.len(), 2, "one process_name record per track");
+
+    // Slices: collect (pid, tid, ts, dur, name) in file order.
+    let mut names: Vec<String> = Vec::new();
+    let mut tracks: Vec<((u64, u64), Vec<(f64, f64)>)> = Vec::new();
+    for e in events {
+        if e.get("ph").and_then(|v| v.as_str()) != Some("X") {
+            continue;
+        }
+        let pid = e.req("pid").unwrap().as_f64().unwrap() as u64;
+        let tid = e.req("tid").unwrap().as_f64().unwrap() as u64;
+        let ts = e.req("ts").unwrap().as_f64().unwrap();
+        let dur = e.req("dur").unwrap().as_f64().unwrap();
+        assert!(ts >= 0.0 && dur >= 0.0);
+        names.push(e.req("name").unwrap().as_str().unwrap().to_string());
+        match tracks.iter_mut().find(|(k, _)| *k == (pid, tid)) {
+            Some((_, v)) => v.push((ts, dur)),
+            None => tracks.push(((pid, tid), vec![(ts, dur)])),
+        }
+    }
+
+    // Expected span vocabulary from a dense-warmup + sparse run.
+    for expected in [
+        "engine.step",
+        "model.embed",
+        "model.decode",
+        "attention.dense",
+        "gemm_q.dense",
+        "gemm_o.dense",
+        "mlp.dense",
+        "request.queue_wait",
+        "request.exec",
+    ] {
+        assert!(
+            names.iter().any(|n| n == expected),
+            "span name {expected:?} missing from the trace (got {names:?})"
+        );
+    }
+
+    // Per-track ordering + stack-discipline nesting: slices on one track
+    // are sorted by start time, and each slice is either disjoint from or
+    // fully contained in the enclosing one.
+    for ((pid, tid), slices) in &tracks {
+        let mut stack: Vec<f64> = Vec::new(); // enclosing end timestamps
+        let mut last_ts = f64::NEG_INFINITY;
+        for &(ts, dur) in slices {
+            assert!(
+                ts >= last_ts,
+                "track ({pid},{tid}): slices out of order ({ts} after {last_ts})"
+            );
+            last_ts = ts;
+            let end = ts + dur;
+            while let Some(&top) = stack.last() {
+                if ts >= top - EPS_US {
+                    stack.pop();
+                } else {
+                    break;
+                }
+            }
+            if let Some(&top) = stack.last() {
+                assert!(
+                    end <= top + EPS_US,
+                    "track ({pid},{tid}): slice [{ts}, {end}] straddles its enclosing \
+                     slice ending at {top}"
+                );
+            }
+            stack.push(end);
+        }
+    }
+
+    // Request-lifecycle slices ride the dedicated track with tid = id.
+    let request_tids: Vec<u64> = tracks
+        .iter()
+        .filter(|((pid, _), _)| *pid == flashomni::obs::trace::PID_REQUESTS as u64)
+        .map(|((_, tid), _)| *tid)
+        .collect();
+    assert!(
+        !request_tids.is_empty() && request_tids.iter().all(|t| *t < 3),
+        "request track must carry tid = request id (got {request_tids:?})"
+    );
+}
+
+#[test]
+fn prometheus_dump_covers_registry_after_instrumented_run() {
+    let _g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    let model = tiny_model();
+
+    obs::reset_metrics();
+    obs::set_trace_enabled(Some(false));
+    obs::set_metrics_enabled(Some(true));
+    let _ = solo_image(&model);
+    let _ = batched_images(&model);
+    let steps = flashomni::obs::metrics::ENGINE_STEPS.get();
+    let frac = obs::accounted_step_fraction();
+    let text = obs::prometheus_text();
+    obs::set_metrics_enabled(None);
+    obs::set_trace_enabled(None);
+    obs::reset_metrics();
+
+    assert!(steps > 0, "instrumented run must count engine steps");
+    // Accounted kernel regions are sub-intervals of engine.step, so the
+    // coverage fraction is positive and cannot meaningfully exceed 1.
+    assert!(frac > 0.0 && frac <= 1.05, "accounted step fraction {frac}");
+
+    // Exposition-format shape: HELP/TYPE pairs and samples for every
+    // instrument, cumulative buckets capped by +Inf.
+    for name in [
+        "fo_engine_steps_total",
+        "fo_requests_enqueued_total",
+        "fo_requests_admitted_total",
+        "fo_requests_retired_total",
+        "fo_plan_cache_misses_total",
+        "fo_engine_step_ns",
+        "fo_kernel_attention_dense_ns",
+        "fo_model_embed_ns",
+        "fo_request_exec_ns",
+    ] {
+        assert!(text.contains(&format!("# HELP {name} ")), "missing HELP for {name}");
+        assert!(text.contains(&format!("# TYPE {name} ")), "missing TYPE for {name}");
+    }
+    assert!(text.contains("fo_engine_step_ns_bucket{le=\"+Inf\"}"));
+    assert!(text.contains("fo_engine_step_ns_count"));
+    assert!(text.contains("fo_engine_step_ns_sum"));
+    // Every non-comment line is `name[{labels}] value`.
+    for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+        let mut parts = line.rsplitn(2, ' ');
+        let value = parts.next().unwrap();
+        let name = parts.next().unwrap_or("");
+        assert!(!name.is_empty(), "malformed sample line: {line:?}");
+        assert!(
+            value.parse::<f64>().is_ok(),
+            "sample value not numeric in line: {line:?}"
+        );
+    }
+}

@@ -135,7 +135,7 @@ fn pjrt_generator_matches_native_dense_generation() {
     let Some(dir) = artifacts_dir() else { return };
     let gen = flashomni::runtime::PjRtGenerator::load(&dir).unwrap();
     let model = MiniMMDiT::load(&format!("{dir}/weights.fot")).unwrap();
-    let ids: Vec<usize> = flashomni::trace::caption_ids(7, model.cfg.text_tokens);
+    let ids: Vec<usize> = flashomni::workload::caption_ids(7, model.cfg.text_tokens);
     let steps = 6;
     let (oracle_img, wall) = gen.generate(&ids, 3, steps).unwrap();
     assert!(wall > 0.0);

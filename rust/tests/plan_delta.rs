@@ -26,7 +26,7 @@ use flashomni::plan::cache::symbol_key;
 use flashomni::plan::{DecodeMode, PlanDelta, SparsePlan};
 use flashomni::symbols::{HeadSymbols, LayerSymbols};
 use flashomni::testutil::{prop_check, rand_mask};
-use flashomni::trace::{caption_ids, Request};
+use flashomni::workload::{caption_ids, Request};
 use flashomni::util::rng::Pcg32;
 use std::time::Instant;
 

@@ -25,7 +25,7 @@ use flashomni::plan::{DecodeMode, SparsePlan};
 use flashomni::symbols::{HeadSymbols, LayerSymbols};
 use flashomni::tensor::Tensor;
 use flashomni::testutil::{prop_check, rand_mask, randn};
-use flashomni::trace::{caption_ids, Request};
+use flashomni::workload::{caption_ids, Request};
 use flashomni::util::rng::Pcg32;
 use std::time::Instant;
 

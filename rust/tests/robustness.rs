@@ -6,7 +6,7 @@ use flashomni::config::{ModelConfig, SparsityConfig};
 use flashomni::coordinator::{Coordinator, ServeReport};
 use flashomni::engine::{DiTEngine, Policy};
 use flashomni::model::{weights::Weights, MiniMMDiT};
-use flashomni::trace::{poisson_trace, Request};
+use flashomni::workload::{poisson_trace, Request};
 use flashomni::util::fot::FotFile;
 use flashomni::util::json::Json;
 use flashomni::util::rng::Pcg32;
