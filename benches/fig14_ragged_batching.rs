@@ -116,14 +116,12 @@ struct Scenario {
 }
 
 /// Nearest-rank percentile over an unsorted sample (0.0 when empty —
-/// the solo scenario has no scheduler data).
+/// the solo scenario has no scheduler data). Routes through the shared
+/// NaN-safe helper instead of a local truncating-rank copy.
 fn pct(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
-        return 0.0;
-    }
     let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    s[((s.len() as f64 - 1.0) * p) as usize]
+    s.sort_by(f64::total_cmp);
+    flashomni::report::percentile_sorted(&s, p)
 }
 
 /// Drive one engine to completion, sampling token occupancy per tick,

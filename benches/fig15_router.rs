@@ -1,0 +1,412 @@
+//! Figure 15 (repo extension) — **router serving under offered load**:
+//! sustained throughput, tail latency, shed rate and deadline-miss rate
+//! as Poisson arrivals sweep multiples of measured capacity.
+//!
+//! Setup: a [`Router`] (admission-controlled front-end: in-flight permit
+//! cap `FO_MAX_IN_FLIGHT`, bounded queue `FO_QUEUE_CAP`, claim-time
+//! deadlines, streaming previews every `FO_PREVIEW_INTERVAL` steps) over
+//! `FO_WORKERS` continuous-batching workers. Capacity is calibrated from
+//! a solo run (`capacity ≈ workers / mean solo seconds`), then each
+//! `FO_LOADS` multiple replays a Poisson trace at `mult × capacity`
+//! request/s, honoring arrival times.
+//!
+//! Two gates run before timing:
+//! * **preview prefix gate** — every preview streamed by the router is
+//!   bitwise-identical to a solo `DiTEngine` run truncated at the same
+//!   step (previews are prefixes of the final decode);
+//! * **burst shed gate** — a back-to-back burst of
+//!   `max_in_flight + queue_cap + 4` submits must shed (> 0) instead of
+//!   queueing without bound.
+//!
+//! Emits `BENCH_fig15.json`: one row per case. Row schema (custom,
+//! documented here and in `docs/benchmarks.md`):
+//! `{case, offered_x, rate_rps, requests, completed, shed, shed_rate,
+//! deadline_miss, deadline_miss_rate, previews, wall_s, req_per_s,
+//! p50_s, p95_s, p99_s, p50_queue_s, p95_queue_s, p99_queue_s,
+//! p50_exec_s, p95_exec_s, p99_exec_s, plan_cache_hits,
+//! plan_cache_misses, plan_cache_shared, plan_cache_delta}`.
+//!
+//! Env: FO_WORKERS (default 2), FO_BATCH (max batch per worker, default
+//! 4), FO_REQUESTS (requests per load point, default 24), FO_STEPS
+//! (default 8), FO_LAYERS (default 2), FO_MAX_IN_FLIGHT / FO_QUEUE_CAP /
+//! FO_PREVIEW_INTERVAL (router knobs; defaults from `RouterConfig`),
+//! FO_DEADLINE_MS (0 = derive 8× solo latency), FO_LOADS (comma list of
+//! offered-load multiples, default "0.5,1,2,4").
+//! Knobs + the `BENCH_fig15.json` schema: `docs/benchmarks.md`.
+//!
+//! [`Router`]: flashomni::router::Router
+
+use flashomni::bench::{write_bench_json_tagged, PlanCacheCounters};
+use flashomni::config::{ModelConfig, SparsityConfig};
+use flashomni::coordinator::{Response, ServeReport};
+use flashomni::diffusion::{initial_noise, plan_steps, time_grid};
+use flashomni::engine::{DiTEngine, Policy};
+use flashomni::exec::ExecPool;
+use flashomni::model::{weights::Weights, MiniMMDiT};
+use flashomni::router::{Rejected, Router, RouterConfig, SubmitOptions};
+use flashomni::workload::{caption_ids, poisson_trace, Request};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn build_model(layers: usize) -> MiniMMDiT {
+    let cfg = ModelConfig {
+        dim: 64,
+        heads: 4,
+        layers,
+        text_tokens: 8,
+        patch_h: 8,
+        patch_w: 8,
+        patch_size: 2,
+        channels: 3,
+        mlp_ratio: 2,
+        vocab: 256,
+    };
+    MiniMMDiT::new(cfg.clone(), Weights::random(&cfg, 0xf15))
+}
+
+fn policy() -> Policy {
+    Policy::flashomni(SparsityConfig {
+        tau_q: 0.5,
+        tau_kv: 0.2,
+        interval: 3,
+        order: 1,
+        s_q: 0.0,
+        block_q: 8,
+        block_k: 8,
+        pool: 1,
+        warmup: 2,
+        ramp_steps: 1,
+    })
+}
+
+fn engine_factory(
+    model: &MiniMMDiT,
+    pol: &Policy,
+) -> impl Fn(usize) -> DiTEngine + Send + Sync + 'static {
+    let m = model.clone();
+    let p = pol.clone();
+    move |_wid| DiTEngine::new(MiniMMDiT::new(m.cfg.clone(), m.w.clone()), p.clone(), 8, 8)
+}
+
+/// Outcome of one router run over a trace.
+struct Outcome {
+    completed: Vec<Response>,
+    shed: usize,
+    deadline_miss: usize,
+    panicked: usize,
+    previews: usize,
+    wall_s: f64,
+}
+
+/// Replay `trace` through a fresh router, honoring `arrival_s` offsets.
+/// One collector thread per accepted handle drains previews + terminal.
+fn run_load(
+    model: &MiniMMDiT,
+    pol: &Policy,
+    cfg: RouterConfig,
+    trace: &[Request],
+    deadline: Option<Duration>,
+) -> Outcome {
+    let router = Router::start(engine_factory(model, pol), cfg);
+    type Slot = (Result<Response, Rejected>, usize);
+    let results: Arc<Mutex<Vec<Slot>>> = Arc::new(Mutex::new(Vec::new()));
+    let mut joins = Vec::new();
+    let mut shed = 0usize;
+    let t0 = Instant::now();
+    for req in trace {
+        let target = req.arrival_s;
+        let now = t0.elapsed().as_secs_f64();
+        if target > now {
+            std::thread::sleep(Duration::from_secs_f64(target - now));
+        }
+        let mut opts = SubmitOptions::interactive();
+        if let Some(d) = deadline {
+            opts = opts.with_deadline(d);
+        }
+        match router.submit(req.clone(), opts) {
+            Ok(h) => {
+                let results = Arc::clone(&results);
+                joins.push(std::thread::spawn(move || {
+                    let (r, previews) = h.wait();
+                    results.lock().unwrap().push((r, previews.len()));
+                }));
+            }
+            Err(Rejected::Overloaded { .. }) => shed += 1,
+            Err(e) => panic!("unexpected submit-time rejection: {e}"),
+        }
+    }
+    for j in joins {
+        j.join().expect("collector thread");
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    router.shutdown();
+    let mut out = Outcome {
+        completed: Vec::new(),
+        shed,
+        deadline_miss: 0,
+        panicked: 0,
+        previews: 0,
+        wall_s,
+    };
+    let collected = std::mem::take(&mut *results.lock().unwrap());
+    for (r, previews) in collected {
+        out.previews += previews;
+        match r {
+            Ok(resp) => out.completed.push(resp),
+            Err(Rejected::DeadlineExceeded { .. }) => out.deadline_miss += 1,
+            Err(Rejected::WorkerPanicked { .. }) => out.panicked += 1,
+            Err(e) => panic!("unexpected terminal rejection: {e}"),
+        }
+    }
+    out
+}
+
+/// Preview prefix gate: the router's streamed previews must be bitwise
+/// prefixes of the final decode (solo reference truncated at each step).
+fn preview_prefix_gate(model: &MiniMMDiT, pol: &Policy) {
+    let steps = 7;
+    let (warmup, interval) = pol.schedule();
+    let mut cfg = RouterConfig::new(1, 1);
+    cfg.preview_interval = 2;
+    let router = Router::start(engine_factory(model, pol), cfg);
+    let req = Request {
+        id: 0,
+        scene: 3,
+        prompt_ids: caption_ids(3, model.cfg.text_tokens),
+        seed: 77,
+        steps,
+        arrival_s: 0.0,
+        patch_hw: None,
+    };
+    let handle = router.submit(req.clone(), SubmitOptions::interactive()).expect("admitted");
+    let (result, previews) = handle.wait();
+    let resp = result.expect("gate request must complete");
+    router.shutdown();
+    assert!(!previews.is_empty(), "preview interval 2 over {steps} steps must stream previews");
+    let grid = time_grid(steps);
+    let plan = plan_steps(steps, warmup.min(steps), interval);
+    for p in &previews {
+        let mut solo = DiTEngine::new(
+            MiniMMDiT::new(model.cfg.clone(), model.w.clone()),
+            pol.clone(),
+            8,
+            8,
+        );
+        let x = initial_noise(&model.cfg, req.seed);
+        let prefix =
+            solo.generate_with_grid(&req.prompt_ids, x, &grid[..=p.step], &plan[..p.step]);
+        assert_eq!(
+            p.image, prefix.image,
+            "preview at step {} is not a bitwise prefix of the final decode",
+            p.step
+        );
+    }
+    let mut solo = DiTEngine::new(
+        MiniMMDiT::new(model.cfg.clone(), model.w.clone()),
+        pol.clone(),
+        8,
+        8,
+    );
+    let full = solo.generate(&req.prompt_ids, req.seed, steps);
+    assert_eq!(resp.image, full.image, "router result must equal the solo run");
+    println!("preview prefix gate: OK ({} previews, all bitwise)", previews.len());
+}
+
+fn main() {
+    let workers = env_usize("FO_WORKERS", 2);
+    let max_batch = env_usize("FO_BATCH", 4);
+    let n_req = env_usize("FO_REQUESTS", 24);
+    let steps = env_usize("FO_STEPS", 8);
+    let layers = env_usize("FO_LAYERS", 2);
+    let model = build_model(layers);
+    let pol = policy();
+    let router_cfg = RouterConfig::from_env(workers, max_batch);
+
+    println!(
+        "# Figure 15 — router serving: workers={workers} max_batch={max_batch} \
+         in_flight_cap={} queue_cap={} preview_every={} ({n_req} req × {steps} steps, {layers} layers)",
+        router_cfg.max_in_flight, router_cfg.queue_cap, router_cfg.preview_interval
+    );
+
+    // Correctness gate before any timing.
+    preview_prefix_gate(&model, &pol);
+
+    // Capacity calibration: mean solo seconds per request → capacity.
+    let solo_s = {
+        let mut e = DiTEngine::new(
+            MiniMMDiT::new(model.cfg.clone(), model.w.clone()),
+            pol.clone(),
+            8,
+            8,
+        );
+        let t0 = Instant::now();
+        let cal = 2;
+        for i in 0..cal {
+            let _ = e.generate(&caption_ids(1 + i, model.cfg.text_tokens), 10 + i as u64, steps);
+        }
+        t0.elapsed().as_secs_f64() / cal as f64
+    };
+    let capacity_rps = workers as f64 / solo_s.max(1e-9);
+    let deadline_ms = {
+        let v = env_usize("FO_DEADLINE_MS", 0);
+        if v == 0 { ((solo_s * 8.0) * 1000.0).max(1.0) as usize } else { v }
+    };
+    println!(
+        "calibration: solo {solo_s:.4}s/req → capacity ≈ {capacity_rps:.3} req/s; \
+         deadline {deadline_ms} ms"
+    );
+
+    let loads: Vec<f64> = std::env::var("FO_LOADS")
+        .unwrap_or_else(|_| "0.5,1,2,4".to_string())
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+
+    let mut json_rows: Vec<String> = Vec::new();
+    let mut push_row = |case: &str, offered_x: f64, rate: f64, requests: usize, o: &Outcome| {
+        let total = requests as f64;
+        let report = if o.completed.is_empty() {
+            None
+        } else {
+            Some(ServeReport::from_responses(&o.completed, o.wall_s))
+        };
+        let pick = |f: fn(&ServeReport) -> f64| report.as_ref().map(f).unwrap_or(0.0);
+        let counters = PlanCacheCounters {
+            hits: o.completed.iter().map(|r| r.stats.plan_cache_hits).sum(),
+            misses: o.completed.iter().map(|r| r.stats.plan_cache_misses).sum(),
+            shared: o.completed.iter().map(|r| r.stats.plan_cache_shared).sum(),
+            delta: o.completed.iter().map(|r| r.stats.plan_cache_delta).sum(),
+        };
+        println!(
+            "fig15 {case:<10} offered={offered_x:>4.1}x rate={rate:>7.3}/s served={:<3} \
+             shed={:<3} miss={:<3} previews={:<4} p50={:.3}s p99={:.3}s",
+            o.completed.len(),
+            o.shed,
+            o.deadline_miss,
+            o.previews,
+            pick(|r| r.p50_latency_s),
+            pick(|r| r.p99_latency_s),
+        );
+        json_rows.push(format!(
+            "{{\"case\":\"{case}\",\"offered_x\":{offered_x:.3},\"rate_rps\":{rate:.4},\
+             \"requests\":{requests},\"completed\":{},\"shed\":{},\"shed_rate\":{:.4},\
+             \"deadline_miss\":{},\"deadline_miss_rate\":{:.4},\"previews\":{},\
+             \"wall_s\":{:.6},\"req_per_s\":{:.4},\
+             \"p50_s\":{:.6},\"p95_s\":{:.6},\"p99_s\":{:.6},\
+             \"p50_queue_s\":{:.6},\"p95_queue_s\":{:.6},\"p99_queue_s\":{:.6},\
+             \"p50_exec_s\":{:.6},\"p95_exec_s\":{:.6},\"p99_exec_s\":{:.6},\
+             \"plan_cache_hits\":{},\"plan_cache_misses\":{},\
+             \"plan_cache_shared\":{},\"plan_cache_delta\":{}}}",
+            o.completed.len(),
+            o.shed,
+            o.shed as f64 / total.max(1.0),
+            o.deadline_miss,
+            o.deadline_miss as f64 / total.max(1.0),
+            o.previews,
+            o.wall_s,
+            o.completed.len() as f64 / o.wall_s.max(1e-9),
+            pick(|r| r.p50_latency_s),
+            pick(|r| r.p95_latency_s),
+            pick(|r| r.p99_latency_s),
+            pick(|r| r.p50_queue_s),
+            pick(|r| r.p95_queue_s),
+            pick(|r| r.p99_queue_s),
+            pick(|r| r.p50_exec_s),
+            pick(|r| r.p95_exec_s),
+            pick(|r| r.p99_exec_s),
+            counters.hits,
+            counters.misses,
+            counters.shared,
+            counters.delta,
+        ));
+    };
+
+    // Burst shed gate: max_in_flight + queue_cap + 4 back-to-back submits
+    // cannot all be admitted — load shedding must engage (deterministic:
+    // permits only free when a request finishes, which takes real work).
+    {
+        let burst_n = router_cfg.max_in_flight + router_cfg.queue_cap + 4;
+        let trace: Vec<Request> = (0..burst_n as u64)
+            .map(|i| Request {
+                id: i,
+                scene: 1 + i as usize,
+                prompt_ids: caption_ids(1 + i as usize, model.cfg.text_tokens),
+                seed: i,
+                steps,
+                arrival_s: 0.0,
+                patch_hw: None,
+            })
+            .collect();
+        let o = run_load(&model, &pol, router_cfg, &trace, None);
+        assert!(o.shed > 0, "a burst past in-flight + queue capacity must shed");
+        assert_eq!(o.completed.len() + o.shed + o.deadline_miss + o.panicked, burst_n);
+        assert_eq!(o.panicked, 0);
+        push_row("burst", 0.0, 0.0, burst_n, &o);
+    }
+
+    // Offered-load sweep: Poisson arrivals at multiples of capacity.
+    for (li, &mult) in loads.iter().enumerate() {
+        let rate = (capacity_rps * mult).max(1e-3);
+        let trace = poisson_trace(0xf15 + li as u64, n_req, rate, steps, model.cfg.text_tokens);
+        let o = run_load(
+            &model,
+            &pol,
+            router_cfg,
+            &trace,
+            Some(Duration::from_millis(deadline_ms as u64)),
+        );
+        assert_eq!(o.completed.len() + o.shed + o.deadline_miss + o.panicked, n_req);
+        assert_eq!(o.panicked, 0, "no worker may panic during the sweep");
+        if router_cfg.preview_interval > 0
+            && router_cfg.preview_interval < steps
+            && !o.completed.is_empty()
+        {
+            assert!(o.previews > 0, "previews enabled but none streamed");
+        }
+        push_row(&format!("load_{mult}x"), mult, rate, n_req, &o);
+    }
+
+    let tune_cache = flashomni::kernels::tune::cache_path().unwrap_or_default();
+    match write_bench_json_tagged(
+        "BENCH_fig15.json",
+        "fig15_router",
+        &[
+            ("requests", n_req as f64),
+            ("steps", steps as f64),
+            ("layers", layers as f64),
+            ("workers", workers as f64),
+            ("max_batch", max_batch as f64),
+            ("max_in_flight", router_cfg.max_in_flight as f64),
+            ("queue_cap", router_cfg.queue_cap as f64),
+            ("preview_interval", router_cfg.preview_interval as f64),
+            ("deadline_ms", deadline_ms as f64),
+            ("capacity_rps", capacity_rps),
+            ("solo_s", solo_s),
+            ("dim", model.cfg.dim as f64),
+            ("heads", model.cfg.heads as f64),
+            ("seq", model.cfg.seq_len() as f64),
+            ("exec_pool_threads", ExecPool::global().size() as f64),
+        ],
+        &[
+            (
+                "isa",
+                flashomni::kernels::microkernel::isa_name(
+                    flashomni::kernels::microkernel::active(),
+                ),
+            ),
+            ("fo_tune_cache", &tune_cache),
+        ],
+        &json_rows,
+    ) {
+        Ok(()) => println!("\nwrote BENCH_fig15.json ({} rows)", json_rows.len()),
+        Err(e) => eprintln!("could not write BENCH_fig15.json: {e}"),
+    }
+
+    for p in flashomni::obs::export_if_enabled() {
+        println!("wrote {p}");
+    }
+}

@@ -50,6 +50,26 @@ pub struct BatchResult {
     pub batch_size: usize,
 }
 
+/// A streaming preview: the decode of an in-flight request's latent after
+/// `step` of `steps` denoising steps. Because the sampler trajectory is
+/// deterministic and causal (each step depends only on earlier state),
+/// the preview is **bitwise-identical** to what a solo run decoded after
+/// the same step prefix — previews are prefixes of the final decode, the
+/// diffusion-native analogue of token streaming.
+#[derive(Clone, Debug)]
+pub struct Preview {
+    /// Request id (as submitted).
+    pub id: u64,
+    /// Scene/prompt id of the request.
+    pub scene: usize,
+    /// Denoising steps completed when this preview was decoded.
+    pub step: usize,
+    /// Total steps the request will run.
+    pub steps: usize,
+    /// `[H × W × C]` decode of the current latent.
+    pub image: Tensor,
+}
+
 /// One in-flight request: its own denoising state, policy clone, and
 /// per-layer engine state — everything a solo `DiTEngine::generate` would
 /// hold, minus the model/panels/pool, which the batch shares.
@@ -128,6 +148,11 @@ pub struct BatchedEngine {
     /// Delta-compile refreshes that miss the shared cache but row-diff
     /// against the slot's previous plan (on by default).
     delta_enabled: bool,
+    /// Emit a [`Preview`] every `preview_interval` completed steps
+    /// (0 = previews off, the default).
+    preview_interval: usize,
+    /// Previews decoded since the last [`Self::take_previews`] drain.
+    previews: Vec<Preview>,
 }
 
 impl BatchedEngine {
@@ -164,6 +189,8 @@ impl BatchedEngine {
             slots: Vec::new(),
             max_batch: max_batch.max(1),
             delta_enabled: true,
+            preview_interval: 0,
+            previews: Vec::new(),
         }
     }
 
@@ -183,7 +210,28 @@ impl BatchedEngine {
             slots: Vec::new(),
             max_batch: max_batch.max(1),
             delta_enabled: true,
+            preview_interval: 0,
+            previews: Vec::new(),
         }
+    }
+
+    /// Emit a streaming [`Preview`] every `k` completed denoising steps
+    /// for every in-flight request (0 disables previews — the default).
+    /// The final step never emits a preview: its decode *is* the
+    /// [`BatchResult`] image delivered at retirement.
+    pub fn set_preview_interval(&mut self, k: usize) {
+        self.preview_interval = k;
+    }
+
+    /// The configured preview interval (0 = previews off).
+    pub fn preview_interval(&self) -> usize {
+        self.preview_interval
+    }
+
+    /// Drain the previews decoded since the last call, in emission order
+    /// (by lockstep step, then slot order within a step).
+    pub fn take_previews(&mut self) -> Vec<Preview> {
+        std::mem::take(&mut self.previews)
     }
 
     /// Enable/disable incremental plan recompiles for this batch (on by
@@ -439,6 +487,25 @@ impl BatchedEngine {
                 dp as f64 / dtot as f64
             });
             slot.step += 1;
+            // Streaming preview: decode the current latent every K
+            // completed steps. `unpatchify` is exactly the retirement
+            // decode, so emitting it here (and the final image at retire)
+            // makes every preview a bitwise prefix of the final decode.
+            if self.preview_interval > 0
+                && slot.step < slot.req.steps
+                && slot.step % self.preview_interval == 0
+            {
+                let _sp =
+                    Span::enter("request.preview", &obs::metrics::REQUEST_PREVIEW_DECODE);
+                self.previews.push(Preview {
+                    id: slot.req.id,
+                    scene: slot.req.scene,
+                    step: slot.step,
+                    steps: slot.req.steps,
+                    image: unpatchify(&slot.x, &slot.cfg),
+                });
+                obs::metrics::REQUESTS_PREVIEW.inc();
+            }
         }
         finished.extend(self.retire_finished());
         finished

@@ -45,12 +45,23 @@
 //!   boundaries** (every in-flight slot about to run a Full step, so no
 //!   Dispatch window is broken mid-flight), and finished requests retire
 //!   without stalling the rest of the batch, returning their tokens to
-//!   the budget immediately.
+//!   the budget immediately. Requests may carry an absolute **deadline**:
+//!   a pending request past it is dropped at the next tick ([`Expired`],
+//!   drained via `take_expired`) before it can consume a batch slot — an
+//!   admitted request is never killed mid-refresh.
+//! * Streaming **previews** ([`Preview`]): with a nonzero preview
+//!   interval, the engine decodes each in-flight latent every K completed
+//!   steps. The decode is exactly the retirement decode, so previews are
+//!   bitwise prefixes of the final image — the diffusion-native analogue
+//!   of token streaming, surfaced per request by the
+//!   [`Router`](crate::router::Router).
 //!
 //! The serving [`Coordinator`](crate::coordinator) feeds each worker's
 //! scheduler from the shared request queue and hands every worker one
 //! `SharedPlanCache`, so plan compiles are shared across requests *and*
-//! across workers.
+//! across workers. The [`Router`](crate::router::Router) layers admission
+//! control (in-flight cap, bounded queue, load shedding, priorities,
+//! deadlines) on the same scheduler.
 //!
 //! [`DiTEngine`]: crate::engine::DiTEngine
 
@@ -59,5 +70,5 @@
 mod engine;
 mod scheduler;
 
-pub use engine::{BatchResult, BatchedEngine};
-pub use scheduler::BatchScheduler;
+pub use engine::{BatchResult, BatchedEngine, Preview};
+pub use scheduler::{BatchScheduler, Expired};

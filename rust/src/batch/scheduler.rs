@@ -22,17 +22,40 @@
 //! without stalling the rest of the batch, and their tokens return to the
 //! budget immediately.
 
-use super::engine::{BatchResult, BatchedEngine};
+use super::engine::{BatchResult, BatchedEngine, Preview};
 use crate::workload::Request;
 use std::collections::VecDeque;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// A queued request waiting for admission.
+struct PendingReq {
+    req: Request,
+    enqueued: Instant,
+    /// Absolute deadline; an entry still pending past it retires unserved
+    /// (checked every tick, **before** it can consume a batch slot — an
+    /// already-admitted request is never killed mid-refresh).
+    deadline: Option<Instant>,
+}
+
+/// A pending request that retired unserved because its deadline expired
+/// before it reached a batch slot.
+#[derive(Clone, Debug)]
+pub struct Expired {
+    /// The request that missed its deadline.
+    pub req: Request,
+    /// How long it waited in the pending queue before expiring.
+    pub waited: Duration,
+}
 
 /// Continuous-batching scheduler over one batched engine.
 pub struct BatchScheduler {
     engine: BatchedEngine,
-    pending: VecDeque<(Request, Instant)>,
+    pending: VecDeque<PendingReq>,
     /// Max total in-flight tokens (0 = unbounded).
     token_budget: usize,
+    /// Deadline-expired pending requests since the last
+    /// [`Self::take_expired`] drain.
+    expired: Vec<Expired>,
 }
 
 impl BatchScheduler {
@@ -49,7 +72,7 @@ impl BatchScheduler {
     /// Scheduler with an explicit token budget (0 = unbounded), ignoring
     /// `FO_TOKEN_BUDGET`.
     pub fn with_token_budget(engine: BatchedEngine, token_budget: usize) -> Self {
-        BatchScheduler { engine, pending: VecDeque::new(), token_budget }
+        BatchScheduler { engine, pending: VecDeque::new(), token_budget, expired: Vec::new() }
     }
 
     /// Enqueue a request (enqueue time = now).
@@ -62,7 +85,21 @@ impl BatchScheduler {
     /// coordinator passes the time the request entered its shared queue,
     /// so queue-wait accounting spans both queues).
     pub fn submit_at(&mut self, req: Request, enqueued: Instant) {
-        self.pending.push_back((req, enqueued));
+        self.submit_with_deadline(req, enqueued, None);
+    }
+
+    /// Enqueue a request with an explicit enqueue timestamp and an
+    /// optional absolute deadline. A pending request past its deadline is
+    /// dropped at the next tick — it never consumes a batch slot — and
+    /// surfaces through [`Self::take_expired`]; once admitted, a request
+    /// always runs to completion (deadlines are claim-time only).
+    pub fn submit_with_deadline(
+        &mut self,
+        req: Request,
+        enqueued: Instant,
+        deadline: Option<Instant>,
+    ) {
+        self.pending.push_back(PendingReq { req, enqueued, deadline });
     }
 
     /// In-flight request count.
@@ -84,7 +121,7 @@ impl BatchScheduler {
     /// request when the engine is empty. Kept for diagnostics; the packer
     /// no longer buckets admissions by it.
     pub fn bucket_steps(&self) -> Option<usize> {
-        self.engine.bucket_steps().or_else(|| self.pending.front().map(|(r, _)| r.steps))
+        self.engine.bucket_steps().or_else(|| self.pending.front().map(|p| p.req.steps))
     }
 
     /// The configured max total in-flight tokens (0 = unbounded).
@@ -114,18 +151,59 @@ impl BatchScheduler {
     fn admit_ready(&mut self) {
         while self.engine.can_admit() {
             match self.pending.front() {
-                Some((r, _)) if self.front_fits(r) => {
-                    let (req, enqueued) = self.pending.pop_front().unwrap();
-                    self.engine.admit(req, enqueued);
+                Some(p) if self.front_fits(&p.req) => {
+                    let p = self.pending.pop_front().unwrap();
+                    self.engine.admit(p.req, p.enqueued);
                 }
                 _ => break,
             }
         }
     }
 
-    /// One scheduler tick: admit what can be admitted, then advance the
-    /// batch one lockstep step. Returns the requests that finished.
+    /// Drop every pending request whose deadline has passed (an expired
+    /// entry at the *front* of the queue also releases its head-of-line
+    /// claim on the token budget, unblocking the requests behind it).
+    /// Runs every tick, so expiry is checked before a slot is consumed
+    /// and never interrupts an in-flight request.
+    fn expire_pending(&mut self) {
+        let now = Instant::now();
+        let mut kept: VecDeque<PendingReq> = VecDeque::with_capacity(self.pending.len());
+        for p in self.pending.drain(..) {
+            match p.deadline {
+                Some(d) if d <= now => {
+                    let waited = now.saturating_duration_since(p.enqueued);
+                    crate::obs::metrics::REQUESTS_DEADLINE_MISS.inc();
+                    crate::obs::trace::push_request_slice(
+                        "request.deadline_miss",
+                        p.req.id,
+                        p.enqueued,
+                        waited,
+                    );
+                    self.expired.push(Expired { req: p.req, waited });
+                }
+                _ => kept.push_back(p),
+            }
+        }
+        self.pending = kept;
+    }
+
+    /// Drain the pending requests that missed their deadline since the
+    /// last call (in expiry order).
+    pub fn take_expired(&mut self) -> Vec<Expired> {
+        std::mem::take(&mut self.expired)
+    }
+
+    /// Drain the streaming previews the engine decoded since the last
+    /// call (see [`BatchedEngine::take_previews`]).
+    pub fn take_previews(&mut self) -> Vec<Preview> {
+        self.engine.take_previews()
+    }
+
+    /// One scheduler tick: retire deadline-expired pending requests,
+    /// admit what can be admitted, then advance the batch one lockstep
+    /// step. Returns the requests that finished.
     pub fn step(&mut self) -> Vec<BatchResult> {
+        self.expire_pending();
         self.admit_ready();
         self.engine.step_forward()
     }

@@ -27,6 +27,16 @@
 //! worker only exits once the queue is empty and its batch has retired,
 //! so every submitted request still gets served.
 //!
+//! Workers are **panic-isolated**: each engine step runs under
+//! `catch_unwind`, so a request that trips an engine assertion (bad vocab
+//! id, NaN latent, …) fails *that worker's current batch* instead of the
+//! process. The worker reports every in-flight/pending request it owned
+//! as [`Rejected::WorkerPanicked`](crate::router::Rejected) on the result
+//! channel, rebuilds its engine from the factory, and keeps serving.
+//! Queue locks go through the poison-recovering helpers in
+//! [`crate::util::sync`], so even a panic elsewhere never cascades into
+//! `close()`/`Drop` re-panicking — shutdown always drains.
+//!
 //! Worker engines default to the process-wide
 //! [`ExecPool`](crate::exec::ExecPool), so N workers × H attention heads
 //! share one fixed thread set instead of oversubscribing N×H scoped
@@ -36,9 +46,13 @@
 use crate::batch::{BatchScheduler, BatchedEngine};
 use crate::engine::{DiTEngine, LayerPlans, RunStats};
 use crate::plan::cache::SharedPlanCache;
+use crate::report::percentiles;
+use crate::router::Rejected;
 use crate::tensor::Tensor;
+use crate::util::sync::{lock_recover, wait_recover};
 use crate::workload::Request;
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -93,10 +107,26 @@ fn claim_upto(q: &mut VecDeque<Job>, room: usize) -> Vec<Job> {
     q.drain(..take).collect()
 }
 
+/// Per-request serving outcome: the response, or why it never produced
+/// one (today only [`Rejected::WorkerPanicked`]; the router adds shed and
+/// deadline rejections on top of the same type).
+pub type RequestResult = Result<Response, Rejected>;
+
+/// Extract a human-readable message from a `catch_unwind` payload.
+pub(crate) fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker panicked (non-string payload)".to_string()
+    }
+}
+
 /// Worker-pool coordinator.
 pub struct Coordinator {
     shared: Arc<Shared>,
-    out_rx: std::sync::mpsc::Receiver<Response>,
+    out_rx: std::sync::mpsc::Receiver<(u64, RequestResult)>,
     handles: Vec<JoinHandle<()>>,
 }
 
@@ -115,7 +145,7 @@ impl Coordinator {
             cv: Condvar::new(),
             closed: AtomicBool::new(false),
         });
-        let (out_tx, out_rx) = std::sync::mpsc::channel::<Response>();
+        let (out_tx, out_rx) = std::sync::mpsc::channel::<(u64, RequestResult)>();
         let factory = Arc::new(factory);
         let plan_cache: SharedPlanCache<LayerPlans> =
             SharedPlanCache::new(COORD_PLAN_CACHE_CAP);
@@ -126,9 +156,16 @@ impl Coordinator {
             let factory = Arc::clone(&factory);
             let plan_cache = plan_cache.clone();
             handles.push(std::thread::spawn(move || {
-                let mut engine = BatchedEngine::from_engine(factory(wid), max_batch);
-                engine.set_plan_cache(plan_cache);
-                let mut sched = BatchScheduler::new(engine);
+                let make_sched = || {
+                    let mut engine = BatchedEngine::from_engine(factory(wid), max_batch);
+                    engine.set_plan_cache(plan_cache.clone());
+                    BatchScheduler::new(engine)
+                };
+                let mut sched = make_sched();
+                // Request ids this worker has claimed but not yet answered
+                // — the set that gets a `WorkerPanicked` rejection if an
+                // engine step unwinds.
+                let mut owned: Vec<u64> = Vec::new();
                 loop {
                     // Acquire work. With an idle scheduler, block for the
                     // first job (a plain condvar wait — `close()` notifies
@@ -140,12 +177,12 @@ impl Coordinator {
                     // the scheduler's refresh-boundary + token-budget
                     // checks).
                     let jobs: Vec<Job> = {
-                        let mut q = shared.queue.lock().unwrap();
+                        let mut q = lock_recover(&shared.queue);
                         while q.is_empty() && sched.is_idle() {
                             if shared.closed.load(Ordering::SeqCst) {
                                 return;
                             }
-                            q = shared.cv.wait(q).unwrap();
+                            q = wait_recover(&shared.cv, q);
                         }
                         if sched.is_idle() {
                             claim_batch(&mut q, max_batch)
@@ -155,22 +192,52 @@ impl Coordinator {
                             claim_upto(&mut q, room)
                         }
                     };
-                    for job in jobs {
-                        sched.submit_at(job.req, job.enqueued);
-                    }
-                    // One lockstep step; retired requests stream out.
-                    for r in sched.step() {
-                        let _ = out_tx.send(Response {
-                            id: r.id,
-                            scene: r.scene,
-                            image: r.image,
-                            stats: r.stats,
-                            queue_s: r.queue_s,
-                            exec_s: r.exec_s,
-                            latency_s: r.latency_s,
-                            worker: wid,
-                            batch_size: r.batch_size,
-                        });
+                    // Submit + one lockstep step, panic-isolated: an
+                    // engine assertion fails this batch, not the process.
+                    let stepped = catch_unwind(AssertUnwindSafe(|| {
+                        for job in jobs {
+                            owned.push(job.req.id);
+                            sched.submit_at(job.req, job.enqueued);
+                        }
+                        sched.step()
+                    }));
+                    match stepped {
+                        Ok(results) => {
+                            for r in results {
+                                owned.retain(|&id| id != r.id);
+                                let _ = out_tx.send((
+                                    r.id,
+                                    Ok(Response {
+                                        id: r.id,
+                                        scene: r.scene,
+                                        image: r.image,
+                                        stats: r.stats,
+                                        queue_s: r.queue_s,
+                                        exec_s: r.exec_s,
+                                        latency_s: r.latency_s,
+                                        worker: wid,
+                                        batch_size: r.batch_size,
+                                    }),
+                                ));
+                            }
+                        }
+                        Err(payload) => {
+                            // Scheduler/engine state is suspect after an
+                            // unwind: answer every owned request with the
+                            // panic, then rebuild from the factory and
+                            // keep serving.
+                            let message = panic_message(payload.as_ref());
+                            for id in owned.drain(..) {
+                                let _ = out_tx.send((
+                                    id,
+                                    Err(Rejected::WorkerPanicked {
+                                        worker: wid,
+                                        message: message.clone(),
+                                    }),
+                                ));
+                            }
+                            sched = make_sched();
+                        }
                     }
                 }
             }));
@@ -181,14 +248,31 @@ impl Coordinator {
     /// Enqueue a request.
     pub fn submit(&self, req: Request) {
         crate::obs::metrics::REQUESTS_ENQUEUED.inc();
-        let mut q = self.shared.queue.lock().unwrap();
+        let mut q = lock_recover(&self.shared.queue);
         q.push_back(Job { req, enqueued: Instant::now() });
         self.shared.cv.notify_one();
     }
 
-    /// Blockingly collect `n` responses.
+    /// Blockingly collect `n` per-request outcomes: `(id, Ok(response))`
+    /// for served requests, `(id, Err(rejection))` for requests lost to a
+    /// worker panic. Never panics on a failed request — callers that need
+    /// the all-success invariant use [`Self::collect`].
+    pub fn collect_results(&self, n: usize) -> Vec<(u64, RequestResult)> {
+        (0..n).map(|_| self.out_rx.recv().expect("all workers exited")).collect()
+    }
+
+    /// Blockingly collect `n` responses, panicking with the rejection
+    /// detail if any request failed (the strict variant of
+    /// [`Self::collect_results`] for callers that expect every request to
+    /// succeed, e.g. trace replay).
     pub fn collect(&self, n: usize) -> Vec<Response> {
-        (0..n).map(|_| self.out_rx.recv().expect("worker died")).collect()
+        self.collect_results(n)
+            .into_iter()
+            .map(|(id, r)| match r {
+                Ok(resp) => resp,
+                Err(rej) => panic!("request {id} failed: {rej}"),
+            })
+            .collect()
     }
 
     /// Signal that no more work will be submitted and wake every idle
@@ -199,7 +283,7 @@ impl Coordinator {
     /// through the close notification.
     pub fn close(&self) {
         {
-            let _q = self.shared.queue.lock().unwrap();
+            let _q = lock_recover(&self.shared.queue);
             self.shared.closed.store(true, Ordering::SeqCst);
         }
         self.shared.cv.notify_all();
@@ -246,14 +330,13 @@ pub struct ServeReport {
     pub mean_attn_sparsity: f64,
 }
 
-/// Sorted copy of `xs` + the nearest-rank percentile accessor used for
-/// every latency column.
-fn percentiles(mut xs: Vec<f64>) -> impl Fn(f64) -> f64 {
-    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    move |p: f64| xs[((xs.len() as f64 - 1.0) * p) as usize]
-}
-
 impl ServeReport {
+    /// Aggregate per-request breakdowns into the serving report. All
+    /// percentile columns go through the shared NaN-safe nearest-rank
+    /// helper [`crate::report::percentiles`] (the old local copy
+    /// truncated the rank — biasing every tail percentile low, e.g.
+    /// p95 of 10 samples reported the 9th instead of the 10th — and
+    /// panicked on NaN latencies).
     pub fn from_responses(rs: &[Response], wall_s: f64) -> Self {
         let lat = percentiles(rs.iter().map(|r| r.latency_s).collect());
         let que = percentiles(rs.iter().map(|r| r.queue_s).collect());
@@ -387,11 +470,62 @@ mod tests {
         let trace = poisson_trace(2, 2, 1000.0, 3, 8);
         let (r1, _) = replay_trace(tiny_engine, &trace, 1, 1, 0.0);
         let (r2, _) = replay_trace(tiny_engine, &trace, 1, 1, 0.0);
+        // A missing id is a test failure with a message, not a bare
+        // `unwrap` panic deep in a closure.
         let find = |rs: &[Response], id: u64| -> Tensor {
-            rs.iter().find(|r| r.id == id).unwrap().image.clone()
+            rs.iter()
+                .find(|r| r.id == id)
+                .unwrap_or_else(|| panic!("response for request {id} missing"))
+                .image
+                .clone()
         };
         assert_eq!(find(&r1, 0), find(&r2, 0));
         assert_eq!(find(&r1, 1), find(&r2, 1));
+    }
+
+    #[test]
+    fn collect_results_pairs_every_id_with_an_outcome() {
+        let coord = Coordinator::start(tiny_engine, 1, 2);
+        let trace = poisson_trace(5, 4, 1000.0, 3, 8);
+        for req in &trace {
+            coord.submit(req.clone());
+        }
+        let results = coord.collect_results(4);
+        let mut ids: Vec<u64> = results.iter().map(|(id, _)| *id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..4).collect::<Vec<u64>>());
+        for (id, r) in &results {
+            let resp = r.as_ref().unwrap_or_else(|e| panic!("request {id} failed: {e}"));
+            assert_eq!(resp.id, *id);
+        }
+        coord.shutdown();
+    }
+
+    /// Regression pin for the percentile bias bug: the old local helper
+    /// computed `((n-1)*p) as usize` (rank truncation), so p95 of 10
+    /// samples returned the 9th-smallest. ServeReport now routes through
+    /// the shared nearest-rank helper.
+    #[test]
+    fn serve_report_percentiles_are_nearest_rank() {
+        let rs: Vec<Response> = (1..=10)
+            .map(|i| Response {
+                id: i as u64,
+                scene: 0,
+                image: Tensor::zeros(&[1]),
+                stats: RunStats::default(),
+                queue_s: i as f64,
+                exec_s: 10.0 * i as f64,
+                latency_s: 11.0 * i as f64,
+                worker: 0,
+                batch_size: 1,
+            })
+            .collect();
+        let report = ServeReport::from_responses(&rs, 1.0);
+        assert_eq!(report.p50_queue_s, 5.0);
+        assert_eq!(report.p95_queue_s, 10.0); // old helper said 9.0
+        assert_eq!(report.p99_queue_s, 10.0);
+        assert_eq!(report.p95_exec_s, 100.0);
+        assert_eq!(report.p95_latency_s, 110.0);
     }
 
     #[test]

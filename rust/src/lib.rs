@@ -47,8 +47,14 @@
 //!   per request to a solo run), plus a continuous-batching
 //!   `BatchScheduler` with refresh-boundary admission.
 //! * [`coordinator`] — the serving layer: request queue, shape-bucketing
-//!   batcher, worker pool feeding per-worker batch schedulers,
-//!   latency/throughput accounting (p50/p95/p99).
+//!   batcher, worker pool feeding per-worker batch schedulers (panic-
+//!   isolated, per-request `Result`s), latency/throughput accounting
+//!   (p50/p95/p99).
+//! * [`router`] — the admission-controlled serving front-end: in-flight
+//!   permit cap + bounded queue with explicit load shedding, per-request
+//!   deadlines enforced at claim time, two priority classes, and
+//!   streaming previews (bitwise prefixes of the final decode) every K
+//!   denoising steps.
 //! * [`metrics`] / [`report`] — the paper's quality + efficiency metrics and
 //!   the harness that regenerates every table and figure.
 //! * [`obs`] — the process-wide observability layer: atomic
@@ -77,6 +83,7 @@ pub mod model;
 pub mod obs;
 pub mod plan;
 pub mod report;
+pub mod router;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod symbols;

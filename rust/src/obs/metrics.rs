@@ -256,6 +256,21 @@ pub static REQUESTS_ADMITTED: Counter =
 /// Requests retired with a finished image.
 pub static REQUESTS_RETIRED: Counter =
     Counter::new("fo_requests_retired_total", "Requests retired with a finished image");
+/// Requests shed at admission (in-flight cap or queue bound hit).
+pub static REQUESTS_SHED: Counter = Counter::new(
+    "fo_request_shed_total",
+    "Requests shed at admission (in-flight cap or queue bound hit)",
+);
+/// Requests retired unserved because their deadline expired while queued.
+pub static REQUESTS_DEADLINE_MISS: Counter = Counter::new(
+    "fo_request_deadline_miss_total",
+    "Requests whose deadline expired before they reached a batch slot",
+);
+/// Streaming preview frames decoded and emitted.
+pub static REQUESTS_PREVIEW: Counter = Counter::new(
+    "fo_request_preview_total",
+    "Streaming preview frames decoded mid-denoise",
+);
 /// Engine steps executed (solo or batched lockstep ticks).
 pub static ENGINE_STEPS: Counter =
     Counter::new("fo_engine_steps_total", "Denoising engine steps executed");
@@ -281,6 +296,9 @@ pub static EXEC_ACTIVE_LANES: Gauge = Gauge::new(
     "fo_exec_active_lanes",
     "Worker lanes participating in the current parallel section",
 );
+/// Requests waiting in the router's admission queue.
+pub static ROUTER_QUEUE_DEPTH: Gauge =
+    Gauge::new("fo_router_queue_depth", "Requests waiting in the router admission queue");
 
 /// GEMM-Q dense (full path: joint QKV projection region).
 pub static KERNEL_GEMM_Q_DENSE: Histogram =
@@ -356,6 +374,11 @@ pub static REQUEST_QUEUE_WAIT: Histogram =
 /// Per-request execution time (admit → retire).
 pub static REQUEST_EXEC: Histogram =
     Histogram::new("fo_request_exec_ns", "Per-request execution time (admit to retire)");
+/// Streaming-preview decode region (cheap mid-denoise unpatchify).
+pub static REQUEST_PREVIEW_DECODE: Histogram = Histogram::new(
+    "fo_request_preview_ns",
+    "Streaming-preview decode region of an engine step",
+);
 
 /// Every counter in the process, for exporters and tests.
 pub fn all_counters() -> &'static [&'static Counter] {
@@ -367,6 +390,9 @@ pub fn all_counters() -> &'static [&'static Counter] {
         &REQUESTS_ENQUEUED,
         &REQUESTS_ADMITTED,
         &REQUESTS_RETIRED,
+        &REQUESTS_SHED,
+        &REQUESTS_DEADLINE_MISS,
+        &REQUESTS_PREVIEW,
         &ENGINE_STEPS,
         &TUNE_MEASUREMENTS,
         &EXEC_SECTIONS,
@@ -376,7 +402,7 @@ pub fn all_counters() -> &'static [&'static Counter] {
 
 /// Every gauge in the process.
 pub fn all_gauges() -> &'static [&'static Gauge] {
-    &[&EXEC_QUEUE_DEPTH, &EXEC_ACTIVE_LANES]
+    &[&EXEC_QUEUE_DEPTH, &EXEC_ACTIVE_LANES, &ROUTER_QUEUE_DEPTH]
 }
 
 /// Every histogram in the process.
@@ -405,14 +431,15 @@ pub fn all_histograms() -> &'static [&'static Histogram] {
         &EXEC_SECTION,
         &REQUEST_QUEUE_WAIT,
         &REQUEST_EXEC,
+        &REQUEST_PREVIEW_DECODE,
     ]
 }
 
 /// The mutually-exclusive regions that tile an engine step: the twelve
-/// kernel-family histograms plus refresh/cache/embed/decode/retire. Their
-/// `sum_ns` over [`ENGINE_STEP`]'s `sum_ns` is the step coverage the
-/// fig12 acceptance gate asserts ≥ 0.95 (`plan.compile_*` nests inside
-/// `plan.refresh` and is deliberately absent).
+/// kernel-family histograms plus refresh/cache/embed/decode/preview/
+/// retire. Their `sum_ns` over [`ENGINE_STEP`]'s `sum_ns` is the step
+/// coverage the fig12 acceptance gate asserts ≥ 0.95 (`plan.compile_*`
+/// nests inside `plan.refresh` and is deliberately absent).
 pub fn accounted_histograms() -> &'static [&'static Histogram] {
     &[
         &KERNEL_GEMM_Q_DENSE,
@@ -432,6 +459,7 @@ pub fn accounted_histograms() -> &'static [&'static Histogram] {
         &MODEL_EMBED,
         &MODEL_DECODE,
         &ENGINE_RETIRE,
+        &REQUEST_PREVIEW_DECODE,
     ]
 }
 

@@ -476,6 +476,33 @@ impl Reporter {
     }
 }
 
+/// Nearest-rank percentile over an **ascending-sorted** sample: the
+/// smallest element such that at least `p·n` of the sample is ≤ it
+/// (rank `⌈p·n⌉`, 1-indexed; `p = 0` maps to the minimum). 0 when empty.
+///
+/// This is the single percentile definition every latency column in the
+/// repo uses — the coordinator's `ServeReport`, the serving benches, and
+/// the router all route through it. Nearest-rank always returns an actual
+/// sample (no interpolation) and, unlike the truncating
+/// `((n-1)·p) as usize` indexing it replaced, never biases a high
+/// percentile down a rank (n = 10, p95: rank 10, not index 8).
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let n = sorted.len();
+    let rank = (p.clamp(0.0, 1.0) * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
+}
+
+/// Sort a sample (NaN-safe: `total_cmp` orders NaNs last instead of
+/// panicking mid-comparison) and return a nearest-rank percentile
+/// accessor over it. See [`percentile_sorted`] for the rank convention.
+pub fn percentiles(mut xs: Vec<f64>) -> impl Fn(f64) -> f64 {
+    xs.sort_by(f64::total_cmp);
+    move |p: f64| percentile_sorted(&xs, p)
+}
+
 /// Accumulate run statistics across generations.
 pub fn merge_stats(agg: &mut RunStats, s: &RunStats) {
     agg.steps += s.steps;
@@ -575,6 +602,42 @@ mod tests {
         let row0 = r.eval_against("base", &base, &base, &bs, &bs);
         assert!(row0.psnr > 90.0);
         assert!(row0.rfid.abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles_nearest_rank_on_known_sample() {
+        // n = 10, values 1..=10: nearest-rank pins p50 = 5 (rank ⌈5⌉),
+        // p95 = 10 (rank ⌈9.5⌉ = 10) and p99 = 10. The old truncating
+        // `((n-1)·p) as usize` indexing returned 9.0 for p95 (index 8) —
+        // this sample is the regression pin for that bug.
+        let xs: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        let pct = percentiles(xs);
+        assert_eq!(pct(0.50), 5.0);
+        assert_eq!(pct(0.95), 10.0);
+        assert_eq!(pct(0.99), 10.0);
+        // Edges: p0 = min, p100 = max; input order must not matter.
+        assert_eq!(pct(0.0), 1.0);
+        assert_eq!(pct(1.0), 10.0);
+        let shuffled = percentiles(vec![7.0, 2.0, 9.0, 1.0, 5.0]);
+        assert_eq!(shuffled(0.5), 5.0);
+        assert_eq!(shuffled(1.0), 9.0);
+        // Singleton: every percentile is the one sample.
+        let one = percentiles(vec![3.25]);
+        assert_eq!(one(0.01), 3.25);
+        assert_eq!(one(0.99), 3.25);
+        // Empty sample reads as 0 instead of panicking.
+        let empty = percentiles(Vec::new());
+        assert_eq!(empty(0.5), 0.0);
+    }
+
+    #[test]
+    fn percentiles_tolerate_nan() {
+        // A NaN latency (e.g. a 0/0 rate upstream) must not panic the
+        // sort; total_cmp orders NaNs after every real sample, so finite
+        // percentiles still read finite values.
+        let pct = percentiles(vec![2.0, f64::NAN, 1.0, 3.0]);
+        assert_eq!(pct(0.5), 2.0);
+        assert!(pct(0.25).is_finite());
     }
 
     #[test]

@@ -1,0 +1,549 @@
+//! **Serving router**: the admission-controlled front-end over the
+//! continuous-batching stack ([`BatchScheduler`] per worker, shared plan
+//! cache across workers).
+//!
+//! The [`Coordinator`](crate::coordinator) accepts every request and
+//! queues without bound — fine for offline trace replay, wrong for a
+//! front-end: under sustained overload an unbounded queue turns into
+//! unbounded latency and every request eventually misses its deadline.
+//! The router makes overload explicit:
+//!
+//! * **Admission control** — a non-blocking counting semaphore caps total
+//!   in-flight requests (queued + executing, `FO_MAX_IN_FLIGHT`), and a
+//!   bounded queue (`FO_QUEUE_CAP`) backpressures on top. A submit that
+//!   finds no permit or a full queue is **shed immediately** with
+//!   [`Rejected::Overloaded`] — the caller learns in microseconds, not
+//!   after its deadline has already passed. Shedding counts into
+//!   `fo_request_shed_total`.
+//! * **Deadlines** — [`SubmitOptions::deadline`] attaches a relative
+//!   deadline. Expiry is enforced at **claim time** (a worker about to
+//!   submit an expired job retires it with [`Rejected::DeadlineExceeded`]
+//!   before it can consume a batch slot) and every scheduler tick for
+//!   jobs waiting in the per-worker pending queue — never mid-refresh: an
+//!   admitted request always runs to completion.
+//! * **Two priority classes** — [`Priority::Interactive`] jobs are
+//!   claimed strictly before [`Priority::Bulk`] jobs (FIFO within each
+//!   class). Strict priority is deliberate: bulk work is the offline kind
+//!   that tolerates starvation under interactive bursts.
+//! * **Streaming previews** — with a nonzero preview interval
+//!   (`FO_PREVIEW_INTERVAL`), the engine decodes each in-flight latent
+//!   every K denoising steps and the router forwards each decode as a
+//!   [`RequestEvent::Preview`] on the submitter's channel. The preview
+//!   decode is exactly the retirement decode, so previews are **bitwise
+//!   prefixes** of the final image — the diffusion-native analogue of
+//!   token streaming (property-tested in `rust/tests/router.rs`).
+//!
+//! Request lifecycle: `submit` → admit (permit + queue slot) or shed →
+//! claimed by a worker (deadline check) → batched execution (previews
+//! stream every K steps) → retire ([`RequestEvent::Done`]) — or
+//! [`RequestEvent::Rejected`] at any pre-execution stage. Every submitted
+//! request receives exactly one terminal event; workers are
+//! panic-isolated like the coordinator's (an engine panic rejects the
+//! owned requests with [`Rejected::WorkerPanicked`] and the worker
+//! rebuilds its engine).
+//!
+//! [`BatchScheduler`]: crate::batch::BatchScheduler
+
+#![warn(missing_docs)]
+
+use crate::batch::{BatchScheduler, BatchedEngine, Preview};
+use crate::coordinator::Response;
+use crate::engine::{DiTEngine, LayerPlans};
+use crate::plan::cache::SharedPlanCache;
+use crate::util::sync::{lock_recover, wait_recover, Semaphore};
+use crate::workload::Request;
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Capacity of the router-wide shared plan cache (mirrors the
+/// coordinator's: it serves every worker's refreshes at once).
+const ROUTER_PLAN_CACHE_CAP: usize = 256;
+
+/// Why a request was refused or abandoned without a [`Response`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum Rejected {
+    /// Shed at admission: the in-flight cap or the bounded queue was
+    /// full. The fields snapshot the load the router saw at that instant.
+    Overloaded {
+        /// Requests holding an in-flight permit (queued + executing).
+        in_flight: usize,
+        /// Requests waiting in the router queue.
+        queued: usize,
+    },
+    /// The deadline passed while the request was still queued (checked at
+    /// claim time and every scheduler tick — never mid-execution).
+    DeadlineExceeded {
+        /// Seconds the request waited in queue before expiring.
+        waited_s: f64,
+    },
+    /// The router (or coordinator) was closed before the request could be
+    /// accepted.
+    Closed,
+    /// The worker serving this request panicked mid-batch; the request's
+    /// state was lost when the engine was rebuilt.
+    WorkerPanicked {
+        /// Index of the worker that panicked.
+        worker: usize,
+        /// The panic payload, if it was a string.
+        message: String,
+    },
+}
+
+impl std::fmt::Display for Rejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Rejected::Overloaded { in_flight, queued } => {
+                write!(f, "overloaded: {in_flight} in flight, {queued} queued")
+            }
+            Rejected::DeadlineExceeded { waited_s } => {
+                write!(f, "deadline exceeded after {waited_s:.3}s in queue")
+            }
+            Rejected::Closed => write!(f, "router closed"),
+            Rejected::WorkerPanicked { worker, message } => {
+                write!(f, "worker {worker} panicked: {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for Rejected {}
+
+/// Scheduling class for a submitted request.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Priority {
+    /// Latency-sensitive: claimed strictly before any bulk job.
+    #[default]
+    Interactive,
+    /// Throughput work: claimed only when no interactive job waits.
+    Bulk,
+}
+
+/// Per-request submission options.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SubmitOptions {
+    /// Scheduling class (default [`Priority::Interactive`]).
+    pub priority: Priority,
+    /// Relative deadline: if the request has not been admitted into a
+    /// batch within this duration of submission, it retires with
+    /// [`Rejected::DeadlineExceeded`]. `None` = no deadline.
+    pub deadline: Option<Duration>,
+}
+
+impl SubmitOptions {
+    /// Interactive, no deadline.
+    pub fn interactive() -> Self {
+        SubmitOptions::default()
+    }
+    /// Bulk, no deadline.
+    pub fn bulk() -> Self {
+        SubmitOptions { priority: Priority::Bulk, deadline: None }
+    }
+    /// This options value with a relative deadline attached.
+    pub fn with_deadline(mut self, d: Duration) -> Self {
+        self.deadline = Some(d);
+        self
+    }
+}
+
+/// An event on a request's streaming channel. Every submitted request
+/// sees zero or more `Preview`s followed by exactly one terminal event
+/// (`Done` or `Rejected`).
+#[derive(Debug)]
+pub enum RequestEvent {
+    /// An intermediate decode of the request's latent after K more
+    /// denoising steps — a bitwise prefix of the final image.
+    Preview(Preview),
+    /// The request finished; terminal.
+    Done(Box<Response>),
+    /// The request was refused or abandoned; terminal.
+    Rejected(Rejected),
+}
+
+/// The submitter's half of a request: its id plus the event channel the
+/// serving worker streams into.
+pub struct RequestHandle {
+    /// The id of the submitted request (as assigned by the caller).
+    pub id: u64,
+    rx: mpsc::Receiver<RequestEvent>,
+}
+
+impl RequestHandle {
+    /// Block for the next event, or `None` if the router dropped the
+    /// channel without a terminal event (only possible after shutdown).
+    pub fn recv(&self) -> Option<RequestEvent> {
+        self.rx.recv().ok()
+    }
+
+    /// Non-blocking poll for the next event.
+    pub fn try_recv(&self) -> Option<RequestEvent> {
+        self.rx.try_recv().ok()
+    }
+
+    /// Drain the channel to the terminal event: the outcome plus every
+    /// preview that streamed before it.
+    pub fn wait(self) -> (Result<Response, Rejected>, Vec<Preview>) {
+        let mut previews = Vec::new();
+        for ev in self.rx.iter() {
+            match ev {
+                RequestEvent::Preview(p) => previews.push(p),
+                RequestEvent::Done(r) => return (Ok(*r), previews),
+                RequestEvent::Rejected(rej) => return (Err(rej), previews),
+            }
+        }
+        (Err(Rejected::Closed), previews)
+    }
+}
+
+/// Router sizing and behavior knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct RouterConfig {
+    /// Worker threads, each driving one [`BatchScheduler`].
+    pub workers: usize,
+    /// Max batch slots per worker.
+    pub max_batch: usize,
+    /// Cap on total admitted requests (queued + executing) across the
+    /// router; 0 = unbounded. Admission past the cap sheds.
+    pub max_in_flight: usize,
+    /// Cap on requests waiting in the router queue (the non-executing
+    /// part of in-flight); 0 = unbounded. A full queue sheds.
+    pub queue_cap: usize,
+    /// Emit a streaming preview every K completed denoising steps per
+    /// request; 0 = previews off.
+    pub preview_interval: usize,
+}
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+impl RouterConfig {
+    /// Defaults for a given pool shape: in-flight cap of twice the
+    /// execution capacity (`2 * workers * max_batch`) so the queue can
+    /// hold one full "next batch" per worker, queue cap equal to the
+    /// in-flight cap, previews off.
+    pub fn new(workers: usize, max_batch: usize) -> Self {
+        let cap = 2 * workers.max(1) * max_batch.max(1);
+        RouterConfig {
+            workers,
+            max_batch,
+            max_in_flight: cap,
+            queue_cap: cap,
+            preview_interval: 0,
+        }
+    }
+
+    /// [`Self::new`] with `FO_MAX_IN_FLIGHT`, `FO_QUEUE_CAP`, and
+    /// `FO_PREVIEW_INTERVAL` overriding the corresponding fields.
+    pub fn from_env(workers: usize, max_batch: usize) -> Self {
+        let base = Self::new(workers, max_batch);
+        RouterConfig {
+            max_in_flight: env_usize("FO_MAX_IN_FLIGHT", base.max_in_flight),
+            queue_cap: env_usize("FO_QUEUE_CAP", base.queue_cap),
+            preview_interval: env_usize("FO_PREVIEW_INTERVAL", base.preview_interval),
+            ..base
+        }
+    }
+}
+
+/// A queued request plus everything needed to answer it.
+struct RoutedJob {
+    req: Request,
+    enqueued: Instant,
+    deadline: Option<Instant>,
+    tx: mpsc::Sender<RequestEvent>,
+}
+
+/// The two priority queues (strict interactive-over-bulk claiming, FIFO
+/// within each class).
+#[derive(Default)]
+struct Queues {
+    interactive: VecDeque<RoutedJob>,
+    bulk: VecDeque<RoutedJob>,
+}
+
+impl Queues {
+    fn len(&self) -> usize {
+        self.interactive.len() + self.bulk.len()
+    }
+    fn is_empty(&self) -> bool {
+        self.interactive.is_empty() && self.bulk.is_empty()
+    }
+    /// Claim up to `room` jobs, interactive strictly first.
+    fn claim(&mut self, room: usize) -> Vec<RoutedJob> {
+        let take_i = room.min(self.interactive.len());
+        let mut out: Vec<RoutedJob> = self.interactive.drain(..take_i).collect();
+        let take_b = (room - out.len()).min(self.bulk.len());
+        out.extend(self.bulk.drain(..take_b));
+        out
+    }
+}
+
+struct Shared {
+    queues: Mutex<Queues>,
+    cv: Condvar,
+    closed: AtomicBool,
+    /// In-flight permits (queued + executing). `try_acquire` at submit —
+    /// never blocks; a missing permit sheds.
+    permits: Semaphore,
+}
+
+fn set_queue_depth(q: &Queues) {
+    crate::obs::metrics::ROUTER_QUEUE_DEPTH.set(q.len() as i64);
+}
+
+/// Admission-controlled serving front-end: bounded queue + in-flight cap
+/// + deadlines + priorities + streaming previews over a pool of
+/// continuous-batching workers.
+pub struct Router {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    queue_cap: usize,
+}
+
+impl Router {
+    /// Start the worker pool. Each worker drives a [`BatchScheduler`]
+    /// over a batched engine built from `factory`; all workers share one
+    /// plan cache, so a plan compiled for any request is reused by every
+    /// symbol-identical refresh across the pool.
+    pub fn start<F>(factory: F, cfg: RouterConfig) -> Self
+    where
+        F: Fn(usize) -> DiTEngine + Send + Sync + 'static,
+    {
+        let permit_cap = if cfg.max_in_flight == 0 { usize::MAX / 2 } else { cfg.max_in_flight };
+        let shared = Arc::new(Shared {
+            queues: Mutex::new(Queues::default()),
+            cv: Condvar::new(),
+            closed: AtomicBool::new(false),
+            permits: Semaphore::new(permit_cap),
+        });
+        let factory = Arc::new(factory);
+        let plan_cache: SharedPlanCache<LayerPlans> =
+            SharedPlanCache::new(ROUTER_PLAN_CACHE_CAP);
+        let mut handles = Vec::new();
+        for wid in 0..cfg.workers.max(1) {
+            let shared = Arc::clone(&shared);
+            let factory = Arc::clone(&factory);
+            let plan_cache = plan_cache.clone();
+            handles.push(std::thread::spawn(move || {
+                worker_loop(wid, cfg, shared, factory.as_ref(), plan_cache)
+            }));
+        }
+        Router { shared, handles, queue_cap: cfg.queue_cap }
+    }
+
+    /// Requests currently holding an in-flight permit (queued +
+    /// executing).
+    pub fn in_flight(&self) -> usize {
+        self.shared.permits.in_use()
+    }
+
+    /// Requests waiting in the router queue.
+    pub fn queued(&self) -> usize {
+        lock_recover(&self.shared.queues).len()
+    }
+
+    /// Submit a request. Returns a [`RequestHandle`] streaming previews
+    /// and the terminal outcome, or an immediate rejection:
+    /// [`Rejected::Closed`] after [`Self::close`], or
+    /// [`Rejected::Overloaded`] when the in-flight cap or the bounded
+    /// queue is full (the shed path — counted in
+    /// `fo_request_shed_total`, never blocks).
+    pub fn submit(&self, req: Request, opts: SubmitOptions) -> Result<RequestHandle, Rejected> {
+        if self.shared.closed.load(Ordering::SeqCst) {
+            return Err(Rejected::Closed);
+        }
+        if !self.shared.permits.try_acquire() {
+            crate::obs::metrics::REQUESTS_SHED.inc();
+            return Err(Rejected::Overloaded {
+                in_flight: self.shared.permits.in_use(),
+                queued: self.queued(),
+            });
+        }
+        let now = Instant::now();
+        let (tx, rx) = mpsc::channel();
+        let id = req.id;
+        let job = RoutedJob {
+            req,
+            enqueued: now,
+            deadline: opts.deadline.map(|d| now + d),
+            tx,
+        };
+        {
+            let mut q = lock_recover(&self.shared.queues);
+            if self.queue_cap != 0 && q.len() >= self.queue_cap {
+                drop(q);
+                self.shared.permits.release();
+                crate::obs::metrics::REQUESTS_SHED.inc();
+                return Err(Rejected::Overloaded {
+                    in_flight: self.shared.permits.in_use(),
+                    queued: self.queue_cap,
+                });
+            }
+            match opts.priority {
+                Priority::Interactive => q.interactive.push_back(job),
+                Priority::Bulk => q.bulk.push_back(job),
+            }
+            crate::obs::metrics::REQUESTS_ENQUEUED.inc();
+            set_queue_depth(&q);
+        }
+        self.shared.cv.notify_one();
+        Ok(RequestHandle { id, rx })
+    }
+
+    /// Refuse new submissions and wake every idle worker. Already-queued
+    /// requests still drain: a worker only exits once the queue is empty
+    /// and its batch has retired, so every accepted request gets its
+    /// terminal event.
+    pub fn close(&self) {
+        {
+            let _q = lock_recover(&self.shared.queues);
+            self.shared.closed.store(true, Ordering::SeqCst);
+        }
+        self.shared.cv.notify_all();
+    }
+
+    /// Close and join workers (drains already-queued requests first).
+    pub fn shutdown(self) {
+        drop(self);
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.close();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One router worker: claim (interactive first) → claim-time deadline
+/// check → batched execution with preview/expiry draining → terminal
+/// events, with the same panic isolation as the coordinator's workers.
+fn worker_loop<F>(
+    wid: usize,
+    cfg: RouterConfig,
+    shared: Arc<Shared>,
+    factory: &F,
+    plan_cache: SharedPlanCache<LayerPlans>,
+) where
+    F: Fn(usize) -> DiTEngine,
+{
+    let make_sched = || {
+        let mut engine = BatchedEngine::from_engine(factory(wid), cfg.max_batch);
+        engine.set_plan_cache(plan_cache.clone());
+        engine.set_preview_interval(cfg.preview_interval);
+        BatchScheduler::new(engine)
+    };
+    let mut sched = make_sched();
+    // Event channels for requests this worker has claimed but not yet
+    // answered (the set rejected on a panic).
+    let mut owned: HashMap<u64, mpsc::Sender<RequestEvent>> = HashMap::new();
+    loop {
+        // Acquire work: block only when fully idle (close() notifies all
+        // waiters under the queue lock — no lost-wakeup window); with a
+        // running batch, top up without blocking.
+        let jobs: Vec<RoutedJob> = {
+            let mut q = lock_recover(&shared.queues);
+            while q.is_empty() && sched.is_idle() {
+                if shared.closed.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = wait_recover(&shared.cv, q);
+            }
+            let room = if sched.is_idle() {
+                cfg.max_batch
+            } else {
+                cfg.max_batch.saturating_sub(sched.active() + sched.pending_len())
+            };
+            let jobs = q.claim(room);
+            set_queue_depth(&q);
+            jobs
+        };
+        // Claim-time deadline check: an expired job retires here, before
+        // it can consume a batch slot.
+        let now = Instant::now();
+        let mut live: Vec<RoutedJob> = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            match job.deadline {
+                Some(d) if d <= now => {
+                    let waited = now.saturating_duration_since(job.enqueued);
+                    crate::obs::metrics::REQUESTS_DEADLINE_MISS.inc();
+                    crate::obs::trace::push_request_slice(
+                        "request.deadline_miss",
+                        job.req.id,
+                        job.enqueued,
+                        waited,
+                    );
+                    let _ = job.tx.send(RequestEvent::Rejected(Rejected::DeadlineExceeded {
+                        waited_s: waited.as_secs_f64(),
+                    }));
+                    shared.permits.release();
+                }
+                _ => live.push(job),
+            }
+        }
+        // Submit + one lockstep step, panic-isolated.
+        let stepped = catch_unwind(AssertUnwindSafe(|| {
+            for job in live {
+                owned.insert(job.req.id, job.tx);
+                sched.submit_with_deadline(job.req, job.enqueued, job.deadline);
+            }
+            sched.step()
+        }));
+        match stepped {
+            Ok(results) => {
+                // Previews first: a preview always precedes its request's
+                // terminal event on the channel.
+                for p in sched.take_previews() {
+                    if let Some(tx) = owned.get(&p.id) {
+                        let _ = tx.send(RequestEvent::Preview(p));
+                    }
+                }
+                for e in sched.take_expired() {
+                    // The scheduler already counted the miss; the router
+                    // answers the channel and returns the permit.
+                    if let Some(tx) = owned.remove(&e.req.id) {
+                        let _ = tx.send(RequestEvent::Rejected(Rejected::DeadlineExceeded {
+                            waited_s: e.waited.as_secs_f64(),
+                        }));
+                    }
+                    shared.permits.release();
+                }
+                for r in results {
+                    let id = r.id;
+                    if let Some(tx) = owned.remove(&id) {
+                        let _ = tx.send(RequestEvent::Done(Box::new(Response {
+                            id: r.id,
+                            scene: r.scene,
+                            image: r.image,
+                            stats: r.stats,
+                            queue_s: r.queue_s,
+                            exec_s: r.exec_s,
+                            latency_s: r.latency_s,
+                            worker: wid,
+                            batch_size: r.batch_size,
+                        })));
+                    }
+                    shared.permits.release();
+                }
+            }
+            Err(payload) => {
+                let message = crate::coordinator::panic_message(payload.as_ref());
+                for (_, tx) in owned.drain() {
+                    let _ = tx.send(RequestEvent::Rejected(Rejected::WorkerPanicked {
+                        worker: wid,
+                        message: message.clone(),
+                    }));
+                    shared.permits.release();
+                }
+                sched = make_sched();
+            }
+        }
+    }
+}

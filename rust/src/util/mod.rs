@@ -7,6 +7,7 @@
 pub mod fot;
 pub mod json;
 pub mod rng;
+pub mod sync;
 
 use std::time::Instant;
 

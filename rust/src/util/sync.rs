@@ -1,0 +1,128 @@
+//! Poison-tolerant synchronization helpers and a tiny counting semaphore.
+//!
+//! A panicking worker thread poisons any `Mutex` it held; the std default
+//! then makes every *later* `lock()`/`wait()` unwrap panic too, turning
+//! one engine bug into a poisoned-shutdown cascade (`close()`/`Drop`
+//! re-panic while joining). The serving layers only guard plain queues and
+//! maps behind their mutexes — data that stays structurally valid across a
+//! panic at any await point — so the right policy is to **recover**: take
+//! the guard out of the `PoisonError` and keep going.
+//!
+//! [`Semaphore`] is the admission-control primitive the router uses for
+//! its in-flight cap: a lock-free permit counter with `try_acquire` (shed
+//! on exhaustion — serving must never block the submitter) and `release`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Wait on a condvar, recovering the re-acquired guard from poison.
+pub fn wait_recover<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(|e| e.into_inner())
+}
+
+/// A counting semaphore over an atomic permit counter. Non-blocking by
+/// design: admission control *sheds* on permit exhaustion instead of
+/// queueing the caller.
+pub struct Semaphore {
+    permits: AtomicUsize,
+    capacity: usize,
+}
+
+impl Semaphore {
+    /// Semaphore holding `capacity` permits.
+    pub fn new(capacity: usize) -> Self {
+        Semaphore { permits: AtomicUsize::new(capacity), capacity }
+    }
+
+    /// Total permits the semaphore was created with.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Permits currently available.
+    pub fn available(&self) -> usize {
+        self.permits.load(Ordering::Acquire)
+    }
+
+    /// Permits currently held (capacity − available).
+    pub fn in_use(&self) -> usize {
+        self.capacity - self.available().min(self.capacity)
+    }
+
+    /// Take one permit if any is available. Never blocks.
+    pub fn try_acquire(&self) -> bool {
+        self.permits
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |p| p.checked_sub(1))
+            .is_ok()
+    }
+
+    /// Return one permit. Debug-asserts against releasing past capacity
+    /// (a double-release bug in the caller).
+    pub fn release(&self) {
+        let prev = self.permits.fetch_add(1, Ordering::AcqRel);
+        debug_assert!(prev < self.capacity, "semaphore released past capacity");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn lock_recover_survives_poison() {
+        let m = Arc::new(Mutex::new(vec![1, 2, 3]));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the mutex");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        let g = lock_recover(&m);
+        assert_eq!(*g, vec![1, 2, 3], "data must survive the poisoning panic");
+    }
+
+    #[test]
+    fn semaphore_counts_permits() {
+        let s = Semaphore::new(2);
+        assert_eq!(s.available(), 2);
+        assert!(s.try_acquire());
+        assert!(s.try_acquire());
+        assert_eq!(s.in_use(), 2);
+        assert!(!s.try_acquire(), "exhausted semaphore must shed, not block");
+        s.release();
+        assert_eq!(s.available(), 1);
+        assert!(s.try_acquire());
+    }
+
+    #[test]
+    fn semaphore_concurrent_acquires_never_oversubscribe() {
+        let s = Arc::new(Semaphore::new(8));
+        let acquired = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let s = Arc::clone(&s);
+                let acquired = Arc::clone(&acquired);
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        if s.try_acquire() {
+                            acquired.fetch_add(1, Ordering::Relaxed);
+                            s.release();
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(s.available(), 8, "all permits returned");
+        assert!(acquired.load(Ordering::Relaxed) > 0);
+    }
+}

@@ -298,6 +298,83 @@ fn token_budget_admission_waits_for_refresh_boundary() {
 }
 
 #[test]
+fn oversized_request_is_not_starved_by_steady_small_traffic() {
+    // Head-of-line fairness: an oversized request (cost > whole budget,
+    // admissible only into an empty engine) sits at the front while small
+    // requests keep arriving behind it. FIFO discipline must hold the
+    // smalls back, drain the engine, run the oversized solo, then resume
+    // — the oversized request may wait, but never forever.
+    let model = tiny_model(1, 3);
+    let small = model.cfg.seq_len(); // 24 tokens at the native 4×4 grid
+    let engine = BatchedEngine::new(model.clone(), Policy::full(), 8, 8, 8);
+    let mut sched = BatchScheduler::with_token_budget(engine, 2 * small);
+    sched.submit(request(0, 1, 5, 4, None)); // small, in flight
+    sched.submit(request(1, 2, 6, 4, None)); // small, in flight
+    let _ = sched.step();
+    assert_eq!(sched.active(), 2);
+    // Oversized (8×8 grid → 72 tokens > 48 budget) joins the queue, then
+    // steady small traffic keeps arriving behind it.
+    sched.submit(request(2, 3, 7, 2, Some((8, 8))));
+    sched.submit(request(3, 4, 8, 2, None));
+    let _ = sched.step();
+    sched.submit(request(4, 5, 9, 2, None));
+    let _ = sched.step();
+    // No small request ever jumps the oversized head-of-line: the engine
+    // drains to empty, then the oversized runs alone.
+    let mut saw_solo_oversized = false;
+    let mut done = Vec::new();
+    for _ in 0..200 {
+        if sched.is_idle() {
+            break;
+        }
+        done.extend(sched.step());
+        if sched.active() == 1 && sched.engine().tokens_in_flight() > 2 * small {
+            saw_solo_oversized = true;
+        }
+    }
+    assert!(saw_solo_oversized, "the oversized request must get its solo slot");
+    let mut ids: Vec<u64> = done.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, vec![0, 1, 2, 3, 4], "nothing starves, nothing is lost");
+    // FIFO held: the trailing smalls (3, 4) finished after the oversized.
+    let pos = |id: u64| done.iter().position(|r| r.id == id).unwrap();
+    assert!(pos(2) < pos(3) && pos(2) < pos(4));
+}
+
+#[test]
+fn deadline_expired_head_releases_its_budget_claim() {
+    // An oversized request at the front of the queue blocks everything
+    // behind it (head-of-line discipline). If its deadline expires while
+    // it waits, the next tick must retire it unserved — releasing its
+    // head-of-line claim so the requests behind it are admitted — and
+    // surface it through `take_expired`.
+    let model = tiny_model(1, 3);
+    let small = model.cfg.seq_len();
+    let engine = BatchedEngine::new(model.clone(), Policy::full(), 8, 8, 8);
+    let mut sched = BatchScheduler::with_token_budget(engine, 2 * small);
+    sched.submit(request(0, 1, 5, 6, None)); // small, long-running
+    let _ = sched.step();
+    assert_eq!(sched.active(), 1);
+    // Oversized front with an already-passed deadline; a small behind it.
+    let now = Instant::now();
+    sched.submit_with_deadline(request(1, 2, 6, 2, Some((8, 8))), now, Some(now));
+    sched.submit(request(2, 3, 7, 2, None));
+    let _ = sched.step();
+    // The expired head is gone and the small behind it was admitted in
+    // the same tick — it did not wait for the engine to drain.
+    let expired = sched.take_expired();
+    assert_eq!(expired.len(), 1);
+    assert_eq!(expired[0].req.id, 1);
+    assert_eq!(sched.active(), 2, "the small behind the expired head joined immediately");
+    assert_eq!(sched.pending_len(), 0);
+    let done = sched.run_to_completion();
+    let mut ids: Vec<u64> = done.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, vec![0, 2], "the expired request never consumed a batch slot");
+    assert!(sched.take_expired().is_empty(), "take_expired drains");
+}
+
+#[test]
 fn retirement_frees_budget_without_stalling() {
     // A short request retires mid-flight and returns its tokens; the
     // waiting request joins without the long request ever pausing.

@@ -6,6 +6,7 @@ use flashomni::config::{ModelConfig, SparsityConfig};
 use flashomni::coordinator::{Coordinator, ServeReport};
 use flashomni::engine::{DiTEngine, Policy};
 use flashomni::model::{weights::Weights, MiniMMDiT};
+use flashomni::router::{Rejected, Router, RouterConfig, SubmitOptions};
 use flashomni::workload::{poisson_trace, Request};
 use flashomni::util::fot::FotFile;
 use flashomni::util::json::Json;
@@ -177,6 +178,86 @@ fn engine_rejects_bad_vocab_ids_loudly() {
         e.generate(&vec![usize::MAX; 8], 7, 2);
     }));
     assert!(result.is_err(), "out-of-vocab ids must not silently corrupt");
+}
+
+/// A request whose prompt ids are out of vocab — trips the engine's
+/// embedding assertion mid-batch (see `engine_rejects_bad_vocab_ids_loudly`).
+fn poison_request(id: u64) -> Request {
+    Request {
+        id,
+        scene: id as usize,
+        prompt_ids: vec![usize::MAX; 8],
+        seed: id,
+        steps: 3,
+        arrival_s: 0.0,
+        patch_hw: None,
+    }
+}
+
+fn good_request(id: u64) -> Request {
+    Request {
+        id,
+        scene: id as usize,
+        prompt_ids: vec![(id % 200) as usize; 8],
+        seed: id,
+        steps: 3,
+        arrival_s: 0.0,
+        patch_hw: None,
+    }
+}
+
+#[test]
+fn coordinator_survives_engine_panic_and_keeps_serving() {
+    // Regression for the poison-cascade bug: a panicking engine used to
+    // take the worker thread down, poisoning the shared queue mutex so
+    // close()/Drop re-panicked on `lock().unwrap()` and no later request
+    // was ever served. Now the panic is caught, the poisoned request gets
+    // a per-request `Err(Rejected::WorkerPanicked)`, the worker rebuilds
+    // its engine, and shutdown drains gracefully.
+    let coord = Coordinator::start(tiny_engine, 1, 1);
+    coord.submit(good_request(0));
+    coord.submit(poison_request(1));
+    coord.submit(good_request(2));
+    let results = coord.collect_results(3);
+    let mut ok_ids = Vec::new();
+    let mut failed_ids = Vec::new();
+    for (id, r) in &results {
+        match r {
+            Ok(resp) => {
+                assert_eq!(resp.id, *id);
+                assert!(resp.image.data().iter().all(|x| x.is_finite()));
+                ok_ids.push(*id);
+            }
+            Err(Rejected::WorkerPanicked { message, .. }) => {
+                assert!(!message.is_empty(), "panic payload should carry the message");
+                failed_ids.push(*id);
+            }
+            Err(other) => panic!("unexpected rejection for {id}: {other}"),
+        }
+    }
+    ok_ids.sort_unstable();
+    assert_eq!(ok_ids, vec![0, 2], "requests after the panic are served by the rebuilt engine");
+    assert_eq!(failed_ids, vec![1]);
+    // The decisive part of the regression: shutdown after a worker panic
+    // must not re-panic on a poisoned lock.
+    coord.shutdown();
+}
+
+#[test]
+fn router_survives_engine_panic_and_returns_permits() {
+    let cfg = RouterConfig { workers: 1, max_batch: 1, max_in_flight: 4, queue_cap: 4, preview_interval: 0 };
+    let router = Router::start(tiny_engine, cfg);
+    let h0 = router.submit(good_request(0), SubmitOptions::interactive()).expect("admitted");
+    let h1 = router.submit(poison_request(1), SubmitOptions::interactive()).expect("admitted");
+    let h2 = router.submit(good_request(2), SubmitOptions::interactive()).expect("admitted");
+    assert!(h0.wait().0.is_ok());
+    match h1.wait().0 {
+        Err(Rejected::WorkerPanicked { .. }) => {}
+        other => panic!("poisoned request must report the worker panic, got {other:?}"),
+    }
+    assert!(h2.wait().0.is_ok(), "the rebuilt engine serves later requests");
+    assert_eq!(router.in_flight(), 0, "every permit (including the panicked one) returned");
+    router.shutdown();
 }
 
 #[test]

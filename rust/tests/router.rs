@@ -1,0 +1,384 @@
+//! Router acceptance tests (tentpole PR):
+//!
+//! (a) **streaming previews** — with a preview interval K, the engine
+//!     emits a decode every K completed steps, and each preview is
+//!     **bitwise-identical** to a solo `DiTEngine` run truncated to the
+//!     same step prefix (previews are prefixes of the final decode),
+//! (b) **admission control** — the in-flight permit cap sheds excess
+//!     submits with `Rejected::Overloaded` instead of queueing without
+//!     bound, and every non-shed request still completes,
+//! (c) **deadlines** — a request whose deadline passes while queued is
+//!     retired with `Rejected::DeadlineExceeded` at claim time, before it
+//!     can consume a batch slot,
+//! (d) **priorities** — interactive jobs are claimed strictly before
+//!     bulk jobs,
+//! (e) **close semantics** — accepted requests drain, new submits are
+//!     refused with `Rejected::Closed`.
+
+use flashomni::batch::BatchedEngine;
+use flashomni::config::{ModelConfig, SparsityConfig};
+use flashomni::diffusion::{initial_noise, plan_steps, time_grid};
+use flashomni::engine::{DiTEngine, Policy};
+use flashomni::model::{weights::Weights, MiniMMDiT};
+use flashomni::router::{
+    Priority, Rejected, RequestEvent, Router, RouterConfig, SubmitOptions,
+};
+use flashomni::tensor::Tensor;
+use flashomni::workload::{caption_ids, Request};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+fn tiny_model(layers: usize, seed: u64) -> MiniMMDiT {
+    let cfg = ModelConfig {
+        dim: 32,
+        heads: 2,
+        layers,
+        text_tokens: 8,
+        patch_h: 4,
+        patch_w: 4,
+        patch_size: 2,
+        channels: 3,
+        mlp_ratio: 2,
+        vocab: 256,
+    };
+    MiniMMDiT::new(cfg.clone(), Weights::random(&cfg, seed))
+}
+
+fn fo_policy(interval: usize, warmup: usize) -> Policy {
+    Policy::flashomni(SparsityConfig {
+        tau_q: 0.6,
+        tau_kv: 0.3,
+        interval,
+        order: 1,
+        s_q: 0.0,
+        block_q: 8,
+        block_k: 8,
+        pool: 1,
+        warmup,
+        ramp_steps: 1,
+    })
+}
+
+fn request(id: u64, scene: usize, seed: u64, steps: usize) -> Request {
+    Request {
+        id,
+        scene,
+        prompt_ids: caption_ids(scene, 8),
+        seed,
+        steps,
+        arrival_s: 0.0,
+        patch_hw: None,
+    }
+}
+
+/// Solo decode of the first `k` of `steps` denoising steps — the
+/// reference a preview at step `k` must match bitwise.
+fn solo_prefix(
+    model: &MiniMMDiT,
+    policy: &Policy,
+    req: &Request,
+    warmup: usize,
+    interval: usize,
+    k: usize,
+) -> Tensor {
+    let mut engine = DiTEngine::new(
+        MiniMMDiT::new(model.cfg.clone(), model.w.clone()),
+        policy.clone(),
+        8,
+        8,
+    );
+    let grid = time_grid(req.steps);
+    let plan = plan_steps(req.steps, warmup.min(req.steps), interval);
+    let x = initial_noise(&model.cfg, req.seed);
+    engine.generate_with_grid(&req.prompt_ids, x, &grid[..=k], &plan[..k]).image
+}
+
+// ---------------------------------------------------------------- (a) --
+
+#[test]
+fn previews_are_bitwise_prefixes_of_final_decode() {
+    let model = tiny_model(1, 11);
+    let (warmup, interval) = (2, 3);
+    let policy = fo_policy(interval, warmup);
+    let steps = 9;
+    let req = request(0, 1, 42, steps);
+
+    let mut engine = BatchedEngine::new(model.clone(), policy.clone(), 8, 8, 2);
+    engine.set_preview_interval(2);
+    engine.admit(req.clone(), Instant::now());
+    let out = engine.run_to_completion();
+    let previews = engine.take_previews();
+
+    // Every 2nd completed step previews, except the final one (its decode
+    // is the BatchResult image): steps 2, 4, 6, 8.
+    assert_eq!(previews.iter().map(|p| p.step).collect::<Vec<_>>(), vec![2, 4, 6, 8]);
+    for p in &previews {
+        assert_eq!(p.id, req.id);
+        assert_eq!(p.steps, steps);
+        let solo = solo_prefix(&model, &policy, &req, warmup, interval, p.step);
+        assert_eq!(
+            p.image, solo,
+            "preview at step {} must be bitwise-identical to the solo prefix decode",
+            p.step
+        );
+    }
+    // And the final image is the full solo run — previews really are
+    // prefixes of it, not of some divergent trajectory.
+    let full = solo_prefix(&model, &policy, &req, warmup, interval, steps);
+    assert_eq!(out[0].image, full);
+}
+
+#[test]
+fn router_streams_previews_before_the_terminal_event() {
+    let model = tiny_model(1, 5);
+    let (warmup, interval) = (1, 3);
+    let policy = fo_policy(interval, warmup);
+    let steps = 7;
+    let mut cfg = RouterConfig::new(1, 2);
+    cfg.preview_interval = 3;
+    let m = model.clone();
+    let p = policy.clone();
+    let router = Router::start(
+        move |_| DiTEngine::new(MiniMMDiT::new(m.cfg.clone(), m.w.clone()), p.clone(), 8, 8),
+        cfg,
+    );
+    let req = request(0, 2, 7, steps);
+    let handle = router.submit(req.clone(), SubmitOptions::interactive()).expect("admitted");
+    let (result, previews) = handle.wait();
+    let resp = result.expect("request must complete");
+    // Previews at steps 3 and 6 (7 % 3 ≠ 0, so the final step never
+    // collides with a preview), streamed before Done.
+    assert_eq!(previews.iter().map(|p| p.step).collect::<Vec<_>>(), vec![3, 6]);
+    for p in &previews {
+        let solo = solo_prefix(&model, &policy, &req, warmup, interval, p.step);
+        assert_eq!(p.image, solo, "router preview at step {} diverged from solo", p.step);
+    }
+    assert_eq!(resp.image, solo_prefix(&model, &policy, &req, warmup, interval, steps));
+    router.shutdown();
+}
+
+// ---------------------------------------------------------------- (b) --
+
+#[test]
+fn router_sheds_on_overload_and_serves_the_rest() {
+    let model = tiny_model(1, 3);
+    let cfg = RouterConfig {
+        workers: 1,
+        max_batch: 1,
+        max_in_flight: 2,
+        queue_cap: 2,
+        preview_interval: 0,
+    };
+    let m = model.clone();
+    let router = Router::start(
+        move |_| {
+            DiTEngine::new(MiniMMDiT::new(m.cfg.clone(), m.w.clone()), Policy::full(), 8, 8)
+        },
+        cfg,
+    );
+    let mut handles = Vec::new();
+    let mut shed = 0usize;
+    for id in 0..6u64 {
+        match router.submit(request(id, 1 + id as usize, id, 4), SubmitOptions::interactive()) {
+            Ok(h) => handles.push(h),
+            Err(Rejected::Overloaded { in_flight, .. }) => {
+                assert!(in_flight <= 2, "overload snapshot cannot exceed the cap");
+                shed += 1;
+            }
+            Err(other) => panic!("unexpected rejection: {other}"),
+        }
+    }
+    // 6 back-to-back submits against an in-flight cap of 2: at least 4
+    // must shed immediately (a permit only frees when a request finishes,
+    // which takes real engine work).
+    assert!(shed >= 1, "overload must shed");
+    assert_eq!(handles.len() + shed, 6);
+    for h in handles {
+        let id = h.id;
+        let (result, _) = h.wait();
+        result.unwrap_or_else(|e| panic!("admitted request {id} must be served, got: {e}"));
+    }
+    router.shutdown();
+}
+
+// ---------------------------------------------------------------- (c) --
+
+#[test]
+fn expired_deadline_rejects_before_consuming_a_slot() {
+    let model = tiny_model(1, 9);
+    let cfg = RouterConfig {
+        workers: 1,
+        max_batch: 1,
+        max_in_flight: 8,
+        queue_cap: 8,
+        preview_interval: 0,
+    };
+    let m = model.clone();
+    let router = Router::start(
+        move |_| {
+            DiTEngine::new(MiniMMDiT::new(m.cfg.clone(), m.w.clone()), Policy::full(), 8, 8)
+        },
+        cfg,
+    );
+    // A long request occupies the single batch slot...
+    let blocker =
+        router.submit(request(0, 1, 5, 8), SubmitOptions::interactive()).expect("admitted");
+    // ...and a request whose deadline is effectively already over waits
+    // behind it. By the time any worker can claim it, it has expired —
+    // it must be rejected at claim time, never executed.
+    let doomed = router
+        .submit(
+            request(1, 2, 6, 4),
+            SubmitOptions::interactive().with_deadline(Duration::from_nanos(1)),
+        )
+        .expect("admission itself succeeds; the deadline bites at claim time");
+    let (doomed_result, doomed_previews) = doomed.wait();
+    match doomed_result {
+        Err(Rejected::DeadlineExceeded { waited_s }) => assert!(waited_s >= 0.0),
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+    assert!(doomed_previews.is_empty(), "an expired request must never start executing");
+    let (blocker_result, _) = blocker.wait();
+    assert!(blocker_result.is_ok(), "the in-flight request is never killed by others' deadlines");
+    router.shutdown();
+}
+
+// ---------------------------------------------------------------- (d) --
+
+#[test]
+fn interactive_jobs_are_claimed_before_bulk_jobs() {
+    let model = tiny_model(1, 13);
+    let cfg = RouterConfig {
+        workers: 1,
+        max_batch: 1,
+        max_in_flight: 8,
+        queue_cap: 8,
+        preview_interval: 0,
+    };
+    let m = model.clone();
+    let router = Router::start(
+        move |_| {
+            DiTEngine::new(MiniMMDiT::new(m.cfg.clone(), m.w.clone()), Policy::full(), 8, 8)
+        },
+        cfg,
+    );
+    // Occupy the worker so the next two submits queue up...
+    let blocker =
+        router.submit(request(0, 1, 1, 12), SubmitOptions::interactive()).expect("admitted");
+    // ...then enqueue bulk BEFORE interactive. The interactive job must
+    // still finish first (strict class priority, not FIFO across classes).
+    let bulk = router.submit(request(1, 2, 2, 2), SubmitOptions::bulk()).expect("admitted");
+    let inter =
+        router.submit(request(2, 3, 3, 2), SubmitOptions::interactive()).expect("admitted");
+    assert_eq!(bulk.id, 1);
+    assert_eq!(inter.id, 2);
+
+    let order: Arc<Mutex<Vec<u64>>> = Arc::new(Mutex::new(Vec::new()));
+    let mut joins = Vec::new();
+    for h in [blocker, bulk, inter] {
+        let order = Arc::clone(&order);
+        joins.push(std::thread::spawn(move || {
+            let id = h.id;
+            let (result, _) = h.wait();
+            assert!(result.is_ok(), "request {id} failed");
+            order.lock().unwrap().push(id);
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let order = order.lock().unwrap().clone();
+    let pos = |id: u64| order.iter().position(|&x| x == id).unwrap();
+    assert!(
+        pos(2) < pos(1),
+        "interactive (id 2) must complete before bulk (id 1); order: {order:?}"
+    );
+    router.shutdown();
+}
+
+// ---------------------------------------------------------------- (e) --
+
+#[test]
+fn close_drains_accepted_requests_and_refuses_new_ones() {
+    let model = tiny_model(1, 17);
+    let m = model.clone();
+    let router = Router::start(
+        move |_| {
+            DiTEngine::new(MiniMMDiT::new(m.cfg.clone(), m.w.clone()), Policy::full(), 8, 8)
+        },
+        RouterConfig::new(1, 2),
+    );
+    let handles: Vec<_> = (0..3u64)
+        .map(|id| {
+            router.submit(request(id, 1 + id as usize, id, 3), SubmitOptions::interactive())
+                .expect("admitted")
+        })
+        .collect();
+    router.close();
+    match router.submit(request(9, 9, 9, 3), SubmitOptions::interactive()) {
+        Err(Rejected::Closed) => {}
+        other => panic!("submit after close must return Closed, got {:?}", other.map(|h| h.id)),
+    }
+    for h in handles {
+        let id = h.id;
+        let (result, _) = h.wait();
+        result.unwrap_or_else(|e| panic!("accepted request {id} must drain on close, got: {e}"));
+    }
+    router.shutdown();
+    // Every permit must have been returned.
+}
+
+#[test]
+fn request_events_end_with_exactly_one_terminal() {
+    let model = tiny_model(1, 19);
+    let m = model.clone();
+    let mut cfg = RouterConfig::new(1, 1);
+    cfg.preview_interval = 2;
+    let router = Router::start(
+        move |_| {
+            DiTEngine::new(MiniMMDiT::new(m.cfg.clone(), m.w.clone()), Policy::full(), 8, 8)
+        },
+        cfg,
+    );
+    let handle = router.submit(request(0, 4, 21, 5), SubmitOptions::interactive()).unwrap();
+    let mut terminals = 0;
+    let mut previews_after_terminal = false;
+    while let Some(ev) = handle.recv() {
+        match ev {
+            RequestEvent::Preview(_) => previews_after_terminal = terminals > 0,
+            RequestEvent::Done(_) | RequestEvent::Rejected(_) => terminals += 1,
+        }
+    }
+    assert_eq!(terminals, 1, "exactly one terminal event per request");
+    assert!(!previews_after_terminal, "previews never follow the terminal event");
+    router.shutdown();
+}
+
+#[test]
+fn bulk_only_load_is_still_served() {
+    // Priority is strict, but with no interactive traffic bulk drains
+    // normally (no accidental starvation of an all-bulk queue).
+    let model = tiny_model(1, 23);
+    let m = model.clone();
+    let router = Router::start(
+        move |_| {
+            DiTEngine::new(MiniMMDiT::new(m.cfg.clone(), m.w.clone()), Policy::full(), 8, 8)
+        },
+        RouterConfig::new(1, 2),
+    );
+    let handles: Vec<_> = (0..3u64)
+        .map(|id| {
+            router
+                .submit(request(id, 1 + id as usize, id, 2), SubmitOptions::bulk())
+                .expect("admitted")
+        })
+        .collect();
+    for h in handles {
+        assert!(h.wait().0.is_ok());
+    }
+    assert_eq!(router.in_flight(), 0, "all permits returned after completion");
+    // Priority::default() is Interactive — pin it so SubmitOptions built
+    // via Default keep latency-sensitive semantics.
+    assert_eq!(Priority::default(), Priority::Interactive);
+    router.shutdown();
+}
