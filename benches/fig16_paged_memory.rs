@@ -1,0 +1,251 @@
+//! Figure 16 (repo extension) — **paged memory under budget pressure**:
+//! peak resident pages and serving throughput for a batch of B requests,
+//! shared (symbol-identical prompts) vs distinct, unbounded vs a tight
+//! `FO_PAGE_BUDGET`.
+//!
+//! Every (scenario, budget) cell runs on a **private** [`PagePool`] so
+//! the numbers are isolated from the process-global pool. Before any
+//! timing, each cell passes the correctness gates the paged-memory PR
+//! promises:
+//!
+//! * batched outputs under *any* budget are **bitwise-identical** to
+//!   unbudgeted solo runs (eviction only ever touches released blocks,
+//!   so it is invisible to numerics);
+//! * tight-budget cells really evict (`blocks_evicted > 0`) and keep
+//!   retained pages under the budget
+//!   (`peak_resident ≤ max(budget, peak_live)` — live state is never
+//!   evicted, so the budget is soft against live growth);
+//! * the shared cell really prefix-shares: B symbol-identical requests
+//!   keep **one physical copy** of their content-identical resident
+//!   state (`share_hits > 0`, `peak_block_refs ≥ B`).
+//!
+//! Emits `BENCH_fig16.json`: one row per (scenario, budget) with wall
+//! time, requests/s, speedup vs the scenario's unbounded row, and the
+//! gate run's pool accounting (peak resident/live pages, allocations,
+//! evictions, share hits, CoW copies, peak block refcount). Row schema
+//! (custom): `{case, budget_pages, batch, steps, median_ns, min_ns,
+//! iters, req_per_s, speedup_vs_unbounded, peak_resident_pages,
+//! peak_live_pages, pages_allocated, pages_evicted, share_hits,
+//! cow_copies, peak_block_refs}`.
+//!
+//! Env: FO_BATCH (batch size B, default 4), FO_STEPS (denoising steps,
+//! default 9), FO_LAYERS (default 2), FO_PAGE_BUDGET (tight budget in
+//! pages, default 32), FO_PAGE_BYTES (page size, default 1024),
+//! FO_BUDGET (seconds per measurement, default 0.3). Knobs + the
+//! `BENCH_fig16.json` schema: `docs/benchmarks.md`.
+
+use flashomni::batch::{BatchResult, BatchedEngine};
+use flashomni::bench::{print_table, write_bench_json, Bencher, Measurement};
+use flashomni::config::{ModelConfig, SparsityConfig};
+use flashomni::engine::{DiTEngine, Policy};
+use flashomni::exec::ExecPool;
+use flashomni::mem::PagePool;
+use flashomni::model::{weights::Weights, MiniMMDiT};
+use flashomni::tensor::Tensor;
+use flashomni::workload::{caption_ids, Request};
+use std::hint::black_box;
+use std::time::Instant;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn build_model(layers: usize) -> MiniMMDiT {
+    let cfg = ModelConfig {
+        dim: 32,
+        heads: 2,
+        layers,
+        text_tokens: 8,
+        patch_h: 4,
+        patch_w: 4,
+        patch_size: 2,
+        channels: 3,
+        mlp_ratio: 2,
+        vocab: 256,
+    };
+    MiniMMDiT::new(cfg.clone(), Weights::random(&cfg, 0xf16))
+}
+
+fn policy() -> Policy {
+    Policy::flashomni(SparsityConfig {
+        tau_q: 0.6,
+        tau_kv: 0.3,
+        interval: 3,
+        order: 1,
+        s_q: 0.0,
+        block_q: 8,
+        block_k: 8,
+        pool: 1,
+        warmup: 2,
+        ramp_steps: 1,
+    })
+}
+
+fn requests(b: usize, steps: usize, text_tokens: usize, case: &str) -> Vec<Request> {
+    (0..b as u64)
+        .map(|i| {
+            let (scene, seed) =
+                if case == "shared" { (5, 1234) } else { (3 * i as usize + 1, 1000 + i) };
+            Request {
+                id: i,
+                scene,
+                prompt_ids: caption_ids(scene, text_tokens),
+                seed,
+                steps,
+                arrival_s: 0.0,
+                patch_hw: None,
+            }
+        })
+        .collect()
+}
+
+/// Unbudgeted solo reference image (private unbounded pool).
+fn solo_image(model: &MiniMMDiT, pol: &Policy, req: &Request) -> Tensor {
+    let mut engine = DiTEngine::new(model.clone(), pol.clone(), 8, 8);
+    engine.set_page_pool(&PagePool::unbounded());
+    engine.generate(&req.prompt_ids, req.seed, req.steps).image
+}
+
+/// One batched run on an explicit pool, results sorted by request id.
+fn run_batch(
+    model: &MiniMMDiT,
+    pol: &Policy,
+    reqs: &[Request],
+    pool: &PagePool,
+) -> Vec<BatchResult> {
+    let mut engine = BatchedEngine::new(model.clone(), pol.clone(), 8, 8, reqs.len());
+    engine.set_page_pool(pool);
+    for r in reqs {
+        engine.admit(r.clone(), Instant::now());
+    }
+    let mut out = engine.run_to_completion();
+    out.sort_by_key(|r| r.id);
+    out
+}
+
+fn main() {
+    let b = env_usize("FO_BATCH", 4);
+    let steps = env_usize("FO_STEPS", 9);
+    let layers = env_usize("FO_LAYERS", 2);
+    let tight = env_u64("FO_PAGE_BUDGET", 32).max(1);
+    let page_bytes = env_usize("FO_PAGE_BYTES", 1024);
+    let bencher = Bencher { warmup: 1, min_iters: 3, budget_s: env_f64("FO_BUDGET", 0.3) };
+    let model = build_model(layers);
+    let pol = policy();
+
+    println!(
+        "# Figure 16 — paged memory: B={b} × {steps} steps, {layers} layers, \
+         page {page_bytes} B, tight budget {tight} pages, exec pool {} threads",
+        ExecPool::global().size()
+    );
+
+    let mut rows: Vec<(Measurement, Option<f64>)> = Vec::new();
+    let mut json_rows: Vec<String> = Vec::new();
+    for case in ["shared", "distinct"] {
+        let reqs = requests(b, steps, model.cfg.text_tokens, case);
+        let solo: Vec<Tensor> = reqs.iter().map(|r| solo_image(&model, &pol, r)).collect();
+        let mut base: Option<f64> = None;
+        for budget in [0u64, tight] {
+            // Correctness gates before timing anything.
+            let pool = PagePool::with_budget(budget, page_bytes);
+            let results = run_batch(&model, &pol, &reqs, &pool);
+            for (r, want) in results.iter().zip(&solo) {
+                assert_eq!(
+                    &r.image, want,
+                    "case {case} budget {budget}: request {} must be bitwise-identical \
+                     to its unbudgeted solo run",
+                    r.id
+                );
+            }
+            let ps = pool.stats();
+            if budget > 0 {
+                assert!(
+                    ps.blocks_evicted > 0,
+                    "tight budget must actually evict (case {case}): {ps:?}"
+                );
+                assert!(
+                    ps.peak_resident_pages <= ps.peak_live_pages.max(budget),
+                    "retained pages must stay under the budget (case {case}): {ps:?}"
+                );
+            }
+            if case == "shared" && b > 1 {
+                assert!(ps.share_hits > 0, "identical batch must prefix-share: {ps:?}");
+                assert!(
+                    ps.peak_block_refs >= b as u64,
+                    "B symbol-identical requests must ride one physical copy \
+                     (refcount ≥ {b}): {ps:?}"
+                );
+            }
+            println!(
+                "  gate {case} budget={budget}: peak resident {} / live {} pages, \
+                 {} pages evicted, {} share hits, peak refs {}",
+                ps.peak_resident_pages,
+                ps.peak_live_pages,
+                ps.pages_evicted,
+                ps.share_hits,
+                ps.peak_block_refs
+            );
+
+            let m = bencher.run(&format!("{case} budget={budget}"), || {
+                let pool = PagePool::with_budget(budget, page_bytes);
+                black_box(run_batch(&model, &pol, &reqs, &pool));
+            });
+            let rps = b as f64 / m.median_s;
+            if budget == 0 {
+                base = Some(m.median_s);
+            }
+            let speedup = base.map(|b0| b0 / m.median_s).unwrap_or(1.0);
+            json_rows.push(format!(
+                "{{\"case\":\"{case}\",\"budget_pages\":{budget},\"batch\":{b},\
+                 \"steps\":{steps},\"median_ns\":{:.0},\"min_ns\":{:.0},\"iters\":{},\
+                 \"req_per_s\":{rps:.4},\"speedup_vs_unbounded\":{speedup:.4},\
+                 \"peak_resident_pages\":{},\"peak_live_pages\":{},\
+                 \"pages_allocated\":{},\"pages_evicted\":{},\"share_hits\":{},\
+                 \"cow_copies\":{},\"peak_block_refs\":{}}}",
+                m.median_s * 1e9,
+                m.min_s * 1e9,
+                m.iters,
+                ps.peak_resident_pages,
+                ps.peak_live_pages,
+                ps.pages_allocated,
+                ps.pages_evicted,
+                ps.share_hits,
+                ps.cow_copies,
+                ps.peak_block_refs,
+            ));
+            rows.push((m, Some(speedup)));
+        }
+    }
+    print_table("fig16 — paged memory: throughput vs page budget", &rows);
+
+    match write_bench_json(
+        "BENCH_fig16.json",
+        "fig16_paged_memory",
+        &[
+            ("batch", b as f64),
+            ("steps", steps as f64),
+            ("layers", layers as f64),
+            ("dim", model.cfg.dim as f64),
+            ("heads", model.cfg.heads as f64),
+            ("seq", model.cfg.seq_len() as f64),
+            ("page_bytes", page_bytes as f64),
+            ("tight_budget_pages", tight as f64),
+            ("exec_pool_threads", ExecPool::global().size() as f64),
+        ],
+        &json_rows,
+    ) {
+        Ok(()) => println!("\nwrote BENCH_fig16.json ({} rows)", json_rows.len()),
+        Err(e) => eprintln!("could not write BENCH_fig16.json: {e}"),
+    }
+    for p in flashomni::obs::export_if_enabled() {
+        println!("wrote {p}");
+    }
+}

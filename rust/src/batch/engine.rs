@@ -14,6 +14,7 @@ use crate::exec::ExecPool;
 use crate::kernels::attention::flashomni_attention_ragged;
 use crate::kernels::gemm_o::gemm_o_dispatch_ragged;
 use crate::kernels::gemm_q::gemm_q_ragged;
+use crate::mem::{digest_tensor, tensor_bytes, PagePool, Pooled};
 use crate::model::blocks::{
     headwise_rmsnorm, headwise_rope, insert_head, linear, mlp_stream, pre_attention, vsplit,
     vstack, vstack_all, PreAttn,
@@ -118,6 +119,8 @@ struct SharedPlanProvider<'c> {
     lane: u64,
     /// Delta compilation on a miss (mirrors `DiTEngine::set_delta_compile`).
     delta: bool,
+    /// Pool compiled segments are allocated in.
+    mem: &'c PagePool,
 }
 
 impl PlanProvider for SharedPlanProvider<'_> {
@@ -129,8 +132,9 @@ impl PlanProvider for SharedPlanProvider<'_> {
     ) -> (Arc<LayerPlans>, CacheOutcome) {
         let key = plan_key(syms, geo);
         let base = if self.delta { base } else { None };
-        self.cache.get_or_build_shared(&key, self.epoch, self.lane, || {
-            build_plans(syms, geo, key.clone(), base)
+        let mem = self.mem;
+        self.cache.get_or_build_keyed(&key, self.epoch, self.lane, |pk| {
+            build_plans(syms, geo, pk.clone(), base, mem)
         })
     }
 }
@@ -153,6 +157,10 @@ pub struct BatchedEngine {
     preview_interval: usize,
     /// Previews decoded since the last [`Self::take_previews`] drain.
     previews: Vec<Preview>,
+    /// Paged pool backing every slot's resident state (TaylorSeer + bias
+    /// stacks, plan segments, plan keys, deduped text K/V). Shared across
+    /// the batch — that is what makes prefix sharing work.
+    mem: PagePool,
 }
 
 impl BatchedEngine {
@@ -179,18 +187,20 @@ impl BatchedEngine {
     ) -> Self {
         let geo = Geometry::from_model(&model.cfg, block_q, block_k, pool);
         let panels = LayerPanels::for_model(&model);
+        let mem = PagePool::global().clone();
         BatchedEngine {
             model,
             policy,
             geo,
             panels,
             exec: ExecPool::global(),
-            cache: SharedPlanCache::new(PLAN_CACHE_CAP),
+            cache: SharedPlanCache::new_in(PLAN_CACHE_CAP, &mem),
             slots: Vec::new(),
             max_batch: max_batch.max(1),
             delta_enabled: true,
             preview_interval: 0,
             previews: Vec::new(),
+            mem,
         }
     }
 
@@ -199,19 +209,20 @@ impl BatchedEngine {
     /// no panel re-gather). The plan cache starts fresh — swap in a
     /// shared one via [`Self::set_plan_cache`].
     pub fn from_engine(engine: DiTEngine, max_batch: usize) -> Self {
-        let (model, policy, geo, panels, exec) = engine.into_batch_parts();
+        let (model, policy, geo, panels, exec, mem) = engine.into_batch_parts();
         BatchedEngine {
             model,
             policy,
             geo,
             panels,
             exec,
-            cache: SharedPlanCache::new(PLAN_CACHE_CAP),
+            cache: SharedPlanCache::new_in(PLAN_CACHE_CAP, &mem),
             slots: Vec::new(),
             max_batch: max_batch.max(1),
             delta_enabled: true,
             preview_interval: 0,
             previews: Vec::new(),
+            mem,
         }
     }
 
@@ -259,6 +270,22 @@ impl BatchedEngine {
     /// The (possibly shared) plan-compile cache handle.
     pub fn plan_cache(&self) -> &SharedPlanCache<LayerPlans> {
         &self.cache
+    }
+
+    /// Swap the paged pool backing every slot's resident state (private
+    /// budgets in tests and benches). Rebuilds the plan cache on the new
+    /// pool so plan keys/segments live there too (a cache installed via
+    /// [`Self::set_plan_cache`] is discarded — swap pools first when
+    /// combining the two). Call before admitting requests:
+    /// already-admitted slots keep their old pool's blocks.
+    pub fn set_page_pool(&mut self, mem: &PagePool) {
+        self.mem = mem.clone();
+        self.cache = SharedPlanCache::new_in(PLAN_CACHE_CAP, mem);
+    }
+
+    /// The paged pool backing this batch's resident state.
+    pub fn page_pool(&self) -> &PagePool {
+        &self.mem
     }
 
     /// Lifetime counters of the (possibly shared) plan cache.
@@ -326,7 +353,8 @@ impl BatchedEngine {
         let kinds = plan_steps(req.steps, warmup.min(req.steps), interval);
         let grid = time_grid(req.steps);
         let order = policy.order();
-        let state = (0..self.model.cfg.layers).map(|_| LayerState::new(order)).collect();
+        let state =
+            (0..self.model.cfg.layers).map(|_| LayerState::new_in(order, &self.mem)).collect();
         // Per-request resolution: apply the request's vision-grid override
         // to a copy of the engine config and rederive the tile geometry.
         // Weight-shaping fields are untouched, so the same weights serve
@@ -403,6 +431,7 @@ impl BatchedEngine {
         // so concurrent engines sharing it cannot cross-attribute.
         let epoch = self.cache.begin_epoch();
         let layers = self.model.cfg.layers;
+        let mem0 = self.mem.stats();
 
         // ---- Phase A: per-slot embeddings + conditioning. ----
         let mut ctxs: Vec<StepCtx> = Vec::with_capacity(self.slots.len());
@@ -421,7 +450,8 @@ impl BatchedEngine {
 
         // ---- Phase B: layer loop — one ragged group per layer. ----
         {
-            let BatchedEngine { model, panels, exec, cache, slots, delta_enabled, .. } = self;
+            let BatchedEngine { model, panels, exec, cache, slots, delta_enabled, mem, .. } =
+                self;
             let model: &MiniMMDiT = model;
             let exec: &Arc<ExecPool> = exec;
             for layer in 0..layers {
@@ -437,7 +467,7 @@ impl BatchedEngine {
                 }
                 if ragged.len() >= 2 {
                     sparse_block_ragged(
-                        model, &panels[layer], exec, slots, &mut ctxs, &ragged, layer, bw,
+                        model, &panels[layer], exec, mem, slots, &mut ctxs, &ragged, layer, bw,
                     );
                 } else {
                     singles.extend(ragged);
@@ -453,6 +483,7 @@ impl BatchedEngine {
                         epoch,
                         lane: i as u64,
                         delta: *delta_enabled,
+                        mem,
                     };
                     let mut block_exec = EngineExec {
                         policy: &mut slot.policy,
@@ -464,6 +495,7 @@ impl BatchedEngine {
                         kind: ctx.kind,
                         step: slot.step,
                         stats: &mut slot.stats,
+                        mem,
                     };
                     block_exec.block(layer, bw, &slot_cfg, &ctx.cvec, &mut ctx.txt, &mut ctx.img);
                 }
@@ -506,6 +538,17 @@ impl BatchedEngine {
                 });
                 obs::metrics::REQUESTS_PREVIEW.inc();
             }
+        }
+        // Attribute this step's pool traffic to every in-flight slot (the
+        // pool is batch-shared, so each slot experienced the batch-wide
+        // footprint), before retiring slots that just finished.
+        let mem1 = self.mem.stats();
+        for slot in &mut self.slots {
+            slot.stats.mem_pages_allocated += mem1.pages_allocated - mem0.pages_allocated;
+            slot.stats.mem_pages_evicted += mem1.pages_evicted - mem0.pages_evicted;
+            slot.stats.mem_share_hits += mem1.share_hits - mem0.share_hits;
+            slot.stats.mem_cow_copies += mem1.cow_copies - mem0.cow_copies;
+            slot.stats.mem_peak_pages = slot.stats.mem_peak_pages.max(mem1.peak_resident_pages);
         }
         finished.extend(self.retire_finished());
         finished
@@ -563,6 +606,13 @@ impl BatchedEngine {
     }
 }
 
+/// Copy out row block `idx` (of `rows` rows each) of a row-concatenated
+/// tensor — the per-unique split of the deduped text K/V projection.
+fn row_block(cat: &Tensor, idx: usize, rows: usize) -> Tensor {
+    let d = cat.cols();
+    Tensor::from_vec(&[rows, d], cat.data()[idx * rows * d..(idx + 1) * rows * d].to_vec())
+}
+
 /// Interleave two stream-major concatenations into joint order: for each
 /// request `r`, its text rows (`t_cat[txt_indptr[r]..txt_indptr[r+1]]`)
 /// followed by its image rows (`i_cat[img_indptr[r]..img_indptr[r+1]]`) —
@@ -597,6 +647,7 @@ fn sparse_block_ragged(
     model: &MiniMMDiT,
     panels: &LayerPanels,
     exec: &Arc<ExecPool>,
+    mem: &PagePool,
     slots: &mut [Slot],
     ctxs: &mut [StepCtx],
     group: &[usize],
@@ -642,15 +693,51 @@ fn sparse_block_ragged(
     }
     let txt_cat = vstack_all(&pres.iter().map(|p| &p.txt_mod).collect::<Vec<_>>());
     let img_cat = vstack_all(&pres.iter().map(|p| &p.img_mod).collect::<Vec<_>>());
-    // Stacked K/V: one GEMM per (stream, projection) for the whole group
-    // instead of a per-request `project_kv_joint` loop. `linear` and
-    // `headwise_rmsnorm` are row-local, so each request's rows match its
-    // solo projection float-for-float.
-    let mut k_t_cat = linear(&txt_cat, &bw.txt.wk, &bw.txt.bk);
-    let v_t_cat = linear(&txt_cat, &bw.txt.wv, &bw.txt.bv);
+    // Text-stream K/V dedupe: `linear` and `headwise_rmsnorm` are
+    // row-local, so slots whose modulated text streams are byte-identical
+    // (same-prompt requests in lockstep) produce identical text K/V.
+    // Project each **distinct** stream once, intern the result in the
+    // page pool, and hand duplicates a refcount bump on the same physical
+    // block — one copy for the whole batch (prefix sharing). With all
+    // streams distinct, `uniq` is the identity in group order, so the
+    // projected rows are exactly the ones the plain concatenated GEMM
+    // would produce (single code path, bitwise-identical either way).
+    let mut uniq: Vec<usize> = Vec::new();
+    let mut rep: Vec<usize> = Vec::with_capacity(group.len());
+    for (gi, p) in pres.iter().enumerate() {
+        match uniq.iter().position(|&u| pres[u].txt_mod == p.txt_mod) {
+            Some(pos) => rep.push(pos),
+            None => {
+                rep.push(uniq.len());
+                uniq.push(gi);
+            }
+        }
+    }
+    let txt_uniq_cat = vstack_all(&uniq.iter().map(|&u| &pres[u].txt_mod).collect::<Vec<_>>());
+    let mut k_t_uniq = linear(&txt_uniq_cat, &bw.txt.wk, &bw.txt.bk);
+    let v_t_uniq = linear(&txt_uniq_cat, &bw.txt.wv, &bw.txt.bv);
+    headwise_rmsnorm(&mut k_t_uniq, heads, &bw.txt.k_rms);
+    let kv_uniq: Vec<(Pooled<Tensor>, Pooled<Tensor>)> = (0..uniq.len())
+        .map(|u| {
+            let kt = row_block(&k_t_uniq, u, text);
+            let vt = row_block(&v_t_uniq, u, text);
+            let kh = mem.intern_digest(digest_tensor(b"kvtxt", &kt), tensor_bytes(&kt), kt).0;
+            let vh = mem.intern_digest(digest_tensor(b"kvtxt", &vt), tensor_bytes(&vt), vt).0;
+            (kh, vh)
+        })
+        .collect();
+    // Per-slot handles: clones are refcount bumps, not byte copies. A
+    // batch of B same-prompt slots drives each text K/V block to
+    // ref_count == B here.
+    let kv_slots: Vec<&(Pooled<Tensor>, Pooled<Tensor>)> =
+        rep.iter().map(|&p| &kv_uniq[p]).collect();
+    let k_t_cat = vstack_all(&kv_slots.iter().map(|kv| &*kv.0).collect::<Vec<_>>());
+    let v_t_cat = vstack_all(&kv_slots.iter().map(|kv| &*kv.1).collect::<Vec<_>>());
+    // Stacked image K/V: one GEMM per projection for the whole group
+    // instead of a per-request `project_kv_joint` loop (vision suffixes
+    // are ragged and seed-distinct, so no dedupe attempt there).
     let mut k_i_cat = linear(&img_cat, &bw.img.wk, &bw.img.bk);
     let v_i_cat = linear(&img_cat, &bw.img.wv, &bw.img.bv);
-    headwise_rmsnorm(&mut k_t_cat, heads, &bw.txt.k_rms);
     headwise_rmsnorm(&mut k_i_cat, heads, &bw.img.k_rms);
     let q_txt =
         gemm_q_ragged(&txt_cat, &txt_indptr, &bw.txt.wq, &txt_plans, Some(&bw.txt.bq), exec);

@@ -17,7 +17,15 @@
 //! [`TaylorCache`] maintains the difference stack for any tensor-valued
 //! feature; the engine instantiates one per cached quantity (per-layer
 //! attention outputs, GEMM-O bias stacks, whole-block deltas).
+//!
+//! Since the paged-memory refactor the difference stack lives in
+//! [`PagePool`] blocks: every entry is interned by content digest, so the
+//! stacks of symbol-identical requests across a batch share one physical
+//! copy per entry (prefix sharing), and each finite-difference write goes
+//! through the pool's copy-on-write path so a shared page is never
+//! mutated in place.
 
+use crate::mem::{digest_tensor, tensor_bytes, PagePool, Pooled};
 use crate::tensor::Tensor;
 
 /// Finite-difference Taylor forecaster for a tensor-valued feature.
@@ -25,15 +33,30 @@ use crate::tensor::Tensor;
 pub struct TaylorCache {
     /// Maximum expansion order `D`.
     pub order: usize,
-    /// Difference stack: `stack[d]` = d-th finite difference (per step).
-    stack: Vec<Tensor>,
+    /// Difference stack: `stack[d]` = d-th finite difference (per step),
+    /// each entry a pool block shared across content-identical caches.
+    stack: Vec<Pooled<Tensor>>,
     /// How many stack entries are valid so far (grows with updates).
     filled: usize,
+    /// Pool backing the stack entries.
+    mem: PagePool,
 }
 
 impl TaylorCache {
+    /// Cache of order `D`, backed by the process-global [`PagePool`].
     pub fn new(order: usize) -> Self {
-        TaylorCache { order, stack: Vec::new(), filled: 0 }
+        TaylorCache::new_in(order, PagePool::global())
+    }
+
+    /// Cache of order `D`, backed by an explicit pool (private budgets
+    /// in tests and benches).
+    pub fn new_in(order: usize, mem: &PagePool) -> Self {
+        TaylorCache { order, stack: Vec::new(), filled: 0, mem: mem.clone() }
+    }
+
+    /// The pool backing this cache's stack.
+    pub fn pool(&self) -> &PagePool {
+        &self.mem
     }
 
     /// Whether at least one update has been recorded.
@@ -52,16 +75,30 @@ impl TaylorCache {
     /// per-step units.
     pub fn update(&mut self, value: &Tensor, dt: f64) {
         let dt = dt.max(1.0) as f32;
-        let mut new_stack: Vec<Tensor> = Vec::with_capacity(self.order + 1);
-        new_stack.push(value.clone());
+        let mut new_stack: Vec<Pooled<Tensor>> = Vec::with_capacity(self.order + 1);
+        let (v0, _) = self.mem.intern_digest(
+            digest_tensor(b"taylor", value),
+            tensor_bytes(value),
+            value.clone(),
+        );
+        new_stack.push(v0);
         // Δᵈ_new = (Δᵈ⁻¹_new − Δᵈ⁻¹_old) / dt, while history exists.
         for d in 1..=self.order {
             if d > self.filled {
                 break;
             }
+            // Clone the (shared, interned) handle and write the difference
+            // through the pool's copy-on-write path …
             let mut diff = new_stack[d - 1].clone();
-            diff.sub_assign(&self.stack[d - 1]);
-            diff.scale(1.0 / dt);
+            {
+                let t = diff.make_mut();
+                t.sub_assign(&self.stack[d - 1]);
+                t.scale(1.0 / dt);
+            }
+            // … then re-intern the result so content-identical caches
+            // (symbol-identical batch slots) share one physical copy.
+            let dg = digest_tensor(b"taylor", &diff);
+            diff.make_shared(dg);
             new_stack.push(diff);
         }
         self.filled = (self.filled + 1).min(self.order + 1);
@@ -72,11 +109,11 @@ impl TaylorCache {
     /// `k = 0` returns the stored value exactly.
     pub fn forecast(&self, k: f64) -> Tensor {
         assert!(self.is_ready(), "forecast before any update");
-        let mut out = self.stack[0].clone();
+        let mut out = Tensor::clone(&self.stack[0]);
         let mut coeff = 1.0f64;
         for d in 1..self.stack.len() {
             coeff *= k / d as f64;
-            let mut term = self.stack[d].clone();
+            let mut term = Tensor::clone(&self.stack[d]);
             term.scale(coeff as f32);
             out.add_assign(&term);
         }
@@ -85,7 +122,7 @@ impl TaylorCache {
 
     /// Borrow the difference stack (used by the GEMM-O bias construction,
     /// which projects each difference separately — Eq. 4 linearity).
-    pub fn stack(&self) -> &[Tensor] {
+    pub fn stack(&self) -> &[Pooled<Tensor>] {
         &self.stack[..self.filled.min(self.stack.len())]
     }
 
@@ -114,16 +151,17 @@ impl TaylorCache {
 }
 
 /// Linear combination of a set of bias tensors with Taylor coefficients —
-/// the Dispatch-step `OP_reuse(B_c)` (elementwise, cheap).
-pub fn combine_bias_stack(stack: &[Tensor], coeffs: &[f32]) -> Tensor {
+/// the Dispatch-step `OP_reuse(B_c)` (elementwise, cheap). Generic over
+/// plain `Tensor`s and pool-backed [`Pooled<Tensor>`] handles.
+pub fn combine_bias_stack<S: std::borrow::Borrow<Tensor>>(stack: &[S], coeffs: &[f32]) -> Tensor {
     assert!(!stack.is_empty());
-    let mut out = stack[0].clone();
+    let mut out = stack[0].borrow().clone();
     for (d, t) in stack.iter().enumerate().skip(1) {
         if d >= coeffs.len() || coeffs[d] == 0.0 {
             continue;
         }
         let c = coeffs[d];
-        for (o, &x) in out.data_mut().iter_mut().zip(t.data()) {
+        for (o, &x) in out.data_mut().iter_mut().zip(t.borrow().data()) {
             *o += c * x;
         }
     }

@@ -65,6 +65,7 @@ use crate::model::blocks::{
     self, extract_head, insert_head, linear, mlp_stream, post_attention, pre_attention,
     qkv_joint, vsplit, vstack,
 };
+use crate::mem::{digest_tensor, tensor_bytes, PagePool, Pooled, PooledBytes};
 use crate::model::{BlockExec, BlockWeights, MiniMMDiT};
 use crate::obs::{self, Span};
 use crate::plan::cache::{symbol_key, CacheOutcome, CacheStats, Compiled, PlanCache};
@@ -156,6 +157,24 @@ pub struct RunStats {
     /// key miss). 0 when delta compilation is disabled
     /// ([`DiTEngine::set_delta_compile`]).
     pub plan_cache_delta: u64,
+    /// Paged-pool traffic attributed to this run: pages freshly allocated
+    /// from the engine's [`PagePool`] while the run was in flight. On the
+    /// batched engine the pool is shared by the whole batch, so each
+    /// in-flight slot is attributed the batch-wide per-step delta (every
+    /// slot experienced that resident footprint).
+    pub mem_pages_allocated: u64,
+    /// Pages evicted under `FO_PAGE_BUDGET` pressure during the run.
+    pub mem_pages_evicted: u64,
+    /// Prefix-share hits during the run: allocations served by an
+    /// existing content-identical block (refcount bump, one physical
+    /// copy). A batch of B symbol-identical requests drives this up by
+    /// B−1 per interned quantity.
+    pub mem_share_hits: u64,
+    /// Copy-on-write copies during the run (writes to shared blocks).
+    pub mem_cow_copies: u64,
+    /// Pool-wide peak resident pages observed by the end of the run
+    /// (bounded by `FO_PAGE_BUDGET` + live pages; see `[mem]`).
+    pub mem_peak_pages: u64,
     /// Per-step mean attention density (Fig. 7).
     pub per_step_density: Vec<f64>,
     /// FLOPs actually executed vs the dense equivalent.
@@ -209,7 +228,9 @@ pub struct LayerPlans {
     /// The plan-cache key ([`LayerPlans::cache_key`]) this set was compiled
     /// under — the packed symbol bytes + geometry an incoming refresh is
     /// diffed against for an incremental recompile ([`LayerPlans::delta_from`]).
-    pub key: Vec<u8>,
+    /// Pool-interned: this handle, the `PlanCache` map key, and its FIFO
+    /// entry are refcount bumps on **one** physical byte allocation.
+    pub key: PooledBytes,
 }
 
 /// Number of geometry parameters in a plan-cache key (the prefix
@@ -226,16 +247,30 @@ pub(crate) fn plan_key(syms: &LayerSymbols, geo: &Geometry) -> Vec<u8> {
     )
 }
 
+/// Intern a plan-cache key's bytes into `mem` (the `b"plankey"`
+/// namespace the [`PlanCache`] interns under, so standalone compiles and
+/// cache-driven compiles share key blocks when they share a pool).
+fn intern_plan_key(syms: &LayerSymbols, geo: &Geometry, mem: &PagePool) -> PooledBytes {
+    mem.intern_bytes(b"plankey", &plan_key(syms, geo)).0
+}
+
 /// Decode the layer's symbols exactly once into the plan set every sparse
-/// kernel of the layer consumes (symbols → plan compile step).
-pub(crate) fn compile_plans(syms: &LayerSymbols, geo: &Geometry, key: Vec<u8>) -> LayerPlans {
-    let joint = SparsePlan::compile(
+/// kernel of the layer consumes (symbols → plan compile step). Row-group
+/// segments are allocated in `mem`.
+pub(crate) fn compile_plans(
+    syms: &LayerSymbols,
+    geo: &Geometry,
+    key: PooledBytes,
+    mem: &PagePool,
+) -> LayerPlans {
+    let joint = SparsePlan::compile_in(
         syms,
         geo.t_q(),
         geo.t_kv(),
         geo.block_q,
         geo.block_k,
         DecodeMode::RowCached,
+        mem,
     );
     let tb = geo.text_blocks();
     LayerPlans { txt: joint.slice_q(0, tb), img: joint.slice_q(tb, geo.t_q()), joint, key }
@@ -251,7 +286,7 @@ fn apply_layer_delta(
     delta: &PlanDelta,
     syms: &LayerSymbols,
     geo: &Geometry,
-    key: Vec<u8>,
+    key: PooledBytes,
 ) -> LayerPlans {
     let tbg = geo.text_groups();
     let qg = geo.q_groups();
@@ -277,8 +312,9 @@ fn apply_layer_delta(
 pub(crate) fn build_plans(
     syms: &LayerSymbols,
     geo: &Geometry,
-    key: Vec<u8>,
+    key: PooledBytes,
     base: Option<&LayerPlans>,
+    mem: &PagePool,
 ) -> Compiled<LayerPlans> {
     if let Some(b) = base {
         if let Some(delta) = PlanDelta::between(&b.key, &key, syms, PLAN_KEY_GEOMETRY_PARAMS) {
@@ -287,7 +323,7 @@ pub(crate) fn build_plans(
         }
     }
     let _sp = Span::enter("plan.compile_full", &obs::metrics::PLAN_COMPILE_FULL);
-    Compiled::Full(compile_plans(syms, geo, key))
+    Compiled::Full(compile_plans(syms, geo, key, mem))
 }
 
 impl LayerPlans {
@@ -301,9 +337,10 @@ impl LayerPlans {
 
     /// Compile a layer's symbols from scratch into the joint plan plus the
     /// text/vision row slices (what the engine does on a plan-cache miss
-    /// with no delta base).
+    /// with no delta base). Segments and key live in the global pool.
     pub fn compile(syms: &LayerSymbols, geo: &Geometry) -> LayerPlans {
-        compile_plans(syms, geo, plan_key(syms, geo))
+        let mem = PagePool::global();
+        compile_plans(syms, geo, intern_plan_key(syms, geo, mem), mem)
     }
 
     /// Incremental recompile: diff `syms` against `base`'s key and rebuild
@@ -319,6 +356,7 @@ impl LayerPlans {
     ) -> Option<LayerPlans> {
         let key = plan_key(syms, geo);
         let delta = PlanDelta::between(&base.key, &key, syms, PLAN_KEY_GEOMETRY_PARAMS)?;
+        let key = base.key.pool().intern_bytes(b"plankey", &key).0;
         Some(apply_layer_delta(base, &delta, syms, geo, key))
     }
 }
@@ -332,9 +370,11 @@ pub(crate) struct LayerState {
     pub(crate) plans: Option<Arc<LayerPlans>>,
     /// TaylorSeer stack over the joint attention output `O_cat`.
     pub(crate) o_taylor: TaylorCache,
-    /// Projected bias stacks per stream (one tensor per Taylor order).
-    pub(crate) bias_txt: Vec<Tensor>,
-    pub(crate) bias_img: Vec<Tensor>,
+    /// Projected bias stacks per stream (one pool block per Taylor
+    /// order, content-interned so symbol-identical requests share one
+    /// physical copy per entry).
+    pub(crate) bias_txt: Vec<Pooled<Tensor>>,
+    pub(crate) bias_img: Vec<Pooled<Tensor>>,
     /// Whole-block residual-delta caches (degradation + caching baselines).
     pub(crate) delta_txt: TaylorCache,
     pub(crate) delta_img: TaylorCache,
@@ -344,14 +384,15 @@ pub(crate) struct LayerState {
 }
 
 impl LayerState {
-    pub(crate) fn new(order: usize) -> Self {
+    /// Per-layer state whose caches allocate from `mem`.
+    pub(crate) fn new_in(order: usize, mem: &PagePool) -> Self {
         LayerState {
             plans: None,
-            o_taylor: TaylorCache::new(order),
+            o_taylor: TaylorCache::new_in(order, mem),
             bias_txt: Vec::new(),
             bias_img: Vec::new(),
-            delta_txt: TaylorCache::new(order),
-            delta_img: TaylorCache::new(order),
+            delta_txt: TaylorCache::new_in(order, mem),
+            delta_img: TaylorCache::new_in(order, mem),
             degraded: false,
             last_update_step: None,
         }
@@ -411,6 +452,8 @@ pub(crate) struct LocalPlanProvider<'c> {
     pub(crate) cache: &'c mut PlanCache<LayerPlans>,
     /// Delta compilation on a miss (true unless disabled for A/B tests).
     pub(crate) delta: bool,
+    /// Pool compiled segments are allocated in.
+    pub(crate) mem: &'c PagePool,
 }
 
 impl PlanProvider for LocalPlanProvider<'_> {
@@ -422,8 +465,9 @@ impl PlanProvider for LocalPlanProvider<'_> {
     ) -> (Arc<LayerPlans>, CacheOutcome) {
         let key = plan_key(syms, geo);
         let base = if self.delta { base } else { None };
+        let mem = self.mem;
         self.cache
-            .get_or_build_shared(&key, 0, 0, || build_plans(syms, geo, key.clone(), base))
+            .get_or_build_keyed(&key, 0, 0, |pk| build_plans(syms, geo, pk.clone(), base, mem))
     }
 }
 
@@ -444,6 +488,10 @@ pub struct DiTEngine {
     /// Delta-compile refreshes that miss the cache but row-diff against
     /// the layer's previous plan (on by default).
     delta_enabled: bool,
+    /// Paged pool backing this engine's resident state: TaylorSeer
+    /// stacks, bias stacks, plan segments, and plan-cache keys. Defaults
+    /// to [`PagePool::global`] (which reads `FO_PAGE_BUDGET`).
+    mem: PagePool,
 }
 
 impl DiTEngine {
@@ -464,7 +512,8 @@ impl DiTEngine {
         let geo = Geometry::from_model(&model.cfg, block_q, block_k, pool);
         let order = policy.order();
         let panels = LayerPanels::for_model(&model);
-        let state = (0..model.cfg.layers).map(|_| LayerState::new(order)).collect();
+        let mem = PagePool::global().clone();
+        let state = (0..model.cfg.layers).map(|_| LayerState::new_in(order, &mem)).collect();
         DiTEngine {
             model,
             policy,
@@ -472,8 +521,9 @@ impl DiTEngine {
             state,
             panels,
             exec: ExecPool::global(),
-            plan_cache: PlanCache::new(PLAN_CACHE_CAP),
+            plan_cache: PlanCache::new_in(PLAN_CACHE_CAP, &mem),
             delta_enabled: true,
+            mem,
         }
     }
 
@@ -483,8 +533,8 @@ impl DiTEngine {
     #[allow(clippy::type_complexity)]
     pub(crate) fn into_batch_parts(
         self,
-    ) -> (MiniMMDiT, Policy, Geometry, Vec<LayerPanels>, Arc<ExecPool>) {
-        (self.model, self.policy, self.geo, self.panels, self.exec)
+    ) -> (MiniMMDiT, Policy, Geometry, Vec<LayerPanels>, Arc<ExecPool>, PagePool) {
+        (self.model, self.policy, self.geo, self.panels, self.exec, self.mem)
     }
 
     /// Swap the execution pool (tests exercise pool-size determinism; the
@@ -503,6 +553,20 @@ impl DiTEngine {
         self.plan_cache.stats()
     }
 
+    /// Swap the paged pool backing this engine's resident state (private
+    /// budgets in tests and benches). Resets per-layer caches and the
+    /// plan cache so every block lives in the new pool.
+    pub fn set_page_pool(&mut self, mem: &PagePool) {
+        self.mem = mem.clone();
+        self.plan_cache = PlanCache::new_in(PLAN_CACHE_CAP, mem);
+        self.reset();
+    }
+
+    /// The paged pool backing this engine's resident state.
+    pub fn page_pool(&self) -> &PagePool {
+        &self.mem
+    }
+
     /// Enable/disable incremental plan recompiles (on by default). With
     /// delta off, every cache miss compiles from scratch — outputs are
     /// identical either way (the delta path is property-tested bitwise
@@ -517,7 +581,7 @@ impl DiTEngine {
     pub fn reset(&mut self) {
         let order = self.policy.order();
         for s in self.state.iter_mut() {
-            *s = LayerState::new(order);
+            *s = LayerState::new_in(order, &self.mem);
         }
         self.policy.reset();
     }
@@ -530,6 +594,7 @@ impl DiTEngine {
         let grid = time_grid(steps);
         let mut x = initial_noise(&self.model.cfg, seed);
         let mut stats = RunStats { steps, ..Default::default() };
+        let mem0 = self.mem.stats();
         let t0 = std::time::Instant::now();
         for (step, kind) in plan.iter().enumerate() {
             let t = grid[step];
@@ -552,6 +617,12 @@ impl DiTEngine {
             });
         }
         stats.wall_s = t0.elapsed().as_secs_f64();
+        let mem1 = self.mem.stats();
+        stats.mem_pages_allocated = mem1.pages_allocated - mem0.pages_allocated;
+        stats.mem_pages_evicted = mem1.pages_evicted - mem0.pages_evicted;
+        stats.mem_share_hits = mem1.share_hits - mem0.share_hits;
+        stats.mem_cow_copies = mem1.cow_copies - mem0.cow_copies;
+        stats.mem_peak_pages = mem1.peak_resident_pages;
         GenResult { image: unpatchify(&x, &self.model.cfg), stats }
     }
 
@@ -569,9 +640,9 @@ impl DiTEngine {
     ) -> Tensor {
         let _step_span = Span::enter("engine.step", &obs::metrics::ENGINE_STEP);
         obs::metrics::ENGINE_STEPS.inc();
-        let DiTEngine { model, policy, geo, state, panels, exec, plan_cache, delta_enabled } =
+        let DiTEngine { model, policy, geo, state, panels, exec, plan_cache, delta_enabled, mem } =
             self;
-        let mut plans = LocalPlanProvider { cache: plan_cache, delta: *delta_enabled };
+        let mut plans = LocalPlanProvider { cache: plan_cache, delta: *delta_enabled, mem };
         let mut block_exec = EngineExec {
             policy,
             geo: *geo,
@@ -582,6 +653,7 @@ impl DiTEngine {
             kind,
             step,
             stats,
+            mem,
         };
         model.forward_with(&mut block_exec, text_ids, x, t)
     }
@@ -610,6 +682,8 @@ pub(crate) struct EngineExec<'a> {
     pub(crate) kind: StepKind,
     pub(crate) step: usize,
     pub(crate) stats: &'a mut RunStats,
+    /// Paged pool the bias stacks are interned into.
+    pub(crate) mem: &'a PagePool,
 }
 
 impl<'a> EngineExec<'a> {
@@ -780,6 +854,7 @@ impl<'a> EngineExec<'a> {
         self.phase(2, |this| {
             let exec = Arc::clone(this.exec);
             let panels = &this.panels[layer];
+            let mem = this.mem;
             let LayerState { plans, bias_txt, bias_img, o_taylor, .. } =
                 &mut this.state[layer];
             if let Some(pl) = plans.as_ref() {
@@ -795,13 +870,15 @@ impl<'a> EngineExec<'a> {
                             gemm_o_update_pool(&e_img, &panels.img, &pl.img, &exec);
                         add_row_bias(&mut out_t, &bw.txt.bo);
                         add_row_bias(&mut out_i, &bw.img.bo);
-                        bias_txt.push(b_t);
-                        bias_img.push(b_i);
+                        bias_txt.push(intern_bias(mem, b_t));
+                        bias_img.push(intern_bias(mem, b_i));
                         let o_joint = vstack(&out_t, &out_i);
                         post_attention_preprojected(&pre, &o_joint, cfg.text_tokens, txt, img);
                     } else {
-                        bias_txt.push(gemm_o_stage1_pool(&e_txt, &panels.txt, &pl.txt, &exec));
-                        bias_img.push(gemm_o_stage1_pool(&e_img, &panels.img, &pl.img, &exec));
+                        let b_t = gemm_o_stage1_pool(&e_txt, &panels.txt, &pl.txt, &exec);
+                        let b_i = gemm_o_stage1_pool(&e_img, &panels.img, &pl.img, &exec);
+                        bias_txt.push(intern_bias(mem, b_t));
+                        bias_img.push(intern_bias(mem, b_i));
                     }
                 }
             } else {
@@ -998,6 +1075,13 @@ pub(crate) fn sparse_step_flops(cfg: &ModelConfig, plans: &LayerPlans) -> f64 {
     let oproj = 2.0 * n * d * d * cache_density;
     let mlp = 2.0 * 2.0 * n * d * m;
     attn + qproj + kv + oproj + mlp
+}
+
+/// Intern one projected bias tensor into the engine pool: bias stacks of
+/// symbol-identical requests (same attention outputs, same plans) land on
+/// the same physical block (`b"bias"` namespace, content-verified).
+fn intern_bias(mem: &PagePool, t: Tensor) -> Pooled<Tensor> {
+    mem.intern_digest(digest_tensor(b"bias", &t), tensor_bytes(&t), t).0
 }
 
 /// Add a per-feature bias vector to every row.

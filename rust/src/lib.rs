@@ -25,6 +25,10 @@
 //!   references they are tested against.
 //! * [`cache`] — the feature cache with TaylorSeer order-`D` forecasting and
 //!   the GEMM-O bias cache `B_c`.
+//! * [`mem`] — the paged memory pool (TGI/vLLM paged-KV idiom): fixed-size
+//!   pages, ref-counted blocks, copy-on-write, content-keyed prefix
+//!   sharing, and `FO_PAGE_BUDGET` eviction-under-pressure backing cached
+//!   feature stacks, batched text K/V, plan segments and symbol keys.
 //! * [`engine`] — the **Update–Dispatch** execution engine over denoising
 //!   steps, and every baseline of the paper expressed as a policy emitting
 //!   unified symbols.
@@ -78,6 +82,7 @@ pub mod engine;
 pub mod exec;
 pub mod kernels;
 pub mod masks;
+pub mod mem;
 pub mod metrics;
 pub mod model;
 pub mod obs;

@@ -1,0 +1,878 @@
+//! Paged memory pool for resident engine state — the TGI/vLLM paged-KV
+//! idiom, CPU-resident.
+//!
+//! Batched video-scale serving multiplies resident state: cached feature
+//! stacks ([`crate::cache::TaylorCache`]), batched text-stream K/V
+//! projections (`batch::engine`), and compiled plan row-group segments
+//! plus their packed symbol keys (`plan`). [`PagePool`] gives all of them
+//! one **block allocator** with:
+//!
+//! * **fixed-size pages** — every block is accounted in whole pages of
+//!   [`PagePool::page_bytes`] (`FO_PAGE_BYTES`, default 4096), so "how
+//!   much is resident" is a single page counter, not a heap walk;
+//! * **ref-counted blocks** — a [`Pooled<T>`] handle is a block-table
+//!   entry; cloning a handle bumps the block's refcount instead of
+//!   copying bytes, and the last drop releases the block;
+//! * **prefix sharing** — [`PagePool::intern_digest`] maps
+//!   content-identical state (e.g. the text-conditioning K/V of
+//!   symbol-identical requests across a batch) onto the *same* physical
+//!   block (`ref_count == B`, one copy), with a full content compare on
+//!   every digest hit so a hash collision can never alias distinct data;
+//! * **copy-on-write** — [`Pooled::make_mut`] mutates in place only when
+//!   the block is unshared and unkeyed; otherwise the write lands in a
+//!   fresh private block, so a shared page is never written through;
+//! * **eviction under pressure** — with a page budget (`FO_PAGE_BUDGET`,
+//!   in pages; 0/unset = unbounded) set, released keyed blocks are
+//!   *retained* (resurrectable by digest) until an allocation would
+//!   exceed the budget, then evicted FIFO. Live blocks (refs > 0) are
+//!   never evicted, so eviction is invisible to numerics: all
+//!   bitwise-identity invariants survive any budget.
+//!
+//! Allocation/share/CoW/eviction traffic is counted in [`MemStats`]
+//! (surfaced per run through `RunStats::mem_*`) and exported through the
+//! `fo_mem_*` observability instruments.
+
+use crate::obs::metrics as om;
+use crate::tensor::Tensor;
+use crate::util::sync::lock_recover;
+use std::any::Any;
+use std::borrow::Borrow;
+use std::collections::{HashMap, VecDeque};
+use std::fmt;
+use std::hash::{Hash, Hasher};
+use std::ops::Deref;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Default page size in bytes (`FO_PAGE_BYTES` overrides for the global
+/// pool).
+pub const DEFAULT_PAGE_BYTES: usize = 4096;
+
+// ---------------------------------------------------------------------------
+// Stats
+// ---------------------------------------------------------------------------
+
+/// Cumulative counters + current/peak occupancy of one [`PagePool`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MemStats {
+    /// Blocks ever allocated (fresh physical allocations, not share hits).
+    pub blocks_allocated: u64,
+    /// Pages ever allocated.
+    pub pages_allocated: u64,
+    /// Digest hits served by an existing block (one physical copy kept).
+    pub share_hits: u64,
+    /// Copy-on-write copies (writes to shared or keyed blocks).
+    pub cow_copies: u64,
+    /// Retained blocks evicted to stay under the page budget.
+    pub blocks_evicted: u64,
+    /// Pages freed by eviction.
+    pub pages_evicted: u64,
+    /// Pages currently resident (live + retained-for-resurrection).
+    pub resident_pages: u64,
+    /// Pages currently referenced by at least one live handle.
+    pub live_pages: u64,
+    /// High-water mark of `resident_pages`.
+    pub peak_resident_pages: u64,
+    /// High-water mark of `live_pages`.
+    pub peak_live_pages: u64,
+    /// Highest refcount any single block ever reached (a symbol-identical
+    /// batch of `B` requests drives this to `B` on its shared blocks).
+    pub peak_block_refs: u64,
+}
+
+// ---------------------------------------------------------------------------
+// Block table
+// ---------------------------------------------------------------------------
+
+struct Block {
+    pages: u64,
+    bytes: usize,
+    refs: u64,
+    /// Content digest for shared (interned) blocks; `None` = private.
+    key: Option<[u8; 16]>,
+    /// Payload kept by the pool only for keyed blocks, so a digest hit
+    /// can hand out the same `Arc` and verify content equality.
+    payload: Option<Arc<dyn Any + Send + Sync>>,
+    /// In the retained (refs == 0, evictable, resurrectable) state.
+    retained: bool,
+}
+
+struct Inner {
+    page_bytes: usize,
+    /// Resident-page budget; 0 = unbounded (released blocks free eagerly,
+    /// nothing is retained, nothing ever needs evicting).
+    budget_pages: u64,
+    blocks: HashMap<u64, Block>,
+    by_key: HashMap<[u8; 16], u64>,
+    /// Eviction FIFO of retained block ids (may hold stale ids of blocks
+    /// that were resurrected or already freed; eviction skips those).
+    retained: VecDeque<u64>,
+    next_id: u64,
+    stats: MemStats,
+}
+
+impl Inner {
+    fn pages_for(&self, bytes: usize) -> u64 {
+        (bytes.max(1)).div_ceil(self.page_bytes) as u64
+    }
+
+    fn publish_gauges(&self) {
+        om::MEM_RESIDENT_PAGES.set(self.stats.resident_pages as i64);
+        om::MEM_LIVE_PAGES.set(self.stats.live_pages as i64);
+    }
+
+    /// Evict retained blocks (FIFO) until `extra` more pages fit under
+    /// the budget or nothing evictable remains. Returns dropped payloads
+    /// so their destructors run outside the pool lock.
+    fn evict_for(&mut self, extra: u64) -> Vec<Arc<dyn Any + Send + Sync>> {
+        let mut dropped = Vec::new();
+        if self.budget_pages == 0 {
+            return dropped;
+        }
+        while self.stats.resident_pages + extra > self.budget_pages {
+            let Some(id) = self.retained.pop_front() else { break };
+            let evictable = matches!(self.blocks.get(&id), Some(b) if b.retained && b.refs == 0);
+            if !evictable {
+                continue; // stale queue entry (resurrected or already freed)
+            }
+            let block = self.blocks.remove(&id).expect("checked above");
+            if let Some(k) = block.key {
+                self.by_key.remove(&k);
+            }
+            if let Some(p) = block.payload {
+                dropped.push(p);
+            }
+            self.stats.resident_pages -= block.pages;
+            self.stats.blocks_evicted += 1;
+            self.stats.pages_evicted += block.pages;
+            om::MEM_PAGES_EVICTED.add(block.pages);
+        }
+        dropped
+    }
+
+    /// Insert a fresh block (evicting first if a budget is set) and
+    /// return its id plus any payloads to drop outside the lock.
+    fn insert_block(
+        &mut self,
+        bytes: usize,
+        key: Option<[u8; 16]>,
+        payload: Option<Arc<dyn Any + Send + Sync>>,
+    ) -> (u64, Vec<Arc<dyn Any + Send + Sync>>) {
+        let pages = self.pages_for(bytes);
+        let dropped = self.evict_for(pages);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.blocks.insert(id, Block { pages, bytes, refs: 1, key, payload, retained: false });
+        if let Some(k) = key {
+            self.by_key.insert(k, id);
+        }
+        self.stats.blocks_allocated += 1;
+        self.stats.pages_allocated += pages;
+        self.stats.resident_pages += pages;
+        self.stats.live_pages += pages;
+        self.stats.peak_resident_pages =
+            self.stats.peak_resident_pages.max(self.stats.resident_pages);
+        self.stats.peak_live_pages = self.stats.peak_live_pages.max(self.stats.live_pages);
+        self.stats.peak_block_refs = self.stats.peak_block_refs.max(1);
+        om::MEM_PAGES_ALLOCATED.add(pages);
+        self.publish_gauges();
+        (id, dropped)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PagePool
+// ---------------------------------------------------------------------------
+
+/// A paged block allocator. Cheap to clone (handles hold one); see the
+/// module docs for semantics.
+#[derive(Clone)]
+pub struct PagePool {
+    inner: Arc<Mutex<Inner>>,
+}
+
+impl fmt::Debug for PagePool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = self.stats();
+        f.debug_struct("PagePool")
+            .field("resident_pages", &s.resident_pages)
+            .field("live_pages", &s.live_pages)
+            .field("budget_pages", &self.budget_pages())
+            .finish()
+    }
+}
+
+impl PagePool {
+    /// Pool with an explicit resident-page budget (0 = unbounded) and
+    /// page size in bytes.
+    pub fn with_budget(budget_pages: u64, page_bytes: usize) -> PagePool {
+        PagePool {
+            inner: Arc::new(Mutex::new(Inner {
+                page_bytes: page_bytes.max(1),
+                budget_pages,
+                blocks: HashMap::new(),
+                by_key: HashMap::new(),
+                retained: VecDeque::new(),
+                next_id: 0,
+                stats: MemStats::default(),
+            })),
+        }
+    }
+
+    /// Unbounded pool with the default page size.
+    pub fn unbounded() -> PagePool {
+        PagePool::with_budget(0, DEFAULT_PAGE_BYTES)
+    }
+
+    /// The process-wide pool every engine uses unless handed a private
+    /// one. Reads `FO_PAGE_BUDGET` (pages, 0/unset = unbounded) and
+    /// `FO_PAGE_BYTES` once, at first use.
+    pub fn global() -> &'static PagePool {
+        static GLOBAL: OnceLock<PagePool> = OnceLock::new();
+        GLOBAL.get_or_init(|| {
+            let budget = std::env::var("FO_PAGE_BUDGET")
+                .ok()
+                .and_then(|v| v.trim().parse::<u64>().ok())
+                .unwrap_or(0);
+            let page_bytes = std::env::var("FO_PAGE_BYTES")
+                .ok()
+                .and_then(|v| v.trim().parse::<usize>().ok())
+                .filter(|&v| v > 0)
+                .unwrap_or(DEFAULT_PAGE_BYTES);
+            PagePool::with_budget(budget, page_bytes)
+        })
+    }
+
+    /// Page size in bytes.
+    pub fn page_bytes(&self) -> usize {
+        lock_recover(&self.inner).page_bytes
+    }
+
+    /// Resident-page budget (0 = unbounded).
+    pub fn budget_pages(&self) -> u64 {
+        lock_recover(&self.inner).budget_pages
+    }
+
+    /// Pages a block of `bytes` occupies (always ≥ 1).
+    pub fn pages_for(&self, bytes: usize) -> u64 {
+        lock_recover(&self.inner).pages_for(bytes)
+    }
+
+    /// Snapshot of the pool's counters and occupancy.
+    pub fn stats(&self) -> MemStats {
+        lock_recover(&self.inner).stats
+    }
+
+    /// Whether two pools are the same physical pool.
+    pub fn same_pool(a: &PagePool, b: &PagePool) -> bool {
+        Arc::ptr_eq(&a.inner, &b.inner)
+    }
+
+    /// Drop every retained (refs == 0) block, keyed or not.
+    pub fn purge(&self) {
+        let dropped = {
+            let mut g = lock_recover(&self.inner);
+            let ids: Vec<u64> = g.retained.drain(..).collect();
+            let mut dropped = Vec::new();
+            for id in ids {
+                let evictable = matches!(g.blocks.get(&id), Some(b) if b.retained && b.refs == 0);
+                if !evictable {
+                    continue;
+                }
+                let block = g.blocks.remove(&id).expect("checked above");
+                if let Some(k) = block.key {
+                    g.by_key.remove(&k);
+                }
+                if let Some(p) = block.payload {
+                    dropped.push(p);
+                }
+                g.stats.resident_pages -= block.pages;
+                g.stats.blocks_evicted += 1;
+                g.stats.pages_evicted += block.pages;
+                om::MEM_PAGES_EVICTED.add(block.pages);
+            }
+            g.publish_gauges();
+            dropped
+        };
+        drop(dropped); // payload destructors run outside the pool lock
+    }
+
+    /// Allocate a private (unshared, unkeyed) block of `bytes` holding
+    /// `value`.
+    pub fn alloc<T: Send + Sync + 'static>(&self, bytes: usize, value: T) -> Pooled<T> {
+        let data = Arc::new(value);
+        let (id, dropped) = lock_recover(&self.inner).insert_block(bytes, None, None);
+        drop(dropped);
+        Pooled { data, pool: self.clone(), id }
+    }
+
+    fn alloc_cow<T: Send + Sync + 'static>(&self, bytes: usize, value: T) -> Pooled<T> {
+        let handle = self.alloc(bytes, value);
+        {
+            let mut g = lock_recover(&self.inner);
+            g.stats.cow_copies += 1;
+        }
+        om::MEM_COW_COPIES.inc();
+        handle
+    }
+
+    /// Intern `value` under a content `digest`: a digest hit whose stored
+    /// payload compares equal returns the existing block (refcount bump,
+    /// one physical copy — this is prefix sharing); a digest collision
+    /// (payload differs) falls back to a private block so sharing can
+    /// never change bytes. Returns `(handle, shared)`.
+    pub fn intern_digest<T: Send + Sync + PartialEq + 'static>(
+        &self,
+        digest: [u8; 16],
+        bytes: usize,
+        value: T,
+    ) -> (Pooled<T>, bool) {
+        let mut g = lock_recover(&self.inner);
+        if let Some(&id) = g.by_key.get(&digest) {
+            let hit = g
+                .blocks
+                .get(&id)
+                .and_then(|b| b.payload.clone())
+                .and_then(|p| p.downcast::<T>().ok())
+                .filter(|existing| **existing == value);
+            if let Some(existing) = hit {
+                let block = g.blocks.get_mut(&id).expect("keyed block exists");
+                block.refs += 1;
+                let (refs, pages) = (block.refs, block.pages);
+                let resurrected = std::mem::take(&mut block.retained);
+                if resurrected {
+                    // Resurrect: pages move back from retained to live.
+                    g.stats.live_pages += pages;
+                    g.stats.peak_live_pages = g.stats.peak_live_pages.max(g.stats.live_pages);
+                }
+                g.stats.peak_block_refs = g.stats.peak_block_refs.max(refs);
+                g.stats.share_hits += 1;
+                g.publish_gauges();
+                drop(g);
+                om::MEM_SHARE_HITS.inc();
+                return (Pooled { data: existing, pool: self.clone(), id }, true);
+            }
+            // Digest collision with different content: private block.
+            let data = Arc::new(value);
+            let (id, dropped) = g.insert_block(bytes, None, None);
+            drop(g);
+            drop(dropped);
+            return (Pooled { data, pool: self.clone(), id }, false);
+        }
+        let data = Arc::new(value);
+        let payload: Arc<dyn Any + Send + Sync> = data.clone();
+        let (id, dropped) = g.insert_block(bytes, Some(digest), Some(payload));
+        drop(g);
+        drop(dropped);
+        (Pooled { data, pool: self.clone(), id }, false)
+    }
+
+    /// Intern a byte string (namespaced), deduping content-identical
+    /// keys onto one block. Returns `(handle, shared)`.
+    pub fn intern_bytes(&self, ns: &[u8], bytes: &[u8]) -> (PooledBytes, bool) {
+        let mut d = Digest::new(ns);
+        d.update(bytes);
+        let (handle, shared) = self.intern_digest(d.finish(), bytes.len(), bytes.to_vec());
+        (PooledBytes(handle), shared)
+    }
+
+    fn retain(&self, id: u64) {
+        let mut g = lock_recover(&self.inner);
+        let block = g.blocks.get_mut(&id).expect("retain of freed pool block");
+        debug_assert!(block.refs > 0, "retain through a live handle implies refs > 0");
+        block.refs += 1;
+        let refs = block.refs;
+        g.stats.peak_block_refs = g.stats.peak_block_refs.max(refs);
+    }
+
+    fn release(&self, id: u64) {
+        let dropped = {
+            let mut g = lock_recover(&self.inner);
+            let block = g.blocks.get_mut(&id).expect("release of freed pool block");
+            debug_assert!(block.refs > 0, "double release of a pool block");
+            block.refs -= 1;
+            if block.refs > 0 {
+                return;
+            }
+            let (pages, keyed) = (block.pages, block.key.is_some());
+            if keyed && g.budget_pages > 0 {
+                // Retain for digest resurrection; evictable under pressure.
+                g.blocks.get_mut(&id).expect("still present").retained = true;
+                g.stats.live_pages -= pages;
+                g.retained.push_back(id);
+                // A release can itself push the pool over budget only via
+                // earlier live-over-budget growth; trim opportunistically.
+                let dropped = g.evict_for(0);
+                g.publish_gauges();
+                dropped
+            } else {
+                let block = g.blocks.remove(&id).expect("still present");
+                if let Some(k) = block.key {
+                    g.by_key.remove(&k);
+                }
+                g.stats.resident_pages -= pages;
+                g.stats.live_pages -= pages;
+                g.publish_gauges();
+                block.payload.into_iter().collect()
+            }
+        };
+        drop(dropped);
+    }
+
+    fn block_refs(&self, id: u64) -> u64 {
+        lock_recover(&self.inner).blocks.get(&id).map_or(0, |b| b.refs)
+    }
+
+    fn block_pages(&self, id: u64) -> u64 {
+        lock_recover(&self.inner).blocks.get(&id).map_or(0, |b| b.pages)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pooled<T>
+// ---------------------------------------------------------------------------
+
+/// A ref-counted handle to one pool block holding a `T`. Clones share
+/// the block (refcount bump, no bytes copied); the last drop releases
+/// it. Reads deref lock-free; writes go through [`Pooled::make_mut`]
+/// (copy-on-write when shared).
+pub struct Pooled<T> {
+    data: Arc<T>,
+    pool: PagePool,
+    id: u64,
+}
+
+impl<T> Deref for Pooled<T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.data
+    }
+}
+
+impl<T> Borrow<T> for Pooled<T> {
+    fn borrow(&self) -> &T {
+        &self.data
+    }
+}
+
+impl<T> Clone for Pooled<T> {
+    fn clone(&self) -> Self {
+        self.pool.retain(self.id);
+        Pooled { data: self.data.clone(), pool: self.pool.clone(), id: self.id }
+    }
+}
+
+impl<T> Drop for Pooled<T> {
+    fn drop(&mut self) {
+        self.pool.release(self.id);
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for Pooled<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Pooled(")?;
+        self.data.fmt(f)?;
+        write!(f, ")")
+    }
+}
+
+impl<T> Pooled<T> {
+    /// Current refcount of the underlying block (≥ 1 while this handle
+    /// lives).
+    pub fn ref_count(&self) -> u64 {
+        self.pool.block_refs(self.id)
+    }
+
+    /// Pages the underlying block occupies.
+    pub fn pages(&self) -> u64 {
+        self.pool.block_pages(self.id)
+    }
+
+    /// Whether two handles share one physical block.
+    pub fn ptr_eq(a: &Pooled<T>, b: &Pooled<T>) -> bool {
+        Arc::ptr_eq(&a.data, &b.data)
+    }
+
+    /// The pool this handle's block lives in.
+    pub fn pool(&self) -> &PagePool {
+        &self.pool
+    }
+}
+
+impl<T: Clone + Send + Sync + 'static> Pooled<T> {
+    /// Mutable access with copy-on-write: in place iff this is the only
+    /// handle and the block is private; otherwise the contents move to a
+    /// fresh private block first, so a shared or interned block is never
+    /// written through.
+    pub fn make_mut(&mut self) -> &mut T {
+        let (unique, bytes) = {
+            let g = lock_recover(&self.pool.inner);
+            let b = g.blocks.get(&self.id).expect("make_mut on freed pool block");
+            (b.refs == 1 && b.key.is_none(), b.bytes)
+        };
+        if !unique {
+            *self = self.pool.alloc_cow(bytes, (*self.data).clone());
+        }
+        Arc::get_mut(&mut self.data).expect("private block with one handle is unique")
+    }
+
+    /// Promote this (typically just-CoW-written) handle to a shared
+    /// block under `digest`: if an equal block already exists the handle
+    /// swaps onto it (share hit, this copy is freed); otherwise this
+    /// block becomes the interned copy. Returns `true` on dedupe.
+    pub fn make_shared(&mut self, digest: [u8; 16]) -> bool
+    where
+        T: PartialEq,
+    {
+        let (swap_to, attach) = {
+            let mut g = lock_recover(&self.pool.inner);
+            match g.by_key.get(&digest).copied() {
+                Some(id) if id == self.id => return true,
+                Some(id) => {
+                    let hit = g
+                        .blocks
+                        .get(&id)
+                        .and_then(|b| b.payload.clone())
+                        .and_then(|p| p.downcast::<T>().ok())
+                        .filter(|existing| **existing == *self.data);
+                    match hit {
+                        Some(existing) => {
+                            let block = g.blocks.get_mut(&id).expect("keyed block exists");
+                            block.refs += 1;
+                            let (refs, pages) = (block.refs, block.pages);
+                            let resurrected = std::mem::take(&mut block.retained);
+                            if resurrected {
+                                g.stats.live_pages += pages;
+                                g.stats.peak_live_pages =
+                                    g.stats.peak_live_pages.max(g.stats.live_pages);
+                            }
+                            g.stats.peak_block_refs = g.stats.peak_block_refs.max(refs);
+                            g.stats.share_hits += 1;
+                            g.publish_gauges();
+                            (Some((existing, id)), false)
+                        }
+                        None => (None, false), // collision: stay private
+                    }
+                }
+                None => {
+                    let block = g.blocks.get_mut(&self.id).expect("live handle block");
+                    if block.key.is_some() {
+                        (None, false) // already interned under another digest
+                    } else {
+                        block.key = Some(digest);
+                        block.payload = Some(self.data.clone() as Arc<dyn Any + Send + Sync>);
+                        g.by_key.insert(digest, self.id);
+                        (None, true)
+                    }
+                }
+            }
+        };
+        if let Some((existing, id)) = swap_to {
+            om::MEM_SHARE_HITS.inc();
+            *self = Pooled { data: existing, pool: self.pool.clone(), id };
+            return true;
+        }
+        attach
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PooledBytes — interned byte strings (packed symbol keys)
+// ---------------------------------------------------------------------------
+
+/// An interned, pool-backed byte string: the packed symbol-key type.
+/// Hash/Eq/Borrow follow the byte content, so a `HashMap<PooledBytes, _>`
+/// can be probed with a plain `&[u8]`, while clones are refcount bumps —
+/// the `PlanCache` map key, its FIFO entry, and `LayerPlans.key` all
+/// share one physical copy.
+#[derive(Clone, Debug)]
+pub struct PooledBytes(Pooled<Vec<u8>>);
+
+impl PooledBytes {
+    /// Current refcount of the backing block.
+    pub fn ref_count(&self) -> u64 {
+        self.0.ref_count()
+    }
+
+    /// Whether two keys share one physical block.
+    pub fn ptr_eq(a: &PooledBytes, b: &PooledBytes) -> bool {
+        Pooled::ptr_eq(&a.0, &b.0)
+    }
+
+    /// The pool backing this key.
+    pub fn pool(&self) -> &PagePool {
+        self.0.pool()
+    }
+}
+
+impl Deref for PooledBytes {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        &self.0
+    }
+}
+
+impl Borrow<[u8]> for PooledBytes {
+    fn borrow(&self) -> &[u8] {
+        self
+    }
+}
+
+impl Hash for PooledBytes {
+    fn hash<H: Hasher>(&self, state: &mut H) {
+        <[u8] as Hash>::hash(self, state)
+    }
+}
+
+impl PartialEq for PooledBytes {
+    fn eq(&self, other: &PooledBytes) -> bool {
+        **self == **other
+    }
+}
+impl Eq for PooledBytes {}
+
+impl PartialEq<[u8]> for PooledBytes {
+    fn eq(&self, other: &[u8]) -> bool {
+        **self == *other
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Digest — 128-bit content fingerprints for prefix sharing
+// ---------------------------------------------------------------------------
+
+/// Streaming 128-bit FNV-1a content fingerprint (two independent 64-bit
+/// lanes). Collisions are tolerated — every digest hit re-verifies full
+/// content before sharing — the width just keeps false candidates rare.
+pub struct Digest {
+    a: u64,
+    b: u64,
+}
+
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+impl Digest {
+    /// Start a fingerprint in namespace `ns` (kept out of each other's
+    /// key spaces: `b"plankey"`, `b"taylor"`, `b"kvtxt"`, …).
+    pub fn new(ns: &[u8]) -> Digest {
+        let mut d = Digest { a: 0xcbf2_9ce4_8422_2325, b: 0x6c62_272e_07bb_0142 };
+        d.update(ns);
+        d.update(&[0xff]); // namespace terminator
+        d
+    }
+
+    /// Absorb raw bytes.
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &x in bytes {
+            self.a = (self.a ^ x as u64).wrapping_mul(FNV_PRIME);
+            self.b = (self.b ^ x as u64).wrapping_mul(FNV_PRIME).rotate_left(1);
+        }
+    }
+
+    /// Absorb one u32 (little-endian).
+    pub fn update_u32(&mut self, v: u32) {
+        self.update(&v.to_le_bytes());
+    }
+
+    /// Absorb one f32 by bit pattern (so `-0.0` and `0.0` differ; the
+    /// content verify on hit makes that a non-issue either way).
+    pub fn update_f32(&mut self, v: f32) {
+        self.update(&v.to_bits().to_le_bytes());
+    }
+
+    /// Finish into a 16-byte key.
+    pub fn finish(self) -> [u8; 16] {
+        let mut out = [0u8; 16];
+        out[..8].copy_from_slice(&self.a.to_le_bytes());
+        out[8..].copy_from_slice(&self.b.to_le_bytes());
+        out
+    }
+}
+
+/// Fingerprint a tensor's shape + contents under namespace `ns`.
+pub fn digest_tensor(ns: &[u8], t: &Tensor) -> [u8; 16] {
+    let mut d = Digest::new(ns);
+    d.update_u32(t.shape().len() as u32);
+    for &s in t.shape() {
+        d.update_u32(s as u32);
+    }
+    for &v in t.data() {
+        d.update_f32(v);
+    }
+    d.finish()
+}
+
+/// Bytes a tensor's payload occupies (for page accounting).
+pub fn tensor_bytes(t: &Tensor) -> usize {
+    t.numel() * std::mem::size_of::<f32>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_clone_drop_accounting() {
+        let pool = PagePool::with_budget(0, 64);
+        let a = pool.alloc(100, vec![1u8; 100]); // 2 pages
+        assert_eq!(a.pages(), 2);
+        assert_eq!(pool.stats().live_pages, 2);
+        let b = a.clone();
+        assert_eq!(a.ref_count(), 2);
+        assert!(Pooled::ptr_eq(&a, &b));
+        drop(a);
+        assert_eq!(b.ref_count(), 1);
+        drop(b);
+        let s = pool.stats();
+        assert_eq!(s.live_pages, 0);
+        assert_eq!(s.resident_pages, 0, "unbounded pool frees on release");
+        assert_eq!(s.peak_live_pages, 2);
+    }
+
+    #[test]
+    fn intern_shares_one_physical_copy() {
+        let pool = PagePool::with_budget(0, 64);
+        let (a, s1) = pool.intern_bytes(b"k", b"same-bytes");
+        let (b, s2) = pool.intern_bytes(b"k", b"same-bytes");
+        let (c, s3) = pool.intern_bytes(b"k", b"other-bytes");
+        assert!(!s1 && s2 && !s3);
+        assert!(PooledBytes::ptr_eq(&a, &b));
+        assert!(!PooledBytes::ptr_eq(&a, &c));
+        assert_eq!(a.ref_count(), 2);
+        assert_eq!(pool.stats().share_hits, 1);
+        assert_eq!(pool.stats().blocks_allocated, 2);
+    }
+
+    #[test]
+    fn namespaces_separate_key_spaces() {
+        let pool = PagePool::with_budget(0, 64);
+        let (a, _) = pool.intern_bytes(b"ns1", b"payload");
+        let (b, shared) = pool.intern_bytes(b"ns2", b"payload");
+        assert!(!shared, "distinct namespaces must not share");
+        assert!(!PooledBytes::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn collision_verify_prevents_aliasing() {
+        let pool = PagePool::with_budget(0, 64);
+        let d = [7u8; 16];
+        let (a, s1) = pool.intern_digest(d, 4, vec![1u8]);
+        let (b, s2) = pool.intern_digest(d, 4, vec![2u8]); // forced collision
+        assert!(!s1 && !s2);
+        assert_eq!(*a, vec![1u8]);
+        assert_eq!(*b, vec![2u8], "collision must fall back to a private block");
+        let (c, s3) = pool.intern_digest(d, 4, vec![1u8]);
+        assert!(s3, "equal content still shares");
+        assert!(Pooled::ptr_eq(&a, &c));
+    }
+
+    #[test]
+    fn cow_never_writes_through_a_shared_block() {
+        let pool = PagePool::with_budget(0, 64);
+        let a = pool.alloc(4, vec![1u8, 2, 3]);
+        let mut b = a.clone();
+        b.make_mut()[0] = 9;
+        assert_eq!(*a, vec![1, 2, 3], "CoW must not alias the shared page");
+        assert_eq!(*b, vec![9, 2, 3]);
+        assert!(!Pooled::ptr_eq(&a, &b));
+        assert_eq!(a.ref_count(), 1);
+        assert_eq!(pool.stats().cow_copies, 1);
+
+        // Unique + private: mutates in place, no copy.
+        let mut c = pool.alloc(4, vec![5u8]);
+        c.make_mut()[0] = 6;
+        assert_eq!(pool.stats().cow_copies, 1);
+    }
+
+    #[test]
+    fn keyed_block_copies_even_when_unique() {
+        let pool = PagePool::with_budget(0, 64);
+        let (mut a, _) = pool.intern_bytes(b"k", b"abc");
+        // Writing an interned block must detach it from its digest.
+        let inner: &mut Pooled<Vec<u8>> = &mut a.0;
+        inner.make_mut()[0] = b'z';
+        assert_eq!(&**inner, b"zbc");
+        let (b, shared) = pool.intern_bytes(b"k", b"abc");
+        assert!(!shared, "the interned copy was released, not mutated");
+        assert_eq!(&*b, b"abc");
+    }
+
+    #[test]
+    fn make_shared_dedupes_after_cow() {
+        let pool = PagePool::with_budget(0, 64);
+        let d = {
+            let mut dg = Digest::new(b"t");
+            dg.update(b"v1");
+            dg.finish()
+        };
+        let (a, _) = pool.intern_digest(d, 2, b"v1".to_vec());
+        let mut b = pool.alloc(2, b"v1".to_vec());
+        assert!(b.make_shared(d), "equal content must swap onto the interned block");
+        assert!(Pooled::ptr_eq(&a, &b));
+        assert_eq!(a.ref_count(), 2);
+    }
+
+    #[test]
+    fn budget_retains_then_evicts_fifo() {
+        let pool = PagePool::with_budget(4, 64); // 4-page budget
+        let (a, _) = pool.intern_bytes(b"k", &[1u8; 64]); // 1 page
+        let (b, _) = pool.intern_bytes(b"k", &[2u8; 64]);
+        drop(a);
+        drop(b);
+        let s = pool.stats();
+        assert_eq!(s.live_pages, 0);
+        assert_eq!(s.resident_pages, 2, "budgeted pool retains released keyed blocks");
+        // Resurrect from retained: no new allocation.
+        let (a2, shared) = pool.intern_bytes(b"k", &[1u8; 64]);
+        assert!(shared);
+        assert_eq!(pool.stats().blocks_allocated, 2);
+        assert_eq!(pool.stats().live_pages, 1);
+        drop(a2);
+        // Push past the budget: the oldest retained block must go.
+        let big = pool.alloc(3 * 64, [0u8; 192]); // 3 pages
+        let s = pool.stats();
+        assert!(s.blocks_evicted >= 1, "allocation past budget must evict");
+        assert!(s.resident_pages <= 4, "resident bounded by budget: {s:?}");
+        drop(big);
+        pool.purge();
+        assert_eq!(pool.stats().resident_pages, 0);
+    }
+
+    #[test]
+    fn live_blocks_are_never_evicted() {
+        let pool = PagePool::with_budget(2, 64);
+        let a = pool.alloc(64, vec![1u8; 64]);
+        let b = pool.alloc(64, vec![2u8; 64]);
+        // Over budget with only live blocks: nothing evictable, both stay.
+        let c = pool.alloc(64, vec![3u8; 64]);
+        assert_eq!(pool.stats().blocks_evicted, 0);
+        assert_eq!(pool.stats().live_pages, 3, "live pages may exceed a soft budget");
+        assert_eq!(*a, vec![1u8; 64]);
+        assert_eq!(*b, vec![2u8; 64]);
+        assert_eq!(*c, vec![3u8; 64]);
+    }
+
+    #[test]
+    fn pooled_bytes_probes_as_slice() {
+        let pool = PagePool::with_budget(0, 64);
+        let (k, _) = pool.intern_bytes(b"key", b"abc");
+        let mut map: HashMap<PooledBytes, u32> = HashMap::new();
+        map.insert(k.clone(), 7);
+        assert_eq!(map.get(b"abc".as_slice()), Some(&7));
+        assert_eq!(map.get(b"abd".as_slice()), None);
+        assert_eq!(k.ref_count(), 2, "map key is a refcount bump, not a byte copy");
+    }
+
+    #[test]
+    fn digest_is_order_and_length_sensitive() {
+        let h = |ns: &[u8], parts: &[&[u8]]| {
+            let mut d = Digest::new(ns);
+            for p in parts {
+                d.update(p);
+            }
+            d.finish()
+        };
+        assert_eq!(h(b"n", &[b"ab", b"c"]), h(b"n", &[b"abc"]));
+        assert_ne!(h(b"n", &[b"abc"]), h(b"n", &[b"acb"]));
+        assert_ne!(h(b"n", &[b"abc"]), h(b"m", &[b"abc"]));
+    }
+}

@@ -287,6 +287,24 @@ pub static TRACE_EVENTS_DROPPED: Counter = Counter::new(
     "fo_trace_events_dropped_total",
     "Trace events discarded after the bounded buffer filled",
 );
+/// Pages allocated by the paged memory pool (`mem::PagePool`).
+pub static MEM_PAGES_ALLOCATED: Counter =
+    Counter::new("fo_mem_pages_allocated_total", "Pages allocated by the paged memory pool");
+/// Pages freed by eviction under `FO_PAGE_BUDGET` pressure.
+pub static MEM_PAGES_EVICTED: Counter = Counter::new(
+    "fo_mem_pages_evicted_total",
+    "Pages evicted from the paged memory pool under budget pressure",
+);
+/// Allocations served by an existing content-identical block.
+pub static MEM_SHARE_HITS: Counter = Counter::new(
+    "fo_mem_share_hits_total",
+    "Pool allocations served by prefix-sharing an existing block",
+);
+/// Copy-on-write copies of shared or interned pool blocks.
+pub static MEM_COW_COPIES: Counter = Counter::new(
+    "fo_mem_cow_copies_total",
+    "Copy-on-write copies of shared or interned pool blocks",
+);
 
 /// Jobs pending in the exec pool queue at dispatch time.
 pub static EXEC_QUEUE_DEPTH: Gauge =
@@ -299,6 +317,12 @@ pub static EXEC_ACTIVE_LANES: Gauge = Gauge::new(
 /// Requests waiting in the router's admission queue.
 pub static ROUTER_QUEUE_DEPTH: Gauge =
     Gauge::new("fo_router_queue_depth", "Requests waiting in the router admission queue");
+/// Pages resident in the paged memory pool (live + retained).
+pub static MEM_RESIDENT_PAGES: Gauge =
+    Gauge::new("fo_mem_resident_pages", "Pages resident in the paged memory pool");
+/// Pages referenced by at least one live pool handle.
+pub static MEM_LIVE_PAGES: Gauge =
+    Gauge::new("fo_mem_live_pages", "Pages referenced by at least one live pool handle");
 
 /// GEMM-Q dense (full path: joint QKV projection region).
 pub static KERNEL_GEMM_Q_DENSE: Histogram =
@@ -397,12 +421,22 @@ pub fn all_counters() -> &'static [&'static Counter] {
         &TUNE_MEASUREMENTS,
         &EXEC_SECTIONS,
         &TRACE_EVENTS_DROPPED,
+        &MEM_PAGES_ALLOCATED,
+        &MEM_PAGES_EVICTED,
+        &MEM_SHARE_HITS,
+        &MEM_COW_COPIES,
     ]
 }
 
 /// Every gauge in the process.
 pub fn all_gauges() -> &'static [&'static Gauge] {
-    &[&EXEC_QUEUE_DEPTH, &EXEC_ACTIVE_LANES, &ROUTER_QUEUE_DEPTH]
+    &[
+        &EXEC_QUEUE_DEPTH,
+        &EXEC_ACTIVE_LANES,
+        &ROUTER_QUEUE_DEPTH,
+        &MEM_RESIDENT_PAGES,
+        &MEM_LIVE_PAGES,
+    ]
 }
 
 /// Every histogram in the process.

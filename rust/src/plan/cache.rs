@@ -57,7 +57,16 @@
 //!   relative to a Dispatch step, and holding the lock is what makes the
 //!   counters exact (never two compiles for one key, no lost counts) under
 //!   `ExecPool` contention.
+//!
+//! **Key storage** is pool-backed: the packed symbol bytes are interned
+//! into the cache's [`PagePool`] (`b"plankey"` namespace) as
+//! [`PooledBytes`], so the map key, its FIFO eviction entry, and the
+//! engine's per-layer `LayerPlans.key` copy all share **one** physical
+//! allocation per distinct key (refcount bumps instead of `Vec<u8>`
+//! clones). [`PlanCache::get_or_build_keyed`] hands the build closure the
+//! interned handle so callers can keep it without re-copying the bytes.
 
+use crate::mem::{PagePool, PooledBytes};
 use crate::symbols::LayerSymbols;
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Mutex};
@@ -163,26 +172,43 @@ pub fn symbol_key(syms: &LayerSymbols, geometry: &[usize]) -> Vec<u8> {
 /// ```
 pub struct PlanCache<V> {
     /// Value plus the (epoch id, lane) it was inserted under
-    /// (epoch 0 = outside any epoch).
-    map: HashMap<Vec<u8>, (Arc<V>, u64, u64)>,
-    /// Insertion order for FIFO eviction.
-    order: VecDeque<Vec<u8>>,
+    /// (epoch 0 = outside any epoch). Keys are pool-interned byte
+    /// strings probed with plain `&[u8]` slices.
+    map: HashMap<PooledBytes, (Arc<V>, u64, u64)>,
+    /// Insertion order for FIFO eviction (refcount bumps of the map
+    /// keys, not byte copies).
+    order: VecDeque<PooledBytes>,
     cap: usize,
     /// Last allocated epoch id (ids start at 1; 0 is "no epoch").
     epoch: u64,
+    /// Pool the keys are interned into.
+    mem: PagePool,
     stats: CacheStats,
 }
 
 impl<V> PlanCache<V> {
-    /// Cache holding at most `cap` compiled plans (clamped to ≥ 1).
+    /// Cache holding at most `cap` compiled plans (clamped to ≥ 1),
+    /// interning keys into the process-global [`PagePool`].
     pub fn new(cap: usize) -> Self {
+        PlanCache::new_in(cap, PagePool::global())
+    }
+
+    /// [`Self::new`] with an explicit key pool (private budgets in tests
+    /// and benches).
+    pub fn new_in(cap: usize, mem: &PagePool) -> Self {
         PlanCache {
             map: HashMap::new(),
             order: VecDeque::new(),
             cap: cap.max(1),
             epoch: 0,
+            mem: mem.clone(),
             stats: CacheStats::default(),
         }
+    }
+
+    /// The pool this cache interns its keys into.
+    pub fn pool(&self) -> &PagePool {
+        &self.mem
     }
 
     /// Allocate a fresh sharing-epoch id (the batched engine calls this
@@ -239,6 +265,21 @@ impl<V> PlanCache<V> {
         lane: u64,
         build: impl FnOnce() -> Compiled<V>,
     ) -> (Arc<V>, CacheOutcome) {
+        self.get_or_build_keyed(key, epoch, lane, |_| build())
+    }
+
+    /// [`Self::get_or_build_shared`], additionally handing the build
+    /// closure the **pool-interned key handle** so the caller can retain
+    /// it (e.g. as `LayerPlans.key`) as a refcount bump on the very block
+    /// the cache maps under — one physical key allocation instead of two
+    /// `Vec<u8>` copies.
+    pub fn get_or_build_keyed(
+        &mut self,
+        key: &[u8],
+        epoch: u64,
+        lane: u64,
+        build: impl FnOnce(&PooledBytes) -> Compiled<V>,
+    ) -> (Arc<V>, CacheOutcome) {
         if let Some((v, e, l)) = self.map.get(key) {
             self.stats.hits += 1;
             let outcome = if epoch > 0 && *e == epoch && *l != lane {
@@ -250,7 +291,8 @@ impl<V> PlanCache<V> {
             return (Arc::clone(v), outcome);
         }
         self.stats.misses += 1;
-        let (v, outcome) = match build() {
+        let (pooled_key, _) = self.mem.intern_bytes(b"plankey", key);
+        let (v, outcome) = match build(&pooled_key) {
             Compiled::Full(v) => (Arc::new(v), CacheOutcome::Miss),
             Compiled::Delta(v) => {
                 self.stats.delta_hits += 1;
@@ -263,8 +305,8 @@ impl<V> PlanCache<V> {
                 self.stats.evictions += 1;
             }
         }
-        self.map.insert(key.to_vec(), (Arc::clone(&v), epoch, lane));
-        self.order.push_back(key.to_vec());
+        self.map.insert(pooled_key.clone(), (Arc::clone(&v), epoch, lane));
+        self.order.push_back(pooled_key);
         (v, outcome)
     }
 
@@ -318,9 +360,15 @@ impl<V> Clone for SharedPlanCache<V> {
 }
 
 impl<V> SharedPlanCache<V> {
-    /// Shared cache holding at most `cap` compiled plans.
+    /// Shared cache holding at most `cap` compiled plans (keys interned
+    /// into the process-global [`PagePool`]).
     pub fn new(cap: usize) -> Self {
         SharedPlanCache { inner: Arc::new(Mutex::new(PlanCache::new(cap))) }
+    }
+
+    /// [`Self::new`] with an explicit key pool.
+    pub fn new_in(cap: usize, mem: &PagePool) -> Self {
+        SharedPlanCache { inner: Arc::new(Mutex::new(PlanCache::new_in(cap, mem))) }
     }
 
     /// Allocate a fresh sharing-epoch id (see [`PlanCache::begin_epoch`]).
@@ -361,6 +409,18 @@ impl<V> SharedPlanCache<V> {
         build: impl FnOnce() -> Compiled<V>,
     ) -> (Arc<V>, CacheOutcome) {
         self.inner.lock().unwrap().get_or_build_shared(key, epoch, lane, build)
+    }
+
+    /// Epoch-tagged lookup handing the build closure the pool-interned
+    /// key handle (see [`PlanCache::get_or_build_keyed`]).
+    pub fn get_or_build_keyed(
+        &self,
+        key: &[u8],
+        epoch: u64,
+        lane: u64,
+        build: impl FnOnce(&PooledBytes) -> Compiled<V>,
+    ) -> (Arc<V>, CacheOutcome) {
+        self.inner.lock().unwrap().get_or_build_keyed(key, epoch, lane, build)
     }
 
     /// Lifetime hit/miss/eviction/shared/delta counters.
@@ -498,6 +558,26 @@ mod tests {
         let (_, o) = cache.get_or_build_shared(&[3], e, 1, || unreachable!());
         assert_eq!(o, CacheOutcome::SharedHit);
         assert_eq!(cache.stats().delta_hits, 2);
+    }
+
+    #[test]
+    fn keys_are_interned_once() {
+        let pool = crate::mem::PagePool::with_budget(0, 64);
+        let mut cache: PlanCache<u32> = PlanCache::new_in(4, &pool);
+        let mut kept = None;
+        cache.get_or_build_keyed(b"shared-key", 0, 0, |pk| {
+            kept = Some(pk.clone());
+            Compiled::Full(1)
+        });
+        let kept = kept.unwrap();
+        // Map key + FIFO entry + caller's retained copy: three handles,
+        // one physical block.
+        assert_eq!(kept.ref_count(), 3);
+        assert_eq!(pool.stats().blocks_allocated, 1);
+        // A re-lookup is a hit — no new interning, no new allocation.
+        let (_, o) = cache.get_or_build_keyed(b"shared-key", 0, 0, |_| unreachable!());
+        assert_eq!(o, CacheOutcome::Hit);
+        assert_eq!(pool.stats().blocks_allocated, 1);
     }
 
     #[test]

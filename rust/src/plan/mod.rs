@@ -21,16 +21,18 @@
 //!   [`SparsePlan::apply_delta`] turns it into an **incremental recompile**
 //!   that decodes only the changed rows.
 //!
-//! # Plan storage: segmented, `Arc`-shared row-groups
+//! # Plan storage: segmented, pool-shared row-groups
 //!
-//! A plan's row structure is owned in **segments**: one
-//! `Arc<RowSegment>` per symbol row-group (`pool` consecutive Q-block
-//! rows — the granularity at which a symbol refresh can change anything).
-//! [`SparsePlan::apply_delta`] recompiles only the segments named by a
-//! [`PlanDelta`] and `Arc`-clones every other segment from the base plan,
-//! so an incremental recompile does `O(changed rows · t_kv)` decode work
-//! instead of `O(t_q · t_kv)`, and unchanged KV index lists are *shared*
-//! (not copied) between consecutive plans.
+//! A plan's row structure is owned in **segments**: one ref-counted
+//! [`crate::mem::PagePool`] block (`Pooled<RowSegment>`) per symbol
+//! row-group (`pool` consecutive Q-block rows — the granularity at which
+//! a symbol refresh can change anything). [`SparsePlan::apply_delta`]
+//! recompiles only the segments named by a [`PlanDelta`] and
+//! handle-clones every other segment from the base plan (a refcount bump
+//! on the same pool block), so an incremental recompile does
+//! `O(changed rows · t_kv)` decode work instead of `O(t_q · t_kv)`, and
+//! unchanged KV index lists are *shared* (not copied) between
+//! consecutive plans — and counted once in the pool's resident pages.
 //!
 //! The tradeoff vs. the `Arc`-per-row alternative: per-row `Arc`s would
 //! make the delta granularity exact (a one-row flip re-decodes one row,
@@ -67,8 +69,8 @@ pub mod delta;
 pub use delta::PlanDelta;
 
 use crate::exec::ExecPool;
+use crate::mem::{PagePool, Pooled};
 use crate::symbols::{HeadSymbols, LayerSymbols};
-use std::sync::Arc;
 
 /// How the reduction-axis symbols are decoded while *compiling* a plan —
 /// retained to reproduce the paper's FC-vs-BSS decode-overhead analysis
@@ -239,6 +241,17 @@ impl RowSegment {
     fn index_len(&self) -> usize {
         self.live.len() + self.cached.len() + self.kv_indptr.len() + self.kv_indices.len()
     }
+
+    /// Bytes this segment occupies, for pool page accounting.
+    fn bytes(&self) -> usize {
+        self.index_len() * std::mem::size_of::<u32>() + std::mem::size_of::<RowSegment>()
+    }
+
+    /// Move the segment into a pool block.
+    fn into_pool(self, mem: &PagePool) -> Pooled<RowSegment> {
+        let bytes = self.bytes();
+        mem.alloc(bytes, self)
+    }
 }
 
 /// Compiled sparse structure for one attention head.
@@ -249,13 +262,14 @@ impl RowSegment {
 /// footprint of `usize` on 64-bit targets); kernels widen with `as usize`
 /// at the loop head, which costs nothing.
 ///
-/// Rows are *owned* in `Arc`-shared segments of one symbol row-group each
-/// (see the [module docs](self) for the segmented-vs-per-row tradeoff);
-/// the flat `live_q`/`cached_q` views and [`Self::live_kv`] keep the
-/// kernel-facing access pattern of a plain CSR. Two plans compare equal
-/// ([`PartialEq`]) iff their *logical* index content is identical,
-/// independent of how the rows are segmented — this is the "bitwise
-/// identical" relation the delta-recompile property tests assert.
+/// Rows are *owned* in ref-counted [`PagePool`] segments of one symbol
+/// row-group each (see the [module docs](self) for the
+/// segmented-vs-per-row tradeoff); the flat `live_q`/`cached_q` views and
+/// [`Self::live_kv`] keep the kernel-facing access pattern of a plain
+/// CSR. Two plans compare equal ([`PartialEq`]) iff their *logical* index
+/// content is identical, independent of how the rows are segmented — this
+/// is the "bitwise identical" relation the delta-recompile property tests
+/// assert.
 #[derive(Clone, Debug)]
 pub struct HeadPlan {
     /// Total Q blocks (`ceil(n / block_q)`).
@@ -267,7 +281,7 @@ pub struct HeadPlan {
     /// Q-block indices served from the feature cache (`F = 0`), ascending.
     pub cached_q: Vec<u32>,
     /// Row-group segments owning the CSR data, ordered by `start`.
-    segs: Vec<Arc<RowSegment>>,
+    segs: Vec<Pooled<RowSegment>>,
     /// Per live row: `(segment index, local live-row index)` — the locator
     /// behind [`Self::live_kv`], rebuilt on every (delta) compile.
     row_locs: Vec<(u32, u32)>,
@@ -287,7 +301,7 @@ impl Eq for HeadPlan {}
 
 impl HeadPlan {
     /// Build the flat kernel-facing views over a segment list.
-    fn assemble(t_q: usize, t_kv: usize, segs: Vec<Arc<RowSegment>>) -> Self {
+    fn assemble(t_q: usize, t_kv: usize, segs: Vec<Pooled<RowSegment>>) -> Self {
         let live_n: usize = segs.iter().map(|s| s.live.len()).sum();
         let cached_n: usize = segs.iter().map(|s| s.cached.len()).sum();
         let mut live_q = Vec::with_capacity(live_n);
@@ -307,7 +321,21 @@ impl HeadPlan {
     /// raw block counts of the sequence the plan will execute on. One
     /// segment is built per symbol row-group, so the plan can later be
     /// delta-recompiled at that granularity ([`Self::apply_delta`]).
+    /// Segments land in the process-global [`PagePool`]; engines with a
+    /// private pool compile through [`Self::from_symbols_in`].
     pub fn from_symbols(sym: &HeadSymbols, t_q: usize, t_kv: usize, decode: DecodeMode) -> Self {
+        Self::from_symbols_in(sym, t_q, t_kv, decode, PagePool::global())
+    }
+
+    /// [`Self::from_symbols`] with the segments allocated in an explicit
+    /// [`PagePool`].
+    pub fn from_symbols_in(
+        sym: &HeadSymbols,
+        t_q: usize,
+        t_kv: usize,
+        decode: DecodeMode,
+        mem: &PagePool,
+    ) -> Self {
         let pool = sym.pool.max(1);
         assert_eq!(sym.q_groups, t_q.div_ceil(pool), "S_c geometry mismatch");
         assert_eq!(sym.kv_groups, t_kv.div_ceil(pool), "S_s geometry mismatch");
@@ -319,10 +347,20 @@ impl HeadPlan {
             .map(|g| {
                 let start = g * pool;
                 let rows = pool.min(t_q - start);
-                Arc::new(RowSegment::from_symbols(sym, 0, start, rows, t_kv, decode))
+                RowSegment::from_symbols(sym, 0, start, rows, t_kv, decode).into_pool(mem)
             })
             .collect();
         Self::assemble(t_q, t_kv, segs)
+    }
+
+    /// The pool this plan's segments live in (the first segment's pool;
+    /// plans built through one compile path keep all segments in one
+    /// pool). Falls back to the global pool for segment-less plans.
+    fn seg_pool(&self) -> PagePool {
+        self.segs
+            .first()
+            .map(|s| s.pool().clone())
+            .unwrap_or_else(|| PagePool::global().clone())
     }
 
     /// Incremental recompile: re-decode only the row-groups listed in
@@ -378,8 +416,9 @@ impl HeadPlan {
             "base plan is not segmented at symbol row-group granularity"
         );
         let off_blocks = group_off * pool;
+        let mem = self.seg_pool();
         let mut next = changed.iter().peekable();
-        let segs: Vec<Arc<RowSegment>> = (0..groups)
+        let segs: Vec<Pooled<RowSegment>> = (0..groups)
             .map(|g| {
                 let start = g * pool;
                 let rows = pool.min(self.t_q - start);
@@ -387,11 +426,10 @@ impl HeadPlan {
                 debug_assert_eq!(self.segs[g].rows as usize, rows, "segment misaligned");
                 if next.peek().is_some_and(|&&c| c as usize == g) {
                     next.next();
-                    Arc::new(RowSegment::from_symbols(
-                        sym, off_blocks, start, rows, self.t_kv, decode,
-                    ))
+                    RowSegment::from_symbols(sym, off_blocks, start, rows, self.t_kv, decode)
+                        .into_pool(&mem)
                 } else {
-                    Arc::clone(&self.segs[g])
+                    self.segs[g].clone()
                 }
             })
             .collect();
@@ -415,14 +453,15 @@ impl HeadPlan {
         for _ in 0..t_q {
             kv_indices.extend(0..t_kv as u32);
         }
-        let seg = Arc::new(RowSegment {
+        let seg = RowSegment {
             start: 0,
             rows: t_q as u32,
             live,
             cached: Vec::new(),
             kv_indptr,
             kv_indices,
-        });
+        }
+        .into_pool(PagePool::global());
         Self::assemble(t_q, t_kv, vec![seg])
     }
 
@@ -482,11 +521,11 @@ impl HeadPlan {
     /// the joint sequence its own plan for GEMM-Q / GEMM-O.
     ///
     /// Segments that fall entirely inside a `lo == 0` slice are shared by
-    /// `Arc` clone (the engine's text slice); every other overlap is
-    /// copied and rebased.
+    /// handle clone (the engine's text slice — a refcount bump on the
+    /// same pool block); every other overlap is copied and rebased.
     pub fn slice_q(&self, lo: usize, hi: usize) -> HeadPlan {
         assert!(lo <= hi && hi <= self.t_q, "bad Q-block slice [{lo}, {hi})");
-        let mut segs: Vec<Arc<RowSegment>> = Vec::new();
+        let mut segs: Vec<Pooled<RowSegment>> = Vec::new();
         for seg in &self.segs {
             let s = seg.start as usize;
             let e = s + seg.rows as usize;
@@ -495,9 +534,9 @@ impl HeadPlan {
                 continue;
             }
             if lo == 0 && a == s && b == e {
-                segs.push(Arc::clone(seg));
+                segs.push(seg.clone());
             } else {
-                segs.push(Arc::new(seg.sliced(a, b, lo)));
+                segs.push(seg.sliced(a, b, lo).into_pool(seg.pool()));
             }
         }
         Self::assemble(hi - lo, self.t_kv, segs)
@@ -518,13 +557,14 @@ impl HeadPlan {
         self.index_len() * std::mem::size_of::<u32>()
     }
 
-    /// How many of this plan's segments are `Arc`-shared with `other`
-    /// (same allocation, not merely equal content) — the structural-
-    /// sharing measure the delta tests and the fig13 bench report.
+    /// How many of this plan's segments share their pool block with
+    /// `other` (same allocation, not merely equal content) — the
+    /// structural-sharing measure the delta tests and the fig13 bench
+    /// report.
     pub fn shared_segments_with(&self, other: &HeadPlan) -> usize {
         self.segs
             .iter()
-            .filter(|s| other.segs.iter().any(|o| Arc::ptr_eq(s, o)))
+            .filter(|s| other.segs.iter().any(|o| Pooled::ptr_eq(s, o)))
             .count()
     }
 
@@ -573,11 +613,25 @@ impl SparsePlan {
         block_k: usize,
         decode: DecodeMode,
     ) -> Self {
+        Self::compile_in(syms, t_q, t_kv, block_q, block_k, decode, PagePool::global())
+    }
+
+    /// [`Self::compile`] with the per-head segments allocated in an
+    /// explicit [`PagePool`] (engines with a private page budget).
+    pub fn compile_in(
+        syms: &LayerSymbols,
+        t_q: usize,
+        t_kv: usize,
+        block_q: usize,
+        block_k: usize,
+        decode: DecodeMode,
+        mem: &PagePool,
+    ) -> Self {
         SparsePlan {
             heads: syms
                 .heads
                 .iter()
-                .map(|h| HeadPlan::from_symbols(h, t_q, t_kv, decode))
+                .map(|h| HeadPlan::from_symbols_in(h, t_q, t_kv, decode, mem))
                 .collect(),
             t_q,
             t_kv,

@@ -1,0 +1,614 @@
+//! Paged-memory acceptance tests (PR 10 tentpole):
+//!
+//! (a) **property/fuzz** — randomized alloc / intern(share) / clone /
+//!     write(CoW) / make_shared / free / purge sequences run against a
+//!     *naive reference allocator* that mirrors the pool's semantics with
+//!     plain vectors and linear scans. After every op the real pool must
+//!     agree exactly: block refcounts, live/resident page accounting,
+//!     share/CoW/eviction counters, and every live handle's contents
+//!     (no use-after-free, CoW never aliases a shared page). At the end
+//!     of every case the pool must drain to zero pages (no leaks).
+//!     Failures shrink by **prefix replay**: the shortest failing prefix
+//!     of the op sequence is reported with the case seed. Iteration
+//!     count is raised in CI via `FO_PAGE_POOL_CASES`.
+//! (b) **budget invariance** — a mixed-resolution batched run under a
+//!     tight page budget is bitwise-identical to unbudgeted solo runs,
+//!     while `RunStats` proves real pressure (evictions > 0) and real
+//!     prefix sharing (share hits > 0, identical pair one physical copy).
+//! (c) **key dedupe** — a shared-batch refresh interns the packed symbol
+//!     key once; every other lane refcounts that block (regression for
+//!     the old PlanCache-map-key + LayerPlans.key double allocation).
+
+use flashomni::batch::BatchedEngine;
+use flashomni::config::{ModelConfig, SparsityConfig};
+use flashomni::engine::{DiTEngine, Policy, RunStats};
+use flashomni::mem::{Digest, PagePool, Pooled};
+use flashomni::model::{weights::Weights, MiniMMDiT};
+use flashomni::plan::cache::{Compiled, SharedPlanCache};
+use flashomni::tensor::Tensor;
+use flashomni::testutil::prop_check;
+use flashomni::util::rng::Pcg32;
+use flashomni::workload::{caption_ids, Request};
+use std::collections::VecDeque;
+use std::time::Instant;
+
+// ---------------------------------------------------------------- (a) --
+
+/// One fuzz step. Slot indices (`pick`) are taken modulo the number of
+/// live slots *at execution time*, so a prefix of an op sequence always
+/// replays deterministically — that is what makes prefix shrinking sound.
+#[derive(Clone, Copy, Debug)]
+enum Op {
+    /// Private allocation of `vec![fill; len]`.
+    Alloc { len: usize, fill: u8 },
+    /// Content-interned allocation (prefix sharing on equal content).
+    Intern { ns: u8, len: usize, fill: u8 },
+    /// Clone an existing handle (refcount bump, no bytes).
+    CloneOf { pick: usize },
+    /// Write one byte through `make_mut` (CoW when shared/keyed).
+    Write { pick: usize, pos: usize, val: u8 },
+    /// Promote a handle to a shared block under (ns, content).
+    MakeShared { pick: usize, ns: u8 },
+    /// Drop a handle.
+    Free { pick: usize },
+    /// Drop every retained block.
+    Purge,
+}
+
+/// Digest the fuzzer uses for interning: namespaced like the engine's
+/// `b"plankey"` / `b"taylor"` keys, content-hashed like `intern_bytes`.
+fn fuzz_digest(ns: u8, bytes: &[u8]) -> [u8; 16] {
+    let mut d = Digest::new(&[b'f', b'z', ns]);
+    d.update(bytes);
+    d.finish()
+}
+
+/// The reference model of one block: contents, namespace key, refcount,
+/// page footprint, retained flag — nothing clever, everything explicit.
+struct RefBlock {
+    bytes: Vec<u8>,
+    /// Intern namespace. Keyed blocks are never mutated in place (writes
+    /// CoW), so `(key, bytes)` is the block's stable intern identity.
+    key: Option<u8>,
+    refs: u64,
+    pages: u64,
+    retained: bool,
+}
+
+/// Naive reference allocator: linear scans instead of digest maps, a
+/// `Vec<Option<Block>>` instead of an id table, but byte-for-byte the
+/// same visible semantics as `PagePool`.
+struct RefAlloc {
+    page_bytes: usize,
+    budget: u64,
+    blocks: Vec<Option<RefBlock>>,
+    fifo: VecDeque<usize>,
+    live_pages: u64,
+    resident_pages: u64,
+    blocks_allocated: u64,
+    pages_allocated: u64,
+    share_hits: u64,
+    cow_copies: u64,
+    blocks_evicted: u64,
+    pages_evicted: u64,
+}
+
+impl RefAlloc {
+    fn new(budget: u64, page_bytes: usize) -> RefAlloc {
+        RefAlloc {
+            page_bytes,
+            budget,
+            blocks: Vec::new(),
+            fifo: VecDeque::new(),
+            live_pages: 0,
+            resident_pages: 0,
+            blocks_allocated: 0,
+            pages_allocated: 0,
+            share_hits: 0,
+            cow_copies: 0,
+            blocks_evicted: 0,
+            pages_evicted: 0,
+        }
+    }
+
+    fn pages_for(&self, len: usize) -> u64 {
+        len.max(1).div_ceil(self.page_bytes) as u64
+    }
+
+    fn evict_one(&mut self, id: usize) {
+        let b = self.blocks[id].take().expect("evictable block exists");
+        self.resident_pages -= b.pages;
+        self.blocks_evicted += 1;
+        self.pages_evicted += b.pages;
+    }
+
+    fn evict_for(&mut self, extra: u64) {
+        if self.budget == 0 {
+            return;
+        }
+        while self.resident_pages + extra > self.budget {
+            let Some(id) = self.fifo.pop_front() else { break };
+            let evictable =
+                matches!(&self.blocks[id], Some(b) if b.retained && b.refs == 0);
+            if evictable {
+                self.evict_one(id);
+            }
+        }
+    }
+
+    fn insert(&mut self, bytes: Vec<u8>, key: Option<u8>) -> usize {
+        let pages = self.pages_for(bytes.len());
+        self.evict_for(pages);
+        self.blocks.push(Some(RefBlock { bytes, key, refs: 1, pages, retained: false }));
+        self.blocks_allocated += 1;
+        self.pages_allocated += pages;
+        self.resident_pages += pages;
+        self.live_pages += pages;
+        self.blocks.len() - 1
+    }
+
+    fn find_keyed(&self, ns: u8, bytes: &[u8]) -> Option<usize> {
+        self.blocks.iter().position(
+            |b| matches!(b, Some(b) if b.key == Some(ns) && b.bytes == bytes),
+        )
+    }
+
+    /// Bump an intern hit: refcount up, resurrect if retained.
+    fn bump(&mut self, id: usize) {
+        let b = self.blocks[id].as_mut().expect("hit block exists");
+        b.refs += 1;
+        if std::mem::take(&mut b.retained) {
+            self.live_pages += b.pages;
+        }
+    }
+
+    fn intern(&mut self, ns: u8, bytes: Vec<u8>) -> (usize, bool) {
+        if let Some(id) = self.find_keyed(ns, &bytes) {
+            self.bump(id);
+            self.share_hits += 1;
+            (id, true)
+        } else {
+            (self.insert(bytes, Some(ns)), false)
+        }
+    }
+
+    fn clone_ref(&mut self, id: usize) {
+        let b = self.blocks[id].as_mut().expect("cloned handle's block exists");
+        assert!(!b.retained && b.refs > 0, "clone of a live handle");
+        b.refs += 1;
+    }
+
+    fn release(&mut self, id: usize) {
+        let b = self.blocks[id].as_mut().expect("released block exists");
+        b.refs -= 1;
+        if b.refs > 0 {
+            return;
+        }
+        if b.key.is_some() && self.budget > 0 {
+            b.retained = true;
+            self.live_pages -= b.pages;
+            self.fifo.push_back(id);
+            self.evict_for(0);
+        } else {
+            let b = self.blocks[id].take().expect("still present");
+            self.resident_pages -= b.pages;
+            self.live_pages -= b.pages;
+        }
+    }
+
+    /// Mirror `make_mut` + one byte write. Returns the slot's new block id.
+    fn write(&mut self, id: usize, pos: usize, val: u8) -> usize {
+        let b = self.blocks[id].as_ref().expect("written block exists");
+        if b.refs == 1 && b.key.is_none() {
+            self.blocks[id].as_mut().expect("checked").bytes[pos] = val;
+            return id;
+        }
+        let mut nb = b.bytes.clone();
+        nb[pos] = val;
+        // Same order as the pool: the copy allocates (and may evict)
+        // while the old block is still live, then the old ref drops.
+        let nid = self.insert(nb, None);
+        self.cow_copies += 1;
+        self.release(id);
+        nid
+    }
+
+    /// Mirror `make_shared`. Returns (new block id, reported sharing).
+    fn make_shared(&mut self, id: usize, ns: u8) -> (usize, bool) {
+        if self.blocks[id].as_ref().expect("live block").key == Some(ns) {
+            return (id, true); // already the interned copy for this key
+        }
+        let bytes = self.blocks[id].as_ref().expect("live block").bytes.clone();
+        if let Some(other) = self.find_keyed(ns, &bytes) {
+            self.bump(other);
+            self.share_hits += 1;
+            self.release(id);
+            return (other, true);
+        }
+        let b = self.blocks[id].as_mut().expect("live block");
+        if b.key.is_some() {
+            (id, false) // interned under another namespace: stays put
+        } else {
+            b.key = Some(ns);
+            (id, true)
+        }
+    }
+
+    fn purge(&mut self) {
+        while let Some(id) = self.fifo.pop_front() {
+            let evictable =
+                matches!(&self.blocks[id], Some(b) if b.retained && b.refs == 0);
+            if evictable {
+                self.evict_one(id);
+            }
+        }
+    }
+}
+
+/// A live fuzz slot: the real handle plus its model block id.
+struct Slot {
+    handle: Pooled<Vec<u8>>,
+    bid: usize,
+}
+
+/// Compare the real pool against the model after one op.
+fn check(i: usize, op: &Op, pool: &PagePool, model: &RefAlloc, slots: &[Slot]) -> Result<(), String> {
+    let s = pool.stats();
+    let fail = |what: &str, got: u64, want: u64| {
+        Err(format!("op {i} {op:?}: {what} = {got}, reference says {want}"))
+    };
+    if s.live_pages != model.live_pages {
+        return fail("live_pages", s.live_pages, model.live_pages);
+    }
+    if s.resident_pages != model.resident_pages {
+        return fail("resident_pages", s.resident_pages, model.resident_pages);
+    }
+    if s.blocks_allocated != model.blocks_allocated {
+        return fail("blocks_allocated", s.blocks_allocated, model.blocks_allocated);
+    }
+    if s.pages_allocated != model.pages_allocated {
+        return fail("pages_allocated", s.pages_allocated, model.pages_allocated);
+    }
+    if s.share_hits != model.share_hits {
+        return fail("share_hits", s.share_hits, model.share_hits);
+    }
+    if s.cow_copies != model.cow_copies {
+        return fail("cow_copies", s.cow_copies, model.cow_copies);
+    }
+    if s.blocks_evicted != model.blocks_evicted {
+        return fail("blocks_evicted", s.blocks_evicted, model.blocks_evicted);
+    }
+    if s.pages_evicted != model.pages_evicted {
+        return fail("pages_evicted", s.pages_evicted, model.pages_evicted);
+    }
+    if model.budget > 0 && s.resident_pages > model.budget.max(s.live_pages) {
+        return Err(format!(
+            "op {i} {op:?}: resident {} exceeds budget {} with live {}",
+            s.resident_pages, model.budget, s.live_pages
+        ));
+    }
+    for (j, slot) in slots.iter().enumerate() {
+        let Some(b) = model.blocks[slot.bid].as_ref() else {
+            return Err(format!("op {i} {op:?}: slot {j} points at a freed reference block"));
+        };
+        if *slot.handle != b.bytes {
+            return Err(format!(
+                "op {i} {op:?}: slot {j} contents diverged (use-after-free or CoW aliasing): \
+                 pool has {:?}.., reference has {:?}..",
+                &slot.handle[..slot.handle.len().min(8)],
+                &b.bytes[..b.bytes.len().min(8)]
+            ));
+        }
+        if slot.handle.ref_count() != b.refs {
+            return fail("slot refcount", slot.handle.ref_count(), b.refs);
+        }
+    }
+    Ok(())
+}
+
+/// Execute an op sequence on a fresh pool + reference model, checking
+/// full agreement after every op and a drained pool at the end.
+fn run_ops(ops: &[Op], budget: u64, page_bytes: usize) -> Result<(), String> {
+    let pool = PagePool::with_budget(budget, page_bytes);
+    let mut model = RefAlloc::new(budget, page_bytes);
+    let mut slots: Vec<Slot> = Vec::new();
+    for (i, op) in ops.iter().enumerate() {
+        match *op {
+            Op::Alloc { len, fill } => {
+                let bytes = vec![fill; len];
+                let handle = pool.alloc(len, bytes.clone());
+                let bid = model.insert(bytes, None);
+                slots.push(Slot { handle, bid });
+            }
+            Op::Intern { ns, len, fill } => {
+                let bytes = vec![fill; len];
+                let (handle, shared) =
+                    pool.intern_digest(fuzz_digest(ns, &bytes), len, bytes.clone());
+                let (bid, want) = model.intern(ns, bytes);
+                if shared != want {
+                    return Err(format!("op {i} {op:?}: shared={shared}, reference says {want}"));
+                }
+                slots.push(Slot { handle, bid });
+            }
+            Op::CloneOf { pick } => {
+                if slots.is_empty() {
+                    continue;
+                }
+                let s = pick % slots.len();
+                let handle = slots[s].handle.clone();
+                let bid = slots[s].bid;
+                model.clone_ref(bid);
+                slots.push(Slot { handle, bid });
+            }
+            Op::Write { pick, pos, val } => {
+                if slots.is_empty() {
+                    continue;
+                }
+                let s = pick % slots.len();
+                let len = slots[s].handle.len();
+                if len == 0 {
+                    continue;
+                }
+                let pos = pos % len;
+                slots[s].handle.make_mut()[pos] = val;
+                slots[s].bid = model.write(slots[s].bid, pos, val);
+            }
+            Op::MakeShared { pick, ns } => {
+                if slots.is_empty() {
+                    continue;
+                }
+                let s = pick % slots.len();
+                let bytes = (*slots[s].handle).clone();
+                let got = slots[s].handle.make_shared(fuzz_digest(ns, &bytes));
+                let (bid, want) = model.make_shared(slots[s].bid, ns);
+                slots[s].bid = bid;
+                if got != want {
+                    return Err(format!(
+                        "op {i} {op:?}: make_shared={got}, reference says {want}"
+                    ));
+                }
+            }
+            Op::Free { pick } => {
+                if slots.is_empty() {
+                    continue;
+                }
+                let s = pick % slots.len();
+                let slot = slots.swap_remove(s);
+                model.release(slot.bid);
+                drop(slot.handle);
+            }
+            Op::Purge => {
+                pool.purge();
+                model.purge();
+            }
+        }
+        check(i, op, &pool, &model, &slots)?;
+    }
+    // No leaks: dropping every handle and purging drains the pool to zero.
+    while let Some(slot) = slots.pop() {
+        model.release(slot.bid);
+        drop(slot.handle);
+    }
+    pool.purge();
+    model.purge();
+    let s = pool.stats();
+    if s.live_pages != 0 || s.resident_pages != 0 {
+        return Err(format!(
+            "pool did not drain to zero after dropping every handle: {s:?}"
+        ));
+    }
+    if model.resident_pages != 0 {
+        return Err(format!(
+            "reference allocator leaked {} pages — model bug",
+            model.resident_pages
+        ));
+    }
+    Ok(())
+}
+
+fn random_op(rng: &mut Pcg32, page_bytes: usize) -> Op {
+    // Small len/fill alphabets so intern content actually collides.
+    let lens = [0, 1, page_bytes / 2, page_bytes - 1, page_bytes, page_bytes + 3, 3 * page_bytes];
+    let len = lens[rng.below(lens.len())];
+    match rng.below(12) {
+        0 | 1 => Op::Alloc { len, fill: rng.below(4) as u8 },
+        2..=4 => Op::Intern { ns: rng.below(2) as u8, len, fill: rng.below(4) as u8 },
+        5 => Op::CloneOf { pick: rng.below(1 << 16) },
+        6 | 7 => Op::Write { pick: rng.below(1 << 16), pos: rng.below(1 << 16), val: rng.below(7) as u8 },
+        8 => Op::MakeShared { pick: rng.below(1 << 16), ns: rng.below(2) as u8 },
+        9 | 10 => Op::Free { pick: rng.below(1 << 16) },
+        _ => Op::Purge,
+    }
+}
+
+fn fuzz_case(rng: &mut Pcg32) {
+    let budget = [0u64, 2, 3, 5, 9][rng.below(5)];
+    let page_bytes = 64;
+    let n_ops = 60 + rng.below(140);
+    let ops: Vec<Op> = (0..n_ops).map(|_| random_op(rng, page_bytes)).collect();
+    if run_ops(&ops, budget, page_bytes).is_err() {
+        // Shrink by prefix replay: ops interpret slot picks modulo the
+        // live slot count, so every prefix replays deterministically.
+        let n = (1..=ops.len())
+            .find(|&k| run_ops(&ops[..k], budget, page_bytes).is_err())
+            .expect("full sequence failed, some prefix must fail");
+        let err = run_ops(&ops[..n], budget, page_bytes).unwrap_err();
+        panic!(
+            "page-pool property failed (budget {budget} pages, shrunk to {n} ops):\n  {err}\n  ops: {:?}",
+            &ops[..n]
+        );
+    }
+}
+
+#[test]
+fn pool_matches_reference_allocator_under_fuzz() {
+    // CI raises the iteration count via FO_PAGE_POOL_CASES.
+    let cases = std::env::var("FO_PAGE_POOL_CASES")
+        .ok()
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(24);
+    prop_check("page pool vs naive reference allocator", cases, fuzz_case);
+}
+
+// ---------------------------------------------------------------- (b) --
+
+fn tiny_model(layers: usize, seed: u64) -> MiniMMDiT {
+    let cfg = ModelConfig {
+        dim: 32,
+        heads: 2,
+        layers,
+        text_tokens: 8,
+        patch_h: 4,
+        patch_w: 4,
+        patch_size: 2,
+        channels: 3,
+        mlp_ratio: 2,
+        vocab: 256,
+    };
+    MiniMMDiT::new(cfg.clone(), Weights::random(&cfg, seed))
+}
+
+fn fo_policy(interval: usize, warmup: usize) -> Policy {
+    Policy::flashomni(SparsityConfig {
+        tau_q: 0.6,
+        tau_kv: 0.3,
+        interval,
+        order: 1,
+        s_q: 0.0,
+        block_q: 8,
+        block_k: 8,
+        pool: 1,
+        warmup,
+        ramp_steps: 1,
+    })
+}
+
+fn request(id: u64, scene: usize, seed: u64, steps: usize, hw: Option<(usize, usize)>) -> Request {
+    Request {
+        id,
+        scene,
+        prompt_ids: caption_ids(scene, 8),
+        seed,
+        steps,
+        arrival_s: 0.0,
+        patch_hw: hw,
+    }
+}
+
+/// Solo reference at the request's own resolution on an explicit pool.
+fn solo_at(model: &MiniMMDiT, policy: &Policy, req: &Request, mem: &PagePool) -> (Tensor, RunStats) {
+    let mut cfg = model.cfg.clone();
+    if let Some((ph, pw)) = req.patch_hw {
+        cfg.patch_h = ph;
+        cfg.patch_w = pw;
+    }
+    let m = MiniMMDiT::new(cfg, model.w.clone());
+    let mut engine = DiTEngine::new(m, policy.clone(), 8, 8);
+    engine.set_page_pool(mem);
+    let res = engine.generate(&req.prompt_ids, req.seed, req.steps);
+    (res.image, res.stats)
+}
+
+#[test]
+fn solo_page_budget_is_invisible_to_numerics() {
+    let model = tiny_model(2, 7);
+    let policy = fo_policy(3, 1);
+    let req = request(0, 4, 42, 8, None);
+    let (img_free, stats_free) = solo_at(&model, &policy, &req, &PagePool::unbounded());
+    let tight = PagePool::with_budget(4, 512);
+    let (img_tight, stats_tight) = solo_at(&model, &policy, &req, &tight);
+    assert_eq!(img_free, img_tight, "a page budget must never change the image");
+    assert_eq!(stats_free.mem_pages_evicted, 0, "an unbounded pool never evicts");
+    assert!(stats_tight.mem_pages_evicted > 0, "a 4-page budget must actually evict");
+    assert!(stats_tight.mem_pages_allocated > 0);
+    assert!(stats_tight.mem_peak_pages > 0);
+    // The soft-budget bound: resident never exceeds max(budget, live).
+    let s = tight.stats();
+    assert!(
+        s.peak_resident_pages <= s.peak_live_pages.max(tight.budget_pages()),
+        "retained pages must stay under the budget: {s:?}"
+    );
+}
+
+#[test]
+fn tight_budget_batch_is_bitwise_identical_and_shares_prefixes() {
+    // A symbol-identical pair (same prompt + seed: the repeated-prompt
+    // burst) plus a distinct request at another resolution, all under a
+    // tight page budget on a private pool.
+    let model = tiny_model(2, 11);
+    let policy = fo_policy(3, 2);
+    let reqs =
+        vec![request(0, 3, 100, 9, None), request(1, 3, 100, 9, None), request(2, 5, 101, 9, Some((6, 4)))];
+    let tight = PagePool::with_budget(8, 1024);
+    let mut engine = BatchedEngine::new(model.clone(), policy.clone(), 8, 8, reqs.len());
+    engine.set_page_pool(&tight);
+    for r in &reqs {
+        assert!(engine.can_admit());
+        engine.admit(r.clone(), Instant::now());
+    }
+    let mut out = engine.run_to_completion();
+    out.sort_by_key(|r| r.id);
+    assert_eq!(out.len(), reqs.len());
+
+    // Bitwise identity against unbudgeted solo runs at each resolution.
+    for (b, req) in out.iter().zip(&reqs) {
+        let (img, _) = solo_at(&model, &policy, req, &PagePool::unbounded());
+        assert_eq!(
+            b.image, img,
+            "request {} (patch {:?}) under budget differs from unbudgeted solo",
+            b.id, req.patch_hw
+        );
+    }
+    // The identical pair stays identical — and shared one physical copy
+    // of its resident state while in flight (refcount reached the pair).
+    assert_eq!(out[0].image, out[1].image);
+    let pool_stats = tight.stats();
+    assert!(pool_stats.peak_block_refs >= 2, "identical pair must share blocks: {pool_stats:?}");
+
+    // Real pressure and real sharing showed up in the per-request stats.
+    assert!(out[0].stats.mem_pages_evicted > 0, "tight budget must evict: {:?}", out[0].stats);
+    assert!(out[0].stats.mem_share_hits > 0, "identical pair must share: {:?}", out[0].stats);
+    assert!(out[0].stats.mem_pages_allocated > 0);
+    assert!(out[0].stats.mem_peak_pages > 0);
+    assert!(
+        pool_stats.peak_resident_pages <= pool_stats.peak_live_pages.max(tight.budget_pages()),
+        "retained pages must stay under the budget: {pool_stats:?}"
+    );
+
+    // No leaks: retiring every request and dropping the engine (which
+    // holds the plan cache's interned keys) drains the pool to zero.
+    drop(out);
+    drop(engine);
+    tight.purge();
+    let s = tight.stats();
+    assert_eq!((s.live_pages, s.resident_pages), (0, 0), "pool must drain to zero: {s:?}");
+}
+
+// ---------------------------------------------------------------- (c) --
+
+#[test]
+fn shared_batch_refresh_interns_symbol_key_once() {
+    // Four lanes of one epoch look up the same packed symbol key: one
+    // compile, one physical key allocation; everyone else refcounts it.
+    let pool = PagePool::unbounded();
+    let cache: SharedPlanCache<u32> = SharedPlanCache::new_in(8, &pool);
+    let key = vec![0xabu8; 300]; // realistically-sized packed symbol key
+    let epoch = cache.begin_epoch();
+    let mut kept = Vec::new();
+    for lane in 0..4u64 {
+        let (v, _) = cache.get_or_build_keyed(&key, epoch, lane, |pk| {
+            kept.push(pk.clone());
+            Compiled::Full(7)
+        });
+        assert_eq!(*v, 7);
+    }
+    assert_eq!(kept.len(), 1, "the build closure must run once for the whole batch");
+    assert_eq!(
+        pool.stats().blocks_allocated,
+        1,
+        "a shared-batch refresh must allocate the key bytes exactly once"
+    );
+    // Map key + FIFO entry + the caller's retained copy: one block.
+    assert_eq!(kept[0].ref_count(), 3);
+    assert_eq!(cache.stats().shared_hits, 3);
+}
